@@ -1,0 +1,73 @@
+//! Figure 10 — impact of GC on a long write run.  Writes the full
+//! dataset continuously (GC threshold at 40% ⇒ two GC cycles, like
+//! the paper's 40 GB/80 GB trigger points on a 100 GB load) and
+//! samples cumulative throughput + per-batch latency along the way for
+//! Original, Nezha and Nezha-NoGC.
+//!
+//! Expected shape: Nezha ≈ Nezha-NoGC curves overlap (GC is off the
+//! critical path); Original sits well below both.
+//!
+//! Run: `cargo bench --bench fig10_gc_impact`.
+
+use nezha::engine::EngineKind;
+use nezha::harness::{bench_scale, Env, Spec};
+use nezha::ycsb::Generator;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let load = ((12 << 20) as f64 * bench_scale()) as u64;
+    let vs = 16 << 10;
+    println!("\n=== Figure 10: GC impact timeline (16KB values, GC at 40%/80%) ===");
+    println!("{:<11} {:>8} {:>12} {:>12} {:>10}", "system", "pct", "cum_MiB/s", "inst_MiB/s", "batch_us");
+    for kind in [EngineKind::Original, EngineKind::NezhaNoGc, EngineKind::Nezha] {
+        let mut spec = Spec::new(kind, vs);
+        spec.load_bytes = load;
+        spec.gc_fraction = 0.4;
+        let records = spec.records();
+        let env = Env::start(spec)?;
+        let batch = 64usize;
+        let mut g = Generator::load_ops(records, vs, 42);
+        let t0 = Instant::now();
+        let mut written = 0u64;
+        let mut next_sample = records / 20; // 5% steps
+        let mut last_t = t0;
+        let mut last_written = 0u64;
+        loop {
+            let ops: Vec<_> = g.by_ref().take(batch).collect();
+            if ops.is_empty() {
+                break;
+            }
+            let n = ops.len() as u64;
+            let bt = Instant::now();
+            env.cluster.put_batch(ops)?;
+            let bus = bt.elapsed().as_micros() as u64;
+            written += n;
+            if written >= next_sample {
+                let cum = (written * vs as u64) as f64 / (1 << 20) as f64 / t0.elapsed().as_secs_f64();
+                let inst = ((written - last_written) * vs as u64) as f64 / (1 << 20) as f64
+                    / last_t.elapsed().as_secs_f64().max(1e-9);
+                println!(
+                    "{:<11} {:>7}% {:>12.1} {:>12.1} {:>10}",
+                    kind.name(),
+                    written * 100 / records,
+                    cum,
+                    inst,
+                    bus / n.max(1)
+                );
+                next_sample += records / 20;
+                last_t = Instant::now();
+                last_written = written;
+            }
+        }
+        let leader = env.cluster.wait_for_leader(std::time::Duration::from_secs(5))?;
+        let st = env.cluster.status(leader)?;
+        println!(
+            "{:<11} done: {} GC cycles, phase {:?}",
+            kind.name(),
+            st.gc_cycles,
+            st.gc_phase
+        );
+        env.destroy()?;
+    }
+    Ok(())
+}

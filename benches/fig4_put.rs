@@ -1,0 +1,43 @@
+//! Figure 4 — **put** throughput + latency vs value size (1 KB →
+//! 256 KB), all seven systems, 3-node cluster, Zipf keys, GC at 40% of
+//! the load.  Paper headline: Nezha ≈ Nezha-NoGC ≫ Dwisckey > PASV >
+//! LSM-Raft > TiKV ≈ Original, average +460.2% over Original.
+//!
+//! Scaled workload: `load_bytes = 12 MiB * NEZHA_BENCH_SCALE` per
+//! (system, size) cell.  Run: `cargo bench --bench fig4_put`.
+
+use nezha::engine::EngineKind;
+use nezha::harness::{bench_scale, engines_from_env, improvement_pct, print_header, value_sizes, Env, Spec};
+
+fn main() -> anyhow::Result<()> {
+    let load = ((6 << 20) as f64 * bench_scale()) as u64;
+    print_header("Figure 4: put throughput/latency vs value size");
+    let mut nezha_tp = Vec::new();
+    let mut orig_tp = Vec::new();
+    for vs in value_sizes() {
+        for kind in engines_from_env() {
+            let mut spec = Spec::new(kind, vs);
+            spec.load_bytes = load;
+            let env = Env::start(spec)?;
+            let m = env.load(&format!("{}KB", vs >> 10))?;
+            println!("{}", m.row());
+            if kind == EngineKind::Nezha {
+                nezha_tp.push(m.mib_per_sec());
+            }
+            if kind == EngineKind::Original {
+                orig_tp.push(m.mib_per_sec());
+            }
+            env.destroy()?;
+        }
+    }
+    if !nezha_tp.is_empty() && nezha_tp.len() == orig_tp.len() {
+        let avg: f64 = nezha_tp
+            .iter()
+            .zip(&orig_tp)
+            .map(|(n, o)| improvement_pct(*n, *o))
+            .sum::<f64>()
+            / nezha_tp.len() as f64;
+        println!("\nNezha vs Original average put improvement: {avg:+.1}%  (paper: +460.2%)");
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Figure 5 — **point-query** throughput + latency vs value size.
+//! Loads the dataset, lets GC settle (paper: 100 GB load with two GC
+//! cycles), then issues Zipf point queries.  Paper headline: Nezha
+//! +12.5% over Original; Nezha-NoGC −21.3% (offset-lookup overhead).
+//!
+//! Run: `cargo bench --bench fig5_get`.
+
+use nezha::engine::EngineKind;
+use nezha::harness::{bench_scale, engines_from_env, improvement_pct, print_header, value_sizes, Env, Spec};
+
+fn main() -> anyhow::Result<()> {
+    let load = ((6 << 20) as f64 * bench_scale()) as u64;
+    let gets = (400.0 * bench_scale()) as u64;
+    print_header("Figure 5: get throughput/latency vs value size");
+    let mut nezha_tp = Vec::new();
+    let mut orig_tp = Vec::new();
+    for vs in value_sizes() {
+        for kind in engines_from_env() {
+            let mut spec = Spec::new(kind, vs);
+            spec.load_bytes = load;
+            let env = Env::start(spec)?;
+            env.load("preload")?;
+            env.settle()?;
+            let m = env.run_gets(gets, &format!("{}KB", vs >> 10))?;
+            println!("{}", m.row());
+            if kind == EngineKind::Nezha {
+                nezha_tp.push(m.ops_per_sec());
+            }
+            if kind == EngineKind::Original {
+                orig_tp.push(m.ops_per_sec());
+            }
+            env.destroy()?;
+        }
+    }
+    if !nezha_tp.is_empty() && nezha_tp.len() == orig_tp.len() {
+        let avg: f64 = nezha_tp
+            .iter()
+            .zip(&orig_tp)
+            .map(|(n, o)| improvement_pct(*n, *o))
+            .sum::<f64>()
+            / nezha_tp.len() as f64;
+        println!("\nNezha vs Original average get improvement: {avg:+.1}%  (paper: +12.5%)");
+    }
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Figure 6 — **range-query** throughput + latency vs value size
+//! (paper scans 4 GB out of the 100 GB dataset → we scan ~4% of the
+//! scaled load per query batch).  Paper headline: Nezha +72.6% over
+//! Original; Nezha-NoGC −39.5% (random I/O over the unsorted vLog).
+//!
+//! Run: `cargo bench --bench fig6_scan`.
+
+use nezha::engine::EngineKind;
+use nezha::harness::{bench_scale, engines_from_env, improvement_pct, print_header, value_sizes, Env, Spec};
+
+fn main() -> anyhow::Result<()> {
+    let load = ((6 << 20) as f64 * bench_scale()) as u64;
+    let scans = (40.0 * bench_scale()).max(8.0) as u64;
+    print_header("Figure 6: scan throughput/latency vs value size");
+    let mut nezha_tp = Vec::new();
+    let mut orig_tp = Vec::new();
+    for vs in value_sizes() {
+        for kind in engines_from_env() {
+            let mut spec = Spec::new(kind, vs);
+            spec.load_bytes = load;
+            let records = spec.records();
+            // ~4% of the dataset per scan.
+            let scan_len = ((records / 25).max(4) as usize).min(2_000);
+            let env = Env::start(spec)?;
+            env.load("preload")?;
+            env.settle()?;
+            let m = env.run_scans(scans, scan_len, &format!("{}KB", vs >> 10))?;
+            println!("{}", m.row());
+            if kind == EngineKind::Nezha {
+                nezha_tp.push(m.mib_per_sec());
+            }
+            if kind == EngineKind::Original {
+                orig_tp.push(m.mib_per_sec());
+            }
+            env.destroy()?;
+        }
+    }
+    if !nezha_tp.is_empty() && nezha_tp.len() == orig_tp.len() {
+        let avg: f64 = nezha_tp
+            .iter()
+            .zip(&orig_tp)
+            .map(|(n, o)| improvement_pct(*n, *o))
+            .sum::<f64>()
+            / nezha_tp.len() as f64;
+        println!("\nNezha vs Original average scan improvement: {avg:+.1}%  (paper: +72.6%)");
+    }
+    Ok(())
+}

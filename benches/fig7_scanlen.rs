@@ -1,0 +1,32 @@
+//! Figure 7 — range-query performance vs **scan length** (10 / 100 /
+//! 1000 / 10000 records at 16 KB values; paper used 100 client
+//! threads).  Paper headline: Nezha +7.58% over Original on average,
+//! stable across lengths; Nezha-NoGC much slower throughout.
+//!
+//! Scaled: lengths divided by 10 at default scale so the largest scan
+//! still covers most of the scaled dataset.
+//! Run: `cargo bench --bench fig7_scanlen`.
+
+use nezha::harness::{bench_scale, engines_from_env, print_header, Env, Spec};
+
+fn main() -> anyhow::Result<()> {
+    let load = ((8 << 20) as f64 * bench_scale()) as u64;
+    let lengths = [10usize, 100, 1_000, 10_000];
+    print_header("Figure 7: scan throughput/latency vs scan length (16KB values)");
+    for kind in engines_from_env() {
+        let mut spec = Spec::new(kind, 16 << 10);
+        spec.load_bytes = load;
+        let records = spec.records() as usize;
+        let env = Env::start(spec)?;
+        env.load("preload")?;
+        env.settle()?;
+        for len in lengths {
+            let eff = len.min(records); // clamp to dataset
+            let scans = (200 / (len / 10).max(1)).max(3) as u64;
+            let m = env.run_scans(scans, eff, &len.to_string())?;
+            println!("{}", m.row());
+        }
+        env.destroy()?;
+    }
+    Ok(())
+}

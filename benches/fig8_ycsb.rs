@@ -1,0 +1,60 @@
+//! Figure 8 — YCSB workloads A–F (Table II): overall throughput,
+//! write latency, read latency for all seven systems.  16 KB values,
+//! preloaded dataset, 1M requests in the paper (scaled here).
+//! Paper headline: Nezha +86.5% average throughput over Original.
+//!
+//! Run: `cargo bench --bench fig8_ycsb`.
+
+use nezha::engine::EngineKind;
+use nezha::harness::{bench_scale, engines_from_env, improvement_pct, print_header, Env, Spec};
+use nezha::ycsb::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    let load = ((4 << 20) as f64 * bench_scale()) as u64;
+    let ops = (250.0 * bench_scale()) as u64;
+    print_header("Figure 8(a): YCSB throughput");
+    let mut rows_lat: Vec<String> = Vec::new();
+    let mut nezha_tp = Vec::new();
+    let mut orig_tp = Vec::new();
+    for wl in WorkloadKind::ALL {
+        for kind in engines_from_env() {
+            let mut spec = Spec::new(kind, 16 << 10);
+            spec.load_bytes = load;
+            let env = Env::start(spec)?;
+            env.load("preload")?;
+            env.settle()?;
+            // Workload E uses scan length ≤ 100 like the paper's
+            // default YCSB E config.
+            let (m, wlat, rlat) = env.run_ycsb(wl, ops, 100)?;
+            println!("{}", m.row());
+            rows_lat.push(format!(
+                "{:<11} {:>3}  write[{}]  read[{}]",
+                kind.name(),
+                wl.name(),
+                wlat.summary(),
+                rlat.summary()
+            ));
+            if kind == EngineKind::Nezha {
+                nezha_tp.push(m.ops_per_sec());
+            }
+            if kind == EngineKind::Original {
+                orig_tp.push(m.ops_per_sec());
+            }
+            env.destroy()?;
+        }
+    }
+    println!("\n=== Figure 8(b,c): per-op latencies ===");
+    for r in rows_lat {
+        println!("{r}");
+    }
+    if !nezha_tp.is_empty() && nezha_tp.len() == orig_tp.len() {
+        let avg: f64 = nezha_tp
+            .iter()
+            .zip(&orig_tp)
+            .map(|(n, o)| improvement_pct(*n, *o))
+            .sum::<f64>()
+            / nezha_tp.len() as f64;
+        println!("\nNezha vs Original average YCSB improvement: {avg:+.1}%  (paper: +86.5%)");
+    }
+    Ok(())
+}

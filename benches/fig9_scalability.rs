@@ -1,0 +1,45 @@
+//! Figure 9 — put performance vs **cluster size** (3 / 5 / 7 nodes,
+//! 16 KB values).  Paper headline: throughput decreases with cluster
+//! size for everyone (consensus coordination overhead); Nezha stays
+//! 3.5×–5.3× above Original.
+//!
+//! Run: `cargo bench --bench fig9_scalability`.
+
+use nezha::engine::EngineKind;
+use nezha::harness::{bench_scale, engines_from_env, print_header, Env, Spec};
+
+fn main() -> anyhow::Result<()> {
+    let load = ((6 << 20) as f64 * bench_scale()) as u64;
+    print_header("Figure 9: put throughput/latency vs cluster size (16KB values)");
+    let mut ratio: Vec<(usize, f64, f64)> = Vec::new();
+    for nodes in [3usize, 5, 7] {
+        let mut nezha = 0.0;
+        let mut orig = 0.0;
+        for kind in engines_from_env() {
+            let mut spec = Spec::new(kind, 16 << 10);
+            spec.nodes = nodes;
+            spec.load_bytes = load;
+            let env = Env::start(spec)?;
+            let m = env.load(&format!("{nodes}n"))?;
+            println!("{}", m.row());
+            if kind == EngineKind::Nezha {
+                nezha = m.mib_per_sec();
+            }
+            if kind == EngineKind::Original {
+                orig = m.mib_per_sec();
+            }
+            env.destroy()?;
+        }
+        if nezha > 0.0 && orig > 0.0 {
+            ratio.push((nodes, nezha, orig));
+        }
+    }
+    println!();
+    for (n, nez, or) in ratio {
+        println!(
+            "{n} nodes: Nezha/Original = {:.1}x  (paper: 3.5x–5.3x)",
+            nez / or
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: start a 3-node Nezha cluster in-process, write, read,
+//! scan, delete, and watch a GC cycle happen.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use nezha::coordinator::{Cluster, ClusterConfig};
+use nezha::engine::EngineKind;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("nezha-quickstart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // A 3-node Nezha cluster with a small GC threshold so the demo
+    // actually triggers a cycle.
+    let mut cfg = ClusterConfig::new(&dir, EngineKind::Nezha, 3);
+    cfg.gc.threshold_bytes = 4 << 20;
+    let cluster = Cluster::start(cfg)?;
+    let leader = cluster.wait_for_leader(Duration::from_secs(5))?;
+    println!("cluster up, leader = node {leader}");
+
+    // Writes go through KVS-Raft: one value persist, offsets in the
+    // state machine.
+    cluster.put(b"greeting", b"hello, nezha!")?;
+    println!("get(greeting) = {:?}", String::from_utf8_lossy(&cluster.get(b"greeting")?.unwrap()));
+
+    // Bulk write to cross the GC threshold.
+    println!("writing 6 MiB to trigger GC...");
+    for chunk in 0..24 {
+        let ops: Vec<_> = (0..16u32)
+            .map(|i| {
+                (
+                    format!("bulk{:06}", chunk * 16 + i).into_bytes(),
+                    vec![chunk as u8; 16 << 10],
+                )
+            })
+            .collect();
+        cluster.put_batch(ops)?;
+    }
+    cluster.drain_gc()?;
+    let st = cluster.status(leader)?;
+    println!("GC cycles completed: {} (phase now {:?})", st.gc_cycles, st.gc_phase);
+
+    // Reads work identically across GC phases (three-phase request
+    // processing).
+    let rows = cluster.scan(b"bulk000100", b"bulk000110", 100)?;
+    println!("scan(bulk000100..bulk000110) -> {} rows", rows.len());
+    assert_eq!(rows.len(), 10);
+
+    cluster.delete(b"greeting")?;
+    assert_eq!(cluster.get(b"greeting")?, None);
+    println!("delete works; shutting down");
+
+    cluster.shutdown()?;
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

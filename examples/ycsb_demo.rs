@@ -1,0 +1,30 @@
+//! YCSB demo: run workloads A and E against Nezha and Original and
+//! print the side-by-side comparison — the mixed-workload scenario
+//! from the paper's §IV-E.
+//!
+//! ```bash
+//! cargo run --release --example ycsb_demo
+//! ```
+
+use nezha::engine::EngineKind;
+use nezha::harness::{print_header, Env, Spec};
+use nezha::ycsb::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    print_header("YCSB demo: A (50/50) and E (scan-heavy), 16KB values");
+    for wl in [WorkloadKind::A, WorkloadKind::E] {
+        for kind in [EngineKind::Original, EngineKind::Nezha] {
+            let mut spec = Spec::new(kind, 16 << 10);
+            spec.load_bytes = 4 << 20;
+            let env = Env::start(spec)?;
+            env.load("preload")?;
+            env.settle()?;
+            let (m, wlat, rlat) = env.run_ycsb(wl, 200, 50)?;
+            println!("{}", m.row());
+            println!("    write[{}]", wlat.summary());
+            println!("    read [{}]", rlat.summary());
+            env.destroy()?;
+        }
+    }
+    Ok(())
+}

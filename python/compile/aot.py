@@ -1,0 +1,78 @@
+"""AOT emitter: lower the L2 index-build graph to HLO *text* for the
+Rust PJRT loader.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids
+which xla_extension 0.5.1 (what the published ``xla`` 0.1.6 crate
+links) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage (from the python/ directory, as the Makefile does):
+    python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import hash_kernel
+
+# Fixed AOT batch size: the Rust caller pads the final batch to this.
+BATCH = 4096
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_index_build(batch: int = BATCH):
+    words = jax.ShapeDtypeStruct((batch, hash_kernel.KEY_WORDS), jnp.uint32)
+    lens = jax.ShapeDtypeStruct((batch,), jnp.uint32)
+    scalar = jax.ShapeDtypeStruct((), jnp.uint32)
+    return jax.jit(model.index_build).lower(words, lens, scalar, scalar)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=BATCH)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    text = to_hlo_text(lower_index_build(args.batch))
+    hlo_path = os.path.join(args.out_dir, "index_build.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+
+    # Manifest consumed by rust/src/runtime — records the shapes the
+    # executable was specialized to.
+    manifest = {
+        "index_build": {
+            "file": "index_build.hlo.txt",
+            "batch": args.batch,
+            "key_words": hash_kernel.KEY_WORDS,
+            "bloom_k": model.BLOOM_K,
+            "inputs": ["words u32[B,4]", "lens u32[B]",
+                       "n_buckets u32[]", "bloom_mask u32[]"],
+            "outputs": ["h1 u32[B]", "h2 u32[B]", "bucket u32[B]",
+                        "bloom_pos u32[B,4]"],
+        }
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(text)} chars to {hlo_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: batched key hashing for Nezha's GC index build.
+
+Nezha's Final Compacted Storage accelerates point lookups with a hash
+index over the sorted ValueLog (paper §III-C).  Building that index for
+millions of keys is the one data-parallel compute hot-spot in the GC
+path, so it is the kernel we AOT-compile and call from the Rust
+coordinator.
+
+Hash design (must stay bit-identical to ``rust/src/vlog/hash.rs``):
+
+* Keys are canonicalized by the caller to 4 little-endian u32 words
+  (first 16 bytes of the key, zero padded) plus the original byte
+  length.
+* ``h = FNV1a32(words, seed ^ len)`` word-at-a-time, then murmur3's
+  ``fmix32`` finalizer for avalanche.
+* Two independent seeds give (h1, h2); h2 is forced odd so the
+  double-hashing probe sequence ``h1 + i*h2`` cycles the full table.
+
+All arithmetic is wrapping u32 — elementwise VPU work.  The kernel is
+tiled over the batch dimension with a BlockSpec of ``(BLOCK, 4)`` key
+words per step; see DESIGN.md §Hardware-Adaptation for the TPU mapping
+rationale.  ``interpret=True`` everywhere: the CPU PJRT plugin cannot
+execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# FNV-1a 32-bit parameters.
+FNV_OFFSET = 0x811C9DC5
+FNV_PRIME = 0x01000193
+# Independent seeds for the two hash streams (arbitrary odd constants,
+# mirrored in rust/src/vlog/hash.rs).
+SEED1 = 0x0
+SEED2 = 0x9747B28C
+
+KEY_WORDS = 4  # 16-byte canonical key prefix as 4 u32 LE words
+BLOCK = 512    # batch tile: BLOCK*4*4 B key words + 2*BLOCK*4 B out per step
+
+
+def _u32(x):
+    return jnp.asarray(x, dtype=jnp.uint32)
+
+
+def _fmix32(h):
+    """murmur3 finalizer — full avalanche on a u32 lane."""
+    h = h ^ (h >> 16)
+    h = h * _u32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * _u32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _fnv1a_words(words, lens, seed):
+    """Word-at-a-time FNV-1a over ``words[N, KEY_WORDS]`` with the key
+    byte-length folded into the seed (distinguishes zero-padded
+    prefixes of different lengths)."""
+    h = (_u32(FNV_OFFSET) ^ _u32(seed)) ^ lens
+    for w in range(KEY_WORDS):
+        h = (h ^ words[:, w]) * _u32(FNV_PRIME)
+    return _fmix32(h)
+
+
+def _hash_block_kernel(words_ref, lens_ref, h1_ref, h2_ref):
+    """Pallas kernel body: one (BLOCK, KEY_WORDS) tile -> two BLOCK-wide
+    hash lanes.  Pure elementwise u32 ops; the grid pipeline streams
+    tiles HBM->VMEM."""
+    words = words_ref[...]
+    lens = lens_ref[...]
+    h1_ref[...] = _fnv1a_words(words, lens, SEED1)
+    # Force h2 odd so double-hash probing is a full-cycle permutation of
+    # any power-of-two table.
+    h2_ref[...] = _fnv1a_words(words, lens, SEED2) | _u32(1)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def hash_pairs(words, lens, *, block=BLOCK):
+    """Batched (h1, h2) for canonical key words.
+
+    words: u32[N, KEY_WORDS]; lens: u32[N].  N is padded internally to a
+    multiple of ``block`` so one compiled executable serves any batch.
+    """
+    n = words.shape[0]
+    pad = (-n) % block
+    if pad:
+        words = jnp.pad(words, ((0, pad), (0, 0)))
+        lens = jnp.pad(lens, ((0, pad),))
+    padded_n = words.shape[0]
+    grid = (padded_n // block,)
+
+    h1, h2 = pl.pallas_call(
+        _hash_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, KEY_WORDS), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded_n,), jnp.uint32),
+            jax.ShapeDtypeStruct((padded_n,), jnp.uint32),
+        ],
+        interpret=True,
+    )(words, lens)
+    return h1[:n], h2[:n]

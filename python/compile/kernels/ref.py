@@ -1,0 +1,77 @@
+"""Pure-jnp (and pure-python) correctness oracles for the Pallas hash
+kernel.  ``hash_pairs_ref`` is the vectorized jnp oracle used by the
+pytest allclose checks; ``hash_pairs_scalar`` is a from-first-principles
+python-int implementation used to validate the oracle itself and to
+emit golden vectors for the Rust parity test."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .hash_kernel import (
+    FNV_OFFSET,
+    FNV_PRIME,
+    KEY_WORDS,
+    SEED1,
+    SEED2,
+)
+
+_M = 0xFFFFFFFF
+
+
+def _u32(x):
+    return jnp.asarray(x, dtype=jnp.uint32)
+
+
+def hash_pairs_ref(words, lens):
+    """Vectorized jnp reference, no pallas involved."""
+
+    def fmix(h):
+        h = h ^ (h >> 16)
+        h = h * _u32(0x85EBCA6B)
+        h = h ^ (h >> 13)
+        h = h * _u32(0xC2B2AE35)
+        h = h ^ (h >> 16)
+        return h
+
+    def fnv(seed):
+        h = (_u32(FNV_OFFSET) ^ _u32(seed)) ^ lens
+        for w in range(KEY_WORDS):
+            h = (h ^ words[:, w]) * _u32(FNV_PRIME)
+        return fmix(h)
+
+    return fnv(SEED1), fnv(SEED2) | _u32(1)
+
+
+def _fmix32_scalar(h: int) -> int:
+    h &= _M
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & _M
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & _M
+    h ^= h >> 16
+    return h
+
+
+def hash_pairs_scalar(key: bytes) -> tuple[int, int]:
+    """Hash one raw key exactly as the Rust side does: canonicalize to
+    4 LE u32 words from the first 16 bytes (zero padded), fold in the
+    byte length, FNV-1a word-at-a-time, fmix32 finalize."""
+    words, lens = canonicalize(key)
+    out = []
+    for seed in (SEED1, SEED2):
+        h = (FNV_OFFSET ^ seed ^ lens) & _M
+        for w in words:
+            h = ((h ^ w) * FNV_PRIME) & _M
+        out.append(_fmix32_scalar(h))
+    return out[0], out[1] | 1
+
+
+def canonicalize(key: bytes) -> tuple[list[int], int]:
+    """Key bytes -> (4 LE u32 words of the zero-padded 16-byte prefix,
+    original length)."""
+    buf = (key[:16] + b"\x00" * 16)[:16]
+    words = [
+        int.from_bytes(buf[4 * i : 4 * i + 4], "little") for i in range(KEY_WORDS)
+    ]
+    return words, len(key) & _M

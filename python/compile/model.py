@@ -1,0 +1,36 @@
+"""L2 compute graph: Nezha's GC index-build planner.
+
+Given a batch of canonical key words, produce everything the Rust GC
+path needs to build the Final Compacted Storage read structures in one
+fused XLA module:
+
+* ``h1, h2``        — the two hash streams (L1 Pallas kernel),
+* ``bucket``        — open-addressing home slot, ``h1 % n_buckets``,
+* ``bloom_pos``     — ``BLOOM_K`` bit positions via double hashing
+                      ``(h1 + i*h2) & bloom_mask``.
+
+``n_buckets`` and ``bloom_mask`` are runtime u32 scalars so a single
+AOT-compiled executable serves every GC cycle regardless of table
+sizing.  The batch dimension is fixed at AOT time (``aot.py``); the
+Rust caller pads the final batch.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import hash_kernel
+
+BLOOM_K = 4  # probes per key; mirrored in rust/src/vlog/bloom constants
+
+
+def index_build(words, lens, n_buckets, bloom_mask):
+    """words: u32[N,4], lens: u32[N], n_buckets/bloom_mask: u32 scalars.
+
+    Returns (h1[N], h2[N], bucket[N], bloom_pos[N, BLOOM_K]) — all u32.
+    """
+    h1, h2 = hash_kernel.hash_pairs(words, lens)
+    bucket = h1 % jnp.maximum(n_buckets, jnp.uint32(1))
+    i = jnp.arange(BLOOM_K, dtype=jnp.uint32)
+    bloom_pos = (h1[:, None] + i[None, :] * h2[:, None]) & bloom_mask
+    return h1, h2, bucket, bloom_pos

@@ -1,0 +1,618 @@
+//! Multi-node cluster runtime: one thread per replica, an in-process
+//! [`Bus`] carrying encoded Raft frames, and a client handle that
+//! routes requests to the leader (retrying on stale hints) — the
+//! paper's Application→Consensus request path.
+//!
+//! Writes go through the group-commit batcher: a `PutBatch` is
+//! proposed as a block, persisted with one ValueLog flush, replicated
+//! with one AppendEntries fan-out, and acknowledged when the leader
+//! applies it (majority-committed).  Reads execute at the leader
+//! against the engine's three-phase read path.
+
+use super::replica::Replica;
+use crate::engine::{EngineKind, EngineOpts, EngineStats};
+use crate::gc::GcConfig;
+use crate::raft::node::Outbox;
+use crate::raft::{Bus, Command, Config as RaftConfig, NetConfig, NodeId, Role};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Client/admin requests into a node thread.
+pub enum Req {
+    PutBatch {
+        ops: Vec<(Vec<u8>, Vec<u8>)>,
+        resp: SyncSender<Result<()>>,
+    },
+    Delete {
+        key: Vec<u8>,
+        resp: SyncSender<Result<()>>,
+    },
+    Get {
+        key: Vec<u8>,
+        resp: SyncSender<Result<Option<Vec<u8>>>>,
+    },
+    Scan {
+        start: Vec<u8>,
+        end: Vec<u8>,
+        limit: usize,
+        resp: SyncSender<Result<Vec<(Vec<u8>, Vec<u8>)>>>,
+    },
+    Status {
+        resp: SyncSender<Status>,
+    },
+    /// Block until any in-flight GC cycle completes.
+    DrainGc {
+        resp: SyncSender<Result<()>>,
+    },
+    Stop,
+}
+
+#[derive(Clone, Debug)]
+pub struct Status {
+    pub id: NodeId,
+    pub role: Role,
+    pub term: u64,
+    pub leader_hint: Option<NodeId>,
+    pub last_applied: u64,
+    pub raft_vlog_bytes: u64,
+    pub engine: EngineStats,
+    pub gc_phase: crate::gc::GcPhase,
+    pub gc_cycles: u64,
+}
+
+/// Cluster-level configuration.
+#[derive(Clone)]
+pub struct ClusterConfig {
+    pub nodes: usize,
+    pub base_dir: PathBuf,
+    pub kind: EngineKind,
+    pub engine: EngineOpts,
+    pub raft: RaftConfig,
+    pub gc: GcConfig,
+    pub net: NetConfig,
+    /// Wall-clock per raft tick.
+    pub tick: Duration,
+    pub seed: u64,
+}
+
+impl ClusterConfig {
+    pub fn new(base_dir: impl Into<PathBuf>, kind: EngineKind, nodes: usize) -> Self {
+        let base: PathBuf = base_dir.into();
+        // Wall-clock raft timing (1 tick = 1 ms).  The election band
+        // is wider than the textbook 150–300 ms because on this
+        // single-core testbed a leader can legitimately stall for
+        // hundreds of ms inside a storage-engine apply burst (flush +
+        // compaction), and that must not read as a dead leader.
+        let raft = RaftConfig {
+            election_timeout_min: 500,
+            election_timeout_max: 900,
+            heartbeat_interval: 40,
+            ..RaftConfig::default()
+        };
+        Self {
+            nodes,
+            kind,
+            engine: EngineOpts::new(base.join("unset"), base.join("unset")),
+            raft,
+            gc: GcConfig::default(),
+            net: NetConfig::default(),
+            tick: Duration::from_millis(1),
+            seed: 42,
+            base_dir: base,
+        }
+    }
+}
+
+struct NodeThread {
+    tx: Sender<Req>,
+    /// Doorbell handle: wakes the node loop when a request is queued.
+    mailbox: Arc<crate::raft::transport::Mailbox>,
+    join: std::thread::JoinHandle<()>,
+}
+
+/// A running cluster.
+pub struct Cluster {
+    cfg: ClusterConfig,
+    threads: HashMap<NodeId, NodeThread>,
+    pub bus: Bus,
+    leader_cache: std::sync::Mutex<Option<NodeId>>,
+}
+
+impl Cluster {
+    /// Start `cfg.nodes` replicas and wait for a leader.
+    pub fn start(cfg: ClusterConfig) -> Result<Self> {
+        let bus = Bus::new(cfg.net.clone());
+        let ids: Vec<NodeId> = (1..=cfg.nodes as u64).collect();
+        let mut threads = HashMap::new();
+        for &id in &ids {
+            let peers: Vec<NodeId> = ids.iter().copied().filter(|&p| p != id).collect();
+            let mailbox = bus.register(id);
+            let mailbox2 = Arc::clone(&mailbox);
+            let (tx, rx) = mpsc::channel::<Req>();
+            let cfg2 = cfg.clone();
+            let bus2 = bus.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("nezha-node-{id}"))
+                .spawn(move || {
+                    if let Err(e) = node_loop(id, peers, cfg2, bus2, mailbox2, rx) {
+                        eprintln!("node {id} crashed: {e:#}");
+                    }
+                })?;
+            threads.insert(id, NodeThread { tx, mailbox, join });
+        }
+        let cluster = Self { cfg, threads, bus, leader_cache: std::sync::Mutex::new(None) };
+        cluster.wait_for_leader(Duration::from_secs(10))?;
+        Ok(cluster)
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    pub fn node_ids(&self) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = self.threads.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn req(&self, id: NodeId, req: Req) -> Result<()> {
+        let t = self.threads.get(&id).ok_or_else(|| anyhow!("no node {id}"))?;
+        t.tx.send(req).map_err(|_| anyhow!("node {id} stopped"))?;
+        t.mailbox.notify(); // wake the node loop immediately
+        Ok(())
+    }
+
+    pub fn status(&self, id: NodeId) -> Result<Status> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.req(id, Req::Status { resp: tx })?;
+        Ok(rx.recv_timeout(Duration::from_secs(10))?)
+    }
+
+    pub fn wait_for_leader(&self, timeout: Duration) -> Result<NodeId> {
+        let t0 = Instant::now();
+        loop {
+            for id in self.node_ids() {
+                if let Ok(st) = self.status(id) {
+                    if st.role == Role::Leader {
+                        *self.leader_cache.lock().unwrap() = Some(id);
+                        return Ok(id);
+                    }
+                }
+            }
+            if t0.elapsed() > timeout {
+                bail!("no leader within {timeout:?}");
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    fn leader(&self) -> Result<NodeId> {
+        if let Some(l) = *self.leader_cache.lock().unwrap() {
+            return Ok(l);
+        }
+        self.wait_for_leader(Duration::from_secs(10))
+    }
+
+    /// Route a request to the leader with one retry on stale cache.
+    fn at_leader<T>(
+        &self,
+        make: impl Fn() -> (Req, Receiver<Result<T>>),
+    ) -> Result<T> {
+        for _attempt in 0..3 {
+            let l = self.leader()?;
+            let (req, rx) = make();
+            self.req(l, req)?;
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(Ok(v)) => return Ok(v),
+                Ok(Err(e)) => {
+                    // NotLeader → refresh cache and retry.
+                    *self.leader_cache.lock().unwrap() = None;
+                    let msg = format!("{e:#}");
+                    if !msg.contains("not leader") {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(_) => {
+                    // CONSENSUS_TIMEOUT: leadership likely moved while
+                    // the batch was pending.  Refresh and re-submit —
+                    // puts/deletes are idempotent re-proposals.
+                    *self.leader_cache.lock().unwrap() = None;
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+        bail!("request timed out (CONSENSUS_TIMEOUT)")
+    }
+
+    pub fn put(&self, key: &[u8], value: &[u8]) -> Result<()> {
+        self.put_batch(vec![(key.to_vec(), value.to_vec())])
+    }
+
+    /// Group-commit write batch (Algorithm 1 semantics per op).
+    pub fn put_batch(&self, ops: Vec<(Vec<u8>, Vec<u8>)>) -> Result<()> {
+        self.at_leader(move || {
+            let (tx, rx) = mpsc::sync_channel(1);
+            (Req::PutBatch { ops: ops.clone(), resp: tx }, rx)
+        })
+    }
+
+    pub fn delete(&self, key: &[u8]) -> Result<()> {
+        let key = key.to_vec();
+        self.at_leader(move || {
+            let (tx, rx) = mpsc::sync_channel(1);
+            (Req::Delete { key: key.clone(), resp: tx }, rx)
+        })
+    }
+
+    pub fn get(&self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        let key = key.to_vec();
+        self.at_leader(move || {
+            let (tx, rx) = mpsc::sync_channel(1);
+            (Req::Get { key: key.clone(), resp: tx }, rx)
+        })
+    }
+
+    pub fn scan(&self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        let (start, end) = (start.to_vec(), end.to_vec());
+        self.at_leader(move || {
+            let (tx, rx) = mpsc::sync_channel(1);
+            (Req::Scan { start: start.clone(), end: end.clone(), limit, resp: tx }, rx)
+        })
+    }
+
+    /// Wait for any running GC on the leader to finish (benches).
+    pub fn drain_gc(&self) -> Result<()> {
+        self.at_leader(move || {
+            let (tx, rx) = mpsc::sync_channel(1);
+            (Req::DrainGc { resp: tx }, rx)
+        })
+    }
+
+    /// Block until every replica has applied the same log prefix.
+    pub fn wait_converged(&self, timeout: Duration) -> Result<()> {
+        let t0 = Instant::now();
+        loop {
+            let statuses: Result<Vec<Status>> =
+                self.node_ids().iter().map(|&id| self.status(id)).collect();
+            if let Ok(sts) = statuses {
+                let max = sts.iter().map(|s| s.last_applied).max().unwrap_or(0);
+                let min = sts.iter().map(|s| s.last_applied).min().unwrap_or(0);
+                if max == min {
+                    return Ok(());
+                }
+            }
+            if t0.elapsed() > timeout {
+                bail!("replicas did not converge within {timeout:?}");
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Drain GC on *every* node.  On the paper's testbed follower GC
+    /// runs on other machines; on this single-core box it would
+    /// otherwise compete with the leader's read service (DESIGN.md §2).
+    pub fn drain_gc_all(&self) -> Result<()> {
+        let mut waits = Vec::new();
+        for id in self.node_ids() {
+            let (tx, rx) = mpsc::sync_channel(1);
+            self.req(id, Req::DrainGc { resp: tx })?;
+            waits.push((id, rx));
+        }
+        for (id, rx) in waits {
+            rx.recv_timeout(Duration::from_secs(120))
+                .map_err(|_| anyhow!("drain_gc timed out on node {id}"))??;
+        }
+        Ok(())
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        for (_, t) in self.threads.iter() {
+            let _ = t.tx.send(Req::Stop);
+        }
+        self.bus.shutdown();
+        for (_, t) in self.threads.drain() {
+            let _ = t.join.join();
+        }
+        Ok(())
+    }
+}
+
+/// Max client write commands folded into one consensus round.
+const MAX_FOLD: usize = 512;
+
+fn node_loop(
+    id: NodeId,
+    peers: Vec<NodeId>,
+    cfg: ClusterConfig,
+    bus: Bus,
+    mailbox: Arc<crate::raft::transport::Mailbox>,
+    rx: Receiver<Req>,
+) -> Result<()> {
+    let base = cfg.base_dir.join(format!("node-{id}"));
+    let mut opts = cfg.engine.clone();
+    // LSM-Raft's asymmetric persistence: node 1 takes the leader path,
+    // the rest the follower (SSTable-shipping) path.  Node 1 also gets
+    // a shorter election timeout so the role assignment holds (bench
+    // simplification, DESIGN.md §2).
+    let mut raft_cfg = cfg.raft.clone();
+    if id == 1 {
+        raft_cfg.election_timeout_min = raft_cfg.election_timeout_min / 2;
+        raft_cfg.election_timeout_max = raft_cfg.election_timeout_min + 2;
+    }
+    opts.follower = cfg.kind == EngineKind::LsmRaft && id != 1;
+    let mut replica = Replica::open(
+        id,
+        peers,
+        &base,
+        cfg.kind,
+        opts,
+        raft_cfg,
+        cfg.gc.clone(),
+        cfg.seed,
+    )?;
+
+    let started = Instant::now();
+    let mut last_tick = Duration::ZERO;
+    // (commit index awaited, responder)
+    let mut pending: Vec<(u64, SyncSender<Result<()>>)> = Vec::new();
+
+    let send_out = |out: Outbox| {
+        for (dst, msg) in out {
+            bus.send(id, dst, &msg);
+        }
+    };
+
+    loop {
+        // 1. Network input.
+        let Some(msgs) = mailbox.drain(Duration::from_micros(300)) else {
+            return Ok(()); // bus shut down
+        };
+        for (from, msg) in msgs {
+            let out = replica.node.handle(from, msg)?;
+            send_out(out);
+        }
+
+        // 2. Logical time.  Catch-up is capped: a thread stalled in a
+        // slow engine apply must not burn its whole election budget in
+        // one burst (busy ≠ dead) — it ticks at most twice per loop and
+        // forgives the rest of the stall.
+        let now = started.elapsed();
+        let mut caught_up = 0;
+        while now.saturating_sub(last_tick) >= cfg.tick {
+            last_tick += cfg.tick;
+            caught_up += 1;
+            if caught_up > 2 {
+                last_tick = now;
+                break;
+            }
+            let out = replica.node.tick()?;
+            send_out(out);
+        }
+
+        // 3. Client requests (fold writes into one consensus round).
+        let mut write_cmds: Vec<Command> = Vec::new();
+        let mut write_resps: Vec<(usize, SyncSender<Result<()>>)> = Vec::new();
+        let mut stop = false;
+        while let Ok(req) = rx.try_recv() {
+            match req {
+                Req::PutBatch { ops, resp } => {
+                    if !replica.node.is_leader() {
+                        let _ = resp.send(Err(anyhow!("not leader (hint {:?})", replica.node.leader_hint())));
+                        continue;
+                    }
+                    for (k, v) in ops {
+                        write_cmds.push(Command::Put { key: k, value: v });
+                    }
+                    write_resps.push((write_cmds.len(), resp));
+                }
+                Req::Delete { key, resp } => {
+                    if !replica.node.is_leader() {
+                        let _ = resp.send(Err(anyhow!("not leader (hint {:?})", replica.node.leader_hint())));
+                        continue;
+                    }
+                    write_cmds.push(Command::Delete { key });
+                    write_resps.push((write_cmds.len(), resp));
+                }
+                Req::Get { key, resp } => {
+                    let r = if replica.node.is_leader() {
+                        replica.engine().get(&key)
+                    } else {
+                        Err(anyhow!("not leader (hint {:?})", replica.node.leader_hint()))
+                    };
+                    let _ = resp.send(r);
+                }
+                Req::Scan { start, end, limit, resp } => {
+                    let r = if replica.node.is_leader() {
+                        replica.engine().scan(&start, &end, limit)
+                    } else {
+                        Err(anyhow!("not leader (hint {:?})", replica.node.leader_hint()))
+                    };
+                    let _ = resp.send(r);
+                }
+                Req::Status { resp } => {
+                    let s = replica.stats();
+                    let _ = resp.send(Status {
+                        id,
+                        role: replica.node.role(),
+                        term: replica.node.term(),
+                        leader_hint: replica.node.leader_hint(),
+                        last_applied: replica.node.last_applied(),
+                        raft_vlog_bytes: replica.raft_vlog_bytes(),
+                        engine: s,
+                        gc_phase: replica.engine_ref().gc_phase(),
+                        gc_cycles: s.gc_cycles,
+                    });
+                }
+                Req::DrainGc { resp } => {
+                    // Run every pending trigger to completion so the
+                    // caller observes a fully settled Post-GC state
+                    // (the paper's "loaded, two GC cycles done" setup).
+                    let now_ms = started.elapsed().as_millis() as u64;
+                    let r = (|| -> Result<()> {
+                        for _ in 0..8 {
+                            replica.pump_gc(now_ms)?;
+                            if replica.engine_ref().gc_phase() == crate::gc::GcPhase::During {
+                                replica.finish_gc()?;
+                            } else {
+                                break;
+                            }
+                        }
+                        Ok(())
+                    })();
+                    let _ = resp.send(r);
+                }
+                Req::Stop => stop = true,
+            }
+            if write_cmds.len() >= MAX_FOLD {
+                break;
+            }
+        }
+
+        if !write_cmds.is_empty() {
+            match replica.propose_batch(write_cmds) {
+                Ok((indexes, out)) => {
+                    send_out(out);
+                    for (upto, resp) in write_resps {
+                        // Command i completes when its index applies.
+                        let idx = indexes[upto - 1];
+                        pending.push((idx, resp));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for (_, resp) in write_resps {
+                        let _ = resp.send(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+
+        // 4. Completions.
+        if !pending.is_empty() {
+            let applied = replica.node.last_applied();
+            pending.retain(|(idx, resp)| {
+                if *idx <= applied {
+                    let _ = resp.send(Ok(()));
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+
+        // 5. GC lifecycle.  A GC hiccup degrades (retried after
+        // restart via the persisted GcState) but never kills the node.
+        let now_ms = started.elapsed().as_millis() as u64;
+        if let Err(e) = replica.pump_gc(now_ms) {
+            eprintln!("node {id}: gc pump error (degraded): {e:#}");
+        }
+
+        if stop {
+            // Finish any GC so files are consistent on disk.
+            let _ = replica.finish_gc();
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(name: &str, kind: EngineKind, nodes: usize) -> ClusterConfig {
+        let base = std::env::temp_dir().join(format!("nezha-cluster-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let mut c = ClusterConfig::new(base, kind, nodes);
+        c.engine.memtable_bytes = 64 << 10;
+        c.net = NetConfig { latency_us: (0, 0), loss: 0.0, seed: 1 };
+        c
+    }
+
+    #[test]
+    fn three_node_nezha_put_get_scan() {
+        let cluster = Cluster::start(cfg("basic", EngineKind::Nezha, 3)).unwrap();
+        for i in 0..50u32 {
+            cluster.put(format!("key{i:03}").as_bytes(), format!("val{i}").as_bytes()).unwrap();
+        }
+        assert_eq!(cluster.get(b"key025").unwrap(), Some(b"val25".to_vec()));
+        assert_eq!(cluster.get(b"nothere").unwrap(), None);
+        let rows = cluster.scan(b"key010", b"key020", 100).unwrap();
+        assert_eq!(rows.len(), 10);
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn batch_writes_commit_atomically_visible() {
+        let cluster = Cluster::start(cfg("batch", EngineKind::Original, 3)).unwrap();
+        let ops: Vec<_> = (0..100u32)
+            .map(|i| (format!("b{i:03}").into_bytes(), vec![i as u8; 32]))
+            .collect();
+        cluster.put_batch(ops).unwrap();
+        assert_eq!(cluster.get(b"b099").unwrap(), Some(vec![99u8; 32]));
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn delete_roundtrip() {
+        let cluster = Cluster::start(cfg("delete", EngineKind::Nezha, 3)).unwrap();
+        cluster.put(b"k", b"v").unwrap();
+        assert_eq!(cluster.get(b"k").unwrap(), Some(b"v".to_vec()));
+        cluster.delete(b"k").unwrap();
+        assert_eq!(cluster.get(b"k").unwrap(), None);
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn replicas_converge() {
+        let cluster = Cluster::start(cfg("converge", EngineKind::Original, 3)).unwrap();
+        for i in 0..30u32 {
+            cluster.put(format!("c{i}").as_bytes(), b"x").unwrap();
+        }
+        // Wait for followers to apply everything.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let statuses: Vec<Status> =
+                cluster.node_ids().iter().map(|&id| cluster.status(id).unwrap()).collect();
+            let max = statuses.iter().map(|s| s.last_applied).max().unwrap();
+            let min = statuses.iter().map(|s| s.last_applied).min().unwrap();
+            if max == min && max >= 30 {
+                break;
+            }
+            if Instant::now() > deadline {
+                panic!("replicas did not converge: {statuses:?}");
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn gc_under_load_preserves_reads() {
+        let base = std::env::temp_dir().join(format!("nezha-cluster-gcload-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let mut c = ClusterConfig::new(base, EngineKind::Nezha, 3);
+        c.engine.memtable_bytes = 64 << 10;
+        c.net = NetConfig { latency_us: (0, 0), loss: 0.0, seed: 1 };
+        c.gc.threshold_bytes = 128 << 10; // tiny: force cycles
+        let cluster = Cluster::start(c).unwrap();
+        for i in 0..300u32 {
+            cluster.put(format!("g{i:04}").as_bytes(), &[5u8; 1024]).unwrap();
+        }
+        cluster.drain_gc().unwrap();
+        let st = cluster.status(cluster.wait_for_leader(Duration::from_secs(5)).unwrap()).unwrap();
+        assert!(st.gc_cycles >= 1, "expected at least one GC cycle, got {}", st.gc_cycles);
+        for i in (0..300u32).step_by(37) {
+            assert_eq!(
+                cluster.get(format!("g{i:04}").as_bytes()).unwrap(),
+                Some(vec![5u8; 1024]),
+                "g{i:04}"
+            );
+        }
+        cluster.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,12 @@
+//! Cluster coordinator: the Application/Consensus-layer runtime.
+//!
+//! * [`replica`] — one node's composition: Raft node + engine + GC
+//!   lifecycle pump.
+//! * [`cluster`] — thread-per-node cluster with leader routing, group
+//!   commit batching and a blocking client API.
+
+pub mod cluster;
+pub mod replica;
+
+pub use cluster::{Cluster, ClusterConfig, Status};
+pub use replica::Replica;

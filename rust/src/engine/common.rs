@@ -1,0 +1,65 @@
+//! Shared engine helpers: KV snapshot wire format + LSM option
+//! derivation.
+
+use crate::lsm;
+use crate::util::{Decoder, Encoder};
+use anyhow::Result;
+use std::path::Path;
+
+/// Serialize a full KV state for InstallSnapshot (sorted by key — the
+/// scan already is).
+pub fn encode_kv_snapshot(pairs: &[(Vec<u8>, Vec<u8>)]) -> Vec<u8> {
+    let mut e = Encoder::with_capacity(64 + pairs.iter().map(|(k, v)| k.len() + v.len() + 8).sum::<usize>());
+    e.varint(pairs.len() as u64);
+    for (k, v) in pairs {
+        e.len_bytes(k).len_bytes(v);
+    }
+    e.into_vec()
+}
+
+pub fn decode_kv_snapshot(data: &[u8]) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+    let mut d = Decoder::new(data);
+    let n = d.varint()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = d.len_bytes()?.to_vec();
+        let v = d.len_bytes()?.to_vec();
+        out.push((k, v));
+    }
+    Ok(out)
+}
+
+/// LSM options from engine options.
+pub fn lsm_options(dir: &Path, opts: &super::EngineOpts, wal: bool) -> lsm::Options {
+    let mut o = lsm::Options::new(dir);
+    o.wal_enabled = wal;
+    o.memtable_bytes = opts.memtable_bytes;
+    o.l0_compaction_trigger = opts.l0_trigger;
+    o.level_base_bytes = opts.level_base_bytes;
+    o.output_split_bytes = (opts.level_base_bytes / 4).max(1 << 20);
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let pairs = vec![
+            (b"a".to_vec(), vec![1u8; 100]),
+            (b"b".to_vec(), Vec::new()),
+            (vec![0xff; 20], vec![7u8; 3]),
+        ];
+        let enc = encode_kv_snapshot(&pairs);
+        assert_eq!(decode_kv_snapshot(&enc).unwrap(), pairs);
+        assert_eq!(decode_kv_snapshot(&encode_kv_snapshot(&[])).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn snapshot_rejects_truncation() {
+        let pairs = vec![(b"k".to_vec(), vec![9u8; 50])];
+        let enc = encode_kv_snapshot(&pairs);
+        assert!(decode_kv_snapshot(&enc[..enc.len() - 5]).is_err());
+    }
+}

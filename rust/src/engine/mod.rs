@@ -1,0 +1,206 @@
+//! The seven evaluation configurations (paper §IV-B) behind one trait.
+//!
+//! | Kind        | Raft log           | Engine persistence                | Value writes |
+//! |-------------|--------------------|-----------------------------------|--------------|
+//! | `Original`  | full value (VLog)  | LSM + WAL, full values            | ≥3           |
+//! | `Tikv`      | full value         | LSM + WAL + apply-state records   | ≥3 (+meta)   |
+//! | `Pasv`      | full value         | LSM, **no WAL**                   | ≥2           |
+//! | `Dwisckey`  | full value         | engine vLog + LSM(key→ptr) + WAL  | 2            |
+//! | `LsmRaft`   | full value         | leader: as Original; followers    | ≥3 leader,   |
+//! |             |                    | ingest sorted runs (SST shipping) | ~1 follower  |
+//! | `NezhaNoGc` | full value = THE   | LSM(key→VRef), no value rewrite   | **1**        |
+//! | `Nezha`     | single value write | + Raft-aware GC (sorted + index)  | **1** (+GC)  |
+//!
+//! Every engine implements [`crate::raft::StateMachine`] (the apply
+//! path) plus the read/scan/GC hooks of [`KvEngine`].  The replica
+//! (coordinator::replica) wires an engine into a Raft node.
+
+pub mod classic;
+pub mod common;
+pub mod dwisckey;
+pub mod nezha;
+
+use crate::gc::{GcOutput, GcPhase};
+use crate::raft::StateMachine;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    Original,
+    Pasv,
+    Tikv,
+    Dwisckey,
+    LsmRaft,
+    NezhaNoGc,
+    Nezha,
+}
+
+impl EngineKind {
+    pub const ALL: [EngineKind; 7] = [
+        EngineKind::Original,
+        EngineKind::Pasv,
+        EngineKind::Tikv,
+        EngineKind::Dwisckey,
+        EngineKind::LsmRaft,
+        EngineKind::NezhaNoGc,
+        EngineKind::Nezha,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Original => "Original",
+            EngineKind::Pasv => "PASV",
+            EngineKind::Tikv => "TiKV",
+            EngineKind::Dwisckey => "Dwisckey",
+            EngineKind::LsmRaft => "LSM-Raft",
+            EngineKind::NezhaNoGc => "Nezha-NoGC",
+            EngineKind::Nezha => "Nezha",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        let norm = s.to_ascii_lowercase().replace(['-', '_'], "");
+        Some(match norm.as_str() {
+            "original" => EngineKind::Original,
+            "pasv" => EngineKind::Pasv,
+            "tikv" => EngineKind::Tikv,
+            "dwisckey" | "wisckey" => EngineKind::Dwisckey,
+            "lsmraft" => EngineKind::LsmRaft,
+            "nezhanogc" => EngineKind::NezhaNoGc,
+            "nezha" => EngineKind::Nezha,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Construction options shared by all engines.
+#[derive(Clone)]
+pub struct EngineOpts {
+    /// Engine-private directory (LSM dirs, sorted generations, flags).
+    pub dir: PathBuf,
+    /// Raft directory holding the epoch ValueLogs this engine reads.
+    pub raft_dir: PathBuf,
+    /// LSM memtable flush trigger.
+    pub memtable_bytes: usize,
+    /// LSM L0 compaction trigger.
+    pub l0_trigger: usize,
+    /// LSM level-size budget base.
+    pub level_base_bytes: u64,
+    /// This replica is a follower (LSM-Raft's asymmetric path).
+    pub follower: bool,
+    /// Hash/bucket backend for Nezha's GC index build.
+    pub index_backend: Arc<dyn crate::gc::IndexBackend>,
+}
+
+impl EngineOpts {
+    pub fn new(dir: impl Into<PathBuf>, raft_dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            raft_dir: raft_dir.into(),
+            memtable_bytes: 4 << 20,
+            l0_trigger: 4,
+            level_base_bytes: 32 << 20,
+            follower: false,
+            index_backend: Arc::new(crate::gc::RustBackend),
+        }
+    }
+}
+
+/// Byte counters aggregated for the write-amplification tables.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// LSM WAL bytes (2nd value write in Original).
+    pub wal_bytes: u64,
+    /// LSM flush bytes (3rd value write).
+    pub flush_bytes: u64,
+    /// LSM compaction bytes (3rd+ writes).
+    pub compact_bytes: u64,
+    /// Engine-private vLog bytes (Dwisckey's extra value persist).
+    pub engine_vlog_bytes: u64,
+    /// GC output bytes (Nezha's background rewrite).
+    pub gc_bytes: u64,
+    pub gc_cycles: u64,
+    pub gets: u64,
+    pub scans: u64,
+}
+
+impl EngineStats {
+    /// Total engine-side write volume (excludes the raft ValueLog,
+    /// which the replica accounts separately).
+    pub fn engine_write_bytes(&self) -> u64 {
+        self.wal_bytes + self.flush_bytes + self.compact_bytes + self.engine_vlog_bytes
+    }
+}
+
+/// A storage engine pluggable under a Raft node.
+pub trait KvEngine: StateMachine {
+    fn kind(&self) -> EngineKind;
+
+    /// Linearizable-at-the-leader point read (Algorithm 2).
+    fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>>;
+
+    /// Range scan (Algorithm 3): `[start, end)`, at most `limit` rows.
+    fn scan(&mut self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<(Vec<u8>, Vec<u8>)>>;
+
+    /// Group-commit durability point for engine-side files.
+    fn sync(&mut self) -> Result<()>;
+
+    fn stats(&self) -> EngineStats;
+
+    /// Current request-processing phase (Table I).
+    fn gc_phase(&self) -> GcPhase {
+        GcPhase::Pre
+    }
+
+    /// Start a GC cycle over the just-frozen raft epoch.  Only Nezha
+    /// implements this; the replica calls it right after
+    /// `RaftLog::rotate()`.
+    fn begin_gc(&mut self, _frozen_epoch: u32, _last_index: u64, _last_term: u64) -> Result<()> {
+        anyhow::bail!("{} does not garbage-collect", self.kind())
+    }
+
+    /// Poll for cycle completion.  When `Some`, the replica marks the
+    /// Raft snapshot at the returned point and drops old epochs.
+    fn poll_gc(&mut self) -> Result<Option<GcOutput>> {
+        Ok(None)
+    }
+
+    /// Block until a running GC cycle finishes (tests/benches).
+    fn wait_gc(&mut self) -> Result<Option<GcOutput>> {
+        self.poll_gc()
+    }
+}
+
+impl StateMachine for Box<dyn KvEngine> {
+    fn apply(&mut self, entry: &crate::raft::LogEntry, vref: crate::vlog::VRef) -> Result<()> {
+        (**self).apply(entry, vref)
+    }
+
+    fn snapshot_bytes(&mut self) -> Result<Vec<u8>> {
+        (**self).snapshot_bytes()
+    }
+
+    fn install_snapshot(&mut self, data: &[u8], li: u64, lt: u64) -> Result<()> {
+        (**self).install_snapshot(data, li, lt)
+    }
+}
+
+/// Build an engine of the given kind.
+pub fn build(kind: EngineKind, opts: EngineOpts) -> Result<Box<dyn KvEngine>> {
+    Ok(match kind {
+        EngineKind::Original | EngineKind::Pasv | EngineKind::Tikv | EngineKind::LsmRaft => {
+            Box::new(classic::ClassicEngine::open(kind, opts)?)
+        }
+        EngineKind::Dwisckey => Box::new(dwisckey::DwisckeyEngine::open(opts)?),
+        EngineKind::NezhaNoGc => Box::new(nezha::NezhaEngine::open(opts, false)?),
+        EngineKind::Nezha => Box::new(nezha::NezhaEngine::open(opts, true)?),
+    })
+}

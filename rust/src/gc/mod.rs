@@ -1,0 +1,509 @@
+//! Raft-aware garbage collection framework (paper §III-C).
+//!
+//! A GC cycle takes the frozen Active Storage (one raft ValueLog epoch
+//! + its key→VRef LSM) plus the previous Final Compacted Storage, and
+//! produces a new Final Compacted Storage: a key-ordered
+//! [`SortedVLog`] + [`HashIndex`].  The sorted log carries
+//! `(last_term, last_index)` so it doubles as the Raft snapshot.
+//!
+//! Lifecycle (paper's four phases):
+//! 1. **GC initialization** — the replica rotates the raft log epoch
+//!    (freezing the Active ValueLog), the engine freezes its LSM and
+//!    opens fresh ones (the New Storage), and persists a [`GcState`]
+//!    flag file.
+//! 2. **Data compaction** — [`run_gc`] (on a background thread) merges
+//!    the frozen epoch's live entries with the previous sorted log.
+//! 3. **Cleanup** — the engine swaps in the new [`FinalStorage`],
+//!    deletes the old generation + frozen LSM, and the replica marks
+//!    the Raft snapshot and drops the old epoch files.
+//! 4. **Steady state** — the New Storage has become the Active
+//!    Storage; the cycle can repeat.
+//!
+//! Crash recovery: if [`GcState`] says a cycle was running, the engine
+//! resumes from the last key in the partial sorted file
+//! ([`SortedVLogWriter::resume`]) — §III-E.
+
+use crate::util::{Decoder, Encoder};
+use crate::vlog::{Entry as VEntry, HashIndex, SortedVLog, SortedVLogWriter, VLogReader};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// The request-processing phase (Table I).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GcPhase {
+    /// Only the Active Storage exists.
+    Pre,
+    /// New Storage + (frozen) Active Storage.
+    During,
+    /// New Storage + Final Compacted Storage.
+    Post,
+}
+
+/// GC trigger policy (paper: "multidimensional triggers, including
+/// storage space thresholds, scheduled timing mechanisms, and request
+/// load levels").
+#[derive(Clone, Debug)]
+pub struct GcConfig {
+    /// Active ValueLog size trigger (paper's 40 GB, scaled).
+    pub threshold_bytes: u64,
+    /// Minimum logical time between cycles (scheduled trigger floor).
+    pub min_interval_ms: u64,
+    /// Skip triggering while apply-queue pressure is above this many
+    /// entries (load-level trigger: don't GC under peak load).
+    pub max_load_entries: u64,
+    /// Build the hash index through the AOT XLA planner when available.
+    pub use_xla_planner: bool,
+}
+
+impl Default for GcConfig {
+    fn default() -> Self {
+        Self {
+            threshold_bytes: 64 << 20,
+            min_interval_ms: 0,
+            max_load_entries: u64::MAX,
+            use_xla_planner: true,
+        }
+    }
+}
+
+/// Persistent GC progress flag ("the recovery process first checks the
+/// atomic GC state flag" — §III-E).  Written atomically via tmp+rename.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GcState {
+    pub running: bool,
+    pub frozen_epoch: u32,
+    pub out_gen: u64,
+    pub last_index: u64,
+    pub last_term: u64,
+}
+
+impl GcState {
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let mut e = Encoder::with_capacity(40);
+        e.u8(self.running as u8)
+            .u32(self.frozen_epoch)
+            .u64(self.out_gen)
+            .u64(self.last_index)
+            .u64(self.last_term);
+        let body = e.into_vec();
+        let mut framed = Encoder::with_capacity(body.len() + 4);
+        framed.u32(crc32fast::hash(&body)).bytes(&body);
+        let tmp = dir.join("GC_STATE.tmp");
+        std::fs::write(&tmp, framed.as_slice())?;
+        std::fs::rename(tmp, dir.join("GC_STATE"))?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<Option<Self>> {
+        let buf = match std::fs::read(dir.join("GC_STATE")) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        let mut d = Decoder::new(&buf);
+        let crc = d.u32()?;
+        let body = d.bytes(d.remaining())?;
+        anyhow::ensure!(crc32fast::hash(body) == crc, "gc state crc mismatch");
+        let mut d = Decoder::new(body);
+        Ok(Some(Self {
+            running: d.u8()? != 0,
+            frozen_epoch: d.u32()?,
+            out_gen: d.u64()?,
+            last_index: d.u64()?,
+            last_term: d.u64()?,
+        }))
+    }
+
+    pub fn clear(dir: &Path) -> Result<()> {
+        match std::fs::remove_file(dir.join("GC_STATE")) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+/// The Final Compacted Storage module: sorted ValueLog + hash index.
+pub struct FinalStorage {
+    pub log: SortedVLog,
+    pub index: HashIndex,
+    pub gen: u64,
+}
+
+pub fn sorted_path(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(format!("sorted-{gen:06}.vlog"))
+}
+
+pub fn index_path(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(format!("sorted-{gen:06}.idx"))
+}
+
+impl FinalStorage {
+    pub fn open(dir: &Path, gen: u64) -> Result<Self> {
+        let log = SortedVLog::open(&sorted_path(dir, gen))?;
+        let index = HashIndex::load(&index_path(dir, gen))
+            .context("final storage index load")?;
+        Ok(Self { log, index, gen })
+    }
+
+    /// Point lookup via the hash index (one random read on hit —
+    /// paper §IV-C2).
+    pub fn get(&self, key: &[u8]) -> Result<Option<VEntry>> {
+        self.index.lookup(key, &self.log)
+    }
+
+    /// Range scan: one random read for the start position, then
+    /// sequential (paper §IV-C3).
+    pub fn scan(&self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<VEntry>> {
+        let from = self.index.scan_start(start);
+        self.log.scan_from(from, start, end, limit)
+    }
+
+    /// Discover the newest complete generation in `dir`.
+    pub fn latest_gen(dir: &Path) -> Result<Option<u64>> {
+        let mut best = None;
+        let rd = match std::fs::read_dir(dir) {
+            Ok(r) => r,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        for entry in rd {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(num) = name.strip_prefix("sorted-").and_then(|s| s.strip_suffix(".idx")) {
+                if let Ok(g) = num.parse::<u64>() {
+                    best = Some(best.map_or(g, |b: u64| b.max(g)));
+                }
+            }
+        }
+        Ok(best)
+    }
+
+    pub fn remove_gen(dir: &Path, gen: u64) {
+        let _ = std::fs::remove_file(sorted_path(dir, gen));
+        let _ = std::fs::remove_file(index_path(dir, gen));
+    }
+}
+
+/// Hash/bucket provider for index construction — either the pure-Rust
+/// hash or the AOT XLA planner ([`crate::runtime::IndexPlanner`]).
+pub trait IndexBackend: Send + Sync {
+    /// For each key return `(h1, bucket)` where `bucket = h1 %
+    /// n_buckets`.
+    fn plan(&self, keys: &[&[u8]], n_buckets: u32) -> Result<(Vec<u32>, Vec<u32>)>;
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust backend (always available; bit-identical to the kernel).
+pub struct RustBackend;
+
+impl IndexBackend for RustBackend {
+    fn plan(&self, keys: &[&[u8]], n_buckets: u32) -> Result<(Vec<u32>, Vec<u32>)> {
+        let mut h = Vec::with_capacity(keys.len());
+        let mut b = Vec::with_capacity(keys.len());
+        let nb = n_buckets.max(1);
+        for k in keys {
+            let (h1, _) = crate::vlog::hash::hash_pair(k);
+            h.push(h1);
+            b.push(h1 % nb);
+        }
+        Ok((h, b))
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// What a finished cycle hands back to the replica.
+#[derive(Debug)]
+pub struct GcOutput {
+    pub gen: u64,
+    pub entries: u64,
+    pub bytes_written: u64,
+    pub last_index: u64,
+    pub last_term: u64,
+    pub wall_ms: u64,
+    pub index_backend: &'static str,
+}
+
+/// Inputs for one compaction cycle (runs on a background thread; only
+/// touches frozen files).
+pub struct GcInputs {
+    /// Frozen Active-Storage ValueLog (raft epoch file).
+    pub frozen_vlog_path: PathBuf,
+    /// Previous Final Compacted Storage generation, if any.
+    pub prev_gen: Option<u64>,
+    /// Output directory (holds sorted-*.vlog/idx).
+    pub dir: PathBuf,
+    pub out_gen: u64,
+    pub last_index: u64,
+    pub last_term: u64,
+    /// Resume a partially-written output (crash recovery).
+    pub resume: bool,
+    pub backend: Arc<dyn IndexBackend>,
+}
+
+/// Run one GC compaction cycle to completion.
+pub fn run_gc(inp: &GcInputs) -> Result<GcOutput> {
+    let t0 = std::time::Instant::now();
+
+    // (1) Latest-per-key view of the frozen epoch.  File order is
+    // index order, so later entries overwrite earlier ones.
+    let mut fresh: BTreeMap<Vec<u8>, VEntry> = BTreeMap::new();
+    let reader = VLogReader::open(&inp.frozen_vlog_path)?;
+    for item in reader.iter()? {
+        let (_, e) = item?;
+        if e.index > inp.last_index {
+            break; // beyond the snapshot point (uncommitted tail)
+        }
+        if e.key.is_empty() && e.value.is_none() {
+            continue; // raft noop
+        }
+        fresh.insert(e.key.clone(), e);
+    }
+
+    // (2+3) Merge with the previous sorted generation, streaming into
+    // the new sorted log. Tombstones annihilate and are dropped.
+    let out_path = sorted_path(&inp.dir, inp.out_gen);
+    let mut w = if inp.resume && out_path.exists() {
+        SortedVLogWriter::resume(&out_path)?
+    } else {
+        SortedVLogWriter::create(&out_path, inp.last_term, inp.last_index)?
+    };
+    let resume_after: Option<Vec<u8>> = w.last_key().map(|k| k.to_vec());
+
+    let prev = match inp.prev_gen {
+        Some(g) => Some(SortedVLog::open(&sorted_path(&inp.dir, g))?),
+        None => None,
+    };
+    let mut prev_iter = prev.as_ref().map(|p| p.iter().peekable());
+    let mut fresh_iter = fresh.into_iter().peekable();
+
+    let skip = |key: &[u8]| resume_after.as_deref().map_or(false, |ra| key <= ra);
+    loop {
+        // Classic two-way sorted merge; fresh wins ties.
+        let take_fresh = match (fresh_iter.peek(), prev_iter.as_mut().and_then(|i| i.peek())) {
+            (None, None) => break,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (Some((fk, _)), Some(Ok((_, pe)))) => fk.as_slice() <= pe.key.as_slice(),
+            (_, Some(Err(_))) => true, // surface the error below
+        };
+        if take_fresh {
+            let (k, e) = fresh_iter.next().unwrap();
+            // Skip an equal key on the prev side (superseded).
+            if let Some(pi) = prev_iter.as_mut() {
+                if matches!(pi.peek(), Some(Ok((_, pe))) if pe.key == k) {
+                    pi.next();
+                }
+            }
+            if e.value.is_some() && !skip(&k) {
+                w.add(&e)?;
+            }
+            // Tombstone: drop (annihilates the prev entry too).
+        } else {
+            let item = prev_iter.as_mut().unwrap().next().unwrap();
+            let (_, e) = item?;
+            if e.value.is_some() && !skip(&e.key) {
+                w.add(&e)?;
+            }
+        }
+    }
+
+    let entries = w.entry_count() as u64;
+    let (bytes, key_offsets) = w.finish()?;
+
+    // (4) Hash index via the configured backend.
+    let cap = HashIndex::capacity_for(key_offsets.len()) as u32;
+    let keys: Vec<&[u8]> = key_offsets.iter().map(|(k, _)| k.as_slice()).collect();
+    let (hashes, buckets) = inp.backend.plan(&keys, cap)?;
+    let index = HashIndex::build_from_planner(&key_offsets, &hashes, &buckets)?;
+    index.save(&index_path(&inp.dir, inp.out_gen))?;
+
+    Ok(GcOutput {
+        gen: inp.out_gen,
+        entries,
+        bytes_written: bytes,
+        last_index: inp.last_index,
+        last_term: inp.last_term,
+        wall_ms: t0.elapsed().as_millis() as u64,
+        index_backend: inp.backend.name(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vlog::VLog;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("nezha-gc-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_epoch(dir: &Path, entries: &[VEntry]) -> PathBuf {
+        let p = dir.join("raft-000000.vlog");
+        let mut v = VLog::open(&p).unwrap();
+        for e in entries {
+            v.append(e).unwrap();
+        }
+        v.sync().unwrap();
+        p
+    }
+
+    fn inputs(dir: &Path, vlog: PathBuf, prev: Option<u64>, gen: u64, last_index: u64) -> GcInputs {
+        GcInputs {
+            frozen_vlog_path: vlog,
+            prev_gen: prev,
+            dir: dir.to_path_buf(),
+            out_gen: gen,
+            last_index,
+            last_term: 1,
+            resume: false,
+            backend: Arc::new(RustBackend),
+        }
+    }
+
+    #[test]
+    fn first_cycle_sorts_and_dedups() {
+        let dir = tmpdir("first");
+        let vlog = write_epoch(
+            &dir,
+            &[
+                VEntry::put(1, 1, "b", "1"),
+                VEntry::put(1, 2, "a", "1"),
+                VEntry::put(1, 3, "b", "2"), // overwrites
+                VEntry::put(1, 4, "c", "1"),
+                VEntry::delete(1, 5, "c"), // tombstone annihilates
+            ],
+        );
+        let out = run_gc(&inputs(&dir, vlog, None, 1, 5)).unwrap();
+        assert_eq!(out.entries, 2);
+        let fs = FinalStorage::open(&dir, 1).unwrap();
+        assert_eq!(fs.log.last_index, 5);
+        assert_eq!(fs.get(b"b").unwrap().unwrap().value, Some(b"2".to_vec()));
+        assert_eq!(fs.get(b"a").unwrap().unwrap().value, Some(b"1".to_vec()));
+        assert!(fs.get(b"c").unwrap().is_none());
+        // Scan is ordered.
+        let scan = fs.scan(b"", b"zzz", 10).unwrap();
+        assert_eq!(scan.len(), 2);
+        assert_eq!(scan[0].key, b"a".to_vec());
+    }
+
+    #[test]
+    fn second_cycle_merges_previous_generation() {
+        let dir = tmpdir("second");
+        let v1 = write_epoch(
+            &dir,
+            &[VEntry::put(1, 1, "a", "old"), VEntry::put(1, 2, "b", "old"), VEntry::put(1, 3, "d", "old")],
+        );
+        run_gc(&inputs(&dir, v1, None, 1, 3)).unwrap();
+        // Second epoch: update b, delete d, add c.
+        let p2 = dir.join("raft-000001.vlog");
+        let mut v = VLog::open(&p2).unwrap();
+        v.append(&VEntry::put(2, 4, "b", "new")).unwrap();
+        v.append(&VEntry::delete(2, 5, "d")).unwrap();
+        v.append(&VEntry::put(2, 6, "c", "new")).unwrap();
+        v.sync().unwrap();
+        let out = run_gc(&inputs(&dir, p2, Some(1), 2, 6)).unwrap();
+        assert_eq!(out.entries, 3); // a, b, c
+        let fs = FinalStorage::open(&dir, 2).unwrap();
+        assert_eq!(fs.get(b"a").unwrap().unwrap().value, Some(b"old".to_vec()));
+        assert_eq!(fs.get(b"b").unwrap().unwrap().value, Some(b"new".to_vec()));
+        assert_eq!(fs.get(b"c").unwrap().unwrap().value, Some(b"new".to_vec()));
+        assert!(fs.get(b"d").unwrap().is_none());
+        assert_eq!(fs.log.last_index, 6);
+    }
+
+    #[test]
+    fn uncommitted_tail_excluded() {
+        let dir = tmpdir("tail");
+        let vlog = write_epoch(
+            &dir,
+            &[VEntry::put(1, 1, "a", "1"), VEntry::put(1, 2, "b", "1"), VEntry::put(1, 3, "x", "uncommitted")],
+        );
+        // last_index = 2: entry 3 must not appear.
+        run_gc(&inputs(&dir, vlog, None, 1, 2)).unwrap();
+        let fs = FinalStorage::open(&dir, 1).unwrap();
+        assert!(fs.get(b"x").unwrap().is_none());
+        assert!(fs.get(b"a").unwrap().is_some());
+    }
+
+    #[test]
+    fn resume_continues_from_interrupt_point() {
+        let dir = tmpdir("resume");
+        let entries: Vec<VEntry> = (0..100u64)
+            .map(|i| VEntry::put(1, i + 1, format!("key{i:04}"), format!("v{i}")))
+            .collect();
+        let vlog = write_epoch(&dir, &entries);
+        // Simulate an interrupted first run: write a partial sorted
+        // file by hand (first 30 keys).
+        {
+            let mut w = SortedVLogWriter::create(&sorted_path(&dir, 1), 1, 100).unwrap();
+            for e in entries.iter().take(30) {
+                w.add(e).unwrap();
+            }
+            w.finish().unwrap();
+        }
+        let mut inp = inputs(&dir, vlog, None, 1, 100);
+        inp.resume = true;
+        let out = run_gc(&inp).unwrap();
+        assert_eq!(out.entries, 100);
+        let fs = FinalStorage::open(&dir, 1).unwrap();
+        for i in (0..100u64).step_by(9) {
+            let k = format!("key{i:04}");
+            assert_eq!(
+                fs.get(k.as_bytes()).unwrap().unwrap().value,
+                Some(format!("v{i}").into_bytes()),
+                "{k}"
+            );
+        }
+        // No duplicates: scan count matches.
+        assert_eq!(fs.scan(b"", b"z", 1000).unwrap().len(), 100);
+    }
+
+    #[test]
+    fn gc_state_flag_roundtrip() {
+        let dir = tmpdir("state");
+        assert_eq!(GcState::load(&dir).unwrap(), None);
+        let st = GcState { running: true, frozen_epoch: 3, out_gen: 2, last_index: 55, last_term: 4 };
+        st.save(&dir).unwrap();
+        assert_eq!(GcState::load(&dir).unwrap(), Some(st));
+        GcState::clear(&dir).unwrap();
+        assert_eq!(GcState::load(&dir).unwrap(), None);
+    }
+
+    #[test]
+    fn latest_gen_discovery() {
+        let dir = tmpdir("gens");
+        assert_eq!(FinalStorage::latest_gen(&dir).unwrap(), None);
+        let v = write_epoch(&dir, &[VEntry::put(1, 1, "a", "1")]);
+        run_gc(&inputs(&dir, v.clone(), None, 1, 1)).unwrap();
+        run_gc(&inputs(&dir, v, Some(1), 2, 1)).unwrap();
+        assert_eq!(FinalStorage::latest_gen(&dir).unwrap(), Some(2));
+        FinalStorage::remove_gen(&dir, 2);
+        assert_eq!(FinalStorage::latest_gen(&dir).unwrap(), Some(1));
+    }
+
+    #[test]
+    fn large_cycle_roundtrips() {
+        let dir = tmpdir("large");
+        let entries: Vec<VEntry> = (0..5000u64)
+            .map(|i| VEntry::put(1, i + 1, format!("user{:08}", i * 7 % 5000), vec![(i % 251) as u8; 64]))
+            .collect();
+        let vlog = write_epoch(&dir, &entries);
+        let out = run_gc(&inputs(&dir, vlog, None, 1, 5000)).unwrap();
+        assert!(out.entries > 0);
+        let fs = FinalStorage::open(&dir, 1).unwrap();
+        let all = fs.scan(b"", b"z", 100_000).unwrap();
+        assert_eq!(all.len() as u64, out.entries);
+        for w in all.windows(2) {
+            assert!(w[0].key < w[1].key);
+        }
+    }
+}

@@ -1,0 +1,367 @@
+//! Experiment harness: spins up clusters, loads data, drives
+//! operation mixes, and prints the paper-style rows the `benches/fig*`
+//! binaries emit.  Workloads are scaled from the paper's testbed
+//! (100 GB loads on a 3-node SSD cluster) to laptop scale; the
+//! *shapes* — who wins and by roughly what factor — are the
+//! reproduction target (DESIGN.md §4).
+
+use crate::coordinator::{Cluster, ClusterConfig};
+use crate::engine::EngineKind;
+use crate::gc::GcConfig;
+use crate::raft::NetConfig;
+use crate::util::Histogram;
+use crate::ycsb::{key_of, Generator, Op, WorkloadKind};
+use anyhow::Result;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Scale factor: 1.0 = default bench scale (NEZHA_BENCH_SCALE env).
+pub fn bench_scale() -> f64 {
+    std::env::var("NEZHA_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        // 0.5 keeps the full 9-figure suite under ~15 min on one core;
+        // the paper-shape checks are stable from ~0.3 upward.
+        .unwrap_or(0.5)
+}
+
+/// One experiment configuration.
+#[derive(Clone, Debug)]
+pub struct Spec {
+    pub kind: EngineKind,
+    pub nodes: usize,
+    pub value_size: usize,
+    /// Bytes of user data to load.
+    pub load_bytes: u64,
+    /// GC threshold as a fraction of loaded bytes (paper: 40 GB of
+    /// 100 GB = 0.4).
+    pub gc_fraction: f64,
+    pub seed: u64,
+}
+
+impl Spec {
+    pub fn new(kind: EngineKind, value_size: usize) -> Self {
+        Self {
+            kind,
+            nodes: 3,
+            value_size,
+            load_bytes: (24 << 20) as u64,
+            gc_fraction: 0.4,
+            seed: 42,
+        }
+    }
+
+    pub fn records(&self) -> u64 {
+        (self.load_bytes / self.value_size as u64).max(16)
+    }
+}
+
+/// Measured row for the tables.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub system: String,
+    /// x-axis label (value size, workload name, cluster size, ...).
+    pub x: String,
+    pub ops: u64,
+    pub wall_s: f64,
+    pub lat: Histogram,
+    /// Payload bytes moved by the measured ops.
+    pub bytes: u64,
+}
+
+impl Measurement {
+    pub fn ops_per_sec(&self) -> f64 {
+        self.ops as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn mib_per_sec(&self) -> f64 {
+        self.bytes as f64 / (1 << 20) as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<11} {:>9} {:>10.0} {:>9.2} {:>9.0} {:>9} {:>9}",
+            self.system,
+            self.x,
+            self.ops_per_sec(),
+            self.mib_per_sec(),
+            self.lat.mean(),
+            self.lat.p50(),
+            self.lat.p99(),
+        )
+    }
+}
+
+pub fn print_header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<11} {:>9} {:>10} {:>9} {:>9} {:>9} {:>9}",
+        "system", "x", "ops/s", "MiB/s", "mean_us", "p50_us", "p99_us"
+    );
+}
+
+/// A running cluster + its scratch directory.
+pub struct Env {
+    pub cluster: Cluster,
+    dir: PathBuf,
+    pub spec: Spec,
+}
+
+impl Env {
+    pub fn start(spec: Spec) -> Result<Self> {
+        let dir = std::env::temp_dir().join(format!(
+            "nezha-bench-{}-{}-{}",
+            spec.kind.name().to_ascii_lowercase().replace('-', ""),
+            spec.value_size,
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = ClusterConfig::new(&dir, spec.kind, spec.nodes);
+        cfg.seed = spec.seed;
+        cfg.net = NetConfig { latency_us: (0, 0), loss: 0.0, seed: spec.seed };
+        // Engine scale knobs proportional to the load.
+        cfg.engine.memtable_bytes = ((spec.load_bytes / 16).clamp(256 << 10, 16 << 20)) as usize;
+        cfg.engine.level_base_bytes = (spec.load_bytes / 2).clamp(2 << 20, 128 << 20);
+        cfg.gc = GcConfig {
+            threshold_bytes: ((spec.load_bytes as f64 * spec.gc_fraction) as u64).max(1 << 20),
+            ..Default::default()
+        };
+        let cluster = Cluster::start(cfg)?;
+        Ok(Self { cluster, dir, spec })
+    }
+
+    /// Load `records()` sequential inserts; returns the put
+    /// measurement (this IS the put experiment).
+    pub fn load(&self, label: &str) -> Result<Measurement> {
+        let records = self.spec.records();
+        let vs = self.spec.value_size;
+        // Batch size: keep batches ~2 MiB so latency samples are
+        // meaningful but consensus rounds amortize.
+        let batch = ((2 << 20) / vs.max(1)).clamp(1, 256);
+        let mut lat = Histogram::new();
+        let mut loaded = 0u64;
+        let t0 = Instant::now();
+        let mut ops_iter = Generator::load_ops(records, vs, self.spec.seed);
+        let mut done = false;
+        while !done {
+            let mut ops = Vec::with_capacity(batch);
+            for _ in 0..batch {
+                match ops_iter.next() {
+                    Some(kv) => ops.push(kv),
+                    None => {
+                        done = true;
+                        break;
+                    }
+                }
+            }
+            if ops.is_empty() {
+                break;
+            }
+            let n = ops.len() as u64;
+            let bt0 = Instant::now();
+            self.cluster.put_batch(ops)?;
+            let per_op = bt0.elapsed().as_micros() as u64 / n.max(1);
+            for _ in 0..n {
+                lat.record(per_op.max(1));
+            }
+            loaded += n;
+        }
+        Ok(Measurement {
+            system: self.spec.kind.name().into(),
+            x: label.into(),
+            ops: loaded,
+            wall_s: t0.elapsed().as_secs_f64(),
+            lat,
+            bytes: loaded * vs as u64,
+        })
+    }
+
+    /// Issue `n` Zipf point queries.
+    pub fn run_gets(&self, n: u64, label: &str) -> Result<Measurement> {
+        let mut g = Generator::new(WorkloadKind::C, self.spec.records(), self.spec.value_size, self.spec.seed + 1);
+        let mut lat = Histogram::new();
+        let mut bytes = 0u64;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            let Op::Read(key) = g.next_op() else { unreachable!() };
+            let ot0 = Instant::now();
+            if let Some(v) = self.cluster.get(&key)? {
+                bytes += v.len() as u64;
+            }
+            lat.record(ot0.elapsed().as_micros().max(1) as u64);
+        }
+        Ok(Measurement {
+            system: self.spec.kind.name().into(),
+            x: label.into(),
+            ops: n,
+            wall_s: t0.elapsed().as_secs_f64(),
+            lat,
+            bytes,
+        })
+    }
+
+    /// Issue `n` range scans of `scan_len` records each.
+    pub fn run_scans(&self, n: u64, scan_len: usize, label: &str) -> Result<Measurement> {
+        let mut g = Generator::new(WorkloadKind::C, self.spec.records(), self.spec.value_size, self.spec.seed + 2);
+        let mut lat = Histogram::new();
+        let mut bytes = 0u64;
+        let mut rows = 0u64;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            let Op::Read(start) = g.next_op() else { unreachable!() };
+            let end = key_of(u64::MAX / 2);
+            let ot0 = Instant::now();
+            let got = self.cluster.scan(&start, &end, scan_len)?;
+            lat.record(ot0.elapsed().as_micros().max(1) as u64);
+            rows += got.len() as u64;
+            bytes += got.iter().map(|(k, v)| (k.len() + v.len()) as u64).sum::<u64>();
+        }
+        Ok(Measurement {
+            system: self.spec.kind.name().into(),
+            x: label.into(),
+            ops: rows.max(n),
+            wall_s: t0.elapsed().as_secs_f64(),
+            lat,
+            bytes,
+        })
+    }
+
+    /// Run a YCSB mix of `n` ops; returns (overall, write-lat, read-lat).
+    pub fn run_ycsb(
+        &self,
+        kind: WorkloadKind,
+        n: u64,
+        scan_len: usize,
+    ) -> Result<(Measurement, Histogram, Histogram)> {
+        let mut g = Generator::new(kind, self.spec.records(), self.spec.value_size, self.spec.seed + 3)
+            .with_scan_len(scan_len);
+        let mut lat = Histogram::new();
+        let mut wlat = Histogram::new();
+        let mut rlat = Histogram::new();
+        let mut bytes = 0u64;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            let op = g.next_op();
+            let ot0 = Instant::now();
+            match op {
+                Op::Read(k) => {
+                    if let Some(v) = self.cluster.get(&k)? {
+                        bytes += v.len() as u64;
+                    }
+                    let us = ot0.elapsed().as_micros().max(1) as u64;
+                    lat.record(us);
+                    rlat.record(us);
+                }
+                Op::Update(k, v) | Op::Insert(k, v) => {
+                    bytes += v.len() as u64;
+                    self.cluster.put_batch(vec![(k, v)])?;
+                    let us = ot0.elapsed().as_micros().max(1) as u64;
+                    lat.record(us);
+                    wlat.record(us);
+                }
+                Op::Rmw(k, v) => {
+                    let _old = self.cluster.get(&k)?;
+                    bytes += v.len() as u64;
+                    self.cluster.put_batch(vec![(k, v)])?;
+                    let us = ot0.elapsed().as_micros().max(1) as u64;
+                    lat.record(us);
+                    wlat.record(us);
+                }
+                Op::Scan(start, len) => {
+                    let got = self.cluster.scan(&start, &key_of(u64::MAX / 2), len)?;
+                    bytes += got.iter().map(|(k, v)| (k.len() + v.len()) as u64).sum::<u64>();
+                    let us = ot0.elapsed().as_micros().max(1) as u64;
+                    lat.record(us);
+                    rlat.record(us);
+                }
+            }
+        }
+        let m = Measurement {
+            system: self.spec.kind.name().into(),
+            x: kind.name().into(),
+            ops: n,
+            wall_s: t0.elapsed().as_secs_f64(),
+            lat,
+            bytes,
+        };
+        Ok((m, wlat, rlat))
+    }
+
+    /// Let any pending GC finish on every node (so read benches
+    /// measure the Post-GC layout, like the paper's "loaded 100 GB
+    /// then query" setup, without follower GC threads competing for
+    /// this box's single core).
+    pub fn settle(&self) -> Result<()> {
+        self.cluster
+            .wait_converged(std::time::Duration::from_secs(60))?;
+        self.cluster.drain_gc_all()
+    }
+
+    pub fn destroy(self) -> Result<()> {
+        self.cluster.shutdown()?;
+        let _ = std::fs::remove_dir_all(&self.dir);
+        Ok(())
+    }
+}
+
+/// Default engine sets for the figures.
+pub fn all_engines() -> Vec<EngineKind> {
+    EngineKind::ALL.to_vec()
+}
+
+/// Honor `NEZHA_BENCH_ENGINES=Nezha,Original,...` to subset.
+pub fn engines_from_env() -> Vec<EngineKind> {
+    match std::env::var("NEZHA_BENCH_ENGINES") {
+        Ok(s) => s
+            .split(',')
+            .filter_map(|p| EngineKind::parse(p.trim()))
+            .collect(),
+        Err(_) => all_engines(),
+    }
+}
+
+/// Value-size sweep (paper: 1 KB → 256 KB), scaled by
+/// `NEZHA_BENCH_SCALE`.
+pub fn value_sizes() -> Vec<usize> {
+    vec![1 << 10, 4 << 10, 16 << 10, 64 << 10, 256 << 10]
+}
+
+/// Pretty-print a ratio summary (e.g. the paper's "+460.2%").
+pub fn improvement_pct(nezha: f64, baseline: f64) -> f64 {
+    (nezha / baseline.max(1e-9) - 1.0) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_records_scale_with_value_size() {
+        let mut s = Spec::new(EngineKind::Nezha, 1 << 10);
+        s.load_bytes = 1 << 20;
+        assert_eq!(s.records(), 1024);
+        s.value_size = 256 << 10;
+        assert_eq!(s.records(), 16); // floor kicks in
+    }
+
+    #[test]
+    fn improvement_math() {
+        assert!((improvement_pct(5.6, 1.0) - 460.0).abs() < 1.0);
+        assert!((improvement_pct(1.125, 1.0) - 12.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn tiny_end_to_end_put_get_scan() {
+        // Smoke: the full harness path on a minuscule load.
+        let mut spec = Spec::new(EngineKind::Nezha, 1 << 10);
+        spec.load_bytes = 64 << 10;
+        let env = Env::start(spec).unwrap();
+        let put = env.load("1KB").unwrap();
+        assert_eq!(put.ops, 64);
+        let get = env.run_gets(20, "1KB").unwrap();
+        assert!(get.bytes > 0, "gets found data");
+        let scan = env.run_scans(5, 8, "1KB").unwrap();
+        assert!(scan.ops >= 5);
+        env.destroy().unwrap();
+    }
+}

@@ -1,0 +1,43 @@
+//! # Nezha — a key-value separated distributed store with optimized
+//! # Raft integration (paper reproduction)
+//!
+//! This crate reproduces the system from *"Nezha: A Key-Value Separated
+//! Distributed Store with Optimized Raft Integration"* (CS.DC 2026):
+//!
+//! * [`raft`] — a from-scratch Raft implementation whose log entries can
+//!   carry full key-value payloads (the **KVS-Raft** substrate).
+//! * [`lsm`] — a from-scratch LSM-tree storage engine (the RocksDB
+//!   substitute): memtable, WAL, SSTables, leveled compaction.
+//! * [`vlog`] — the ValueLog: append-only entry log addressed by offset,
+//!   the sorted ValueLog produced by GC, and the file-backed hash index.
+//! * [`gc`] — the Raft-aware garbage-collection framework with the
+//!   Active / New / Final-Compacted storage modules and the three-phase
+//!   (Pre/During/Post-GC) request processing of paper §III-C/D.
+//! * [`engine`] — the seven evaluation configurations (Original, PASV,
+//!   TiKV, Dwisckey, LSM-Raft, Nezha-NoGC, Nezha) behind one trait.
+//! * [`coordinator`] — multi-node cluster runtime, leader routing,
+//!   group-commit batching, metrics.
+//! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas
+//!   index-build module (`artifacts/index_build.hlo.txt`).
+//! * [`ycsb`] — YCSB workload generator (Load, A–F).
+//! * [`harness`] — the experiment harness regenerating every paper
+//!   figure (see `benches/fig*.rs`).
+//!
+//! See `DESIGN.md` for the paper→repo mapping and `EXPERIMENTS.md` for
+//! measured-vs-paper results.
+
+pub mod util;
+pub mod lsm;
+pub mod vlog;
+pub mod raft;
+pub mod engine;
+pub mod gc;
+pub mod coordinator;
+pub mod runtime;
+pub mod ycsb;
+pub mod harness;
+
+pub use engine::{EngineKind, KvEngine};
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

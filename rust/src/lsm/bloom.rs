@@ -1,0 +1,155 @@
+//! Bloom filter for SSTables (and for the Final Compacted Storage's
+//! negative-lookup fast path).  Double hashing `h1 + i*h2` — the same
+//! probe construction the L1 Pallas kernel emits, so the GC path can
+//! build filter bits either in Rust or from the XLA artifact.
+
+use crate::util::{Decoder, Encoder};
+use crate::vlog::hash::hash_pair;
+use anyhow::Result;
+
+/// Probes per key — mirrored in `python/compile/model.py::BLOOM_K`.
+pub const BLOOM_K: usize = 4;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bloom {
+    bits: Vec<u64>,
+    mask: u32, // number of bits - 1 (power of two)
+}
+
+impl Bloom {
+    /// Size the filter for `n` keys at ~10 bits/key, rounded up to a
+    /// power of two (>= 64 bits).
+    pub fn with_capacity(n: usize) -> Self {
+        let want = (n.max(8) * 10).next_power_of_two().max(64);
+        Self {
+            bits: vec![0u64; want / 64],
+            mask: (want - 1) as u32,
+        }
+    }
+
+    #[inline]
+    fn positions(&self, key: &[u8]) -> [u32; BLOOM_K] {
+        let (h1, h2) = hash_pair(key);
+        let mut out = [0u32; BLOOM_K];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = h1.wrapping_add((i as u32).wrapping_mul(h2)) & self.mask;
+        }
+        out
+    }
+
+    pub fn insert(&mut self, key: &[u8]) {
+        for pos in self.positions(key) {
+            self.bits[(pos / 64) as usize] |= 1u64 << (pos % 64);
+        }
+    }
+
+    /// Insert from precomputed bit positions (the XLA `index_build`
+    /// output path).  Positions must already be masked to this filter's
+    /// size — callers pass the same mask to the planner.
+    pub fn insert_positions(&mut self, pos: &[u32]) {
+        for &p in pos {
+            let p = p & self.mask;
+            self.bits[(p / 64) as usize] |= 1u64 << (p % 64);
+        }
+    }
+
+    pub fn may_contain(&self, key: &[u8]) -> bool {
+        self.positions(key)
+            .iter()
+            .all(|&pos| self.bits[(pos / 64) as usize] & (1u64 << (pos % 64)) != 0)
+    }
+
+    pub fn mask(&self) -> u32 {
+        self.mask
+    }
+
+    pub fn encode(&self, e: &mut Encoder) {
+        e.u32(self.mask);
+        e.varint(self.bits.len() as u64);
+        for w in &self.bits {
+            e.u64(*w);
+        }
+    }
+
+    pub fn decode(d: &mut Decoder) -> Result<Self> {
+        let mask = d.u32()?;
+        let n = d.varint()? as usize;
+        anyhow::ensure!(
+            n as u64 * 64 == mask as u64 + 1,
+            "bloom: inconsistent size"
+        );
+        let mut bits = Vec::with_capacity(n);
+        for _ in 0..n {
+            bits.push(d.u64()?);
+        }
+        Ok(Self { bits, mask })
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.bits.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn no_false_negatives() {
+        let mut b = Bloom::with_capacity(1000);
+        for i in 0..1000u32 {
+            b.insert(format!("key{i}").as_bytes());
+        }
+        for i in 0..1000u32 {
+            assert!(b.may_contain(format!("key{i}").as_bytes()));
+        }
+    }
+
+    #[test]
+    fn false_positive_rate_reasonable() {
+        let mut b = Bloom::with_capacity(10_000);
+        for i in 0..10_000u32 {
+            b.insert(format!("key{i}").as_bytes());
+        }
+        let fp = (0..10_000u32)
+            .filter(|i| b.may_contain(format!("absent{i}").as_bytes()))
+            .count();
+        // ~10 bits/key with k=4 gives ~2%; allow slack.
+        assert!(fp < 600, "fp={fp}");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut b = Bloom::with_capacity(100);
+        for i in 0..100u32 {
+            b.insert(&i.to_le_bytes());
+        }
+        let mut e = Encoder::new();
+        b.encode(&mut e);
+        let mut d = Decoder::new(e.as_slice());
+        let b2 = Bloom::decode(&mut d).unwrap();
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn insert_positions_matches_insert() {
+        // The precomputed-positions path (XLA planner) must set the
+        // exact bits the direct path sets.
+        prop::check("bloom-positions", 200, |g| {
+            let key = g.bytes(0..32);
+            let mut a = Bloom::with_capacity(512);
+            let mut b = Bloom::with_capacity(512);
+            a.insert(&key);
+            let (h1, h2) = hash_pair(&key);
+            let pos: Vec<u32> = (0..BLOOM_K as u32)
+                .map(|i| h1.wrapping_add(i.wrapping_mul(h2)) & b.mask())
+                .collect();
+            b.insert_positions(&pos);
+            if a != b {
+                return Err(format!("mismatch for key {key:?}"));
+            }
+            Ok(())
+        });
+    }
+}

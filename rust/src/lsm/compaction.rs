@@ -1,0 +1,220 @@
+//! Leveled compaction: picker + merge.
+//!
+//! Triggers (checked after every flush):
+//! * L0: file-count trigger (`l0_compaction_trigger`) — merge all L0
+//!   files plus overlapping L1 files into L1.
+//! * L1..Ln: size trigger (`level_base_bytes * 10^(i-1)`) — pick the
+//!   oldest-ranged file and merge it with its overlap in the next
+//!   level.
+//!
+//! The merge keeps newest-wins semantics (L(i) shadows L(i+1); within
+//! L0, newer files shadow older).  Tombstones are dropped only when the
+//! output level is the deepest populated level, otherwise preserved.
+
+use super::sstable::{Table, TableWriter};
+use super::version::{table_path, FileMeta, Version, MAX_LEVELS};
+use super::Value;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// A picked compaction job.
+#[derive(Debug)]
+pub struct Job {
+    pub level: usize,
+    /// File ids consumed from `level` and `level + 1`.
+    pub inputs: Vec<u64>,
+}
+
+/// Decide whether any level needs compaction.
+pub fn pick(version: &Version, l0_trigger: usize, level_base_bytes: u64) -> Option<Job> {
+    if version.levels[0].len() >= l0_trigger {
+        let mut inputs: Vec<u64> = version.levels[0].iter().map(|f| f.id).collect();
+        // All overlapping L1 files join the merge.
+        let (lo, hi) = key_span(&version.levels[0]);
+        for f in &version.levels[1] {
+            if overlaps(f, &lo, &hi) {
+                inputs.push(f.id);
+            }
+        }
+        return Some(Job { level: 0, inputs });
+    }
+    for level in 1..MAX_LEVELS - 1 {
+        let limit = level_base_bytes.saturating_mul(10u64.pow(level as u32 - 1));
+        if version.total_bytes(level) > limit && !version.levels[level].is_empty() {
+            let victim = &version.levels[level][0];
+            let mut inputs = vec![victim.id];
+            for f in &version.levels[level + 1] {
+                if overlaps(f, &victim.first_key, &victim.last_key) {
+                    inputs.push(f.id);
+                }
+            }
+            return Some(Job { level, inputs });
+        }
+    }
+    None
+}
+
+fn key_span(files: &[FileMeta]) -> (Vec<u8>, Vec<u8>) {
+    let mut lo = files[0].first_key.clone();
+    let mut hi = files[0].last_key.clone();
+    for f in files {
+        if f.first_key < lo {
+            lo = f.first_key.clone();
+        }
+        if f.last_key > hi {
+            hi = f.last_key.clone();
+        }
+    }
+    (lo, hi)
+}
+
+fn overlaps(f: &FileMeta, lo: &[u8], hi: &[u8]) -> bool {
+    f.first_key.as_slice() <= hi && lo <= f.last_key.as_slice()
+}
+
+/// Execute a compaction job: merge inputs, write output tables to
+/// `dir`, update `version`, and return (new metas, bytes written).
+/// `tables` maps file id -> open Table. Output files are split at
+/// `output_split_bytes`.
+pub fn run(
+    dir: &Path,
+    version: &mut Version,
+    tables: &HashMap<u64, Arc<Table>>,
+    job: &Job,
+    output_split_bytes: u64,
+) -> Result<(Vec<FileMeta>, u64)> {
+    // Precedence order: within L0 the Version keeps newest first; files
+    // at `level` shadow files at `level + 1`.  Build oldest→newest and
+    // let BTreeMap overwrite.
+    let mut ordered: Vec<u64> = Vec::new();
+    // level+1 files first (oldest precedence)…
+    for f in &version.levels[job.level + 1] {
+        if job.inputs.contains(&f.id) {
+            ordered.push(f.id);
+        }
+    }
+    // …then `level` files, oldest L0 last-in-version-vec first.
+    for f in version.levels[job.level].iter().rev() {
+        if job.inputs.contains(&f.id) {
+            ordered.push(f.id);
+        }
+    }
+
+    let mut merged: BTreeMap<Vec<u8>, Value> = BTreeMap::new();
+    for id in &ordered {
+        let t = tables
+            .get(id)
+            .ok_or_else(|| anyhow::anyhow!("compaction: table {id} not open"))?;
+        for (k, v) in t.iter() {
+            merged.insert(k, v);
+        }
+    }
+
+    // Tombstone elision: if no deeper level holds data, deletes can die.
+    let deepest_populated = (0..MAX_LEVELS)
+        .rev()
+        .find(|&l| !version.levels[l].is_empty())
+        .unwrap_or(0);
+    let drop_tombstones = job.level + 1 >= deepest_populated;
+
+    let mut metas = Vec::new();
+    let mut bytes_written = 0u64;
+    let mut writer: Option<TableWriter> = None;
+    let mut writer_id = 0u64;
+    for (k, v) in &merged {
+        if drop_tombstones && matches!(v, Value::Delete) {
+            continue;
+        }
+        if writer.is_none() {
+            writer_id = version.alloc_file_id();
+            writer = Some(TableWriter::create(&table_path(dir, writer_id))?);
+        }
+        let w = writer.as_mut().unwrap();
+        w.add(k, v)?;
+        if w.approx_bytes() >= output_split_bytes {
+            let (size, entries) = finish(writer.take().unwrap())?;
+            bytes_written += size;
+            metas.push(open_meta(dir, writer_id, size, entries)?);
+        }
+    }
+    if let Some(w) = writer {
+        if w.entry_count() > 0 {
+            let id = writer_id;
+            let (size, entries) = finish(w)?;
+            bytes_written += size;
+            metas.push(open_meta(dir, id, size, entries)?);
+        } else {
+            // Empty output (everything elided): remove the placeholder.
+            let _ = std::fs::remove_file(table_path(dir, writer_id));
+        }
+    }
+
+    version.apply_compaction(job.level, &job.inputs, metas.clone());
+    Ok((metas, bytes_written))
+}
+
+fn finish(w: TableWriter) -> Result<(u64, u64)> {
+    w.finish()
+}
+
+fn open_meta(dir: &Path, id: u64, size: u64, entries: u64) -> Result<FileMeta> {
+    let t = Table::open(id, &table_path(dir, id))?;
+    Ok(FileMeta {
+        id,
+        size,
+        entries,
+        first_key: t.first_key().unwrap_or_default().to_vec(),
+        last_key: t.last_key().unwrap_or_default().to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(id: u64, first: &str, last: &str, size: u64) -> FileMeta {
+        FileMeta {
+            id,
+            size,
+            entries: 1,
+            first_key: first.as_bytes().to_vec(),
+            last_key: last.as_bytes().to_vec(),
+        }
+    }
+
+    #[test]
+    fn no_compaction_when_below_triggers() {
+        let mut v = Version::new();
+        v.add_l0(meta(1, "a", "b", 100));
+        assert!(pick(&v, 4, 1 << 20).is_none());
+    }
+
+    #[test]
+    fn l0_trigger_includes_overlapping_l1() {
+        let mut v = Version::new();
+        for i in 1..=4 {
+            v.add_l0(meta(i, "c", "m", 100));
+        }
+        v.levels[1].push(meta(10, "a", "d", 100)); // overlaps
+        v.levels[1].push(meta(11, "x", "z", 100)); // no overlap
+        let job = pick(&v, 4, 1 << 20).unwrap();
+        assert_eq!(job.level, 0);
+        assert!(job.inputs.contains(&10));
+        assert!(!job.inputs.contains(&11));
+        assert_eq!(job.inputs.len(), 5);
+    }
+
+    #[test]
+    fn size_trigger_fires_on_l1() {
+        let mut v = Version::new();
+        v.levels[1].push(meta(1, "a", "m", 2 << 20));
+        v.levels[2].push(meta(2, "a", "c", 100));
+        let job = pick(&v, 100, 1 << 20).unwrap();
+        assert_eq!(job.level, 1);
+        assert!(job.inputs.contains(&1));
+        assert!(job.inputs.contains(&2));
+    }
+}

@@ -1,0 +1,678 @@
+//! The public LSM database handle.
+//!
+//! Single-writer (matches Raft apply order), multi-reader-safe for the
+//! read paths used by the engines.  All the persistence knobs the paper
+//! varies across baselines live in [`Options`]:
+//!
+//! * `wal_enabled=false` → PASV-style passive persistence (no engine
+//!   WAL; durability comes from the consensus log).
+//! * `sync` → whether appends `fsync` (the paper's testbed batches, so
+//!   the default is OS-buffered with explicit `sync()` points).
+//! * `value_mode` is implicit: Nezha engines simply store 13-byte
+//!   offsets as values, Original stores full values — the Db does not
+//!   care.
+//!
+//! [`IoStats`] counts every byte the engine writes (WAL, flush,
+//! compaction) so the benches can report write amplification directly.
+
+use super::compaction;
+use super::memtable::MemTable;
+use super::sstable::{Table, TableWriter};
+use super::version::{table_path, FileMeta, Version};
+use super::wal::Wal;
+use super::Value;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Buffered writes; caller syncs at commit points.
+    OsBuffered,
+    /// fsync on every WAL batch (durable per write).
+    EveryBatch,
+}
+
+#[derive(Clone, Debug)]
+pub struct Options {
+    pub dir: PathBuf,
+    pub wal_enabled: bool,
+    pub sync: SyncMode,
+    /// Memtable flush trigger.
+    pub memtable_bytes: usize,
+    /// L0 file-count compaction trigger.
+    pub l0_compaction_trigger: usize,
+    /// L1 size budget; each deeper level gets 10x.
+    pub level_base_bytes: u64,
+    /// Compaction output file split size.
+    pub output_split_bytes: u64,
+    /// Block cache capacity (blocks).
+    pub block_cache_blocks: usize,
+}
+
+impl Options {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            wal_enabled: true,
+            sync: SyncMode::OsBuffered,
+            memtable_bytes: 4 << 20,
+            l0_compaction_trigger: 4,
+            level_base_bytes: 32 << 20,
+            output_split_bytes: 8 << 20,
+            block_cache_blocks: 1024,
+        }
+    }
+}
+
+/// Byte/op counters for write-amplification accounting (shared with
+/// the bench harness via `Arc`).
+#[derive(Default, Debug)]
+pub struct IoStats {
+    pub wal_bytes: AtomicU64,
+    pub flush_bytes: AtomicU64,
+    pub compact_bytes: AtomicU64,
+    pub sst_block_reads: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub bloom_negative: AtomicU64,
+    pub gets: AtomicU64,
+    pub puts: AtomicU64,
+}
+
+impl IoStats {
+    pub fn total_write_bytes(&self) -> u64 {
+        self.wal_bytes.load(Ordering::Relaxed)
+            + self.flush_bytes.load(Ordering::Relaxed)
+            + self.compact_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> IoStatsSnapshot {
+        IoStatsSnapshot {
+            wal_bytes: self.wal_bytes.load(Ordering::Relaxed),
+            flush_bytes: self.flush_bytes.load(Ordering::Relaxed),
+            compact_bytes: self.compact_bytes.load(Ordering::Relaxed),
+            sst_block_reads: self.sst_block_reads.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            bloom_negative: self.bloom_negative.load(Ordering::Relaxed),
+            gets: self.gets.load(Ordering::Relaxed),
+            puts: self.puts.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IoStatsSnapshot {
+    pub wal_bytes: u64,
+    pub flush_bytes: u64,
+    pub compact_bytes: u64,
+    pub sst_block_reads: u64,
+    pub cache_hits: u64,
+    pub bloom_negative: u64,
+    pub gets: u64,
+    pub puts: u64,
+}
+
+impl IoStatsSnapshot {
+    pub fn total_write_bytes(&self) -> u64 {
+        self.wal_bytes + self.flush_bytes + self.compact_bytes
+    }
+}
+
+/// FIFO-with-reinsertion block cache (approximate LRU; DESIGN.md §Perf
+/// discusses why this is sufficient at bench scale).
+pub struct BlockCache {
+    inner: Mutex<CacheInner>,
+    capacity: usize,
+    /// Hit counter (mirrored into [`IoStats::cache_hits`] by the Db).
+    pub hits: AtomicU64,
+}
+
+struct CacheInner {
+    map: HashMap<(u64, u64), Arc<Vec<u8>>>,
+    queue: VecDeque<(u64, u64)>,
+}
+
+impl BlockCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(CacheInner { map: HashMap::new(), queue: VecDeque::new() }),
+            capacity: capacity.max(8),
+            hits: AtomicU64::new(0),
+        }
+    }
+
+    pub fn get_or_load(
+        &self,
+        file: u64,
+        block: u64,
+        load: impl FnOnce() -> Result<Arc<Vec<u8>>>,
+    ) -> Result<Arc<Vec<u8>>> {
+        {
+            let inner = self.inner.lock().unwrap();
+            if let Some(b) = inner.map.get(&(file, block)) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Arc::clone(b));
+            }
+        }
+        let data = load()?;
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.len() >= self.capacity {
+            while let Some(victim) = inner.queue.pop_front() {
+                if inner.map.remove(&victim).is_some() {
+                    break;
+                }
+            }
+        }
+        inner.map.insert((file, block), Arc::clone(&data));
+        inner.queue.push_back((file, block));
+        Ok(data)
+    }
+
+    pub fn contains(&self, file: u64, block: u64) -> bool {
+        self.inner.lock().unwrap().map.contains_key(&(file, block))
+    }
+
+    /// Drop every cached block for a dropped file.
+    pub fn evict_file(&self, file: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.retain(|(f, _), _| *f != file);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+pub struct Db {
+    opts: Options,
+    mem: MemTable,
+    wal: Option<Wal>,
+    version: Version,
+    tables: HashMap<u64, Arc<Table>>,
+    cache: Arc<BlockCache>,
+    stats: Arc<IoStats>,
+}
+
+impl Db {
+    /// Open (or create) a database at `opts.dir`, replaying any WAL.
+    pub fn open(opts: Options) -> Result<Self> {
+        std::fs::create_dir_all(&opts.dir)
+            .with_context(|| format!("db dir {:?}", opts.dir))?;
+        let version = Version::load(&opts.dir)?.unwrap_or_else(Version::new);
+        let mut tables = HashMap::new();
+        for f in version.live_files() {
+            let t = Table::open(f.id, &table_path(&opts.dir, f.id))?;
+            tables.insert(f.id, Arc::new(t));
+        }
+        let mut mem = MemTable::new();
+        let wal_path = opts.dir.join("wal.log");
+        if opts.wal_enabled {
+            Wal::replay(&wal_path, |k, v| mem.insert(k, v))?;
+        }
+        let wal = if opts.wal_enabled {
+            Some(Wal::create(&wal_path)?)
+        } else {
+            None
+        };
+        let cache = Arc::new(BlockCache::new(opts.block_cache_blocks));
+        Ok(Self {
+            opts,
+            mem,
+            wal,
+            version,
+            tables,
+            cache,
+            stats: Arc::new(IoStats::default()),
+        })
+    }
+
+    pub fn stats(&self) -> Arc<IoStats> {
+        Arc::clone(&self.stats)
+    }
+
+    pub fn options(&self) -> &Options {
+        &self.opts
+    }
+
+    pub fn put(&mut self, key: &[u8], value: &[u8]) -> Result<()> {
+        self.write(key, Value::Put(value.to_vec()))
+    }
+
+    pub fn delete(&mut self, key: &[u8]) -> Result<()> {
+        self.write(key, Value::Delete)
+    }
+
+    fn write(&mut self, key: &[u8], value: Value) -> Result<()> {
+        self.stats.puts.fetch_add(1, Ordering::Relaxed);
+        if let Some(wal) = &mut self.wal {
+            let n = wal.append_batch(&[(key, &value)])?;
+            self.stats.wal_bytes.fetch_add(n, Ordering::Relaxed);
+            if self.opts.sync == SyncMode::EveryBatch {
+                wal.sync()?;
+            }
+        }
+        self.mem.insert(key, value);
+        if self.mem.approx_bytes() >= self.opts.memtable_bytes {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Batched write: one WAL frame for the whole batch.
+    pub fn write_batch(&mut self, ops: &[(&[u8], Value)]) -> Result<()> {
+        self.stats.puts.fetch_add(ops.len() as u64, Ordering::Relaxed);
+        if let Some(wal) = &mut self.wal {
+            let refs: Vec<(&[u8], &Value)> = ops.iter().map(|(k, v)| (*k, v)).collect();
+            let n = wal.append_batch(&refs)?;
+            self.stats.wal_bytes.fetch_add(n, Ordering::Relaxed);
+            if self.opts.sync == SyncMode::EveryBatch {
+                wal.sync()?;
+            }
+        }
+        for (k, v) in ops {
+            self.mem.insert(k, v.clone());
+        }
+        if self.mem.approx_bytes() >= self.opts.memtable_bytes {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Force WAL to durable media (group-commit point).
+    pub fn sync_wal(&mut self) -> Result<()> {
+        if let Some(wal) = &mut self.wal {
+            wal.sync()?;
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        self.stats.gets.fetch_add(1, Ordering::Relaxed);
+        if let Some(v) = self.mem.get(key) {
+            return Ok(v.as_put().map(|s| s.to_vec()));
+        }
+        // L0 newest-first.
+        for f in &self.version.levels[0] {
+            if let Some(v) = self.table_get(f.id, key)? {
+                return Ok(v.as_put().map(|s| s.to_vec()));
+            }
+        }
+        // Deeper levels: at most one file can contain the key.
+        for level in 1..self.version.levels.len() {
+            let files = &self.version.levels[level];
+            let i = files.partition_point(|f| f.last_key.as_slice() < key);
+            if i < files.len() && files[i].first_key.as_slice() <= key {
+                if let Some(v) = self.table_get(files[i].id, key)? {
+                    return Ok(v.as_put().map(|s| s.to_vec()));
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    fn table_get(&self, id: u64, key: &[u8]) -> Result<Option<Value>> {
+        let t = &self.tables[&id];
+        if !t.may_contain(key) {
+            self.stats.bloom_negative.fetch_add(1, Ordering::Relaxed);
+            return Ok(None);
+        }
+        self.stats.sst_block_reads.fetch_add(1, Ordering::Relaxed);
+        let r = t.get(key, Some(&self.cache));
+        self.stats
+            .cache_hits
+            .store(self.cache.hits.load(Ordering::Relaxed), Ordering::Relaxed);
+        r
+    }
+
+    /// Ordered scan of `[start, end)`, up to `limit` live entries.
+    pub fn scan(&self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        // Merge oldest→newest so later inserts win, then strip
+        // tombstones.
+        let mut merged: BTreeMap<Vec<u8>, Value> = BTreeMap::new();
+        for level in (1..self.version.levels.len()).rev() {
+            for f in &self.version.levels[level] {
+                if f.first_key.as_slice() < end && start <= f.last_key.as_slice() {
+                    for (k, v) in self.tables[&f.id].range(start, end)? {
+                        merged.insert(k, v);
+                    }
+                }
+            }
+        }
+        for f in self.version.levels[0].iter().rev() {
+            if f.first_key.as_slice() < end && start <= f.last_key.as_slice() {
+                for (k, v) in self.tables[&f.id].range(start, end)? {
+                    merged.insert(k, v);
+                }
+            }
+        }
+        for (k, v) in self.mem.range(start, end) {
+            merged.insert(k.to_vec(), v.clone());
+        }
+        Ok(merged
+            .into_iter()
+            .filter_map(|(k, v)| match v {
+                Value::Put(val) => Some((k, val)),
+                Value::Delete => None,
+            })
+            .take(limit)
+            .collect())
+    }
+
+    /// Flush the memtable to a new L0 SSTable, then run any triggered
+    /// compactions to completion.
+    pub fn flush(&mut self) -> Result<()> {
+        if self.mem.is_empty() {
+            return Ok(());
+        }
+        let id = self.version.alloc_file_id();
+        let path = table_path(&self.opts.dir, id);
+        let mut w = TableWriter::create(&path)?;
+        for (k, v) in self.mem.iter() {
+            w.add(k, v)?;
+        }
+        let (size, entries) = w.finish()?;
+        self.stats.flush_bytes.fetch_add(size, Ordering::Relaxed);
+        let t = Table::open(id, &path)?;
+        self.version.add_l0(FileMeta {
+            id,
+            size,
+            entries,
+            first_key: t.first_key().unwrap_or_default().to_vec(),
+            last_key: t.last_key().unwrap_or_default().to_vec(),
+        });
+        self.tables.insert(id, Arc::new(t));
+        self.version.save(&self.opts.dir)?;
+        self.mem.clear();
+        // WAL content is now durable in the SSTable: start a fresh log.
+        if self.opts.wal_enabled {
+            let wal_path = self.opts.dir.join("wal.log");
+            self.wal = None;
+            Wal::remove(&wal_path)?;
+            self.wal = Some(Wal::create(&wal_path)?);
+        }
+        self.maybe_compact()?;
+        Ok(())
+    }
+
+    fn maybe_compact(&mut self) -> Result<()> {
+        while let Some(job) = compaction::pick(
+            &self.version,
+            self.opts.l0_compaction_trigger,
+            self.opts.level_base_bytes,
+        ) {
+            let (metas, bytes) = compaction::run(
+                &self.opts.dir,
+                &mut self.version,
+                &self.tables,
+                &job,
+                self.opts.output_split_bytes,
+            )?;
+            self.stats.compact_bytes.fetch_add(bytes, Ordering::Relaxed);
+            for m in &metas {
+                let t = Table::open(m.id, &table_path(&self.opts.dir, m.id))?;
+                self.tables.insert(m.id, Arc::new(t));
+            }
+            for id in &job.inputs {
+                self.tables.remove(id);
+                self.cache.evict_file(*id);
+                let _ = std::fs::remove_file(table_path(&self.opts.dir, *id));
+            }
+            self.version.save(&self.opts.dir)?;
+        }
+        Ok(())
+    }
+
+    pub fn memtable_bytes(&self) -> usize {
+        self.mem.approx_bytes()
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.version.file_count()
+    }
+
+    pub fn level_sizes(&self) -> Vec<u64> {
+        (0..self.version.levels.len())
+            .map(|l| self.version.total_bytes(l))
+            .collect()
+    }
+
+    /// On-disk footprint of live SSTables (used by recovery + GC sizing
+    /// experiments).
+    pub fn table_bytes(&self) -> u64 {
+        self.version.live_files().map(|f| f.size).sum()
+    }
+
+    /// Bulk-ingest a sorted run directly as an SSTable, bypassing WAL +
+    /// memtable.  Models LSM-Raft's follower-side SSTable shipping.
+    pub fn ingest_sorted(&mut self, entries: &[(Vec<u8>, Vec<u8>)]) -> Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        let id = self.version.alloc_file_id();
+        let path = table_path(&self.opts.dir, id);
+        let mut w = TableWriter::create(&path)?;
+        for (k, v) in entries {
+            w.add(k, &Value::Put(v.clone()))?;
+        }
+        let (size, n) = w.finish()?;
+        self.stats.flush_bytes.fetch_add(size, Ordering::Relaxed);
+        let t = Table::open(id, &path)?;
+        self.version.add_l0(FileMeta {
+            id,
+            size,
+            entries: n,
+            first_key: t.first_key().unwrap_or_default().to_vec(),
+            last_key: t.last_key().unwrap_or_default().to_vec(),
+        });
+        self.tables.insert(id, Arc::new(t));
+        self.version.save(&self.opts.dir)?;
+        self.maybe_compact()
+    }
+
+    /// Destroy all files (test/bench cleanup).
+    pub fn destroy(dir: &std::path::Path) -> Result<()> {
+        match std::fs::remove_dir_all(dir) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpopts(name: &str) -> Options {
+        let dir = std::env::temp_dir().join(format!("nezha-db-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut o = Options::new(dir);
+        o.memtable_bytes = 64 << 10;
+        o.level_base_bytes = 256 << 10;
+        o.output_split_bytes = 64 << 10;
+        o
+    }
+
+    #[test]
+    fn put_get_roundtrip_through_flushes() {
+        let mut db = Db::open(tmpopts("rt")).unwrap();
+        for i in 0..2000u32 {
+            let k = format!("key{i:06}");
+            db.put(k.as_bytes(), format!("val{i}").as_bytes()).unwrap();
+        }
+        assert!(db.file_count() > 0, "expected flushes");
+        for i in (0..2000).step_by(37) {
+            let k = format!("key{i:06}");
+            assert_eq!(db.get(k.as_bytes()).unwrap(), Some(format!("val{i}").into_bytes()), "{k}");
+        }
+        assert_eq!(db.get(b"missing").unwrap(), None);
+    }
+
+    #[test]
+    fn overwrites_visible_across_levels() {
+        let mut db = Db::open(tmpopts("ow")).unwrap();
+        for round in 0..5u32 {
+            for i in 0..500u32 {
+                let k = format!("key{i:04}");
+                db.put(k.as_bytes(), format!("r{round}").as_bytes()).unwrap();
+            }
+            db.flush().unwrap();
+        }
+        for i in 0..500u32 {
+            let k = format!("key{i:04}");
+            assert_eq!(db.get(k.as_bytes()).unwrap(), Some(b"r4".to_vec()));
+        }
+    }
+
+    #[test]
+    fn deletes_mask_older_values() {
+        let mut db = Db::open(tmpopts("del")).unwrap();
+        db.put(b"a", b"1").unwrap();
+        db.flush().unwrap();
+        db.delete(b"a").unwrap();
+        assert_eq!(db.get(b"a").unwrap(), None);
+        db.flush().unwrap();
+        assert_eq!(db.get(b"a").unwrap(), None);
+        let scan = db.scan(b"", b"zzz", 100).unwrap();
+        assert!(scan.is_empty());
+    }
+
+    #[test]
+    fn wal_replay_recovers_unflushed_writes() {
+        let opts = tmpopts("walrec");
+        {
+            let mut db = Db::open(opts.clone()).unwrap();
+            db.put(b"k1", b"v1").unwrap();
+            db.put(b"k2", b"v2").unwrap();
+            db.sync_wal().unwrap();
+            // drop without flush = crash
+        }
+        let db = Db::open(opts).unwrap();
+        assert_eq!(db.get(b"k1").unwrap(), Some(b"v1".to_vec()));
+        assert_eq!(db.get(b"k2").unwrap(), Some(b"v2".to_vec()));
+    }
+
+    #[test]
+    fn no_wal_means_unflushed_writes_lost() {
+        let mut opts = tmpopts("nowal");
+        opts.wal_enabled = false;
+        {
+            let mut db = Db::open(opts.clone()).unwrap();
+            db.put(b"k1", b"v1").unwrap();
+        }
+        let db = Db::open(opts).unwrap();
+        assert_eq!(db.get(b"k1").unwrap(), None); // PASV semantics
+    }
+
+    #[test]
+    fn scan_merges_levels_with_newest_wins() {
+        let mut db = Db::open(tmpopts("scan")).unwrap();
+        for i in 0..100u32 {
+            db.put(format!("k{i:03}").as_bytes(), b"old").unwrap();
+        }
+        db.flush().unwrap();
+        for i in (0..100u32).step_by(2) {
+            db.put(format!("k{i:03}").as_bytes(), b"new").unwrap();
+        }
+        let rows = db.scan(b"k000", b"k100", 1000).unwrap();
+        assert_eq!(rows.len(), 100);
+        for (i, (_, v)) in rows.iter().enumerate() {
+            let want: &[u8] = if i % 2 == 0 { b"new" } else { b"old" };
+            assert_eq!(v.as_slice(), want, "i={i}");
+        }
+    }
+
+    #[test]
+    fn scan_limit_respected() {
+        let mut db = Db::open(tmpopts("limit")).unwrap();
+        for i in 0..50u32 {
+            db.put(format!("k{i:03}").as_bytes(), b"v").unwrap();
+        }
+        assert_eq!(db.scan(b"k", b"l", 7).unwrap().len(), 7);
+    }
+
+    #[test]
+    fn compaction_reduces_file_count_and_preserves_data() {
+        let mut opts = tmpopts("compact");
+        opts.memtable_bytes = 8 << 10;
+        opts.l0_compaction_trigger = 2;
+        let mut db = Db::open(opts).unwrap();
+        for i in 0..3000u32 {
+            db.put(format!("key{i:06}").as_bytes(), &[7u8; 64]).unwrap();
+        }
+        let stats = db.stats();
+        assert!(stats.compact_bytes.load(Ordering::Relaxed) > 0, "compaction ran");
+        for i in (0..3000).step_by(101) {
+            assert!(db.get(format!("key{i:06}").as_bytes()).unwrap().is_some());
+        }
+        // L0 held below trigger after compactions settle.
+        assert!(db.level_sizes()[0] < db.table_bytes());
+    }
+
+    #[test]
+    fn write_amplification_visible_in_stats() {
+        let mut opts = tmpopts("wa");
+        opts.memtable_bytes = 16 << 10;
+        opts.l0_compaction_trigger = 2;
+        let mut db = Db::open(opts).unwrap();
+        let mut user_bytes = 0u64;
+        for i in 0..2000u32 {
+            let k = format!("key{i:06}");
+            let v = [3u8; 128];
+            user_bytes += (k.len() + v.len()) as u64;
+            db.put(k.as_bytes(), &v).unwrap();
+        }
+        db.flush().unwrap();
+        let s = db.stats().snapshot();
+        // WAL + flush alone write everything at least twice.
+        assert!(s.total_write_bytes() > user_bytes * 2, "wa={:.2}", s.total_write_bytes() as f64 / user_bytes as f64);
+    }
+
+    #[test]
+    fn ingest_sorted_is_readable() {
+        let mut db = Db::open(tmpopts("ingest")).unwrap();
+        let entries: Vec<_> = (0..100u32)
+            .map(|i| (format!("k{i:04}").into_bytes(), vec![9u8; 32]))
+            .collect();
+        db.ingest_sorted(&entries).unwrap();
+        assert_eq!(db.get(b"k0042").unwrap(), Some(vec![9u8; 32]));
+        // No WAL bytes for ingestion.
+        assert_eq!(db.stats().snapshot().wal_bytes, 0);
+    }
+
+    #[test]
+    fn reopen_after_clean_flush() {
+        let opts = tmpopts("reopen");
+        {
+            let mut db = Db::open(opts.clone()).unwrap();
+            for i in 0..500u32 {
+                db.put(format!("k{i:04}").as_bytes(), b"v").unwrap();
+            }
+            db.flush().unwrap();
+        }
+        let db = Db::open(opts).unwrap();
+        assert_eq!(db.get(b"k0250").unwrap(), Some(b"v".to_vec()));
+        assert_eq!(db.scan(b"k", b"l", 10_000).unwrap().len(), 500);
+    }
+
+    #[test]
+    fn block_cache_serves_repeat_reads() {
+        let mut db = Db::open(tmpopts("cache")).unwrap();
+        for i in 0..500u32 {
+            db.put(format!("k{i:04}").as_bytes(), &[1u8; 256]).unwrap();
+        }
+        db.flush().unwrap();
+        let _ = db.get(b"k0100").unwrap();
+        let before = db.stats().snapshot().cache_hits;
+        let _ = db.get(b"k0100").unwrap();
+        let _ = db.get(b"k0101").unwrap(); // same block, very likely
+        let after = db.stats().snapshot().cache_hits;
+        assert!(after >= before, "cache stats move forward");
+    }
+}

@@ -1,0 +1,124 @@
+//! In-memory sorted write buffer.  A `BTreeMap` keyed by user key and
+//! holding the *latest* write wins — exactly the visibility the engine
+//! needs because writes arrive in Raft apply order (single writer).
+
+use super::Value;
+use std::collections::BTreeMap;
+use std::ops::Bound;
+
+#[derive(Default, Debug)]
+pub struct MemTable {
+    map: BTreeMap<Vec<u8>, Value>,
+    /// Approximate heap footprint (keys + values + per-entry overhead),
+    /// used for the flush trigger.
+    approx_bytes: usize,
+}
+
+const ENTRY_OVERHEAD: usize = 48; // BTreeMap node + Vec headers, rough
+
+impl MemTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, key: &[u8], value: Value) {
+        let add = key.len() + value.encoded_len() + ENTRY_OVERHEAD;
+        if let Some(old) = self.map.insert(key.to_vec(), value) {
+            let sub = key.len() + old.encoded_len() + ENTRY_OVERHEAD;
+            self.approx_bytes = self.approx_bytes.saturating_sub(sub);
+        }
+        self.approx_bytes += add;
+    }
+
+    pub fn get(&self, key: &[u8]) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn approx_bytes(&self) -> usize {
+        self.approx_bytes
+    }
+
+    /// Ordered iteration over the whole table (for flush).
+    pub fn iter(&self) -> impl Iterator<Item = (&[u8], &Value)> {
+        self.map.iter().map(|(k, v)| (k.as_slice(), v))
+    }
+
+    /// Ordered iteration over `[start, end)`.
+    pub fn range<'a>(
+        &'a self,
+        start: &[u8],
+        end: &[u8],
+    ) -> impl Iterator<Item = (&'a [u8], &'a Value)> {
+        self.map
+            .range::<[u8], _>((Bound::Included(start), Bound::Excluded(end)))
+            .map(|(k, v)| (k.as_slice(), v))
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.approx_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latest_write_wins() {
+        let mut m = MemTable::new();
+        m.insert(b"k", Value::Put(b"v1".to_vec()));
+        m.insert(b"k", Value::Put(b"v2".to_vec()));
+        assert_eq!(m.get(b"k"), Some(&Value::Put(b"v2".to_vec())));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn tombstone_replaces_put() {
+        let mut m = MemTable::new();
+        m.insert(b"k", Value::Put(b"v".to_vec()));
+        m.insert(b"k", Value::Delete);
+        assert_eq!(m.get(b"k"), Some(&Value::Delete));
+    }
+
+    #[test]
+    fn size_accounting_tracks_overwrites() {
+        let mut m = MemTable::new();
+        m.insert(b"k", Value::Put(vec![0u8; 1000]));
+        let s1 = m.approx_bytes();
+        m.insert(b"k", Value::Put(vec![0u8; 10]));
+        assert!(m.approx_bytes() < s1);
+        m.clear();
+        assert_eq!(m.approx_bytes(), 0);
+    }
+
+    #[test]
+    fn range_is_sorted_and_bounded() {
+        let mut m = MemTable::new();
+        for k in ["a", "c", "e", "g"] {
+            m.insert(k.as_bytes(), Value::Put(k.as_bytes().to_vec()));
+        }
+        let got: Vec<_> = m.range(b"b", b"f").map(|(k, _)| k.to_vec()).collect();
+        assert_eq!(got, vec![b"c".to_vec(), b"e".to_vec()]);
+    }
+
+    #[test]
+    fn iter_is_globally_sorted() {
+        let mut m = MemTable::new();
+        for k in ["z", "a", "m", "b"] {
+            m.insert(k.as_bytes(), Value::Put(vec![]));
+        }
+        let keys: Vec<_> = m.iter().map(|(k, _)| k.to_vec()).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+}

@@ -1,0 +1,53 @@
+//! From-scratch LSM-tree storage engine — the RocksDB substitute
+//! (DESIGN.md §2).  Reproduces exactly the persistence paths the paper
+//! counts when it says a Raft-based KV store writes each value ≥3
+//! times: the engine WAL, the memtable→SSTable flush, and the
+//! background compaction rewrites.
+//!
+//! Components:
+//! * [`memtable`] — in-memory sorted write buffer with size accounting.
+//! * [`wal`] — CRC-framed write-ahead log with replay.
+//! * [`bloom`] — per-SSTable Bloom filters.
+//! * [`sstable`] — immutable sorted-table writer/reader (data blocks +
+//!   index block + bloom + footer).
+//! * [`version`] — the level structure (L0 overlap + leveled L1..Ln)
+//!   with a rewrite-on-change MANIFEST.
+//! * [`compaction`] — leveled compaction picker + k-way merge.
+//! * [`db`] — the public [`Db`] handle (put/get/delete/scan/flush).
+//!
+//! The engine is deliberately synchronous and single-writer: benches
+//! drive it from the coordinator's apply loop, mirroring how Raft
+//! applies committed entries in order.
+
+pub mod bloom;
+pub mod compaction;
+pub mod db;
+pub mod memtable;
+pub mod sstable;
+pub mod version;
+pub mod wal;
+
+pub use db::{Db, IoStats, Options, SyncMode};
+
+/// A stored value or a tombstone.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Value {
+    Put(Vec<u8>),
+    Delete,
+}
+
+impl Value {
+    pub fn as_put(&self) -> Option<&[u8]> {
+        match self {
+            Value::Put(v) => Some(v),
+            Value::Delete => None,
+        }
+    }
+
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            Value::Put(v) => v.len(),
+            Value::Delete => 0,
+        }
+    }
+}

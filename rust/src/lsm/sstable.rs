@@ -1,0 +1,524 @@
+//! Immutable sorted string table.
+//!
+//! Layout (all little-endian, varint = LEB128):
+//!
+//! ```text
+//! [data block 0][data block 1]...[index block][bloom block][footer]
+//! data block : repeated (op u8, key len_bytes, [value len_bytes])
+//! index block: varint count, then per block:
+//!              (first_key len_bytes, last_key len_bytes,
+//!               offset varint, len varint, entries varint)
+//! bloom block: Bloom::encode
+//! footer     : index_off u64, index_len u64, bloom_off u64,
+//!              bloom_len u64, entry_count u64, crc32(index||bloom) u32,
+//!              magic u64
+//! ```
+//!
+//! Readers keep the decoded index + bloom resident (tiny) and read data
+//! blocks on demand via `pread`, fronted by the Db-level block cache.
+
+use super::bloom::Bloom;
+use super::Value;
+use crate::util::{Decoder, Encoder};
+use anyhow::{bail, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const MAGIC: u64 = 0x4E5A_5353_5442_0001; // "NZSSTB" v1
+const OP_PUT: u8 = 0;
+const OP_DELETE: u8 = 1;
+
+/// Target uncompressed data-block size.
+pub const BLOCK_TARGET: usize = 16 * 1024;
+
+/// One index entry describing a data block.
+#[derive(Clone, Debug)]
+pub struct BlockMeta {
+    pub first_key: Vec<u8>,
+    pub last_key: Vec<u8>,
+    pub offset: u64,
+    pub len: u64,
+    pub entries: u64,
+}
+
+// ---------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------
+
+/// Streaming SSTable writer. Keys MUST arrive in strictly increasing
+/// order (the merge iterators guarantee this).
+pub struct TableWriter {
+    path: PathBuf,
+    file: BufWriter<File>,
+    block: Encoder,
+    block_first: Option<Vec<u8>>,
+    block_entries: u64,
+    metas: Vec<BlockMeta>,
+    last_key: Option<Vec<u8>>,
+    offset: u64,
+    keys: Vec<Vec<u8>>, // for bloom build at finish
+    entry_count: u64,
+}
+
+impl TableWriter {
+    pub fn create(path: &Path) -> Result<Self> {
+        let file = OpenOptions::new()
+            .create_new(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("sstable create {path:?}"))?;
+        Ok(Self {
+            path: path.to_path_buf(),
+            file: BufWriter::new(file),
+            block: Encoder::with_capacity(BLOCK_TARGET + 512),
+            block_first: None,
+            block_entries: 0,
+            metas: Vec::new(),
+            last_key: None,
+            offset: 0,
+            keys: Vec::new(),
+            entry_count: 0,
+        })
+    }
+
+    pub fn add(&mut self, key: &[u8], value: &Value) -> Result<()> {
+        if let Some(last) = &self.last_key {
+            if key <= last.as_slice() {
+                bail!("sstable: keys out of order ({last:?} then {key:?})");
+            }
+        }
+        if self.block_first.is_none() {
+            self.block_first = Some(key.to_vec());
+        }
+        match value {
+            Value::Put(v) => {
+                self.block.u8(OP_PUT).len_bytes(key).len_bytes(v);
+            }
+            Value::Delete => {
+                self.block.u8(OP_DELETE).len_bytes(key);
+            }
+        }
+        self.block_entries += 1;
+        self.entry_count += 1;
+        self.keys.push(key.to_vec());
+        self.last_key = Some(key.to_vec());
+        if self.block.len() >= BLOCK_TARGET {
+            self.finish_block()?;
+        }
+        Ok(())
+    }
+
+    fn finish_block(&mut self) -> Result<()> {
+        if self.block.is_empty() {
+            return Ok(());
+        }
+        let data = std::mem::replace(
+            &mut self.block,
+            Encoder::with_capacity(BLOCK_TARGET + 512),
+        )
+        .into_vec();
+        self.file.write_all(&data)?;
+        self.metas.push(BlockMeta {
+            first_key: self.block_first.take().unwrap(),
+            last_key: self.last_key.clone().unwrap(),
+            offset: self.offset,
+            len: data.len() as u64,
+            entries: self.block_entries,
+        });
+        self.offset += data.len() as u64;
+        self.block_entries = 0;
+        Ok(())
+    }
+
+    /// Finish the table; returns (file size, entry count).
+    pub fn finish(mut self) -> Result<(u64, u64)> {
+        self.finish_block()?;
+        // Index block.
+        let mut index = Encoder::new();
+        index.varint(self.metas.len() as u64);
+        for m in &self.metas {
+            index
+                .len_bytes(&m.first_key)
+                .len_bytes(&m.last_key)
+                .varint(m.offset)
+                .varint(m.len)
+                .varint(m.entries);
+        }
+        // Bloom block.
+        let mut bloom = Bloom::with_capacity(self.keys.len());
+        for k in &self.keys {
+            bloom.insert(k);
+        }
+        let mut bloom_enc = Encoder::new();
+        bloom.encode(&mut bloom_enc);
+
+        let index_off = self.offset;
+        let index_len = index.len() as u64;
+        let bloom_off = index_off + index_len;
+        let bloom_len = bloom_enc.len() as u64;
+
+        let mut crc = crc32fast::Hasher::new();
+        crc.update(index.as_slice());
+        crc.update(bloom_enc.as_slice());
+
+        self.file.write_all(index.as_slice())?;
+        self.file.write_all(bloom_enc.as_slice())?;
+        let mut footer = Encoder::with_capacity(52);
+        footer
+            .u64(index_off)
+            .u64(index_len)
+            .u64(bloom_off)
+            .u64(bloom_len)
+            .u64(self.entry_count)
+            .u32(crc.finalize())
+            .u64(MAGIC);
+        self.file.write_all(footer.as_slice())?;
+        self.file.flush()?;
+        self.file.get_ref().sync_data()?;
+        let size = bloom_off + bloom_len + footer.len() as u64;
+        Ok((size, self.entry_count))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn entry_count(&self) -> u64 {
+        self.entry_count
+    }
+
+    pub fn approx_bytes(&self) -> u64 {
+        self.offset + self.block.len() as u64
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------
+
+/// Open SSTable: resident index + bloom, on-demand block reads.
+pub struct Table {
+    pub id: u64,
+    path: PathBuf,
+    file: File,
+    pub metas: Vec<BlockMeta>,
+    bloom: Bloom,
+    pub entry_count: u64,
+    pub file_size: u64,
+}
+
+impl Table {
+    pub fn open(id: u64, path: &Path) -> Result<Self> {
+        let mut file = File::open(path).with_context(|| format!("sstable open {path:?}"))?;
+        let file_size = file.metadata()?.len();
+        const FOOTER: u64 = 8 * 5 + 4 + 8;
+        if file_size < FOOTER {
+            bail!("sstable too small: {path:?}");
+        }
+        file.seek(SeekFrom::End(-(FOOTER as i64)))?;
+        let mut fb = vec![0u8; FOOTER as usize];
+        file.read_exact(&mut fb)?;
+        let mut d = Decoder::new(&fb);
+        let index_off = d.u64()?;
+        let index_len = d.u64()?;
+        let _bloom_off = d.u64()?;
+        let bloom_len = d.u64()?;
+        let entry_count = d.u64()?;
+        let crc_want = d.u32()?;
+        let magic = d.u64()?;
+        if magic != MAGIC {
+            bail!("sstable bad magic: {path:?}");
+        }
+        let mut meta_buf = vec![0u8; (index_len + bloom_len) as usize];
+        file.seek(SeekFrom::Start(index_off))?;
+        file.read_exact(&mut meta_buf)?;
+        if crc32fast::hash(&meta_buf) != crc_want {
+            bail!("sstable meta crc mismatch: {path:?}");
+        }
+        let mut d = Decoder::new(&meta_buf[..index_len as usize]);
+        let n = d.varint()? as usize;
+        let mut metas = Vec::with_capacity(n);
+        for _ in 0..n {
+            metas.push(BlockMeta {
+                first_key: d.len_bytes()?.to_vec(),
+                last_key: d.len_bytes()?.to_vec(),
+                offset: d.varint()?,
+                len: d.varint()?,
+                entries: d.varint()?,
+            });
+        }
+        let mut d = Decoder::new(&meta_buf[index_len as usize..]);
+        let bloom = Bloom::decode(&mut d)?;
+        Ok(Self { id, path: path.to_path_buf(), file, metas, bloom, entry_count, file_size })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn first_key(&self) -> Option<&[u8]> {
+        self.metas.first().map(|m| m.first_key.as_slice())
+    }
+
+    pub fn last_key(&self) -> Option<&[u8]> {
+        self.metas.last().map(|m| m.last_key.as_slice())
+    }
+
+    pub fn may_contain(&self, key: &[u8]) -> bool {
+        self.bloom.may_contain(key)
+    }
+
+    pub fn overlaps(&self, start: &[u8], end: &[u8]) -> bool {
+        match (self.first_key(), self.last_key()) {
+            (Some(f), Some(l)) => f < end && start <= l,
+            _ => false,
+        }
+    }
+
+    /// Index of the block that could contain `key`, if any.
+    fn block_for(&self, key: &[u8]) -> Option<usize> {
+        // First block whose last_key >= key.
+        let i = self.metas.partition_point(|m| m.last_key.as_slice() < key);
+        if i < self.metas.len() && self.metas[i].first_key.as_slice() <= key {
+            Some(i)
+        } else if i < self.metas.len() {
+            // key falls in a gap before block i — not present, but for
+            // range scans we still start here.
+            None
+        } else {
+            None
+        }
+    }
+
+    /// Raw block bytes (cache-fill path).
+    pub fn read_block(&self, idx: usize) -> Result<Arc<Vec<u8>>> {
+        let m = &self.metas[idx];
+        let mut buf = vec![0u8; m.len as usize];
+        read_at(&self.file, m.offset, &mut buf)?;
+        Ok(Arc::new(buf))
+    }
+
+    /// Decode every (key, value) in a block.
+    pub fn decode_block(data: &[u8]) -> Result<Vec<(Vec<u8>, Value)>> {
+        let mut d = Decoder::new(data);
+        let mut out = Vec::new();
+        while !d.is_empty() {
+            let op = d.u8()?;
+            let key = d.len_bytes()?.to_vec();
+            let val = match op {
+                OP_PUT => Value::Put(d.len_bytes()?.to_vec()),
+                OP_DELETE => Value::Delete,
+                other => bail!("sstable: unknown op {other}"),
+            };
+            out.push((key, val));
+        }
+        Ok(out)
+    }
+
+    /// Point lookup without cache (Db layers the cache on top).
+    pub fn get(&self, key: &[u8], cache: Option<&super::db::BlockCache>) -> Result<Option<Value>> {
+        if !self.bloom.may_contain(key) {
+            return Ok(None);
+        }
+        let Some(bi) = self.block_for(key) else {
+            return Ok(None);
+        };
+        let data = self.block_data(bi, cache)?;
+        let entries = Self::decode_block(&data)?;
+        match entries.binary_search_by(|(k, _)| k.as_slice().cmp(key)) {
+            Ok(i) => Ok(Some(entries[i].1.clone())),
+            Err(_) => Ok(None),
+        }
+    }
+
+    pub fn block_data(
+        &self,
+        idx: usize,
+        cache: Option<&super::db::BlockCache>,
+    ) -> Result<Arc<Vec<u8>>> {
+        if let Some(c) = cache {
+            return c.get_or_load(self.id, idx as u64, || self.read_block(idx));
+        }
+        self.read_block(idx)
+    }
+
+    /// Iterate the whole table in order.
+    pub fn iter(&self) -> TableIter<'_> {
+        TableIter { table: self, block: 0, entries: Vec::new(), pos: 0 }
+    }
+
+    /// Iterate entries with key in `[start, end)`.
+    pub fn range(&self, start: &[u8], end: &[u8]) -> Result<Vec<(Vec<u8>, Value)>> {
+        let mut out = Vec::new();
+        let begin = self.metas.partition_point(|m| m.last_key.as_slice() < start);
+        for bi in begin..self.metas.len() {
+            if self.metas[bi].first_key.as_slice() >= end {
+                break;
+            }
+            let data = self.read_block(bi)?;
+            for (k, v) in Self::decode_block(&data)? {
+                if k.as_slice() >= end {
+                    return Ok(out);
+                }
+                if k.as_slice() >= start {
+                    out.push((k, v));
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// pread wrapper (no seek state mutation, thread-safe reads).
+pub fn read_at(file: &File, offset: u64, buf: &mut [u8]) -> Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, offset)?;
+    Ok(())
+}
+
+/// Full-table forward iterator (used by compaction merges).
+pub struct TableIter<'a> {
+    table: &'a Table,
+    block: usize,
+    entries: Vec<(Vec<u8>, Value)>,
+    pos: usize,
+}
+
+impl Iterator for TableIter<'_> {
+    type Item = (Vec<u8>, Value);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        loop {
+            if self.pos < self.entries.len() {
+                let item = std::mem::replace(&mut self.entries[self.pos], (Vec::new(), Value::Delete));
+                self.pos += 1;
+                return Some(item);
+            }
+            if self.block >= self.table.metas.len() {
+                return None;
+            }
+            let data = self.table.read_block(self.block).ok()?;
+            self.entries = Table::decode_block(&data).ok()?;
+            self.pos = 0;
+            self.block += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("nezha-sst-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn build(path: &Path, n: u32, vlen: usize) -> Table {
+        let mut w = TableWriter::create(path).unwrap();
+        for i in 0..n {
+            let k = format!("key{i:08}");
+            w.add(k.as_bytes(), &Value::Put(vec![(i % 251) as u8; vlen])).unwrap();
+        }
+        w.finish().unwrap();
+        Table::open(1, path).unwrap()
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let dir = tmpdir("rt");
+        let t = build(&dir.join("t.sst"), 1000, 100);
+        assert_eq!(t.entry_count, 1000);
+        for i in [0u32, 1, 500, 999] {
+            let k = format!("key{i:08}");
+            let v = t.get(k.as_bytes(), None).unwrap().unwrap();
+            assert_eq!(v, Value::Put(vec![(i % 251) as u8; 100]));
+        }
+        assert_eq!(t.get(b"nope", None).unwrap(), None);
+        assert_eq!(t.get(b"key00000500x", None).unwrap(), None);
+    }
+
+    #[test]
+    fn multi_block_tables_index_correctly() {
+        let dir = tmpdir("mb");
+        // 1000 * 2KB values -> many blocks
+        let t = build(&dir.join("t.sst"), 1000, 2048);
+        assert!(t.metas.len() > 10, "blocks={}", t.metas.len());
+        for i in (0..1000).step_by(97) {
+            let k = format!("key{i:08}");
+            assert!(t.get(k.as_bytes(), None).unwrap().is_some(), "{k}");
+        }
+    }
+
+    #[test]
+    fn out_of_order_keys_rejected() {
+        let dir = tmpdir("ooo");
+        let mut w = TableWriter::create(&dir.join("t.sst")).unwrap();
+        w.add(b"b", &Value::Put(vec![])).unwrap();
+        assert!(w.add(b"a", &Value::Put(vec![])).is_err());
+        assert!(w.add(b"b", &Value::Put(vec![])).is_err()); // dup also rejected
+    }
+
+    #[test]
+    fn iter_returns_all_sorted() {
+        let dir = tmpdir("iter");
+        let t = build(&dir.join("t.sst"), 500, 64);
+        let items: Vec<_> = t.iter().collect();
+        assert_eq!(items.len(), 500);
+        for w in items.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+
+    #[test]
+    fn range_scan_bounds() {
+        let dir = tmpdir("range");
+        let t = build(&dir.join("t.sst"), 100, 16);
+        let got = t.range(b"key00000010", b"key00000020").unwrap();
+        assert_eq!(got.len(), 10);
+        assert_eq!(got[0].0, b"key00000010".to_vec());
+        assert_eq!(got[9].0, b"key00000019".to_vec());
+        // Empty range
+        assert!(t.range(b"x", b"z").unwrap().is_empty());
+        // Range covering everything
+        assert_eq!(t.range(b"a", b"z").unwrap().len(), 100);
+    }
+
+    #[test]
+    fn tombstones_roundtrip() {
+        let dir = tmpdir("tomb");
+        let p = dir.join("t.sst");
+        let mut w = TableWriter::create(&p).unwrap();
+        w.add(b"a", &Value::Put(b"1".to_vec())).unwrap();
+        w.add(b"b", &Value::Delete).unwrap();
+        w.finish().unwrap();
+        let t = Table::open(1, &p).unwrap();
+        assert_eq!(t.get(b"b", None).unwrap(), Some(Value::Delete));
+    }
+
+    #[test]
+    fn corrupt_meta_detected() {
+        let dir = tmpdir("corrupt");
+        let p = dir.join("t.sst");
+        build(&p, 100, 32);
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Flip a bit in the index region (just before footer).
+        let l = bytes.len();
+        bytes[l - 60] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(Table::open(1, &p).is_err());
+    }
+
+    #[test]
+    fn overlap_checks() {
+        let dir = tmpdir("ov");
+        let t = build(&dir.join("t.sst"), 10, 8); // key00000000..key00000009
+        assert!(t.overlaps(b"key00000005", b"key00000100"));
+        assert!(!t.overlaps(b"key00000100", b"key00000200"));
+        assert!(t.overlaps(b"a", b"z"));
+    }
+}

@@ -1,0 +1,220 @@
+//! Level structure + MANIFEST.
+//!
+//! L0 holds whole-memtable flushes (files may overlap; newest first).
+//! L1..Ln hold non-overlapping sorted runs.  The MANIFEST is rewritten
+//! atomically (tmp + rename) on every version change — simple and
+//! crash-safe at our scale; RocksDB's log-structured manifest is an
+//! optimization we don't need.
+
+use crate::util::{Decoder, Encoder};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+pub const MAX_LEVELS: usize = 7;
+
+/// Metadata for one live SSTable file.
+#[derive(Clone, Debug)]
+pub struct FileMeta {
+    pub id: u64,
+    pub size: u64,
+    pub entries: u64,
+    pub first_key: Vec<u8>,
+    pub last_key: Vec<u8>,
+}
+
+/// The level structure. `levels[0]` is newest-first; deeper levels are
+/// key-ordered and non-overlapping.
+#[derive(Clone, Debug, Default)]
+pub struct Version {
+    pub levels: Vec<Vec<FileMeta>>,
+    pub next_file_id: u64,
+}
+
+impl Version {
+    pub fn new() -> Self {
+        Self { levels: vec![Vec::new(); MAX_LEVELS], next_file_id: 1 }
+    }
+
+    pub fn alloc_file_id(&mut self) -> u64 {
+        let id = self.next_file_id;
+        self.next_file_id += 1;
+        id
+    }
+
+    pub fn live_files(&self) -> impl Iterator<Item = &FileMeta> {
+        self.levels.iter().flatten()
+    }
+
+    pub fn total_bytes(&self, level: usize) -> u64 {
+        self.levels[level].iter().map(|f| f.size).sum()
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+
+    /// Insert a flushed file at L0 (newest first).
+    pub fn add_l0(&mut self, meta: FileMeta) {
+        self.levels[0].insert(0, meta);
+    }
+
+    /// Replace `removed` file ids at `level` and `level+1` with `added`
+    /// files at `level+1`, keeping deeper levels key-sorted.
+    pub fn apply_compaction(&mut self, level: usize, removed: &[u64], added: Vec<FileMeta>) {
+        for l in [level, level + 1] {
+            self.levels[l].retain(|f| !removed.contains(&f.id));
+        }
+        self.levels[level + 1].extend(added);
+        self.levels[level + 1].sort_by(|a, b| a.first_key.cmp(&b.first_key));
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        e.u64(self.next_file_id);
+        e.varint(self.levels.len() as u64);
+        for level in &self.levels {
+            e.varint(level.len() as u64);
+            for f in level {
+                e.u64(f.id)
+                    .u64(f.size)
+                    .u64(f.entries)
+                    .len_bytes(&f.first_key)
+                    .len_bytes(&f.last_key);
+            }
+        }
+        let body = e.into_vec();
+        let mut framed = Encoder::with_capacity(body.len() + 8);
+        framed.u32(body.len() as u32).u32(crc32fast::hash(&body)).bytes(&body);
+        framed.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut d = Decoder::new(buf);
+        let len = d.u32()? as usize;
+        let crc = d.u32()?;
+        let body = d.bytes(len)?;
+        anyhow::ensure!(crc32fast::hash(body) == crc, "manifest crc mismatch");
+        let mut d = Decoder::new(body);
+        let next_file_id = d.u64()?;
+        let nlevels = d.varint()? as usize;
+        anyhow::ensure!(nlevels <= 16, "manifest: absurd level count");
+        let mut levels = Vec::with_capacity(nlevels);
+        for _ in 0..nlevels {
+            let n = d.varint()? as usize;
+            let mut files = Vec::with_capacity(n);
+            for _ in 0..n {
+                files.push(FileMeta {
+                    id: d.u64()?,
+                    size: d.u64()?,
+                    entries: d.u64()?,
+                    first_key: d.len_bytes()?.to_vec(),
+                    last_key: d.len_bytes()?.to_vec(),
+                });
+            }
+            levels.push(files);
+        }
+        while levels.len() < MAX_LEVELS {
+            levels.push(Vec::new());
+        }
+        Ok(Self { levels, next_file_id })
+    }
+
+    /// Atomic rewrite: write tmp, fsync, rename.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let tmp = dir.join("MANIFEST.tmp");
+        let fin = dir.join("MANIFEST");
+        std::fs::write(&tmp, self.encode()).context("manifest write")?;
+        let f = std::fs::File::open(&tmp)?;
+        f.sync_data()?;
+        std::fs::rename(&tmp, &fin)?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<Option<Self>> {
+        let p = dir.join("MANIFEST");
+        match std::fs::read(&p) {
+            Ok(buf) => Ok(Some(Self::decode(&buf)?)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+/// SSTable file naming.
+pub fn table_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("{id:010}.sst"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(id: u64, first: &str, last: &str) -> FileMeta {
+        FileMeta {
+            id,
+            size: 1000,
+            entries: 10,
+            first_key: first.as_bytes().to_vec(),
+            last_key: last.as_bytes().to_vec(),
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut v = Version::new();
+        v.add_l0(meta(1, "a", "m"));
+        v.add_l0(meta(2, "b", "z"));
+        v.levels[1].push(meta(3, "a", "k"));
+        v.next_file_id = 42;
+        let v2 = Version::decode(&v.encode()).unwrap();
+        assert_eq!(v2.next_file_id, 42);
+        assert_eq!(v2.levels[0].len(), 2);
+        assert_eq!(v2.levels[0][0].id, 2); // newest first preserved
+        assert_eq!(v2.levels[1][0].last_key, b"k".to_vec());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("nezha-ver-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Version::load(&dir).unwrap().is_none());
+        let mut v = Version::new();
+        v.add_l0(meta(7, "x", "y"));
+        v.save(&dir).unwrap();
+        let v2 = Version::load(&dir).unwrap().unwrap();
+        assert_eq!(v2.levels[0][0].id, 7);
+    }
+
+    #[test]
+    fn corrupt_manifest_rejected() {
+        let mut v = Version::new();
+        v.add_l0(meta(1, "a", "b"));
+        let mut buf = v.encode();
+        let l = buf.len();
+        buf[l - 1] ^= 0xff;
+        assert!(Version::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn apply_compaction_moves_files_down() {
+        let mut v = Version::new();
+        v.add_l0(meta(1, "a", "m"));
+        v.add_l0(meta(2, "c", "z"));
+        v.levels[1].push(meta(3, "a", "j"));
+        v.apply_compaction(0, &[1, 2, 3], vec![meta(4, "m", "z"), meta(5, "a", "l")]);
+        assert!(v.levels[0].is_empty());
+        let ids: Vec<u64> = v.levels[1].iter().map(|f| f.id).collect();
+        assert_eq!(ids, vec![5, 4]); // key-sorted: "a" before "m"
+    }
+
+    #[test]
+    fn l0_is_newest_first() {
+        let mut v = Version::new();
+        v.add_l0(meta(1, "a", "b"));
+        v.add_l0(meta(2, "a", "b"));
+        v.add_l0(meta(3, "a", "b"));
+        let ids: Vec<u64> = v.levels[0].iter().map(|f| f.id).collect();
+        assert_eq!(ids, vec![3, 2, 1]);
+    }
+}

@@ -1,0 +1,687 @@
+//! Persistent Raft log, backed by epoch-rotated ValueLogs.
+//!
+//! This file is where KVS-Raft's unification happens (paper §III-B):
+//! the Raft log entry — key, value, term, index — is serialized once
+//! into the ValueLog, and the returned [`VRef`] is exactly what Nezha's
+//! state machine later stores.  Baselines use the same log but ignore
+//! the VRef and re-persist the value through their storage engine.
+//!
+//! **Epochs = the paper's storage modules.**  The live epoch file is
+//! the Active Storage's ValueLog.  When GC triggers, [`RaftLog::rotate`]
+//! freezes it and opens the next epoch (the New Storage's log, which
+//! becomes the next Active log); after GC completes the engine calls
+//! [`RaftLog::mark_snapshot`] + [`RaftLog::drop_epochs_below`], exactly
+//! the "safely remove the old ValueLog" step of §III-C.
+//!
+//! In-memory, the log keeps a suffix of entries (`mem`) for
+//! replication; entries older than `mem_first` were compacted out of
+//! memory after apply, and followers that lag behind them receive an
+//! InstallSnapshot instead.
+
+use super::rpc::{Command, LogEntry, LogIndex, Term};
+use crate::util::{Decoder, Encoder};
+use crate::vlog::{Entry as VEntry, VLog, VLogReader, VRef};
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::path::{Path, PathBuf};
+
+/// Durable (term, voted_for) — must hit disk before answering RPCs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HardState {
+    pub term: Term,
+    pub voted_for: Option<u64>,
+}
+
+impl HardState {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut e = Encoder::with_capacity(24);
+        e.u64(self.term);
+        e.u64(self.voted_for.map_or(u64::MAX, |v| v));
+        let body = e.into_vec();
+        let mut framed = Encoder::with_capacity(body.len() + 4);
+        framed.u32(crc32fast::hash(&body)).bytes(&body);
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, framed.as_slice())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Option<Self>> {
+        let buf = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        let mut d = Decoder::new(&buf);
+        let crc = d.u32()?;
+        let body = d.bytes(d.remaining())?;
+        if crc32fast::hash(body) != crc {
+            bail!("hardstate crc mismatch");
+        }
+        let mut d = Decoder::new(body);
+        let term = d.u64()?;
+        let v = d.u64()?;
+        Ok(Some(Self { term, voted_for: if v == u64::MAX { None } else { Some(v) } }))
+    }
+}
+
+/// Convert a Raft command into its ValueLog representation.
+fn to_ventry(term: Term, index: LogIndex, cmd: &Command) -> VEntry {
+    match cmd {
+        Command::Put { key, value } => VEntry::put(term, index, key.clone(), value.clone()),
+        Command::Delete { key } => VEntry::delete(term, index, key.clone()),
+        // Noop: empty key, no value (user keys are never empty — the
+        // coordinator rejects them).
+        Command::Noop => VEntry::delete(term, index, Vec::new()),
+    }
+}
+
+fn from_ventry(e: &VEntry) -> LogEntry {
+    let cmd = if e.key.is_empty() && e.value.is_none() {
+        Command::Noop
+    } else {
+        match &e.value {
+            Some(v) => Command::Put { key: e.key.clone(), value: v.clone() },
+            None => Command::Delete { key: e.key.clone() },
+        }
+    };
+    LogEntry { term: e.term, index: e.index, cmd }
+}
+
+/// Path of an epoch's ValueLog file (shared with the engines' read
+/// path via [`crate::vlog::EpochReaders`]).
+pub fn epoch_path(dir: &Path, epoch: u32) -> PathBuf {
+    dir.join(format!("raft-{epoch:06}.vlog"))
+}
+
+/// The replicated log: epoch-rotated VLog persistence + in-memory
+/// suffix.
+pub struct RaftLog {
+    dir: PathBuf,
+    /// Live epoch (append target).
+    epoch: u32,
+    vlog: VLog,
+    /// Frozen epochs, read-only.
+    old: BTreeMap<u32, VLogReader>,
+    /// In-memory suffix, `mem[0].index == mem_first`.
+    mem: VecDeque<(LogEntry, VRef)>,
+    mem_first: LogIndex,
+    /// Log prefix replaced by a snapshot.
+    pub snap_index: LogIndex,
+    pub snap_term: Term,
+    last_index: LogIndex,
+    last_term: Term,
+    /// Bytes appended to the live epoch since it was opened (GC
+    /// trigger input).
+    pub live_epoch_bytes: u64,
+}
+
+impl RaftLog {
+    /// Open/recover the log in `dir` (files: `raft-NNNNNN.vlog`,
+    /// `snapmeta`).
+    pub fn open(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let (snap_index, snap_term) = Self::load_snapmeta(dir)?.unwrap_or((0, 0));
+        // Discover epoch files.
+        let mut epochs: Vec<u32> = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(num) = name.strip_prefix("raft-").and_then(|s| s.strip_suffix(".vlog")) {
+                if let Ok(e) = num.parse::<u32>() {
+                    epochs.push(e);
+                }
+            }
+        }
+        epochs.sort_unstable();
+        let live_epoch = *epochs.last().unwrap_or(&0);
+
+        let mut mem = VecDeque::new();
+        let mut last_index = snap_index;
+        let mut last_term = snap_term;
+        let mut old = BTreeMap::new();
+        // Replay all epochs in order to rebuild the in-memory suffix.
+        for &ep in &epochs {
+            let reader = VLogReader::open(&epoch_path(dir, ep))?;
+            for item in reader.iter()? {
+                let (off, ve) = item?;
+                let le = from_ventry(&ve);
+                if le.index <= snap_index {
+                    continue; // compacted by snapshot
+                }
+                // A later epoch supersedes on conflict (can only happen
+                // after a crash mid-truncate; keep the newest).
+                while mem.back().map_or(false, |(e, _): &(LogEntry, VRef)| e.index >= le.index) {
+                    mem.pop_back();
+                }
+                last_index = le.index;
+                last_term = le.term;
+                mem.push_back((le, VRef::new(ep, off)));
+            }
+            if ep != live_epoch {
+                old.insert(ep, reader);
+            }
+        }
+        let vlog = VLog::open(&epoch_path(dir, live_epoch))?;
+        let live_epoch_bytes = vlog.len_bytes();
+        let mem_first = mem.front().map_or(last_index + 1, |(e, _)| e.index);
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            epoch: live_epoch,
+            vlog,
+            old,
+            mem,
+            mem_first,
+            snap_index,
+            snap_term,
+            last_index,
+            last_term,
+            live_epoch_bytes,
+        })
+    }
+
+    fn load_snapmeta(dir: &Path) -> Result<Option<(LogIndex, Term)>> {
+        let p = dir.join("snapmeta");
+        match std::fs::read(&p) {
+            Ok(b) => {
+                let mut d = Decoder::new(&b);
+                Ok(Some((d.u64()?, d.u64()?)))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn save_snapmeta(&self) -> Result<()> {
+        let mut e = Encoder::with_capacity(16);
+        e.u64(self.snap_index).u64(self.snap_term);
+        std::fs::write(self.dir.join("snapmeta"), e.as_slice())?;
+        Ok(())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn last_index(&self) -> LogIndex {
+        self.last_index
+    }
+
+    pub fn last_term(&self) -> Term {
+        self.last_term
+    }
+
+    pub fn first_in_mem(&self) -> LogIndex {
+        self.mem_first
+    }
+
+    pub fn mem_len(&self) -> usize {
+        self.mem.len()
+    }
+
+    pub fn live_epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    pub fn vlog_len_bytes(&self) -> u64 {
+        self.vlog.len_bytes()
+    }
+
+    /// Counter handle for disk accounting (bytes appended to the live
+    /// epoch ValueLog — i.e. the ONE value persist of KVS-Raft).
+    pub fn vlog_bytes_counter(&self) -> std::sync::Arc<std::sync::atomic::AtomicU64> {
+        self.vlog.bytes_appended_counter()
+    }
+
+    /// Append a new entry (leader path or follower replication).
+    /// Persists to the live ValueLog epoch and returns the [`VRef`] —
+    /// **the single value persist in KVS-Raft**.
+    pub fn append(&mut self, entry: LogEntry) -> Result<VRef> {
+        debug_assert_eq!(entry.index, self.last_index + 1, "log must be contiguous");
+        let ve = to_ventry(entry.term, entry.index, &entry.cmd);
+        let off = self.vlog.append(&ve)?;
+        self.live_epoch_bytes = self.vlog.len_bytes();
+        self.last_index = entry.index;
+        self.last_term = entry.term;
+        if self.mem.is_empty() {
+            self.mem_first = entry.index;
+        }
+        let vref = VRef::new(self.epoch, off);
+        self.mem.push_back((entry, vref));
+        Ok(vref)
+    }
+
+    /// Group-commit durability point.
+    pub fn sync(&mut self) -> Result<()> {
+        self.vlog.sync()
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.vlog.flush()
+    }
+
+    /// Freeze the live epoch and open the next one (GC initialization,
+    /// paper §III-C step 1).  Returns the frozen epoch id.
+    pub fn rotate(&mut self) -> Result<u32> {
+        self.vlog.sync()?;
+        let frozen = self.epoch;
+        self.old.insert(frozen, VLogReader::open(&epoch_path(&self.dir, frozen))?);
+        self.epoch += 1;
+        self.vlog = VLog::open(&epoch_path(&self.dir, self.epoch))?;
+        self.live_epoch_bytes = 0;
+        Ok(frozen)
+    }
+
+    /// Delete frozen epoch files `< min_epoch` (GC cleanup, §III-C
+    /// step 3: "safely eliminates expired files").
+    pub fn drop_epochs_below(&mut self, min_epoch: u32) -> Result<()> {
+        let dead: Vec<u32> = self.old.keys().copied().filter(|&e| e < min_epoch).collect();
+        for e in dead {
+            self.old.remove(&e);
+            let _ = std::fs::remove_file(epoch_path(&self.dir, e));
+        }
+        Ok(())
+    }
+
+    /// Term of entry `index`, if known (snapshot point included).
+    pub fn term_at(&self, index: LogIndex) -> Option<Term> {
+        if index == self.snap_index {
+            return Some(self.snap_term);
+        }
+        if index == 0 {
+            return Some(0);
+        }
+        self.entry(index).map(|e| e.term)
+    }
+
+    /// In-memory entry lookup.
+    pub fn entry(&self, index: LogIndex) -> Option<&LogEntry> {
+        if index < self.mem_first || index > self.last_index {
+            return None;
+        }
+        self.mem.get((index - self.mem_first) as usize).map(|(e, _)| e)
+    }
+
+    pub fn vref_of(&self, index: LogIndex) -> Option<VRef> {
+        if index < self.mem_first || index > self.last_index {
+            return None;
+        }
+        self.mem.get((index - self.mem_first) as usize).map(|(_, v)| *v)
+    }
+
+    /// Entries `[from, to]` for replication (clamped to memory).
+    pub fn entries(&self, from: LogIndex, to: LogIndex, max_bytes: usize) -> Vec<LogEntry> {
+        let mut out = Vec::new();
+        let mut budget = max_bytes;
+        let mut i = from.max(self.mem_first);
+        while i <= to.min(self.last_index) {
+            let Some(e) = self.entry(i) else { break };
+            let sz = e.approx_len();
+            if !out.is_empty() && sz > budget {
+                break;
+            }
+            budget = budget.saturating_sub(sz);
+            out.push(e.clone());
+            i += 1;
+        }
+        out
+    }
+
+    /// Truncate the log suffix starting at `from` (conflict
+    /// resolution).  Handles truncation points inside frozen epochs by
+    /// deleting every newer epoch and reopening the containing one.
+    pub fn truncate_from(&mut self, from: LogIndex) -> Result<()> {
+        if from > self.last_index {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            from >= self.mem_first,
+            "cannot truncate below in-memory prefix ({from} < {})",
+            self.mem_first
+        );
+        let keep = (from - self.mem_first) as usize;
+        let cut = self.mem[keep].1; // VRef of first removed entry
+        self.mem.truncate(keep);
+
+        if cut.epoch != self.epoch {
+            // Conflict inside a frozen epoch: kill all newer epochs,
+            // reopen the containing epoch as live, truncated.
+            let newer: Vec<u32> =
+                self.old.keys().copied().filter(|&e| e > cut.epoch).collect();
+            for e in newer {
+                self.old.remove(&e);
+                let _ = std::fs::remove_file(epoch_path(&self.dir, e));
+            }
+            let _ = std::fs::remove_file(epoch_path(&self.dir, self.epoch));
+            self.old.remove(&cut.epoch);
+            self.epoch = cut.epoch;
+            self.vlog = VLog::open(&epoch_path(&self.dir, cut.epoch))?;
+        }
+        self.vlog.flush()?;
+        truncate_file(&epoch_path(&self.dir, self.epoch), cut.off)?;
+        self.vlog = VLog::open(&epoch_path(&self.dir, self.epoch))?;
+        self.live_epoch_bytes = self.vlog.len_bytes();
+
+        if let Some((e, _)) = self.mem.back() {
+            self.last_index = e.index;
+            self.last_term = e.term;
+        } else {
+            self.last_index = self.snap_index;
+            self.last_term = self.snap_term;
+            self.mem_first = self.snap_index + 1;
+        }
+        Ok(())
+    }
+
+    /// Drop in-memory entries ≤ `upto` (already applied), keeping
+    /// `keep_tail` for laggards.  Disk content is untouched (it is the
+    /// value store!); this is purely a memory bound.
+    pub fn compact_mem(&mut self, upto: LogIndex, keep_tail: u64) {
+        let bound = upto.saturating_sub(keep_tail);
+        while let Some((e, _)) = self.mem.front() {
+            if e.index <= bound && self.mem.len() > 1 {
+                self.mem.pop_front();
+            } else {
+                break;
+            }
+        }
+        if let Some((e, _)) = self.mem.front() {
+            self.mem_first = e.index;
+        }
+    }
+
+    /// Install a snapshot boundary: everything ≤ `index` is covered by
+    /// the state-machine snapshot; all epochs restart.
+    pub fn reset_to_snapshot(&mut self, index: LogIndex, term: Term) -> Result<()> {
+        self.snap_index = index;
+        self.snap_term = term;
+        self.last_index = index;
+        self.last_term = term;
+        self.mem.clear();
+        self.mem_first = index + 1;
+        self.save_snapmeta()?;
+        // Remove every epoch file and start a fresh epoch.
+        let olds: Vec<u32> = self.old.keys().copied().collect();
+        for e in olds {
+            self.old.remove(&e);
+            let _ = std::fs::remove_file(epoch_path(&self.dir, e));
+        }
+        let _ = std::fs::remove_file(epoch_path(&self.dir, self.epoch));
+        self.epoch += 1;
+        self.vlog = VLog::open(&epoch_path(&self.dir, self.epoch))?;
+        self.live_epoch_bytes = 0;
+        Ok(())
+    }
+
+    /// Record that a GC cycle produced a snapshot at (`index`, `term`)
+    /// *without* touching the live epoch (the GC framework then calls
+    /// [`Self::drop_epochs_below`]).
+    pub fn mark_snapshot(&mut self, index: LogIndex, term: Term) -> Result<()> {
+        self.snap_index = index;
+        self.snap_term = term;
+        self.save_snapmeta()
+    }
+
+    /// Read the full value-log entry for a [`VRef`] (engines resolving
+    /// stored references — Algorithm 2's `ReadValue`).
+    pub fn read_vref(&mut self, vref: VRef) -> Result<VEntry> {
+        if vref.epoch == self.epoch {
+            self.vlog.read(vref.off)
+        } else if let Some(r) = self.old.get(&vref.epoch) {
+            r.read(vref.off)
+        } else {
+            bail!("read_vref: epoch {} not available", vref.epoch)
+        }
+    }
+
+    /// Independent read-only handle for an epoch (engines' read path /
+    /// background GC).
+    pub fn reader_for(&self, epoch: u32) -> Result<VLogReader> {
+        VLogReader::open(&epoch_path(&self.dir, epoch))
+    }
+
+    /// Flush, then return a reader for the live epoch.
+    pub fn live_reader(&mut self) -> Result<VLogReader> {
+        self.vlog.flush()?;
+        self.vlog.reader()
+    }
+}
+
+fn truncate_file(path: &Path, new_len: u64) -> Result<()> {
+    let f = std::fs::OpenOptions::new().write(true).open(path)?;
+    f.set_len(new_len)?;
+    f.sync_data()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("nezha-rlog-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn put(term: Term, index: LogIndex, k: &str, v: &str) -> LogEntry {
+        LogEntry { term, index, cmd: Command::Put { key: k.into(), value: v.into() } }
+    }
+
+    #[test]
+    fn append_and_lookup() {
+        let mut log = RaftLog::open(&tmpdir("append")).unwrap();
+        assert_eq!(log.last_index(), 0);
+        log.append(put(1, 1, "a", "1")).unwrap();
+        log.append(put(1, 2, "b", "2")).unwrap();
+        assert_eq!(log.last_index(), 2);
+        assert_eq!(log.term_at(1), Some(1));
+        assert_eq!(log.entry(2).unwrap().cmd.key(), b"b");
+        assert_eq!(log.entry(3), None);
+    }
+
+    #[test]
+    fn persistence_across_reopen() {
+        let dir = tmpdir("reopen");
+        {
+            let mut log = RaftLog::open(&dir).unwrap();
+            for i in 1..=10 {
+                log.append(put(1, i, &format!("k{i}"), "v")).unwrap();
+            }
+            log.sync().unwrap();
+        }
+        let log = RaftLog::open(&dir).unwrap();
+        assert_eq!(log.last_index(), 10);
+        assert_eq!(log.entry(7).unwrap().cmd.key(), b"k7");
+    }
+
+    #[test]
+    fn truncate_removes_conflicting_suffix() {
+        let dir = tmpdir("trunc");
+        {
+            let mut log = RaftLog::open(&dir).unwrap();
+            for i in 1..=5 {
+                log.append(put(1, i, &format!("k{i}"), "v")).unwrap();
+            }
+            log.truncate_from(3).unwrap();
+            assert_eq!(log.last_index(), 2);
+            log.append(put(2, 3, "k3b", "v2")).unwrap();
+            assert_eq!(log.entry(3).unwrap().term, 2);
+            log.sync().unwrap();
+        }
+        let log = RaftLog::open(&dir).unwrap();
+        assert_eq!(log.last_index(), 3);
+        assert_eq!(log.entry(3).unwrap().term, 2);
+        assert_eq!(log.entry(3).unwrap().cmd.key(), b"k3b");
+    }
+
+    #[test]
+    fn rotation_freezes_epoch_and_reads_still_work() {
+        let dir = tmpdir("rotate");
+        let mut log = RaftLog::open(&dir).unwrap();
+        let mut vrefs = Vec::new();
+        for i in 1..=5 {
+            vrefs.push(log.append(put(1, i, &format!("k{i}"), &format!("v{i}"))).unwrap());
+        }
+        let frozen = log.rotate().unwrap();
+        assert_eq!(frozen, 0);
+        assert_eq!(log.live_epoch(), 1);
+        for i in 6..=8 {
+            vrefs.push(log.append(put(1, i, &format!("k{i}"), &format!("v{i}"))).unwrap());
+        }
+        // Reads across both epochs.
+        for (i, vref) in vrefs.iter().enumerate() {
+            let e = log.read_vref(*vref).unwrap();
+            assert_eq!(e.key, format!("k{}", i + 1).into_bytes());
+        }
+        assert_eq!(vrefs[0].epoch, 0);
+        assert_eq!(vrefs[7].epoch, 1);
+    }
+
+    #[test]
+    fn recovery_spans_epochs() {
+        let dir = tmpdir("recepochs");
+        {
+            let mut log = RaftLog::open(&dir).unwrap();
+            for i in 1..=5 {
+                log.append(put(1, i, &format!("k{i}"), "v")).unwrap();
+            }
+            log.rotate().unwrap();
+            for i in 6..=10 {
+                log.append(put(1, i, &format!("k{i}"), "v")).unwrap();
+            }
+            log.sync().unwrap();
+        }
+        let mut log = RaftLog::open(&dir).unwrap();
+        assert_eq!(log.last_index(), 10);
+        assert_eq!(log.live_epoch(), 1);
+        // Both epoch files' entries readable.
+        let v3 = log.vref_of(3).unwrap();
+        assert_eq!(v3.epoch, 0);
+        assert_eq!(log.read_vref(v3).unwrap().key, b"k3".to_vec());
+    }
+
+    #[test]
+    fn drop_epochs_below_removes_files() {
+        let dir = tmpdir("dropep");
+        let mut log = RaftLog::open(&dir).unwrap();
+        log.append(put(1, 1, "a", "1")).unwrap();
+        log.rotate().unwrap();
+        log.append(put(1, 2, "b", "2")).unwrap();
+        assert!(epoch_path(&dir, 0).exists());
+        log.mark_snapshot(1, 1).unwrap();
+        log.drop_epochs_below(1).unwrap();
+        assert!(!epoch_path(&dir, 0).exists());
+        // Live epoch unaffected.
+        let v = log.vref_of(2).unwrap();
+        assert_eq!(log.read_vref(v).unwrap().key, b"b".to_vec());
+    }
+
+    #[test]
+    fn truncate_across_rotation() {
+        let dir = tmpdir("truncrot");
+        let mut log = RaftLog::open(&dir).unwrap();
+        for i in 1..=5 {
+            log.append(put(1, i, &format!("k{i}"), "v")).unwrap();
+        }
+        log.rotate().unwrap();
+        for i in 6..=8 {
+            log.append(put(1, i, &format!("k{i}"), "v")).unwrap();
+        }
+        // Conflict at index 4 (inside frozen epoch 0).
+        log.truncate_from(4).unwrap();
+        assert_eq!(log.last_index(), 3);
+        assert_eq!(log.live_epoch(), 0); // reopened as live
+        log.append(put(2, 4, "k4b", "v")).unwrap();
+        assert_eq!(log.entry(4).unwrap().term, 2);
+        // Epoch-1 file removed.
+        assert!(!epoch_path(&dir, 1).exists());
+    }
+
+    #[test]
+    fn compact_mem_keeps_disk_and_tail() {
+        let mut log = RaftLog::open(&tmpdir("compact")).unwrap();
+        for i in 1..=100 {
+            log.append(put(1, i, &format!("k{i}"), "v")).unwrap();
+        }
+        log.compact_mem(90, 5);
+        assert!(log.first_in_mem() >= 85);
+        assert!(log.entry(50).is_none());
+        assert_eq!(log.last_index(), 100);
+        assert!(log.vlog_len_bytes() > 0);
+    }
+
+    #[test]
+    fn entries_respects_byte_budget() {
+        let mut log = RaftLog::open(&tmpdir("budget")).unwrap();
+        for i in 1..=10 {
+            log.append(LogEntry {
+                term: 1,
+                index: i,
+                cmd: Command::Put { key: vec![b'k'; 10], value: vec![0; 1000] },
+            })
+            .unwrap();
+        }
+        let es = log.entries(1, 10, 2500);
+        assert!(es.len() >= 2 && es.len() <= 3, "len={}", es.len());
+        let one = log.entries(1, 10, 1);
+        assert_eq!(one.len(), 1);
+    }
+
+    #[test]
+    fn snapshot_reset_restarts_log() {
+        let dir = tmpdir("snap");
+        {
+            let mut log = RaftLog::open(&dir).unwrap();
+            for i in 1..=20 {
+                log.append(put(1, i, &format!("k{i}"), "v")).unwrap();
+            }
+            log.reset_to_snapshot(20, 1).unwrap();
+            assert_eq!(log.last_index(), 20);
+            assert_eq!(log.vlog_len_bytes(), 0);
+            log.append(put(2, 21, "k21", "v")).unwrap();
+            log.sync().unwrap();
+        }
+        let log = RaftLog::open(&dir).unwrap();
+        assert_eq!(log.snap_index, 20);
+        assert_eq!(log.last_index(), 21);
+        assert_eq!(log.term_at(20), Some(1));
+        assert_eq!(log.entry(21).unwrap().cmd.key(), b"k21");
+    }
+
+    #[test]
+    fn hardstate_roundtrip() {
+        let dir = tmpdir("hs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("hardstate");
+        assert_eq!(HardState::load(&p).unwrap(), None);
+        let hs = HardState { term: 7, voted_for: Some(2) };
+        hs.save(&p).unwrap();
+        assert_eq!(HardState::load(&p).unwrap(), Some(hs));
+        let hs2 = HardState { term: 8, voted_for: None };
+        hs2.save(&p).unwrap();
+        assert_eq!(HardState::load(&p).unwrap(), Some(hs2));
+    }
+
+    #[test]
+    fn noop_entries_roundtrip() {
+        let dir = tmpdir("noop");
+        {
+            let mut log = RaftLog::open(&dir).unwrap();
+            log.append(LogEntry { term: 1, index: 1, cmd: Command::Noop }).unwrap();
+            log.sync().unwrap();
+        }
+        let log = RaftLog::open(&dir).unwrap();
+        assert_eq!(log.entry(1).unwrap().cmd, Command::Noop);
+    }
+
+    #[test]
+    fn live_epoch_bytes_tracks_appends_and_rotation() {
+        let mut log = RaftLog::open(&tmpdir("gctrig")).unwrap();
+        assert_eq!(log.live_epoch_bytes, 0);
+        log.append(put(1, 1, "k", &"v".repeat(100))).unwrap();
+        assert!(log.live_epoch_bytes > 100);
+        log.rotate().unwrap();
+        assert_eq!(log.live_epoch_bytes, 0);
+    }
+}

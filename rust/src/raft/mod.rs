@@ -1,0 +1,25 @@
+//! Raft consensus — the KVS-Raft substrate (paper §III-B).
+//!
+//! A from-scratch Raft: leader election, log replication, commitment,
+//! snapshot install, crash recovery.  Two properties make it
+//! "KVS-Raft-capable":
+//!
+//! 1. the persistent log is a [`crate::vlog::VLog`], so appending a
+//!    log entry *is* the single value persist, and
+//! 2. [`node::StateMachine::apply`] receives the entry's ValueLog
+//!    offset, letting Nezha's state machine store `(key → offset)`
+//!    while baselines re-persist full values.
+//!
+//! Module map: [`rpc`] (messages + wire codec), [`log`] (persistent
+//! log + hard state), [`node`] (the protocol state machine),
+//! [`transport`] (deterministic sim net + threaded bus).
+
+pub mod log;
+pub mod node;
+pub mod rpc;
+pub mod transport;
+
+pub use log::{HardState, RaftLog};
+pub use node::{Config, Node, NodeId, NodeMetrics, Role, StateMachine};
+pub use rpc::{Command, LogEntry, LogIndex, Message, Term};
+pub use transport::{Bus, NetConfig, SimNet, Transport};

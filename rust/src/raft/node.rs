@@ -1,0 +1,928 @@
+//! The Raft node state machine (leader election, log replication,
+//! commit, apply, snapshot install) — deterministic and message-
+//! driven: `tick()` advances logical time, `handle()` processes one
+//! inbound message, and both return the outbound messages to send.
+//! The transport/cluster layers own threads and clocks; this module
+//! owns correctness.
+
+use super::log::{HardState, RaftLog};
+use super::rpc::{Command, LogEntry, LogIndex, Message, Term};
+use crate::util::Rng;
+use crate::vlog::VRef;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+pub type NodeId = u64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Follower,
+    Candidate,
+    Leader,
+}
+
+/// What a Raft node drives: the storage engine's apply/snapshot hooks.
+/// `apply` receives the ValueLog offset of the entry — Nezha's state
+/// machines store it; baselines ignore it and re-persist the value.
+pub trait StateMachine: Send {
+    fn apply(&mut self, entry: &LogEntry, vref: VRef) -> Result<()>;
+    /// Serialize current state for follower catch-up.
+    fn snapshot_bytes(&mut self) -> Result<Vec<u8>>;
+    /// Replace state with a received snapshot.
+    fn install_snapshot(&mut self, data: &[u8], last_index: LogIndex, last_term: Term) -> Result<()>;
+}
+
+/// Tunables (times in ticks; the cluster maps ticks to wall time).
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub election_timeout_min: u64,
+    pub election_timeout_max: u64,
+    pub heartbeat_interval: u64,
+    /// Max payload bytes per AppendEntries.
+    pub max_batch_bytes: usize,
+    /// In-memory log tail kept after apply (for slow followers).
+    pub mem_keep_tail: u64,
+    /// fsync the log at persistence points (tests: on; benches choose
+    /// one policy for all baselines).
+    pub fsync: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            election_timeout_min: 20,
+            election_timeout_max: 40,
+            heartbeat_interval: 5,
+            max_batch_bytes: 1 << 20,
+            mem_keep_tail: 1024,
+            fsync: false,
+        }
+    }
+}
+
+/// Outbound message with destination.
+pub type Outbox = Vec<(NodeId, Message)>;
+
+/// Counters for the bench harness.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeMetrics {
+    pub msgs_sent: u64,
+    pub elections_started: u64,
+    pub snapshots_sent: u64,
+    pub snapshots_installed: u64,
+    pub entries_applied: u64,
+}
+
+pub struct Node<S: StateMachine> {
+    pub id: NodeId,
+    peers: Vec<NodeId>,
+    role: Role,
+    hard: HardState,
+    hard_path: std::path::PathBuf,
+    pub log: RaftLog,
+    commit_index: LogIndex,
+    last_applied: LogIndex,
+    // Leader volatile state.
+    next_index: HashMap<NodeId, LogIndex>,
+    match_index: HashMap<NodeId, LogIndex>,
+    votes: usize,
+    leader_hint: Option<NodeId>,
+    // Timing (logical ticks).
+    ticks: u64,
+    election_deadline: u64,
+    last_heartbeat: u64,
+    rng: Rng,
+    cfg: Config,
+    sm: S,
+    pub metrics: NodeMetrics,
+}
+
+impl<S: StateMachine> Node<S> {
+    pub fn new(
+        id: NodeId,
+        peers: Vec<NodeId>,
+        dir: &Path,
+        sm: S,
+        cfg: Config,
+        seed: u64,
+    ) -> Result<Self> {
+        let log = RaftLog::open(dir)?;
+        let hard_path = dir.join("hardstate");
+        let hard = HardState::load(&hard_path)?.unwrap_or_default();
+        let mut rng = Rng::new(seed ^ id.wrapping_mul(0x9E37_79B9));
+        let election_deadline = Self::rand_deadline(&mut rng, &cfg, 0);
+        Ok(Self {
+            id,
+            peers,
+            role: Role::Follower,
+            hard,
+            hard_path,
+            log,
+            commit_index: 0,
+            last_applied: 0,
+            next_index: HashMap::new(),
+            match_index: HashMap::new(),
+            votes: 0,
+            leader_hint: None,
+            ticks: 0,
+            election_deadline,
+            last_heartbeat: 0,
+            rng,
+            cfg,
+            sm,
+            metrics: NodeMetrics::default(),
+        })
+    }
+
+    fn rand_deadline(rng: &mut Rng, cfg: &Config, now: u64) -> u64 {
+        now + rng.range(cfg.election_timeout_min, cfg.election_timeout_max + 1)
+    }
+
+    // ---- observers -------------------------------------------------
+
+    pub fn role(&self) -> Role {
+        self.role
+    }
+
+    pub fn term(&self) -> Term {
+        self.hard.term
+    }
+
+    pub fn commit_index(&self) -> LogIndex {
+        self.commit_index
+    }
+
+    pub fn last_applied(&self) -> LogIndex {
+        self.last_applied
+    }
+
+    pub fn leader_hint(&self) -> Option<NodeId> {
+        if self.role == Role::Leader {
+            Some(self.id)
+        } else {
+            self.leader_hint
+        }
+    }
+
+    pub fn is_leader(&self) -> bool {
+        self.role == Role::Leader
+    }
+
+    pub fn sm(&self) -> &S {
+        &self.sm
+    }
+
+    pub fn sm_mut(&mut self) -> &mut S {
+        &mut self.sm
+    }
+
+    fn quorum(&self) -> usize {
+        (self.peers.len() + 1) / 2 + 1
+    }
+
+    // ---- persistence helpers ---------------------------------------
+
+    fn persist_hard(&mut self) -> Result<()> {
+        self.hard.save(&self.hard_path)
+    }
+
+    fn persist_log(&mut self) -> Result<()> {
+        if self.cfg.fsync {
+            self.log.sync()
+        } else {
+            self.log.flush()
+        }
+    }
+
+    // ---- time ------------------------------------------------------
+
+    /// Advance one logical tick.
+    pub fn tick(&mut self) -> Result<Outbox> {
+        self.ticks += 1;
+        match self.role {
+            Role::Leader => {
+                if self.ticks - self.last_heartbeat >= self.cfg.heartbeat_interval {
+                    return self.broadcast_append();
+                }
+                Ok(Vec::new())
+            }
+            Role::Follower | Role::Candidate => {
+                if self.ticks >= self.election_deadline {
+                    return self.start_election();
+                }
+                Ok(Vec::new())
+            }
+        }
+    }
+
+    fn reset_election_timer(&mut self) {
+        self.election_deadline = Self::rand_deadline(&mut self.rng, &self.cfg, self.ticks);
+    }
+
+    // ---- elections ---------------------------------------------------
+
+    fn start_election(&mut self) -> Result<Outbox> {
+        self.role = Role::Candidate;
+        self.hard.term += 1;
+        self.hard.voted_for = Some(self.id);
+        self.persist_hard()?;
+        self.votes = 1;
+        self.reset_election_timer();
+        self.metrics.elections_started += 1;
+        if self.votes >= self.quorum() {
+            // Single-node cluster: win immediately.
+            return self.become_leader();
+        }
+        let msg = Message::RequestVote {
+            term: self.hard.term,
+            candidate: self.id,
+            last_log_index: self.log.last_index(),
+            last_log_term: self.log.last_term(),
+        };
+        Ok(self.to_all(msg))
+    }
+
+    fn to_all(&mut self, msg: Message) -> Outbox {
+        self.metrics.msgs_sent += self.peers.len() as u64;
+        self.peers.iter().map(|&p| (p, msg.clone())).collect()
+    }
+
+    fn become_follower(&mut self, term: Term, leader: Option<NodeId>) -> Result<()> {
+        if term > self.hard.term {
+            self.hard.term = term;
+            self.hard.voted_for = None;
+            self.persist_hard()?;
+        }
+        self.role = Role::Follower;
+        if leader.is_some() {
+            self.leader_hint = leader;
+        }
+        self.reset_election_timer();
+        Ok(())
+    }
+
+    fn become_leader(&mut self) -> Result<Outbox> {
+        self.role = Role::Leader;
+        self.leader_hint = Some(self.id);
+        self.next_index.clear();
+        self.match_index.clear();
+        for &p in &self.peers {
+            self.next_index.insert(p, self.log.last_index() + 1);
+            self.match_index.insert(p, 0);
+        }
+        // Commit barrier for prior-term entries (§5.4.2).
+        let idx = self.log.last_index() + 1;
+        self.log.append(LogEntry { term: self.hard.term, index: idx, cmd: Command::Noop })?;
+        self.persist_log()?;
+        self.broadcast_append()
+    }
+
+    // ---- client -----------------------------------------------------
+
+    /// Leader-only: append a command; returns its log index.  The
+    /// caller learns commit by watching `last_applied()`.
+    pub fn propose(&mut self, cmd: Command) -> Result<LogIndex> {
+        if self.role != Role::Leader {
+            bail!("not leader (hint: {:?})", self.leader_hint());
+        }
+        let index = self.log.last_index() + 1;
+        self.log.append(LogEntry { term: self.hard.term, index, cmd })?;
+        Ok(index)
+    }
+
+    /// The ValueLog offset for a proposed index (Nezha engines store
+    /// this in the state machine).
+    pub fn vref_of(&self, index: LogIndex) -> Option<VRef> {
+        self.log.vref_of(index)
+    }
+
+    /// Replicate everything pending to all peers (call after a batch
+    /// of proposes — the coordinator's group-commit point).
+    pub fn replicate(&mut self) -> Result<Outbox> {
+        if self.role != Role::Leader {
+            return Ok(Vec::new());
+        }
+        self.persist_log()?;
+        // Single-node cluster: commit immediately.
+        if self.peers.is_empty() {
+            self.advance_commit()?;
+        }
+        self.broadcast_append()
+    }
+
+    fn broadcast_append(&mut self) -> Result<Outbox> {
+        self.last_heartbeat = self.ticks;
+        let mut out = Vec::new();
+        let peers = self.peers.clone();
+        for p in peers {
+            if let Some(m) = self.append_for(p)? {
+                self.metrics.msgs_sent += 1;
+                out.push((p, m));
+            }
+        }
+        Ok(out)
+    }
+
+    fn append_for(&mut self, peer: NodeId) -> Result<Option<Message>> {
+        let next = *self.next_index.get(&peer).unwrap_or(&1);
+        // Peer too far behind the in-memory log → ship a snapshot.
+        if next <= self.log.snap_index || (next < self.log.first_in_mem() && next <= self.log.last_index())
+        {
+            let data = self.sm.snapshot_bytes()?;
+            self.metrics.snapshots_sent += 1;
+            // Snapshot covers the applied prefix.
+            let last_index = self.last_applied.max(self.log.snap_index);
+            let last_term = self.log.term_at(last_index).unwrap_or(self.log.snap_term);
+            return Ok(Some(Message::InstallSnapshot {
+                term: self.hard.term,
+                leader: self.id,
+                last_index,
+                last_term,
+                data,
+            }));
+        }
+        let prev = next - 1;
+        let Some(prev_term) = self.log.term_at(prev) else {
+            // prev fell out of memory between checks — snapshot path
+            // next round.
+            return Ok(None);
+        };
+        let entries = self.log.entries(next, self.log.last_index(), self.cfg.max_batch_bytes);
+        Ok(Some(Message::AppendEntries {
+            term: self.hard.term,
+            leader: self.id,
+            prev_log_index: prev,
+            prev_log_term: prev_term,
+            entries,
+            leader_commit: self.commit_index,
+        }))
+    }
+
+    // ---- message handling --------------------------------------------
+
+    pub fn handle(&mut self, from: NodeId, msg: Message) -> Result<Outbox> {
+        if msg.term() > self.hard.term {
+            let leader = match &msg {
+                Message::AppendEntries { leader, .. } | Message::InstallSnapshot { leader, .. } => {
+                    Some(*leader)
+                }
+                _ => None,
+            };
+            self.become_follower(msg.term(), leader)?;
+        }
+        match msg {
+            Message::RequestVote { term, candidate, last_log_index, last_log_term } => {
+                self.on_request_vote(from, term, candidate, last_log_index, last_log_term)
+            }
+            Message::RequestVoteResp { term, granted } => self.on_vote_resp(term, granted),
+            Message::AppendEntries { term, leader, prev_log_index, prev_log_term, entries, leader_commit } => {
+                self.on_append(from, term, leader, prev_log_index, prev_log_term, entries, leader_commit)
+            }
+            Message::AppendEntriesResp { term, success, match_index } => {
+                self.on_append_resp(from, term, success, match_index)
+            }
+            Message::InstallSnapshot { term, leader, last_index, last_term, data } => {
+                self.on_install_snapshot(from, term, leader, last_index, last_term, data)
+            }
+            Message::InstallSnapshotResp { term, last_index } => {
+                self.on_snapshot_resp(from, term, last_index)
+            }
+        }
+    }
+
+    fn on_request_vote(
+        &mut self,
+        from: NodeId,
+        term: Term,
+        candidate: NodeId,
+        last_log_index: LogIndex,
+        last_log_term: Term,
+    ) -> Result<Outbox> {
+        let mut granted = false;
+        if term == self.hard.term {
+            let can_vote =
+                self.hard.voted_for.is_none() || self.hard.voted_for == Some(candidate);
+            // §5.4.1 up-to-date check.
+            let up_to_date = last_log_term > self.log.last_term()
+                || (last_log_term == self.log.last_term()
+                    && last_log_index >= self.log.last_index());
+            if can_vote && up_to_date {
+                granted = true;
+                self.hard.voted_for = Some(candidate);
+                self.persist_hard()?;
+                self.reset_election_timer();
+            }
+        }
+        self.metrics.msgs_sent += 1;
+        Ok(vec![(from, Message::RequestVoteResp { term: self.hard.term, granted })])
+    }
+
+    fn on_vote_resp(&mut self, term: Term, granted: bool) -> Result<Outbox> {
+        if self.role != Role::Candidate || term != self.hard.term {
+            return Ok(Vec::new());
+        }
+        if granted {
+            self.votes += 1;
+            if self.votes >= self.quorum() {
+                return self.become_leader();
+            }
+        }
+        Ok(Vec::new())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn on_append(
+        &mut self,
+        from: NodeId,
+        term: Term,
+        leader: NodeId,
+        prev_log_index: LogIndex,
+        prev_log_term: Term,
+        entries: Vec<LogEntry>,
+        leader_commit: LogIndex,
+    ) -> Result<Outbox> {
+        if term < self.hard.term {
+            self.metrics.msgs_sent += 1;
+            return Ok(vec![(
+                from,
+                Message::AppendEntriesResp { term: self.hard.term, success: false, match_index: 0 },
+            )]);
+        }
+        // Valid leader for this term.
+        self.become_follower(term, Some(leader))?;
+
+        // Consistency check on prev.
+        let prev_ok = if prev_log_index == 0 {
+            true
+        } else if prev_log_index < self.log.snap_index {
+            // Leader is behind our snapshot — treat as matching at
+            // snapshot point.
+            true
+        } else {
+            self.log.term_at(prev_log_index) == Some(prev_log_term)
+        };
+        if !prev_ok {
+            // Conflict hint: ask the leader to back up to our last
+            // index (fast path) or below prev.
+            let hint = self.log.last_index().min(prev_log_index.saturating_sub(1));
+            self.metrics.msgs_sent += 1;
+            return Ok(vec![(
+                from,
+                Message::AppendEntriesResp {
+                    term: self.hard.term,
+                    success: false,
+                    match_index: hint,
+                },
+            )]);
+        }
+
+        // Append new entries, truncating conflicts.
+        for e in entries {
+            if e.index <= self.log.snap_index {
+                continue; // covered by snapshot
+            }
+            match self.log.term_at(e.index) {
+                Some(t) if t == e.term => continue, // already have it
+                Some(_) => {
+                    // Conflict: truncate suffix then append.
+                    self.log.truncate_from(e.index)?;
+                    self.log.append(e)?;
+                }
+                None => {
+                    if e.index == self.log.last_index() + 1 {
+                        self.log.append(e)?;
+                    }
+                    // else: gap (stale message) — ignore remainder
+                }
+            }
+        }
+        self.persist_log()?;
+
+        let match_index = self.log.last_index();
+        if leader_commit > self.commit_index {
+            self.commit_index = leader_commit.min(match_index);
+            self.apply_committed()?;
+        }
+        self.metrics.msgs_sent += 1;
+        Ok(vec![(
+            from,
+            Message::AppendEntriesResp { term: self.hard.term, success: true, match_index },
+        )])
+    }
+
+    fn on_append_resp(
+        &mut self,
+        from: NodeId,
+        term: Term,
+        success: bool,
+        match_index: LogIndex,
+    ) -> Result<Outbox> {
+        if self.role != Role::Leader || term != self.hard.term {
+            return Ok(Vec::new());
+        }
+        if success {
+            self.match_index.insert(from, match_index);
+            self.next_index.insert(from, match_index + 1);
+            self.advance_commit()?;
+            // More to send?
+            if match_index < self.log.last_index() {
+                if let Some(m) = self.append_for(from)? {
+                    self.metrics.msgs_sent += 1;
+                    return Ok(vec![(from, m)]);
+                }
+            }
+        } else {
+            // Back up using the follower's hint.
+            let next = self.next_index.entry(from).or_insert(1);
+            *next = (match_index + 1).min((*next).saturating_sub(1)).max(1);
+            if let Some(m) = self.append_for(from)? {
+                self.metrics.msgs_sent += 1;
+                return Ok(vec![(from, m)]);
+            }
+        }
+        Ok(Vec::new())
+    }
+
+    fn advance_commit(&mut self) -> Result<()> {
+        // Largest N replicated on a quorum with term == current (§5.4.2).
+        let mut candidates: Vec<LogIndex> = self
+            .match_index
+            .values()
+            .copied()
+            .chain(std::iter::once(self.log.last_index()))
+            .collect();
+        candidates.sort_unstable();
+        // The (len - quorum)-th from the end is replicated on >= quorum.
+        let n = candidates[candidates.len().saturating_sub(self.quorum())];
+        if n > self.commit_index && self.log.term_at(n) == Some(self.hard.term) {
+            self.commit_index = n;
+            self.apply_committed()?;
+        }
+        Ok(())
+    }
+
+    fn apply_committed(&mut self) -> Result<()> {
+        while self.last_applied < self.commit_index {
+            let idx = self.last_applied + 1;
+            let Some(entry) = self.log.entry(idx).cloned() else {
+                // Entry not in memory: snapshot already covers it.
+                self.last_applied = self.log.snap_index.min(self.commit_index);
+                if self.last_applied < idx {
+                    bail!("apply gap at {idx}");
+                }
+                continue;
+            };
+            let vref = self.log.vref_of(idx).unwrap_or(VRef::new(0, 0));
+            self.sm.apply(&entry, vref)?;
+            self.metrics.entries_applied += 1;
+            self.last_applied = idx;
+        }
+        self.log.compact_mem(self.last_applied, self.cfg.mem_keep_tail);
+        Ok(())
+    }
+
+    fn on_install_snapshot(
+        &mut self,
+        from: NodeId,
+        term: Term,
+        leader: NodeId,
+        last_index: LogIndex,
+        last_term: Term,
+        data: Vec<u8>,
+    ) -> Result<Outbox> {
+        if term < self.hard.term {
+            self.metrics.msgs_sent += 1;
+            return Ok(vec![(
+                from,
+                Message::InstallSnapshotResp { term: self.hard.term, last_index: self.log.last_index() },
+            )]);
+        }
+        self.become_follower(term, Some(leader))?;
+        if last_index > self.log.snap_index && last_index > self.last_applied {
+            self.sm.install_snapshot(&data, last_index, last_term)?;
+            self.log.reset_to_snapshot(last_index, last_term)?;
+            self.commit_index = last_index;
+            self.last_applied = last_index;
+            self.metrics.snapshots_installed += 1;
+        }
+        self.metrics.msgs_sent += 1;
+        Ok(vec![(
+            from,
+            Message::InstallSnapshotResp { term: self.hard.term, last_index: self.log.last_index() },
+        )])
+    }
+
+    fn on_snapshot_resp(&mut self, from: NodeId, term: Term, last_index: LogIndex) -> Result<Outbox> {
+        if self.role != Role::Leader || term != self.hard.term {
+            return Ok(Vec::new());
+        }
+        self.match_index.insert(from, last_index);
+        self.next_index.insert(from, last_index + 1);
+        if let Some(m) = self.append_for(from)? {
+            self.metrics.msgs_sent += 1;
+            return Ok(vec![(from, m)]);
+        }
+        Ok(Vec::new())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    /// Trivial in-memory KV state machine for node tests.
+    #[derive(Default)]
+    struct MemSm {
+        kv: BTreeMap<Vec<u8>, Vec<u8>>,
+        applied: Vec<LogIndex>,
+    }
+
+    impl StateMachine for MemSm {
+        fn apply(&mut self, entry: &LogEntry, _vref: VRef) -> Result<()> {
+            self.applied.push(entry.index);
+            match &entry.cmd {
+                Command::Put { key, value } => {
+                    self.kv.insert(key.clone(), value.clone());
+                }
+                Command::Delete { key } => {
+                    self.kv.remove(key);
+                }
+                Command::Noop => {}
+            }
+            Ok(())
+        }
+
+        fn snapshot_bytes(&mut self) -> Result<Vec<u8>> {
+            let mut e = crate::util::Encoder::new();
+            e.varint(self.kv.len() as u64);
+            for (k, v) in &self.kv {
+                e.len_bytes(k).len_bytes(v);
+            }
+            Ok(e.into_vec())
+        }
+
+        fn install_snapshot(&mut self, data: &[u8], _li: LogIndex, _lt: Term) -> Result<()> {
+            let mut d = crate::util::Decoder::new(data);
+            let n = d.varint()? as usize;
+            self.kv.clear();
+            for _ in 0..n {
+                let k = d.len_bytes()?.to_vec();
+                let v = d.len_bytes()?.to_vec();
+                self.kv.insert(k, v);
+            }
+            Ok(())
+        }
+    }
+
+    fn tmpdir(name: &str, id: u64) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("nezha-node-{name}-{}-{id}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// Synchronous 3-node test cluster: delivers all messages until
+    /// quiescent.
+    struct Trio {
+        nodes: Vec<Node<MemSm>>,
+    }
+
+    impl Trio {
+        fn new(name: &str) -> Self {
+            let ids = [1u64, 2, 3];
+            let nodes = ids
+                .iter()
+                .map(|&id| {
+                    let peers: Vec<u64> = ids.iter().copied().filter(|&p| p != id).collect();
+                    Node::new(
+                        id,
+                        peers,
+                        &tmpdir(name, id),
+                        MemSm::default(),
+                        Config::default(),
+                        42,
+                    )
+                    .unwrap()
+                })
+                .collect();
+            Self { nodes }
+        }
+
+        fn node(&mut self, id: NodeId) -> &mut Node<MemSm> {
+            self.nodes.iter_mut().find(|n| n.id == id).unwrap()
+        }
+
+        fn pump(&mut self, mut msgs: Vec<(NodeId, NodeId, Message)>) {
+            while let Some((from, to, m)) = msgs.pop() {
+                let out = self.node(to).handle(from, m).unwrap();
+                for (dst, msg) in out {
+                    msgs.push((to, dst, msg));
+                }
+            }
+        }
+
+        fn tick_all(&mut self) {
+            let mut msgs = Vec::new();
+            for n in &mut self.nodes {
+                let id = n.id;
+                for (dst, m) in n.tick().unwrap() {
+                    msgs.push((id, dst, m));
+                }
+            }
+            self.pump(msgs);
+        }
+
+        /// Tick until some node is leader; returns its id.
+        fn elect(&mut self) -> NodeId {
+            for _ in 0..500 {
+                self.tick_all();
+                if let Some(l) = self.nodes.iter().find(|n| n.is_leader()) {
+                    return l.id;
+                }
+            }
+            panic!("no leader elected");
+        }
+
+        fn propose_and_commit(&mut self, leader: NodeId, cmd: Command) -> LogIndex {
+            let idx = self.node(leader).propose(cmd).unwrap();
+            let out = self.node(leader).replicate().unwrap();
+            let msgs: Vec<_> = out.into_iter().map(|(dst, m)| (leader, dst, m)).collect();
+            self.pump(msgs);
+            idx
+        }
+    }
+
+    #[test]
+    fn single_leader_elected() {
+        let mut t = Trio::new("elect");
+        let leader = t.elect();
+        let leaders: Vec<_> = t.nodes.iter().filter(|n| n.is_leader()).collect();
+        assert_eq!(leaders.len(), 1);
+        assert_eq!(leaders[0].id, leader);
+        // Followers learn the hint.
+        for n in &t.nodes {
+            if !n.is_leader() {
+                assert_eq!(n.leader_hint(), Some(leader));
+            }
+        }
+    }
+
+    #[test]
+    fn replication_commits_and_applies_everywhere() {
+        let mut t = Trio::new("replicate");
+        let leader = t.elect();
+        for i in 0..20u32 {
+            t.propose_and_commit(
+                leader,
+                Command::Put { key: format!("k{i}").into_bytes(), value: format!("v{i}").into_bytes() },
+            );
+        }
+        // Followers learn the final commit index from the next
+        // heartbeat — pump a few ticks.
+        for _ in 0..10 {
+            t.tick_all();
+        }
+        // Everyone applied everything (noop + 20 entries).
+        let applied: Vec<_> = t.nodes.iter().map(|n| n.last_applied()).collect();
+        assert!(applied.iter().all(|&a| a == applied[0]), "{applied:?}");
+        assert!(applied[0] >= 20);
+    }
+
+    #[test]
+    fn non_leader_rejects_propose() {
+        let mut t = Trio::new("reject");
+        let leader = t.elect();
+        for n in &mut t.nodes {
+            if n.id != leader {
+                assert!(n.propose(Command::Noop).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn commit_requires_quorum_not_all() {
+        // Detach node 3: leader + node 2 still commit.
+        let mut t = Trio::new("quorum");
+        let leader = t.elect();
+        let idx = t.node(leader).propose(Command::Put { key: b"q".to_vec(), value: b"1".to_vec() }).unwrap();
+        let out = t.node(leader).replicate().unwrap();
+        // Deliver only to one follower.
+        let follower = t.nodes.iter().map(|n| n.id).find(|&id| id != leader).unwrap();
+        let msgs: Vec<_> = out
+            .into_iter()
+            .filter(|(dst, _)| *dst == follower)
+            .map(|(dst, m)| (leader, dst, m))
+            .collect();
+        t.pump(msgs);
+        assert!(t.node(leader).commit_index() >= idx);
+    }
+
+    #[test]
+    fn higher_term_dethrones_leader() {
+        let mut t = Trio::new("dethrone");
+        let leader = t.elect();
+        let term = t.node(leader).term();
+        let out = t
+            .node(leader)
+            .handle(99, Message::RequestVote { term: term + 10, candidate: 99, last_log_index: 1 << 30, last_log_term: 1 << 30 })
+            .unwrap();
+        assert_eq!(t.node(leader).role(), Role::Follower);
+        assert_eq!(t.node(leader).term(), term + 10);
+        // And it granted the vote (log was up-to-date).
+        assert!(matches!(out[0].1, Message::RequestVoteResp { granted: true, .. }));
+    }
+
+    #[test]
+    fn vote_denied_for_stale_log() {
+        let mut t = Trio::new("stalelog");
+        let leader = t.elect();
+        t.propose_and_commit(leader, Command::Put { key: b"x".to_vec(), value: b"y".to_vec() });
+        let term = t.node(leader).term();
+        // A candidate with an empty log can't win a vote from the leader.
+        let out = t
+            .node(leader)
+            .handle(77, Message::RequestVote { term: term + 1, candidate: 77, last_log_index: 0, last_log_term: 0 })
+            .unwrap();
+        assert!(matches!(out[0].1, Message::RequestVoteResp { granted: false, .. }));
+    }
+
+    #[test]
+    fn snapshot_catches_up_fresh_node() {
+        let mut t = Trio::new("snapcatch");
+        let leader = t.elect();
+        // Small mem tail to force snapshot path.
+        t.node(leader).cfg.mem_keep_tail = 2;
+        for i in 0..50u32 {
+            t.propose_and_commit(
+                leader,
+                Command::Put { key: format!("k{i:03}").into_bytes(), value: b"v".to_vec() },
+            );
+        }
+        // New empty node 4 joins as the replication target of leader.
+        let dir = tmpdir("snapcatch", 4);
+        let mut n4 = Node::new(4, vec![leader], &dir, MemSm::default(), Config::default(), 7).unwrap();
+        // Leader tracks node 4 as far behind.
+        t.node(leader).next_index.insert(4, 1);
+        t.node(leader).match_index.insert(4, 0);
+        let m = t.node(leader).append_for(4).unwrap().unwrap();
+        assert!(matches!(m, Message::InstallSnapshot { .. }), "expected snapshot, got {m:?}");
+        let resp = n4.handle(leader, m).unwrap();
+        assert!(n4.last_applied() >= 50);
+        assert!(matches!(resp[0].1, Message::InstallSnapshotResp { .. }));
+    }
+
+    #[test]
+    fn follower_truncates_conflicting_suffix() {
+        // Craft a follower with a divergent entry and let an
+        // AppendEntries from a newer-term leader fix it.
+        let dir = tmpdir("conflict", 1);
+        let mut f = Node::new(1, vec![2], &dir, MemSm::default(), Config::default(), 3).unwrap();
+        // Local divergent entries at term 1.
+        f.hard.term = 1;
+        f.log.append(LogEntry { term: 1, index: 1, cmd: Command::Put { key: b"a".to_vec(), value: b"old".to_vec() } }).unwrap();
+        f.log.append(LogEntry { term: 1, index: 2, cmd: Command::Put { key: b"b".to_vec(), value: b"old".to_vec() } }).unwrap();
+        // Leader at term 2 replicates a different index-2.
+        let out = f
+            .handle(
+                2,
+                Message::AppendEntries {
+                    term: 2,
+                    leader: 2,
+                    prev_log_index: 1,
+                    prev_log_term: 1,
+                    entries: vec![LogEntry { term: 2, index: 2, cmd: Command::Put { key: b"b2".to_vec(), value: b"new".to_vec() } }],
+                    leader_commit: 2,
+                },
+            )
+            .unwrap();
+        assert!(matches!(out[0].1, Message::AppendEntriesResp { success: true, match_index: 2, .. }));
+        assert_eq!(f.log.entry(2).unwrap().term, 2);
+        assert_eq!(f.log.entry(2).unwrap().cmd.key(), b"b2");
+        assert_eq!(f.last_applied(), 2);
+    }
+
+    #[test]
+    fn stale_term_append_rejected() {
+        let dir = tmpdir("staleappend", 1);
+        let mut n = Node::new(1, vec![2], &dir, MemSm::default(), Config::default(), 5).unwrap();
+        n.hard.term = 10;
+        let out = n
+            .handle(
+                2,
+                Message::AppendEntries {
+                    term: 3,
+                    leader: 2,
+                    prev_log_index: 0,
+                    prev_log_term: 0,
+                    entries: vec![],
+                    leader_commit: 0,
+                },
+            )
+            .unwrap();
+        assert!(matches!(out[0].1, Message::AppendEntriesResp { success: false, term: 10, .. }));
+        assert_eq!(n.role(), Role::Follower);
+    }
+}

@@ -1,0 +1,291 @@
+//! Raft wire messages + binary encoding.
+//!
+//! The in-process [`super::transport::Bus`] moves *encoded* frames so
+//! the benches account for real serialization cost and wire volume
+//! (the paper's cluster used gRPC/protobuf over 10 GbE — DESIGN.md §2).
+
+use crate::util::{Decoder, Encoder};
+use anyhow::{bail, Result};
+
+pub type Term = u64;
+pub type LogIndex = u64;
+
+/// A state-machine command carried in a Raft log entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Command {
+    Put { key: Vec<u8>, value: Vec<u8> },
+    Delete { key: Vec<u8> },
+    /// No-op barrier appended by a new leader to commit prior terms.
+    Noop,
+}
+
+impl Command {
+    pub fn key(&self) -> &[u8] {
+        match self {
+            Command::Put { key, .. } | Command::Delete { key } => key,
+            Command::Noop => &[],
+        }
+    }
+
+    pub fn value_len(&self) -> usize {
+        match self {
+            Command::Put { value, .. } => value.len(),
+            _ => 0,
+        }
+    }
+
+    pub fn encode_into(&self, e: &mut Encoder) {
+        match self {
+            Command::Put { key, value } => {
+                e.u8(0).len_bytes(key).len_bytes(value);
+            }
+            Command::Delete { key } => {
+                e.u8(1).len_bytes(key);
+            }
+            Command::Noop => {
+                e.u8(2);
+            }
+        }
+    }
+
+    pub fn decode(d: &mut Decoder) -> Result<Self> {
+        Ok(match d.u8()? {
+            0 => Command::Put { key: d.len_bytes()?.to_vec(), value: d.len_bytes()?.to_vec() },
+            1 => Command::Delete { key: d.len_bytes()?.to_vec() },
+            2 => Command::Noop,
+            other => bail!("rpc: unknown command tag {other}"),
+        })
+    }
+}
+
+/// A replicated log entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LogEntry {
+    pub term: Term,
+    pub index: LogIndex,
+    pub cmd: Command,
+}
+
+impl LogEntry {
+    pub fn approx_len(&self) -> usize {
+        17 + self.cmd.key().len() + self.cmd.value_len()
+    }
+
+    fn encode_into(&self, e: &mut Encoder) {
+        e.u64(self.term).u64(self.index);
+        self.cmd.encode_into(e);
+    }
+
+    fn decode(d: &mut Decoder) -> Result<Self> {
+        Ok(Self { term: d.u64()?, index: d.u64()?, cmd: Command::decode(d)? })
+    }
+}
+
+/// Raft RPCs (§5 of the Raft paper, plus InstallSnapshot from §7).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Message {
+    RequestVote {
+        term: Term,
+        candidate: u64,
+        last_log_index: LogIndex,
+        last_log_term: Term,
+    },
+    RequestVoteResp {
+        term: Term,
+        granted: bool,
+    },
+    AppendEntries {
+        term: Term,
+        leader: u64,
+        prev_log_index: LogIndex,
+        prev_log_term: Term,
+        entries: Vec<LogEntry>,
+        leader_commit: LogIndex,
+    },
+    AppendEntriesResp {
+        term: Term,
+        success: bool,
+        /// Highest index known replicated on the follower (on success),
+        /// or the follower's conflict hint (on failure).
+        match_index: LogIndex,
+    },
+    InstallSnapshot {
+        term: Term,
+        leader: u64,
+        last_index: LogIndex,
+        last_term: Term,
+        /// Opaque state-machine snapshot (Nezha: the sorted ValueLog
+        /// bytes — paper §III-E "Recovery leverages the sorted
+        /// ValueLog ... as an efficient snapshot mechanism").
+        data: Vec<u8>,
+    },
+    InstallSnapshotResp {
+        term: Term,
+        last_index: LogIndex,
+    },
+}
+
+impl Message {
+    pub fn term(&self) -> Term {
+        match self {
+            Message::RequestVote { term, .. }
+            | Message::RequestVoteResp { term, .. }
+            | Message::AppendEntries { term, .. }
+            | Message::AppendEntriesResp { term, .. }
+            | Message::InstallSnapshot { term, .. }
+            | Message::InstallSnapshotResp { term, .. } => *term,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        match self {
+            Message::RequestVote { term, candidate, last_log_index, last_log_term } => {
+                e.u8(0).u64(*term).u64(*candidate).u64(*last_log_index).u64(*last_log_term);
+            }
+            Message::RequestVoteResp { term, granted } => {
+                e.u8(1).u64(*term).u8(*granted as u8);
+            }
+            Message::AppendEntries { term, leader, prev_log_index, prev_log_term, entries, leader_commit } => {
+                e.u8(2).u64(*term).u64(*leader).u64(*prev_log_index).u64(*prev_log_term).u64(*leader_commit);
+                e.varint(entries.len() as u64);
+                for ent in entries {
+                    ent.encode_into(&mut e);
+                }
+            }
+            Message::AppendEntriesResp { term, success, match_index } => {
+                e.u8(3).u64(*term).u8(*success as u8).u64(*match_index);
+            }
+            Message::InstallSnapshot { term, leader, last_index, last_term, data } => {
+                e.u8(4).u64(*term).u64(*leader).u64(*last_index).u64(*last_term).len_bytes(data);
+            }
+            Message::InstallSnapshotResp { term, last_index } => {
+                e.u8(5).u64(*term).u64(*last_index);
+            }
+        }
+        e.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut d = Decoder::new(buf);
+        let tag = d.u8()?;
+        Ok(match tag {
+            0 => Message::RequestVote {
+                term: d.u64()?,
+                candidate: d.u64()?,
+                last_log_index: d.u64()?,
+                last_log_term: d.u64()?,
+            },
+            1 => Message::RequestVoteResp { term: d.u64()?, granted: d.u8()? != 0 },
+            2 => {
+                let term = d.u64()?;
+                let leader = d.u64()?;
+                let prev_log_index = d.u64()?;
+                let prev_log_term = d.u64()?;
+                let leader_commit = d.u64()?;
+                let n = d.varint()? as usize;
+                let mut entries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    entries.push(LogEntry::decode(&mut d)?);
+                }
+                Message::AppendEntries { term, leader, prev_log_index, prev_log_term, entries, leader_commit }
+            }
+            3 => Message::AppendEntriesResp {
+                term: d.u64()?,
+                success: d.u8()? != 0,
+                match_index: d.u64()?,
+            },
+            4 => Message::InstallSnapshot {
+                term: d.u64()?,
+                leader: d.u64()?,
+                last_index: d.u64()?,
+                last_term: d.u64()?,
+                data: d.len_bytes()?.to_vec(),
+            },
+            5 => Message::InstallSnapshotResp { term: d.u64()?, last_index: d.u64()? },
+            other => bail!("rpc: unknown message tag {other}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn roundtrip(m: &Message) {
+        let enc = m.encode();
+        let dec = Message::decode(&enc).unwrap();
+        assert_eq!(&dec, m);
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        roundtrip(&Message::RequestVote { term: 5, candidate: 2, last_log_index: 10, last_log_term: 4 });
+        roundtrip(&Message::RequestVoteResp { term: 5, granted: true });
+        roundtrip(&Message::AppendEntries {
+            term: 7,
+            leader: 1,
+            prev_log_index: 3,
+            prev_log_term: 2,
+            entries: vec![
+                LogEntry { term: 7, index: 4, cmd: Command::Put { key: b"k".to_vec(), value: vec![9; 100] } },
+                LogEntry { term: 7, index: 5, cmd: Command::Delete { key: b"d".to_vec() } },
+                LogEntry { term: 7, index: 6, cmd: Command::Noop },
+            ],
+            leader_commit: 3,
+        });
+        roundtrip(&Message::AppendEntriesResp { term: 7, success: false, match_index: 2 });
+        roundtrip(&Message::InstallSnapshot { term: 9, leader: 3, last_index: 100, last_term: 8, data: vec![1, 2, 3] });
+        roundtrip(&Message::InstallSnapshotResp { term: 9, last_index: 100 });
+    }
+
+    #[test]
+    fn random_messages_roundtrip() {
+        prop::check("rpc-roundtrip", 300, |g| {
+            let m = match g.usize_in(0..4) {
+                0 => Message::RequestVote {
+                    term: g.u64(),
+                    candidate: g.u64_in(0..8),
+                    last_log_index: g.u64(),
+                    last_log_term: g.u64(),
+                },
+                1 => Message::AppendEntries {
+                    term: g.u64(),
+                    leader: g.u64_in(0..8),
+                    prev_log_index: g.u64(),
+                    prev_log_term: g.u64(),
+                    entries: g.vec(0..5, |g| LogEntry {
+                        term: g.u64(),
+                        index: g.u64(),
+                        cmd: if g.bool() {
+                            Command::Put { key: g.bytes(0..20), value: g.bytes(0..200) }
+                        } else {
+                            Command::Delete { key: g.bytes(0..20) }
+                        },
+                    }),
+                    leader_commit: g.u64(),
+                },
+                2 => Message::InstallSnapshot {
+                    term: g.u64(),
+                    leader: g.u64_in(0..8),
+                    last_index: g.u64(),
+                    last_term: g.u64(),
+                    data: g.bytes(0..500),
+                },
+                _ => Message::AppendEntriesResp { term: g.u64(), success: g.bool(), match_index: g.u64() },
+            };
+            let dec = Message::decode(&m.encode()).map_err(|e| e.to_string())?;
+            if dec != m {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(Message::decode(&[99, 1, 2]).is_err());
+        assert!(Message::decode(&[]).is_err());
+    }
+}

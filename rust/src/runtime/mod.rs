@@ -1,0 +1,186 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas `index_build` module
+//! (HLO text emitted by `python/compile/aot.py`) and run it from the
+//! GC path when constructing the Final Compacted Storage hash index.
+//!
+//! Python never runs here — the artifact was lowered once at build
+//! time (`make artifacts`); this module compiles the HLO text with the
+//! PJRT CPU client and executes it with concrete key batches.
+//!
+//! The wiring follows /opt/xla-example/load_hlo: HLO **text** (not a
+//! serialized proto) is the interchange format because jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects.
+
+use crate::gc::IndexBackend;
+use crate::vlog::hash::{canonicalize, KEY_WORDS};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Fixed batch the artifact was specialized to (see
+/// `python/compile/aot.py::BATCH` and `artifacts/manifest.json`).
+pub const BATCH: usize = 4096;
+
+/// Probes per key (python `model.BLOOM_K`).
+pub const BLOOM_K: usize = 4;
+
+/// Default artifact location relative to the repo root.
+pub fn default_artifact() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/index_build.hlo.txt")
+}
+
+/// One batch's outputs.
+#[derive(Debug)]
+pub struct PlanBatch {
+    pub h1: Vec<u32>,
+    pub h2: Vec<u32>,
+    pub bucket: Vec<u32>,
+    /// Row-major `[n][BLOOM_K]` bloom bit positions.
+    pub bloom_pos: Vec<u32>,
+}
+
+/// The XLA-backed index planner (L2 graph, containing the L1 Pallas
+/// kernel) — implements [`IndexBackend`] for the GC framework.
+pub struct IndexPlanner {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    batch: usize,
+}
+
+// The xla crate handles are thread-confined by default; we serialize
+// access through the Mutex above.
+unsafe impl Send for IndexPlanner {}
+unsafe impl Sync for IndexPlanner {}
+
+impl IndexPlanner {
+    /// Compile the HLO artifact on the PJRT CPU client.
+    pub fn load(path: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(Self { exe: Mutex::new(exe), batch: BATCH })
+    }
+
+    /// Load from the default artifacts directory if present.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&default_artifact())
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Run one padded batch through the compiled module.
+    fn run_batch(&self, words: &[u32], lens: &[u32], n_buckets: u32, bloom_mask: u32) -> Result<PlanBatch> {
+        debug_assert_eq!(words.len(), self.batch * KEY_WORDS);
+        debug_assert_eq!(lens.len(), self.batch);
+        let words_lit = xla::Literal::vec1(words).reshape(&[self.batch as i64, KEY_WORDS as i64])?;
+        let lens_lit = xla::Literal::vec1(lens);
+        let nb = xla::Literal::scalar(n_buckets);
+        let bm = xla::Literal::scalar(bloom_mask);
+        let exe = self.exe.lock().unwrap();
+        let result = exe.execute::<xla::Literal>(&[words_lit, lens_lit, nb, bm])?[0][0]
+            .to_literal_sync()?;
+        drop(exe);
+        // aot.py lowers with return_tuple=True: 4-tuple of u32 arrays.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len());
+        Ok(PlanBatch {
+            h1: parts[0].to_vec::<u32>()?,
+            h2: parts[1].to_vec::<u32>()?,
+            bucket: parts[2].to_vec::<u32>()?,
+            bloom_pos: parts[3].to_vec::<u32>()?,
+        })
+    }
+
+    /// Plan an arbitrary number of keys (pads the final batch).
+    pub fn plan_keys(&self, keys: &[&[u8]], n_buckets: u32, bloom_mask: u32) -> Result<PlanBatch> {
+        let n = keys.len();
+        let mut h1 = Vec::with_capacity(n);
+        let mut h2 = Vec::with_capacity(n);
+        let mut bucket = Vec::with_capacity(n);
+        let mut bloom = Vec::with_capacity(n * BLOOM_K);
+        let mut words = vec![0u32; self.batch * KEY_WORDS];
+        let mut lens = vec![0u32; self.batch];
+        for chunk in keys.chunks(self.batch) {
+            words.iter_mut().for_each(|w| *w = 0);
+            lens.iter_mut().for_each(|l| *l = 0);
+            for (i, k) in chunk.iter().enumerate() {
+                let (w, l) = canonicalize(k);
+                words[i * KEY_WORDS..(i + 1) * KEY_WORDS].copy_from_slice(&w);
+                lens[i] = l;
+            }
+            let out = self.run_batch(&words, &lens, n_buckets, bloom_mask)?;
+            h1.extend_from_slice(&out.h1[..chunk.len()]);
+            h2.extend_from_slice(&out.h2[..chunk.len()]);
+            bucket.extend_from_slice(&out.bucket[..chunk.len()]);
+            bloom.extend_from_slice(&out.bloom_pos[..chunk.len() * BLOOM_K]);
+        }
+        Ok(PlanBatch { h1, h2, bucket, bloom_pos: bloom })
+    }
+}
+
+impl IndexBackend for IndexPlanner {
+    fn plan(&self, keys: &[&[u8]], n_buckets: u32) -> Result<(Vec<u32>, Vec<u32>)> {
+        let out = self.plan_keys(keys, n_buckets.max(1), 0)?;
+        Ok((out.h1, out.bucket))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vlog::hash::hash_pair;
+
+    fn planner() -> Option<IndexPlanner> {
+        let p = default_artifact();
+        if !p.exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(IndexPlanner::load(&p).expect("load artifact"))
+    }
+
+    #[test]
+    fn xla_matches_rust_hash_bit_for_bit() {
+        let Some(pl) = planner() else { return };
+        let keys: Vec<Vec<u8>> = (0..300u32)
+            .map(|i| format!("user{i:08}").into_bytes())
+            .chain([b"".to_vec(), b"a".to_vec(), vec![0xffu8; 32]])
+            .collect();
+        let refs: Vec<&[u8]> = keys.iter().map(|k| k.as_slice()).collect();
+        let out = pl.plan_keys(&refs, 1021, (1 << 16) - 1).unwrap();
+        for (i, k) in refs.iter().enumerate() {
+            let (h1, h2) = hash_pair(k);
+            assert_eq!(out.h1[i], h1, "h1 mismatch for {k:?}");
+            assert_eq!(out.h2[i], h2, "h2 mismatch for {k:?}");
+            assert_eq!(out.bucket[i], h1 % 1021);
+            for j in 0..BLOOM_K {
+                let want = h1.wrapping_add((j as u32).wrapping_mul(h2)) & ((1 << 16) - 1);
+                assert_eq!(out.bloom_pos[i * BLOOM_K + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn padding_does_not_leak_between_batches() {
+        let Some(pl) = planner() else { return };
+        // A batch of 1 and a batch of BATCH+1 must agree on shared keys.
+        let single: Vec<&[u8]> = vec![b"shared-key"];
+        let a = pl.plan_keys(&single, 64, 255).unwrap();
+        let many_owned: Vec<Vec<u8>> = (0..BATCH + 1)
+            .map(|i| if i == 0 { b"shared-key".to_vec() } else { format!("k{i}").into_bytes() })
+            .collect();
+        let many: Vec<&[u8]> = many_owned.iter().map(|k| k.as_slice()).collect();
+        let b = pl.plan_keys(&many, 64, 255).unwrap();
+        assert_eq!(a.h1[0], b.h1[0]);
+        assert_eq!(a.bucket[0], b.bucket[0]);
+        assert_eq!(b.h1.len(), BATCH + 1);
+    }
+}

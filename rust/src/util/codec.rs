@@ -1,0 +1,248 @@
+//! Little-endian binary codec used for every on-disk and on-wire format
+//! in the repo (WAL records, SSTable blocks, ValueLog entries, Raft
+//! RPCs).  Hand-rolled because serde/prost are unavailable offline —
+//! and because a storage engine wants explicit layouts anyway.
+
+use anyhow::{bail, Result};
+
+/// Append-only byte encoder.
+#[derive(Default, Debug)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self { buf: Vec::with_capacity(n) }
+    }
+
+    #[inline]
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    #[inline]
+    pub fn u16(&mut self, v: u16) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    #[inline]
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    #[inline]
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// LEB128 variable-length unsigned int (1–10 bytes).
+    #[inline]
+    pub fn varint(&mut self, mut v: u64) -> &mut Self {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(b);
+                return self;
+            }
+            self.buf.push(b | 0x80);
+        }
+    }
+
+    #[inline]
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.buf.extend_from_slice(v);
+        self
+    }
+
+    /// varint length prefix + raw bytes.
+    #[inline]
+    pub fn len_bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.varint(v.len() as u64);
+        self.bytes(v)
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Overwrite 4 bytes at `pos` (for back-patched lengths/crcs).
+    pub fn patch_u32(&mut self, pos: usize, v: u32) {
+        self.buf[pos..pos + 4].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Forward-only byte decoder over a borrowed slice.
+#[derive(Debug)]
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("decode underflow: want {n}, have {}", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    #[inline]
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    #[inline]
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            if shift == 63 && b > 1 {
+                bail!("varint overflow");
+            }
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                bail!("varint too long");
+            }
+        }
+    }
+
+    #[inline]
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    /// Counterpart of [`Encoder::len_bytes`].
+    #[inline]
+    pub fn len_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.varint()? as usize;
+        self.take(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_fixed_width() {
+        let mut e = Encoder::new();
+        e.u8(0xab).u16(0xbeef).u32(0xdead_beef).u64(0x0123_4567_89ab_cdef);
+        let mut d = Decoder::new(e.as_slice());
+        assert_eq!(d.u8().unwrap(), 0xab);
+        assert_eq!(d.u16().unwrap(), 0xbeef);
+        assert_eq!(d.u32().unwrap(), 0xdead_beef);
+        assert_eq!(d.u64().unwrap(), 0x0123_4567_89ab_cdef);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn roundtrip_varint_boundaries() {
+        let cases = [
+            0u64, 1, 127, 128, 16383, 16384,
+            u32::MAX as u64, u64::MAX - 1, u64::MAX,
+        ];
+        let mut e = Encoder::new();
+        for &c in &cases {
+            e.varint(c);
+        }
+        let mut d = Decoder::new(e.as_slice());
+        for &c in &cases {
+            assert_eq!(d.varint().unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn roundtrip_len_bytes() {
+        let mut e = Encoder::new();
+        e.len_bytes(b"").len_bytes(b"hello").len_bytes(&vec![7u8; 300]);
+        let mut d = Decoder::new(e.as_slice());
+        assert_eq!(d.len_bytes().unwrap(), b"");
+        assert_eq!(d.len_bytes().unwrap(), b"hello");
+        assert_eq!(d.len_bytes().unwrap(), &vec![7u8; 300][..]);
+    }
+
+    #[test]
+    fn underflow_is_error_not_panic() {
+        let mut d = Decoder::new(&[0x80]); // truncated varint
+        assert!(d.varint().is_err());
+        let mut d = Decoder::new(&[1, 2]);
+        assert!(d.u32().is_err());
+    }
+
+    #[test]
+    fn patch_u32_backfills() {
+        let mut e = Encoder::new();
+        e.u32(0);
+        e.bytes(b"payload");
+        e.patch_u32(0, 7);
+        let mut d = Decoder::new(e.as_slice());
+        assert_eq!(d.u32().unwrap(), 7);
+    }
+
+    #[test]
+    fn varint_rejects_overlong() {
+        // 11 continuation bytes cannot be a valid u64 varint.
+        let bad = [0xffu8; 11];
+        assert!(Decoder::new(&bad).varint().is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Shared substrate utilities: binary codec, CRC framing, deterministic
+//! PRNG + Zipf sampling, latency histograms, and the in-repo
+//! property-testing harness (proptest is unavailable offline; see
+//! DESIGN.md §2).
+
+pub mod codec;
+pub mod hist;
+pub mod prop;
+pub mod rng;
+
+pub use codec::{Decoder, Encoder};
+pub use hist::Histogram;
+pub use rng::{Rng, Zipf};
+
+/// Monotonic wall-clock helper returning microseconds since an
+/// arbitrary epoch (process start).
+pub fn now_micros() -> u64 {
+    use std::time::Instant;
+    static START: once_cell::sync::Lazy<Instant> =
+        once_cell::sync::Lazy::new(Instant::now);
+    START.elapsed().as_micros() as u64
+}

@@ -1,0 +1,163 @@
+//! Minimal property-based testing harness (proptest is unavailable in
+//! the offline sandbox — DESIGN.md §2).
+//!
+//! Usage:
+//! ```ignore
+//! prop::check("name", 500, |g| {
+//!     let xs: Vec<u8> = g.vec(0..64, |g| g.u8());
+//!     // ... assert invariant, or return Err(msg)
+//!     Ok(())
+//! });
+//! ```
+//! Each case draws from a seeded generator; on failure the harness
+//! panics with the case seed so the exact input is reproducible by
+//! running the property once with [`check_one`].
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// Random input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), seed }
+    }
+
+    pub fn u8(&mut self) -> u8 {
+        self.rng.next_u64() as u8
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        if r.is_empty() {
+            return r.start;
+        }
+        self.rng.range(r.start as u64, r.end as u64) as usize
+    }
+
+    pub fn u64_in(&mut self, r: Range<u64>) -> u64 {
+        if r.is_empty() {
+            return r.start;
+        }
+        self.rng.range(r.start, r.end)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    /// Random bytes with length drawn from `len`.
+    pub fn bytes(&mut self, len: Range<usize>) -> Vec<u8> {
+        let n = self.usize_in(len);
+        let mut v = vec![0u8; n];
+        self.rng.fill(&mut v);
+        v
+    }
+
+    /// ASCII-ish key (printable, sortable) — nicer failure output than
+    /// raw bytes when testing ordered structures.
+    pub fn key(&mut self, len: Range<usize>) -> Vec<u8> {
+        let n = self.usize_in(len).max(1);
+        (0..n).map(|_| b'a' + (self.rng.below(26) as u8)).collect()
+    }
+
+    pub fn vec<T>(&mut self, len: Range<usize>, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0..xs.len())]
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with the failing seed.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    // Base seed is fixed for reproducible CI; mix the name in so
+    // distinct properties see distinct streams.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+    }
+    for i in 0..cases {
+        let seed = h ^ (i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property `{name}` failed (case {i}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single case by seed (for debugging a reported failure).
+pub fn check_one(seed: u64, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counter", 50, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failure_panics_with_seed() {
+        check("fails", 10, |g| {
+            if g.u8() as u32 >= 0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(123);
+        let mut b = Gen::new(123);
+        assert_eq!(a.bytes(0..32), b.bytes(0..32));
+        assert_eq!(a.key(1..10), b.key(1..10));
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut g = Gen::new(5);
+        for _ in 0..100 {
+            let v = g.usize_in(3..9);
+            assert!((3..9).contains(&v));
+            let k = g.key(2..5);
+            assert!((2..5).contains(&k.len()));
+            assert!(k.iter().all(|c| c.is_ascii_lowercase()));
+        }
+    }
+}

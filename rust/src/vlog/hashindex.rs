@@ -1,0 +1,331 @@
+//! Hash index over a sorted ValueLog (paper §III-C: "maintaining a
+//! hash index for key-to-offset mapping accelerates point queries,
+//! while the sequential organization of data enhances range query
+//! efficiency").
+//!
+//! Two structures in one file:
+//! * open-addressing table (linear probing) of `(h1, offset)` slots —
+//!   point lookups hit the home slot, then verify the full key against
+//!   the log entry (the canonical 16-byte-prefix hash can collide);
+//! * sparse ordered index (every `SPARSE_EVERY`-th key) — a range scan
+//!   binary-searches it for the start offset, then reads sequentially.
+//!
+//! The `(h1, bucket)` pairs can come from the pure-Rust hash
+//! ([`super::hash`]) or from the AOT XLA `index_build` artifact via
+//! [`crate::runtime::IndexPlanner`]; both produce identical tables
+//! (enforced by `rust/tests/xla_parity.rs`).
+
+use super::hash::hash_pair;
+use super::{Offset, SortedVLog};
+use crate::util::{Decoder, Encoder};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+const MAGIC: u64 = 0x4E5A_4849_4458_0001; // "NZHIDX" v1
+pub const SPARSE_EVERY: usize = 16;
+
+/// In-memory (and load/save-able) index.
+pub struct HashIndex {
+    /// Power-of-two slot array; `offset+1` stored so 0 = empty.
+    slots: Vec<(u32, u64)>,
+    mask: u32,
+    /// Sorted (key, offset) samples for range-start search.
+    sparse: Vec<(Vec<u8>, Offset)>,
+    pub entry_count: u64,
+}
+
+impl HashIndex {
+    /// Capacity for `n` keys at ~0.6 load factor, power of two.
+    pub fn capacity_for(n: usize) -> usize {
+        ((n * 5 / 3).max(8)).next_power_of_two()
+    }
+
+    /// Build from sorted `(key, offset)` pairs using the Rust-side
+    /// hash (bit-identical to the XLA planner path).
+    pub fn build(key_offsets: &[(Vec<u8>, Offset)]) -> Self {
+        let cap = Self::capacity_for(key_offsets.len());
+        let mut idx = Self {
+            slots: vec![(0, 0); cap],
+            mask: (cap - 1) as u32,
+            sparse: Vec::with_capacity(key_offsets.len() / SPARSE_EVERY + 1),
+            entry_count: key_offsets.len() as u64,
+        };
+        for (i, (key, off)) in key_offsets.iter().enumerate() {
+            let (h1, _) = hash_pair(key);
+            idx.insert_hashed(h1, h1 & idx.mask, *off);
+            if i % SPARSE_EVERY == 0 {
+                idx.sparse.push((key.clone(), *off));
+            }
+        }
+        idx
+    }
+
+    /// Build from externally computed hashes/buckets (the XLA
+    /// `index_build` path). `hashes[i]`/`buckets[i]` must correspond to
+    /// `key_offsets[i]`, and `buckets` must have been computed with
+    /// `n_buckets == capacity_for(len)`.
+    pub fn build_from_planner(
+        key_offsets: &[(Vec<u8>, Offset)],
+        hashes: &[u32],
+        buckets: &[u32],
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            hashes.len() == key_offsets.len() && buckets.len() == key_offsets.len(),
+            "planner output length mismatch"
+        );
+        let cap = Self::capacity_for(key_offsets.len());
+        let mut idx = Self {
+            slots: vec![(0, 0); cap],
+            mask: (cap - 1) as u32,
+            sparse: Vec::with_capacity(key_offsets.len() / SPARSE_EVERY + 1),
+            entry_count: key_offsets.len() as u64,
+        };
+        for (i, (key, off)) in key_offsets.iter().enumerate() {
+            idx.insert_hashed(hashes[i], buckets[i], *off);
+            if i % SPARSE_EVERY == 0 {
+                idx.sparse.push((key.clone(), *off));
+            }
+        }
+        Ok(idx)
+    }
+
+    fn insert_hashed(&mut self, h1: u32, bucket: u32, off: Offset) {
+        let mut slot = (bucket & self.mask) as usize;
+        loop {
+            if self.slots[slot].1 == 0 {
+                self.slots[slot] = (h1, off + 1);
+                return;
+            }
+            slot = (slot + 1) & self.mask as usize;
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Candidate offsets whose stored h1 matches `key`'s h1, in probe
+    /// order.  The caller verifies the full key against the log.
+    pub fn candidates(&self, key: &[u8]) -> Vec<Offset> {
+        let (h1, _) = hash_pair(key);
+        let mut out = Vec::new();
+        let mut slot = (h1 & self.mask) as usize;
+        loop {
+            let (sh, so) = self.slots[slot];
+            if so == 0 {
+                return out;
+            }
+            if sh == h1 {
+                out.push(so - 1);
+            }
+            slot = (slot + 1) & self.mask as usize;
+            if slot == (h1 & self.mask) as usize {
+                return out; // table full wrap (shouldn't happen at 0.6 load)
+            }
+        }
+    }
+
+    /// Verified point lookup against the sorted log.
+    pub fn lookup(&self, key: &[u8], log: &SortedVLog) -> Result<Option<super::Entry>> {
+        for off in self.candidates(key) {
+            let e = log.read(off).context("hashindex candidate read")?;
+            if e.key == key {
+                return Ok(Some(e));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Offset to start a sequential scan for keys `>= start`: the
+    /// sparse sample at or before `start` (one random read).
+    pub fn scan_start(&self, start: &[u8]) -> Offset {
+        if self.sparse.is_empty() {
+            return super::sorted::HEADER_LEN;
+        }
+        let i = self.sparse.partition_point(|(k, _)| k.as_slice() <= start);
+        if i == 0 {
+            super::sorted::HEADER_LEN
+        } else {
+            self.sparse[i - 1].1
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut e = Encoder::new();
+        e.u64(MAGIC);
+        e.u64(self.entry_count);
+        e.u32(self.mask);
+        e.varint(self.sparse.len() as u64);
+        for (k, o) in &self.sparse {
+            e.len_bytes(k).varint(*o);
+        }
+        e.varint(self.slots.len() as u64);
+        for (h, o) in &self.slots {
+            e.u32(*h).u64(*o);
+        }
+        let body = e.into_vec();
+        let mut framed = Encoder::with_capacity(body.len() + 8);
+        framed.u32(crc32fast::hash(&body)).bytes(&body);
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, framed.as_slice())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let buf = std::fs::read(path).with_context(|| format!("hashindex load {path:?}"))?;
+        let mut d = Decoder::new(&buf);
+        let crc = d.u32()?;
+        let body = d.bytes(d.remaining())?;
+        if crc32fast::hash(body) != crc {
+            bail!("hashindex crc mismatch");
+        }
+        let mut d = Decoder::new(body);
+        if d.u64()? != MAGIC {
+            bail!("hashindex bad magic");
+        }
+        let entry_count = d.u64()?;
+        let mask = d.u32()?;
+        let nsparse = d.varint()? as usize;
+        let mut sparse = Vec::with_capacity(nsparse);
+        for _ in 0..nsparse {
+            let k = d.len_bytes()?.to_vec();
+            let o = d.varint()?;
+            sparse.push((k, o));
+        }
+        let nslots = d.varint()? as usize;
+        anyhow::ensure!(nslots == mask as usize + 1, "hashindex size mismatch");
+        let mut slots = Vec::with_capacity(nslots);
+        for _ in 0..nslots {
+            let h = d.u32()?;
+            let o = d.u64()?;
+            slots.push((h, o));
+        }
+        Ok(Self { slots, mask, sparse, entry_count })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vlog::{Entry, SortedVLogWriter};
+    use std::path::PathBuf;
+
+    fn tmppath(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("nezha-hidx-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let p = d.join(name);
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn build_log(path: &Path, n: u32) -> (SortedVLog, Vec<(Vec<u8>, Offset)>) {
+        let mut w = SortedVLogWriter::create(path, 1, n as u64).unwrap();
+        for i in 0..n {
+            w.add(&Entry::put(1, i as u64, format!("key{i:06}"), format!("val{i}"))).unwrap();
+        }
+        let (_, kos) = w.finish().unwrap();
+        (SortedVLog::open(path).unwrap(), kos)
+    }
+
+    #[test]
+    fn lookup_finds_every_key() {
+        let p = tmppath("lookup");
+        let (log, kos) = build_log(&p, 1000);
+        let idx = HashIndex::build(&kos);
+        for i in 0..1000u32 {
+            let k = format!("key{i:06}");
+            let e = idx.lookup(k.as_bytes(), &log).unwrap().unwrap();
+            assert_eq!(e.value, Some(format!("val{i}").into_bytes()));
+        }
+    }
+
+    #[test]
+    fn lookup_misses_absent_keys() {
+        let p = tmppath("miss");
+        let (log, kos) = build_log(&p, 500);
+        let idx = HashIndex::build(&kos);
+        for i in 0..200u32 {
+            let k = format!("absent{i}");
+            assert!(idx.lookup(k.as_bytes(), &log).unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn scan_start_finds_position_at_or_before() {
+        let p = tmppath("scanstart");
+        let (log, kos) = build_log(&p, 200);
+        let idx = HashIndex::build(&kos);
+        let start = b"key000100";
+        let off = idx.scan_start(start);
+        let got = log.scan_from(off, start, b"key000110", 100).unwrap();
+        assert_eq!(got.len(), 10);
+        assert_eq!(got[0].key, start.to_vec());
+        // Start before everything:
+        let off0 = idx.scan_start(b"aaa");
+        assert_eq!(off0, crate::vlog::sorted::HEADER_LEN);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let plog = tmppath("slr.log");
+        let pidx = tmppath("slr.idx");
+        let (log, kos) = build_log(&plog, 300);
+        let idx = HashIndex::build(&kos);
+        idx.save(&pidx).unwrap();
+        let idx2 = HashIndex::load(&pidx).unwrap();
+        assert_eq!(idx2.entry_count, 300);
+        assert_eq!(idx2.capacity(), idx.capacity());
+        for i in (0..300u32).step_by(17) {
+            let k = format!("key{i:06}");
+            assert!(idx2.lookup(k.as_bytes(), &log).unwrap().is_some());
+        }
+    }
+
+    #[test]
+    fn planner_build_matches_rust_build() {
+        let p = tmppath("planner");
+        let (log, kos) = build_log(&p, 400);
+        let cap = HashIndex::capacity_for(kos.len()) as u32;
+        let (hashes, buckets): (Vec<u32>, Vec<u32>) = kos
+            .iter()
+            .map(|(k, _)| {
+                let (h1, _) = hash_pair(k);
+                (h1, h1 % cap)
+            })
+            .unzip();
+        let a = HashIndex::build(&kos);
+        let b = HashIndex::build_from_planner(&kos, &hashes, &buckets).unwrap();
+        assert_eq!(a.capacity(), b.capacity());
+        for i in 0..400u32 {
+            let k = format!("key{i:06}");
+            let ea = a.lookup(k.as_bytes(), &log).unwrap();
+            let eb = b.lookup(k.as_bytes(), &log).unwrap();
+            assert_eq!(ea, eb);
+        }
+    }
+
+    #[test]
+    fn colliding_prefix_keys_resolve_by_verification() {
+        // >16-byte keys with equal prefix + equal length hash equally;
+        // the index must disambiguate via the log.
+        let p = tmppath("collide");
+        let mut w = SortedVLogWriter::create(&p, 0, 0).unwrap();
+        let k1 = b"0123456789abcdefAAA".to_vec();
+        let k2 = b"0123456789abcdefBBB".to_vec();
+        w.add(&Entry::put(1, 1, k1.clone(), "one")).unwrap();
+        w.add(&Entry::put(1, 2, k2.clone(), "two")).unwrap();
+        let (_, kos) = w.finish().unwrap();
+        let log = SortedVLog::open(&p).unwrap();
+        let idx = HashIndex::build(&kos);
+        assert_eq!(idx.lookup(&k1, &log).unwrap().unwrap().value, Some(b"one".to_vec()));
+        assert_eq!(idx.lookup(&k2, &log).unwrap().unwrap().value, Some(b"two".to_vec()));
+    }
+
+    #[test]
+    fn empty_index_behaves() {
+        let idx = HashIndex::build(&[]);
+        assert!(idx.candidates(b"x").is_empty());
+        assert_eq!(idx.scan_start(b"x"), crate::vlog::sorted::HEADER_LEN);
+    }
+}

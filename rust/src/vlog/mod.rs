@@ -1,0 +1,152 @@
+//! ValueLog — the heart of KVS-Raft (paper §III-B).
+//!
+//! In Nezha a client value is persisted **exactly once**: serialized
+//! together with its consensus metadata (term, index) into the
+//! append-only ValueLog at Raft log-append time.  The state machine
+//! then stores only the lightweight `(key → offset)` mapping.
+//!
+//! * [`log`] — the unordered, append-only ValueLog written on the hot
+//!   path (Active/New storage modules).
+//! * [`sorted`] — the key-ordered ValueLog produced by GC (Final
+//!   Compacted Storage), doubling as the Raft snapshot (it carries
+//!   `last_term`/`last_index` per §III-C).
+//! * [`hashindex`] — the open-addressing hash index over a sorted
+//!   ValueLog that gives Nezha its point-lookup edge (built either in
+//!   Rust or from the AOT XLA `index_build` artifact).
+//! * [`hash`] — the key hash, bit-identical to the L1 Pallas kernel.
+
+pub mod hash;
+pub mod hashindex;
+pub mod log;
+pub mod sorted;
+
+pub use hashindex::HashIndex;
+pub use log::{VLog, VLogReader};
+pub use sorted::{SortedVLog, SortedVLogWriter};
+
+/// One ValueLog record: the key-value pair plus the Raft metadata that
+/// makes the log usable for consensus recovery (paper §III-B step 3).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Entry {
+    pub term: u64,
+    pub index: u64,
+    pub key: Vec<u8>,
+    /// `None` encodes a tombstone (delete).
+    pub value: Option<Vec<u8>>,
+}
+
+impl Entry {
+    pub fn put(term: u64, index: u64, key: impl Into<Vec<u8>>, value: impl Into<Vec<u8>>) -> Self {
+        Self { term, index, key: key.into(), value: Some(value.into()) }
+    }
+
+    pub fn delete(term: u64, index: u64, key: impl Into<Vec<u8>>) -> Self {
+        Self { term, index, key: key.into(), value: None }
+    }
+
+    /// Approximate serialized size (for GC trigger accounting).
+    pub fn approx_len(&self) -> usize {
+        24 + self.key.len() + self.value.as_ref().map_or(0, |v| v.len())
+    }
+}
+
+/// Offset of an entry within a ValueLog file.
+pub type Offset = u64;
+
+/// A value reference: which ValueLog epoch file, and where in it.
+/// This 12-byte token is what Nezha's state machine stores in place of
+/// the value (paper §III-B step 5) — epoch 0 is the first Active
+/// Storage ValueLog; each GC cycle rotates to a new epoch (the New
+/// Storage's log, which becomes the next Active log).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct VRef {
+    pub epoch: u32,
+    pub off: Offset,
+}
+
+impl VRef {
+    pub const ENCODED_LEN: usize = 12;
+
+    pub fn new(epoch: u32, off: Offset) -> Self {
+        Self { epoch, off }
+    }
+
+    pub fn encode(&self) -> [u8; Self::ENCODED_LEN] {
+        let mut b = [0u8; Self::ENCODED_LEN];
+        b[0..4].copy_from_slice(&self.epoch.to_le_bytes());
+        b[4..12].copy_from_slice(&self.off.to_le_bytes());
+        b
+    }
+
+    pub fn decode(buf: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(buf.len() == Self::ENCODED_LEN, "bad VRef length {}", buf.len());
+        Ok(Self {
+            epoch: u32::from_le_bytes(buf[0..4].try_into().unwrap()),
+            off: u64::from_le_bytes(buf[4..12].try_into().unwrap()),
+        })
+    }
+}
+
+/// Lazily-opened read-only handles over the epoch ValueLog files of a
+/// Raft log directory.  The engines' read paths resolve stored
+/// [`VRef`]s through this (Algorithm 2's `ReadValue(currentLog/oldLog,
+/// offset)`); the GC thread uses its own instance.
+pub struct EpochReaders {
+    dir: std::path::PathBuf,
+    readers: std::sync::Mutex<std::collections::HashMap<u32, std::sync::Arc<VLogReader>>>,
+}
+
+impl EpochReaders {
+    pub fn new(dir: impl Into<std::path::PathBuf>) -> Self {
+        Self { dir: dir.into(), readers: std::sync::Mutex::new(Default::default()) }
+    }
+
+    fn reader(&self, epoch: u32) -> anyhow::Result<std::sync::Arc<VLogReader>> {
+        let mut g = self.readers.lock().unwrap();
+        if let Some(r) = g.get(&epoch) {
+            return Ok(std::sync::Arc::clone(r));
+        }
+        let path = crate::raft::log::epoch_path(&self.dir, epoch);
+        let r = std::sync::Arc::new(VLogReader::open(&path)?);
+        g.insert(epoch, std::sync::Arc::clone(&r));
+        Ok(r)
+    }
+
+    /// Resolve a stored reference to its full entry.
+    pub fn read(&self, vref: VRef) -> anyhow::Result<Entry> {
+        // The write path buffers up to 1 MiB before the file owns the
+        // bytes; engines only hold VRefs for *applied* (hence flushed)
+        // entries, so a plain file read suffices.  A reader opened
+        // before the entry hit the file just needs a retry-once.
+        match self.reader(vref.epoch)?.read(vref.off) {
+            Ok(e) => Ok(e),
+            Err(_) => {
+                self.readers.lock().unwrap().remove(&vref.epoch);
+                self.reader(vref.epoch)?.read(vref.off)
+            }
+        }
+    }
+
+    /// Drop cached handles for epochs `< min_epoch` (after GC deletes
+    /// the files).
+    pub fn invalidate_below(&self, min_epoch: u32) {
+        self.readers.lock().unwrap().retain(|&e, _| e >= min_epoch);
+    }
+}
+
+#[cfg(test)]
+mod vref_tests {
+    use super::VRef;
+
+    #[test]
+    fn vref_roundtrip() {
+        let v = VRef::new(7, 0xDEAD_BEEF_1234);
+        assert_eq!(VRef::decode(&v.encode()).unwrap(), v);
+    }
+
+    #[test]
+    fn vref_rejects_bad_length() {
+        assert!(VRef::decode(&[0u8; 11]).is_err());
+        assert!(VRef::decode(&[0u8; 13]).is_err());
+    }
+}

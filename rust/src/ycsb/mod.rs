@@ -1,0 +1,274 @@
+//! YCSB workload generator (Table II of the paper).
+//!
+//! | Workload | Write type | Query type  | Mix                |
+//! |----------|-----------|-------------|--------------------|
+//! | Load     | Insert    | —           | insert only        |
+//! | A        | Update    | Point       | 50% write 50% read |
+//! | B        | Update    | Point       | 5% write 95% read  |
+//! | C        | —         | Point       | read only          |
+//! | D        | Insert    | Point       | 5% write 95% read  |
+//! | E        | Insert    | Range       | 5% write 95% scan  |
+//! | F        | RMW       | Point       | 50% write 50% read |
+//!
+//! Keys are zero-padded (`user<rank>`) so range scans are meaningful;
+//! the request distribution is Zipf(0.99) like YCSB's default.
+
+use crate::util::{Rng, Zipf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    Load,
+    A,
+    B,
+    C,
+    D,
+    E,
+    F,
+}
+
+impl WorkloadKind {
+    pub const ALL: [WorkloadKind; 6] =
+        [WorkloadKind::A, WorkloadKind::B, WorkloadKind::C, WorkloadKind::D, WorkloadKind::E, WorkloadKind::F];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::Load => "Load",
+            WorkloadKind::A => "A",
+            WorkloadKind::B => "B",
+            WorkloadKind::C => "C",
+            WorkloadKind::D => "D",
+            WorkloadKind::E => "E",
+            WorkloadKind::F => "F",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_uppercase().as_str() {
+            "LOAD" => WorkloadKind::Load,
+            "A" => WorkloadKind::A,
+            "B" => WorkloadKind::B,
+            "C" => WorkloadKind::C,
+            "D" => WorkloadKind::D,
+            "E" => WorkloadKind::E,
+            "F" => WorkloadKind::F,
+            _ => return None,
+        })
+    }
+
+    /// (read, update, insert, scan, rmw) proportions.
+    fn mix(&self) -> (f64, f64, f64, f64, f64) {
+        match self {
+            WorkloadKind::Load => (0.0, 0.0, 1.0, 0.0, 0.0),
+            WorkloadKind::A => (0.5, 0.5, 0.0, 0.0, 0.0),
+            WorkloadKind::B => (0.95, 0.05, 0.0, 0.0, 0.0),
+            WorkloadKind::C => (1.0, 0.0, 0.0, 0.0, 0.0),
+            WorkloadKind::D => (0.95, 0.0, 0.05, 0.0, 0.0),
+            WorkloadKind::E => (0.0, 0.0, 0.05, 0.95, 0.0),
+            WorkloadKind::F => (0.5, 0.0, 0.0, 0.0, 0.5),
+        }
+    }
+}
+
+/// One generated operation.
+#[derive(Clone, Debug)]
+pub enum Op {
+    Read(Vec<u8>),
+    Update(Vec<u8>, Vec<u8>),
+    Insert(Vec<u8>, Vec<u8>),
+    /// (start key, number of records)
+    Scan(Vec<u8>, usize),
+    /// Read-modify-write.
+    Rmw(Vec<u8>, Vec<u8>),
+}
+
+impl Op {
+    pub fn is_write(&self) -> bool {
+        matches!(self, Op::Update(..) | Op::Insert(..) | Op::Rmw(..))
+    }
+
+    pub fn is_scan(&self) -> bool {
+        matches!(self, Op::Scan(..))
+    }
+}
+
+/// Workload generator state.
+pub struct Generator {
+    kind: WorkloadKind,
+    rng: Rng,
+    zipf: Zipf,
+    /// Keyspace size (grows on insert).
+    records: u64,
+    value_size: usize,
+    max_scan_len: usize,
+    value_seed: u64,
+}
+
+pub const KEY_PREFIX: &str = "user";
+
+/// Rank -> key. Zero-padded so lexicographic order == numeric order.
+pub fn key_of(rank: u64) -> Vec<u8> {
+    format!("{KEY_PREFIX}{rank:012}").into_bytes()
+}
+
+impl Generator {
+    pub fn new(kind: WorkloadKind, records: u64, value_size: usize, seed: u64) -> Self {
+        let records = records.max(1);
+        Self {
+            kind,
+            rng: Rng::new(seed),
+            zipf: Zipf::new(records, 0.99),
+            records,
+            value_size,
+            max_scan_len: 100,
+            value_seed: seed ^ 0xBEEF,
+        }
+    }
+
+    pub fn with_scan_len(mut self, n: usize) -> Self {
+        self.max_scan_len = n;
+        self
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// Deterministic value for a key (cheap fill, compressible like
+    /// YCSB's field payloads).
+    pub fn value_for(&mut self, tag: u64) -> Vec<u8> {
+        let mut v = vec![0u8; self.value_size];
+        let mut s = self.value_seed ^ tag;
+        // Fill sparsely: every 64th byte varies; rest constant. Fast
+        // and stops trivial dedup.
+        for (i, b) in v.iter_mut().enumerate().step_by(61) {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+            *b = (s >> 33) as u8 ^ i as u8;
+        }
+        v
+    }
+
+    fn hot_key(&mut self) -> Vec<u8> {
+        let rank = self.zipf.sample(&mut self.rng);
+        key_of(rank)
+    }
+
+    pub fn next_op(&mut self) -> Op {
+        let (read, update, insert, scan, _rmw) = self.kind.mix();
+        let x = self.rng.f64();
+        if x < read {
+            Op::Read(self.hot_key())
+        } else if x < read + update {
+            let k = self.hot_key();
+            let tag = self.rng.next_u64();
+            let v = self.value_for(tag);
+            Op::Update(k, v)
+        } else if x < read + update + insert {
+            let rank = self.records;
+            self.records += 1;
+            // Keep the zipf head over the growing keyspace (cheap
+            // approximation: rebuild every 64k inserts).
+            if self.records % 65536 == 0 {
+                self.zipf = Zipf::new(self.records, 0.99);
+            }
+            let v = self.value_for(rank);
+            Op::Insert(key_of(rank), v)
+        } else if x < read + update + insert + scan {
+            let len = (self.rng.below(self.max_scan_len as u64) + 1) as usize;
+            Op::Scan(self.hot_key(), len)
+        } else {
+            let k = self.hot_key();
+            let tag = self.rng.next_u64();
+            let v = self.value_for(tag);
+            Op::Rmw(k, v)
+        }
+    }
+
+    /// The full load sequence (insert-only).
+    pub fn load_ops(records: u64, value_size: usize, seed: u64) -> impl Iterator<Item = (Vec<u8>, Vec<u8>)> {
+        let mut g = Generator::new(WorkloadKind::Load, 1, value_size, seed);
+        (0..records).map(move |r| (key_of(r), g.value_for(r)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_order_is_lexicographic() {
+        assert!(key_of(9) < key_of(10));
+        assert!(key_of(999_999) < key_of(1_000_000));
+    }
+
+    #[test]
+    fn mixes_sum_to_one() {
+        for k in [WorkloadKind::Load, WorkloadKind::A, WorkloadKind::B, WorkloadKind::C, WorkloadKind::D, WorkloadKind::E, WorkloadKind::F] {
+            let (r, u, i, s, m) = k.mix();
+            assert!((r + u + i + s + m - 1.0).abs() < 1e-9, "{k:?}");
+        }
+    }
+
+    #[test]
+    fn workload_a_is_half_writes() {
+        let mut g = Generator::new(WorkloadKind::A, 10_000, 64, 1);
+        let writes = (0..10_000).filter(|_| g.next_op().is_write()).count();
+        assert!((4_000..6_000).contains(&writes), "writes={writes}");
+    }
+
+    #[test]
+    fn workload_c_is_read_only() {
+        let mut g = Generator::new(WorkloadKind::C, 1_000, 64, 2);
+        assert!((0..5_000).all(|_| !g.next_op().is_write()));
+    }
+
+    #[test]
+    fn workload_e_scans_dominate() {
+        let mut g = Generator::new(WorkloadKind::E, 1_000, 64, 3).with_scan_len(50);
+        let mut scans = 0;
+        for _ in 0..2_000 {
+            match g.next_op() {
+                Op::Scan(_, len) => {
+                    scans += 1;
+                    assert!((1..=50).contains(&len));
+                }
+                Op::Insert(..) => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(scans > 1_700, "scans={scans}");
+    }
+
+    #[test]
+    fn inserts_extend_keyspace() {
+        let mut g = Generator::new(WorkloadKind::D, 100, 16, 4);
+        let before = g.records();
+        let mut inserted = Vec::new();
+        for _ in 0..2_000 {
+            if let Op::Insert(k, _) = g.next_op() {
+                inserted.push(k);
+            }
+        }
+        assert!(g.records() > before);
+        // Inserted keys are fresh and increasing.
+        for w in inserted.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let ops1: Vec<String> = {
+            let mut g = Generator::new(WorkloadKind::A, 1000, 32, 9);
+            (0..50).map(|_| format!("{:?}", g.next_op())).collect()
+        };
+        let mut g = Generator::new(WorkloadKind::A, 1000, 32, 9);
+        let ops2: Vec<String> = (0..50).map(|_| format!("{:?}", g.next_op())).collect();
+        assert_eq!(ops1, ops2);
+    }
+
+    #[test]
+    fn values_have_requested_size() {
+        let mut g = Generator::new(WorkloadKind::A, 10, 16 << 10, 5);
+        assert_eq!(g.value_for(3).len(), 16 << 10);
+    }
+}

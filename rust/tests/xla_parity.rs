@@ -1,0 +1,118 @@
+//! End-to-end three-layer parity: a full GC cycle whose hash index is
+//! built through the AOT XLA/Pallas artifact must produce a
+//! byte-identical index (and identical lookups) to the pure-Rust
+//! backend.  This is the L1↔L3 contract of DESIGN.md §1.
+//!
+//! Skipped gracefully when `artifacts/` has not been built
+//! (`make artifacts`).
+
+use nezha::gc::{run_gc, FinalStorage, GcInputs, IndexBackend, RustBackend};
+use nezha::runtime::IndexPlanner;
+use nezha::vlog::{Entry, VLog};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn planner() -> Option<Arc<IndexPlanner>> {
+    match IndexPlanner::load_default() {
+        Ok(p) => Some(Arc::new(p)),
+        Err(e) => {
+            eprintln!("skipping xla parity test: {e:#}");
+            None
+        }
+    }
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("nezha-xlapar-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn write_epoch(dir: &PathBuf, n: u64) -> PathBuf {
+    let p = dir.join("raft-000000.vlog");
+    let mut v = VLog::open(&p).unwrap();
+    for i in 0..n {
+        // Mix of sizes + some overwrites + deletes.
+        let key = format!("user{:010}", (i * 7) % (n * 3 / 4).max(1));
+        if i % 17 == 3 {
+            v.append(&Entry::delete(1, i + 1, key)).unwrap();
+        } else {
+            v.append(&Entry::put(1, i + 1, key, vec![(i % 251) as u8; 64 + (i as usize % 512)]))
+                .unwrap();
+        }
+    }
+    v.sync().unwrap();
+    p
+}
+
+#[test]
+fn gc_cycle_identical_under_both_backends() {
+    let Some(xla) = planner() else { return };
+    let n = 6_000u64;
+
+    let dir_rust = tmpdir("rust");
+    let dir_xla = tmpdir("xla");
+    let vlog_rust = write_epoch(&dir_rust, n);
+    let vlog_xla = write_epoch(&dir_xla, n);
+
+    let out_rust = run_gc(&GcInputs {
+        frozen_vlog_path: vlog_rust,
+        prev_gen: None,
+        dir: dir_rust.clone(),
+        out_gen: 1,
+        last_index: n,
+        last_term: 1,
+        resume: false,
+        backend: Arc::new(RustBackend),
+    })
+    .unwrap();
+    let out_xla = run_gc(&GcInputs {
+        frozen_vlog_path: vlog_xla,
+        prev_gen: None,
+        dir: dir_xla.clone(),
+        out_gen: 1,
+        last_index: n,
+        last_term: 1,
+        resume: false,
+        backend: xla,
+    })
+    .unwrap();
+
+    assert_eq!(out_rust.entries, out_xla.entries);
+    assert_eq!(out_rust.bytes_written, out_xla.bytes_written);
+    assert_eq!(out_rust.index_backend, "rust");
+    assert_eq!(out_xla.index_backend, "xla");
+
+    // The data files and index files must be byte-identical.
+    let d_rust = std::fs::read(nezha::gc::sorted_path(&dir_rust, 1)).unwrap();
+    let d_xla = std::fs::read(nezha::gc::sorted_path(&dir_xla, 1)).unwrap();
+    assert_eq!(d_rust, d_xla, "sorted vlogs differ");
+    let i_rust = std::fs::read(nezha::gc::index_path(&dir_rust, 1)).unwrap();
+    let i_xla = std::fs::read(nezha::gc::index_path(&dir_xla, 1)).unwrap();
+    assert_eq!(i_rust, i_xla, "hash index files differ");
+
+    // And lookups behave identically.
+    let fs_rust = FinalStorage::open(&dir_rust, 1).unwrap();
+    let fs_xla = FinalStorage::open(&dir_xla, 1).unwrap();
+    for q in 0..500u64 {
+        let key = format!("user{:010}", q * 13 % (n * 3 / 4));
+        let a = fs_rust.get(key.as_bytes()).unwrap();
+        let b = fs_xla.get(key.as_bytes()).unwrap();
+        assert_eq!(a, b, "lookup mismatch for {key}");
+    }
+}
+
+#[test]
+fn planner_bucket_stream_matches_rust_for_odd_sizes() {
+    let Some(xla) = planner() else { return };
+    // Exercise non-multiple-of-batch sizes and odd bucket counts.
+    for (n, buckets) in [(1usize, 7u32), (4095, 1021), (4097, 65536), (9000, 12345)] {
+        let keys: Vec<Vec<u8>> = (0..n).map(|i| format!("key-{i}").into_bytes()).collect();
+        let refs: Vec<&[u8]> = keys.iter().map(|k| k.as_slice()).collect();
+        let (hx, bx) = xla.plan(&refs, buckets).unwrap();
+        let (hr, br) = RustBackend.plan(&refs, buckets).unwrap();
+        assert_eq!(hx, hr, "hash stream n={n}");
+        assert_eq!(bx, br, "bucket stream n={n} buckets={buckets}");
+    }
+}
