@@ -1,7 +1,10 @@
 //! Figure 5 — **point-query** throughput + latency vs value size.
 //! Loads the dataset, lets GC settle (paper: 100 GB load with two GC
-//! cycles), then issues Zipf point queries.  Paper headline: Nezha
-//! +12.5% over Original; Nezha-NoGC −21.3% (offset-lookup overhead).
+//! cycles), then issues Zipf point queries through the batched
+//! `Cluster::get_batch` path (one leader round-trip per `GET_BATCH`
+//! keys, epoch-grouped ValueLog resolution behind it).  Paper
+//! headline: Nezha +12.5% over Original; Nezha-NoGC −21.3%
+//! (offset-lookup overhead).
 //!
 //! Run: `cargo bench --bench fig5_get`.
 
@@ -23,6 +26,18 @@ fn main() -> anyhow::Result<()> {
             env.settle()?;
             let m = env.run_gets(gets, &format!("{}KB", vs >> 10))?;
             println!("{}", m.row());
+            let st = env.leader_stats()?;
+            // Only engines with a readahead cache (Nezha/NoGC) get the
+            // line; Dwisckey reads its vlog uncached.
+            if st.readahead_hits + st.readahead_misses > 0 {
+                println!(
+                    "            readahead: {} hits / {} misses ({:.1}% hit rate, {} vlog reads)",
+                    st.readahead_hits,
+                    st.readahead_misses,
+                    st.readahead_hit_rate() * 100.0,
+                    st.vlog_reads
+                );
+            }
             if kind == EngineKind::Nezha {
                 nezha_tp.push(m.ops_per_sec());
             }

@@ -1,7 +1,9 @@
 //! Figure 6 — **range-query** throughput + latency vs value size
 //! (paper scans 4 GB out of the 100 GB dataset → we scan ~4% of the
-//! scaled load per query batch).  Paper headline: Nezha +72.6% over
-//! Original; Nezha-NoGC −39.5% (random I/O over the unsorted vLog).
+//! scaled load per query batch).  Scans resolve their surviving value
+//! references in one batched, readahead-cached ValueLog pass per
+//! query.  Paper headline: Nezha +72.6% over Original; Nezha-NoGC
+//! −39.5% (random I/O over the unsorted vLog).
 //!
 //! Run: `cargo bench --bench fig6_scan`.
 
@@ -26,6 +28,18 @@ fn main() -> anyhow::Result<()> {
             env.settle()?;
             let m = env.run_scans(scans, scan_len, &format!("{}KB", vs >> 10))?;
             println!("{}", m.row());
+            let st = env.leader_stats()?;
+            // Only engines with a readahead cache (Nezha/NoGC) get the
+            // line; Dwisckey reads its vlog uncached.
+            if st.readahead_hits + st.readahead_misses > 0 {
+                println!(
+                    "            readahead: {} hits / {} misses ({:.1}% hit rate, {} vlog reads)",
+                    st.readahead_hits,
+                    st.readahead_misses,
+                    st.readahead_hit_rate() * 100.0,
+                    st.vlog_reads
+                );
+            }
             if kind == EngineKind::Nezha {
                 nezha_tp.push(m.mib_per_sec());
             }

@@ -35,6 +35,12 @@ pub enum Req {
         key: Vec<u8>,
         resp: SyncSender<Result<Option<Vec<u8>>>>,
     },
+    /// Batched point read: the whole batch crosses the replica channel
+    /// once and resolves through the engine's batched read path.
+    MultiGet {
+        keys: Vec<Vec<u8>>,
+        resp: SyncSender<Result<Vec<Option<Vec<u8>>>>>,
+    },
     Scan {
         start: Vec<u8>,
         end: Vec<u8>,
@@ -257,6 +263,19 @@ impl Cluster {
         })
     }
 
+    /// Batched point read: one leader round-trip for the whole batch,
+    /// one result per key in input order.
+    pub fn get_batch(&self, keys: &[Vec<u8>]) -> Result<Vec<Option<Vec<u8>>>> {
+        if keys.is_empty() {
+            return Ok(Vec::new());
+        }
+        let keys = keys.to_vec();
+        self.at_leader(move || {
+            let (tx, rx) = mpsc::sync_channel(1);
+            (Req::MultiGet { keys: keys.clone(), resp: tx }, rx)
+        })
+    }
+
     pub fn scan(&self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
         let (start, end) = (start.to_vec(), end.to_vec());
         self.at_leader(move || {
@@ -426,6 +445,14 @@ fn node_loop(
                     };
                     let _ = resp.send(r);
                 }
+                Req::MultiGet { keys, resp } => {
+                    let r = if replica.node.is_leader() {
+                        replica.engine().multi_get(&keys)
+                    } else {
+                        Err(anyhow!("not leader (hint {:?})", replica.node.leader_hint()))
+                    };
+                    let _ = resp.send(r);
+                }
                 Req::Scan { start, end, limit, resp } => {
                     let r = if replica.node.is_leader() {
                         replica.engine().scan(&start, &end, limit)
@@ -554,6 +581,26 @@ mod tests {
             .collect();
         cluster.put_batch(ops).unwrap();
         assert_eq!(cluster.get(b"b099").unwrap(), Some(vec![99u8; 32]));
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn get_batch_matches_single_gets() {
+        let cluster = Cluster::start(cfg("mget", EngineKind::Nezha, 3)).unwrap();
+        for i in 0..40u32 {
+            cluster.put(format!("m{i:03}").as_bytes(), format!("v{i}").as_bytes()).unwrap();
+        }
+        cluster.delete(b"m007").unwrap();
+        let keys: Vec<Vec<u8>> = ["m000", "m007", "m025", "m039", "nope"]
+            .iter()
+            .map(|k| k.as_bytes().to_vec())
+            .collect();
+        let batched = cluster.get_batch(&keys).unwrap();
+        assert_eq!(batched.len(), keys.len());
+        for (k, b) in keys.iter().zip(&batched) {
+            assert_eq!(*b, cluster.get(k).unwrap(), "{}", String::from_utf8_lossy(k));
+        }
+        assert!(cluster.get_batch(&[]).unwrap().is_empty());
         cluster.shutdown().unwrap();
     }
 

@@ -134,6 +134,13 @@ impl KvEngine for ClassicEngine {
         self.db.get(key)
     }
 
+    /// Batched point read.  Values are stored inline in the LSM, so
+    /// there is no reference resolution to batch — the win for the
+    /// classic engines is the single coordinator channel crossing.
+    fn multi_get(&mut self, keys: &[Vec<u8>]) -> Result<Vec<Option<Vec<u8>>>> {
+        keys.iter().map(|k| self.get(k)).collect()
+    }
+
     fn scan(&mut self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
         self.scans += 1;
         if self.follower_fastpath() {
@@ -157,6 +164,10 @@ impl KvEngine for ClassicEngine {
             gc_cycles: 0,
             gets: self.gets,
             scans: self.scans,
+            vlog_reads: 0,
+            vlog_read_bytes: 0,
+            readahead_hits: 0,
+            readahead_misses: 0,
         }
     }
 }

@@ -130,6 +130,14 @@ pub struct EngineStats {
     pub gc_cycles: u64,
     pub gets: u64,
     pub scans: u64,
+    /// ValueLog entries resolved on the read path.
+    pub vlog_reads: u64,
+    /// Payload bytes those resolutions returned.
+    pub vlog_read_bytes: u64,
+    /// Readahead-cache hits/misses on the ValueLog read path (Nezha's
+    /// batched resolution; zero for engines without value separation).
+    pub readahead_hits: u64,
+    pub readahead_misses: u64,
 }
 
 impl EngineStats {
@@ -137,6 +145,17 @@ impl EngineStats {
     /// which the replica accounts separately).
     pub fn engine_write_bytes(&self) -> u64 {
         self.wal_bytes + self.flush_bytes + self.compact_bytes + self.engine_vlog_bytes
+    }
+
+    /// Readahead cache hit rate in `[0, 1]` (0 when the cache was never
+    /// touched).
+    pub fn readahead_hit_rate(&self) -> f64 {
+        let total = self.readahead_hits + self.readahead_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.readahead_hits as f64 / total as f64
+        }
     }
 }
 
@@ -147,7 +166,20 @@ pub trait KvEngine: StateMachine {
     /// Linearizable-at-the-leader point read (Algorithm 2).
     fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>>;
 
+    /// Batched point read: one result per key, in input order.  Must be
+    /// observably identical to calling [`get`] per key; engines with
+    /// value separation override it to resolve all references in one
+    /// epoch-grouped, offset-sorted ValueLog pass.
+    ///
+    /// [`get`]: KvEngine::get
+    fn multi_get(&mut self, keys: &[Vec<u8>]) -> Result<Vec<Option<Vec<u8>>>> {
+        keys.iter().map(|k| self.get(k)).collect()
+    }
+
     /// Range scan (Algorithm 3): `[start, end)`, at most `limit` rows.
+    /// `limit` is an iterator budget, not a row guarantee — engines may
+    /// count recently-deleted keys in the range toward it and return
+    /// fewer rows.
     fn scan(&mut self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<(Vec<u8>, Vec<u8>)>>;
 
     /// Group-commit durability point for engine-side files.
@@ -190,6 +222,10 @@ impl StateMachine for Box<dyn KvEngine> {
 
     fn install_snapshot(&mut self, data: &[u8], li: u64, lt: u64) -> Result<()> {
         (**self).install_snapshot(data, li, lt)
+    }
+
+    fn on_log_truncated(&mut self, live_epoch: u32) {
+        (**self).on_log_truncated(live_epoch)
     }
 }
 

@@ -25,6 +25,10 @@ pub fn bench_scale() -> f64 {
         .unwrap_or(0.5)
 }
 
+/// Point reads folded into one leader round-trip (the read analogue of
+/// the coordinator's write-side fold).
+pub const GET_BATCH: usize = 16;
+
 /// One experiment configuration.
 #[derive(Clone, Debug)]
 pub struct Spec {
@@ -176,19 +180,31 @@ impl Env {
         })
     }
 
-    /// Issue `n` Zipf point queries.
+    /// Issue `n` Zipf point queries, `GET_BATCH` at a time through
+    /// [`Cluster::get_batch`] (one replica-channel crossing and one
+    /// batched engine resolution per chunk); latency is recorded
+    /// per-op as the batch mean, like the write path does.
     pub fn run_gets(&self, n: u64, label: &str) -> Result<Measurement> {
         let mut g = Generator::new(WorkloadKind::C, self.spec.records(), self.spec.value_size, self.spec.seed + 1);
+        let keys: Vec<Vec<u8>> = (0..n)
+            .map(|_| {
+                let Op::Read(key) = g.next_op() else { unreachable!() };
+                key
+            })
+            .collect();
         let mut lat = Histogram::new();
         let mut bytes = 0u64;
         let t0 = Instant::now();
-        for _ in 0..n {
-            let Op::Read(key) = g.next_op() else { unreachable!() };
-            let ot0 = Instant::now();
-            if let Some(v) = self.cluster.get(&key)? {
-                bytes += v.len() as u64;
+        for chunk in keys.chunks(GET_BATCH) {
+            let bt0 = Instant::now();
+            let vals = self.cluster.get_batch(chunk)?;
+            let per_op = (bt0.elapsed().as_micros() as u64 / chunk.len() as u64).max(1);
+            for v in vals {
+                if let Some(v) = v {
+                    bytes += v.len() as u64;
+                }
+                lat.record(per_op);
             }
-            lat.record(ot0.elapsed().as_micros().max(1) as u64);
         }
         Ok(Measurement {
             system: self.spec.kind.name().into(),
@@ -227,31 +243,66 @@ impl Env {
     }
 
     /// Run a YCSB mix of `n` ops; returns (overall, write-lat, read-lat).
+    ///
+    /// Runs of consecutive point reads are combined into one
+    /// [`Cluster::get_batch`] call (up to `GET_BATCH` keys), the read
+    /// analogue of the write path's group-commit folding.  The buffer
+    /// is flushed before any write or scan executes, so cross-op
+    /// ordering is preserved and memory stays O(`GET_BATCH`).
     pub fn run_ycsb(
         &self,
         kind: WorkloadKind,
         n: u64,
         scan_len: usize,
     ) -> Result<(Measurement, Histogram, Histogram)> {
+        /// Issue the buffered read run as one batch; per-op latency is
+        /// the batch mean, like the write path records.
+        fn flush_reads(
+            cluster: &Cluster,
+            read_buf: &mut Vec<Vec<u8>>,
+            lat: &mut Histogram,
+            rlat: &mut Histogram,
+            bytes: &mut u64,
+        ) -> Result<()> {
+            if read_buf.is_empty() {
+                return Ok(());
+            }
+            let keys = std::mem::take(read_buf);
+            let ot0 = Instant::now();
+            let vals = cluster.get_batch(&keys)?;
+            let per_op = (ot0.elapsed().as_micros() as u64 / keys.len() as u64).max(1);
+            for v in vals {
+                if let Some(v) = v {
+                    *bytes += v.len() as u64;
+                }
+                lat.record(per_op);
+                rlat.record(per_op);
+            }
+            Ok(())
+        }
+
         let mut g = Generator::new(kind, self.spec.records(), self.spec.value_size, self.spec.seed + 3)
             .with_scan_len(scan_len);
         let mut lat = Histogram::new();
         let mut wlat = Histogram::new();
         let mut rlat = Histogram::new();
         let mut bytes = 0u64;
+        let mut read_buf: Vec<Vec<u8>> = Vec::with_capacity(GET_BATCH);
         let t0 = Instant::now();
         for _ in 0..n {
             let op = g.next_op();
+            if let Op::Read(k) = op {
+                read_buf.push(k);
+                if read_buf.len() >= GET_BATCH {
+                    flush_reads(&self.cluster, &mut read_buf, &mut lat, &mut rlat, &mut bytes)?;
+                }
+                continue;
+            }
+            // A non-read op ends the read run.
+            flush_reads(&self.cluster, &mut read_buf, &mut lat, &mut rlat, &mut bytes)?;
             let ot0 = Instant::now();
             match op {
-                Op::Read(k) => {
-                    if let Some(v) = self.cluster.get(&k)? {
-                        bytes += v.len() as u64;
-                    }
-                    let us = ot0.elapsed().as_micros().max(1) as u64;
-                    lat.record(us);
-                    rlat.record(us);
-                }
+                Op::Read(_) => unreachable!("handled above"),
                 Op::Update(k, v) | Op::Insert(k, v) => {
                     bytes += v.len() as u64;
                     self.cluster.put_batch(vec![(k, v)])?;
@@ -276,6 +327,7 @@ impl Env {
                 }
             }
         }
+        flush_reads(&self.cluster, &mut read_buf, &mut lat, &mut rlat, &mut bytes)?;
         let m = Measurement {
             system: self.spec.kind.name().into(),
             x: kind.name().into(),
@@ -295,6 +347,12 @@ impl Env {
         self.cluster
             .wait_converged(std::time::Duration::from_secs(60))?;
         self.cluster.drain_gc_all()
+    }
+
+    /// Leader engine stats (readahead hit rate etc.) for bench rows.
+    pub fn leader_stats(&self) -> Result<crate::engine::EngineStats> {
+        let leader = self.cluster.wait_for_leader(std::time::Duration::from_secs(10))?;
+        Ok(self.cluster.status(leader)?.engine)
     }
 
     pub fn destroy(self) -> Result<()> {

@@ -79,6 +79,14 @@ pub struct IoStats {
     pub bloom_negative: AtomicU64,
     pub gets: AtomicU64,
     pub puts: AtomicU64,
+    /// ValueLog entries resolved (engine read path; zero for plain Db use).
+    pub vlog_reads: AtomicU64,
+    /// Payload bytes those resolutions returned.
+    pub vlog_read_bytes: AtomicU64,
+    /// Readahead-cache segment hits on the ValueLog read path.
+    pub readahead_hits: AtomicU64,
+    /// Readahead-cache segment loads (misses).
+    pub readahead_misses: AtomicU64,
 }
 
 impl IoStats {
@@ -98,6 +106,10 @@ impl IoStats {
             bloom_negative: self.bloom_negative.load(Ordering::Relaxed),
             gets: self.gets.load(Ordering::Relaxed),
             puts: self.puts.load(Ordering::Relaxed),
+            vlog_reads: self.vlog_reads.load(Ordering::Relaxed),
+            vlog_read_bytes: self.vlog_read_bytes.load(Ordering::Relaxed),
+            readahead_hits: self.readahead_hits.load(Ordering::Relaxed),
+            readahead_misses: self.readahead_misses.load(Ordering::Relaxed),
         }
     }
 }
@@ -112,6 +124,10 @@ pub struct IoStatsSnapshot {
     pub bloom_negative: u64,
     pub gets: u64,
     pub puts: u64,
+    pub vlog_reads: u64,
+    pub vlog_read_bytes: u64,
+    pub readahead_hits: u64,
+    pub readahead_misses: u64,
 }
 
 impl IoStatsSnapshot {

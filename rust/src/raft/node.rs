@@ -31,6 +31,12 @@ pub trait StateMachine: Send {
     fn snapshot_bytes(&mut self) -> Result<Vec<u8>>;
     /// Replace state with a received snapshot.
     fn install_snapshot(&mut self, data: &[u8], last_index: LogIndex, last_term: Term) -> Result<()>;
+    /// Conflict resolution truncated (and will rewrite) the log suffix;
+    /// epoch files `>= live_epoch` changed in place.  Engines that
+    /// cache ValueLog bytes must drop cached state for those epochs —
+    /// the rewritten entries were never committed, so applied state is
+    /// unaffected.  Default: nothing cached, nothing to do.
+    fn on_log_truncated(&mut self, _live_epoch: u32) {}
 }
 
 /// Tunables (times in ticks; the cluster maps ticks to wall time).
@@ -485,8 +491,12 @@ impl<S: StateMachine> Node<S> {
             match self.log.term_at(e.index) {
                 Some(t) if t == e.term => continue, // already have it
                 Some(_) => {
-                    // Conflict: truncate suffix then append.
+                    // Conflict: truncate suffix then append.  The live
+                    // epoch file (possibly a reopened frozen one) is
+                    // rewritten in place from here on — readahead
+                    // caches over it are now stale.
                     self.log.truncate_from(e.index)?;
+                    self.sm.on_log_truncated(self.log.live_epoch());
                     self.log.append(e)?;
                 }
                 None => {

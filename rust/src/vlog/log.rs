@@ -168,6 +168,57 @@ impl VLogReader {
         read_entry_at(&self.file, offset)
     }
 
+    /// Serve the entry at `offset` from already-resident readahead
+    /// segments, touching neither the file nor the cache contents.
+    /// `Ok(None)` means "not resident — fall back to a direct read".
+    pub fn read_resident(
+        &self,
+        offset: Offset,
+        epoch: u32,
+        cache: &super::readahead::ReadaheadCache,
+    ) -> Result<Option<Entry>> {
+        let mut hdr = [0u8; 8];
+        if !cache.read_resident_at(epoch, offset, &mut hdr) {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        let mut body = vec![0u8; len];
+        if !cache.read_resident_at(epoch, offset + 8, &mut body) {
+            return Ok(None);
+        }
+        if crc32fast::hash(&body) != crc {
+            bail!("vlog crc mismatch @{offset}");
+        }
+        decode_payload(&body).map(Some)
+    }
+
+    /// Read the entry at `offset` through a
+    /// [`super::readahead::ReadaheadCache`] so adjacent entries (a
+    /// batched, offset-sorted resolution pass) share one aligned
+    /// segment `pread` instead of two raw reads each.
+    pub fn read_cached(
+        &self,
+        offset: Offset,
+        epoch: u32,
+        cache: &super::readahead::ReadaheadCache,
+    ) -> Result<Entry> {
+        let mut hdr = [0u8; 8];
+        cache
+            .read_exact_at(epoch, &self.file, offset, &mut hdr)
+            .with_context(|| format!("vlog cached read header @{offset}"))?;
+        let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        let mut body = vec![0u8; len];
+        cache
+            .read_exact_at(epoch, &self.file, offset + 8, &mut body)
+            .with_context(|| format!("vlog cached read body @{offset} len={len}"))?;
+        if crc32fast::hash(&body) != crc {
+            bail!("vlog crc mismatch @{offset}");
+        }
+        decode_payload(&body)
+    }
+
     pub fn iter(&self) -> Result<VLogIter> {
         let end = self.file.metadata()?.len();
         Ok(VLogIter { file: self.file.try_clone()?, pos: 0, end })

@@ -1,0 +1,325 @@
+//! Readahead block cache for epoch ValueLog reads.
+//!
+//! The batched read path ([`super::EpochReaders::read_vrefs_batched`])
+//! groups a slice of [`super::VRef`]s by epoch and sorts them by
+//! offset, so consecutive resolutions walk each epoch file forward.
+//! This cache turns that ordered walk into large sequential I/O: the
+//! file is read in fixed, aligned segments ([`SEGMENT_BYTES`] = 64 KiB)
+//! that are kept in a small LRU, so N adjacent values cost one `pread`
+//! instead of N (two per entry, header + body, without it).
+//!
+//! Crash-safety: this layer is read-only — it never writes to a
+//! ValueLog and never serves bytes that are not already in the file, so
+//! it cannot affect the single-write durability story.  Epoch files are
+//! append-only and immutable below their flushed length, which makes
+//! cached segments trivially coherent: a cached segment can only be
+//! *short* (taken while the file tail was still growing), never wrong.
+//! A read past a cached segment's end simply reloads that segment.
+//!
+//! Hit/miss counters land in the shared [`IoStats`] (`readahead_hits` /
+//! `readahead_misses`), alongside `vlog_reads`/`vlog_read_bytes`
+//! maintained by [`super::EpochReaders`], so benches can print the
+//! cache hit rate.
+
+use crate::lsm::IoStats;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::fs::File;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+/// Aligned segment size: big enough that a handful of segments cover a
+/// typical scan's value window, small enough that point-read pollution
+/// stays bounded.
+pub const SEGMENT_BYTES: u64 = 64 << 10;
+
+/// Default cache capacity in segments (128 × 64 KiB = 8 MiB).
+pub const DEFAULT_SEGMENTS: usize = 128;
+
+struct CachedSeg {
+    data: Arc<Vec<u8>>,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<(u32, u64), CachedSeg>,
+    tick: u64,
+}
+
+/// Fixed-capacity LRU of 64 KiB aligned ValueLog segments, keyed by
+/// `(epoch, segment_index)`.
+pub struct ReadaheadCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    io: Arc<IoStats>,
+}
+
+impl ReadaheadCache {
+    pub fn new(capacity: usize, io: Arc<IoStats>) -> Self {
+        Self {
+            capacity: capacity.max(4),
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+            io,
+        }
+    }
+
+    pub fn io_stats(&self) -> Arc<IoStats> {
+        Arc::clone(&self.io)
+    }
+
+    /// Number of resident segments (tests).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all segments of epochs `< min_epoch` (after GC deletes the
+    /// files).
+    pub fn invalidate_below(&self, min_epoch: u32) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.retain(|&(e, _), _| e >= min_epoch);
+    }
+
+    /// Drop all segments of epochs `>= epoch` (Raft conflict
+    /// truncation rewrites those files in place, so resident bytes may
+    /// no longer match the file).
+    pub fn invalidate_from(&self, epoch: u32) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.retain(|&(e, _), _| e < epoch);
+    }
+
+    /// Return the segment `(epoch, seg)` with at least `need_len` valid
+    /// bytes, loading (or reloading a stale-short copy) from `file`.
+    /// `need_len == 0` accepts any resident length.
+    fn segment(
+        &self,
+        epoch: u32,
+        seg: u64,
+        need_len: usize,
+        file: &File,
+    ) -> Result<Arc<Vec<u8>>> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(c) = inner.map.get_mut(&(epoch, seg)) {
+                if c.data.len() >= need_len {
+                    c.last_used = tick;
+                    self.io.readahead_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(Arc::clone(&c.data));
+                }
+                // Stale partial tail segment (file has grown since it
+                // was cached): fall through and reload.
+            }
+        }
+        self.io.readahead_misses.fetch_add(1, Ordering::Relaxed);
+        let data = Arc::new(load_segment(file, seg)?);
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if inner.map.len() >= self.capacity && !inner.map.contains_key(&(epoch, seg)) {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, c)| c.last_used)
+                .map(|(&k, _)| k);
+            if let Some(victim) = victim {
+                inner.map.remove(&victim);
+            }
+        }
+        inner.map.insert((epoch, seg), CachedSeg { data: Arc::clone(&data), last_used: tick });
+        Ok(data)
+    }
+
+    /// Copy `buf.len()` bytes at `offset` out of already-resident
+    /// segments only.  Returns `false` (with `buf` possibly partially
+    /// written, counted as one miss) when any covering segment is
+    /// absent or too short; nothing is loaded or evicted either way.
+    /// The single-key read path uses this to probe segments populated
+    /// by batched passes without polluting the cache: a point read of
+    /// the growing live-epoch tail would otherwise reload a 64 KiB
+    /// segment per fresh entry.
+    pub fn read_resident_at(&self, epoch: u32, offset: u64, buf: &mut [u8]) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let mut pos = offset;
+        let end = offset + buf.len() as u64;
+        while pos < end {
+            let seg = pos / SEGMENT_BYTES;
+            let seg_start = seg * SEGMENT_BYTES;
+            let in_seg = (pos - seg_start) as usize;
+            let take = ((end - pos) as usize).min(SEGMENT_BYTES as usize - in_seg);
+            let Some(c) = inner.map.get_mut(&(epoch, seg)) else {
+                self.io.readahead_misses.fetch_add(1, Ordering::Relaxed);
+                return false;
+            };
+            if c.data.len() < in_seg + take {
+                self.io.readahead_misses.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            c.last_used = tick;
+            let dst = (pos - offset) as usize;
+            buf[dst..dst + take].copy_from_slice(&c.data[in_seg..in_seg + take]);
+            pos += take as u64;
+        }
+        self.io.readahead_hits.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Fill `buf` from `file` at `offset`, served segment-by-segment
+    /// through the cache.  Errors if the file (even after reloading the
+    /// covering segments) does not own `offset + buf.len()` bytes.
+    pub fn read_exact_at(
+        &self,
+        epoch: u32,
+        file: &File,
+        offset: u64,
+        buf: &mut [u8],
+    ) -> Result<()> {
+        let mut pos = offset;
+        let end = offset + buf.len() as u64;
+        while pos < end {
+            let seg = pos / SEGMENT_BYTES;
+            let seg_start = seg * SEGMENT_BYTES;
+            let in_seg = (pos - seg_start) as usize;
+            let take = ((end - pos) as usize).min(SEGMENT_BYTES as usize - in_seg);
+            let data = self.segment(epoch, seg, in_seg + take, file)?;
+            if data.len() < in_seg + take {
+                bail!(
+                    "vlog readahead: read past end of file (segment {seg} has {} bytes, need {})",
+                    data.len(),
+                    in_seg + take
+                );
+            }
+            let dst = (pos - offset) as usize;
+            buf[dst..dst + take].copy_from_slice(&data[in_seg..in_seg + take]);
+            pos += take as u64;
+        }
+        Ok(())
+    }
+}
+
+/// One `pread` of the whole aligned segment (short at the file tail).
+fn load_segment(file: &File, seg: u64) -> Result<Vec<u8>> {
+    use std::os::unix::fs::FileExt;
+    let start = seg * SEGMENT_BYTES;
+    let file_len = file.metadata()?.len();
+    if start >= file_len {
+        return Ok(Vec::new());
+    }
+    let want = (file_len - start).min(SEGMENT_BYTES) as usize;
+    let mut buf = vec![0u8; want];
+    file.read_exact_at(&mut buf, start)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::path::PathBuf;
+
+    fn tmpfile(name: &str, bytes: &[u8]) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("nezha-ra-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let p = d.join(name);
+        std::fs::File::create(&p).unwrap().write_all(bytes).unwrap();
+        p
+    }
+
+    fn cache(capacity: usize) -> ReadaheadCache {
+        ReadaheadCache::new(capacity, Arc::new(IoStats::default()))
+    }
+
+    #[test]
+    fn adjacent_reads_hit_one_segment() {
+        let data: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        let p = tmpfile("adjacent", &data);
+        let f = File::open(&p).unwrap();
+        let c = cache(16);
+        let mut buf = [0u8; 100];
+        for i in 0..50u64 {
+            c.read_exact_at(0, &f, i * 100, &mut buf).unwrap();
+            assert_eq!(buf[0], data[(i * 100) as usize]);
+        }
+        let io = c.io_stats();
+        // 5000 bytes span a single 64 KiB segment: 1 miss, rest hits.
+        assert_eq!(io.readahead_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(io.readahead_hits.load(Ordering::Relaxed), 49);
+    }
+
+    #[test]
+    fn read_spanning_segments_assembles() {
+        let data: Vec<u8> = (0..(3 * SEGMENT_BYTES) as usize).map(|i| (i % 253) as u8).collect();
+        let p = tmpfile("span", &data);
+        let f = File::open(&p).unwrap();
+        let c = cache(16);
+        let start = SEGMENT_BYTES - 17;
+        let mut buf = vec![0u8; 64];
+        c.read_exact_at(3, &f, start, &mut buf).unwrap();
+        assert_eq!(&buf[..], &data[start as usize..start as usize + 64]);
+    }
+
+    #[test]
+    fn stale_short_segment_reloaded_after_append() {
+        let p = tmpfile("grow", b"hello");
+        {
+            let f = File::open(&p).unwrap();
+            let c = cache(8);
+            let mut buf = [0u8; 5];
+            c.read_exact_at(0, &f, 0, &mut buf).unwrap();
+            assert_eq!(&buf, b"hello");
+            // File grows within the same segment.
+            let mut w = std::fs::OpenOptions::new().append(true).open(&p).unwrap();
+            w.write_all(b" world").unwrap();
+            let mut buf2 = [0u8; 11];
+            c.read_exact_at(0, &f, 0, &mut buf2).unwrap();
+            assert_eq!(&buf2, b"hello world");
+        }
+    }
+
+    #[test]
+    fn read_past_eof_errors() {
+        let p = tmpfile("eof", b"tiny");
+        let f = File::open(&p).unwrap();
+        let c = cache(8);
+        let mut buf = [0u8; 16];
+        assert!(c.read_exact_at(0, &f, 0, &mut buf).is_err());
+    }
+
+    #[test]
+    fn capacity_evicts_least_recently_used() {
+        let data = vec![7u8; (6 * SEGMENT_BYTES) as usize];
+        let p = tmpfile("evict", &data);
+        let f = File::open(&p).unwrap();
+        let c = cache(4);
+        let mut buf = [0u8; 8];
+        for seg in 0..6u64 {
+            c.read_exact_at(0, &f, seg * SEGMENT_BYTES, &mut buf).unwrap();
+        }
+        assert!(c.len() <= 4);
+        // Re-reading the most recent segment is still a hit.
+        let hits0 = c.io_stats().readahead_hits.load(Ordering::Relaxed);
+        c.read_exact_at(0, &f, 5 * SEGMENT_BYTES, &mut buf).unwrap();
+        assert_eq!(c.io_stats().readahead_hits.load(Ordering::Relaxed), hits0 + 1);
+    }
+
+    #[test]
+    fn invalidate_below_drops_old_epochs() {
+        let data = vec![1u8; 1024];
+        let p = tmpfile("inval", &data);
+        let f = File::open(&p).unwrap();
+        let c = cache(8);
+        let mut buf = [0u8; 8];
+        for epoch in 0..3u32 {
+            c.read_exact_at(epoch, &f, 0, &mut buf).unwrap();
+        }
+        assert_eq!(c.len(), 3);
+        c.invalidate_below(2);
+        assert_eq!(c.len(), 1);
+    }
+}
