@@ -8,7 +8,7 @@
 //! Run: `cargo bench --bench fig6_scan`.
 
 use nezha::engine::EngineKind;
-use nezha::harness::{bench_scale, engines_from_env, improvement_pct, print_header, value_sizes, Env, Spec};
+use nezha::harness::{bench_scale, engines_from_env, improvement_pct, print_header, print_readahead_line, value_sizes, Env, Spec};
 
 fn main() -> anyhow::Result<()> {
     let load = ((6 << 20) as f64 * bench_scale()) as u64;
@@ -28,18 +28,7 @@ fn main() -> anyhow::Result<()> {
             env.settle()?;
             let m = env.run_scans(scans, scan_len, &format!("{}KB", vs >> 10))?;
             println!("{}", m.row());
-            let st = env.leader_stats()?;
-            // Only engines with a readahead cache (Nezha/NoGC) get the
-            // line; Dwisckey reads its vlog uncached.
-            if st.readahead_hits + st.readahead_misses > 0 {
-                println!(
-                    "            readahead: {} hits / {} misses ({:.1}% hit rate, {} vlog reads)",
-                    st.readahead_hits,
-                    st.readahead_misses,
-                    st.readahead_hit_rate() * 100.0,
-                    st.vlog_reads
-                );
-            }
+            print_readahead_line(&env.leader_stats()?);
             if kind == EngineKind::Nezha {
                 nezha_tp.push(m.mib_per_sec());
             }

@@ -134,12 +134,10 @@ impl KvEngine for ClassicEngine {
         self.db.get(key)
     }
 
-    /// Batched point read.  Values are stored inline in the LSM, so
-    /// there is no reference resolution to batch — the win for the
-    /// classic engines is the single coordinator channel crossing.
-    fn multi_get(&mut self, keys: &[Vec<u8>]) -> Result<Vec<Option<Vec<u8>>>> {
-        keys.iter().map(|k| self.get(k)).collect()
-    }
+    // No `multi_get` override: values are stored inline in the LSM, so
+    // there is no reference resolution to batch — the trait default
+    // (get per key) is exact, and the win for the classic engines is
+    // the single coordinator channel crossing.
 
     fn scan(&mut self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
         self.scans += 1;

@@ -177,9 +177,10 @@ pub trait KvEngine: StateMachine {
     }
 
     /// Range scan (Algorithm 3): `[start, end)`, at most `limit` rows.
-    /// `limit` is an iterator budget, not a row guarantee — engines may
-    /// count recently-deleted keys in the range toward it and return
-    /// fewer rows.
+    /// `limit` counts *live* rows only — tombstoned keys in the range
+    /// never consume it (engines refill past them), so fewer than
+    /// `limit` rows means the range is exhausted.  This keeps
+    /// row-count parity across engines for the YCSB-E comparisons.
     fn scan(&mut self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<(Vec<u8>, Vec<u8>)>>;
 
     /// Group-commit durability point for engine-side files.

@@ -390,62 +390,85 @@ impl KvEngine for NezhaEngine {
     }
 
     /// Algorithm 3 — phase-aware range query with versioned merge.
-    /// The merged key set is truncated to `limit` *before* any value is
-    /// resolved, and the surviving references are fetched in one
-    /// batched, readahead-served ValueLog pass.  Consequence: a
-    /// tombstone among the first `limit` merged keys consumes scan
-    /// budget (iterator-budget semantics), so a tombstone-heavy range
-    /// can return fewer than `limit` rows even when more live keys
-    /// exist further right — the deliberate trade for never resolving
-    /// values that would be discarded.
+    /// Candidates are gathered in batched passes: each pass merges at
+    /// most `limit - rows_so_far` keys from the storage modules,
+    /// resolves the surviving references in one batched,
+    /// readahead-served ValueLog call, drops tombstones, then refills
+    /// from just past the last consumed key until `limit` live rows
+    /// are found or the range is exhausted.  Tombstones therefore do
+    /// not consume scan budget (row-count parity with Classic, whose
+    /// LSM drops tombstones before limiting), and no value is ever
+    /// resolved only to be discarded by the limit.
     fn scan(&mut self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
         self.scans += 1;
         self.try_finish(false)?;
-        // Priority: sorted (oldest) < oldDB < currentDB (newest); the
-        // BTreeMap insert order implements MergeResults' precedence.
         enum Src {
             Val(Vec<u8>),
             Ref(VRef),
+            /// Tombstone from Final storage: occupies its merge slot
+            /// (keeping each pass's coverage window exact) but yields
+            /// no row and resolves nothing.
+            Tomb,
         }
-        let mut merged: BTreeMap<Vec<u8>, Src> = BTreeMap::new();
-        if let Some(fin) = &self.fin {
-            for e in fin.scan(start, end, limit)? {
-                if let Some(v) = e.value {
-                    merged.insert(e.key, Src::Val(v));
+        let mut out = Vec::new();
+        let mut lo = start.to_vec();
+        while out.len() < limit && lo.as_slice() < end {
+            let need = limit - out.len();
+            // Priority: sorted (oldest) < oldDB < currentDB (newest);
+            // the BTreeMap insert order implements MergeResults'
+            // precedence.
+            let mut merged: BTreeMap<Vec<u8>, Src> = BTreeMap::new();
+            if let Some(fin) = &self.fin {
+                for e in fin.scan(&lo, end, need)? {
+                    merged.insert(e.key, e.value.map_or(Src::Tomb, Src::Val));
                 }
             }
-        }
-        if let Some((db, _)) = &self.old_db {
-            for (k, r) in db.scan(start, end, limit)? {
+            if let Some((db, _)) = &self.old_db {
+                for (k, r) in db.scan(&lo, end, need)? {
+                    merged.insert(k, Src::Ref(VRef::decode(&r)?));
+                }
+            }
+            for (k, r) in self.cur_db.scan(&lo, end, need)? {
                 merged.insert(k, Src::Ref(VRef::decode(&r)?));
             }
-        }
-        for (k, r) in self.cur_db.scan(start, end, limit)? {
-            merged.insert(k, Src::Ref(VRef::decode(&r)?));
-        }
-        // Truncate to `limit` first so tombstone-heavy ranges never
-        // resolve values that would only be discarded.
-        let picked: Vec<(Vec<u8>, Src)> = merged.into_iter().take(limit).collect();
-        let refs: Vec<VRef> = picked
-            .iter()
-            .filter_map(|(_, s)| match s {
-                Src::Ref(r) => Some(*r),
-                Src::Val(_) => None,
-            })
-            .collect();
-        let resolved = self.readers.read_vrefs_batched(&refs)?;
-        let mut rit = resolved.into_iter();
-        let mut out = Vec::with_capacity(picked.len());
-        for (k, src) in picked {
-            match src {
-                Src::Val(v) => out.push((k, v)),
-                Src::Ref(_) => {
-                    // Tombstone references resolve to None and drop out.
-                    if let Some(v) = rit.next().expect("scan batch aligned").value {
-                        out.push((k, v));
+            if merged.is_empty() {
+                break; // no module has anything left in [lo, end)
+            }
+            // Fewer than `need` merged keys means every module
+            // returned short of its per-pass budget, i.e. the range is
+            // exhausted after this pass.
+            let exhausted = merged.len() < need;
+            // Only the first `need` merged keys lie inside every
+            // module's covered window this pass; resolve exactly those.
+            let picked: Vec<(Vec<u8>, Src)> = merged.into_iter().take(need).collect();
+            let mut next_lo = picked.last().expect("merged non-empty").0.clone();
+            next_lo.push(0); // smallest key strictly past the last candidate
+            let refs: Vec<VRef> = picked
+                .iter()
+                .filter_map(|(_, s)| match s {
+                    Src::Ref(r) => Some(*r),
+                    Src::Val(_) | Src::Tomb => None,
+                })
+                .collect();
+            let resolved = self.readers.read_vrefs_batched(&refs)?;
+            let mut rit = resolved.into_iter();
+            for (k, src) in picked {
+                match src {
+                    Src::Val(v) => out.push((k, v)),
+                    Src::Tomb => {}
+                    Src::Ref(_) => {
+                        // Tombstone references resolve to None and
+                        // drop out.
+                        if let Some(v) = rit.next().expect("scan batch aligned").value {
+                            out.push((k, v));
+                        }
                     }
                 }
             }
+            if exhausted {
+                break;
+            }
+            lo = next_lo;
         }
         Ok(out)
     }
@@ -865,8 +888,33 @@ mod tests {
         assert_eq!(post, got);
     }
 
+    /// Tombstones do not consume scan budget: the scan refills past
+    /// them until `limit` live rows are found (row-count parity with
+    /// Classic's LSM, which drops tombstones before limiting).
+    #[test]
+    fn scan_refills_past_tombstones() {
+        let mut r = Rig::new("scan-tomb", true);
+        for i in 0..20u32 {
+            r.put(&format!("k{i:03}"), format!("v{i}").as_bytes());
+        }
+        for i in (0..20u32).step_by(2) {
+            r.del(&format!("k{i:03}"));
+        }
+        let rows = r.eng.scan(b"k", b"l", 8).unwrap();
+        let keys: Vec<&[u8]> = rows.iter().map(|(k, _)| k.as_slice()).collect();
+        let want: Vec<Vec<u8>> = (0..20u32)
+            .filter(|i| i % 2 == 1)
+            .take(8)
+            .map(|i| format!("k{i:03}").into_bytes())
+            .collect();
+        assert_eq!(keys, want.iter().map(Vec::as_slice).collect::<Vec<_>>());
+        // Range exhaustion: asking for more live rows than exist
+        // returns exactly the survivors.
+        assert_eq!(r.eng.scan(b"k", b"l", 100).unwrap().len(), 10);
+    }
+
     /// Satellite: scan truncates the merged key set to `limit` before
-    /// resolving, so only `limit` values are ever fetched.
+    /// resolving, so only `limit` values are ever fetched per pass.
     #[test]
     fn scan_resolves_only_limit_values() {
         let mut r = Rig::new("scan-limit", true);

@@ -68,6 +68,11 @@ pub struct Measurement {
     pub x: String,
     pub ops: u64,
     pub wall_s: f64,
+    /// Per-op latency samples in µs.  Ops issued through a batched
+    /// call (`put_batch`, `get_batch`) are each recorded at the
+    /// *batch mean*, so for those columns p50/p99 describe batch
+    /// behavior, not individual-op tails; scans (one call per op)
+    /// remain true per-op samples.
     pub lat: Histogram,
     /// Payload bytes moved by the measured ops.
     pub bytes: u64,
@@ -96,8 +101,24 @@ impl Measurement {
     }
 }
 
+/// Print the indented readahead-cache line under a bench row.  Engines
+/// without a readahead cache (Dwisckey reads its vlog uncached) never
+/// touch the counters and get no line.
+pub fn print_readahead_line(st: &crate::engine::EngineStats) {
+    if st.readahead_hits + st.readahead_misses > 0 {
+        println!(
+            "            readahead: {} hits / {} misses ({:.1}% hit rate, {} vlog reads)",
+            st.readahead_hits,
+            st.readahead_misses,
+            st.readahead_hit_rate() * 100.0,
+            st.vlog_reads
+        );
+    }
+}
+
 pub fn print_header(title: &str) {
     println!("\n=== {title} ===");
+    println!("(lat columns: batched put/get ops are recorded at the batch mean; scans are per-op)");
     println!(
         "{:<11} {:>9} {:>10} {:>9} {:>9} {:>9} {:>9}",
         "system", "x", "ops/s", "MiB/s", "mean_us", "p50_us", "p99_us"
@@ -290,19 +311,23 @@ impl Env {
         let mut read_buf: Vec<Vec<u8>> = Vec::with_capacity(GET_BATCH);
         let t0 = Instant::now();
         for _ in 0..n {
-            let op = g.next_op();
-            if let Op::Read(k) = op {
-                read_buf.push(k);
-                if read_buf.len() >= GET_BATCH {
-                    flush_reads(&self.cluster, &mut read_buf, &mut lat, &mut rlat, &mut bytes)?;
+            // Bind the op once: reads are buffered (and `continue`),
+            // everything else falls through still owning `op`.
+            let op = match g.next_op() {
+                Op::Read(k) => {
+                    read_buf.push(k);
+                    if read_buf.len() >= GET_BATCH {
+                        flush_reads(&self.cluster, &mut read_buf, &mut lat, &mut rlat, &mut bytes)?;
+                    }
+                    continue;
                 }
-                continue;
-            }
+                op => op,
+            };
             // A non-read op ends the read run.
             flush_reads(&self.cluster, &mut read_buf, &mut lat, &mut rlat, &mut bytes)?;
             let ot0 = Instant::now();
             match op {
-                Op::Read(_) => unreachable!("handled above"),
+                Op::Read(_) => unreachable!("buffered above"),
                 Op::Update(k, v) | Op::Insert(k, v) => {
                     bytes += v.len() as u64;
                     self.cluster.put_batch(vec![(k, v)])?;

@@ -171,6 +171,10 @@ impl VLogReader {
     /// Serve the entry at `offset` from already-resident readahead
     /// segments, touching neither the file nor the cache contents.
     /// `Ok(None)` means "not resident — fall back to a direct read".
+    /// Exactly one readahead hit is counted, and only once both the
+    /// header and the body were served from residency — a
+    /// header-resident/body-absent read falls back uncached and counts
+    /// nothing.
     pub fn read_resident(
         &self,
         offset: Offset,
@@ -190,6 +194,7 @@ impl VLogReader {
         if crc32fast::hash(&body) != crc {
             bail!("vlog crc mismatch @{offset}");
         }
+        cache.note_hit();
         decode_payload(&body).map(Some)
     }
 

@@ -136,12 +136,18 @@ impl ReadaheadCache {
 
     /// Copy `buf.len()` bytes at `offset` out of already-resident
     /// segments only.  Returns `false` (with `buf` possibly partially
-    /// written, counted as one miss) when any covering segment is
-    /// absent or too short; nothing is loaded or evicted either way.
-    /// The single-key read path uses this to probe segments populated
-    /// by batched passes without polluting the cache: a point read of
-    /// the growing live-epoch tail would otherwise reload a 64 KiB
-    /// segment per fresh entry.
+    /// written) when any covering segment is absent or too short;
+    /// nothing is loaded or evicted either way.  The single-key read
+    /// path uses this to probe segments populated by batched passes
+    /// without polluting the cache: a point read of the growing
+    /// live-epoch tail would otherwise reload a 64 KiB segment per
+    /// fresh entry.  Probes touch *no* hit/miss counter: a failed
+    /// probe intentionally never loads (the fallback is a direct
+    /// read), so counting a miss would deflate the reported hit rate
+    /// on point-read-heavy workloads — and a multi-probe caller must
+    /// not count a hit until *every* probe of one logical read has
+    /// succeeded (see [`note_hit`](Self::note_hit)), or a
+    /// header-resident/body-absent read would inflate it.
     pub fn read_resident_at(&self, epoch: u32, offset: u64, buf: &mut [u8]) -> bool {
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
@@ -154,11 +160,9 @@ impl ReadaheadCache {
             let in_seg = (pos - seg_start) as usize;
             let take = ((end - pos) as usize).min(SEGMENT_BYTES as usize - in_seg);
             let Some(c) = inner.map.get_mut(&(epoch, seg)) else {
-                self.io.readahead_misses.fetch_add(1, Ordering::Relaxed);
                 return false;
             };
             if c.data.len() < in_seg + take {
-                self.io.readahead_misses.fetch_add(1, Ordering::Relaxed);
                 return false;
             }
             c.last_used = tick;
@@ -166,8 +170,15 @@ impl ReadaheadCache {
             buf[dst..dst + take].copy_from_slice(&c.data[in_seg..in_seg + take]);
             pos += take as u64;
         }
-        self.io.readahead_hits.fetch_add(1, Ordering::Relaxed);
         true
+    }
+
+    /// Record one read served entirely from resident segments.  Called
+    /// by [`read_resident_at`](Self::read_resident_at) users once every
+    /// probe of a logical read has succeeded, so the hit rate counts
+    /// whole reads actually served by the cache.
+    pub fn note_hit(&self) {
+        self.io.readahead_hits.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Fill `buf` from `file` at `offset`, served segment-by-segment
