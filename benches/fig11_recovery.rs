@@ -25,7 +25,7 @@ fn base(tag: &str) -> PathBuf {
     d
 }
 
-fn open_replica(dir: &PathBuf, kind: EngineKind) -> anyhow::Result<Replica> {
+fn open_replica(dir: &std::path::Path, kind: EngineKind) -> anyhow::Result<Replica> {
     let mut opts = EngineOpts::new("unset", "unset");
     opts.memtable_bytes = 1 << 20;
     Replica::open(
@@ -70,7 +70,7 @@ fn load(r: &mut Replica, records: u64, vs: usize) {
     r.node.log.sync().unwrap();
 }
 
-fn time_reopen(dir: &PathBuf, kind: EngineKind) -> anyhow::Result<f64> {
+fn time_reopen(dir: &std::path::Path, kind: EngineKind) -> anyhow::Result<f64> {
     let t0 = Instant::now();
     let mut r = open_replica(dir, kind)?;
     // Recovery includes being able to serve a read.
@@ -116,8 +116,17 @@ fn main() -> anyhow::Result<()> {
         let last_index = r.node.last_applied();
         let last_term = r.node.log.term_at(last_index).unwrap_or(1);
         let frozen = r.node.log.rotate()?;
-        GcState { running: true, frozen_epoch: frozen, out_gen: 1, last_index, last_term }
-            .save(&nezha::coordinator::replica::engine_dir(&dir))?;
+        GcState {
+            running: true,
+            min_epoch: frozen,
+            frozen_epoch: frozen,
+            out_gen: 1,
+            min_index: 0,
+            last_index,
+            last_term,
+            stack: vec![],
+        }
+        .save(&nezha::coordinator::replica::engine_dir(&dir))?;
         drop(r);
         let ms = time_reopen(&dir, EngineKind::Nezha)?;
         println!("{:<22} {:>12.1}", "Nezha (During-GC)", ms);
@@ -132,7 +141,7 @@ fn main() -> anyhow::Result<()> {
         let last_index = r.node.last_applied();
         let last_term = r.node.log.term_at(last_index).unwrap_or(1);
         let frozen = r.node.log.rotate()?;
-        r.engine().begin_gc(frozen, last_index, last_term)?;
+        r.engine().begin_gc(&[frozen], 0, last_index, last_term)?;
         r.finish_gc()?;
         drop(r);
         let ms = time_reopen(&dir, EngineKind::Nezha)?;

@@ -53,8 +53,16 @@ fn main() -> anyhow::Result<()> {
 
     let out = replica.finish_gc()?.expect("cycle output");
     println!(
-        "GC done: gen {} with {} live entries, {} bytes, index backend `{}` ({} ms)",
-        out.gen, out.entries, out.bytes_written, out.index_backend, out.wall_ms
+        "GC done: L0 run gen {} with {} entries — {} flush B + {} merge B ({} level merges), \
+         stack {:?}, index backend `{}` ({} ms)",
+        out.gen,
+        out.entries,
+        out.flush_bytes,
+        out.merge_bytes,
+        out.merges,
+        out.levels,
+        out.index_backend,
+        out.wall_ms
     );
     println!("phase = {:?} (Post-GC: New + Final Compacted Storage)", replica.engine_ref().gc_phase());
     assert_eq!(replica.engine_ref().gc_phase(), GcPhase::Post);

@@ -11,7 +11,7 @@
 
 use super::replica::Replica;
 use crate::engine::{EngineKind, EngineOpts, EngineStats};
-use crate::gc::GcConfig;
+use crate::gc::{GcConfig, GcOutput};
 use crate::raft::node::Outbox;
 use crate::raft::{Bus, Command, Config as RaftConfig, NetConfig, NodeId, Role};
 use anyhow::{anyhow, bail, Result};
@@ -53,6 +53,10 @@ pub enum Req {
     /// Block until any in-flight GC cycle completes.
     DrainGc {
         resp: SyncSender<Result<()>>,
+    },
+    /// Completed GC cycles on this node (fig10's per-cycle report).
+    GcHistory {
+        resp: SyncSender<Vec<GcOutput>>,
     },
     Stop,
 }
@@ -284,6 +288,13 @@ impl Cluster {
         })
     }
 
+    /// Completed GC cycles on one node, in completion order.
+    pub fn gc_history(&self, id: NodeId) -> Result<Vec<GcOutput>> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.req(id, Req::GcHistory { resp: tx })?;
+        Ok(rx.recv_timeout(Duration::from_secs(10))?)
+    }
+
     /// Wait for any running GC on the leader to finish (benches).
     pub fn drain_gc(&self) -> Result<()> {
         self.at_leader(move || {
@@ -492,6 +503,9 @@ fn node_loop(
                         Ok(())
                     })();
                     let _ = resp.send(r);
+                }
+                Req::GcHistory { resp } => {
+                    let _ = resp.send(replica.gc_history.clone());
                 }
                 Req::Stop => stop = true,
             }

@@ -72,6 +72,18 @@ impl Replica {
             .load(std::sync::atomic::Ordering::Relaxed)
     }
 
+    /// A cycle finished: mark the Raft snapshot at the cycle's point
+    /// and delete every frozen epoch it fully covers.  Epochs holding
+    /// entries past the snapshot point (the cycle froze with an apply
+    /// backlog) are retained — the engine's stored VRefs still resolve
+    /// into them, and the next cycle compacts their tails.
+    fn complete_cycle(&mut self, out: GcOutput) -> Result<GcOutput> {
+        self.node.log.mark_snapshot(out.last_index, out.last_term)?;
+        self.node.log.drop_epochs_covered_by(out.last_index)?;
+        self.gc_history.push(out.clone());
+        Ok(out)
+    }
+
     /// Drive the GC lifecycle.  Called from the node loop between
     /// request batches.  Returns a completed cycle's output, if one
     /// just finished.
@@ -81,20 +93,7 @@ impl Replica {
         }
         // Completion side.
         if let Some(out) = self.engine().poll_gc()? {
-            self.node.log.mark_snapshot(out.last_index, out.last_term)?;
-            // Everything below the live epoch is superseded.
-            let live = self.node.log.live_epoch();
-            self.node.log.drop_epochs_below(live)?;
-            self.gc_history.push(out);
-            return Ok(self.gc_history.last().map(|o| GcOutput {
-                gen: o.gen,
-                entries: o.entries,
-                bytes_written: o.bytes_written,
-                last_index: o.last_index,
-                last_term: o.last_term,
-                wall_ms: o.wall_ms,
-                index_backend: o.index_backend,
-            }));
+            return self.complete_cycle(out).map(Some);
         }
         // Trigger side (paper's multidimensional triggers: size +
         // schedule floor + load; see GcConfig).
@@ -104,32 +103,38 @@ impl Replica {
         }
         let size_hit = self.node.log.live_epoch_bytes >= self.gc_cfg.threshold_bytes;
         let interval_ok = now_ms.saturating_sub(self.last_gc_ms) >= self.gc_cfg.min_interval_ms;
-        let quiesced = self.node.last_applied() == self.node.log.last_index();
+        // Load trigger: a bounded apply backlog never starves GC — the
+        // cycle snapshots at `last_applied`, and the unapplied tail
+        // stays in the (retained) frozen epoch for the next cycle.
+        // Only genuine overload (backlog above the configured bound)
+        // defers the cycle.
         let backlog =
             self.node.log.last_index().saturating_sub(self.node.last_applied());
         let load_ok = backlog <= self.gc_cfg.max_load_entries;
-        if size_hit && interval_ok && quiesced && load_ok {
-            let last_index = self.node.last_applied();
-            let last_term = self.node.log.term_at(last_index).unwrap_or(0);
-            let frozen = self.node.log.rotate()?;
-            self.engine().begin_gc(frozen, last_index, last_term)?;
+        // Something must have been applied since the last snapshot, or
+        // the flush would be empty.
+        let snap_at = self.node.last_applied();
+        let progressed = snap_at > self.node.log.snap_index;
+        if size_hit && interval_ok && load_ok && progressed {
+            let last_term = self.node.log.term_at(snap_at).unwrap_or(0);
+            let min_index = self.node.log.snap_index;
+            self.node.log.rotate()?;
+            let epochs = self.node.log.frozen_epochs();
+            self.engine().begin_gc(&epochs, min_index, snap_at, last_term)?;
             self.last_gc_ms = now_ms;
         }
         Ok(None)
     }
 
     /// Convenience: block until any running cycle completes (tests,
-    /// benches, clean shutdown).
+    /// benches, clean shutdown).  The completed cycle stays in
+    /// `gc_history` — callers get a clone.
     pub fn finish_gc(&mut self) -> Result<Option<GcOutput>> {
         if self.kind != EngineKind::Nezha {
             return Ok(None);
         }
         if let Some(out) = self.engine().wait_gc()? {
-            self.node.log.mark_snapshot(out.last_index, out.last_term)?;
-            let live = self.node.log.live_epoch();
-            self.node.log.drop_epochs_below(live)?;
-            self.gc_history.push(out);
-            return Ok(self.gc_history.pop());
+            return self.complete_cycle(out).map(Some);
         }
         Ok(None)
     }
@@ -227,6 +232,78 @@ mod tests {
         r.finish_gc().unwrap();
         assert_eq!(r.engine().get(b"a050").unwrap(), Some(vec![1u8; 512]));
         assert_eq!(r.engine().get(b"b025").unwrap(), Some(vec![2u8; 512]));
+    }
+
+    /// Satellite regression: a cycle finished through `finish_gc` must
+    /// stay in `gc_history` (the old code pushed and immediately
+    /// popped it, so only `pump_gc`-finished cycles were recorded).
+    #[test]
+    fn finish_gc_keeps_history_entry() {
+        let mut r = replica("gchist", EngineKind::Nezha, 16 << 10);
+        make_leader(&mut r);
+        for i in 0..100u32 {
+            put(&mut r, &format!("h{i:03}"), &[3u8; 512]);
+        }
+        r.pump_gc(0).unwrap();
+        assert_eq!(r.engine_ref().gc_phase(), GcPhase::During);
+        let out = r.finish_gc().unwrap().expect("cycle output returned");
+        assert_eq!(r.gc_history.len(), 1, "finish_gc dropped the cycle from history");
+        assert_eq!(r.gc_history[0].gen, out.gen);
+        assert_eq!(r.gc_history[0].last_index, out.last_index);
+        // A second cycle appends.
+        for i in 0..100u32 {
+            put(&mut r, &format!("i{i:03}"), &[4u8; 512]);
+        }
+        r.pump_gc(10_000).unwrap();
+        r.finish_gc().unwrap();
+        assert_eq!(r.gc_history.len(), 2);
+    }
+
+    /// Satellite regression: the trigger must fire with a bounded apply
+    /// backlog (the old `quiesced` gate made the load trigger dead code
+    /// and let the active ValueLog grow without bound under sustained
+    /// traffic).  The cycle snapshots at `last_applied`; the unapplied
+    /// tail survives in the retained frozen epoch and is compacted by
+    /// the next cycle.
+    #[test]
+    fn gc_triggers_under_apply_backlog() {
+        let mut r = replica("gcload", EngineKind::Nezha, 8 << 10);
+        make_leader(&mut r);
+        for i in 0..40u32 {
+            put(&mut r, &format!("a{i:03}"), &[5u8; 512]);
+        }
+        let applied_at_trigger = r.node.last_applied();
+        // Build an apply backlog: propose without replicating.
+        for i in 0..20u32 {
+            r.node
+                .propose(Command::Put { key: format!("b{i:03}").into_bytes(), value: vec![6u8; 512] })
+                .unwrap();
+        }
+        assert!(r.node.log.last_index() > r.node.last_applied(), "backlog exists");
+        r.pump_gc(0).unwrap();
+        assert_eq!(
+            r.engine_ref().gc_phase(),
+            GcPhase::During,
+            "trigger starved by backlog"
+        );
+        // Drain the backlog (single-node commit) and finish the cycle.
+        r.node.replicate().unwrap();
+        let out = r.finish_gc().unwrap().expect("cycle output");
+        assert_eq!(out.last_index, applied_at_trigger, "snapshot point = last_applied");
+        // Backlog values live in the retained frozen epoch.
+        assert_eq!(r.engine().get(b"a000").unwrap(), Some(vec![5u8; 512]));
+        assert_eq!(r.engine().get(b"b010").unwrap(), Some(vec![6u8; 512]));
+        // The next cycle compacts the retained tail; reads stay intact
+        // after the old epoch is finally dropped.
+        for i in 0..40u32 {
+            put(&mut r, &format!("c{i:03}"), &[7u8; 512]);
+        }
+        r.pump_gc(10_000).unwrap();
+        assert_eq!(r.engine_ref().gc_phase(), GcPhase::During, "second cycle runs");
+        r.finish_gc().unwrap().expect("second cycle output");
+        assert_eq!(r.engine().get(b"b010").unwrap(), Some(vec![6u8; 512]));
+        assert_eq!(r.engine().get(b"a039").unwrap(), Some(vec![5u8; 512]));
+        assert_eq!(r.engine().get(b"c025").unwrap(), Some(vec![7u8; 512]));
     }
 
     #[test]

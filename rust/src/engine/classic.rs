@@ -103,7 +103,8 @@ impl StateMachine for ClassicEngine {
 
     fn snapshot_bytes(&mut self) -> Result<Vec<u8>> {
         self.flush_ingest()?;
-        let pairs = self.db.scan(&[], &[0xffu8; 32], usize::MAX)?;
+        // Empty end = unbounded: keys above any sentinel still ship.
+        let pairs = self.db.scan(&[], &[], usize::MAX)?;
         Ok(encode_kv_snapshot(&pairs))
     }
 
@@ -157,15 +158,9 @@ impl KvEngine for ClassicEngine {
             wal_bytes: s.wal_bytes,
             flush_bytes: s.flush_bytes,
             compact_bytes: s.compact_bytes,
-            engine_vlog_bytes: 0,
-            gc_bytes: 0,
-            gc_cycles: 0,
             gets: self.gets,
             scans: self.scans,
-            vlog_reads: 0,
-            vlog_read_bytes: 0,
-            readahead_hits: 0,
-            readahead_misses: 0,
+            ..Default::default()
         }
     }
 }

@@ -99,7 +99,8 @@ impl StateMachine for DwisckeyEngine {
 
 impl DwisckeyEngine {
     fn scan_all(&mut self) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
-        let ptrs = self.db.scan(&[], &[0xffu8; 32], usize::MAX)?;
+        // Empty end = unbounded full-range scan.
+        let ptrs = self.db.scan(&[], &[], usize::MAX)?;
         let mut out = Vec::with_capacity(ptrs.len());
         for (k, off) in ptrs {
             if let Some(v) = self.resolve(&off)? {
@@ -169,14 +170,11 @@ impl KvEngine for DwisckeyEngine {
             flush_bytes: s.flush_bytes,
             compact_bytes: s.compact_bytes,
             engine_vlog_bytes: self.vlog.len_bytes(),
-            gc_bytes: 0,
-            gc_cycles: 0,
             gets: self.gets,
             scans: self.scans,
             vlog_reads: self.vlog_reads,
             vlog_read_bytes: self.vlog_read_bytes,
-            readahead_hits: 0,
-            readahead_misses: 0,
+            ..Default::default()
         }
     }
 }

@@ -98,6 +98,11 @@ pub struct EngineOpts {
     pub follower: bool,
     /// Hash/bucket backend for Nezha's GC index build.
     pub index_backend: Arc<dyn crate::gc::IndexBackend>,
+    /// L0 size budget of Nezha's leveled Final Compacted Storage;
+    /// level `d` gets `gc_level0_bytes * gc_fanout^d`.
+    pub gc_level0_bytes: u64,
+    /// Leveled-GC fanout (size ratio between adjacent levels).
+    pub gc_fanout: u64,
 }
 
 impl EngineOpts {
@@ -110,6 +115,8 @@ impl EngineOpts {
             level_base_bytes: 32 << 20,
             follower: false,
             index_backend: Arc::new(crate::gc::RustBackend),
+            gc_level0_bytes: 8 << 20,
+            gc_fanout: 10,
         }
     }
 }
@@ -128,6 +135,11 @@ pub struct EngineStats {
     /// GC output bytes (Nezha's background rewrite).
     pub gc_bytes: u64,
     pub gc_cycles: u64,
+    /// Levels currently holding at least one sorted run (Nezha's
+    /// leveled Final Compacted Storage; zero elsewhere).
+    pub gc_levels: u64,
+    /// Total sorted runs across all levels.
+    pub gc_level_runs: u64,
     pub gets: u64,
     pub scans: u64,
     /// ValueLog entries resolved on the read path.
@@ -177,10 +189,13 @@ pub trait KvEngine: StateMachine {
     }
 
     /// Range scan (Algorithm 3): `[start, end)`, at most `limit` rows.
-    /// `limit` counts *live* rows only — tombstoned keys in the range
-    /// never consume it (engines refill past them), so fewer than
-    /// `limit` rows means the range is exhausted.  This keeps
-    /// row-count parity across engines for the YCSB-E comparisons.
+    /// An **empty** `end` means unbounded (scan to the last key), so
+    /// full-range dumps (snapshots) cannot silently drop keys that
+    /// sort above a sentinel.  `limit` counts *live* rows only —
+    /// tombstoned keys in the range never consume it (engines refill
+    /// past them), so fewer than `limit` rows means the range is
+    /// exhausted.  This keeps row-count parity across engines for the
+    /// YCSB-E comparisons.
     fn scan(&mut self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<(Vec<u8>, Vec<u8>)>>;
 
     /// Group-commit durability point for engine-side files.
@@ -193,10 +208,18 @@ pub trait KvEngine: StateMachine {
         GcPhase::Pre
     }
 
-    /// Start a GC cycle over the just-frozen raft epoch.  Only Nezha
-    /// implements this; the replica calls it right after
-    /// `RaftLog::rotate()`.
-    fn begin_gc(&mut self, _frozen_epoch: u32, _last_index: u64, _last_term: u64) -> Result<()> {
+    /// Start a GC cycle over the frozen raft epochs (every retained
+    /// frozen epoch, oldest first — earlier cycles' uncompacted tails
+    /// ride along).  Entries with `index <= min_index` are already in
+    /// the level stack and are skipped.  Only Nezha implements this;
+    /// the replica calls it right after `RaftLog::rotate()`.
+    fn begin_gc(
+        &mut self,
+        _frozen_epochs: &[u32],
+        _min_index: u64,
+        _last_index: u64,
+        _last_term: u64,
+    ) -> Result<()> {
         anyhow::bail!("{} does not garbage-collect", self.kind())
     }
 

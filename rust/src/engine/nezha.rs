@@ -9,28 +9,34 @@
 //!
 //! **Read path (Algorithms 2 & 3).**  A chained lookup over the
 //! storage modules of Table I — `currentDB` (New/Active Storage) →
-//! `oldDB` (frozen Active Storage, During-GC only) → Final Compacted
-//! Storage (hash-indexed sorted ValueLog, Post-GC).  The paper issues
-//! the two lookups concurrently and prefers the new one; on this
-//! single-socket testbed a prioritized chain is the same decision
-//! procedure (documented in DESIGN.md §2).
+//! `oldDB` (frozen Active Storage, During-GC only) → the leveled Final
+//! Compacted Storage (hash-indexed sorted runs, consulted newest-first;
+//! a retained tombstone in an upper run masks every older run).  The
+//! paper issues the two lookups concurrently and prefers the new one;
+//! on this single-socket testbed a prioritized chain is the same
+//! decision procedure (documented in DESIGN.md §2).
 //!
-//! **GC lifecycle (§III-C).**  `begin_gc` freezes `currentDB` into
-//! `oldDB`, opens a fresh LSM, persists the [`GcState`] flag and spawns
-//! the compaction thread; `poll_gc` swaps in the new Final Compacted
-//! Storage and reports the snapshot point back to the replica.  On
-//! crash, `open` resumes an interrupted cycle from the last key of the
-//! partial sorted file (§III-E).
+//! **GC lifecycle (§III-C/§III-D).**  `begin_gc` freezes `currentDB`
+//! into `oldDB`, opens a fresh LSM, persists the [`GcState`] flag and
+//! spawns the compaction thread, which flushes the frozen epochs into
+//! a new L0 run and performs budget-triggered level merges; `poll_gc`
+//! commits the new [`LevelManifest`] (the atomic visibility point) and
+//! reports the snapshot point back to the replica.  On crash, `open`
+//! resumes an interrupted cycle — flush and merges are deterministic,
+//! so each partial output continues from its last sorted key (§III-E).
 
 use super::common::{decode_kv_snapshot, encode_kv_snapshot, lsm_options};
 use super::{EngineKind, EngineOpts, EngineStats, KvEngine};
 use crate::gc::{
-    self, sorted_path, FinalStorage, GcInputs, GcOutput, GcPhase, GcState,
+    self,
+    levels::{LevelManifest, LeveledStorage},
+    sorted_path, FinalStorage, GcInputs, GcOutput, GcPhase, GcState,
 };
 use crate::lsm::Db;
 use crate::raft::rpc::{Command, LogEntry, LogIndex, Term};
 use crate::raft::StateMachine;
-use crate::vlog::{EpochReaders, HashIndex, SortedVLogWriter, VRef};
+use crate::util::key_before_end;
+use crate::vlog::{EpochReaders, SortedVLogWriter, VRef};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -58,12 +64,21 @@ pub struct NezhaEngine {
     cur_db_seq: u64,
     /// `oldDB`: frozen Active Storage index (During-GC only).
     old_db: Option<(Db, u64)>,
-    /// Final Compacted Storage (Post-GC).
-    fin: Option<FinalStorage>,
+    /// Committed description of the leveled Final Compacted Storage.
+    manifest: LevelManifest,
+    /// Open run handles for `manifest.levels` (Post-GC reads).
+    levels: LeveledStorage,
     gc_rx: Option<mpsc::Receiver<Result<GcOutput>>>,
     gc_join: Option<std::thread::JoinHandle<()>>,
-    /// Epoch frozen by the running cycle (readahead invalidation point).
+    /// Newest epoch frozen by the running cycle (readahead
+    /// invalidation point).
     gc_frozen_epoch: Option<u32>,
+    /// Snapshot point of the in-flight cycle.  Crash recovery replays
+    /// applies from the previous snapshot; entries at or below this
+    /// point belong to the *frozen* layout (oldDB), not currentDB —
+    /// otherwise their re-applied VRefs dangle once the cycle
+    /// completes and the frozen epochs are deleted.
+    gc_floor: Option<u64>,
     /// Completed-but-unreported cycle (delivered via `poll_gc`).
     pending: Option<GcOutput>,
     gc_bytes: u64,
@@ -72,7 +87,7 @@ pub struct NezhaEngine {
     scans: u64,
 }
 
-fn db_path(dir: &PathBuf, seq: u64) -> PathBuf {
+fn db_path(dir: &std::path::Path, seq: u64) -> PathBuf {
     dir.join(format!("db-{seq:06}"))
 }
 
@@ -101,20 +116,86 @@ impl NezhaEngine {
             }
         }
         seqs.sort_unstable();
-        let state = GcState::load(&opts.dir)?;
-        let cur_seq = *seqs.last().unwrap_or(&0);
-        let cur_db = Db::open(lsm_options(&db_path(&opts.dir, cur_seq), &opts, true))?;
-        let old_db = if state.as_ref().map_or(false, |s| s.running) && seqs.len() >= 2 {
-            let old_seq = seqs[seqs.len() - 2];
-            Some((Db::open(lsm_options(&db_path(&opts.dir, old_seq), &opts, true))?, old_seq))
-        } else {
-            None
+        let mut state = GcState::load(&opts.dir)?;
+
+        // Level manifest: the committed run stack.  A directory from
+        // the pre-leveled layout has runs but no manifest — adopt the
+        // newest complete generation as the bottom level.
+        let had_manifest = LevelManifest::load(&opts.dir)?;
+        let manifest = match &had_manifest {
+            Some(m) => m.clone(),
+            None => match FinalStorage::latest_gen(&opts.dir)? {
+                Some(g) => LevelManifest { levels: vec![vec![g]], next_gen: g + 1 },
+                None => LevelManifest::default(),
+            },
         };
 
-        let fin = match FinalStorage::latest_gen(&opts.dir)? {
-            Some(g) => Some(FinalStorage::open(&opts.dir, g)?),
-            None => None,
+        // A cycle that committed its manifest but crashed before
+        // clearing the flag is already durable: don't re-run it.
+        if let Some(st) = &state {
+            if st.running && manifest.next_gen > st.out_gen {
+                GcState::clear(&opts.dir)?;
+                state = None;
+            }
+        }
+
+        // Garbage-collect run files outside the manifest (crash window
+        // between manifest commit and file deletion).  Generations at
+        // or above a running cycle's `out_gen` are in-flight outputs
+        // the resume below will finish — keep them.  Skip entirely for
+        // just-adopted legacy layouts (no manifest on disk yet).
+        if had_manifest.is_some() {
+            let live: std::collections::HashSet<u64> =
+                manifest.all_gens().into_iter().collect();
+            let inflight_from = state
+                .as_ref()
+                .filter(|s| s.running)
+                .map(|s| s.out_gen)
+                .unwrap_or(u64::MAX);
+            for g in FinalStorage::list_all_gens(&opts.dir)? {
+                if !live.contains(&g) && g < inflight_from {
+                    FinalStorage::remove_gen(&opts.dir, g);
+                }
+            }
+        }
+
+        let running = state.as_ref().is_some_and(|s| s.running);
+        let (cur_seq, old_db) = if running && seqs.len() >= 2 {
+            let old_seq = seqs[seqs.len() - 2];
+            (
+                *seqs.last().unwrap(),
+                Some((Db::open(lsm_options(&db_path(&opts.dir, old_seq), &opts, true))?, old_seq)),
+            )
+        } else if running {
+            // Crashed between GcState::save and the LSM rotation:
+            // complete the rotation now, demoting the existing LSM to
+            // oldDB (it holds exactly the pre-freeze references).
+            let old_seq = *seqs.last().unwrap_or(&0);
+            (
+                old_seq + 1,
+                Some((Db::open(lsm_options(&db_path(&opts.dir, old_seq), &opts, true))?, old_seq)),
+            )
+        } else {
+            (*seqs.last().unwrap_or(&0), None)
         };
+        let cur_db = Db::open(lsm_options(&db_path(&opts.dir, cur_seq), &opts, true))?;
+        // LSM dirs older than the ones in use are leftovers from a
+        // crash between manifest commit and cleanup.
+        let keep_dbs: std::collections::HashSet<u64> = [Some(cur_seq), old_db.as_ref().map(|(_, s)| *s)]
+            .into_iter()
+            .flatten()
+            .collect();
+        for &s in &seqs {
+            if !keep_dbs.contains(&s) {
+                let _ = Db::destroy(&db_path(&opts.dir, s));
+            }
+        }
+
+        let levels = LeveledStorage::open(&opts.dir, &manifest.levels)?;
+        if had_manifest.is_none() && !manifest.is_empty() {
+            // Persist the legacy adoption so the next open is uniform.
+            manifest.save(&opts.dir)?;
+        }
 
         let mut eng = Self {
             gc_enabled,
@@ -122,10 +203,12 @@ impl NezhaEngine {
             cur_db,
             cur_db_seq: cur_seq,
             old_db,
-            fin,
+            manifest,
+            levels,
             gc_rx: None,
             gc_join: None,
             gc_frozen_epoch: None,
+            gc_floor: None,
             pending: None,
             gc_bytes: 0,
             gc_cycles: 0,
@@ -134,22 +217,44 @@ impl NezhaEngine {
             opts,
         };
 
-        // Interrupted cycle? Resume it *in the background* from the
-        // last sorted key (paper §III-E: recovery "only requires an
-        // additional step of reading the interrupt point ... to
-        // complete the remaining GC process" — the node serves
-        // requests in the During-GC mode meanwhile).
-        if let Some(st) = state {
+        // Interrupted cycle? Resume it *in the background* (paper
+        // §III-E: recovery "only requires an additional step of
+        // reading the interrupt point ... to complete the remaining GC
+        // process" — the node serves requests in the During-GC mode
+        // meanwhile).  Flush and merges are deterministic given the
+        // recorded stack, so partial outputs continue from their last
+        // sorted key.
+        if let Some(mut st) = state {
             if st.running {
-                let prev_gen = FinalStorage::latest_gen(&eng.opts.dir)?
-                    .filter(|&g| g < st.out_gen);
+                if st.stack != eng.manifest.levels {
+                    // Pre-leveled in-flight cycle: its partial output
+                    // interleaved previous-generation data under the
+                    // old full-merge semantics, which a leveled flush
+                    // cannot resume.  Discard the partial output and
+                    // redo the cycle against the adopted legacy stack
+                    // (all inputs — frozen epochs + old generation —
+                    // are still on disk until the cycle commits).
+                    // Persist the corrected flag file immediately: a
+                    // second crash must resume with THIS stack, or
+                    // finish_cycle would delete the adopted bottom run
+                    // that the empty-stack replay never merged in.
+                    FinalStorage::remove_gen(&eng.opts.dir, st.out_gen);
+                    st.stack = eng.manifest.levels.clone();
+                    st.save(&eng.opts.dir)?;
+                }
                 let inputs = GcInputs {
-                    frozen_vlog_path: crate::raft::log::epoch_path(&eng.opts.raft_dir, st.frozen_epoch),
-                    prev_gen,
+                    frozen_vlog_paths: (st.min_epoch..=st.frozen_epoch)
+                        .map(|e| crate::raft::log::epoch_path(&eng.opts.raft_dir, e))
+                        .filter(|p| p.exists())
+                        .collect(),
                     dir: eng.opts.dir.clone(),
                     out_gen: st.out_gen,
+                    stack: st.stack.clone(),
+                    min_index: st.min_index,
                     last_index: st.last_index,
                     last_term: st.last_term,
+                    level0_bytes: eng.opts.gc_level0_bytes,
+                    fanout: eng.opts.gc_fanout,
                     resume: true,
                     backend: Arc::clone(&eng.opts.index_backend),
                 };
@@ -163,6 +268,7 @@ impl NezhaEngine {
                 eng.gc_rx = Some(rx);
                 eng.gc_join = Some(join);
                 eng.gc_frozen_epoch = Some(st.frozen_epoch);
+                eng.gc_floor = Some(st.last_index);
             }
         }
         Ok(eng)
@@ -181,11 +287,26 @@ impl NezhaEngine {
     }
 
     fn finish_cycle(&mut self, out: GcOutput) -> Result<()> {
-        let prev_gen = self.fin.as_ref().map(|f| f.gen);
-        self.fin = Some(FinalStorage::open(&self.opts.dir, out.gen)?);
-        if let Some(g) = prev_gen {
-            if g != out.gen {
-                FinalStorage::remove_gen(&self.opts.dir, g);
+        let old_gens = self.manifest.all_gens();
+        // Open the new stack before committing, reusing the handles of
+        // runs that survived unchanged.  open_reusing touches
+        // self.levels only once every new run opened successfully, so
+        // a failure here leaves the committed stack serving reads.
+        let new_levels = LeveledStorage::open_reusing(&self.opts.dir, &out.levels, &mut self.levels)?;
+        self.levels = new_levels;
+        self.manifest.levels = out.levels.clone();
+        let max_written = out.written_gens.iter().copied().max().unwrap_or(0);
+        self.manifest.next_gen = self.manifest.next_gen.max(max_written + 1);
+        // Commit point: the manifest makes the new runs visible.
+        self.manifest.save(&self.opts.dir)?;
+        GcState::clear(&self.opts.dir)?;
+        // Delete runs superseded by this cycle (old stack members and
+        // intermediate outputs that did not survive into the stack).
+        let live: std::collections::HashSet<u64> =
+            self.manifest.all_gens().into_iter().collect();
+        for g in old_gens.iter().chain(out.written_gens.iter()) {
+            if !live.contains(g) {
+                FinalStorage::remove_gen(&self.opts.dir, *g);
             }
         }
         if let Some((db, seq)) = self.old_db.take() {
@@ -193,12 +314,13 @@ impl NezhaEngine {
             drop(db);
             Db::destroy(&dir)?;
         }
-        GcState::clear(&self.opts.dir)?;
-        // The compacted epoch's files are about to be dropped by the
-        // replica: release the reader handles + readahead segments.
+        // The compacted epochs' files may be dropped by the replica:
+        // release the reader handles + readahead segments (retained
+        // epoch files are simply reopened on demand).
         if let Some(frozen) = self.gc_frozen_epoch.take() {
             self.readers.invalidate_below(frozen + 1);
         }
+        self.gc_floor = None;
         self.gc_bytes += out.bytes_written;
         self.gc_cycles += 1;
         self.pending = Some(out);
@@ -240,11 +362,21 @@ impl NezhaEngine {
 
 impl StateMachine for NezhaEngine {
     /// Algorithm 1, line 7: `ApplyStateMachine(currentDB, k, offset)` —
-    /// only the lightweight reference is stored.
+    /// only the lightweight reference is stored.  During crash
+    /// recovery Raft replays applies from the previous snapshot;
+    /// entries at or below the in-flight cycle's snapshot point are
+    /// routed to the frozen `oldDB` (their pre-crash home) so
+    /// `currentDB` never accumulates references that dangle once the
+    /// cycle completes and the frozen epochs are deleted.
     fn apply(&mut self, entry: &LogEntry, vref: VRef) -> Result<()> {
         match &entry.cmd {
             Command::Put { key, .. } | Command::Delete { key } => {
-                self.cur_db.put(key, &vref.encode())?;
+                match (&mut self.old_db, self.gc_floor) {
+                    (Some((db, _)), Some(floor)) if entry.index <= floor => {
+                        db.put(key, &vref.encode())?;
+                    }
+                    _ => self.cur_db.put(key, &vref.encode())?,
+                }
             }
             Command::Noop => {}
         }
@@ -252,7 +384,9 @@ impl StateMachine for NezhaEngine {
     }
 
     fn snapshot_bytes(&mut self) -> Result<Vec<u8>> {
-        let pairs = self.scan(&[], &[0xffu8; 32], usize::MAX)?;
+        // Unbounded full-range scan: an empty end bound means +∞, so
+        // keys sorting above any sentinel still reach the snapshot.
+        let pairs = self.scan(&[], &[], usize::MAX)?;
         Ok(encode_kv_snapshot(&pairs))
     }
 
@@ -264,26 +398,46 @@ impl StateMachine for NezhaEngine {
     }
 
     fn install_snapshot(&mut self, data: &[u8], li: LogIndex, lt: Term) -> Result<()> {
-        // Abort any cycle in flight; the snapshot supersedes it.
+        // Abort any cycle in flight; the snapshot supersedes it.  (A
+        // successful in-flight cycle commits below us first — harmless,
+        // the snapshot replaces the whole stack either way.)
         self.try_finish(true)?;
+        // A cycle that completed just now must not be reported to the
+        // replica: its snapshot point predates `li` and would regress
+        // the Raft snapshot mark.
+        self.pending = None;
         // Every old VRef is about to become invalid and the raft log
         // resets its epochs: drop all cached ValueLog state.
         self.readers.invalidate_from(0);
+        self.gc_frozen_epoch = None;
+        self.gc_floor = None;
         let pairs = decode_kv_snapshot(data)?;
-        // Materialize the snapshot as a fresh Final Compacted Storage
-        // (the sorted ValueLog *is* the snapshot — §III-E).
-        let gen = self.fin.as_ref().map_or(1, |f| f.gen + 1);
+        // Materialize the snapshot as a fresh bottom-level run — a
+        // complete, tombstone-free image, so the single run IS the
+        // snapshot (§III-E) and the new stack has exactly one level.
+        let gen = self.manifest.next_gen;
         let mut w = SortedVLogWriter::create(&sorted_path(&self.opts.dir, gen), lt, li)?;
         for (k, v) in &pairs {
             w.add(&crate::vlog::Entry::put(lt, li, k.clone(), v.clone()))?;
         }
-        let (_, key_offsets) = w.finish()?;
-        let idx = HashIndex::build(&key_offsets);
-        idx.save(&gc::index_path(&self.opts.dir, gen))?;
-        let prev = self.fin.as_ref().map(|f| f.gen);
-        self.fin = Some(FinalStorage::open(&self.opts.dir, gen)?);
-        if let Some(g) = prev {
-            FinalStorage::remove_gen(&self.opts.dir, g);
+        gc::seal_run(&self.opts.dir, gen, w, &self.opts.index_backend)?;
+        self.manifest.levels = vec![vec![gen]];
+        self.manifest.next_gen = gen + 1;
+        self.manifest.save(&self.opts.dir)?;
+        // The aborted cycle is superseded even if it failed: without
+        // this, a stale `running` flag would make the next restart
+        // resume a GC that writes into (or past) the snapshot's
+        // generation range.
+        GcState::clear(&self.opts.dir)?;
+        self.levels = LeveledStorage::open(&self.opts.dir, &self.manifest.levels)?;
+        // Remove every other on-disk generation — the old stack AND any
+        // partial output a failed cycle left behind.  Generation
+        // numbers are reused after this point, so a stale partial file
+        // would otherwise be adopted by a later cycle's resume.
+        for g in FinalStorage::list_all_gens(&self.opts.dir)? {
+            if g != gen {
+                FinalStorage::remove_gen(&self.opts.dir, g);
+            }
         }
         // Fresh currentDB (all old references are now invalid).
         let old_seq = self.cur_db_seq;
@@ -322,11 +476,10 @@ impl KvEngine for NezhaEngine {
                 return self.resolve(r);
             }
         }
-        // Post-GC: hash-indexed sorted file (one random read).
-        if let Some(fin) = &self.fin {
-            if let Some(e) = fin.get(key)? {
-                return Ok(e.value);
-            }
+        // Post-GC: the leveled sorted runs, newest first.  The first
+        // hit wins — a retained tombstone masks every older run.
+        if let Some(e) = self.levels.get(key)? {
+            return Ok(e.value);
         }
         Ok(None)
     }
@@ -334,7 +487,8 @@ impl KvEngine for NezhaEngine {
     /// Algorithm 2, batched: run the chained module lookup per key
     /// (cheap — 12-byte references), then resolve every collected
     /// [`VRef`] in one epoch-grouped, offset-sorted ValueLog pass and
-    /// every Final-Storage key in one offset-ordered sorted-log pass.
+    /// every leveled-storage key through one offset-ordered batched
+    /// verification pass per run (newest-first, misses carry deeper).
     fn multi_get(&mut self, keys: &[Vec<u8>]) -> Result<Vec<Option<Vec<u8>>>> {
         self.gets += keys.len() as u64;
         self.try_finish(false)?;
@@ -342,7 +496,7 @@ impl KvEngine for NezhaEngine {
         enum Pend {
             /// LSM hit — next entry of the batched VRef resolution.
             Ref,
-            /// Missed both LSMs — next entry of the Final-Storage batch.
+            /// Missed both LSMs — next entry of the leveled batch.
             Fin,
             /// No module can hold it.
             Absent,
@@ -363,7 +517,7 @@ impl KvEngine for NezhaEngine {
                     continue;
                 }
             }
-            if self.fin.is_some() {
+            if !self.levels.is_empty() {
                 fin_keys.push(key);
                 pend.push(Pend::Fin);
             } else {
@@ -371,9 +525,10 @@ impl KvEngine for NezhaEngine {
             }
         }
         let resolved = self.readers.read_vrefs_batched(&refs)?;
-        let fin_hits = match &self.fin {
-            Some(fin) if !fin_keys.is_empty() => fin.multi_get(&fin_keys)?,
-            _ => Vec::new(),
+        let fin_hits = if fin_keys.is_empty() {
+            Vec::new()
+        } else {
+            self.levels.multi_get(&fin_keys)?
         };
         let mut rit = resolved.into_iter();
         let mut fit = fin_hits.into_iter();
@@ -398,28 +553,29 @@ impl KvEngine for NezhaEngine {
     /// are found or the range is exhausted.  Tombstones therefore do
     /// not consume scan budget (row-count parity with Classic, whose
     /// LSM drops tombstones before limiting), and no value is ever
-    /// resolved only to be discarded by the limit.
+    /// resolved only to be discarded by the limit.  An empty `end`
+    /// means unbounded.
     fn scan(&mut self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
         self.scans += 1;
         self.try_finish(false)?;
         enum Src {
             Val(Vec<u8>),
             Ref(VRef),
-            /// Tombstone from Final storage: occupies its merge slot
+            /// Tombstone from a sorted run: occupies its merge slot
             /// (keeping each pass's coverage window exact) but yields
             /// no row and resolves nothing.
             Tomb,
         }
         let mut out = Vec::new();
         let mut lo = start.to_vec();
-        while out.len() < limit && lo.as_slice() < end {
+        while out.len() < limit && key_before_end(&lo, end) {
             let need = limit - out.len();
-            // Priority: sorted (oldest) < oldDB < currentDB (newest);
-            // the BTreeMap insert order implements MergeResults'
-            // precedence.
+            // Priority: deeper/older runs < shallower/newer runs <
+            // oldDB < currentDB; the BTreeMap insert order implements
+            // MergeResults' precedence.
             let mut merged: BTreeMap<Vec<u8>, Src> = BTreeMap::new();
-            if let Some(fin) = &self.fin {
-                for e in fin.scan(&lo, end, need)? {
+            for run in self.levels.runs_oldest_first() {
+                for e in run.scan(&lo, end, need)? {
                     merged.insert(e.key, e.value.map_or(Src::Tomb, Src::Val));
                 }
             }
@@ -492,6 +648,8 @@ impl KvEngine for NezhaEngine {
             engine_vlog_bytes: 0,
             gc_bytes: self.gc_bytes,
             gc_cycles: self.gc_cycles,
+            gc_levels: self.levels.level_count() as u64,
+            gc_level_runs: self.levels.run_count() as u64,
             gets: self.gets,
             scans: self.scans,
             vlog_reads: vlog_io.vlog_reads,
@@ -504,7 +662,7 @@ impl KvEngine for NezhaEngine {
     fn gc_phase(&self) -> GcPhase {
         if self.old_db.is_some() || self.gc_rx.is_some() {
             GcPhase::During
-        } else if self.fin.is_some() {
+        } else if !self.levels.is_empty() {
             GcPhase::Post
         } else {
             GcPhase::Pre
@@ -512,18 +670,31 @@ impl KvEngine for NezhaEngine {
     }
 
     /// §III-C step 1-2: freeze the Active Storage, open the New
-    /// Storage, kick off asynchronous compaction.
-    fn begin_gc(&mut self, frozen_epoch: u32, last_index: u64, last_term: u64) -> Result<()> {
+    /// Storage, kick off asynchronous compaction over every retained
+    /// frozen epoch (earlier cycles' uncompacted tails included).
+    fn begin_gc(
+        &mut self,
+        frozen_epochs: &[u32],
+        min_index: u64,
+        last_index: u64,
+        last_term: u64,
+    ) -> Result<()> {
         anyhow::ensure!(self.gc_enabled, "Nezha-NoGC never garbage-collects");
         anyhow::ensure!(self.gc_rx.is_none() && self.old_db.is_none(), "GC already running");
+        anyhow::ensure!(!frozen_epochs.is_empty(), "GC needs at least one frozen epoch");
 
-        let out_gen = self.fin.as_ref().map_or(1, |f| f.gen + 1);
+        let min_epoch = *frozen_epochs.iter().min().unwrap();
+        let frozen_epoch = *frozen_epochs.iter().max().unwrap();
+        let out_gen = self.manifest.next_gen;
         GcState {
             running: true,
+            min_epoch,
             frozen_epoch,
             out_gen,
+            min_index,
             last_index,
             last_term,
+            stack: self.manifest.levels.clone(),
         }
         .save(&self.opts.dir)?;
 
@@ -534,13 +705,21 @@ impl KvEngine for NezhaEngine {
         let frozen_seq = std::mem::replace(&mut self.cur_db_seq, new_seq);
         self.old_db = Some((frozen_db, frozen_seq));
 
+        let mut epochs: Vec<u32> = frozen_epochs.to_vec();
+        epochs.sort_unstable();
         let inputs = GcInputs {
-            frozen_vlog_path: crate::raft::log::epoch_path(&self.opts.raft_dir, frozen_epoch),
-            prev_gen: self.fin.as_ref().map(|f| f.gen),
+            frozen_vlog_paths: epochs
+                .iter()
+                .map(|&e| crate::raft::log::epoch_path(&self.opts.raft_dir, e))
+                .collect(),
             dir: self.opts.dir.clone(),
             out_gen,
+            stack: self.manifest.levels.clone(),
+            min_index,
             last_index,
             last_term,
+            level0_bytes: self.opts.gc_level0_bytes,
+            fanout: self.opts.gc_fanout,
             resume: false,
             backend: Arc::clone(&self.opts.index_backend),
         };
@@ -554,6 +733,7 @@ impl KvEngine for NezhaEngine {
         self.gc_rx = Some(rx);
         self.gc_join = Some(join);
         self.gc_frozen_epoch = Some(frozen_epoch);
+        self.gc_floor = Some(last_index);
         Ok(())
     }
 
@@ -585,16 +765,25 @@ mod tests {
 
     impl Rig {
         fn new(name: &str, gc: bool) -> Self {
+            Self::with_opts(name, gc, |_| {})
+        }
+
+        fn with_opts(name: &str, gc: bool, tweak: impl Fn(&mut EngineOpts)) -> Self {
             let base = std::env::temp_dir().join(format!("nezha-eng-{name}-{}", std::process::id()));
             let _ = std::fs::remove_dir_all(&base);
             let log = RaftLog::open(&base.join("raft")).unwrap();
             let mut opts = EngineOpts::new(base.join("engine"), base.join("raft"));
             opts.memtable_bytes = 64 << 10;
+            tweak(&mut opts);
             let eng = NezhaEngine::open(opts, gc).unwrap();
             Self { base, log, eng, next_index: 1 }
         }
 
-        fn reopen(mut self, gc: bool) -> Self {
+        fn reopen(self, gc: bool) -> Self {
+            self.reopen_with(gc, |_| {})
+        }
+
+        fn reopen_with(mut self, gc: bool, tweak: impl Fn(&mut EngineOpts)) -> Self {
             // Simulate crash+restart: drop engine, reopen everything.
             let base = self.base.clone();
             drop(std::mem::replace(
@@ -604,6 +793,7 @@ mod tests {
             let log = RaftLog::open(&base.join("raft")).unwrap();
             let mut opts = EngineOpts::new(base.join("engine"), base.join("raft"));
             opts.memtable_bytes = 64 << 10;
+            tweak(&mut opts);
             let eng = NezhaEngine::open(opts, gc).unwrap();
             let next_index = self.next_index;
             Self { base, log, eng, next_index }
@@ -630,11 +820,13 @@ mod tests {
         /// Trigger a full GC cycle synchronously.
         fn gc(&mut self) -> GcOutput {
             let last_index = self.next_index - 1;
+            let min_index = self.log.snap_index;
             let frozen = self.log.rotate().unwrap();
-            self.eng.begin_gc(frozen, last_index, 1).unwrap();
+            let epochs = self.log.frozen_epochs();
+            self.eng.begin_gc(&epochs, min_index, last_index, 1).unwrap();
             let out = self.eng.wait_gc().unwrap().expect("gc output");
             self.log.mark_snapshot(out.last_index, out.last_term).unwrap();
-            self.log.drop_epochs_below(frozen + 1).unwrap();
+            self.log.drop_epochs_covered_by(out.last_index).unwrap();
             out
         }
     }
@@ -677,6 +869,7 @@ mod tests {
         }
         let out = r.gc();
         assert!(out.entries == 300, "entries={}", out.entries);
+        assert_eq!(out.levels, vec![vec![1]]);
         assert_eq!(r.eng.gc_phase(), GcPhase::Post);
         // Old epoch file dropped; reads must come from Final storage.
         assert_eq!(r.eng.get(b"key00123").unwrap(), Some(b"val123".to_vec()));
@@ -693,7 +886,7 @@ mod tests {
         }
         let last_index = r.next_index - 1;
         let frozen = r.log.rotate().unwrap();
-        r.eng.begin_gc(frozen, last_index, 1).unwrap();
+        r.eng.begin_gc(&[frozen], 0, last_index, 1).unwrap();
         assert_eq!(r.eng.gc_phase(), GcPhase::During);
         // New writes land in the New Storage while GC runs.
         r.put("new001", b"from-new");
@@ -708,7 +901,7 @@ mod tests {
         // Finish the cycle.
         let out = r.eng.wait_gc().unwrap().unwrap();
         r.log.mark_snapshot(out.last_index, out.last_term).unwrap();
-        r.log.drop_epochs_below(frozen + 1).unwrap();
+        r.log.drop_epochs_covered_by(out.last_index).unwrap();
         assert_eq!(r.eng.gc_phase(), GcPhase::Post);
         assert_eq!(r.eng.get(b"old042").unwrap(), Some(b"from-active".to_vec()));
         assert_eq!(r.eng.get(b"old050").unwrap(), Some(b"overwritten".to_vec()));
@@ -722,11 +915,12 @@ mod tests {
         r.del("a");
         assert_eq!(r.eng.get(b"a").unwrap(), None);
         r.gc();
-        // After GC the tombstone annihilated the value.
+        // After GC the tombstone annihilated the value (first cycle's
+        // run is the bottom level).
         assert_eq!(r.eng.get(b"a").unwrap(), None);
         assert_eq!(r.eng.get(b"b").unwrap(), Some(b"2".to_vec()));
         // Delete of a GC'd key: tombstone in currentDB must mask the
-        // sorted file.
+        // sorted run.
         r.del("b");
         assert_eq!(r.eng.get(b"b").unwrap(), None);
         let rows = r.eng.scan(b"", b"z", 100).unwrap();
@@ -734,7 +928,7 @@ mod tests {
     }
 
     #[test]
-    fn multiple_gc_cycles_merge_generations() {
+    fn multiple_gc_cycles_stack_levels() {
         let mut r = Rig::new("multi", true);
         for i in 0..100u32 {
             r.put(&format!("k{i:03}"), b"gen1");
@@ -745,18 +939,63 @@ mod tests {
         }
         let out = r.gc();
         assert_eq!(out.gen, 2);
-        assert_eq!(out.entries, 150);
+        // No merge at default budgets: the second run stacks on L0.
+        assert_eq!(out.entries, 100);
+        assert_eq!(out.levels, vec![vec![2, 1]]);
         assert_eq!(r.eng.get(b"k010").unwrap(), Some(b"gen1".to_vec()));
         assert_eq!(r.eng.get(b"k075").unwrap(), Some(b"gen2".to_vec()));
         assert_eq!(r.eng.get(b"k149").unwrap(), Some(b"gen2".to_vec()));
         assert_eq!(r.eng.scan(b"k", b"l", 1000).unwrap().len(), 150);
+        let s = r.eng.stats();
+        assert_eq!(s.gc_level_runs, 2);
+        assert_eq!(s.gc_levels, 1);
+    }
+
+    /// Tiny budgets force a merge every cycle; deletes annihilate only
+    /// once their tombstones reach the bottom, and reads stay correct
+    /// throughout.
+    #[test]
+    fn leveled_merges_with_deletes_roundtrip() {
+        let mut r = Rig::with_opts("levmerge", true, |o| {
+            o.gc_level0_bytes = 1 << 10;
+            o.gc_fanout = 4;
+        });
+        for cycle in 0..4u32 {
+            for i in 0..40u32 {
+                r.put(&format!("k{:03}", cycle * 10 + i), format!("c{cycle}").as_bytes());
+            }
+            r.del(&format!("k{:03}", cycle));
+            r.gc();
+        }
+        // k000..k003 deleted in their own cycles; k000 was re-written
+        // by later cycles? (cycle c writes k{c*10}..k{c*10+39}).
+        // cycle0 wrote k000..k039 then deleted k000.
+        // cycle1 re-wrote k010..k049 (k010 lives, value c1), deleted k001.
+        // cycle2 wrote k020..k059, deleted k002; cycle3 k030..k069, del k003.
+        assert_eq!(r.eng.get(b"k000").unwrap(), None);
+        assert_eq!(r.eng.get(b"k001").unwrap(), None);
+        assert_eq!(r.eng.get(b"k002").unwrap(), None);
+        assert_eq!(r.eng.get(b"k003").unwrap(), None);
+        assert_eq!(r.eng.get(b"k004").unwrap(), Some(b"c0".to_vec()));
+        assert_eq!(r.eng.get(b"k015").unwrap(), Some(b"c1".to_vec()));
+        assert_eq!(r.eng.get(b"k069").unwrap(), Some(b"c3".to_vec()));
+        // 70 distinct keys minus 4 deleted.
+        assert_eq!(r.eng.scan(b"k", b"l", 1000).unwrap().len(), 66);
+        // And the same after a crash + reopen.
+        let mut r = r.reopen_with(true, |o| {
+            o.gc_level0_bytes = 1 << 10;
+            o.gc_fanout = 4;
+        });
+        assert_eq!(r.eng.get(b"k000").unwrap(), None);
+        assert_eq!(r.eng.get(b"k015").unwrap(), Some(b"c1".to_vec()));
+        assert_eq!(r.eng.scan(b"k", b"l", 1000).unwrap().len(), 66);
     }
 
     #[test]
     fn nogc_variant_refuses_gc() {
         let mut r = Rig::new("nogc", false);
         r.put("k", b"v");
-        assert!(r.eng.begin_gc(0, 1, 1).is_err());
+        assert!(r.eng.begin_gc(&[0], 0, 1, 1).is_err());
         assert_eq!(r.eng.kind(), EngineKind::NezhaNoGc);
     }
 
@@ -800,9 +1039,18 @@ mod tests {
         // compaction thread runs (simulate by never starting it).
         let last_index = r.next_index - 1;
         let frozen = r.log.rotate().unwrap();
-        GcState { running: true, frozen_epoch: frozen, out_gen: 1, last_index, last_term: 1 }
-            .save(&r.base.join("engine"))
-            .unwrap();
+        GcState {
+            running: true,
+            min_epoch: frozen,
+            frozen_epoch: frozen,
+            out_gen: 1,
+            min_index: 0,
+            last_index,
+            last_term: 1,
+            stack: vec![],
+        }
+        .save(&r.base.join("engine"))
+        .unwrap();
         r.eng.sync().unwrap();
         r.log.sync().unwrap();
         // Reopen: recovery is fast (resume runs in the background);
@@ -814,6 +1062,36 @@ mod tests {
         assert_eq!(out.entries, 150);
         assert_eq!(eng.gc_phase(), GcPhase::Post);
         assert_eq!(eng.get(b"k100").unwrap(), Some(b"v100".to_vec()));
+    }
+
+    /// A committed cycle whose crash landed between the manifest write
+    /// and the GC_STATE clear must NOT be re-run on reopen, and the
+    /// stale flag must be cleared.
+    #[test]
+    fn recovery_skips_already_committed_cycle() {
+        let mut r = Rig::new("rec-committed", true);
+        for i in 0..60u32 {
+            r.put(&format!("k{i:02}"), b"v");
+        }
+        let out = r.gc();
+        // Re-create the pre-clear crash window by hand.
+        GcState {
+            running: true,
+            min_epoch: 0,
+            frozen_epoch: 0,
+            out_gen: out.gen,
+            min_index: 0,
+            last_index: out.last_index,
+            last_term: out.last_term,
+            stack: vec![],
+        }
+        .save(&r.base.join("engine"))
+        .unwrap();
+        let r = r.reopen(true);
+        let mut eng = r.eng;
+        assert_eq!(eng.gc_phase(), GcPhase::Post, "no spurious resume");
+        assert_eq!(GcState::load(&r.base.join("engine")).unwrap(), None);
+        assert_eq!(eng.get(b"k30").unwrap(), Some(b"v".to_vec()));
     }
 
     /// Acceptance: single-key `get` is byte-identical to `multi_get` of
@@ -853,7 +1131,7 @@ mod tests {
         // Rotate: epoch 0 freezes, epoch 1 becomes the live log.
         let last_index = r.next_index - 1;
         let frozen = r.log.rotate().unwrap();
-        r.eng.begin_gc(frozen, last_index, 1).unwrap();
+        r.eng.begin_gc(&[frozen], 0, last_index, 1).unwrap();
         for i in 0..60u32 {
             r.put(&format!("new{i:03}"), format!("epoch1-{i}").as_bytes());
         }
@@ -883,7 +1161,7 @@ mod tests {
         // (tombstoned keys must stay gone after compaction).
         let out = r.eng.wait_gc().unwrap().unwrap();
         r.log.mark_snapshot(out.last_index, out.last_term).unwrap();
-        r.log.drop_epochs_below(frozen + 1).unwrap();
+        r.log.drop_epochs_covered_by(out.last_index).unwrap();
         let post = r.eng.multi_get(&keys).unwrap();
         assert_eq!(post, got);
     }
@@ -950,6 +1228,29 @@ mod tests {
         assert!(s.vlog_read_bytes >= 300 * 256);
     }
 
+    /// Satellite: an unbounded scan (empty end) reaches keys that sort
+    /// above the old `[0xff; 32]` sentinel, so snapshots carry them.
+    #[test]
+    fn snapshot_includes_keys_above_old_sentinel() {
+        let mut r = Rig::new("snap-ff", true);
+        r.put("normal", b"1");
+        // A 40-byte key of 0xff sorts above the old [0xff; 32] bound.
+        let idx = r.next_index;
+        r.next_index += 1;
+        let e = LogEntry {
+            term: 1,
+            index: idx,
+            cmd: Command::Put { key: vec![0xff; 40], value: b"high".to_vec() },
+        };
+        let vref = r.log.append(e.clone()).unwrap();
+        r.log.flush().unwrap();
+        r.eng.apply(&e, vref).unwrap();
+        let snap = r.eng.snapshot_bytes().unwrap();
+        let pairs = decode_kv_snapshot(&snap).unwrap();
+        assert_eq!(pairs.len(), 2, "snapshot dropped the 0xff-heavy key");
+        assert!(pairs.iter().any(|(k, v)| k == &vec![0xffu8; 40] && v == b"high"));
+    }
+
     #[test]
     fn snapshot_install_roundtrip() {
         let mut a = Rig::new("snap-src", true);
@@ -965,5 +1266,48 @@ mod tests {
         assert_eq!(b.eng.get(b"k40").unwrap(), Some(b"v40".to_vec()));
         assert_eq!(b.eng.get(b"post").unwrap(), Some(b"1".to_vec()));
         assert_eq!(b.eng.scan(b"", b"z", 1000).unwrap().len(), 81);
+        // The installed snapshot is a single bottom-level run.
+        let s = b.eng.stats();
+        assert_eq!(s.gc_level_runs, 1);
+    }
+
+    /// Satellite regression: when the in-flight cycle ABORTS with an
+    /// error during `install_snapshot`, the persisted `running` flag
+    /// must not survive — otherwise the next restart resumes a GC that
+    /// writes into (or past) the snapshot's generation range.
+    #[test]
+    fn install_snapshot_clears_failed_cycle_state() {
+        let mut a = Rig::new("snap-clean-src", true);
+        for i in 0..50u32 {
+            a.put(&format!("k{i:02}"), b"v");
+        }
+        let snap = a.eng.snapshot_bytes().unwrap();
+
+        let mut b = Rig::new("snap-clean-dst", true);
+        for i in 0..30u32 {
+            b.put(&format!("x{i:02}"), b"v");
+        }
+        let last_index = b.next_index - 1;
+        let frozen = b.log.rotate().unwrap();
+        // Sabotage the cycle: point it at a missing epoch so run_gc
+        // fails and the engine stays During with GcState persisted.
+        b.eng.begin_gc(&[frozen + 7], 0, last_index, 1).unwrap();
+        assert!(b.eng.wait_gc().unwrap().is_none(), "cycle must fail");
+        assert_eq!(b.eng.gc_phase(), GcPhase::During);
+        assert!(GcState::load(&b.base.join("engine")).unwrap().unwrap().running);
+
+        b.eng.install_snapshot(&snap, 50, 1).unwrap();
+        assert_eq!(
+            GcState::load(&b.base.join("engine")).unwrap(),
+            None,
+            "stale GcState survived install_snapshot"
+        );
+        assert_eq!(b.eng.get(b"k25").unwrap(), Some(b"v".to_vec()));
+        assert_eq!(b.eng.get(b"x01").unwrap(), None, "pre-snapshot state wiped");
+        // A reopen must not resume the dead cycle.
+        let r = b.reopen(true);
+        let mut eng = r.eng;
+        assert_eq!(eng.gc_phase(), GcPhase::Post);
+        assert_eq!(eng.get(b"k25").unwrap(), Some(b"v".to_vec()));
     }
 }

@@ -1,0 +1,303 @@
+//! Leveled Final Compacted Storage (paper §III-C/§III-D).
+//!
+//! The single-generation Final Compacted Storage rewrote the *entire*
+//! sorted dataset every GC cycle — O(total data) write amplification
+//! per cycle, exactly what WiscKey-style key-value separation was
+//! meant to avoid.  This module replaces it with a **leveled run
+//! stack**:
+//!
+//! * `levels[0]` (L0) collects one sorted run per GC cycle (the flush
+//!   of a frozen epoch); deeper levels hold at most one merged run.
+//! * A level is merged into the next one only when its total size
+//!   exceeds its budget (`level0_bytes * fanout^depth`), so a cycle's
+//!   rewrite volume is bounded by the budgets of the levels it
+//!   touches, not by the total data size.
+//! * Tombstones are **retained** in upper levels (they must mask older
+//!   runs below) and annihilate only when a merge's output becomes the
+//!   bottom of the stack.
+//!
+//! The [`LevelManifest`] is the single commit point: run files become
+//! visible only once the manifest references them (written via
+//! tmp+rename), and files outside the manifest are garbage-collected
+//! on open.  Reads go through [`LeveledStorage`], which consults runs
+//! newest-first — the first hit (value *or* tombstone) wins.
+//!
+//! One accepted trade-off: a run that *trivially moves* to the stack
+//! bottom (metadata-only slide, no rewrite) keeps any tombstones it
+//! carries until a future merge lands there — reads stay correct (a
+//! tombstone still reports the key as absent), it only costs their
+//! space until then.
+
+use super::FinalStorage;
+use crate::util::{Decoder, Encoder};
+use crate::vlog::Entry as VEntry;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+const MANIFEST_MAGIC: u64 = 0x4E5A_4C56_4C53_0001; // "NZLVLS" v1
+pub const MANIFEST_FILE: &str = "LEVELS";
+
+/// Size budget of level `depth` (L0 = depth 0).
+pub fn level_budget(level0_bytes: u64, fanout: u64, depth: usize) -> u64 {
+    let mut b = level0_bytes.max(1);
+    for _ in 0..depth {
+        b = b.saturating_mul(fanout.max(2));
+    }
+    b
+}
+
+/// Wire format of a level stack (shared by [`LevelManifest`] and
+/// `GcState`, which snapshots the stack — both must decode
+/// identically for crash-resume replanning).
+pub fn encode_levels(e: &mut Encoder, levels: &[Vec<u64>]) {
+    e.varint(levels.len() as u64);
+    for level in levels {
+        e.varint(level.len() as u64);
+        for g in level {
+            e.u64(*g);
+        }
+    }
+}
+
+/// Inverse of [`encode_levels`].
+pub fn decode_levels(d: &mut Decoder) -> Result<Vec<Vec<u64>>> {
+    let nlevels = d.varint()? as usize;
+    let mut levels = Vec::with_capacity(nlevels);
+    for _ in 0..nlevels {
+        let nruns = d.varint()? as usize;
+        let mut runs = Vec::with_capacity(nruns);
+        for _ in 0..nruns {
+            runs.push(d.u64()?);
+        }
+        levels.push(runs);
+    }
+    Ok(levels)
+}
+
+/// CRC-framed atomic flag-file write (`crc32 | body` via tmp+rename).
+/// One implementation for every GC commit-point file (`LEVELS`,
+/// `GC_STATE`) so the crash-atomicity mechanics cannot drift.
+///
+/// The data is fsynced before the rename and the directory after it:
+/// the manifest is the commit point that authorizes deleting the
+/// superseded runs, so a power cut must never journal the rename
+/// while the bytes (or the directory entry) are still in flight.
+pub(crate) fn save_framed(dir: &Path, name: &str, body: &[u8]) -> Result<()> {
+    use std::io::Write;
+    let mut framed = Encoder::with_capacity(body.len() + 4);
+    framed.u32(crc32fast::hash(body)).bytes(body);
+    let tmp = dir.join(format!("{name}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(framed.as_slice())?;
+        f.sync_data()?;
+    }
+    std::fs::rename(tmp, dir.join(name))?;
+    std::fs::File::open(dir)?.sync_data()?;
+    Ok(())
+}
+
+/// Inverse of [`save_framed`]: `Ok(None)` when the file is absent,
+/// an error on CRC mismatch.
+pub(crate) fn load_framed(dir: &Path, name: &str) -> Result<Option<Vec<u8>>> {
+    let buf = match std::fs::read(dir.join(name)) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let mut d = Decoder::new(&buf);
+    let crc = d.u32()?;
+    let body = d.bytes(d.remaining())?;
+    anyhow::ensure!(crc32fast::hash(body) == crc, "{name} crc mismatch");
+    Ok(Some(body.to_vec()))
+}
+
+/// Durable description of the level stack: `levels[d]` lists the run
+/// generations at depth `d`, newest first.  `next_gen` is the next
+/// unused generation number (monotonic across the directory's life).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LevelManifest {
+    pub levels: Vec<Vec<u64>>,
+    pub next_gen: u64,
+}
+
+impl Default for LevelManifest {
+    fn default() -> Self {
+        Self { levels: Vec::new(), next_gen: 1 }
+    }
+}
+
+impl LevelManifest {
+    /// Every referenced generation, top level first.
+    pub fn all_gens(&self) -> Vec<u64> {
+        self.levels.iter().flatten().copied().collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.levels.iter().all(|l| l.is_empty())
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let mut e = Encoder::new();
+        e.u64(MANIFEST_MAGIC).u64(self.next_gen);
+        encode_levels(&mut e, &self.levels);
+        save_framed(dir, MANIFEST_FILE, &e.into_vec())
+    }
+
+    pub fn load(dir: &Path) -> Result<Option<Self>> {
+        let Some(body) = load_framed(dir, MANIFEST_FILE)? else {
+            return Ok(None);
+        };
+        let mut d = Decoder::new(&body);
+        if d.u64()? != MANIFEST_MAGIC {
+            bail!("level manifest bad magic");
+        }
+        let next_gen = d.u64()?;
+        let levels = decode_levels(&mut d)?;
+        Ok(Some(Self { levels, next_gen }))
+    }
+}
+
+/// The open run stack: one [`FinalStorage`] per run, addressed
+/// newest-first within each level, shallowest level first.
+#[derive(Default)]
+pub struct LeveledStorage {
+    pub levels: Vec<Vec<FinalStorage>>,
+}
+
+impl LeveledStorage {
+    pub fn open(dir: &Path, gens: &[Vec<u64>]) -> Result<Self> {
+        Self::open_reusing(dir, gens, &mut Self::default())
+    }
+
+    /// Open the stack described by `gens`, adopting already-open run
+    /// handles from `prev` where the generation matches (so swapping
+    /// manifests does not re-read unchanged indexes).
+    ///
+    /// Exception-safe: every missing run is opened *before* `prev` is
+    /// consumed, so on error the caller's stack is left untouched —
+    /// the engine must keep serving reads from the committed stack if
+    /// a manifest swap fails mid-way.
+    pub fn open_reusing(dir: &Path, gens: &[Vec<u64>], prev: &mut Self) -> Result<Self> {
+        let held: std::collections::HashSet<u64> =
+            prev.runs_newest_first().map(|r| r.gen).collect();
+        let mut fresh: std::collections::HashMap<u64, FinalStorage> =
+            std::collections::HashMap::new();
+        for &g in gens.iter().flatten() {
+            if !held.contains(&g) && !fresh.contains_key(&g) {
+                let run = FinalStorage::open(dir, g)
+                    .with_context(|| format!("leveled storage run {g}"))?;
+                fresh.insert(g, run);
+            }
+        }
+        // Infallible from here on.
+        let mut pool: std::collections::HashMap<u64, FinalStorage> = std::mem::take(prev)
+            .levels
+            .into_iter()
+            .flatten()
+            .map(|r| (r.gen, r))
+            .collect();
+        pool.extend(fresh);
+        let levels = gens
+            .iter()
+            .map(|level| {
+                level
+                    .iter()
+                    .map(|g| pool.remove(g).expect("run pre-opened or adopted"))
+                    .collect()
+            })
+            .collect();
+        Ok(Self { levels })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.levels.iter().all(|l| l.is_empty())
+    }
+
+    pub fn run_count(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn level_count(&self) -> usize {
+        self.levels.iter().filter(|l| !l.is_empty()).count()
+    }
+
+    /// Runs in read-precedence order: shallowest level first, newest
+    /// run first within a level.
+    pub fn runs_newest_first(&self) -> impl Iterator<Item = &FinalStorage> {
+        self.levels.iter().flatten()
+    }
+
+    /// Runs in merge-precedence order for scans: oldest first, so a
+    /// BTreeMap insert sweep lets newer runs overwrite older keys.
+    pub fn runs_oldest_first(&self) -> impl Iterator<Item = &FinalStorage> {
+        self.levels.iter().rev().flat_map(|l| l.iter().rev())
+    }
+
+    /// Point lookup, newest-first.  The first run containing the key
+    /// wins — a retained tombstone (`value == None`) masks every older
+    /// run, exactly like the LSM chain above it.
+    pub fn get(&self, key: &[u8]) -> Result<Option<VEntry>> {
+        for run in self.runs_newest_first() {
+            if let Some(e) = run.get(key)? {
+                return Ok(Some(e));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Batched point lookup: each run is consulted once with the still
+    /// unresolved subset of keys (offset-ordered verification inside
+    /// [`FinalStorage::multi_get`]); a hit — value or tombstone —
+    /// settles the key so deeper runs never see it.
+    pub fn multi_get(&self, keys: &[&[u8]]) -> Result<Vec<Option<VEntry>>> {
+        let mut out: Vec<Option<VEntry>> = vec![None; keys.len()];
+        let mut pending: Vec<usize> = (0..keys.len()).collect();
+        for run in self.runs_newest_first() {
+            if pending.is_empty() {
+                break;
+            }
+            let sub: Vec<&[u8]> = pending.iter().map(|&i| keys[i]).collect();
+            let got = run.multi_get(&sub)?;
+            let mut still = Vec::with_capacity(pending.len());
+            for (&slot, e) in pending.iter().zip(got) {
+                match e {
+                    Some(e) => out[slot] = Some(e),
+                    None => still.push(slot),
+                }
+            }
+            pending = still;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("nezha-manifest-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert_eq!(LevelManifest::load(&dir).unwrap(), None);
+        let m = LevelManifest { levels: vec![vec![5, 3], vec![], vec![1]], next_gen: 6 };
+        m.save(&dir).unwrap();
+        assert_eq!(LevelManifest::load(&dir).unwrap(), Some(m.clone()));
+        assert_eq!(m.all_gens(), vec![5, 3, 1]);
+        assert!(!m.is_empty());
+        assert!(LevelManifest::default().is_empty());
+    }
+
+    #[test]
+    fn budgets_grow_geometrically() {
+        assert_eq!(level_budget(1 << 20, 10, 0), 1 << 20);
+        assert_eq!(level_budget(1 << 20, 10, 1), 10 << 20);
+        assert_eq!(level_budget(1 << 20, 10, 2), 100 << 20);
+        // Saturates instead of overflowing.
+        assert_eq!(level_budget(u64::MAX, 10, 3), u64::MAX);
+        // Degenerate fanouts are clamped so budgets still grow.
+        assert!(level_budget(1024, 0, 2) > level_budget(1024, 0, 1));
+    }
+}

@@ -1,31 +1,44 @@
-//! Raft-aware garbage collection framework (paper §III-C).
+//! Raft-aware garbage collection framework (paper §III-C/§III-D).
 //!
-//! A GC cycle takes the frozen Active Storage (one raft ValueLog epoch
-//! + its key→VRef LSM) plus the previous Final Compacted Storage, and
-//! produces a new Final Compacted Storage: a key-ordered
-//! [`SortedVLog`] + [`HashIndex`].  The sorted log carries
-//! `(last_term, last_index)` so it doubles as the Raft snapshot.
+//! A GC cycle takes the frozen Active Storage (the raft ValueLog
+//! epochs frozen since the last snapshot point, plus the frozen
+//! key→VRef LSM) and **flushes** its live entries into a new L0 sorted
+//! run of the leveled Final Compacted Storage ([`levels`]).  No other
+//! data is rewritten unless a level exceeds its size budget, in which
+//! case that level is merged into the next one — so a cycle's write
+//! volume is bounded by the budgets of the levels it touches instead
+//! of growing with the total dataset (the leveled-LSM discipline
+//! applied to the sorted ValueLog).
 //!
 //! Lifecycle (paper's four phases):
 //! 1. **GC initialization** — the replica rotates the raft log epoch
 //!    (freezing the Active ValueLog), the engine freezes its LSM and
 //!    opens fresh ones (the New Storage), and persists a [`GcState`]
-//!    flag file.
-//! 2. **Data compaction** — [`run_gc`] (on a background thread) merges
-//!    the frozen epoch's live entries with the previous sorted log.
-//! 3. **Cleanup** — the engine swaps in the new [`FinalStorage`],
-//!    deletes the old generation + frozen LSM, and the replica marks
-//!    the Raft snapshot and drops the old epoch files.
+//!    flag file recording the input epochs and the committed stack.
+//! 2. **Data compaction** — [`run_gc`] (on a background thread)
+//!    flushes the frozen epochs' live entries into a new L0 run, then
+//!    performs any budget-triggered level merges.
+//! 3. **Cleanup** — the engine commits the new [`levels::LevelManifest`]
+//!    (the single atomic commit point), deletes superseded run files +
+//!    the frozen LSM, and the replica marks the Raft snapshot and
+//!    drops fully-covered epoch files.
 //! 4. **Steady state** — the New Storage has become the Active
 //!    Storage; the cycle can repeat.
 //!
-//! Crash recovery: if [`GcState`] says a cycle was running, the engine
-//! resumes from the last key in the partial sorted file
-//! ([`SortedVLogWriter::resume`]) — §III-E.
+//! Crash recovery (§III-E): if [`GcState`] says a cycle was running,
+//! the engine re-runs the cycle with `resume = true`.  Both the flush
+//! and every level merge are deterministic given the committed stack,
+//! so each output run resumes from the last key of its partial file
+//! ([`SortedVLogWriter::resume`]) and completed steps re-verify as
+//! no-ops.  Tombstones are retained in upper levels and annihilate
+//! only when a merge's output becomes the bottom of the stack.
+
+pub mod levels;
 
 use crate::util::{Decoder, Encoder};
 use crate::vlog::{Entry as VEntry, HashIndex, SortedVLog, SortedVLogWriter, VLogReader};
 use anyhow::{Context, Result};
+use levels::{decode_levels, encode_levels, level_budget, load_framed, save_framed};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -51,7 +64,9 @@ pub struct GcConfig {
     /// Minimum logical time between cycles (scheduled trigger floor).
     pub min_interval_ms: u64,
     /// Skip triggering while apply-queue pressure is above this many
-    /// entries (load-level trigger: don't GC under peak load).
+    /// entries (load-level trigger: don't GC under peak load).  The
+    /// cycle's snapshot point is `last_applied`, so a bounded backlog
+    /// never blocks GC — only genuine overload defers it.
     pub max_load_entries: u64,
     /// Build the hash index through the AOT XLA planner when available.
     pub use_xla_planner: bool,
@@ -62,7 +77,7 @@ impl Default for GcConfig {
         Self {
             threshold_bytes: 64 << 20,
             min_interval_ms: 0,
-            max_load_entries: u64::MAX,
+            max_load_entries: 4096,
             use_xla_planner: true,
         }
     }
@@ -70,49 +85,89 @@ impl Default for GcConfig {
 
 /// Persistent GC progress flag ("the recovery process first checks the
 /// atomic GC state flag" — §III-E).  Written atomically via tmp+rename.
+///
+/// Besides the frozen-epoch range and output generation it records the
+/// committed level stack at cycle start, so a resumed cycle replans the
+/// exact same flush + merge sequence.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct GcState {
     pub running: bool,
+    /// Oldest retained frozen epoch feeding this cycle.
+    pub min_epoch: u32,
+    /// Newest frozen epoch feeding this cycle.
     pub frozen_epoch: u32,
+    /// Generation of the flush (L0) output run.
     pub out_gen: u64,
+    /// Entries with `index <= min_index` are already in the stack.
+    pub min_index: u64,
     pub last_index: u64,
     pub last_term: u64,
+    /// Committed level stack (run gens, newest-first per level) when
+    /// the cycle began.
+    pub stack: Vec<Vec<u64>>,
 }
 
 impl GcState {
+    /// Serialized length of the pre-leveled (single-generation) format:
+    /// `running u8 + frozen_epoch u32 + out_gen/last_index/last_term
+    /// u64`.  The leveled format is ≥ 42 bytes, so the length
+    /// disambiguates and old flag files keep decoding after an upgrade.
+    const LEGACY_BODY_LEN: usize = 29;
+
     pub fn save(&self, dir: &Path) -> Result<()> {
-        let mut e = Encoder::with_capacity(40);
+        let mut e = Encoder::with_capacity(64);
         e.u8(self.running as u8)
+            .u32(self.min_epoch)
             .u32(self.frozen_epoch)
             .u64(self.out_gen)
+            .u64(self.min_index)
             .u64(self.last_index)
             .u64(self.last_term);
-        let body = e.into_vec();
-        let mut framed = Encoder::with_capacity(body.len() + 4);
-        framed.u32(crc32fast::hash(&body)).bytes(&body);
-        let tmp = dir.join("GC_STATE.tmp");
-        std::fs::write(&tmp, framed.as_slice())?;
-        std::fs::rename(tmp, dir.join("GC_STATE"))?;
-        Ok(())
+        encode_levels(&mut e, &self.stack);
+        save_framed(dir, "GC_STATE", &e.into_vec())
     }
 
     pub fn load(dir: &Path) -> Result<Option<Self>> {
-        let buf = match std::fs::read(dir.join("GC_STATE")) {
-            Ok(b) => b,
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
-            Err(e) => return Err(e.into()),
+        let Some(body) = load_framed(dir, "GC_STATE")? else {
+            return Ok(None);
         };
-        let mut d = Decoder::new(&buf);
-        let crc = d.u32()?;
-        let body = d.bytes(d.remaining())?;
-        anyhow::ensure!(crc32fast::hash(body) == crc, "gc state crc mismatch");
+        let body = body.as_slice();
         let mut d = Decoder::new(body);
+        if body.len() == Self::LEGACY_BODY_LEN {
+            // Pre-leveled flag file: single frozen epoch, no recorded
+            // stack (the engine substitutes the adopted legacy stack
+            // and restarts the cycle's output — the old full-merge
+            // partial output is not resumable under leveled flushes).
+            let running = d.u8()? != 0;
+            let frozen_epoch = d.u32()?;
+            return Ok(Some(Self {
+                running,
+                min_epoch: frozen_epoch,
+                frozen_epoch,
+                out_gen: d.u64()?,
+                min_index: 0,
+                last_index: d.u64()?,
+                last_term: d.u64()?,
+                stack: Vec::new(),
+            }));
+        }
+        let running = d.u8()? != 0;
+        let min_epoch = d.u32()?;
+        let frozen_epoch = d.u32()?;
+        let out_gen = d.u64()?;
+        let min_index = d.u64()?;
+        let last_index = d.u64()?;
+        let last_term = d.u64()?;
+        let stack = decode_levels(&mut d)?;
         Ok(Some(Self {
-            running: d.u8()? != 0,
-            frozen_epoch: d.u32()?,
-            out_gen: d.u64()?,
-            last_index: d.u64()?,
-            last_term: d.u64()?,
+            running,
+            min_epoch,
+            frozen_epoch,
+            out_gen,
+            min_index,
+            last_index,
+            last_term,
+            stack,
         }))
     }
 
@@ -125,7 +180,9 @@ impl GcState {
     }
 }
 
-/// The Final Compacted Storage module: sorted ValueLog + hash index.
+/// One sorted run of the Final Compacted Storage: sorted ValueLog +
+/// hash index.  Runs are stacked into levels by
+/// [`levels::LeveledStorage`].
 pub struct FinalStorage {
     pub log: SortedVLog,
     pub index: HashIndex,
@@ -149,7 +206,8 @@ impl FinalStorage {
     }
 
     /// Point lookup via the hash index (one random read on hit —
-    /// paper §IV-C2).
+    /// paper §IV-C2).  A hit may be a retained tombstone
+    /// (`value == None`); callers must let it mask older runs.
     pub fn get(&self, key: &[u8]) -> Result<Option<VEntry>> {
         self.index.lookup(key, &self.log)
     }
@@ -169,7 +227,7 @@ impl FinalStorage {
         let mut out: Vec<Option<VEntry>> = vec![None; keys.len()];
         for (i, off) in cands {
             if out[i].is_some() {
-                continue; // a key appears at most once in a sorted log
+                continue; // a key appears at most once in a sorted run
             }
             let e = self.log.read(off).context("final storage candidate read")?;
             if e.key == keys[i] {
@@ -180,30 +238,56 @@ impl FinalStorage {
     }
 
     /// Range scan: one random read for the start position, then
-    /// sequential (paper §IV-C3).
+    /// sequential (paper §IV-C3).  An empty `end` means unbounded.
     pub fn scan(&self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<VEntry>> {
         let from = self.index.scan_start(start);
         self.log.scan_from(from, start, end, limit)
     }
 
-    /// Discover the newest complete generation in `dir`.
-    pub fn latest_gen(dir: &Path) -> Result<Option<u64>> {
-        let mut best = None;
+    fn scan_gens(dir: &Path, suffix: &str, out: &mut Vec<u64>) -> Result<()> {
         let rd = match std::fs::read_dir(dir) {
             Ok(r) => r,
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
             Err(e) => return Err(e.into()),
         };
         for entry in rd {
             let name = entry?.file_name();
             let name = name.to_string_lossy();
-            if let Some(num) = name.strip_prefix("sorted-").and_then(|s| s.strip_suffix(".idx")) {
+            if let Some(num) = name.strip_prefix("sorted-").and_then(|s| s.strip_suffix(suffix)) {
                 if let Ok(g) = num.parse::<u64>() {
-                    best = Some(best.map_or(g, |b: u64| b.max(g)));
+                    out.push(g);
                 }
             }
         }
-        Ok(best)
+        Ok(())
+    }
+
+    /// List every *sealed* generation (index file present) in `dir`.
+    pub fn list_gens(dir: &Path) -> Result<Vec<u64>> {
+        let mut out = Vec::new();
+        Self::scan_gens(dir, ".idx", &mut out)?;
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// List every generation with *any* on-disk file — sealed runs and
+    /// partial (unsealed) outputs alike.  Cleanup paths must use this:
+    /// a partial `.vlog` without its `.idx` is invisible to
+    /// [`Self::list_gens`] but, left behind across generation reuse, a
+    /// later cycle's resume could adopt it.
+    pub fn list_all_gens(dir: &Path) -> Result<Vec<u64>> {
+        let mut out = Vec::new();
+        Self::scan_gens(dir, ".idx", &mut out)?;
+        Self::scan_gens(dir, ".vlog", &mut out)?;
+        out.sort_unstable();
+        out.dedup();
+        Ok(out)
+    }
+
+    /// Discover the newest complete generation in `dir` (legacy
+    /// single-generation layouts, adopted as a bottom level on open).
+    pub fn latest_gen(dir: &Path) -> Result<Option<u64>> {
+        Ok(Self::list_gens(dir)?.last().copied())
     }
 
     pub fn remove_gen(dir: &Path, gen: u64) {
@@ -243,11 +327,26 @@ impl IndexBackend for RustBackend {
 }
 
 /// What a finished cycle hands back to the replica.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct GcOutput {
+    /// Generation of the flushed L0 run.
     pub gen: u64,
+    /// Entries in the flushed L0 run (tombstones included unless the
+    /// run became the bottom of the stack).
     pub entries: u64,
+    /// Bytes written by the epoch flush alone.
+    pub flush_bytes: u64,
+    /// Bytes written by budget-triggered level merges.
+    pub merge_bytes: u64,
+    /// Total bytes this cycle wrote (`flush_bytes + merge_bytes`).
     pub bytes_written: u64,
+    /// Number of level merges the cycle performed.
+    pub merges: u64,
+    /// Resulting level stack (run gens, newest-first per level).
+    pub levels: Vec<Vec<u64>>,
+    /// Every generation the cycle wrote (flush + merge outputs),
+    /// whether or not it survived into `levels`.
+    pub written_gens: Vec<u64>,
     pub last_index: u64,
     pub last_term: u64,
     pub wall_ms: u64,
@@ -255,103 +354,285 @@ pub struct GcOutput {
 }
 
 /// Inputs for one compaction cycle (runs on a background thread; only
-/// touches frozen files).
+/// touches frozen files — the committed stack is read-only input and
+/// new runs become visible only when the engine commits the manifest).
 pub struct GcInputs {
-    /// Frozen Active-Storage ValueLog (raft epoch file).
-    pub frozen_vlog_path: PathBuf,
-    /// Previous Final Compacted Storage generation, if any.
-    pub prev_gen: Option<u64>,
-    /// Output directory (holds sorted-*.vlog/idx).
+    /// Frozen Active-Storage ValueLogs (raft epoch files), oldest
+    /// first.  Multiple files appear when earlier cycles froze with an
+    /// apply backlog: the uncompacted tails ride along here.
+    pub frozen_vlog_paths: Vec<PathBuf>,
+    /// Output directory (holds sorted-*.vlog/idx + manifest).
     pub dir: PathBuf,
+    /// Generation for the flush output; merge outputs take successive
+    /// generations after it.
     pub out_gen: u64,
+    /// Committed level stack at cycle start.
+    pub stack: Vec<Vec<u64>>,
+    /// Entries with `index <= min_index` are already in the stack.
+    pub min_index: u64,
     pub last_index: u64,
     pub last_term: u64,
-    /// Resume a partially-written output (crash recovery).
+    /// L0 size budget; level `d` gets `level0_bytes * fanout^d`.
+    pub level0_bytes: u64,
+    pub fanout: u64,
+    /// Resume partially-written outputs (crash recovery).
     pub resume: bool,
     pub backend: Arc<dyn IndexBackend>,
 }
 
-/// Run one GC compaction cycle to completion.
+/// Open a run writer, resuming the partial file when recovering.
+///
+/// A resumable file must carry THIS cycle's `(last_term, last_index)`
+/// in its header: generation numbers can be reused after
+/// `install_snapshot` discards a failed cycle, and adopting a stale
+/// file from a different cycle would resurrect pre-snapshot data.  A
+/// header mismatch (or a torn header) starts the run from scratch.
+fn open_writer(
+    path: &Path,
+    resume: bool,
+    last_term: u64,
+    last_index: u64,
+) -> Result<SortedVLogWriter> {
+    if resume && path.exists() {
+        if let Ok(existing) = SortedVLog::open(path) {
+            if existing.last_term == last_term && existing.last_index == last_index {
+                return SortedVLogWriter::resume(path);
+            }
+        }
+    }
+    SortedVLogWriter::create(path, last_term, last_index)
+}
+
+/// Finish a run: build + save its hash index through the configured
+/// backend, return `(bytes, entries)`.  Shared by the GC cycle and
+/// `install_snapshot` so every sorted run — GC-produced or
+/// snapshot-materialized — is sealed through the same path.
+pub(crate) fn seal_run(
+    dir: &Path,
+    gen: u64,
+    w: SortedVLogWriter,
+    backend: &Arc<dyn IndexBackend>,
+) -> Result<(u64, u64)> {
+    let entries = w.entry_count() as u64;
+    let (bytes, key_offsets) = w.finish()?;
+    let cap = HashIndex::capacity_for(key_offsets.len()) as u32;
+    let keys: Vec<&[u8]> = key_offsets.iter().map(|(k, _)| k.as_slice()).collect();
+    let (hashes, buckets) = backend.plan(&keys, cap)?;
+    let index = HashIndex::build_from_planner(&key_offsets, &hashes, &buckets)?;
+    index.save(&index_path(dir, gen))?;
+    Ok((bytes, entries))
+}
+
+/// Flush the frozen epochs' live entries (`min_index < index <=
+/// last_index`, latest-per-key) into the run `out_gen`.  Tombstones are
+/// dropped only when `annihilate` (the run becomes the stack bottom).
+///
+/// Concurrency note: since the trigger may freeze an epoch that still
+/// holds an *uncommitted* tail, Raft conflict resolution can truncate
+/// and rewrite that tail while this thread reads the file.  That is
+/// safe: `last_index` is a committed (applied) index, rewritten frames
+/// always carry indexes above it and are filtered out, and a torn
+/// frame fails its CRC — the cycle errors and retries after restart
+/// instead of absorbing bad data.
+fn flush_epochs(inp: &GcInputs, annihilate: bool) -> Result<(u64, u64)> {
+    let mut fresh: BTreeMap<Vec<u8>, VEntry> = BTreeMap::new();
+    for path in &inp.frozen_vlog_paths {
+        let reader = VLogReader::open(path)?;
+        for item in reader.iter()? {
+            let (_, e) = item?;
+            if e.index <= inp.min_index || e.index > inp.last_index {
+                continue; // already compacted / beyond the snapshot point
+            }
+            if e.key.is_empty() && e.value.is_none() {
+                continue; // raft noop
+            }
+            // Highest index wins (robust even if conflict truncation
+            // left overlapping index ranges across epoch files).
+            let superseded = matches!(fresh.get(&e.key), Some(old) if old.index > e.index);
+            if !superseded {
+                fresh.insert(e.key.clone(), e);
+            }
+        }
+    }
+    let out_path = sorted_path(&inp.dir, inp.out_gen);
+    let mut w = open_writer(&out_path, inp.resume, inp.last_term, inp.last_index)?;
+    let resume_after: Option<Vec<u8>> = w.last_key().map(|k| k.to_vec());
+    for (k, e) in fresh {
+        if annihilate && e.value.is_none() {
+            continue;
+        }
+        if resume_after.as_deref().is_some_and(|ra| k.as_slice() <= ra) {
+            continue;
+        }
+        w.add(&e)?;
+    }
+    seal_run(&inp.dir, inp.out_gen, w, &inp.backend)
+}
+
+/// K-way merge of the sorted runs `src_gens` (newest first — the
+/// first source holding a key wins) into the run `out_gen`.
+/// Tombstones are dropped only when `annihilate`.
+fn merge_runs(
+    dir: &Path,
+    src_gens: &[u64],
+    out_gen: u64,
+    annihilate: bool,
+    resume: bool,
+    backend: &Arc<dyn IndexBackend>,
+) -> Result<(u64, u64)> {
+    let logs: Vec<SortedVLog> = src_gens
+        .iter()
+        .map(|&g| SortedVLog::open(&sorted_path(dir, g)))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!logs.is_empty(), "merge with no sources");
+    // The merged run covers up to the newest input's snapshot point.
+    let (last_term, last_index) = (logs[0].last_term, logs[0].last_index);
+    let out_path = sorted_path(dir, out_gen);
+    let mut w = open_writer(&out_path, resume, last_term, last_index)?;
+    let resume_after: Option<Vec<u8>> = w.last_key().map(|k| k.to_vec());
+
+    /// Pull the next entry of one source (error-propagating).
+    fn next_entry<I: Iterator<Item = Result<(u64, VEntry)>>>(
+        it: &mut I,
+    ) -> Result<Option<VEntry>> {
+        match it.next() {
+            None => Ok(None),
+            Some(r) => Ok(Some(r?.1)),
+        }
+    }
+
+    // Owned per-source heads instead of Peekable: comparisons borrow
+    // the heads, so picking a winner costs zero key clones per output
+    // entry even at bottom-level merge sizes.
+    let mut iters: Vec<_> = logs.iter().map(|l| l.iter()).collect();
+    let mut heads: Vec<Option<VEntry>> = Vec::with_capacity(iters.len());
+    for it in &mut iters {
+        heads.push(next_entry(it)?);
+    }
+    loop {
+        // Smallest key across sources; ties go to the newest (lowest
+        // source position), which then swallows the key everywhere.
+        let mut win: Option<usize> = None;
+        for (i, h) in heads.iter().enumerate() {
+            if let Some(e) = h {
+                let better = match win {
+                    None => true,
+                    Some(w) => e.key < heads[w].as_ref().expect("winner head").key,
+                };
+                if better {
+                    win = Some(i);
+                }
+            }
+        }
+        let Some(wi) = win else { break };
+        let e = heads[wi].take().expect("winner head");
+        for (i, it) in iters.iter_mut().enumerate() {
+            if i == wi {
+                continue;
+            }
+            // Superseded by a newer run.
+            while heads[i].as_ref().is_some_and(|h| h.key == e.key) {
+                heads[i] = next_entry(it)?;
+            }
+        }
+        heads[wi] = next_entry(&mut iters[wi])?;
+        if annihilate && e.value.is_none() {
+            continue;
+        }
+        if resume_after.as_deref().is_some_and(|ra| e.key.as_slice() <= ra) {
+            continue;
+        }
+        w.add(&e)?;
+    }
+    seal_run(dir, out_gen, w, backend)
+}
+
+/// Run one GC cycle to completion: flush the frozen epochs into a new
+/// L0 run, then merge any level that exceeds its budget into the next
+/// one.  Deterministic given `GcInputs`, so crash recovery simply
+/// re-runs it with `resume = true`.
 pub fn run_gc(inp: &GcInputs) -> Result<GcOutput> {
     let t0 = std::time::Instant::now();
 
-    // (1) Latest-per-key view of the frozen epoch.  File order is
-    // index order, so later entries overwrite earlier ones.
-    let mut fresh: BTreeMap<Vec<u8>, VEntry> = BTreeMap::new();
-    let reader = VLogReader::open(&inp.frozen_vlog_path)?;
-    for item in reader.iter()? {
-        let (_, e) = item?;
-        if e.index > inp.last_index {
-            break; // beyond the snapshot point (uncommitted tail)
-        }
-        if e.key.is_empty() && e.value.is_none() {
-            continue; // raft noop
-        }
-        fresh.insert(e.key.clone(), e);
+    // (1) Flush.  The flush run may annihilate tombstones only if the
+    // stack is empty (it becomes the bottom level).
+    let stack_empty = inp.stack.iter().all(|l| l.is_empty());
+    let (flush_bytes, entries) = flush_epochs(inp, stack_empty)?;
+
+    // (2) Push onto L0 and replan the levels.
+    let mut stack: Vec<Vec<u64>> = inp.stack.clone();
+    if stack.is_empty() {
+        stack.push(Vec::new());
     }
-
-    // (2+3) Merge with the previous sorted generation, streaming into
-    // the new sorted log. Tombstones annihilate and are dropped.
-    let out_path = sorted_path(&inp.dir, inp.out_gen);
-    let mut w = if inp.resume && out_path.exists() {
-        SortedVLogWriter::resume(&out_path)?
-    } else {
-        SortedVLogWriter::create(&out_path, inp.last_term, inp.last_index)?
+    stack[0].insert(0, inp.out_gen);
+    let mut written = vec![inp.out_gen];
+    let mut next_gen = inp.out_gen + 1;
+    let mut merge_bytes = 0u64;
+    let mut merges = 0u64;
+    let run_size = |gen: u64| -> u64 {
+        std::fs::metadata(sorted_path(&inp.dir, gen)).map_or(0, |m| m.len())
     };
-    let resume_after: Option<Vec<u8>> = w.last_key().map(|k| k.to_vec());
 
-    let prev = match inp.prev_gen {
-        Some(g) => Some(SortedVLog::open(&sorted_path(&inp.dir, g))?),
-        None => None,
-    };
-    let mut prev_iter = prev.as_ref().map(|p| p.iter().peekable());
-    let mut fresh_iter = fresh.into_iter().peekable();
-
-    let skip = |key: &[u8]| resume_after.as_deref().map_or(false, |ra| key <= ra);
-    loop {
-        // Classic two-way sorted merge; fresh wins ties.
-        let take_fresh = match (fresh_iter.peek(), prev_iter.as_mut().and_then(|i| i.peek())) {
-            (None, None) => break,
-            (Some(_), None) => true,
-            (None, Some(_)) => false,
-            (Some((fk, _)), Some(Ok((_, pe)))) => fk.as_slice() <= pe.key.as_slice(),
-            (_, Some(Err(_))) => true, // surface the error below
-        };
-        if take_fresh {
-            let (k, e) = fresh_iter.next().unwrap();
-            // Skip an equal key on the prev side (superseded).
-            if let Some(pi) = prev_iter.as_mut() {
-                if matches!(pi.peek(), Some(Ok((_, pe))) if pe.key == k) {
-                    pi.next();
-                }
-            }
-            if e.value.is_some() && !skip(&k) {
-                w.add(&e)?;
-            }
-            // Tombstone: drop (annihilates the prev entry too).
-        } else {
-            let item = prev_iter.as_mut().unwrap().next().unwrap();
-            let (_, e) = item?;
-            if e.value.is_some() && !skip(&e.key) {
-                w.add(&e)?;
-            }
+    // (3) Budget maintenance, shallowest level first.  Merging level
+    // `i` into `i + 1` may push that level over ITS budget, so the
+    // sweep continues downward (the classic leveled cascade).
+    let mut i = 0;
+    while i < stack.len() {
+        let size: u64 = stack[i].iter().map(|&g| run_size(g)).sum();
+        if size <= level_budget(inp.level0_bytes, inp.fanout, i) {
+            i += 1;
+            continue;
         }
+        let next_empty = stack.get(i + 1).is_none_or(|l| l.is_empty());
+        if next_empty && stack[i].len() <= 1 {
+            // Trivial move: a single over-budget run with nothing at
+            // the next level slides down (metadata only, no rewrite)
+            // until its depth's budget holds it — read precedence and
+            // tombstone semantics are unchanged by depth alone.
+            let runs = std::mem::take(&mut stack[i]);
+            if i + 1 >= stack.len() {
+                stack.push(Vec::new());
+            }
+            stack[i + 1] = runs;
+            i += 1;
+            continue;
+        }
+        let mut srcs = stack[i].clone();
+        if let Some(next) = stack.get(i + 1) {
+            srcs.extend(next.iter().copied());
+        }
+        // Tombstones annihilate only when the output becomes the
+        // bottom of the stack.
+        let annihilate = stack
+            .get(i + 2..)
+            .is_none_or(|rest| rest.iter().all(|l| l.is_empty()));
+        let out = next_gen;
+        next_gen += 1;
+        let (b, _) = merge_runs(&inp.dir, &srcs, out, annihilate, inp.resume, &inp.backend)
+            .with_context(|| format!("merge level {i} -> {}", i + 1))?;
+        merge_bytes += b;
+        merges += 1;
+        written.push(out);
+        stack[i] = Vec::new();
+        if i + 1 >= stack.len() {
+            stack.push(Vec::new());
+        }
+        stack[i + 1] = vec![out];
+        i += 1;
     }
-
-    let entries = w.entry_count() as u64;
-    let (bytes, key_offsets) = w.finish()?;
-
-    // (4) Hash index via the configured backend.
-    let cap = HashIndex::capacity_for(key_offsets.len()) as u32;
-    let keys: Vec<&[u8]> = key_offsets.iter().map(|(k, _)| k.as_slice()).collect();
-    let (hashes, buckets) = inp.backend.plan(&keys, cap)?;
-    let index = HashIndex::build_from_planner(&key_offsets, &hashes, &buckets)?;
-    index.save(&index_path(&inp.dir, inp.out_gen))?;
+    while stack.last().is_some_and(|l| l.is_empty()) {
+        stack.pop();
+    }
 
     Ok(GcOutput {
         gen: inp.out_gen,
         entries,
-        bytes_written: bytes,
+        flush_bytes,
+        merge_bytes,
+        bytes_written: flush_bytes + merge_bytes,
+        merges,
+        levels: stack,
+        written_gens: written,
         last_index: inp.last_index,
         last_term: inp.last_term,
         wall_ms: t0.elapsed().as_millis() as u64,
@@ -361,6 +642,7 @@ pub fn run_gc(inp: &GcInputs) -> Result<GcOutput> {
 
 #[cfg(test)]
 mod tests {
+    use super::levels::LeveledStorage;
     use super::*;
     use crate::vlog::VLog;
 
@@ -371,8 +653,8 @@ mod tests {
         d
     }
 
-    fn write_epoch(dir: &Path, entries: &[VEntry]) -> PathBuf {
-        let p = dir.join("raft-000000.vlog");
+    fn write_epoch_file(dir: &Path, epoch: u32, entries: &[VEntry]) -> PathBuf {
+        let p = dir.join(format!("raft-{epoch:06}.vlog"));
         let mut v = VLog::open(&p).unwrap();
         for e in entries {
             v.append(e).unwrap();
@@ -381,17 +663,34 @@ mod tests {
         p
     }
 
-    fn inputs(dir: &Path, vlog: PathBuf, prev: Option<u64>, gen: u64, last_index: u64) -> GcInputs {
+    fn write_epoch(dir: &Path, entries: &[VEntry]) -> PathBuf {
+        write_epoch_file(dir, 0, entries)
+    }
+
+    fn inputs(
+        dir: &Path,
+        vlog: PathBuf,
+        stack: Vec<Vec<u64>>,
+        gen: u64,
+        last_index: u64,
+    ) -> GcInputs {
         GcInputs {
-            frozen_vlog_path: vlog,
-            prev_gen: prev,
+            frozen_vlog_paths: vec![vlog],
             dir: dir.to_path_buf(),
             out_gen: gen,
+            stack,
+            min_index: 0,
             last_index,
             last_term: 1,
+            level0_bytes: u64::MAX, // no merges unless a test lowers it
+            fanout: 10,
             resume: false,
             backend: Arc::new(RustBackend),
         }
+    }
+
+    fn open_stack(dir: &Path, out: &GcOutput) -> LeveledStorage {
+        LeveledStorage::open(dir, &out.levels).unwrap()
     }
 
     #[test]
@@ -404,11 +703,13 @@ mod tests {
                 VEntry::put(1, 2, "a", "1"),
                 VEntry::put(1, 3, "b", "2"), // overwrites
                 VEntry::put(1, 4, "c", "1"),
-                VEntry::delete(1, 5, "c"), // tombstone annihilates
+                VEntry::delete(1, 5, "c"), // tombstone annihilates (bottom)
             ],
         );
-        let out = run_gc(&inputs(&dir, vlog, None, 1, 5)).unwrap();
+        let out = run_gc(&inputs(&dir, vlog, vec![], 1, 5)).unwrap();
         assert_eq!(out.entries, 2);
+        assert_eq!(out.levels, vec![vec![1]]);
+        assert_eq!(out.bytes_written, out.flush_bytes);
         let fs = FinalStorage::open(&dir, 1).unwrap();
         assert_eq!(fs.log.last_index, 5);
         assert_eq!(fs.get(b"b").unwrap().unwrap().value, Some(b"2".to_vec()));
@@ -421,13 +722,13 @@ mod tests {
     }
 
     #[test]
-    fn second_cycle_merges_previous_generation() {
+    fn second_cycle_stacks_a_new_run() {
         let dir = tmpdir("second");
         let v1 = write_epoch(
             &dir,
             &[VEntry::put(1, 1, "a", "old"), VEntry::put(1, 2, "b", "old"), VEntry::put(1, 3, "d", "old")],
         );
-        run_gc(&inputs(&dir, v1, None, 1, 3)).unwrap();
+        let out1 = run_gc(&inputs(&dir, v1, vec![], 1, 3)).unwrap();
         // Second epoch: update b, delete d, add c.
         let p2 = dir.join("raft-000001.vlog");
         let mut v = VLog::open(&p2).unwrap();
@@ -435,14 +736,87 @@ mod tests {
         v.append(&VEntry::delete(2, 5, "d")).unwrap();
         v.append(&VEntry::put(2, 6, "c", "new")).unwrap();
         v.sync().unwrap();
-        let out = run_gc(&inputs(&dir, p2, Some(1), 2, 6)).unwrap();
-        assert_eq!(out.entries, 3); // a, b, c
-        let fs = FinalStorage::open(&dir, 2).unwrap();
-        assert_eq!(fs.get(b"a").unwrap().unwrap().value, Some(b"old".to_vec()));
-        assert_eq!(fs.get(b"b").unwrap().unwrap().value, Some(b"new".to_vec()));
-        assert_eq!(fs.get(b"c").unwrap().unwrap().value, Some(b"new".to_vec()));
-        assert!(fs.get(b"d").unwrap().is_none());
-        assert_eq!(fs.log.last_index, 6);
+        let mut inp = inputs(&dir, p2, out1.levels.clone(), 2, 6);
+        inp.min_index = 3;
+        let out = run_gc(&inp).unwrap();
+        // No merge: the new run stacks on L0, tombstone RETAINED
+        // (there is an older run below it).
+        assert_eq!(out.levels, vec![vec![2, 1]]);
+        assert_eq!(out.entries, 3); // b, c, d-tombstone
+        assert_eq!(out.merges, 0);
+        let stack = open_stack(&dir, &out);
+        assert_eq!(stack.get(b"a").unwrap().unwrap().value, Some(b"old".to_vec()));
+        assert_eq!(stack.get(b"b").unwrap().unwrap().value, Some(b"new".to_vec()));
+        assert_eq!(stack.get(b"c").unwrap().unwrap().value, Some(b"new".to_vec()));
+        // Tombstone masks the older run's value.
+        assert_eq!(stack.get(b"d").unwrap().unwrap().value, None);
+    }
+
+    #[test]
+    fn over_budget_level_merges_and_annihilates_at_bottom() {
+        let dir = tmpdir("merge");
+        let v1 = write_epoch(
+            &dir,
+            &[VEntry::put(1, 1, "a", "old"), VEntry::put(1, 2, "b", "old"), VEntry::put(1, 3, "d", "old")],
+        );
+        let out1 = run_gc(&inputs(&dir, v1, vec![], 1, 3)).unwrap();
+        let p2 = dir.join("raft-000001.vlog");
+        let mut v = VLog::open(&p2).unwrap();
+        v.append(&VEntry::put(2, 4, "b", "new")).unwrap();
+        v.append(&VEntry::delete(2, 5, "d")).unwrap();
+        v.sync().unwrap();
+        let mut inp = inputs(&dir, p2, out1.levels.clone(), 2, 5);
+        inp.min_index = 3;
+        inp.level0_bytes = 1; // force the L0 merge
+        inp.fanout = 1 << 20; // ...but keep L1 inside its budget
+        let out = run_gc(&inp).unwrap();
+        assert_eq!(out.merges, 1);
+        assert!(out.merge_bytes > 0);
+        assert_eq!(out.levels, vec![vec![], vec![3]]);
+        assert_eq!(out.written_gens, vec![2, 3]);
+        let stack = open_stack(&dir, &out);
+        assert_eq!(stack.get(b"a").unwrap().unwrap().value, Some(b"old".to_vec()));
+        assert_eq!(stack.get(b"b").unwrap().unwrap().value, Some(b"new".to_vec()));
+        // The merge output is the bottom: the tombstone annihilated.
+        assert!(stack.get(b"d").unwrap().is_none());
+        let bottom = FinalStorage::open(&dir, 3).unwrap();
+        assert_eq!(bottom.index.entry_count, 2); // a, b — no tombstone frame
+    }
+
+    #[test]
+    fn tombstones_retained_until_bottom_level() {
+        let dir = tmpdir("tomblevels");
+        // Bottom run with the key.
+        let v1 = write_epoch(&dir, &[VEntry::put(1, 1, "k", "v"), VEntry::put(1, 2, "z", "zz")]);
+        let out1 = run_gc(&inputs(&dir, v1, vec![], 1, 2)).unwrap();
+        // Delete lands in a new upper run; the tombstone must survive.
+        let p2 = dir.join("raft-000001.vlog");
+        let mut v = VLog::open(&p2).unwrap();
+        v.append(&VEntry::delete(1, 3, "k")).unwrap();
+        v.sync().unwrap();
+        let mut inp = inputs(&dir, p2, out1.levels.clone(), 2, 3);
+        inp.min_index = 2;
+        let out2 = run_gc(&inp).unwrap();
+        let l0 = FinalStorage::open(&dir, 2).unwrap();
+        let tomb = l0.get(b"k").unwrap().expect("tombstone frame retained in L0");
+        assert_eq!(tomb.value, None);
+        let stack = open_stack(&dir, &out2);
+        assert_eq!(stack.get(b"k").unwrap().unwrap().value, None);
+        assert_eq!(stack.get(b"z").unwrap().unwrap().value, Some(b"zz".to_vec()));
+        // A forced full merge annihilates it.
+        let p3 = dir.join("raft-000002.vlog");
+        let mut v = VLog::open(&p3).unwrap();
+        v.append(&VEntry::put(1, 4, "w", "ww")).unwrap();
+        v.sync().unwrap();
+        let mut inp = inputs(&dir, p3, out2.levels.clone(), 3, 4);
+        inp.min_index = 3;
+        inp.level0_bytes = 1;
+        inp.fanout = 2;
+        let out3 = run_gc(&inp).unwrap();
+        let stack = open_stack(&dir, &out3);
+        assert!(stack.get(b"k").unwrap().is_none(), "annihilated at bottom");
+        assert_eq!(stack.get(b"w").unwrap().unwrap().value, Some(b"ww".to_vec()));
+        assert_eq!(stack.get(b"z").unwrap().unwrap().value, Some(b"zz".to_vec()));
     }
 
     #[test]
@@ -453,10 +827,41 @@ mod tests {
             &[VEntry::put(1, 1, "a", "1"), VEntry::put(1, 2, "b", "1"), VEntry::put(1, 3, "x", "uncommitted")],
         );
         // last_index = 2: entry 3 must not appear.
-        run_gc(&inputs(&dir, vlog, None, 1, 2)).unwrap();
+        run_gc(&inputs(&dir, vlog, vec![], 1, 2)).unwrap();
         let fs = FinalStorage::open(&dir, 1).unwrap();
         assert!(fs.get(b"x").unwrap().is_none());
         assert!(fs.get(b"a").unwrap().is_some());
+    }
+
+    #[test]
+    fn multi_epoch_inputs_compact_retained_tails() {
+        let dir = tmpdir("multiepoch");
+        // Epoch 0: indexes 1..=4, but the first cycle snapshotted only
+        // up to 2 (backlog) — 3 and 4 ride along into the next cycle.
+        let v0 = write_epoch_file(
+            &dir,
+            0,
+            &[
+                VEntry::put(1, 1, "a", "1"),
+                VEntry::put(1, 2, "b", "1"),
+                VEntry::put(1, 3, "c", "tail"),
+                VEntry::put(1, 4, "a", "tail-overwrite"),
+            ],
+        );
+        let out1 = run_gc(&inputs(&dir, v0.clone(), vec![], 1, 2)).unwrap();
+        assert_eq!(out1.entries, 2); // a, b
+        // Epoch 1: index 5.
+        let v1 = write_epoch_file(&dir, 1, &[VEntry::put(1, 5, "d", "1")]);
+        let mut inp = inputs(&dir, v1, out1.levels.clone(), 2, 5);
+        inp.frozen_vlog_paths = vec![v0, inp.frozen_vlog_paths[0].clone()];
+        inp.min_index = 2;
+        let out2 = run_gc(&inp).unwrap();
+        assert_eq!(out2.entries, 3); // c, a-overwrite, d
+        let stack = open_stack(&dir, &out2);
+        assert_eq!(stack.get(b"a").unwrap().unwrap().value, Some(b"tail-overwrite".to_vec()));
+        assert_eq!(stack.get(b"b").unwrap().unwrap().value, Some(b"1".to_vec()));
+        assert_eq!(stack.get(b"c").unwrap().unwrap().value, Some(b"tail".to_vec()));
+        assert_eq!(stack.get(b"d").unwrap().unwrap().value, Some(b"1".to_vec()));
     }
 
     #[test]
@@ -475,7 +880,7 @@ mod tests {
             }
             w.finish().unwrap();
         }
-        let mut inp = inputs(&dir, vlog, None, 1, 100);
+        let mut inp = inputs(&dir, vlog, vec![], 1, 100);
         inp.resume = true;
         let out = run_gc(&inp).unwrap();
         assert_eq!(out.entries, 100);
@@ -492,6 +897,68 @@ mod tests {
         assert_eq!(fs.scan(b"", b"z", 1000).unwrap().len(), 100);
     }
 
+    /// Crash/resume mid-LEVEL-MERGE: interrupt the merge output
+    /// mid-frame and re-run the cycle; the finished files must be
+    /// byte-identical to an uninterrupted cycle.
+    #[test]
+    fn resume_mid_merge_is_byte_identical() {
+        let epoch0: Vec<VEntry> = (0..80u64)
+            .map(|i| {
+                if i % 9 == 4 {
+                    VEntry::delete(1, i + 1, format!("key{:04}", i * 3 % 80))
+                } else {
+                    VEntry::put(1, i + 1, format!("key{:04}", i * 3 % 80), format!("v{i}"))
+                }
+            })
+            .collect();
+        let epoch1: Vec<VEntry> = (0..40u64)
+            .map(|i| VEntry::put(1, 81 + i, format!("key{:04}", 40 + i), format!("w{i}")))
+            .collect();
+        let cycle2 = |dir: &Path| -> GcInputs {
+            let v1 = write_epoch_file(dir, 1, &epoch1);
+            let mut inp = inputs(dir, v1, vec![vec![1]], 2, 120);
+            inp.min_index = 80;
+            inp.level0_bytes = 1; // force the merge
+            inp.fanout = 1 << 20;
+            inp
+        };
+        // Reference: uninterrupted run.
+        let ref_dir = tmpdir("merge-ref");
+        let v0 = write_epoch_file(&ref_dir, 0, &epoch0);
+        run_gc(&inputs(&ref_dir, v0, vec![], 1, 80)).unwrap();
+        let ref_out = run_gc(&cycle2(&ref_dir)).unwrap();
+        assert_eq!(ref_out.merges, 1);
+        let merged_gen = *ref_out.written_gens.last().unwrap();
+        let ref_bytes = std::fs::read(sorted_path(&ref_dir, merged_gen)).unwrap();
+
+        // Crashed run: flush completed, merge output cut mid-frame.
+        let dir = tmpdir("merge-crash");
+        let v0 = write_epoch_file(&dir, 0, &epoch0);
+        run_gc(&inputs(&dir, v0, vec![], 1, 80)).unwrap();
+        let mut inp = cycle2(&dir);
+        run_gc(&inp).unwrap();
+        let full = std::fs::read(sorted_path(&dir, merged_gen)).unwrap();
+        assert_eq!(full, ref_bytes, "precondition: deterministic outputs");
+        std::fs::write(sorted_path(&dir, merged_gen), &full[..full.len() * 2 / 3]).unwrap();
+        let _ = std::fs::remove_file(index_path(&dir, merged_gen));
+        inp.resume = true;
+        let out = run_gc(&inp).unwrap();
+        assert_eq!(out.levels, ref_out.levels);
+        let resumed = std::fs::read(sorted_path(&dir, merged_gen)).unwrap();
+        assert_eq!(resumed, ref_bytes, "resumed merge diverged");
+        // And lookups agree with the reference.
+        let a = LeveledStorage::open(&dir, &out.levels).unwrap();
+        let b = LeveledStorage::open(&ref_dir, &ref_out.levels).unwrap();
+        for i in 0..80u64 {
+            let k = format!("key{i:04}");
+            assert_eq!(
+                a.get(k.as_bytes()).unwrap().map(|e| e.value),
+                b.get(k.as_bytes()).unwrap().map(|e| e.value),
+                "{k}"
+            );
+        }
+    }
+
     #[test]
     fn final_storage_multi_get_matches_get() {
         let dir = tmpdir("mget");
@@ -499,7 +966,7 @@ mod tests {
             .map(|i| VEntry::put(1, i + 1, format!("key{i:04}"), format!("v{i}")))
             .collect();
         let vlog = write_epoch(&dir, &entries);
-        run_gc(&inputs(&dir, vlog, None, 1, 400)).unwrap();
+        run_gc(&inputs(&dir, vlog, vec![], 1, 400)).unwrap();
         let fs = FinalStorage::open(&dir, 1).unwrap();
         // Unsorted request order, present and absent keys mixed.
         let keys: Vec<Vec<u8>> = (0..500u64)
@@ -516,26 +983,129 @@ mod tests {
     }
 
     #[test]
+    fn leveled_multi_get_matches_leveled_get() {
+        let dir = tmpdir("lmget");
+        let v0 = write_epoch(
+            &dir,
+            &(0..60u64)
+                .map(|i| VEntry::put(1, i + 1, format!("key{i:03}"), format!("old{i}")))
+                .collect::<Vec<_>>(),
+        );
+        let out1 = run_gc(&inputs(&dir, v0, vec![], 1, 60)).unwrap();
+        let p2 = dir.join("raft-000001.vlog");
+        let mut v = VLog::open(&p2).unwrap();
+        for i in 0..30u64 {
+            if i % 5 == 0 {
+                v.append(&VEntry::delete(1, 61 + i, format!("key{:03}", i * 2))).unwrap();
+            } else {
+                v.append(&VEntry::put(1, 61 + i, format!("key{:03}", i * 2), format!("new{i}"))).unwrap();
+            }
+        }
+        v.sync().unwrap();
+        let mut inp = inputs(&dir, p2, out1.levels.clone(), 2, 90);
+        inp.min_index = 60;
+        let out = run_gc(&inp).unwrap();
+        let stack = open_stack(&dir, &out);
+        let keys: Vec<Vec<u8>> = (0..70u64).map(|i| format!("key{i:03}").into_bytes()).collect();
+        let refs: Vec<&[u8]> = keys.iter().map(|k| k.as_slice()).collect();
+        let batched = stack.multi_get(&refs).unwrap();
+        for (k, b) in refs.iter().zip(batched) {
+            let single = stack.get(k).unwrap();
+            assert_eq!(
+                b.as_ref().map(|e| &e.value),
+                single.as_ref().map(|e| &e.value),
+                "{}",
+                String::from_utf8_lossy(k)
+            );
+        }
+    }
+
+    #[test]
     fn gc_state_flag_roundtrip() {
         let dir = tmpdir("state");
         assert_eq!(GcState::load(&dir).unwrap(), None);
-        let st = GcState { running: true, frozen_epoch: 3, out_gen: 2, last_index: 55, last_term: 4 };
+        let st = GcState {
+            running: true,
+            min_epoch: 2,
+            frozen_epoch: 3,
+            out_gen: 2,
+            min_index: 10,
+            last_index: 55,
+            last_term: 4,
+            stack: vec![vec![7, 5], vec![1]],
+        };
         st.save(&dir).unwrap();
         assert_eq!(GcState::load(&dir).unwrap(), Some(st));
         GcState::clear(&dir).unwrap();
         assert_eq!(GcState::load(&dir).unwrap(), None);
     }
 
+    /// Upgrade path: a pre-leveled GC_STATE (29-byte body, single
+    /// frozen epoch, no stack) still decodes after the format change.
     #[test]
-    fn latest_gen_discovery() {
+    fn gc_state_decodes_legacy_format() {
+        let dir = tmpdir("legacystate");
+        let mut e = Encoder::with_capacity(40);
+        e.u8(1).u32(3).u64(2).u64(55).u64(4);
+        let body = e.into_vec();
+        assert_eq!(body.len(), GcState::LEGACY_BODY_LEN);
+        let mut framed = Encoder::with_capacity(body.len() + 4);
+        framed.u32(crc32fast::hash(&body)).bytes(&body);
+        std::fs::write(dir.join("GC_STATE"), framed.as_slice()).unwrap();
+        let st = GcState::load(&dir).unwrap().expect("legacy state decodes");
+        assert!(st.running);
+        assert_eq!(st.min_epoch, 3);
+        assert_eq!(st.frozen_epoch, 3);
+        assert_eq!(st.out_gen, 2);
+        assert_eq!(st.min_index, 0);
+        assert_eq!(st.last_index, 55);
+        assert_eq!(st.last_term, 4);
+        assert!(st.stack.is_empty());
+    }
+
+    #[test]
+    fn gen_discovery() {
         let dir = tmpdir("gens");
         assert_eq!(FinalStorage::latest_gen(&dir).unwrap(), None);
         let v = write_epoch(&dir, &[VEntry::put(1, 1, "a", "1")]);
-        run_gc(&inputs(&dir, v.clone(), None, 1, 1)).unwrap();
-        run_gc(&inputs(&dir, v, Some(1), 2, 1)).unwrap();
+        let out1 = run_gc(&inputs(&dir, v.clone(), vec![], 1, 1)).unwrap();
+        run_gc(&inputs(&dir, v, out1.levels.clone(), 2, 1)).unwrap();
         assert_eq!(FinalStorage::latest_gen(&dir).unwrap(), Some(2));
+        assert_eq!(FinalStorage::list_gens(&dir).unwrap(), vec![1, 2]);
         FinalStorage::remove_gen(&dir, 2);
         assert_eq!(FinalStorage::latest_gen(&dir).unwrap(), Some(1));
+        // A partial (unsealed) output is invisible to the sealed
+        // listing but must be visible to cleanup.
+        let w = SortedVLogWriter::create(&sorted_path(&dir, 5), 1, 1).unwrap();
+        drop(w);
+        assert_eq!(FinalStorage::list_gens(&dir).unwrap(), vec![1]);
+        assert_eq!(FinalStorage::list_all_gens(&dir).unwrap(), vec![1, 5]);
+    }
+
+    /// Generation reuse after `install_snapshot`: a leftover file from
+    /// a different cycle carries a different snapshot point in its
+    /// header, so a resume must start the run from scratch instead of
+    /// adopting stale (pre-snapshot) content.
+    #[test]
+    fn open_writer_rejects_stale_file_on_resume() {
+        let dir = tmpdir("stale");
+        let p = sorted_path(&dir, 1);
+        {
+            let mut w = SortedVLogWriter::create(&p, 1, 10).unwrap();
+            w.add(&VEntry::put(1, 9, "stale", "old")).unwrap();
+            w.finish().unwrap();
+        }
+        // Matching header → genuine resume, keeps the prefix.
+        let w = open_writer(&p, true, 1, 10).unwrap();
+        assert_eq!(w.last_key(), Some(b"stale".as_slice()));
+        drop(w);
+        // Different cycle → recreated empty.
+        let w = open_writer(&p, true, 2, 20).unwrap();
+        assert_eq!(w.last_key(), None);
+        let (bytes, _) = w.finish().unwrap();
+        assert_eq!(bytes, crate::vlog::sorted::HEADER_LEN);
+        let s = SortedVLog::open(&p).unwrap();
+        assert_eq!((s.last_term, s.last_index), (2, 20));
     }
 
     #[test]
@@ -545,7 +1115,7 @@ mod tests {
             .map(|i| VEntry::put(1, i + 1, format!("user{:08}", i * 7 % 5000), vec![(i % 251) as u8; 64]))
             .collect();
         let vlog = write_epoch(&dir, &entries);
-        let out = run_gc(&inputs(&dir, vlog, None, 1, 5000)).unwrap();
+        let out = run_gc(&inputs(&dir, vlog, vec![], 1, 5000)).unwrap();
         assert!(out.entries > 0);
         let fs = FinalStorage::open(&dir, 1).unwrap();
         let all = fs.scan(b"", b"z", 100_000).unwrap();
@@ -553,5 +1123,73 @@ mod tests {
         for w in all.windows(2) {
             assert!(w[0].key < w[1].key);
         }
+    }
+
+    /// Per-cycle write volume stays bounded by level budgets: with a
+    /// fanout-f stack, most cycles only flush; deep merges are
+    /// geometrically rare, so no cycle rewrites the whole dataset once
+    /// the bottom level exceeds the data added per cycle.
+    #[test]
+    fn cycle_bytes_bounded_by_budgets() {
+        let dir = tmpdir("bounded");
+        let mut stack: Vec<Vec<u64>> = vec![];
+        let mut next_gen = 1u64;
+        let mut index = 0u64;
+        let mut total_flush = 0u64;
+        let mut flush_only_cycles = 0u32;
+        let mut any_merge = false;
+        let per_cycle = 40u64;
+        for cycle in 0..12u32 {
+            let entries: Vec<VEntry> = (0..per_cycle)
+                .map(|i| {
+                    index += 1;
+                    VEntry::put(1, index, format!("key{:06}", cycle as u64 * per_cycle + i), vec![7u8; 64])
+                })
+                .collect();
+            let v = write_epoch_file(&dir, cycle, &entries);
+            let mut inp = inputs(&dir, v, stack.clone(), next_gen, index);
+            inp.min_index = index - per_cycle;
+            // L0 holds ~1 flush; level budgets grow 4x.
+            inp.level0_bytes = 5 << 10;
+            inp.fanout = 4;
+            let out = run_gc(&inp).unwrap();
+            stack = out.levels.clone();
+            next_gen = out.written_gens.iter().max().unwrap() + 1;
+            total_flush += out.flush_bytes;
+            if out.merges == 0 {
+                flush_only_cycles += 1;
+                // A flush-only cycle writes just the epoch's live data,
+                // never a rewrite of older levels.
+                assert!(
+                    out.bytes_written <= 2 * inp.level0_bytes,
+                    "cycle {cycle}: flush-only cycle wrote {} bytes",
+                    out.bytes_written
+                );
+            } else {
+                any_merge = true;
+            }
+            // Cleanup superseded runs like the engine does.
+            for g in out.written_gens.iter().chain(inp.stack.iter().flatten()) {
+                if !out.levels.iter().flatten().any(|x| x == g) {
+                    FinalStorage::remove_gen(&dir, *g);
+                }
+            }
+        }
+        let stack_store = LeveledStorage::open(&dir, &stack).unwrap();
+        // All 480 distinct keys live.
+        for i in (0..480u64).step_by(37) {
+            let k = format!("key{i:06}");
+            assert!(stack_store.get(k.as_bytes()).unwrap().is_some(), "{k}");
+        }
+        // The old single-generation GC rewrote the whole dataset every
+        // cycle; leveled GC must leave most cycles flush-only, while
+        // merges deepen the stack.
+        assert!(total_flush > 0);
+        assert!(any_merge, "budgets never triggered a merge");
+        assert!(
+            flush_only_cycles >= 4,
+            "only {flush_only_cycles} flush-only cycles — per-cycle work not bounded"
+        );
+        assert!(stack.len() >= 3, "stack should have deepened: {stack:?}");
     }
 }

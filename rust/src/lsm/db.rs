@@ -347,13 +347,15 @@ impl Db {
     }
 
     /// Ordered scan of `[start, end)`, up to `limit` live entries.
+    /// An empty `end` means unbounded (scan to the last key).
     pub fn scan(&self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        use crate::util::key_before_end;
         // Merge oldest→newest so later inserts win, then strip
         // tombstones.
         let mut merged: BTreeMap<Vec<u8>, Value> = BTreeMap::new();
         for level in (1..self.version.levels.len()).rev() {
             for f in &self.version.levels[level] {
-                if f.first_key.as_slice() < end && start <= f.last_key.as_slice() {
+                if key_before_end(&f.first_key, end) && start <= f.last_key.as_slice() {
                     for (k, v) in self.tables[&f.id].range(start, end)? {
                         merged.insert(k, v);
                     }
@@ -361,7 +363,7 @@ impl Db {
             }
         }
         for f in self.version.levels[0].iter().rev() {
-            if f.first_key.as_slice() < end && start <= f.last_key.as_slice() {
+            if key_before_end(&f.first_key, end) && start <= f.last_key.as_slice() {
                 for (k, v) in self.tables[&f.id].range(start, end)? {
                     merged.insert(k, v);
                 }

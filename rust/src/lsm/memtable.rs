@@ -51,14 +51,16 @@ impl MemTable {
         self.map.iter().map(|(k, v)| (k.as_slice(), v))
     }
 
-    /// Ordered iteration over `[start, end)`.
+    /// Ordered iteration over `[start, end)`.  An empty `end` means
+    /// unbounded (iterate to the last key).
     pub fn range<'a>(
         &'a self,
         start: &[u8],
         end: &[u8],
     ) -> impl Iterator<Item = (&'a [u8], &'a Value)> {
+        let upper = if end.is_empty() { Bound::Unbounded } else { Bound::Excluded(end) };
         self.map
-            .range::<[u8], _>((Bound::Included(start), Bound::Excluded(end)))
+            .range::<[u8], _>((Bound::Included(start), upper))
             .map(|(k, v)| (k.as_slice(), v))
     }
 

@@ -349,17 +349,19 @@ impl Table {
         TableIter { table: self, block: 0, entries: Vec::new(), pos: 0 }
     }
 
-    /// Iterate entries with key in `[start, end)`.
+    /// Iterate entries with key in `[start, end)`.  An empty `end`
+    /// means unbounded (iterate to the last key).
     pub fn range(&self, start: &[u8], end: &[u8]) -> Result<Vec<(Vec<u8>, Value)>> {
+        use crate::util::key_before_end;
         let mut out = Vec::new();
         let begin = self.metas.partition_point(|m| m.last_key.as_slice() < start);
         for bi in begin..self.metas.len() {
-            if self.metas[bi].first_key.as_slice() >= end {
+            if !key_before_end(&self.metas[bi].first_key, end) {
                 break;
             }
             let data = self.read_block(bi)?;
             for (k, v) in Self::decode_block(&data)? {
-                if k.as_slice() >= end {
+                if !key_before_end(&k, end) {
                     return Ok(out);
                 }
                 if k.as_slice() >= start {

@@ -9,9 +9,11 @@
 //! **Epochs = the paper's storage modules.**  The live epoch file is
 //! the Active Storage's ValueLog.  When GC triggers, [`RaftLog::rotate`]
 //! freezes it and opens the next epoch (the New Storage's log, which
-//! becomes the next Active log); after GC completes the engine calls
-//! [`RaftLog::mark_snapshot`] + [`RaftLog::drop_epochs_below`], exactly
-//! the "safely remove the old ValueLog" step of §III-C.
+//! becomes the next Active log); after GC completes the replica calls
+//! [`RaftLog::mark_snapshot`] + [`RaftLog::drop_epochs_covered_by`],
+//! exactly the "safely remove the old ValueLog" step of §III-C —
+//! epochs whose index range is not yet fully snapshotted (cycles
+//! triggered with an apply backlog) are retained for the next cycle.
 //!
 //! In-memory, the log keeps a suffix of entries (`mem`) for
 //! replication; entries older than `mem_first` were compacted out of
@@ -103,6 +105,12 @@ pub struct RaftLog {
     vlog: VLog,
     /// Frozen epochs, read-only.
     old: BTreeMap<u32, VLogReader>,
+    /// Highest entry index stored in each epoch file (live included).
+    /// Drives snapshot-safe epoch deletion: an epoch file may only be
+    /// removed once the snapshot covers its *entire* index range —
+    /// GC cycles triggered with an apply backlog leave tails in frozen
+    /// epochs that later cycles still need.
+    epoch_max: BTreeMap<u32, LogIndex>,
     /// In-memory suffix, `mem[0].index == mem_first`.
     mem: VecDeque<(LogEntry, VRef)>,
     mem_first: LogIndex,
@@ -140,18 +148,21 @@ impl RaftLog {
         let mut last_index = snap_index;
         let mut last_term = snap_term;
         let mut old = BTreeMap::new();
+        let mut epoch_max: BTreeMap<u32, LogIndex> = BTreeMap::new();
         // Replay all epochs in order to rebuild the in-memory suffix.
         for &ep in &epochs {
             let reader = VLogReader::open(&epoch_path(dir, ep))?;
             for item in reader.iter()? {
                 let (off, ve) = item?;
                 let le = from_ventry(&ve);
+                let m = epoch_max.entry(ep).or_insert(0);
+                *m = (*m).max(le.index);
                 if le.index <= snap_index {
                     continue; // compacted by snapshot
                 }
                 // A later epoch supersedes on conflict (can only happen
                 // after a crash mid-truncate; keep the newest).
-                while mem.back().map_or(false, |(e, _): &(LogEntry, VRef)| e.index >= le.index) {
+                while mem.back().is_some_and(|(e, _): &(LogEntry, VRef)| e.index >= le.index) {
                     mem.pop_back();
                 }
                 last_index = le.index;
@@ -170,6 +181,7 @@ impl RaftLog {
             epoch: live_epoch,
             vlog,
             old,
+            epoch_max,
             mem,
             mem_first,
             snap_index,
@@ -247,6 +259,8 @@ impl RaftLog {
             self.mem_first = entry.index;
         }
         let vref = VRef::new(self.epoch, off);
+        let m = self.epoch_max.entry(self.epoch).or_insert(0);
+        *m = (*m).max(self.last_index);
         self.mem.push_back((entry, vref));
         Ok(vref)
     }
@@ -272,15 +286,31 @@ impl RaftLog {
         Ok(frozen)
     }
 
-    /// Delete frozen epoch files `< min_epoch` (GC cleanup, §III-C
-    /// step 3: "safely eliminates expired files").
-    pub fn drop_epochs_below(&mut self, min_epoch: u32) -> Result<()> {
-        let dead: Vec<u32> = self.old.keys().copied().filter(|&e| e < min_epoch).collect();
+    /// Delete every frozen epoch whose entire index range is covered
+    /// by the snapshot at `snap_index`.  Epochs holding entries past
+    /// the snapshot point (cycles triggered with an apply backlog
+    /// freeze such tails) are retained: their values are still the
+    /// only durable copy for the engine's stored VRefs, and the next
+    /// GC cycle compacts them.
+    pub fn drop_epochs_covered_by(&mut self, snap_index: LogIndex) -> Result<()> {
+        let dead: Vec<u32> = self
+            .old
+            .keys()
+            .copied()
+            .filter(|e| self.epoch_max.get(e).is_none_or(|&m| m <= snap_index))
+            .collect();
         for e in dead {
             self.old.remove(&e);
+            self.epoch_max.remove(&e);
             let _ = std::fs::remove_file(epoch_path(&self.dir, e));
         }
         Ok(())
+    }
+
+    /// Retained frozen epoch ids, oldest first (the next GC cycle's
+    /// input set — some may hold uncompacted tails).
+    pub fn frozen_epochs(&self) -> Vec<u32> {
+        self.old.keys().copied().collect()
     }
 
     /// Term of entry `index`, if known (snapshot point included).
@@ -350,9 +380,11 @@ impl RaftLog {
                 self.old.keys().copied().filter(|&e| e > cut.epoch).collect();
             for e in newer {
                 self.old.remove(&e);
+                self.epoch_max.remove(&e);
                 let _ = std::fs::remove_file(epoch_path(&self.dir, e));
             }
             let _ = std::fs::remove_file(epoch_path(&self.dir, self.epoch));
+            self.epoch_max.remove(&self.epoch);
             self.old.remove(&cut.epoch);
             self.epoch = cut.epoch;
             self.vlog = VLog::open(&epoch_path(&self.dir, cut.epoch))?;
@@ -361,6 +393,11 @@ impl RaftLog {
         truncate_file(&epoch_path(&self.dir, self.epoch), cut.off)?;
         self.vlog = VLog::open(&epoch_path(&self.dir, self.epoch))?;
         self.live_epoch_bytes = self.vlog.len_bytes();
+        // The containing file now ends before `from` (conservatively
+        // keep `from - 1` as its max; overstating only delays drops).
+        if let Some(m) = self.epoch_max.get_mut(&self.epoch) {
+            *m = (*m).min(from.saturating_sub(1));
+        }
 
         if let Some((e, _)) = self.mem.back() {
             self.last_index = e.index;
@@ -406,6 +443,7 @@ impl RaftLog {
             self.old.remove(&e);
             let _ = std::fs::remove_file(epoch_path(&self.dir, e));
         }
+        self.epoch_max.clear();
         let _ = std::fs::remove_file(epoch_path(&self.dir, self.epoch));
         self.epoch += 1;
         self.vlog = VLog::open(&epoch_path(&self.dir, self.epoch))?;
@@ -415,8 +453,13 @@ impl RaftLog {
 
     /// Record that a GC cycle produced a snapshot at (`index`, `term`)
     /// *without* touching the live epoch (the GC framework then calls
-    /// [`Self::drop_epochs_below`]).
+    /// [`Self::drop_epochs_covered_by`]).  Snapshot points only move
+    /// forward — a stale mark (e.g. from a GC cycle that raced an
+    /// InstallSnapshot) is ignored.
     pub fn mark_snapshot(&mut self, index: LogIndex, term: Term) -> Result<()> {
+        if index <= self.snap_index {
+            return Ok(());
+        }
         self.snap_index = index;
         self.snap_term = term;
         self.save_snapmeta()
@@ -562,18 +605,24 @@ mod tests {
     }
 
     #[test]
-    fn drop_epochs_below_removes_files() {
+    fn drop_epochs_covered_by_respects_index_ranges() {
         let dir = tmpdir("dropep");
         let mut log = RaftLog::open(&dir).unwrap();
         log.append(put(1, 1, "a", "1")).unwrap();
+        log.append(put(1, 2, "a2", "1")).unwrap();
         log.rotate().unwrap();
-        log.append(put(1, 2, "b", "2")).unwrap();
+        log.append(put(1, 3, "b", "2")).unwrap();
         assert!(epoch_path(&dir, 0).exists());
+        // Snapshot at 1 leaves index 2's only copy in epoch 0: retained.
         log.mark_snapshot(1, 1).unwrap();
-        log.drop_epochs_below(1).unwrap();
+        log.drop_epochs_covered_by(1).unwrap();
+        assert!(epoch_path(&dir, 0).exists(), "uncovered tail must survive");
+        // Snapshot at 2 covers the whole epoch: dropped.
+        log.mark_snapshot(2, 1).unwrap();
+        log.drop_epochs_covered_by(2).unwrap();
         assert!(!epoch_path(&dir, 0).exists());
         // Live epoch unaffected.
-        let v = log.vref_of(2).unwrap();
+        let v = log.vref_of(3).unwrap();
         assert_eq!(log.read_vref(v).unwrap().key, b"b".to_vec());
     }
 

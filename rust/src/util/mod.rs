@@ -15,8 +15,16 @@ pub use rng::{Rng, Zipf};
 /// Monotonic wall-clock helper returning microseconds since an
 /// arbitrary epoch (process start).
 pub fn now_micros() -> u64 {
+    use std::sync::OnceLock;
     use std::time::Instant;
-    static START: once_cell::sync::Lazy<Instant> =
-        once_cell::sync::Lazy::new(Instant::now);
-    START.elapsed().as_micros() as u64
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// `key < end` with the convention that an **empty** `end` means an
+/// unbounded upper range (+∞).  Every scan path uses this so full-range
+/// scans (snapshots, recovery dumps) cannot silently drop keys that
+/// sort above an arbitrary sentinel like `[0xff; 32]`.
+pub fn key_before_end(key: &[u8], end: &[u8]) -> bool {
+    end.is_empty() || key < end
 }

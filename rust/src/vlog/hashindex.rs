@@ -167,8 +167,19 @@ impl HashIndex {
         let mut framed = Encoder::with_capacity(body.len() + 8);
         framed.u32(crc32fast::hash(&body)).bytes(&body);
         let tmp = path.with_extension("tmp");
-        std::fs::write(&tmp, framed.as_slice())?;
+        // Fsync data + directory: a sealed run's index must be durable
+        // before the GC manifest commit deletes the merge inputs — a
+        // torn .idx with the inputs gone would be unrecoverable.
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(framed.as_slice())?;
+            f.sync_data()?;
+        }
         std::fs::rename(&tmp, path)?;
+        if let Some(dir) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::File::open(dir)?.sync_data()?;
+        }
         Ok(())
     }
 

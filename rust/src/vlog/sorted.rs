@@ -231,7 +231,8 @@ impl SortedVLog {
 
     /// Sequential scan starting at `offset` (one random read, then
     /// sequential — the paper's range-query fast path), yielding
-    /// entries with key in `[start, end)` up to `limit`.
+    /// entries with key in `[start, end)` up to `limit`.  An empty
+    /// `end` means unbounded (scan to the last key).
     ///
     /// Reads the file in large chunks (one `pread` per ~256 KiB
     /// instead of two per entry) so the access pattern is genuinely
@@ -279,7 +280,7 @@ impl SortedVLog {
             let index = d.u64()?;
             let op = d.u8()?;
             let key = d.len_bytes()?;
-            if key >= end {
+            if !crate::util::key_before_end(key, end) {
                 break;
             }
             if key >= start {

@@ -57,23 +57,29 @@ fn gc_cycle_identical_under_both_backends() {
     let vlog_xla = write_epoch(&dir_xla, n);
 
     let out_rust = run_gc(&GcInputs {
-        frozen_vlog_path: vlog_rust,
-        prev_gen: None,
+        frozen_vlog_paths: vec![vlog_rust],
         dir: dir_rust.clone(),
         out_gen: 1,
+        stack: vec![],
+        min_index: 0,
         last_index: n,
         last_term: 1,
+        level0_bytes: u64::MAX,
+        fanout: 10,
         resume: false,
         backend: Arc::new(RustBackend),
     })
     .unwrap();
     let out_xla = run_gc(&GcInputs {
-        frozen_vlog_path: vlog_xla,
-        prev_gen: None,
+        frozen_vlog_paths: vec![vlog_xla],
         dir: dir_xla.clone(),
         out_gen: 1,
+        stack: vec![],
+        min_index: 0,
         last_index: n,
         last_term: 1,
+        level0_bytes: u64::MAX,
+        fanout: 10,
         resume: false,
         backend: xla,
     })
