@@ -13,18 +13,20 @@
 //! Run: `cargo bench --bench fig10_gc_impact`.
 
 use nezha::engine::EngineKind;
-use nezha::harness::{bench_scale, print_gc_cycles, Env, Spec};
+use nezha::harness::{bench_scale, bench_shards, print_gc_cycles, Env, Spec};
 use nezha::ycsb::Generator;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let load = ((12 << 20) as f64 * bench_scale()) as u64;
     let vs = 16 << 10;
-    println!("\n=== Figure 10: GC impact timeline (16KB values, GC every 10% of load) ===");
+    let shards = bench_shards();
+    println!("\n=== Figure 10: GC impact timeline (16KB values, GC every 10% of load, {shards} shard(s)) ===");
     println!("{:<11} {:>8} {:>12} {:>12} {:>10}", "system", "pct", "cum_MiB/s", "inst_MiB/s", "batch_us");
     for kind in [EngineKind::Original, EngineKind::NezhaNoGc, EngineKind::Nezha] {
         let mut spec = Spec::new(kind, vs);
         spec.load_bytes = load;
+        spec.shards = shards;
         spec.gc_fraction = 0.1;
         let records = spec.records();
         let env = Env::start(spec)?;

@@ -4,16 +4,18 @@
 //! state machine holds only offsets (small LSM to rebuild) and an
 //! interrupted GC resumes from the sorted file's last key.
 //!
-//! Method: build the state on a single replica, "crash" by dropping
-//! it, and time `Replica::open` (raft log scan + LSM WAL replay +
-//! optional GC resume).
+//! Method: build the state on a single replica per shard, "crash" by
+//! dropping it, and time `Replica::open` across all shards (raft log
+//! scan + LSM WAL replay + optional GC resume).  With `--shards N`
+//! the same dataset is partitioned over N shard replicas, showing how
+//! sharding shrinks each group's recovery unit.
 //!
-//! Run: `cargo bench --bench fig11_recovery`.
+//! Run: `cargo bench --bench fig11_recovery [-- --shards N]`.
 
 use nezha::coordinator::Replica;
 use nezha::engine::{EngineKind, EngineOpts};
-use nezha::gc::{GcConfig, GcState};
-use nezha::harness::bench_scale;
+use nezha::gc::{FrozenEpoch, GcConfig, GcState};
+use nezha::harness::{bench_scale, bench_shards};
 use nezha::raft::{Command, Config as RaftConfig};
 use nezha::ycsb::Generator;
 use std::path::PathBuf;
@@ -23,6 +25,11 @@ fn base(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("nezha-fig11-{tag}-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&d);
     d
+}
+
+/// Per-shard replica directories under one scenario dir.
+fn shard_dirs(dir: &std::path::Path, shards: usize) -> Vec<PathBuf> {
+    (0..shards).map(|s| dir.join(format!("shard-{s}"))).collect()
 }
 
 fn open_replica(dir: &std::path::Path, kind: EngineKind) -> anyhow::Result<Replica> {
@@ -50,8 +57,8 @@ fn make_leader(r: &mut Replica) {
     panic!("no leader");
 }
 
-fn load(r: &mut Replica, records: u64, vs: usize) {
-    let mut g = Generator::load_ops(records, vs, 42);
+fn load(r: &mut Replica, records: u64, vs: usize, seed: u64) {
+    let mut g = Generator::load_ops(records, vs, seed);
     let mut batch = Vec::new();
     loop {
         batch.clear();
@@ -70,39 +77,58 @@ fn load(r: &mut Replica, records: u64, vs: usize) {
     r.node.log.sync().unwrap();
 }
 
-fn time_reopen(dir: &std::path::Path, kind: EngineKind) -> anyhow::Result<f64> {
+/// Reopen every shard replica of a scenario; total wall time is the
+/// recovery cost (recovery includes serving a first read per shard).
+fn time_reopen(dirs: &[PathBuf], kind: EngineKind) -> anyhow::Result<f64> {
     let t0 = Instant::now();
-    let mut r = open_replica(dir, kind)?;
-    // Recovery includes being able to serve a read.
-    let _ = r.engine().scan(b"", &[0xffu8; 16], 1)?;
+    for dir in dirs {
+        let mut r = open_replica(dir, kind)?;
+        let _ = r.engine().scan(b"", &[0xffu8; 16], 1)?;
+    }
     Ok(t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Build one loaded shard replica per dir and hand each to `crash`
+/// for the scenario-specific pre-crash state.
+fn build_shards(
+    dirs: &[PathBuf],
+    kind: EngineKind,
+    records_per_shard: u64,
+    vs: usize,
+    crash: impl Fn(&mut Replica, &std::path::Path) -> anyhow::Result<()>,
+) -> anyhow::Result<()> {
+    for (s, dir) in dirs.iter().enumerate() {
+        let mut r = open_replica(dir, kind)?;
+        make_leader(&mut r);
+        load(&mut r, records_per_shard, vs, 42 + s as u64);
+        crash(&mut r, dir)?;
+    }
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
     let records = (1024.0 * bench_scale()) as u64;
     let vs = 16 << 10;
-    println!("\n=== Figure 11: recovery time by GC state (ms) ===");
+    let shards = bench_shards();
+    let per_shard = (records / shards as u64).max(16);
+    println!("\n=== Figure 11: recovery time by GC state (ms, {shards} shard(s)) ===");
     println!("{:<22} {:>12}", "state", "recovery_ms");
 
     // Baseline: Original (no GC states).
     {
         let dir = base("orig");
-        let mut r = open_replica(&dir, EngineKind::Original)?;
-        make_leader(&mut r);
-        load(&mut r, records, vs);
-        drop(r);
-        let ms = time_reopen(&dir, EngineKind::Original)?;
+        let dirs = shard_dirs(&dir, shards);
+        build_shards(&dirs, EngineKind::Original, per_shard, vs, |_, _| Ok(()))?;
+        let ms = time_reopen(&dirs, EngineKind::Original)?;
         println!("{:<22} {:>12.1}", "Original", ms);
     }
 
     // Nezha Pre-GC: loaded, no cycle yet.
     {
         let dir = base("pre");
-        let mut r = open_replica(&dir, EngineKind::Nezha)?;
-        make_leader(&mut r);
-        load(&mut r, records, vs);
-        drop(r);
-        let ms = time_reopen(&dir, EngineKind::Nezha)?;
+        let dirs = shard_dirs(&dir, shards);
+        build_shards(&dirs, EngineKind::Nezha, per_shard, vs, |_, _| Ok(()))?;
+        let ms = time_reopen(&dirs, EngineKind::Nezha)?;
         println!("{:<22} {:>12.1}", "Nezha (Pre-GC)", ms);
     }
 
@@ -110,41 +136,42 @@ fn main() -> anyhow::Result<()> {
     // before completion — recovery must resume from the sorted file.
     {
         let dir = base("during");
-        let mut r = open_replica(&dir, EngineKind::Nezha)?;
-        make_leader(&mut r);
-        load(&mut r, records, vs);
-        let last_index = r.node.last_applied();
-        let last_term = r.node.log.term_at(last_index).unwrap_or(1);
-        let frozen = r.node.log.rotate()?;
-        GcState {
-            running: true,
-            min_epoch: frozen,
-            frozen_epoch: frozen,
-            out_gen: 1,
-            min_index: 0,
-            last_index,
-            last_term,
-            stack: vec![],
-        }
-        .save(&nezha::coordinator::replica::engine_dir(&dir))?;
-        drop(r);
-        let ms = time_reopen(&dir, EngineKind::Nezha)?;
+        let dirs = shard_dirs(&dir, shards);
+        build_shards(&dirs, EngineKind::Nezha, per_shard, vs, |r, dir| {
+            let last_index = r.node.last_applied();
+            let last_term = r.node.log.term_at(last_index).unwrap_or(1);
+            let frozen = r.node.log.rotate()?;
+            GcState {
+                running: true,
+                min_epoch: frozen,
+                frozen_epoch: frozen,
+                out_gen: 1,
+                min_index: 0,
+                last_index,
+                last_term,
+                stack: vec![],
+                run_tombstones: Default::default(),
+            }
+            .save(&nezha::coordinator::replica::engine_dir(dir))?;
+            Ok(())
+        })?;
+        let ms = time_reopen(&dirs, EngineKind::Nezha)?;
         println!("{:<22} {:>12.1}", "Nezha (During-GC)", ms);
     }
 
     // Nezha Post-GC: a completed cycle, then a crash.
     {
         let dir = base("post");
-        let mut r = open_replica(&dir, EngineKind::Nezha)?;
-        make_leader(&mut r);
-        load(&mut r, records, vs);
-        let last_index = r.node.last_applied();
-        let last_term = r.node.log.term_at(last_index).unwrap_or(1);
-        let frozen = r.node.log.rotate()?;
-        r.engine().begin_gc(&[frozen], 0, last_index, last_term)?;
-        r.finish_gc()?;
-        drop(r);
-        let ms = time_reopen(&dir, EngineKind::Nezha)?;
+        let dirs = shard_dirs(&dir, shards);
+        build_shards(&dirs, EngineKind::Nezha, per_shard, vs, |r, _| {
+            let last_index = r.node.last_applied();
+            let last_term = r.node.log.term_at(last_index).unwrap_or(1);
+            let frozen = r.node.log.rotate()?;
+            r.engine().begin_gc(&[FrozenEpoch::new(frozen)], 0, last_index, last_term)?;
+            r.finish_gc()?;
+            Ok(())
+        })?;
+        let ms = time_reopen(&dirs, EngineKind::Nezha)?;
         println!("{:<22} {:>12.1}", "Nezha (Post-GC)", ms);
     }
 

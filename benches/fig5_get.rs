@@ -9,18 +9,20 @@
 //! Run: `cargo bench --bench fig5_get`.
 
 use nezha::engine::EngineKind;
-use nezha::harness::{bench_scale, engines_from_env, improvement_pct, print_header, print_readahead_line, value_sizes, Env, Spec};
+use nezha::harness::{bench_scale, bench_shards, engines_from_env, improvement_pct, print_header, print_readahead_line, value_sizes, Env, Spec};
 
 fn main() -> anyhow::Result<()> {
     let load = ((6 << 20) as f64 * bench_scale()) as u64;
     let gets = (400.0 * bench_scale()) as u64;
-    print_header("Figure 5: get throughput/latency vs value size");
+    let shards = bench_shards();
+    print_header(&format!("Figure 5: get throughput/latency vs value size ({shards} shard(s))"));
     let mut nezha_tp = Vec::new();
     let mut orig_tp = Vec::new();
     for vs in value_sizes() {
         for kind in engines_from_env() {
             let mut spec = Spec::new(kind, vs);
             spec.load_bytes = load;
+            spec.shards = shards;
             let env = Env::start(spec)?;
             env.load("preload")?;
             env.settle()?;

@@ -1,27 +1,46 @@
-//! Multi-node cluster runtime: one thread per replica, an in-process
-//! [`Bus`] carrying encoded Raft frames, and a client handle that
-//! routes requests to the leader (retrying on stale hints) — the
-//! paper's Application→Consensus request path.
+//! Multi-shard, multi-node cluster runtime.
 //!
-//! Writes go through the group-commit batcher: a `PutBatch` is
-//! proposed as a block, persisted with one ValueLog flush, replicated
-//! with one AppendEntries fan-out, and acknowledged when the leader
-//! applies it (majority-committed).  Reads execute at the leader
+//! A `Cluster` hosts `shards × nodes` replicas: the keyspace is
+//! partitioned by the deterministic [`ShardRouter`] recorded in
+//! [`ClusterConfig`], and each shard is an **independent Raft group**
+//! with its own [`Bus`], its own leader, its own raft ValueLog and its
+//! own engine + GC lifecycle — the Bizur-style scale-out structure on
+//! top of the paper's per-replica Nezha write path.  One thread per
+//! (shard, node); an in-process [`Bus`] per shard carries encoded Raft
+//! frames.
+//!
+//! The client handle splits `put_batch`/`get_batch` by shard, issues
+//! the per-shard sub-batches concurrently (every sub-request is in
+//! flight at once; stale-leader failures retry per shard), and merges
+//! results in input order.  Scans fan out to every shard and k-way
+//! merge by key up to `limit`.  **No cross-shard atomicity**: a batch
+//! spanning shards is linearizable per shard only — a failure may
+//! leave some shards' sub-batches committed.
+//!
+//! Writes go through the group-commit batcher per shard: a sub-batch
+//! is proposed as a block, persisted with one ValueLog flush,
+//! replicated with one AppendEntries fan-out, and acknowledged when
+//! the shard leader applies it.  Reads execute at each shard's leader
 //! against the engine's three-phase read path.
+//!
+//! Single-shard clusters keep the pre-sharding on-disk layout
+//! (`node-N/{raft,engine}`) byte-for-byte, so existing data dirs are
+//! adopted unchanged.
 
 use super::replica::Replica;
+use super::router::{merge_sorted, split_keys, split_ops, ShardId, ShardRouter};
 use crate::engine::{EngineKind, EngineOpts, EngineStats};
-use crate::gc::{GcConfig, GcOutput};
+use crate::gc::{GcConfig, GcOutput, GcPhase};
 use crate::raft::node::Outbox;
 use crate::raft::{Bus, Command, Config as RaftConfig, NetConfig, NodeId, Role};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Client/admin requests into a node thread.
+/// Client/admin requests into a (shard, node) thread.
 pub enum Req {
     PutBatch {
         ops: Vec<(Vec<u8>, Vec<u8>)>,
@@ -54,23 +73,30 @@ pub enum Req {
     DrainGc {
         resp: SyncSender<Result<()>>,
     },
-    /// Completed GC cycles on this node (fig10's per-cycle report).
+    /// Completed GC cycles on this shard replica (fig10's report).
     GcHistory {
         resp: SyncSender<Vec<GcOutput>>,
     },
     Stop,
 }
 
+/// One (shard, node) replica's status row.  [`Cluster::status`] rolls
+/// the per-shard rows of a node up into one aggregate row: counters
+/// (`last_applied`, `raft_vlog_bytes`, `engine`, `gc_cycles`) sum
+/// across shards, `role`/`term`/`leader_hint` are shard 0's, and
+/// `gc_phase` reports During if any shard is mid-cycle (else Post if
+/// any shard compacted, else Pre).
 #[derive(Clone, Debug)]
 pub struct Status {
     pub id: NodeId,
+    pub shard: ShardId,
     pub role: Role,
     pub term: u64,
     pub leader_hint: Option<NodeId>,
     pub last_applied: u64,
     pub raft_vlog_bytes: u64,
     pub engine: EngineStats,
-    pub gc_phase: crate::gc::GcPhase,
+    pub gc_phase: GcPhase,
     pub gc_cycles: u64,
 }
 
@@ -87,6 +113,10 @@ pub struct ClusterConfig {
     /// Wall-clock per raft tick.
     pub tick: Duration,
     pub seed: u64,
+    /// Deterministic key→shard map.  Recorded here so every client and
+    /// node agrees on placement; must stay stable once a cluster holds
+    /// data (a re-routed key would strand its old shard's copy).
+    pub router: ShardRouter,
 }
 
 impl ClusterConfig {
@@ -112,8 +142,25 @@ impl ClusterConfig {
             net: NetConfig::default(),
             tick: Duration::from_millis(1),
             seed: 42,
+            router: ShardRouter::hash(1),
             base_dir: base,
         }
+    }
+
+    pub fn shards(&self) -> u32 {
+        self.router.shards()
+    }
+}
+
+/// Per-(node, shard) data directory.  Shard 0 keeps the pre-sharding
+/// layout (`node-N/`) so a single-shard cluster adopts existing data
+/// dirs byte-for-byte; higher shards nest under the node dir.
+pub fn shard_dir(base: &Path, id: NodeId, shard: ShardId) -> PathBuf {
+    let node = base.join(format!("node-{id}"));
+    if shard == 0 {
+        node
+    } else {
+        node.join(format!("shard-{shard}"))
     }
 }
 
@@ -127,35 +174,48 @@ struct NodeThread {
 /// A running cluster.
 pub struct Cluster {
     cfg: ClusterConfig,
-    threads: HashMap<NodeId, NodeThread>,
-    pub bus: Bus,
-    leader_cache: std::sync::Mutex<Option<NodeId>>,
+    threads: HashMap<(ShardId, NodeId), NodeThread>,
+    /// One in-process network per shard group.
+    buses: Vec<Bus>,
+    /// Per-shard cached leader hint.
+    leader_cache: Vec<Mutex<Option<NodeId>>>,
 }
 
 impl Cluster {
-    /// Start `cfg.nodes` replicas and wait for a leader.
+    /// Start `shards × nodes` replicas and wait for every shard to
+    /// elect a leader.
     pub fn start(cfg: ClusterConfig) -> Result<Self> {
-        let bus = Bus::new(cfg.net.clone());
+        let shards = cfg.shards();
         let ids: Vec<NodeId> = (1..=cfg.nodes as u64).collect();
+        let mut buses = Vec::with_capacity(shards as usize);
         let mut threads = HashMap::new();
-        for &id in &ids {
-            let peers: Vec<NodeId> = ids.iter().copied().filter(|&p| p != id).collect();
-            let mailbox = bus.register(id);
-            let mailbox2 = Arc::clone(&mailbox);
-            let (tx, rx) = mpsc::channel::<Req>();
-            let cfg2 = cfg.clone();
-            let bus2 = bus.clone();
-            let join = std::thread::Builder::new()
-                .name(format!("nezha-node-{id}"))
-                .spawn(move || {
-                    if let Err(e) = node_loop(id, peers, cfg2, bus2, mailbox2, rx) {
-                        eprintln!("node {id} crashed: {e:#}");
-                    }
-                })?;
-            threads.insert(id, NodeThread { tx, mailbox, join });
+        for shard in 0..shards {
+            let bus = Bus::new(cfg.net.clone());
+            for &id in &ids {
+                let peers: Vec<NodeId> = ids.iter().copied().filter(|&p| p != id).collect();
+                let mailbox = bus.register(id);
+                let mailbox2 = Arc::clone(&mailbox);
+                let (tx, rx) = mpsc::channel::<Req>();
+                let cfg2 = cfg.clone();
+                let bus2 = bus.clone();
+                let join = std::thread::Builder::new()
+                    .name(format!("nezha-s{shard}-n{id}"))
+                    .spawn(move || {
+                        if let Err(e) = node_loop(id, shard, peers, cfg2, bus2, mailbox2, rx) {
+                            eprintln!("node {id} shard {shard} crashed: {e:#}");
+                        }
+                    })?;
+                threads.insert((shard, id), NodeThread { tx, mailbox, join });
+            }
+            buses.push(bus);
         }
-        let cluster = Self { cfg, threads, bus, leader_cache: std::sync::Mutex::new(None) };
-        cluster.wait_for_leader(Duration::from_secs(10))?;
+        let cluster = Self {
+            leader_cache: (0..shards).map(|_| Mutex::new(None)).collect(),
+            cfg,
+            threads,
+            buses,
+        };
+        cluster.wait_for_leader(Duration::from_secs(10 * shards as u64))?;
         Ok(cluster)
     }
 
@@ -164,63 +224,116 @@ impl Cluster {
     }
 
     pub fn node_ids(&self) -> Vec<NodeId> {
-        let mut v: Vec<NodeId> = self.threads.keys().copied().collect();
+        let mut v: Vec<NodeId> = self.threads.keys().map(|&(_, id)| id).collect();
         v.sort_unstable();
+        v.dedup();
         v
     }
 
-    fn req(&self, id: NodeId, req: Req) -> Result<()> {
-        let t = self.threads.get(&id).ok_or_else(|| anyhow!("no node {id}"))?;
-        t.tx.send(req).map_err(|_| anyhow!("node {id} stopped"))?;
+    fn shard_of(&self, key: &[u8]) -> ShardId {
+        self.cfg.router.route(key)
+    }
+
+    fn req(&self, shard: ShardId, id: NodeId, req: Req) -> Result<()> {
+        let t = self
+            .threads
+            .get(&(shard, id))
+            .ok_or_else(|| anyhow!("no node {id} for shard {shard}"))?;
+        t.tx.send(req)
+            .map_err(|_| anyhow!("node {id} shard {shard} stopped"))?;
         t.mailbox.notify(); // wake the node loop immediately
         Ok(())
     }
 
-    pub fn status(&self, id: NodeId) -> Result<Status> {
+    /// One (shard, node) replica's status.
+    pub fn shard_status(&self, id: NodeId, shard: ShardId) -> Result<Status> {
         let (tx, rx) = mpsc::sync_channel(1);
-        self.req(id, Req::Status { resp: tx })?;
+        self.req(shard, id, Req::Status { resp: tx })?;
         Ok(rx.recv_timeout(Duration::from_secs(10))?)
     }
 
+    /// All shard rows of one node (shard-addressed view).
+    pub fn node_status(&self, id: NodeId) -> Result<Vec<Status>> {
+        (0..self.cfg.shards()).map(|s| self.shard_status(id, s)).collect()
+    }
+
+    /// Rolled-up status of one node (see [`Status`] for the rollup
+    /// semantics).  For a single-shard cluster this is the plain
+    /// per-replica status.
+    pub fn status(&self, id: NodeId) -> Result<Status> {
+        let mut rows = self.node_status(id)?;
+        let mut agg = rows.remove(0);
+        for s in rows {
+            agg.last_applied += s.last_applied;
+            agg.raft_vlog_bytes += s.raft_vlog_bytes;
+            agg.engine.absorb(&s.engine);
+            agg.gc_cycles += s.gc_cycles;
+            agg.gc_phase = match (agg.gc_phase, s.gc_phase) {
+                (GcPhase::During, _) | (_, GcPhase::During) => GcPhase::During,
+                (GcPhase::Post, _) | (_, GcPhase::Post) => GcPhase::Post,
+                _ => GcPhase::Pre,
+            };
+        }
+        Ok(agg)
+    }
+
+    /// Wait until *every* shard has a leader; returns shard 0's leader
+    /// (the pre-sharding contract for callers that just need "the"
+    /// leader of a single-shard cluster).
     pub fn wait_for_leader(&self, timeout: Duration) -> Result<NodeId> {
-        let t0 = Instant::now();
+        let deadline = Instant::now() + timeout;
+        let mut first = None;
+        for shard in 0..self.cfg.shards() {
+            let l = self.wait_for_shard_leader(shard, deadline)?;
+            if shard == 0 {
+                first = Some(l);
+            }
+        }
+        Ok(first.expect("at least one shard"))
+    }
+
+    fn wait_for_shard_leader(&self, shard: ShardId, deadline: Instant) -> Result<NodeId> {
         loop {
             for id in self.node_ids() {
-                if let Ok(st) = self.status(id) {
+                if let Ok(st) = self.shard_status(id, shard) {
                     if st.role == Role::Leader {
-                        *self.leader_cache.lock().unwrap() = Some(id);
+                        *self.leader_cache[shard as usize].lock().unwrap() = Some(id);
                         return Ok(id);
                     }
                 }
             }
-            if t0.elapsed() > timeout {
-                bail!("no leader within {timeout:?}");
+            if Instant::now() > deadline {
+                bail!("no leader for shard {shard} within the deadline");
             }
             std::thread::sleep(Duration::from_millis(5));
         }
     }
 
-    fn leader(&self) -> Result<NodeId> {
-        if let Some(l) = *self.leader_cache.lock().unwrap() {
+    /// Current leader of one shard group (cached; re-discovered on a
+    /// stale hint).
+    pub fn shard_leader(&self, shard: ShardId) -> Result<NodeId> {
+        if let Some(l) = *self.leader_cache[shard as usize].lock().unwrap() {
             return Ok(l);
         }
-        self.wait_for_leader(Duration::from_secs(10))
+        self.wait_for_shard_leader(shard, Instant::now() + Duration::from_secs(10))
     }
 
-    /// Route a request to the leader with one retry on stale cache.
+    /// Route a request to one shard's leader with retries on stale
+    /// cache / leadership moves.
     fn at_leader<T>(
         &self,
+        shard: ShardId,
         make: impl Fn() -> (Req, Receiver<Result<T>>),
     ) -> Result<T> {
         for _attempt in 0..3 {
-            let l = self.leader()?;
+            let l = self.shard_leader(shard)?;
             let (req, rx) = make();
-            self.req(l, req)?;
+            self.req(shard, l, req)?;
             match rx.recv_timeout(Duration::from_secs(30)) {
                 Ok(Ok(v)) => return Ok(v),
                 Ok(Err(e)) => {
                     // NotLeader → refresh cache and retry.
-                    *self.leader_cache.lock().unwrap() = None;
+                    *self.leader_cache[shard as usize].lock().unwrap() = None;
                     let msg = format!("{e:#}");
                     if !msg.contains("not leader") {
                         return Err(e);
@@ -231,120 +344,276 @@ impl Cluster {
                     // CONSENSUS_TIMEOUT: leadership likely moved while
                     // the batch was pending.  Refresh and re-submit —
                     // puts/deletes are idempotent re-proposals.
-                    *self.leader_cache.lock().unwrap() = None;
+                    *self.leader_cache[shard as usize].lock().unwrap() = None;
                     std::thread::sleep(Duration::from_millis(50));
                 }
             }
         }
-        bail!("request timed out (CONSENSUS_TIMEOUT)")
+        bail!("request timed out on shard {shard} (CONSENSUS_TIMEOUT)")
+    }
+
+    /// Issue one request per listed shard **concurrently**: every
+    /// sub-request is put in flight against its shard's cached leader
+    /// before any response is awaited, so the per-shard consensus
+    /// rounds overlap.  Shards whose leader moved (or was unknown) are
+    /// retried through the serial [`Self::at_leader`] path.  `make`
+    /// must produce a fresh request each call; it may be called more
+    /// than once per slot on retry.
+    fn at_shard_leaders<T>(
+        &self,
+        shards: &[ShardId],
+        make: impl Fn(usize) -> (Req, Receiver<Result<T>>),
+    ) -> Result<Vec<T>> {
+        if shards.len() == 1 {
+            return Ok(vec![self.at_leader(shards[0], || make(0))?]);
+        }
+        let mut out: Vec<Option<T>> = Vec::with_capacity(shards.len());
+        out.resize_with(shards.len(), || None);
+        let mut inflight: Vec<(usize, Receiver<Result<T>>)> = Vec::new();
+        let mut retry: Vec<usize> = Vec::new();
+        for (i, &s) in shards.iter().enumerate() {
+            let cached = *self.leader_cache[s as usize].lock().unwrap();
+            match cached.map_or_else(|| self.shard_leader(s), Ok) {
+                Ok(l) => {
+                    let (req, rx) = make(i);
+                    match self.req(s, l, req) {
+                        Ok(()) => inflight.push((i, rx)),
+                        Err(_) => retry.push(i),
+                    }
+                }
+                Err(_) => retry.push(i),
+            }
+        }
+        for (i, rx) in inflight {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(Ok(v)) => out[i] = Some(v),
+                Ok(Err(e)) => {
+                    // Same policy as `at_leader`: only a stale-leader
+                    // rejection is retried; a genuine engine/propose
+                    // error surfaces immediately instead of being
+                    // re-proposed.
+                    *self.leader_cache[shards[i] as usize].lock().unwrap() = None;
+                    if !format!("{e:#}").contains("not leader") {
+                        return Err(e);
+                    }
+                    retry.push(i);
+                }
+                Err(_) => {
+                    // Timeout: leadership likely moved mid-batch;
+                    // re-resolve and re-submit (idempotent ops).
+                    *self.leader_cache[shards[i] as usize].lock().unwrap() = None;
+                    retry.push(i);
+                }
+            }
+        }
+        for i in retry {
+            out[i] = Some(self.at_leader(shards[i], || make(i))?);
+        }
+        Ok(out.into_iter().map(|v| v.expect("every shard slot filled")).collect())
     }
 
     pub fn put(&self, key: &[u8], value: &[u8]) -> Result<()> {
         self.put_batch(vec![(key.to_vec(), value.to_vec())])
     }
 
-    /// Group-commit write batch (Algorithm 1 semantics per op).
+    /// Group-commit write batch (Algorithm 1 semantics per op).  Split
+    /// by shard; per-shard sub-batches commit concurrently and
+    /// independently — per-shard linearizability, no cross-shard
+    /// atomicity.
     pub fn put_batch(&self, ops: Vec<(Vec<u8>, Vec<u8>)>) -> Result<()> {
-        self.at_leader(move || {
+        if ops.is_empty() {
+            return Ok(());
+        }
+        if self.cfg.shards() == 1 {
+            return self.at_leader(0, move || {
+                let (tx, rx) = mpsc::sync_channel(1);
+                (Req::PutBatch { ops: ops.clone(), resp: tx }, rx)
+            });
+        }
+        let per = split_ops(&self.cfg.router, ops);
+        let parts: Vec<(ShardId, Vec<(Vec<u8>, Vec<u8>)>)> = per
+            .into_iter()
+            .enumerate()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(s, v)| (s as ShardId, v))
+            .collect();
+        let ids: Vec<ShardId> = parts.iter().map(|(s, _)| *s).collect();
+        self.at_shard_leaders(&ids, |i| {
             let (tx, rx) = mpsc::sync_channel(1);
-            (Req::PutBatch { ops: ops.clone(), resp: tx }, rx)
-        })
+            (Req::PutBatch { ops: parts[i].1.clone(), resp: tx }, rx)
+        })?;
+        Ok(())
     }
 
     pub fn delete(&self, key: &[u8]) -> Result<()> {
+        let shard = self.shard_of(key);
         let key = key.to_vec();
-        self.at_leader(move || {
+        self.at_leader(shard, move || {
             let (tx, rx) = mpsc::sync_channel(1);
             (Req::Delete { key: key.clone(), resp: tx }, rx)
         })
     }
 
     pub fn get(&self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        let shard = self.shard_of(key);
         let key = key.to_vec();
-        self.at_leader(move || {
+        self.at_leader(shard, move || {
             let (tx, rx) = mpsc::sync_channel(1);
             (Req::Get { key: key.clone(), resp: tx }, rx)
         })
     }
 
-    /// Batched point read: one leader round-trip for the whole batch,
-    /// one result per key in input order.
+    /// Batched point read: one round-trip per involved shard (issued
+    /// concurrently), one result per key in input order.
     pub fn get_batch(&self, keys: &[Vec<u8>]) -> Result<Vec<Option<Vec<u8>>>> {
         if keys.is_empty() {
             return Ok(Vec::new());
         }
-        let keys = keys.to_vec();
-        self.at_leader(move || {
+        if self.cfg.shards() == 1 {
+            let keys = keys.to_vec();
+            return self.at_leader(0, move || {
+                let (tx, rx) = mpsc::sync_channel(1);
+                (Req::MultiGet { keys: keys.clone(), resp: tx }, rx)
+            });
+        }
+        let (per, slots) = split_keys(&self.cfg.router, keys);
+        let parts: Vec<(ShardId, Vec<Vec<u8>>)> = per
+            .into_iter()
+            .enumerate()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(s, v)| (s as ShardId, v))
+            .collect();
+        let ids: Vec<ShardId> = parts.iter().map(|(s, _)| *s).collect();
+        let results = self.at_shard_leaders(&ids, |i| {
             let (tx, rx) = mpsc::sync_channel(1);
-            (Req::MultiGet { keys: keys.clone(), resp: tx }, rx)
-        })
+            (Req::MultiGet { keys: parts[i].1.clone(), resp: tx }, rx)
+        })?;
+        let mut by_shard: HashMap<usize, Vec<Option<Vec<u8>>>> =
+            ids.iter().map(|&s| s as usize).zip(results).collect();
+        Ok(slots
+            .into_iter()
+            .map(|(s, p)| by_shard.get_mut(&s).expect("answered shard")[p].take())
+            .collect())
     }
 
+    /// Range scan `[start, end)` up to `limit` rows: fans out to every
+    /// shard concurrently and k-way merges the key-sorted sub-results.
     pub fn scan(&self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
         let (start, end) = (start.to_vec(), end.to_vec());
-        self.at_leader(move || {
+        if self.cfg.shards() == 1 {
+            return self.at_leader(0, move || {
+                let (tx, rx) = mpsc::sync_channel(1);
+                (Req::Scan { start: start.clone(), end: end.clone(), limit, resp: tx }, rx)
+            });
+        }
+        let ids: Vec<ShardId> = (0..self.cfg.shards()).collect();
+        let per = self.at_shard_leaders(&ids, |_| {
             let (tx, rx) = mpsc::sync_channel(1);
             (Req::Scan { start: start.clone(), end: end.clone(), limit, resp: tx }, rx)
-        })
+        })?;
+        Ok(merge_sorted(per, limit))
     }
 
-    /// Completed GC cycles on one node, in completion order.
-    pub fn gc_history(&self, id: NodeId) -> Result<Vec<GcOutput>> {
+    /// Completed GC cycles on one (shard, node) replica, in completion
+    /// order.
+    pub fn shard_gc_history(&self, id: NodeId, shard: ShardId) -> Result<Vec<GcOutput>> {
         let (tx, rx) = mpsc::sync_channel(1);
-        self.req(id, Req::GcHistory { resp: tx })?;
+        self.req(shard, id, Req::GcHistory { resp: tx })?;
         Ok(rx.recv_timeout(Duration::from_secs(10))?)
     }
 
-    /// Wait for any running GC on the leader to finish (benches).
+    /// Completed GC cycles on one node, concatenated shard by shard.
+    pub fn gc_history(&self, id: NodeId) -> Result<Vec<GcOutput>> {
+        let mut all = Vec::new();
+        for shard in 0..self.cfg.shards() {
+            all.extend(self.shard_gc_history(id, shard)?);
+        }
+        Ok(all)
+    }
+
+    /// Wait for any running GC on every shard's leader to finish
+    /// (benches).
     pub fn drain_gc(&self) -> Result<()> {
-        self.at_leader(move || {
+        let ids: Vec<ShardId> = (0..self.cfg.shards()).collect();
+        self.at_shard_leaders(&ids, |_| {
             let (tx, rx) = mpsc::sync_channel(1);
             (Req::DrainGc { resp: tx }, rx)
-        })
+        })?;
+        Ok(())
     }
 
-    /// Block until every replica has applied the same log prefix.
+    /// Block until, per shard, every replica has applied the same log
+    /// prefix.
     pub fn wait_converged(&self, timeout: Duration) -> Result<()> {
         let t0 = Instant::now();
-        loop {
-            let statuses: Result<Vec<Status>> =
-                self.node_ids().iter().map(|&id| self.status(id)).collect();
-            if let Ok(sts) = statuses {
-                let max = sts.iter().map(|s| s.last_applied).max().unwrap_or(0);
-                let min = sts.iter().map(|s| s.last_applied).min().unwrap_or(0);
-                if max == min {
-                    return Ok(());
+        'shards: for shard in 0..self.cfg.shards() {
+            loop {
+                let statuses: Result<Vec<Status>> = self
+                    .node_ids()
+                    .iter()
+                    .map(|&id| self.shard_status(id, shard))
+                    .collect();
+                if let Ok(sts) = statuses {
+                    let max = sts.iter().map(|s| s.last_applied).max().unwrap_or(0);
+                    let min = sts.iter().map(|s| s.last_applied).min().unwrap_or(0);
+                    if max == min {
+                        continue 'shards;
+                    }
                 }
+                if t0.elapsed() > timeout {
+                    bail!("shard {shard} replicas did not converge within {timeout:?}");
+                }
+                std::thread::sleep(Duration::from_millis(10));
             }
-            if t0.elapsed() > timeout {
-                bail!("replicas did not converge within {timeout:?}");
-            }
-            std::thread::sleep(Duration::from_millis(10));
-        }
-    }
-
-    /// Drain GC on *every* node.  On the paper's testbed follower GC
-    /// runs on other machines; on this single-core box it would
-    /// otherwise compete with the leader's read service (DESIGN.md §2).
-    pub fn drain_gc_all(&self) -> Result<()> {
-        let mut waits = Vec::new();
-        for id in self.node_ids() {
-            let (tx, rx) = mpsc::sync_channel(1);
-            self.req(id, Req::DrainGc { resp: tx })?;
-            waits.push((id, rx));
-        }
-        for (id, rx) in waits {
-            rx.recv_timeout(Duration::from_secs(120))
-                .map_err(|_| anyhow!("drain_gc timed out on node {id}"))??;
         }
         Ok(())
     }
 
+    /// Drain GC on *every* (shard, node) replica.  On the paper's
+    /// testbed follower GC runs on other machines; on this single-core
+    /// box it would otherwise compete with the leaders' read service
+    /// (DESIGN.md §2).
+    pub fn drain_gc_all(&self) -> Result<()> {
+        let mut waits = Vec::new();
+        for &(shard, id) in self.threads.keys() {
+            let (tx, rx) = mpsc::sync_channel(1);
+            self.req(shard, id, Req::DrainGc { resp: tx })?;
+            waits.push((shard, id, rx));
+        }
+        for (shard, id, rx) in waits {
+            rx.recv_timeout(Duration::from_secs(120))
+                .map_err(|_| anyhow!("drain_gc timed out on shard {shard} node {id}"))??;
+        }
+        Ok(())
+    }
+
+    /// Fault injection: stop one (shard, node) replica thread.  The
+    /// shard's surviving members re-elect once the election timeout
+    /// lapses; every other shard group is untouched.
+    pub fn kill(&mut self, shard: ShardId, id: NodeId) -> Result<()> {
+        let t = self
+            .threads
+            .remove(&(shard, id))
+            .ok_or_else(|| anyhow!("no node {id} for shard {shard}"))?;
+        let _ = t.tx.send(Req::Stop);
+        t.mailbox.notify();
+        let _ = t.join.join();
+        // Unregister from the shard's bus: the survivors keep sending
+        // heartbeats to the dead node, and those frames must count as
+        // dropped rather than queueing forever in a mailbox nobody
+        // drains.
+        self.buses[shard as usize].unregister(id);
+        *self.leader_cache[shard as usize].lock().unwrap() = None;
+        Ok(())
+    }
+
     pub fn shutdown(mut self) -> Result<()> {
-        for (_, t) in self.threads.iter() {
+        for t in self.threads.values() {
             let _ = t.tx.send(Req::Stop);
         }
-        self.bus.shutdown();
+        for bus in &self.buses {
+            bus.shutdown();
+        }
         for (_, t) in self.threads.drain() {
             let _ = t.join.join();
         }
@@ -357,24 +626,28 @@ const MAX_FOLD: usize = 512;
 
 fn node_loop(
     id: NodeId,
+    shard: ShardId,
     peers: Vec<NodeId>,
     cfg: ClusterConfig,
     bus: Bus,
     mailbox: Arc<crate::raft::transport::Mailbox>,
     rx: Receiver<Req>,
 ) -> Result<()> {
-    let base = cfg.base_dir.join(format!("node-{id}"));
+    let base = shard_dir(&cfg.base_dir, id, shard);
     let mut opts = cfg.engine.clone();
-    // LSM-Raft's asymmetric persistence: node 1 takes the leader path,
-    // the rest the follower (SSTable-shipping) path.  Node 1 also gets
-    // a shorter election timeout so the role assignment holds (bench
-    // simplification, DESIGN.md §2).
+    // Asymmetric role assignment, rotated per shard: shard `s` prefers
+    // node `(s % nodes) + 1` as leader (shorter election timeout), so
+    // a multi-shard cluster spreads its leaders across the nodes
+    // instead of serializing every group on node 1.  LSM-Raft's
+    // follower (SSTable-shipping) path follows the same preference
+    // (bench simplification, DESIGN.md §2).
+    let preferred = (shard as u64 % cfg.nodes.max(1) as u64) + 1;
     let mut raft_cfg = cfg.raft.clone();
-    if id == 1 {
-        raft_cfg.election_timeout_min = raft_cfg.election_timeout_min / 2;
+    if id == preferred {
+        raft_cfg.election_timeout_min /= 2;
         raft_cfg.election_timeout_max = raft_cfg.election_timeout_min + 2;
     }
-    opts.follower = cfg.kind == EngineKind::LsmRaft && id != 1;
+    opts.follower = cfg.kind == EngineKind::LsmRaft && id != preferred;
     let mut replica = Replica::open(
         id,
         peers,
@@ -383,7 +656,9 @@ fn node_loop(
         opts,
         raft_cfg,
         cfg.gc.clone(),
-        cfg.seed,
+        // Distinct election jitter per shard group (shard 0 keeps the
+        // configured seed, preserving single-shard determinism).
+        cfg.seed.wrapping_add(shard as u64 * 7919),
     )?;
 
     let started = Instant::now();
@@ -476,6 +751,7 @@ fn node_loop(
                     let s = replica.stats();
                     let _ = resp.send(Status {
                         id,
+                        shard,
                         role: replica.node.role(),
                         term: replica.node.term(),
                         leader_hint: replica.node.leader_hint(),
@@ -550,7 +826,7 @@ fn node_loop(
         // restart via the persisted GcState) but never kills the node.
         let now_ms = started.elapsed().as_millis() as u64;
         if let Err(e) = replica.pump_gc(now_ms) {
-            eprintln!("node {id}: gc pump error (degraded): {e:#}");
+            eprintln!("node {id} shard {shard}: gc pump error (degraded): {e:#}");
         }
 
         if stop {
@@ -571,6 +847,12 @@ mod tests {
         let mut c = ClusterConfig::new(base, kind, nodes);
         c.engine.memtable_bytes = 64 << 10;
         c.net = NetConfig { latency_us: (0, 0), loss: 0.0, seed: 1 };
+        c
+    }
+
+    fn sharded(name: &str, kind: EngineKind, nodes: usize, shards: u32) -> ClusterConfig {
+        let mut c = cfg(name, kind, nodes);
+        c.router = ShardRouter::hash(shards);
         c
     }
 
@@ -674,6 +956,77 @@ mod tests {
                 "g{i:04}"
             );
         }
+        cluster.shutdown().unwrap();
+    }
+
+    /// Single-shard clusters must keep the pre-sharding directory
+    /// layout so existing data dirs are adopted unchanged.
+    #[test]
+    fn shard0_layout_is_byte_compatible() {
+        let base = Path::new("/b");
+        assert_eq!(shard_dir(base, 2, 0), base.join("node-2"));
+        assert_eq!(shard_dir(base, 2, 3), base.join("node-2").join("shard-3"));
+    }
+
+    /// Tentpole acceptance: a 4-shard cluster answers every op exactly
+    /// like a single-shard cluster over the same history — routing and
+    /// split/merge are invisible to clients.
+    #[test]
+    fn four_shards_match_single_shard_semantics() {
+        let a = Cluster::start(sharded("shard1ref", EngineKind::Nezha, 3, 1)).unwrap();
+        let b = Cluster::start(sharded("shard4", EngineKind::Nezha, 3, 4)).unwrap();
+        let ops: Vec<(Vec<u8>, Vec<u8>)> = (0..120u32)
+            .map(|i| (format!("sk{i:04}").into_bytes(), format!("val{i}").into_bytes()))
+            .collect();
+        a.put_batch(ops.clone()).unwrap();
+        b.put_batch(ops).unwrap();
+        for c in [&a, &b] {
+            c.delete(b"sk0007").unwrap();
+            c.put(b"sk0010", b"overwritten").unwrap();
+        }
+        let keys: Vec<Vec<u8>> = (0..130u32).map(|i| format!("sk{i:04}").into_bytes()).collect();
+        assert_eq!(a.get_batch(&keys).unwrap(), b.get_batch(&keys).unwrap());
+        // Scans merge across shards in key order with the limit honored.
+        let sa = a.scan(b"sk0000", b"sk0099", 25).unwrap();
+        let sb = b.scan(b"sk0000", b"sk0099", 25).unwrap();
+        assert_eq!(sa, sb);
+        assert_eq!(sb.len(), 25);
+        assert!(sb.windows(2).all(|w| w[0].0 < w[1].0), "merged scan out of order");
+        // Unlimited scans agree too (tombstone excluded on both sides).
+        assert_eq!(
+            a.scan(b"sk", b"sl", 1000).unwrap(),
+            b.scan(b"sk", b"sl", 1000).unwrap()
+        );
+        a.shutdown().unwrap();
+        b.shutdown().unwrap();
+    }
+
+    /// Each shard group elects its own (preferentially rotated)
+    /// leader, and per-shard status rows roll up into the aggregate.
+    #[test]
+    fn shard_groups_elect_independent_leaders() {
+        let cluster = Cluster::start(sharded("shardlead", EngineKind::Nezha, 3, 3)).unwrap();
+        for i in 0..30u32 {
+            cluster.put(format!("lk{i:02}").as_bytes(), b"v").unwrap();
+        }
+        let mut leaders = Vec::new();
+        for shard in 0..3u32 {
+            let l = cluster.shard_leader(shard).unwrap();
+            let st = cluster.shard_status(l, shard).unwrap();
+            assert_eq!(st.role, Role::Leader, "shard {shard}");
+            assert_eq!(st.shard, shard);
+            leaders.push(l);
+        }
+        leaders.sort_unstable();
+        leaders.dedup();
+        assert_eq!(leaders.len(), 3, "leaders did not spread across nodes: {leaders:?}");
+        // Rollup sums per-shard applied counts (each shard applied its
+        // own sub-history plus election noops).
+        let id = cluster.node_ids()[0];
+        let rows = cluster.node_status(id).unwrap();
+        let agg = cluster.status(id).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(agg.last_applied, rows.iter().map(|s| s.last_applied).sum::<u64>());
         cluster.shutdown().unwrap();
     }
 }

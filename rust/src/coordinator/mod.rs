@@ -1,12 +1,18 @@
 //! Cluster coordinator: the Application/Consensus-layer runtime.
 //!
-//! * [`replica`] — one node's composition: Raft node + engine + GC
-//!   lifecycle pump.
-//! * [`cluster`] — thread-per-node cluster with leader routing, group
-//!   commit batching and a blocking client API.
+//! * [`router`] — deterministic key→shard partitioning and the pure
+//!   split/merge helpers behind the cluster's batch semantics.
+//! * [`replica`] — one (shard, node) replica's composition: Raft node +
+//!   engine + GC lifecycle pump.
+//! * [`cluster`] — thread-per-(shard, node) cluster hosting one
+//!   independent Raft group per shard, with per-shard leader routing,
+//!   group-commit batching, concurrent cross-shard fan-out and a
+//!   blocking client API.
 
 pub mod cluster;
 pub mod replica;
+pub mod router;
 
-pub use cluster::{Cluster, ClusterConfig, Status};
+pub use cluster::{shard_dir, Cluster, ClusterConfig, Status};
 pub use replica::Replica;
+pub use router::{ShardId, ShardRouter};

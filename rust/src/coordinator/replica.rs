@@ -7,7 +7,7 @@
 //! compaction → snapshot mark → epoch cleanup).
 
 use crate::engine::{self, EngineKind, EngineOpts, EngineStats, KvEngine};
-use crate::gc::{GcConfig, GcOutput, GcPhase};
+use crate::gc::{FrozenEpoch, GcConfig, GcOutput, GcPhase};
 use crate::raft::node::Outbox;
 use crate::raft::{Command, Config as RaftConfig, Node, NodeId};
 use anyhow::Result;
@@ -79,6 +79,13 @@ impl Replica {
     /// into them, and the next cycle compacts their tails.
     fn complete_cycle(&mut self, out: GcOutput) -> Result<GcOutput> {
         self.node.log.mark_snapshot(out.last_index, out.last_term)?;
+        // Remember, per retained epoch, where the next cycle's flush
+        // should seek to (the first byte above the new snapshot point)
+        // so it skips the already-compacted prefix instead of
+        // re-reading and filtering the whole file.
+        for &(epoch, off) in &out.skip_offsets {
+            self.node.log.set_epoch_skip(epoch, off);
+        }
         self.node.log.drop_epochs_covered_by(out.last_index)?;
         self.gc_history.push(out.clone());
         Ok(out)
@@ -119,7 +126,13 @@ impl Replica {
             let last_term = self.node.log.term_at(snap_at).unwrap_or(0);
             let min_index = self.node.log.snap_index;
             self.node.log.rotate()?;
-            let epochs = self.node.log.frozen_epochs();
+            let epochs: Vec<FrozenEpoch> = self
+                .node
+                .log
+                .frozen_epoch_inputs()
+                .into_iter()
+                .map(|(epoch, skip_offset)| FrozenEpoch { epoch, skip_offset })
+                .collect();
             self.engine().begin_gc(&epochs, min_index, snap_at, last_term)?;
             self.last_gc_ms = now_ms;
         }
@@ -290,6 +303,11 @@ mod tests {
         r.node.replicate().unwrap();
         let out = r.finish_gc().unwrap().expect("cycle output");
         assert_eq!(out.last_index, applied_at_trigger, "snapshot point = last_applied");
+        // The retained epoch carries a prefix-skip offset: the next
+        // cycle's flush seeks past the already-compacted prefix.
+        let inputs = r.node.log.frozen_epoch_inputs();
+        assert_eq!(inputs.len(), 1, "epoch with the backlog tail is retained");
+        assert!(inputs[0].1 > 0, "no skip offset recorded for the retained epoch");
         // Backlog values live in the retained frozen epoch.
         assert_eq!(r.engine().get(b"a000").unwrap(), Some(vec![5u8; 512]));
         assert_eq!(r.engine().get(b"b010").unwrap(), Some(vec![6u8; 512]));

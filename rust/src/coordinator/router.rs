@@ -1,0 +1,295 @@
+//! Deterministic key→shard routing for the multi-Raft cluster.
+//!
+//! The keyspace is partitioned across `N` independent consensus groups
+//! (shards); every replica node hosts one Raft participant per shard.
+//! The router is the single source of truth for which group owns a
+//! key: it is recorded in `ClusterConfig` so every client and every
+//! node derives the same placement, and it must stay stable across
+//! restarts (a key that moved shards would strand its data).
+//!
+//! Two partitioning schemes:
+//!
+//! * [`ShardRouter::Hash`] — FNV-1a over the whole key, mod `shards`.
+//!   Balanced under any key distribution; scans must fan out to every
+//!   shard.
+//! * [`ShardRouter::Range`] — explicit split points; shard `i` owns
+//!   `[points[i-1], points[i])`.  Scans could be pruned to overlapping
+//!   shards (the cluster currently fans out to all and lets empty
+//!   shards answer cheaply).
+//!
+//! The pure split/merge helpers here implement the cluster's batch
+//! semantics — per-shard sub-batches preserve relative op order, point
+//! reads re-merge in input order, scans k-way merge by key — and are
+//! property-tested below.  **No cross-shard atomicity**: a multi-shard
+//! `put_batch` is linearizable per shard only.
+
+pub type ShardId = u32;
+
+/// One `(key, value)` row as the client API moves it.
+pub type Row = (Vec<u8>, Vec<u8>);
+
+/// A key's destination after a batch split: `(shard, position within
+/// that shard's sub-batch)`.
+pub type KeySlot = (usize, usize);
+
+/// FNV-1a 64-bit over the whole key.  Stable across platforms and
+/// process restarts — the routing function is part of the on-disk
+/// contract once a cluster has data.
+fn fnv1a64(key: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in key {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Deterministic key→shard map (recorded in `ClusterConfig`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardRouter {
+    /// `shard = fnv1a64(key) % shards`.
+    Hash { shards: u32 },
+    /// Byte-wise range partitioning: shard `i` owns keys in
+    /// `[points[i-1], points[i])` (shard 0 is unbounded below, shard
+    /// `points.len()` unbounded above).  Points must be sorted.
+    Range { points: Vec<Vec<u8>> },
+}
+
+impl ShardRouter {
+    /// Hash-partitioned router over `shards` groups (min 1).
+    pub fn hash(shards: u32) -> Self {
+        ShardRouter::Hash { shards: shards.max(1) }
+    }
+
+    /// Range-partitioned router with the given sorted split points.
+    pub fn range(mut points: Vec<Vec<u8>>) -> Self {
+        points.sort();
+        ShardRouter::Range { points }
+    }
+
+    pub fn shards(&self) -> u32 {
+        match self {
+            ShardRouter::Hash { shards } => (*shards).max(1),
+            ShardRouter::Range { points } => points.len() as u32 + 1,
+        }
+    }
+
+    /// The shard that owns `key`.
+    pub fn route(&self, key: &[u8]) -> ShardId {
+        match self {
+            ShardRouter::Hash { shards } => (fnv1a64(key) % (*shards).max(1) as u64) as ShardId,
+            ShardRouter::Range { points } => {
+                points.partition_point(|p| p.as_slice() <= key) as ShardId
+            }
+        }
+    }
+}
+
+/// Partition a write batch into per-shard sub-batches.  Relative order
+/// inside each shard is preserved, and a key always routes to the same
+/// shard, so per-key ordering survives the split (the property tests
+/// below pin this down).
+pub fn split_ops(router: &ShardRouter, ops: Vec<Row>) -> Vec<Vec<Row>> {
+    let mut per: Vec<Vec<Row>> = vec![Vec::new(); router.shards() as usize];
+    for (k, v) in ops {
+        let s = router.route(&k) as usize;
+        per[s].push((k, v));
+    }
+    per
+}
+
+/// Partition point-read keys by shard.  Returns the per-shard key
+/// lists plus, for each input key in order, its `(shard, position)`
+/// slot — enough to re-merge per-shard results into input order.
+pub fn split_keys(router: &ShardRouter, keys: &[Vec<u8>]) -> (Vec<Vec<Vec<u8>>>, Vec<KeySlot>) {
+    let mut per: Vec<Vec<Vec<u8>>> = vec![Vec::new(); router.shards() as usize];
+    let mut slots = Vec::with_capacity(keys.len());
+    for k in keys {
+        let s = router.route(k) as usize;
+        slots.push((s, per[s].len()));
+        per[s].push(k.clone());
+    }
+    (per, slots)
+}
+
+/// K-way merge of per-shard scan results (each key-sorted) into one
+/// key-sorted row set of at most `limit` rows.  Keys are unique across
+/// shards (each key lives on exactly one), so no tie-breaking is
+/// needed.
+pub fn merge_sorted(mut lists: Vec<Vec<Row>>, limit: usize) -> Vec<Row> {
+    let mut idx = vec![0usize; lists.len()];
+    let mut out = Vec::new();
+    while out.len() < limit {
+        let mut win: Option<usize> = None;
+        for (l, list) in lists.iter().enumerate() {
+            if idx[l] < list.len() {
+                let better = match win {
+                    None => true,
+                    Some(w) => list[idx[l]].0 < lists[w][idx[w]].0,
+                };
+                if better {
+                    win = Some(l);
+                }
+            }
+        }
+        let Some(w) = win else { break };
+        out.push(std::mem::take(&mut lists[w][idx[w]]));
+        idx[w] += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use std::collections::BTreeMap;
+
+    fn routers(g: &mut prop::Gen) -> ShardRouter {
+        if g.bool() {
+            ShardRouter::hash(g.usize_in(1..9) as u32)
+        } else {
+            let points = g.vec(0..6, |g| g.key(1..6));
+            ShardRouter::range(points)
+        }
+    }
+
+    #[test]
+    fn hash_routing_is_deterministic_and_in_range() {
+        let r = ShardRouter::hash(7);
+        for i in 0..500u32 {
+            let k = format!("user{i:08}").into_bytes();
+            let s = r.route(&k);
+            assert!(s < 7);
+            assert_eq!(s, r.route(&k));
+        }
+        // One shard maps everything to 0.
+        let one = ShardRouter::hash(1);
+        assert_eq!(one.route(b"anything"), 0);
+        assert_eq!(one.shards(), 1);
+        // Degenerate configs clamp instead of dividing by zero.
+        assert_eq!(ShardRouter::hash(0).shards(), 1);
+    }
+
+    #[test]
+    fn hash_routing_is_roughly_balanced() {
+        let r = ShardRouter::hash(4);
+        let mut counts = [0usize; 4];
+        for i in 0..4000u32 {
+            counts[r.route(format!("user{i:010}").as_bytes()) as usize] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            assert!((500..2000).contains(&c), "shard {s} got {c} of 4000");
+        }
+    }
+
+    #[test]
+    fn range_routing_respects_split_points() {
+        let r = ShardRouter::range(vec![b"g".to_vec(), b"p".to_vec()]);
+        assert_eq!(r.shards(), 3);
+        assert_eq!(r.route(b"apple"), 0);
+        assert_eq!(r.route(b"g"), 1); // split point belongs to the right
+        assert_eq!(r.route(b"melon"), 1);
+        assert_eq!(r.route(b"p"), 2);
+        assert_eq!(r.route(b"zebra"), 2);
+    }
+
+    /// Satellite property: splitting a batch preserves per-key order
+    /// (each shard list is exactly the route-filtered subsequence),
+    /// and replaying the per-shard sub-batches reproduces the same
+    /// last-write-wins state as replaying the batch globally.
+    #[test]
+    fn prop_split_preserves_per_key_ordering() {
+        prop::check("shard-split-order", 300, |g| {
+            let router = routers(g);
+            let n = g.usize_in(0..120);
+            let ops: Vec<(Vec<u8>, Vec<u8>)> =
+                (0..n).map(|i| (g.key(1..10), vec![i as u8, g.u8()])).collect();
+            let per = split_ops(&router, ops.clone());
+            if per.len() != router.shards() as usize {
+                return Err(format!("{} shard lists for {} shards", per.len(), router.shards()));
+            }
+            for (s, list) in per.iter().enumerate() {
+                let expect: Vec<_> = ops
+                    .iter()
+                    .filter(|(k, _)| router.route(k) as usize == s)
+                    .cloned()
+                    .collect();
+                if *list != expect {
+                    return Err(format!("shard {s} list is not the routed subsequence"));
+                }
+            }
+            // Last-write-wins model equivalence.
+            let mut global: BTreeMap<Vec<u8>, Vec<u8>> = BTreeMap::new();
+            for (k, v) in &ops {
+                global.insert(k.clone(), v.clone());
+            }
+            let mut sharded: BTreeMap<Vec<u8>, Vec<u8>> = BTreeMap::new();
+            for list in per {
+                for (k, v) in list {
+                    sharded.insert(k, v);
+                }
+            }
+            if global != sharded {
+                return Err("sharded replay diverged from global replay".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite property: `split_keys` slots reassemble per-shard
+    /// results into exact input order.
+    #[test]
+    fn prop_split_keys_restores_input_order() {
+        prop::check("shard-key-slots", 300, |g| {
+            let router = routers(g);
+            let keys = g.vec(0..80, |g| g.key(1..10));
+            let (per, slots) = split_keys(&router, &keys);
+            if slots.len() != keys.len() {
+                return Err("slot per input key".into());
+            }
+            for (i, (s, p)) in slots.iter().enumerate() {
+                if per[*s][*p] != keys[i] {
+                    return Err(format!("slot {i} points at the wrong key"));
+                }
+            }
+            // Simulate per-shard answers (echo the key) and re-merge.
+            let answers: Vec<Vec<Vec<u8>>> = per;
+            let merged: Vec<Vec<u8>> =
+                slots.iter().map(|&(s, p)| answers[s][p].clone()).collect();
+            if merged != keys {
+                return Err("re-merge is not input order".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite property: fanning a scan out per shard and k-way
+    /// merging equals scanning the global sorted dataset.
+    #[test]
+    fn prop_scan_merge_equals_global_sort() {
+        prop::check("shard-scan-merge", 300, |g| {
+            let router = routers(g);
+            let mut global: BTreeMap<Vec<u8>, Vec<u8>> = BTreeMap::new();
+            for _ in 0..g.usize_in(0..100) {
+                global.insert(g.key(1..10), g.bytes(0..8));
+            }
+            let mut per: Vec<Vec<(Vec<u8>, Vec<u8>)>> =
+                vec![Vec::new(); router.shards() as usize];
+            // BTreeMap iteration is key-sorted, so each shard list is too.
+            for (k, v) in &global {
+                per[router.route(k) as usize].push((k.clone(), v.clone()));
+            }
+            let limit = g.usize_in(0..120);
+            let merged = merge_sorted(per, limit);
+            let expect: Vec<(Vec<u8>, Vec<u8>)> = global
+                .iter()
+                .take(limit)
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect();
+            if merged != expect {
+                return Err(format!("merge of {} keys diverged at limit {limit}", global.len()));
+            }
+            Ok(())
+        });
+    }
+}

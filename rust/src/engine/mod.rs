@@ -159,6 +159,25 @@ impl EngineStats {
         self.wal_bytes + self.flush_bytes + self.compact_bytes + self.engine_vlog_bytes
     }
 
+    /// Fold another shard replica's counters into this one — the
+    /// rolled-up view of a node hosting one engine per shard group.
+    pub fn absorb(&mut self, o: &EngineStats) {
+        self.wal_bytes += o.wal_bytes;
+        self.flush_bytes += o.flush_bytes;
+        self.compact_bytes += o.compact_bytes;
+        self.engine_vlog_bytes += o.engine_vlog_bytes;
+        self.gc_bytes += o.gc_bytes;
+        self.gc_cycles += o.gc_cycles;
+        self.gc_levels += o.gc_levels;
+        self.gc_level_runs += o.gc_level_runs;
+        self.gets += o.gets;
+        self.scans += o.scans;
+        self.vlog_reads += o.vlog_reads;
+        self.vlog_read_bytes += o.vlog_read_bytes;
+        self.readahead_hits += o.readahead_hits;
+        self.readahead_misses += o.readahead_misses;
+    }
+
     /// Readahead cache hit rate in `[0, 1]` (0 when the cache was never
     /// touched).
     pub fn readahead_hit_rate(&self) -> f64 {
@@ -210,12 +229,13 @@ pub trait KvEngine: StateMachine {
 
     /// Start a GC cycle over the frozen raft epochs (every retained
     /// frozen epoch, oldest first — earlier cycles' uncompacted tails
-    /// ride along).  Entries with `index <= min_index` are already in
-    /// the level stack and are skipped.  Only Nezha implements this;
-    /// the replica calls it right after `RaftLog::rotate()`.
+    /// ride along, each with the byte offset its already-compacted
+    /// prefix ends at).  Entries with `index <= min_index` are already
+    /// in the level stack and are skipped.  Only Nezha implements
+    /// this; the replica calls it right after `RaftLog::rotate()`.
     fn begin_gc(
         &mut self,
-        _frozen_epochs: &[u32],
+        _frozen_epochs: &[crate::gc::FrozenEpoch],
         _min_index: u64,
         _last_index: u64,
         _last_term: u64,

@@ -30,7 +30,7 @@ use super::{EngineKind, EngineOpts, EngineStats, KvEngine};
 use crate::gc::{
     self,
     levels::{LevelManifest, LeveledStorage},
-    sorted_path, FinalStorage, GcInputs, GcOutput, GcPhase, GcState,
+    sorted_path, EpochSource, FinalStorage, FrozenEpoch, GcInputs, GcOutput, GcPhase, GcState,
 };
 use crate::lsm::Db;
 use crate::raft::rpc::{Command, LogEntry, LogIndex, Term};
@@ -125,7 +125,13 @@ impl NezhaEngine {
         let manifest = match &had_manifest {
             Some(m) => m.clone(),
             None => match FinalStorage::latest_gen(&opts.dir)? {
-                Some(g) => LevelManifest { levels: vec![vec![g]], next_gen: g + 1 },
+                // Adopted legacy run: tombstone count unknown (treated
+                // as tombstone-carrying until a rewrite recounts it).
+                Some(g) => LevelManifest {
+                    levels: vec![vec![g]],
+                    next_gen: g + 1,
+                    run_tombstones: Default::default(),
+                },
                 None => LevelManifest::default(),
             },
         };
@@ -243,13 +249,21 @@ impl NezhaEngine {
                     st.save(&eng.opts.dir)?;
                 }
                 let inputs = GcInputs {
-                    frozen_vlog_paths: (st.min_epoch..=st.frozen_epoch)
-                        .map(|e| crate::raft::log::epoch_path(&eng.opts.raft_dir, e))
-                        .filter(|p| p.exists())
+                    // Resume reads each epoch from byte 0 (skip
+                    // offsets are a volatile optimization; the flush
+                    // filters by index, so the output is identical).
+                    frozen: (st.min_epoch..=st.frozen_epoch)
+                        .map(|e| EpochSource {
+                            epoch: e,
+                            path: crate::raft::log::epoch_path(&eng.opts.raft_dir, e),
+                            skip_offset: 0,
+                        })
+                        .filter(|s| s.path.exists())
                         .collect(),
                     dir: eng.opts.dir.clone(),
                     out_gen: st.out_gen,
                     stack: st.stack.clone(),
+                    run_tombstones: st.run_tombstones.clone(),
                     min_index: st.min_index,
                     last_index: st.last_index,
                     last_term: st.last_term,
@@ -297,13 +311,19 @@ impl NezhaEngine {
         self.manifest.levels = out.levels.clone();
         let max_written = out.written_gens.iter().copied().max().unwrap_or(0);
         self.manifest.next_gen = self.manifest.next_gen.max(max_written + 1);
+        // Tombstone bookkeeping: adopt the counts of every run this
+        // cycle wrote, drop counts of runs leaving the stack.
+        let live: std::collections::HashSet<u64> =
+            self.manifest.all_gens().into_iter().collect();
+        for &(g, t) in &out.run_tombstones {
+            self.manifest.run_tombstones.insert(g, t);
+        }
+        self.manifest.run_tombstones.retain(|g, _| live.contains(g));
         // Commit point: the manifest makes the new runs visible.
         self.manifest.save(&self.opts.dir)?;
         GcState::clear(&self.opts.dir)?;
         // Delete runs superseded by this cycle (old stack members and
         // intermediate outputs that did not survive into the stack).
-        let live: std::collections::HashSet<u64> =
-            self.manifest.all_gens().into_iter().collect();
         for g in old_gens.iter().chain(out.written_gens.iter()) {
             if !live.contains(g) {
                 FinalStorage::remove_gen(&self.opts.dir, *g);
@@ -423,6 +443,8 @@ impl StateMachine for NezhaEngine {
         gc::seal_run(&self.opts.dir, gen, w, &self.opts.index_backend)?;
         self.manifest.levels = vec![vec![gen]];
         self.manifest.next_gen = gen + 1;
+        // The snapshot run is a complete, tombstone-free image.
+        self.manifest.run_tombstones = std::iter::once((gen, 0)).collect();
         self.manifest.save(&self.opts.dir)?;
         // The aborted cycle is superseded even if it failed: without
         // this, a stale `running` flag would make the next restart
@@ -674,7 +696,7 @@ impl KvEngine for NezhaEngine {
     /// frozen epoch (earlier cycles' uncompacted tails included).
     fn begin_gc(
         &mut self,
-        frozen_epochs: &[u32],
+        frozen_epochs: &[FrozenEpoch],
         min_index: u64,
         last_index: u64,
         last_term: u64,
@@ -683,8 +705,8 @@ impl KvEngine for NezhaEngine {
         anyhow::ensure!(self.gc_rx.is_none() && self.old_db.is_none(), "GC already running");
         anyhow::ensure!(!frozen_epochs.is_empty(), "GC needs at least one frozen epoch");
 
-        let min_epoch = *frozen_epochs.iter().min().unwrap();
-        let frozen_epoch = *frozen_epochs.iter().max().unwrap();
+        let min_epoch = frozen_epochs.iter().map(|f| f.epoch).min().unwrap();
+        let frozen_epoch = frozen_epochs.iter().map(|f| f.epoch).max().unwrap();
         let out_gen = self.manifest.next_gen;
         GcState {
             running: true,
@@ -695,6 +717,7 @@ impl KvEngine for NezhaEngine {
             last_index,
             last_term,
             stack: self.manifest.levels.clone(),
+            run_tombstones: self.manifest.run_tombstones.clone(),
         }
         .save(&self.opts.dir)?;
 
@@ -705,16 +728,21 @@ impl KvEngine for NezhaEngine {
         let frozen_seq = std::mem::replace(&mut self.cur_db_seq, new_seq);
         self.old_db = Some((frozen_db, frozen_seq));
 
-        let mut epochs: Vec<u32> = frozen_epochs.to_vec();
-        epochs.sort_unstable();
+        let mut epochs: Vec<FrozenEpoch> = frozen_epochs.to_vec();
+        epochs.sort_unstable_by_key(|f| f.epoch);
         let inputs = GcInputs {
-            frozen_vlog_paths: epochs
+            frozen: epochs
                 .iter()
-                .map(|&e| crate::raft::log::epoch_path(&self.opts.raft_dir, e))
+                .map(|f| EpochSource {
+                    epoch: f.epoch,
+                    path: crate::raft::log::epoch_path(&self.opts.raft_dir, f.epoch),
+                    skip_offset: f.skip_offset,
+                })
                 .collect(),
             dir: self.opts.dir.clone(),
             out_gen,
             stack: self.manifest.levels.clone(),
+            run_tombstones: self.manifest.run_tombstones.clone(),
             min_index,
             last_index,
             last_term,
@@ -817,15 +845,24 @@ mod tests {
             self.eng.apply(&e, vref).unwrap();
         }
 
-        /// Trigger a full GC cycle synchronously.
+        /// Trigger a full GC cycle synchronously (with the recorded
+        /// prefix-skip offsets, like the replica does).
         fn gc(&mut self) -> GcOutput {
             let last_index = self.next_index - 1;
             let min_index = self.log.snap_index;
-            let frozen = self.log.rotate().unwrap();
-            let epochs = self.log.frozen_epochs();
+            self.log.rotate().unwrap();
+            let epochs: Vec<FrozenEpoch> = self
+                .log
+                .frozen_epoch_inputs()
+                .into_iter()
+                .map(|(epoch, skip_offset)| FrozenEpoch { epoch, skip_offset })
+                .collect();
             self.eng.begin_gc(&epochs, min_index, last_index, 1).unwrap();
             let out = self.eng.wait_gc().unwrap().expect("gc output");
             self.log.mark_snapshot(out.last_index, out.last_term).unwrap();
+            for &(e, off) in &out.skip_offsets {
+                self.log.set_epoch_skip(e, off);
+            }
             self.log.drop_epochs_covered_by(out.last_index).unwrap();
             out
         }
@@ -886,7 +923,7 @@ mod tests {
         }
         let last_index = r.next_index - 1;
         let frozen = r.log.rotate().unwrap();
-        r.eng.begin_gc(&[frozen], 0, last_index, 1).unwrap();
+        r.eng.begin_gc(&[FrozenEpoch::new(frozen)], 0, last_index, 1).unwrap();
         assert_eq!(r.eng.gc_phase(), GcPhase::During);
         // New writes land in the New Storage while GC runs.
         r.put("new001", b"from-new");
@@ -995,7 +1032,7 @@ mod tests {
     fn nogc_variant_refuses_gc() {
         let mut r = Rig::new("nogc", false);
         r.put("k", b"v");
-        assert!(r.eng.begin_gc(&[0], 0, 1, 1).is_err());
+        assert!(r.eng.begin_gc(&[FrozenEpoch::new(0)], 0, 1, 1).is_err());
         assert_eq!(r.eng.kind(), EngineKind::NezhaNoGc);
     }
 
@@ -1048,6 +1085,7 @@ mod tests {
             last_index,
             last_term: 1,
             stack: vec![],
+            run_tombstones: Default::default(),
         }
         .save(&r.base.join("engine"))
         .unwrap();
@@ -1084,6 +1122,7 @@ mod tests {
             last_index: out.last_index,
             last_term: out.last_term,
             stack: vec![],
+            run_tombstones: Default::default(),
         }
         .save(&r.base.join("engine"))
         .unwrap();
@@ -1131,7 +1170,7 @@ mod tests {
         // Rotate: epoch 0 freezes, epoch 1 becomes the live log.
         let last_index = r.next_index - 1;
         let frozen = r.log.rotate().unwrap();
-        r.eng.begin_gc(&[frozen], 0, last_index, 1).unwrap();
+        r.eng.begin_gc(&[FrozenEpoch::new(frozen)], 0, last_index, 1).unwrap();
         for i in 0..60u32 {
             r.put(&format!("new{i:03}"), format!("epoch1-{i}").as_bytes());
         }
@@ -1291,7 +1330,7 @@ mod tests {
         let frozen = b.log.rotate().unwrap();
         // Sabotage the cycle: point it at a missing epoch so run_gc
         // fails and the engine stays During with GcState persisted.
-        b.eng.begin_gc(&[frozen + 7], 0, last_index, 1).unwrap();
+        b.eng.begin_gc(&[FrozenEpoch::new(frozen + 7)], 0, last_index, 1).unwrap();
         assert!(b.eng.wait_gc().unwrap().is_none(), "cycle must fail");
         assert_eq!(b.eng.gc_phase(), GcPhase::During);
         assert!(GcState::load(&b.base.join("engine")).unwrap().unwrap().running);

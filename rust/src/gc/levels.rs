@@ -74,6 +74,33 @@ pub fn decode_levels(d: &mut Decoder) -> Result<Vec<Vec<u64>>> {
     Ok(levels)
 }
 
+/// Wire format of the per-run tombstone counts (`gen → count`), shared
+/// by [`LevelManifest`] and `GcState`.  Appended after the level stack;
+/// files written before the counts existed simply end early, which
+/// [`decode_tombstone_counts`] reads as the empty ("unknown") map.
+pub fn encode_tombstone_counts(e: &mut Encoder, counts: &std::collections::BTreeMap<u64, u64>) {
+    e.varint(counts.len() as u64);
+    for (gen, t) in counts {
+        e.u64(*gen).varint(*t);
+    }
+}
+
+/// Inverse of [`encode_tombstone_counts`]; an exhausted decoder yields
+/// the empty map (pre-upgrade files).
+pub fn decode_tombstone_counts(d: &mut Decoder) -> Result<std::collections::BTreeMap<u64, u64>> {
+    let mut counts = std::collections::BTreeMap::new();
+    if d.remaining() == 0 {
+        return Ok(counts);
+    }
+    let n = d.varint()? as usize;
+    for _ in 0..n {
+        let gen = d.u64()?;
+        let t = d.varint()?;
+        counts.insert(gen, t);
+    }
+    Ok(counts)
+}
+
 /// CRC-framed atomic flag-file write (`crc32 | body` via tmp+rename).
 /// One implementation for every GC commit-point file (`LEVELS`,
 /// `GC_STATE`) so the crash-atomicity mechanics cannot drift.
@@ -115,15 +142,21 @@ pub(crate) fn load_framed(dir: &Path, name: &str) -> Result<Option<Vec<u8>>> {
 /// Durable description of the level stack: `levels[d]` lists the run
 /// generations at depth `d`, newest first.  `next_gen` is the next
 /// unused generation number (monotonic across the directory's life).
+/// `run_tombstones` counts the tombstone frames per run so a trivial
+/// move to the stack bottom knows whether a rewrite (annihilation) is
+/// worth it — tombstone-free runs slide as pure metadata.  A run
+/// missing from the map (pre-upgrade manifests) reads as "unknown"
+/// and is conservatively rewritten once.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LevelManifest {
     pub levels: Vec<Vec<u64>>,
     pub next_gen: u64,
+    pub run_tombstones: std::collections::BTreeMap<u64, u64>,
 }
 
 impl Default for LevelManifest {
     fn default() -> Self {
-        Self { levels: Vec::new(), next_gen: 1 }
+        Self { levels: Vec::new(), next_gen: 1, run_tombstones: Default::default() }
     }
 }
 
@@ -141,6 +174,7 @@ impl LevelManifest {
         let mut e = Encoder::new();
         e.u64(MANIFEST_MAGIC).u64(self.next_gen);
         encode_levels(&mut e, &self.levels);
+        encode_tombstone_counts(&mut e, &self.run_tombstones);
         save_framed(dir, MANIFEST_FILE, &e.into_vec())
     }
 
@@ -154,7 +188,8 @@ impl LevelManifest {
         }
         let next_gen = d.u64()?;
         let levels = decode_levels(&mut d)?;
-        Ok(Some(Self { levels, next_gen }))
+        let run_tombstones = decode_tombstone_counts(&mut d)?;
+        Ok(Some(Self { levels, next_gen, run_tombstones }))
     }
 }
 
@@ -282,12 +317,36 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         assert_eq!(LevelManifest::load(&dir).unwrap(), None);
-        let m = LevelManifest { levels: vec![vec![5, 3], vec![], vec![1]], next_gen: 6 };
+        let m = LevelManifest {
+            levels: vec![vec![5, 3], vec![], vec![1]],
+            next_gen: 6,
+            run_tombstones: [(5, 2), (3, 0), (1, 7)].into_iter().collect(),
+        };
         m.save(&dir).unwrap();
         assert_eq!(LevelManifest::load(&dir).unwrap(), Some(m.clone()));
         assert_eq!(m.all_gens(), vec![5, 3, 1]);
         assert!(!m.is_empty());
         assert!(LevelManifest::default().is_empty());
+    }
+
+    /// A manifest written before per-run tombstone counts existed (no
+    /// trailing count map) still loads, with the counts read as
+    /// "unknown" (empty map).
+    #[test]
+    fn manifest_without_tombstone_counts_still_loads() {
+        let dir =
+            std::env::temp_dir().join(format!("nezha-manifest-pretomb-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut e = Encoder::new();
+        e.u64(MANIFEST_MAGIC).u64(4);
+        let stack = vec![vec![3], vec![1]];
+        encode_levels(&mut e, &stack);
+        save_framed(&dir, MANIFEST_FILE, &e.into_vec()).unwrap();
+        let m = LevelManifest::load(&dir).unwrap().expect("legacy manifest loads");
+        assert_eq!(m.levels, stack);
+        assert_eq!(m.next_gen, 4);
+        assert!(m.run_tombstones.is_empty());
     }
 
     #[test]

@@ -83,12 +83,32 @@ impl Default for GcConfig {
     }
 }
 
+/// One frozen raft epoch feeding a GC cycle: its id plus the first
+/// byte offset that may still hold uncompacted entries.  The previous
+/// cycle records the offset (see [`GcOutput::skip_offsets`]) so a
+/// backlog-tail epoch is re-read from its tail instead of from byte 0;
+/// `skip_offset = 0` (unknown) is always safe — the flush filters by
+/// index either way.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrozenEpoch {
+    pub epoch: u32,
+    pub skip_offset: u64,
+}
+
+impl FrozenEpoch {
+    /// An epoch with no recorded skip point (read from the start).
+    pub fn new(epoch: u32) -> Self {
+        Self { epoch, skip_offset: 0 }
+    }
+}
+
 /// Persistent GC progress flag ("the recovery process first checks the
 /// atomic GC state flag" — §III-E).  Written atomically via tmp+rename.
 ///
 /// Besides the frozen-epoch range and output generation it records the
-/// committed level stack at cycle start, so a resumed cycle replans the
-/// exact same flush + merge sequence.
+/// committed level stack at cycle start — and the stack runs' tombstone
+/// counts, which gate the trivial-move-vs-rewrite decision — so a
+/// resumed cycle replans the exact same flush + merge sequence.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct GcState {
     pub running: bool,
@@ -105,6 +125,10 @@ pub struct GcState {
     /// Committed level stack (run gens, newest-first per level) when
     /// the cycle began.
     pub stack: Vec<Vec<u64>>,
+    /// Tombstone frames per stack run (`gen → count`) at cycle start.
+    /// Runs absent from the map (pre-upgrade flag files) read as
+    /// "unknown" and are conservatively treated as tombstone-carrying.
+    pub run_tombstones: std::collections::BTreeMap<u64, u64>,
 }
 
 impl GcState {
@@ -124,6 +148,7 @@ impl GcState {
             .u64(self.last_index)
             .u64(self.last_term);
         encode_levels(&mut e, &self.stack);
+        levels::encode_tombstone_counts(&mut e, &self.run_tombstones);
         save_framed(dir, "GC_STATE", &e.into_vec())
     }
 
@@ -149,6 +174,7 @@ impl GcState {
                 last_index: d.u64()?,
                 last_term: d.u64()?,
                 stack: Vec::new(),
+                run_tombstones: Default::default(),
             }));
         }
         let running = d.u8()? != 0;
@@ -159,6 +185,9 @@ impl GcState {
         let last_index = d.u64()?;
         let last_term = d.u64()?;
         let stack = decode_levels(&mut d)?;
+        // Flag files written before tombstone counts end here; the
+        // empty map reads as "unknown" downstream.
+        let run_tombstones = levels::decode_tombstone_counts(&mut d)?;
         Ok(Some(Self {
             running,
             min_epoch,
@@ -168,6 +197,7 @@ impl GcState {
             last_index,
             last_term,
             stack,
+            run_tombstones,
         }))
     }
 
@@ -347,10 +377,26 @@ pub struct GcOutput {
     /// Every generation the cycle wrote (flush + merge outputs),
     /// whether or not it survived into `levels`.
     pub written_gens: Vec<u64>,
+    /// Tombstone frames in every run the cycle wrote, `(gen, count)`
+    /// (manifest bookkeeping for the trivial-move annihilation rule).
+    pub run_tombstones: Vec<(u64, u64)>,
+    /// Per input epoch: the first byte offset holding entries above
+    /// this cycle's snapshot point — the next cycle's flush seeks
+    /// straight to it instead of re-reading the compacted prefix.
+    pub skip_offsets: Vec<(u32, u64)>,
     pub last_index: u64,
     pub last_term: u64,
     pub wall_ms: u64,
     pub index_backend: &'static str,
+}
+
+/// One frozen ValueLog file feeding a cycle's flush: the epoch id, its
+/// on-disk path and the byte offset the flush may seek to (everything
+/// below it is already compacted; 0 = read from the start).
+pub struct EpochSource {
+    pub epoch: u32,
+    pub path: PathBuf,
+    pub skip_offset: u64,
 }
 
 /// Inputs for one compaction cycle (runs on a background thread; only
@@ -360,7 +406,7 @@ pub struct GcInputs {
     /// Frozen Active-Storage ValueLogs (raft epoch files), oldest
     /// first.  Multiple files appear when earlier cycles froze with an
     /// apply backlog: the uncompacted tails ride along here.
-    pub frozen_vlog_paths: Vec<PathBuf>,
+    pub frozen: Vec<EpochSource>,
     /// Output directory (holds sorted-*.vlog/idx + manifest).
     pub dir: PathBuf,
     /// Generation for the flush output; merge outputs take successive
@@ -368,6 +414,10 @@ pub struct GcInputs {
     pub out_gen: u64,
     /// Committed level stack at cycle start.
     pub stack: Vec<Vec<u64>>,
+    /// Tombstone frames per stack run.  A run missing from the map is
+    /// treated as tombstone-carrying (pre-upgrade manifests), so a
+    /// trivial move to the stack bottom rewrites it once.
+    pub run_tombstones: std::collections::BTreeMap<u64, u64>,
     /// Entries with `index <= min_index` are already in the stack.
     pub min_index: u64,
     pub last_index: u64,
@@ -404,23 +454,24 @@ fn open_writer(
 }
 
 /// Finish a run: build + save its hash index through the configured
-/// backend, return `(bytes, entries)`.  Shared by the GC cycle and
-/// `install_snapshot` so every sorted run — GC-produced or
+/// backend, return `(bytes, entries, tombstones)`.  Shared by the GC
+/// cycle and `install_snapshot` so every sorted run — GC-produced or
 /// snapshot-materialized — is sealed through the same path.
 pub(crate) fn seal_run(
     dir: &Path,
     gen: u64,
     w: SortedVLogWriter,
     backend: &Arc<dyn IndexBackend>,
-) -> Result<(u64, u64)> {
+) -> Result<(u64, u64, u64)> {
     let entries = w.entry_count() as u64;
+    let tombstones = w.tombstone_count() as u64;
     let (bytes, key_offsets) = w.finish()?;
     let cap = HashIndex::capacity_for(key_offsets.len()) as u32;
     let keys: Vec<&[u8]> = key_offsets.iter().map(|(k, _)| k.as_slice()).collect();
     let (hashes, buckets) = backend.plan(&keys, cap)?;
     let index = HashIndex::build_from_planner(&key_offsets, &hashes, &buckets)?;
     index.save(&index_path(dir, gen))?;
-    Ok((bytes, entries))
+    Ok((bytes, entries, tombstones))
 }
 
 /// Flush the frozen epochs' live entries (`min_index < index <=
@@ -434,14 +485,29 @@ pub(crate) fn seal_run(
 /// always carry indexes above it and are filtered out, and a torn
 /// frame fails its CRC — the cycle errors and retries after restart
 /// instead of absorbing bad data.
-fn flush_epochs(inp: &GcInputs, annihilate: bool) -> Result<(u64, u64)> {
+fn flush_epochs(
+    inp: &GcInputs,
+    annihilate: bool,
+) -> Result<(u64, u64, u64, Vec<(u32, u64)>)> {
     let mut fresh: BTreeMap<Vec<u8>, VEntry> = BTreeMap::new();
-    for path in &inp.frozen_vlog_paths {
-        let reader = VLogReader::open(path)?;
-        for item in reader.iter()? {
-            let (_, e) = item?;
-            if e.index <= inp.min_index || e.index > inp.last_index {
-                continue; // already compacted / beyond the snapshot point
+    let mut skips: Vec<(u32, u64)> = Vec::with_capacity(inp.frozen.len());
+    for src in &inp.frozen {
+        let reader = VLogReader::open(&src.path)?;
+        // Offsets and indexes grow together within an epoch file, so
+        // the already-compacted prefix (`index <= min_index`) is a
+        // byte prefix: seek straight past it, and record where THIS
+        // cycle's coverage ends for the next cycle to seek to.
+        let mut next_skip: Option<u64> = None;
+        for item in reader.iter_from(src.skip_offset)? {
+            let (off, e) = item?;
+            if e.index > inp.last_index {
+                if next_skip.is_none() {
+                    next_skip = Some(off);
+                }
+                continue; // beyond the snapshot point (next cycle's work)
+            }
+            if e.index <= inp.min_index {
+                continue; // already compacted
             }
             if e.key.is_empty() && e.value.is_none() {
                 continue; // raft noop
@@ -453,6 +519,13 @@ fn flush_epochs(inp: &GcInputs, annihilate: bool) -> Result<(u64, u64)> {
                 fresh.insert(e.key.clone(), e);
             }
         }
+        // Fully covered epoch: the next cycle may skip the whole file
+        // (it will normally be dropped by the snapshot anyway).
+        let skip = match next_skip {
+            Some(off) => off,
+            None => std::fs::metadata(&src.path)?.len(),
+        };
+        skips.push((src.epoch, skip));
     }
     let out_path = sorted_path(&inp.dir, inp.out_gen);
     let mut w = open_writer(&out_path, inp.resume, inp.last_term, inp.last_index)?;
@@ -466,7 +539,8 @@ fn flush_epochs(inp: &GcInputs, annihilate: bool) -> Result<(u64, u64)> {
         }
         w.add(&e)?;
     }
-    seal_run(&inp.dir, inp.out_gen, w, &inp.backend)
+    let (bytes, entries, tombs) = seal_run(&inp.dir, inp.out_gen, w, &inp.backend)?;
+    Ok((bytes, entries, tombs, skips))
 }
 
 /// K-way merge of the sorted runs `src_gens` (newest first — the
@@ -479,7 +553,7 @@ fn merge_runs(
     annihilate: bool,
     resume: bool,
     backend: &Arc<dyn IndexBackend>,
-) -> Result<(u64, u64)> {
+) -> Result<(u64, u64, u64)> {
     let logs: Vec<SortedVLog> = src_gens
         .iter()
         .map(|&g| SortedVLog::open(&sorted_path(dir, g)))
@@ -557,7 +631,7 @@ pub fn run_gc(inp: &GcInputs) -> Result<GcOutput> {
     // (1) Flush.  The flush run may annihilate tombstones only if the
     // stack is empty (it becomes the bottom level).
     let stack_empty = inp.stack.iter().all(|l| l.is_empty());
-    let (flush_bytes, entries) = flush_epochs(inp, stack_empty)?;
+    let (flush_bytes, entries, flush_tombs, skip_offsets) = flush_epochs(inp, stack_empty)?;
 
     // (2) Push onto L0 and replan the levels.
     let mut stack: Vec<Vec<u64>> = inp.stack.clone();
@@ -566,6 +640,12 @@ pub fn run_gc(inp: &GcInputs) -> Result<GcOutput> {
     }
     stack[0].insert(0, inp.out_gen);
     let mut written = vec![inp.out_gen];
+    // Known tombstone counts: the committed stack's plus every run
+    // this cycle writes.  Runs absent from the map read as "unknown"
+    // and are conservatively treated as tombstone-carrying.
+    let mut tombs = inp.run_tombstones.clone();
+    tombs.insert(inp.out_gen, flush_tombs);
+    let mut written_tombs: Vec<(u64, u64)> = vec![(inp.out_gen, flush_tombs)];
     let mut next_gen = inp.out_gen + 1;
     let mut merge_bytes = 0u64;
     let mut merges = 0u64;
@@ -585,17 +665,32 @@ pub fn run_gc(inp: &GcInputs) -> Result<GcOutput> {
         }
         let next_empty = stack.get(i + 1).is_none_or(|l| l.is_empty());
         if next_empty && stack[i].len() <= 1 {
-            // Trivial move: a single over-budget run with nothing at
-            // the next level slides down (metadata only, no rewrite)
-            // until its depth's budget holds it — read precedence and
-            // tombstone semantics are unchanged by depth alone.
-            let runs = std::mem::take(&mut stack[i]);
-            if i + 1 >= stack.len() {
-                stack.push(Vec::new());
+            let becomes_bottom = stack
+                .get(i + 2..)
+                .is_none_or(|rest| rest.iter().all(|l| l.is_empty()));
+            let run_tombs = stack[i]
+                .first()
+                .map(|g| tombs.get(g).copied().unwrap_or(1))
+                .unwrap_or(0);
+            if !(becomes_bottom && run_tombs > 0) {
+                // Trivial move: a single over-budget run with nothing
+                // at the next level slides down (metadata only, no
+                // rewrite) until its depth's budget holds it — read
+                // precedence and tombstone semantics are unchanged by
+                // depth alone.  Tombstone-free runs take this path
+                // even when the slide lands them at the stack bottom.
+                let runs = std::mem::take(&mut stack[i]);
+                if i + 1 >= stack.len() {
+                    stack.push(Vec::new());
+                }
+                stack[i + 1] = runs;
+                i += 1;
+                continue;
             }
-            stack[i + 1] = runs;
-            i += 1;
-            continue;
+            // A tombstone-carrying run about to become the new stack
+            // bottom: fall through to the single-source merge below,
+            // which rewrites it with `annihilate` so its tombstones
+            // stop wasting space (they mask nothing down there).
         }
         let mut srcs = stack[i].clone();
         if let Some(next) = stack.get(i + 1) {
@@ -608,11 +703,13 @@ pub fn run_gc(inp: &GcInputs) -> Result<GcOutput> {
             .is_none_or(|rest| rest.iter().all(|l| l.is_empty()));
         let out = next_gen;
         next_gen += 1;
-        let (b, _) = merge_runs(&inp.dir, &srcs, out, annihilate, inp.resume, &inp.backend)
+        let (b, _, t) = merge_runs(&inp.dir, &srcs, out, annihilate, inp.resume, &inp.backend)
             .with_context(|| format!("merge level {i} -> {}", i + 1))?;
         merge_bytes += b;
         merges += 1;
         written.push(out);
+        tombs.insert(out, t);
+        written_tombs.push((out, t));
         stack[i] = Vec::new();
         if i + 1 >= stack.len() {
             stack.push(Vec::new());
@@ -633,6 +730,8 @@ pub fn run_gc(inp: &GcInputs) -> Result<GcOutput> {
         merges,
         levels: stack,
         written_gens: written,
+        run_tombstones: written_tombs,
+        skip_offsets,
         last_index: inp.last_index,
         last_term: inp.last_term,
         wall_ms: t0.elapsed().as_millis() as u64,
@@ -675,10 +774,11 @@ mod tests {
         last_index: u64,
     ) -> GcInputs {
         GcInputs {
-            frozen_vlog_paths: vec![vlog],
+            frozen: vec![EpochSource { epoch: 0, path: vlog, skip_offset: 0 }],
             dir: dir.to_path_buf(),
             out_gen: gen,
             stack,
+            run_tombstones: Default::default(),
             min_index: 0,
             last_index,
             last_term: 1,
@@ -852,8 +952,11 @@ mod tests {
         assert_eq!(out1.entries, 2); // a, b
         // Epoch 1: index 5.
         let v1 = write_epoch_file(&dir, 1, &[VEntry::put(1, 5, "d", "1")]);
-        let mut inp = inputs(&dir, v1, out1.levels.clone(), 2, 5);
-        inp.frozen_vlog_paths = vec![v0, inp.frozen_vlog_paths[0].clone()];
+        let mut inp = inputs(&dir, v1.clone(), out1.levels.clone(), 2, 5);
+        inp.frozen = vec![
+            EpochSource { epoch: 0, path: v0, skip_offset: 0 },
+            EpochSource { epoch: 1, path: v1, skip_offset: 0 },
+        ];
         inp.min_index = 2;
         let out2 = run_gc(&inp).unwrap();
         assert_eq!(out2.entries, 3); // c, a-overwrite, d
@@ -1033,11 +1136,31 @@ mod tests {
             last_index: 55,
             last_term: 4,
             stack: vec![vec![7, 5], vec![1]],
+            run_tombstones: [(7, 0), (5, 12), (1, 3)].into_iter().collect(),
         };
         st.save(&dir).unwrap();
         assert_eq!(GcState::load(&dir).unwrap(), Some(st));
         GcState::clear(&dir).unwrap();
         assert_eq!(GcState::load(&dir).unwrap(), None);
+    }
+
+    /// A leveled-but-pre-tombstone-count flag file (stack recorded, no
+    /// trailing count map) still decodes; the empty map reads as
+    /// "unknown" downstream.
+    #[test]
+    fn gc_state_decodes_pre_tombstone_count_format() {
+        let dir = tmpdir("pretombstate");
+        let mut e = Encoder::with_capacity(64);
+        e.u8(1).u32(2).u32(3).u64(2).u64(10).u64(55).u64(4);
+        let stack = vec![vec![7, 5], vec![1]];
+        encode_levels(&mut e, &stack);
+        let body = e.into_vec();
+        let mut framed = Encoder::with_capacity(body.len() + 4);
+        framed.u32(crc32fast::hash(&body)).bytes(&body);
+        std::fs::write(dir.join("GC_STATE"), framed.as_slice()).unwrap();
+        let st = GcState::load(&dir).unwrap().expect("decodes");
+        assert_eq!(st.stack, vec![vec![7, 5], vec![1]]);
+        assert!(st.run_tombstones.is_empty());
     }
 
     /// Upgrade path: a pre-leveled GC_STATE (29-byte body, single
@@ -1133,6 +1256,7 @@ mod tests {
     fn cycle_bytes_bounded_by_budgets() {
         let dir = tmpdir("bounded");
         let mut stack: Vec<Vec<u64>> = vec![];
+        let mut tomb_counts: std::collections::BTreeMap<u64, u64> = Default::default();
         let mut next_gen = 1u64;
         let mut index = 0u64;
         let mut total_flush = 0u64;
@@ -1152,7 +1276,11 @@ mod tests {
             // L0 holds ~1 flush; level budgets grow 4x.
             inp.level0_bytes = 5 << 10;
             inp.fanout = 4;
+            inp.run_tombstones = tomb_counts.clone();
             let out = run_gc(&inp).unwrap();
+            for (g, t) in &out.run_tombstones {
+                tomb_counts.insert(*g, *t);
+            }
             stack = out.levels.clone();
             next_gen = out.written_gens.iter().max().unwrap() + 1;
             total_flush += out.flush_bytes;
@@ -1191,5 +1319,126 @@ mod tests {
             "only {flush_only_cycles} flush-only cycles — per-cycle work not bounded"
         );
         assert!(stack.len() >= 3, "stack should have deepened: {stack:?}");
+    }
+
+    /// Satellite: a cycle records, per retained epoch, the first offset
+    /// above its snapshot point; the next cycle seeks straight there.
+    /// Proof that the prefix is genuinely not read: corrupt it — the
+    /// skipping cycle succeeds while a full read fails on the CRC.
+    #[test]
+    fn flush_seeks_past_already_compacted_prefix() {
+        let dir = tmpdir("prefixskip");
+        // One epoch, indexes 1..=10; first cycle covers only 1..=5
+        // (apply backlog), so 6..=10 ride along to the next cycle.
+        let entries: Vec<VEntry> = (0..10u64)
+            .map(|i| VEntry::put(1, i + 1, format!("key{i:02}"), vec![7u8; 64]))
+            .collect();
+        let vlog = write_epoch(&dir, &entries);
+        let out1 = run_gc(&inputs(&dir, vlog.clone(), vec![], 1, 5)).unwrap();
+        assert_eq!(out1.entries, 5);
+        let (epoch, skip) = out1.skip_offsets[0];
+        assert_eq!(epoch, 0);
+        assert!(skip > 0, "skip offset for the uncompacted tail");
+
+        // Cycle 2 with the recorded skip compacts exactly the tail.
+        let cycle2 = |skip_offset: u64| {
+            let mut inp = inputs(&dir, vlog.clone(), out1.levels.clone(), 2, 10);
+            inp.frozen[0].skip_offset = skip_offset;
+            inp.min_index = 5;
+            inp
+        };
+        let out2 = run_gc(&cycle2(skip)).unwrap();
+        assert_eq!(out2.entries, 5, "tail entries 6..=10");
+        let reference = std::fs::read(sorted_path(&dir, 2)).unwrap();
+        // A fully-covered epoch's next skip is the whole file.
+        assert_eq!(out2.skip_offsets[0].1, std::fs::metadata(&vlog).unwrap().len());
+
+        // Corrupt a byte inside the already-compacted prefix.
+        let mut bytes = std::fs::read(&vlog).unwrap();
+        bytes[(skip / 2) as usize] ^= 0xff;
+        std::fs::write(&vlog, &bytes).unwrap();
+        // Full re-read trips over the corruption...
+        FinalStorage::remove_gen(&dir, 2);
+        assert!(run_gc(&cycle2(0)).is_err(), "unskipped read must hit the corrupt prefix");
+        // ...while the seek-past cycle never touches those bytes and
+        // produces a byte-identical run.
+        FinalStorage::remove_gen(&dir, 2);
+        let out2b = run_gc(&cycle2(skip)).unwrap();
+        assert_eq!(out2b.entries, 5);
+        assert_eq!(std::fs::read(sorted_path(&dir, 2)).unwrap(), reference);
+    }
+
+    /// Build a hand-made sorted run (sealed through the real path) for
+    /// the trivial-move tests below.  Returns its byte size.
+    fn build_run(dir: &Path, gen: u64, n: u32, tombstones: u32) -> u64 {
+        let mut w = SortedVLogWriter::create(&sorted_path(dir, gen), 1, 1000).unwrap();
+        for i in 0..n {
+            let e = if i < tombstones {
+                VEntry::delete(1, 900 + i as u64, format!("del{i:04}"))
+            } else {
+                VEntry::put(1, i as u64 + 1, format!("key{i:04}"), vec![9u8; 400])
+            };
+            w.add(&e).unwrap();
+        }
+        let backend: Arc<dyn IndexBackend> = Arc::new(RustBackend);
+        let (bytes, _, t) = seal_run(dir, gen, w, &backend).unwrap();
+        assert_eq!(t, tombstones as u64);
+        bytes
+    }
+
+    /// Satellite: a tombstone-carrying run whose trivial move would
+    /// make it the new stack bottom is rewritten instead — its
+    /// tombstones annihilate (they mask nothing below).
+    #[test]
+    fn trivial_move_to_bottom_annihilates_tombstones() {
+        let dir = tmpdir("tombmove");
+        let run_bytes = build_run(&dir, 5, 40, 6);
+        // L0 budget comfortably holds the flush; L1's (budget × fanout)
+        // does not hold run 5, and L2+ are empty — run 5's slide from
+        // L1 would land it at the bottom.
+        let v = write_epoch(&dir, &[VEntry::put(1, 2000, "zzz-new", "x")]);
+        let mut inp = inputs(&dir, v, vec![vec![], vec![5]], 6, 2000);
+        inp.level0_bytes = run_bytes / 8;
+        inp.fanout = 4; // L1 budget = run_bytes/2 < run_bytes; L2 = 2×run_bytes
+        inp.run_tombstones = [(5u64, 6u64)].into_iter().collect();
+        let out = run_gc(&inp).unwrap();
+        assert_eq!(out.merges, 1, "rewrite instead of a metadata slide");
+        let bottom_gen = *out.levels.last().unwrap().first().unwrap();
+        assert_ne!(bottom_gen, 5, "run was rewritten under a fresh generation");
+        assert!(out.run_tombstones.contains(&(bottom_gen, 0)), "{:?}", out.run_tombstones);
+        let bottom = FinalStorage::open(&dir, bottom_gen).unwrap();
+        assert!(bottom.get(b"del0002").unwrap().is_none(), "tombstone frame gone");
+        assert_eq!(bottom.index.entry_count, 34, "34 live rows, 0 tombstones");
+        let stack = LeveledStorage::open(&dir, &out.levels).unwrap();
+        assert!(stack.get(b"key0039").unwrap().is_some());
+    }
+
+    /// Satellite counterpart: a tombstone-free run still slides to the
+    /// bottom as pure metadata — no rewrite, same generation.
+    #[test]
+    fn tombstone_free_trivial_move_stays_metadata_only() {
+        let dir = tmpdir("cleanmove");
+        let run_bytes = build_run(&dir, 5, 40, 0);
+        let v = write_epoch(&dir, &[VEntry::put(1, 2000, "zzz-new", "x")]);
+        let mut inp = inputs(&dir, v, vec![vec![], vec![5]], 6, 2000);
+        inp.level0_bytes = run_bytes / 8;
+        inp.fanout = 4;
+        inp.run_tombstones = [(5u64, 0u64)].into_iter().collect();
+        let out = run_gc(&inp).unwrap();
+        assert_eq!(out.merges, 0, "tombstone-free run must move without a rewrite");
+        assert!(
+            out.levels.last().unwrap().contains(&5),
+            "same generation slid to the bottom: {:?}",
+            out.levels
+        );
+        // Unknown counts (pre-upgrade manifest) are conservative: the
+        // same move with no recorded count rewrites once.
+        FinalStorage::remove_gen(&dir, 6);
+        let mut inp2 = inputs(&dir, write_epoch(&dir, &[VEntry::put(1, 2000, "zzz-new", "x")]),
+            vec![vec![], vec![5]], 6, 2000);
+        inp2.level0_bytes = run_bytes / 8;
+        inp2.fanout = 4;
+        let out2 = run_gc(&inp2).unwrap();
+        assert_eq!(out2.merges, 1, "unknown count treated as tombstone-carrying");
     }
 }

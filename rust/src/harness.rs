@@ -5,7 +5,7 @@
 //! *shapes* — who wins and by roughly what factor — are the
 //! reproduction target (DESIGN.md §4).
 
-use crate::coordinator::{Cluster, ClusterConfig};
+use crate::coordinator::{Cluster, ClusterConfig, ShardRouter};
 use crate::engine::EngineKind;
 use crate::gc::GcConfig;
 use crate::raft::NetConfig;
@@ -25,6 +25,33 @@ pub fn bench_scale() -> f64 {
         .unwrap_or(0.5)
 }
 
+/// Parse a `--shards N` (or `--shards=N`) flag out of an argv slice.
+pub fn parse_shards_arg(args: &[String]) -> Option<usize> {
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--shards" {
+            return it.next().and_then(|v| v.parse().ok());
+        }
+        if let Some(v) = a.strip_prefix("--shards=") {
+            return v.parse().ok();
+        }
+    }
+    None
+}
+
+/// Shard count for benches: `--shards N` on the bench command line
+/// (`cargo bench --bench fig5_get -- --shards 4`) or the
+/// `NEZHA_BENCH_SHARDS` env var; defaults to 1 (the pre-sharding
+/// layout).  The fig5/fig6/fig10 sweeps use this to plot shard
+/// scaling curves on the same hardware.
+pub fn bench_shards() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    parse_shards_arg(&args)
+        .or_else(|| std::env::var("NEZHA_BENCH_SHARDS").ok().and_then(|s| s.parse().ok()))
+        .unwrap_or(1)
+        .max(1)
+}
+
 /// Point reads folded into one leader round-trip (the read analogue of
 /// the coordinator's write-side fold).
 pub const GET_BATCH: usize = 16;
@@ -34,6 +61,9 @@ pub const GET_BATCH: usize = 16;
 pub struct Spec {
     pub kind: EngineKind,
     pub nodes: usize,
+    /// Independent consensus groups the keyspace is hash-partitioned
+    /// across (1 = the pre-sharding single-group layout).
+    pub shards: usize,
     pub value_size: usize,
     /// Bytes of user data to load.
     pub load_bytes: u64,
@@ -48,6 +78,7 @@ impl Spec {
         Self {
             kind,
             nodes: 3,
+            shards: 1,
             value_size,
             load_bytes: (24 << 20) as u64,
             gc_fraction: 0.4,
@@ -161,21 +192,26 @@ pub struct Env {
 
 impl Env {
     pub fn start(spec: Spec) -> Result<Self> {
+        let shards = spec.shards.max(1);
         let dir = std::env::temp_dir().join(format!(
-            "nezha-bench-{}-{}-{}",
+            "nezha-bench-{}-{}-{}s-{}",
             spec.kind.name().to_ascii_lowercase().replace('-', ""),
             spec.value_size,
+            shards,
             std::process::id()
         ));
         let _ = std::fs::remove_dir_all(&dir);
         let mut cfg = ClusterConfig::new(&dir, spec.kind, spec.nodes);
         cfg.seed = spec.seed;
+        cfg.router = ShardRouter::hash(shards as u32);
         cfg.net = NetConfig { latency_us: (0, 0), loss: 0.0, seed: spec.seed };
-        // Engine scale knobs proportional to the load.
-        cfg.engine.memtable_bytes = ((spec.load_bytes / 16).clamp(256 << 10, 16 << 20)) as usize;
-        cfg.engine.level_base_bytes = (spec.load_bytes / 2).clamp(2 << 20, 128 << 20);
+        // Engine scale knobs proportional to the per-shard load (each
+        // shard group sees roughly `load / shards` of the traffic).
+        let shard_load = (spec.load_bytes / shards as u64).max(1);
+        cfg.engine.memtable_bytes = ((shard_load / 16).clamp(256 << 10, 16 << 20)) as usize;
+        cfg.engine.level_base_bytes = (shard_load / 2).clamp(2 << 20, 128 << 20);
         cfg.gc = GcConfig {
-            threshold_bytes: ((spec.load_bytes as f64 * spec.gc_fraction) as u64).max(1 << 20),
+            threshold_bytes: ((shard_load as f64 * spec.gc_fraction) as u64).max(1 << 20),
             ..Default::default()
         };
         // Leveled GC: L0 holds about one cycle's flush, deeper levels
@@ -478,5 +514,32 @@ mod tests {
         let scan = env.run_scans(5, 8, "1KB").unwrap();
         assert!(scan.ops >= 5);
         env.destroy().unwrap();
+    }
+
+    #[test]
+    fn tiny_end_to_end_with_two_shards() {
+        // The same harness path over a 2-shard cluster: ops split,
+        // fan out and merge without the workload noticing.
+        let mut spec = Spec::new(EngineKind::Nezha, 1 << 10);
+        spec.load_bytes = 64 << 10;
+        spec.shards = 2;
+        let env = Env::start(spec).unwrap();
+        let put = env.load("1KB").unwrap();
+        assert_eq!(put.ops, 64);
+        let get = env.run_gets(20, "1KB").unwrap();
+        assert!(get.bytes > 0, "gets found data across shards");
+        let scan = env.run_scans(5, 8, "1KB").unwrap();
+        assert!(scan.ops >= 5);
+        env.destroy().unwrap();
+    }
+
+    #[test]
+    fn shards_flag_parses() {
+        let args = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(parse_shards_arg(&args(&["bench", "--shards", "4"])), Some(4));
+        assert_eq!(parse_shards_arg(&args(&["--shards=2"])), Some(2));
+        assert_eq!(parse_shards_arg(&args(&["--scale", "1"])), None);
+        assert_eq!(parse_shards_arg(&args(&["--shards"])), None);
+        assert_eq!(parse_shards_arg(&args(&["--shards", "x"])), None);
     }
 }

@@ -12,7 +12,6 @@
 //! DESIGN.md §2).
 
 use anyhow::{bail, Context, Result};
-use nezha::coordinator::{Cluster, ClusterConfig};
 use nezha::engine::EngineKind;
 use nezha::harness::{print_header, Env, Spec};
 use nezha::ycsb::WorkloadKind;
@@ -23,9 +22,9 @@ fn usage() -> ! {
         "nezha — key-value separated distributed store (paper reproduction)
 
 USAGE:
-  nezha serve   [--engine E] [--nodes N] [--dir PATH] [--records R] [--value-size B]
-  nezha load    [--engine E] [--nodes N] [--records R] [--value-size B]
-  nezha ycsb    [--engine E] [--workload A..F] [--ops N] [--records R] [--value-size B]
+  nezha serve   [--engine E] [--nodes N] [--shards S] [--dir PATH] [--records R] [--value-size B]
+  nezha load    [--engine E] [--nodes N] [--shards S] [--records R] [--value-size B]
+  nezha ycsb    [--engine E] [--workload A..F] [--shards S] [--ops N] [--records R] [--value-size B]
   nezha recover --dir PATH [--engine E]
   nezha engines
 
@@ -88,11 +87,13 @@ fn cmd_load_serve(serve: bool, flags: &HashMap<String, String>) -> Result<()> {
 
     let mut spec = Spec::new(kind, value_size);
     spec.nodes = nodes;
+    spec.shards = flag(flags, "shards", 1);
     spec.load_bytes = records * value_size as u64;
     println!(
-        "starting {} cluster: {} nodes, {} records x {} B",
+        "starting {} cluster: {} nodes x {} shard group(s), {} records x {} B",
         kind.name(),
         nodes,
+        spec.shards,
         records,
         value_size
     );
@@ -125,6 +126,7 @@ fn cmd_ycsb(flags: &HashMap<String, String>) -> Result<()> {
 
     let mut spec = Spec::new(kind, value_size);
     spec.nodes = flag(flags, "nodes", 3);
+    spec.shards = flag(flags, "shards", 1);
     spec.load_bytes = records * value_size as u64;
     let env = Env::start(spec)?;
     env.load("preload")?;

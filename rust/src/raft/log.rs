@@ -111,6 +111,14 @@ pub struct RaftLog {
     /// GC cycles triggered with an apply backlog leave tails in frozen
     /// epochs that later cycles still need.
     epoch_max: BTreeMap<u32, LogIndex>,
+    /// Per retained frozen epoch: first byte offset above the snapshot
+    /// point, recorded by the last GC cycle so the next one seeks past
+    /// the already-compacted prefix.  Purely an optimization — entries
+    /// are invalidated whenever the underlying file could change
+    /// (truncation, snapshot reset) and a missing entry means "read
+    /// from byte 0".  Deliberately not persisted: a restart falls back
+    /// to full reads, which are always correct.
+    epoch_skip: BTreeMap<u32, u64>,
     /// In-memory suffix, `mem[0].index == mem_first`.
     mem: VecDeque<(LogEntry, VRef)>,
     mem_first: LogIndex,
@@ -182,6 +190,7 @@ impl RaftLog {
             vlog,
             old,
             epoch_max,
+            epoch_skip: BTreeMap::new(),
             mem,
             mem_first,
             snap_index,
@@ -302,6 +311,7 @@ impl RaftLog {
         for e in dead {
             self.old.remove(&e);
             self.epoch_max.remove(&e);
+            self.epoch_skip.remove(&e);
             let _ = std::fs::remove_file(epoch_path(&self.dir, e));
         }
         Ok(())
@@ -311,6 +321,25 @@ impl RaftLog {
     /// input set — some may hold uncompacted tails).
     pub fn frozen_epochs(&self) -> Vec<u32> {
         self.old.keys().copied().collect()
+    }
+
+    /// Retained frozen epochs with their recorded prefix-skip offsets
+    /// (`0` = no record, read from the start), oldest first.
+    pub fn frozen_epoch_inputs(&self) -> Vec<(u32, u64)> {
+        self.old
+            .keys()
+            .map(|&e| (e, self.epoch_skip.get(&e).copied().unwrap_or(0)))
+            .collect()
+    }
+
+    /// Record that everything below `off` in frozen epoch `epoch` is
+    /// already compacted (reported by a completed GC cycle).  Ignored
+    /// for non-frozen epochs — the live file is still growing and is
+    /// not a GC input.
+    pub fn set_epoch_skip(&mut self, epoch: u32, off: u64) {
+        if self.old.contains_key(&epoch) {
+            self.epoch_skip.insert(epoch, off);
+        }
     }
 
     /// Term of entry `index`, if known (snapshot point included).
@@ -372,6 +401,11 @@ impl RaftLog {
         let keep = (from - self.mem_first) as usize;
         let cut = self.mem[keep].1; // VRef of first removed entry
         self.mem.truncate(keep);
+        // Truncation rewrites the containing file and deletes every
+        // newer one: their recorded skip offsets no longer describe
+        // the bytes on disk.  Dropping the records is always safe —
+        // the next cycle falls back to a full filtered read.
+        self.epoch_skip.retain(|&e, _| e < cut.epoch);
 
         if cut.epoch != self.epoch {
             // Conflict inside a frozen epoch: kill all newer epochs,
@@ -444,6 +478,7 @@ impl RaftLog {
             let _ = std::fs::remove_file(epoch_path(&self.dir, e));
         }
         self.epoch_max.clear();
+        self.epoch_skip.clear();
         let _ = std::fs::remove_file(epoch_path(&self.dir, self.epoch));
         self.epoch += 1;
         self.vlog = VLog::open(&epoch_path(&self.dir, self.epoch))?;
@@ -645,6 +680,34 @@ mod tests {
         assert_eq!(log.entry(4).unwrap().term, 2);
         // Epoch-1 file removed.
         assert!(!epoch_path(&dir, 1).exists());
+    }
+
+    #[test]
+    fn epoch_skip_offsets_follow_epoch_lifecycle() {
+        let dir = tmpdir("epskip");
+        let mut log = RaftLog::open(&dir).unwrap();
+        for i in 1..=4 {
+            log.append(put(1, i, &format!("k{i}"), "v")).unwrap();
+        }
+        log.rotate().unwrap();
+        for i in 5..=8 {
+            log.append(put(1, i, &format!("k{i}"), "v")).unwrap();
+        }
+        // Recorded for the frozen epoch; ignored for the live one.
+        log.set_epoch_skip(0, 123);
+        log.set_epoch_skip(1, 999);
+        assert_eq!(log.frozen_epoch_inputs(), vec![(0, 123)]);
+        // Truncation inside the frozen epoch invalidates its record.
+        log.truncate_from(3).unwrap();
+        assert_eq!(log.live_epoch(), 0);
+        assert!(log.frozen_epoch_inputs().is_empty());
+        // Dropped epochs lose their records too.
+        log.append(put(2, 3, "k3b", "v")).unwrap();
+        log.rotate().unwrap();
+        log.set_epoch_skip(0, 77);
+        log.mark_snapshot(3, 2).unwrap();
+        log.drop_epochs_covered_by(3).unwrap();
+        assert!(log.frozen_epoch_inputs().is_empty());
     }
 
     #[test]

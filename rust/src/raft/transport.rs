@@ -239,6 +239,15 @@ impl Bus {
         mb
     }
 
+    /// Remove a node's mailbox (it stopped for good — fault injection).
+    /// Subsequent sends to it count as dropped instead of queueing
+    /// forever in a mailbox nobody drains.
+    pub fn unregister(&self, id: NodeId) {
+        if let Some(mb) = self.mailboxes.lock().unwrap().remove(&id) {
+            mb.close();
+        }
+    }
+
     pub fn send(&self, from: NodeId, to: NodeId, msg: &Message) {
         let buf = msg.encode();
         self.stats.msgs.fetch_add(1, Ordering::Relaxed);
@@ -352,6 +361,22 @@ mod tests {
     fn send_to_unknown_counts_dropped() {
         let bus = Bus::new(NetConfig::default());
         bus.send(1, 99, &msg(1));
+        assert_eq!(bus.stats.dropped.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn unregister_closes_mailbox_and_drops_future_sends() {
+        let bus = Bus::new(NetConfig { latency_us: (0, 0), loss: 0.0, seed: 9 });
+        let mb = bus.register(1);
+        bus.send(2, 1, &msg(1));
+        bus.unregister(1);
+        // The already-delivered frame still drains; then the mailbox
+        // reads closed.
+        let got = mb.drain(std::time::Duration::from_millis(10)).unwrap();
+        assert_eq!(got.len(), 1);
+        assert!(mb.drain(std::time::Duration::from_millis(10)).is_none());
+        // Further sends count as dropped instead of queueing forever.
+        bus.send(2, 1, &msg(2));
         assert_eq!(bus.stats.dropped.load(Ordering::Relaxed), 1);
     }
 }

@@ -225,8 +225,15 @@ impl VLogReader {
     }
 
     pub fn iter(&self) -> Result<VLogIter> {
+        self.iter_from(0)
+    }
+
+    /// Iterate from `offset` (must be a frame boundary — e.g. a
+    /// prefix-skip point recorded by an earlier scan).  An offset at or
+    /// past the end yields an empty iteration.
+    pub fn iter_from(&self, offset: Offset) -> Result<VLogIter> {
         let end = self.file.metadata()?.len();
-        Ok(VLogIter { file: self.file.try_clone()?, pos: 0, end })
+        Ok(VLogIter { file: self.file.try_clone()?, pos: offset.min(end), end })
     }
 }
 
@@ -379,6 +386,24 @@ mod tests {
             assert_eq!(*off, offs[i]);
             assert_eq!(e.index, i as u64);
         }
+    }
+
+    #[test]
+    fn iter_from_resumes_at_a_frame_boundary() {
+        let p = tmppath("iterfrom");
+        let mut v = VLog::open(&p).unwrap();
+        let mut offs = Vec::new();
+        for i in 0..20u64 {
+            offs.push(v.append(&Entry::put(1, i, format!("k{i:02}"), "v")).unwrap());
+        }
+        v.sync().unwrap();
+        let r = VLogReader::open(&p).unwrap();
+        let tail: Vec<_> = r.iter_from(offs[12]).unwrap().map(|x| x.unwrap()).collect();
+        assert_eq!(tail.len(), 8);
+        assert_eq!(tail[0].0, offs[12]);
+        assert_eq!(tail[0].1.index, 12);
+        // Past-the-end offsets read as empty, not as an error.
+        assert_eq!(r.iter_from(u64::MAX).unwrap().count(), 0);
     }
 
     #[test]

@@ -48,6 +48,10 @@ pub struct SortedVLogWriter {
     last_key: Option<Vec<u8>>,
     /// (key, offset) of every entry — handed to the hash-index builder.
     pub key_offsets: Vec<(Vec<u8>, Offset)>,
+    /// Delete frames written so far (recorded per run in the LEVELS
+    /// manifest so tombstone-free runs can move levels without a
+    /// rewrite).
+    tombstones: usize,
 }
 
 impl SortedVLogWriter {
@@ -68,6 +72,7 @@ impl SortedVLogWriter {
             offset: HEADER_LEN,
             last_key: None,
             key_offsets: Vec::new(),
+            tombstones: 0,
         })
     }
 
@@ -94,6 +99,7 @@ impl SortedVLogWriter {
         // Scan valid frames, collecting key offsets.
         let mut key_offsets = Vec::new();
         let mut last_key = None;
+        let mut tombstones = 0usize;
         let mut pos = HEADER_LEN;
         loop {
             let mut fh = [0u8; 8];
@@ -110,6 +116,9 @@ impl SortedVLogWriter {
                 || crc32fast::hash(&body) != crc
             {
                 break;
+            }
+            if body[16] == OP_DELETE {
+                tombstones += 1;
             }
             // key lives after term(8) + index(8) + op(1).
             let mut d = crate::util::Decoder::new(&body[17..]);
@@ -128,6 +137,7 @@ impl SortedVLogWriter {
             offset: pos,
             last_key,
             key_offsets,
+            tombstones,
         })
     }
 
@@ -141,6 +151,9 @@ impl SortedVLogWriter {
             if e.key.as_slice() <= last.as_slice() {
                 bail!("sorted vlog: keys out of order");
             }
+        }
+        if e.value.is_none() {
+            self.tombstones += 1;
         }
         let frame = encode_frame(e);
         let off = self.offset;
@@ -160,6 +173,12 @@ impl SortedVLogWriter {
 
     pub fn entry_count(&self) -> usize {
         self.key_offsets.len()
+    }
+
+    /// Delete frames written so far (survives [`Self::resume`], which
+    /// recounts them from the valid prefix).
+    pub fn tombstone_count(&self) -> usize {
+        self.tombstones
     }
 
     pub fn path(&self) -> &Path {
@@ -417,6 +436,22 @@ mod tests {
         for w in keys.windows(2) {
             assert!(w[0] < w[1]);
         }
+    }
+
+    #[test]
+    fn tombstone_count_tracks_writes_and_resume() {
+        let p = tmppath("tombcount");
+        let mut w = SortedVLogWriter::create(&p, 1, 9).unwrap();
+        w.add(&Entry::put(1, 1, "a", "1")).unwrap();
+        w.add(&Entry::delete(1, 2, "b")).unwrap();
+        w.add(&Entry::put(1, 3, "c", "3")).unwrap();
+        w.add(&Entry::delete(1, 4, "d")).unwrap();
+        assert_eq!(w.tombstone_count(), 2);
+        w.finish().unwrap();
+        // Resume recounts tombstones from the valid prefix.
+        let w = SortedVLogWriter::resume(&p).unwrap();
+        assert_eq!(w.tombstone_count(), 2);
+        assert_eq!(w.entry_count(), 4);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! whole-cluster crash, and engine equivalence (all seven engines
 //! agree on query results for the same committed history).
 
-use nezha::coordinator::{Cluster, ClusterConfig};
+use nezha::coordinator::{Cluster, ClusterConfig, ShardRouter};
 use nezha::engine::EngineKind;
 use nezha::raft::NetConfig;
 use std::path::PathBuf;
@@ -139,6 +139,83 @@ fn follower_catchup_after_isolation() {
             "followers never converged: {statuses:?}"
         );
         std::thread::sleep(Duration::from_millis(20));
+    }
+    cluster.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sharded_cluster_restart_preserves_every_shard() {
+    // 2 shards × 3 nodes: a cold restart must adopt every shard
+    // group's on-disk state (per-shard raft logs, engines, manifests).
+    let dir = base("shard-restart");
+    let mk = || {
+        let mut c = cfg(&dir, EngineKind::Nezha, 3);
+        c.router = ShardRouter::hash(2);
+        c
+    };
+    {
+        let cluster = Cluster::start(mk()).unwrap();
+        let ops: Vec<(Vec<u8>, Vec<u8>)> = (0..80u32)
+            .map(|i| (format!("sr{i:03}").into_bytes(), format!("v{i}").into_bytes()))
+            .collect();
+        cluster.put_batch(ops).unwrap();
+        cluster.delete(b"sr040").unwrap();
+        cluster.shutdown().unwrap();
+    }
+    let cluster = Cluster::start(mk()).unwrap();
+    for i in (0..80u32).step_by(9) {
+        let want = if i == 40 { None } else { Some(format!("v{i}").into_bytes()) };
+        assert_eq!(cluster.get(format!("sr{i:03}").as_bytes()).unwrap(), want, "sr{i:03}");
+    }
+    let rows = cluster.scan(b"sr000", b"sr999", 1000).unwrap();
+    assert_eq!(rows.len(), 79);
+    assert!(rows.windows(2).all(|w| w[0].0 < w[1].0), "merged scan out of order");
+    cluster.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite fault test: kill one shard group's leader mid-workload.
+/// The other shard groups must keep committing immediately; the
+/// orphaned group re-elects among its two survivors and catches up —
+/// the client API rides through both via its per-shard retries.
+#[test]
+fn shard_leader_death_leaves_other_shards_committing() {
+    let dir = base("shard-kill");
+    let mut c = cfg(&dir, EngineKind::Nezha, 3);
+    c.router = ShardRouter::hash(3);
+    let mut cluster = Cluster::start(c).unwrap();
+    let key = |i: u32| format!("yk{i:04}").into_bytes();
+    // First half of a YCSB-style insert stream.
+    for i in 0..60u32 {
+        cluster.put(&key(i), &[7u8; 256]).unwrap();
+    }
+    // Kill shard 1's leader mid-stream.
+    let victim = cluster.shard_leader(1).unwrap();
+    cluster.kill(1, victim).unwrap();
+    // The stream continues across ALL shards.  Keys routed to shards
+    // 0/2 commit against their untouched leaders; shard-1 keys commit
+    // once the survivors elect a new leader (put retries internally).
+    let router = cluster.config().router.clone();
+    let mut routed = [0u32; 3];
+    for i in 60..140u32 {
+        let k = key(i);
+        routed[router.route(&k) as usize] += 1;
+        cluster.put(&k, &[8u8; 256]).unwrap();
+    }
+    assert!(
+        routed.iter().all(|&n| n > 0),
+        "stream must exercise every shard: {routed:?}"
+    );
+    // Shard 1's new leader is one of the survivors.
+    let new_leader = cluster.shard_leader(1).unwrap();
+    assert_ne!(new_leader, victim, "a survivor took over shard 1");
+    // Reads agree with the full committed history, across all shards.
+    let keys: Vec<Vec<u8>> = (0..140u32).map(key).collect();
+    let got = cluster.get_batch(&keys).unwrap();
+    for (i, v) in got.iter().enumerate() {
+        let want = if i < 60 { vec![7u8; 256] } else { vec![8u8; 256] };
+        assert_eq!(v.as_ref(), Some(&want), "yk{i:04}");
     }
     cluster.shutdown().unwrap();
     let _ = std::fs::remove_dir_all(&dir);

@@ -112,6 +112,7 @@ fn leveled_nezha_matches_classic_across_cycles_and_crash() {
                 last_index,
                 last_term,
                 stack: manifest.levels,
+                run_tombstones: manifest.run_tombstones,
             }
             .save(&edir)
             .unwrap();

@@ -6,7 +6,7 @@
 //! Skipped gracefully when `artifacts/` has not been built
 //! (`make artifacts`).
 
-use nezha::gc::{run_gc, FinalStorage, GcInputs, IndexBackend, RustBackend};
+use nezha::gc::{run_gc, EpochSource, FinalStorage, GcInputs, IndexBackend, RustBackend};
 use nezha::runtime::IndexPlanner;
 use nezha::vlog::{Entry, VLog};
 use std::path::PathBuf;
@@ -57,10 +57,11 @@ fn gc_cycle_identical_under_both_backends() {
     let vlog_xla = write_epoch(&dir_xla, n);
 
     let out_rust = run_gc(&GcInputs {
-        frozen_vlog_paths: vec![vlog_rust],
+        frozen: vec![EpochSource { epoch: 0, path: vlog_rust, skip_offset: 0 }],
         dir: dir_rust.clone(),
         out_gen: 1,
         stack: vec![],
+        run_tombstones: Default::default(),
         min_index: 0,
         last_index: n,
         last_term: 1,
@@ -71,10 +72,11 @@ fn gc_cycle_identical_under_both_backends() {
     })
     .unwrap();
     let out_xla = run_gc(&GcInputs {
-        frozen_vlog_paths: vec![vlog_xla],
+        frozen: vec![EpochSource { epoch: 0, path: vlog_xla, skip_offset: 0 }],
         dir: dir_xla.clone(),
         out_gen: 1,
         stack: vec![],
+        run_tombstones: Default::default(),
         min_index: 0,
         last_index: n,
         last_term: 1,
