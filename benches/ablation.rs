@@ -29,7 +29,8 @@ fn ablation_index_backend() -> anyhow::Result<()> {
     let t0 = Instant::now();
     let (h_rust, b_rust) = rust.plan(&refs, cap)?;
     let rust_ms = t0.elapsed().as_secs_f64() * 1e3;
-    println!("rust backend : {n} keys in {rust_ms:.1} ms ({:.1} Mkeys/s)", n as f64 / rust_ms / 1e3);
+    let mkeys = n as f64 / rust_ms / 1e3;
+    println!("rust backend : {n} keys in {rust_ms:.1} ms ({mkeys:.1} Mkeys/s)");
 
     match IndexPlanner::load_default() {
         Ok(planner) => {
@@ -38,11 +39,15 @@ fn ablation_index_backend() -> anyhow::Result<()> {
             let t0 = Instant::now();
             let (h_xla, b_xla) = planner.plan(&refs, cap)?;
             let xla_ms = t0.elapsed().as_secs_f64() * 1e3;
-            println!("xla backend  : {n} keys in {xla_ms:.1} ms ({:.1} Mkeys/s)", n as f64 / xla_ms / 1e3);
+            let mkeys = n as f64 / xla_ms / 1e3;
+            println!("xla backend  : {n} keys in {xla_ms:.1} ms ({mkeys:.1} Mkeys/s)");
             assert_eq!(h_rust, h_xla, "hash parity");
             assert_eq!(b_rust, b_xla, "bucket parity");
             println!("parity       : OK (bit-identical h1/bucket streams)");
-            println!("note         : CPU PJRT runs the Pallas kernel in interpret mode; see DESIGN.md §Hardware-Adaptation for the real-TPU estimate");
+            println!(
+                "note         : CPU PJRT runs the Pallas kernel in interpret mode; see \
+                 DESIGN.md §Hardware-Adaptation for the real-TPU estimate"
+            );
         }
         Err(e) => println!("xla backend  : skipped ({e:#})"),
     }

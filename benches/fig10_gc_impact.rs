@@ -21,8 +21,12 @@ fn main() -> anyhow::Result<()> {
     let load = ((12 << 20) as f64 * bench_scale()) as u64;
     let vs = 16 << 10;
     let shards = bench_shards();
-    println!("\n=== Figure 10: GC impact timeline (16KB values, GC every 10% of load, {shards} shard(s)) ===");
-    println!("{:<11} {:>8} {:>12} {:>12} {:>10}", "system", "pct", "cum_MiB/s", "inst_MiB/s", "batch_us");
+    println!(
+        "\n=== Figure 10: GC impact timeline (16KB values, GC every 10% of load, \
+         {shards} shard(s)) ==="
+    );
+    let cols = ("system", "pct", "cum_MiB/s", "inst_MiB/s", "batch_us");
+    println!("{:<11} {:>8} {:>12} {:>12} {:>10}", cols.0, cols.1, cols.2, cols.3, cols.4);
     for kind in [EngineKind::Original, EngineKind::NezhaNoGc, EngineKind::Nezha] {
         let mut spec = Spec::new(kind, vs);
         spec.load_bytes = load;
@@ -48,7 +52,8 @@ fn main() -> anyhow::Result<()> {
             let bus = bt.elapsed().as_micros() as u64;
             written += n;
             if written >= next_sample {
-                let cum = (written * vs as u64) as f64 / (1 << 20) as f64 / t0.elapsed().as_secs_f64();
+                let cum =
+                    (written * vs as u64) as f64 / (1 << 20) as f64 / t0.elapsed().as_secs_f64();
                 let inst = ((written - last_written) * vs as u64) as f64 / (1 << 20) as f64
                     / last_t.elapsed().as_secs_f64().max(1e-9);
                 println!(

@@ -7,7 +7,9 @@
 //! (system, size) cell.  Run: `cargo bench --bench fig4_put`.
 
 use nezha::engine::EngineKind;
-use nezha::harness::{bench_scale, engines_from_env, improvement_pct, print_header, value_sizes, Env, Spec};
+use nezha::harness::{
+    bench_scale, engines_from_env, improvement_pct, print_header, value_sizes, Env, Spec,
+};
 
 fn main() -> anyhow::Result<()> {
     let load = ((6 << 20) as f64 * bench_scale()) as u64;

@@ -6,16 +6,27 @@
 //! headline: Nezha +12.5% over Original; Nezha-NoGC −21.3%
 //! (offset-lookup overhead).
 //!
-//! Run: `cargo bench --bench fig5_get`.
+//! Run: `cargo bench --bench fig5_get`.  `--read-from followers`
+//! routes the same query stream across *every* replica behind
+//! ReadIndex/lease barriers (vs the default leader-only serving), so
+//! the leader-vs-follower read scaling plots share one harness.
 
+use nezha::coordinator::ReadConsistency;
 use nezha::engine::EngineKind;
-use nezha::harness::{bench_scale, bench_shards, engines_from_env, improvement_pct, print_header, print_readahead_line, value_sizes, Env, Spec};
+use nezha::harness::{
+    bench_read_from, bench_scale, bench_shards, engines_from_env, improvement_pct, print_header,
+    print_readahead_line, read_from_label, value_sizes, Env, Spec,
+};
 
 fn main() -> anyhow::Result<()> {
     let load = ((6 << 20) as f64 * bench_scale()) as u64;
     let gets = (400.0 * bench_scale()) as u64;
     let shards = bench_shards();
-    print_header(&format!("Figure 5: get throughput/latency vs value size ({shards} shard(s))"));
+    let read_from = bench_read_from();
+    print_header(&format!(
+        "Figure 5: get throughput/latency vs value size ({shards} shard(s), reads: {})",
+        read_from_label(read_from)
+    ));
     let mut nezha_tp = Vec::new();
     let mut orig_tp = Vec::new();
     for vs in value_sizes() {
@@ -23,12 +34,18 @@ fn main() -> anyhow::Result<()> {
             let mut spec = Spec::new(kind, vs);
             spec.load_bytes = load;
             spec.shards = shards;
+            spec.read_from = read_from;
             let env = Env::start(spec)?;
             env.load("preload")?;
             env.settle()?;
             let m = env.run_gets(gets, &format!("{}KB", vs >> 10))?;
             println!("{}", m.row());
-            print_readahead_line(&env.leader_stats()?);
+            // Reads land on whichever replica served them: report the
+            // cluster-wide rollup, not just the leader's row.
+            print_readahead_line(&env.cluster_stats()?);
+            if read_from != ReadConsistency::Leader {
+                env.print_read_distribution()?;
+            }
             if kind == EngineKind::Nezha {
                 nezha_tp.push(m.ops_per_sec());
             }

@@ -5,16 +5,26 @@
 //! query.  Paper headline: Nezha +72.6% over Original; Nezha-NoGC
 //! −39.5% (random I/O over the unsorted vLog).
 //!
-//! Run: `cargo bench --bench fig6_scan`.
+//! Run: `cargo bench --bench fig6_scan`.  `--read-from followers`
+//! rotates each shard's scans over all replicas (ReadIndex/lease
+//! barriers) instead of pinning them on the leader.
 
+use nezha::coordinator::ReadConsistency;
 use nezha::engine::EngineKind;
-use nezha::harness::{bench_scale, bench_shards, engines_from_env, improvement_pct, print_header, print_readahead_line, value_sizes, Env, Spec};
+use nezha::harness::{
+    bench_read_from, bench_scale, bench_shards, engines_from_env, improvement_pct, print_header,
+    print_readahead_line, read_from_label, value_sizes, Env, Spec,
+};
 
 fn main() -> anyhow::Result<()> {
     let load = ((6 << 20) as f64 * bench_scale()) as u64;
     let scans = (40.0 * bench_scale()).max(8.0) as u64;
     let shards = bench_shards();
-    print_header(&format!("Figure 6: scan throughput/latency vs value size ({shards} shard(s))"));
+    let read_from = bench_read_from();
+    print_header(&format!(
+        "Figure 6: scan throughput/latency vs value size ({shards} shard(s), reads: {})",
+        read_from_label(read_from)
+    ));
     let mut nezha_tp = Vec::new();
     let mut orig_tp = Vec::new();
     for vs in value_sizes() {
@@ -22,6 +32,7 @@ fn main() -> anyhow::Result<()> {
             let mut spec = Spec::new(kind, vs);
             spec.load_bytes = load;
             spec.shards = shards;
+            spec.read_from = read_from;
             let records = spec.records();
             // ~4% of the dataset per scan.
             let scan_len = ((records / 25).max(4) as usize).min(2_000);
@@ -30,7 +41,10 @@ fn main() -> anyhow::Result<()> {
             env.settle()?;
             let m = env.run_scans(scans, scan_len, &format!("{}KB", vs >> 10))?;
             println!("{}", m.row());
-            print_readahead_line(&env.leader_stats()?);
+            print_readahead_line(&env.cluster_stats()?);
+            if read_from != ReadConsistency::Leader {
+                env.print_read_distribution()?;
+            }
             if kind == EngineKind::Nezha {
                 nezha_tp.push(m.mib_per_sec());
             }

@@ -3,16 +3,22 @@
 //! preloaded dataset, 1M requests in the paper (scaled here).
 //! Paper headline: Nezha +86.5% average throughput over Original.
 //!
-//! Run: `cargo bench --bench fig8_ycsb`.
+//! Run: `cargo bench --bench fig8_ycsb`.  `--read-from followers`
+//! serves the read mix from all replicas (ReadIndex/lease barriers);
+//! writes always go through the shard leader.
 
 use nezha::engine::EngineKind;
-use nezha::harness::{bench_scale, engines_from_env, improvement_pct, print_header, Env, Spec};
+use nezha::harness::{
+    bench_read_from, bench_scale, engines_from_env, improvement_pct, print_header,
+    read_from_label, Env, Spec,
+};
 use nezha::ycsb::WorkloadKind;
 
 fn main() -> anyhow::Result<()> {
     let load = ((4 << 20) as f64 * bench_scale()) as u64;
     let ops = (250.0 * bench_scale()) as u64;
-    print_header("Figure 8(a): YCSB throughput");
+    let read_from = bench_read_from();
+    print_header(&format!("Figure 8(a): YCSB throughput (reads: {})", read_from_label(read_from)));
     let mut rows_lat: Vec<String> = Vec::new();
     let mut nezha_tp = Vec::new();
     let mut orig_tp = Vec::new();
@@ -20,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         for kind in engines_from_env() {
             let mut spec = Spec::new(kind, 16 << 10);
             spec.load_bytes = load;
+            spec.read_from = read_from;
             let env = Env::start(spec)?;
             env.load("preload")?;
             env.settle()?;

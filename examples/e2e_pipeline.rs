@@ -23,7 +23,9 @@ fn main() -> anyhow::Result<()> {
     // Confirm the AOT artifact story up front.
     match IndexPlanner::load_default() {
         Ok(_) => println!("AOT artifact: artifacts/index_build.hlo.txt loaded on PJRT CPU ✓"),
-        Err(e) => println!("AOT artifact unavailable ({e:#}); GC uses the bit-identical Rust backend"),
+        Err(e) => {
+            println!("AOT artifact unavailable ({e:#}); GC uses the bit-identical Rust backend")
+        }
     }
 
     let value_size = 16 << 10;

@@ -42,11 +42,13 @@ fn main() -> anyhow::Result<()> {
     }
     println!("wrote 4 MiB; pumping the GC trigger...");
     replica.pump_gc(0)?;
-    println!("phase = {:?} (During-GC: New + frozen Active Storage)", replica.engine_ref().gc_phase());
+    let phase = replica.engine_ref().gc_phase();
+    println!("phase = {phase:?} (During-GC: New + frozen Active Storage)");
     assert_eq!(replica.engine_ref().gc_phase(), GcPhase::During);
 
     // Reads and writes keep flowing mid-GC.
-    replica.propose_batch(vec![Command::Put { key: b"during-gc".to_vec(), value: b"still writable".to_vec() }])?;
+    let put = Command::Put { key: b"during-gc".to_vec(), value: b"still writable".to_vec() };
+    replica.propose_batch(vec![put])?;
     assert!(replica.engine().get(b"key00042")?.is_some());
     assert!(replica.engine().get(b"during-gc")?.is_some());
     println!("reads + writes served During-GC ✓");
@@ -64,7 +66,8 @@ fn main() -> anyhow::Result<()> {
         out.index_backend,
         out.wall_ms
     );
-    println!("phase = {:?} (Post-GC: New + Final Compacted Storage)", replica.engine_ref().gc_phase());
+    let phase = replica.engine_ref().gc_phase();
+    println!("phase = {phase:?} (Post-GC: New + Final Compacted Storage)");
     assert_eq!(replica.engine_ref().gc_phase(), GcPhase::Post);
 
     // Post-GC reads hit the hash-indexed sorted ValueLog.

@@ -20,25 +20,50 @@
 //! Writes go through the group-commit batcher per shard: a sub-batch
 //! is proposed as a block, persisted with one ValueLog flush,
 //! replicated with one AppendEntries fan-out, and acknowledged when
-//! the shard leader applies it.  Reads execute at each shard's leader
-//! against the engine's three-phase read path.
+//! the shard leader applies it.  Reads route by the configured
+//! [`ReadConsistency`]: at each shard's leader (the pre-follower-read
+//! behavior), or across *every* replica behind a ReadIndex/lease
+//! barrier (`Linearizable`) or from local applied state (`Stale`) —
+//! a batch's keys are split over the shard's live replicas so
+//! aggregate read bandwidth scales with the replica count, not just
+//! the shard count.
 //!
 //! Single-shard clusters keep the pre-sharding on-disk layout
 //! (`node-N/{raft,engine}`) byte-for-byte, so existing data dirs are
 //! adopted unchanged.
 
-use super::replica::Replica;
+use super::replica::{ReadLane, Replica};
 use super::router::{merge_sorted, split_keys, split_ops, ShardId, ShardRouter};
 use crate::engine::{EngineKind, EngineOpts, EngineStats};
 use crate::gc::{GcConfig, GcOutput, GcPhase};
 use crate::raft::node::Outbox;
 use crate::raft::{Bus, Command, Config as RaftConfig, NetConfig, NodeId, Role};
 use anyhow::{anyhow, bail, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// How reads are served.  The write path is unaffected.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReadConsistency {
+    /// Serve at the shard leader from its applied state (the
+    /// pre-follower-read behavior; one node carries every read).
+    #[default]
+    Leader,
+    /// Serve at *any* replica behind a ReadIndex barrier: the leader
+    /// confirms its term (heartbeat quorum round, or its clock-bound
+    /// lease for free) and hands out a `(read_index, term)`; the
+    /// replica waits until `last_applied >= read_index` before reading
+    /// locally.  Linearizable, and reads scale with the replica count.
+    Linearizable,
+    /// Serve at any replica from local applied state, no barrier.
+    /// Monotonic per replica but may lag acknowledged writes (bounded
+    /// by replication lag).
+    Stale,
+}
 
 /// Client/admin requests into a (shard, node) thread.
 pub enum Req {
@@ -52,18 +77,21 @@ pub enum Req {
     },
     Get {
         key: Vec<u8>,
+        consistency: ReadConsistency,
         resp: SyncSender<Result<Option<Vec<u8>>>>,
     },
     /// Batched point read: the whole batch crosses the replica channel
     /// once and resolves through the engine's batched read path.
     MultiGet {
         keys: Vec<Vec<u8>>,
+        consistency: ReadConsistency,
         resp: SyncSender<Result<Vec<Option<Vec<u8>>>>>,
     },
     Scan {
         start: Vec<u8>,
         end: Vec<u8>,
         limit: usize,
+        consistency: ReadConsistency,
         resp: SyncSender<Result<Vec<(Vec<u8>, Vec<u8>)>>>,
     },
     Status {
@@ -117,6 +145,9 @@ pub struct ClusterConfig {
     /// node agrees on placement; must stay stable once a cluster holds
     /// data (a re-routed key would strand its old shard's copy).
     pub router: ShardRouter,
+    /// How `get`/`get_batch`/`scan` are served (see
+    /// [`ReadConsistency`]); writes always go through the leader.
+    pub read_consistency: ReadConsistency,
 }
 
 impl ClusterConfig {
@@ -143,6 +174,7 @@ impl ClusterConfig {
             tick: Duration::from_millis(1),
             seed: 42,
             router: ShardRouter::hash(1),
+            read_consistency: ReadConsistency::default(),
             base_dir: base,
         }
     }
@@ -179,6 +211,8 @@ pub struct Cluster {
     buses: Vec<Bus>,
     /// Per-shard cached leader hint.
     leader_cache: Vec<Mutex<Option<NodeId>>>,
+    /// Per-shard round-robin cursor for replica-served reads.
+    read_rr: Vec<AtomicUsize>,
 }
 
 impl Cluster {
@@ -211,6 +245,7 @@ impl Cluster {
         }
         let cluster = Self {
             leader_cache: (0..shards).map(|_| Mutex::new(None)).collect(),
+            read_rr: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
             cfg,
             threads,
             buses,
@@ -275,6 +310,38 @@ impl Cluster {
             };
         }
         Ok(agg)
+    }
+
+    /// Cluster-wide engine stats: every live (shard, node) replica's
+    /// counters absorbed into one aggregate.  With replica-served
+    /// reads the traffic lands on whichever node executed it, so this
+    /// rollup — not the leader's row alone — is the honest read
+    /// accounting.
+    pub fn cluster_stats(&self) -> Result<EngineStats> {
+        let mut agg = EngineStats::default();
+        let mut keys: Vec<(ShardId, NodeId)> = self.threads.keys().copied().collect();
+        keys.sort_unstable();
+        for (shard, id) in keys {
+            agg.absorb(&self.shard_status(id, shard)?.engine);
+        }
+        Ok(agg)
+    }
+
+    /// Per-node read counters `(node, gets, scans)` with shard rows
+    /// rolled up — shows where read traffic actually landed (all on
+    /// the leader under `ReadConsistency::Leader`, spread across
+    /// replicas otherwise).
+    pub fn read_distribution(&self) -> Result<Vec<(NodeId, u64, u64)>> {
+        let mut per_node: BTreeMap<NodeId, (u64, u64)> = BTreeMap::new();
+        let mut keys: Vec<(ShardId, NodeId)> = self.threads.keys().copied().collect();
+        keys.sort_unstable();
+        for (shard, id) in keys {
+            let st = self.shard_status(id, shard)?;
+            let e = per_node.entry(id).or_default();
+            e.0 += st.engine.gets;
+            e.1 += st.engine.scans;
+        }
+        Ok(per_node.into_iter().map(|(id, (g, s))| (id, g, s)).collect())
     }
 
     /// Wait until *every* shard has a leader; returns shard 0's leader
@@ -412,6 +479,166 @@ impl Cluster {
         Ok(out.into_iter().map(|v| v.expect("every shard slot filled")).collect())
     }
 
+    /// One shard's live replicas (killed nodes excluded), sorted.
+    fn shard_nodes(&self, shard: ShardId) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = self
+            .threads
+            .keys()
+            .filter(|&&(s, _)| s == shard)
+            .map(|&(_, id)| id)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Route a read to one of a shard's replicas, round-robin, marching
+    /// through the membership on failure and ending at the leader.
+    /// Reads are side-effect-free, so *any* failure (dead node, barrier
+    /// timeout, no leader known) just retries the next replica.
+    fn at_replica<T>(
+        &self,
+        shard: ShardId,
+        make: impl Fn() -> (Req, Receiver<Result<T>>),
+    ) -> Result<T> {
+        let nodes = self.shard_nodes(shard);
+        if nodes.is_empty() {
+            bail!("no live replicas for shard {shard}");
+        }
+        let start = self.read_rr[shard as usize].fetch_add(1, Ordering::Relaxed);
+        let mut last_err = None;
+        for i in 0..=nodes.len() {
+            // Last attempt goes to the (re-resolved) leader, which can
+            // always satisfy any consistency level.
+            let target = if i < nodes.len() {
+                nodes[(start + i) % nodes.len()]
+            } else {
+                match self.shard_leader(shard) {
+                    Ok(l) => l,
+                    Err(e) => return Err(last_err.unwrap_or(e)),
+                }
+            };
+            let (req, rx) = make();
+            if self.req(shard, target, req).is_err() {
+                continue;
+            }
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(Ok(v)) => return Ok(v),
+                Ok(Err(e)) => last_err = Some(e),
+                Err(_) => {
+                    last_err = Some(anyhow!("read timed out on shard {shard} node {target}"))
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow!("read failed on shard {shard}")))
+    }
+
+    /// Fan one read request out per listed shard, each to a
+    /// round-robin-chosen replica, all concurrently; failed slots
+    /// retry through the serial [`Self::at_replica`] path.
+    fn at_shard_replicas<T>(
+        &self,
+        shards: &[ShardId],
+        make: impl Fn(usize) -> (Req, Receiver<Result<T>>),
+    ) -> Result<Vec<T>> {
+        let mut out: Vec<Option<T>> = Vec::with_capacity(shards.len());
+        out.resize_with(shards.len(), || None);
+        let mut inflight = Vec::new();
+        for (i, &s) in shards.iter().enumerate() {
+            let nodes = self.shard_nodes(s);
+            if nodes.is_empty() {
+                continue; // retried (and failed properly) below
+            }
+            let start = self.read_rr[s as usize].fetch_add(1, Ordering::Relaxed);
+            let target = nodes[start % nodes.len()];
+            let (req, rx) = make(i);
+            if self.req(s, target, req).is_ok() {
+                inflight.push((i, rx));
+            }
+        }
+        for (i, rx) in inflight {
+            if let Ok(Ok(v)) = rx.recv_timeout(Duration::from_secs(30)) {
+                out[i] = Some(v);
+            }
+        }
+        for i in 0..shards.len() {
+            if out[i].is_none() {
+                out[i] = Some(self.at_replica(shards[i], || make(i))?);
+            }
+        }
+        Ok(out.into_iter().map(|v| v.expect("every shard slot filled")).collect())
+    }
+
+    /// Replica-served batched point read: each shard's key list is
+    /// split into chunks spread round-robin over the shard's live
+    /// replicas, every chunk is in flight at once, and the chunk
+    /// results reassemble in input order.  This is what lets aggregate
+    /// get bandwidth scale with `nodes`, not just `shards`.
+    fn spread_get_batch(&self, keys: &[Vec<u8>]) -> Result<Vec<Option<Vec<u8>>>> {
+        /// Below this many keys a chunk is not worth its round-trip.
+        const MIN_CHUNK: usize = 4;
+        let consistency = self.cfg.read_consistency;
+        let (per, slots) = split_keys(&self.cfg.router, keys);
+        // Plan: per shard, contiguous chunks in shard-list order.
+        struct Plan {
+            shard: usize,
+            target: NodeId,
+            keys: Vec<Vec<u8>>,
+        }
+        let mut plans: Vec<Plan> = Vec::new();
+        for (s, list) in per.iter().enumerate() {
+            if list.is_empty() {
+                continue;
+            }
+            let nodes = self.shard_nodes(s as ShardId);
+            if nodes.is_empty() {
+                bail!("no live replicas for shard {s}");
+            }
+            let spread = nodes.len().min(list.len().div_ceil(MIN_CHUNK)).max(1);
+            let chunk = list.len().div_ceil(spread);
+            let start = self.read_rr[s].fetch_add(spread, Ordering::Relaxed);
+            for (i, c) in list.chunks(chunk).enumerate() {
+                plans.push(Plan {
+                    shard: s,
+                    target: nodes[(start + i) % nodes.len()],
+                    keys: c.to_vec(),
+                });
+            }
+        }
+        // Fire every chunk, then collect; a failed chunk retries
+        // serially through the replica rotation.
+        let mut chunk_res: Vec<_> = plans.iter().map(|_| None).collect();
+        let mut inflight = Vec::new();
+        for (pi, plan) in plans.iter().enumerate() {
+            let (tx, rx) = mpsc::sync_channel(1);
+            let req = Req::MultiGet { keys: plan.keys.clone(), consistency, resp: tx };
+            if self.req(plan.shard as ShardId, plan.target, req).is_ok() {
+                inflight.push((pi, rx));
+            }
+        }
+        for (pi, rx) in inflight {
+            if let Ok(Ok(v)) = rx.recv_timeout(Duration::from_secs(30)) {
+                if v.len() == plans[pi].keys.len() {
+                    chunk_res[pi] = Some(v);
+                }
+            }
+        }
+        for (pi, plan) in plans.iter().enumerate() {
+            if chunk_res[pi].is_none() {
+                chunk_res[pi] = Some(self.at_replica(plan.shard as ShardId, || {
+                    let (tx, rx) = mpsc::sync_channel(1);
+                    (Req::MultiGet { keys: plan.keys.clone(), consistency, resp: tx }, rx)
+                })?);
+            }
+        }
+        // Chunks were planned in per-shard order, so concatenation
+        // rebuilds each shard's list; `slots` maps back to input order.
+        let mut per_out: Vec<Vec<Option<Vec<u8>>>> = per.iter().map(|_| Vec::new()).collect();
+        for (pi, plan) in plans.iter().enumerate() {
+            per_out[plan.shard].extend(chunk_res[pi].take().expect("chunk filled"));
+        }
+        Ok(slots.into_iter().map(|(s, p)| per_out[s][p].take()).collect())
+    }
+
     pub fn put(&self, key: &[u8], value: &[u8]) -> Result<()> {
         self.put_batch(vec![(key.to_vec(), value.to_vec())])
     }
@@ -455,25 +682,37 @@ impl Cluster {
     }
 
     pub fn get(&self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        let consistency = self.cfg.read_consistency;
         let shard = self.shard_of(key);
         let key = key.to_vec();
-        self.at_leader(shard, move || {
+        let make = move || {
             let (tx, rx) = mpsc::sync_channel(1);
-            (Req::Get { key: key.clone(), resp: tx }, rx)
-        })
+            (Req::Get { key: key.clone(), consistency, resp: tx }, rx)
+        };
+        if consistency == ReadConsistency::Leader {
+            self.at_leader(shard, make)
+        } else {
+            self.at_replica(shard, make)
+        }
     }
 
     /// Batched point read: one round-trip per involved shard (issued
-    /// concurrently), one result per key in input order.
+    /// concurrently), one result per key in input order.  Under
+    /// `Linearizable`/`Stale` consistency each shard's sub-batch is
+    /// additionally spread over the shard's replicas.
     pub fn get_batch(&self, keys: &[Vec<u8>]) -> Result<Vec<Option<Vec<u8>>>> {
         if keys.is_empty() {
             return Ok(Vec::new());
+        }
+        let consistency = self.cfg.read_consistency;
+        if consistency != ReadConsistency::Leader {
+            return self.spread_get_batch(keys);
         }
         if self.cfg.shards() == 1 {
             let keys = keys.to_vec();
             return self.at_leader(0, move || {
                 let (tx, rx) = mpsc::sync_channel(1);
-                (Req::MultiGet { keys: keys.clone(), resp: tx }, rx)
+                (Req::MultiGet { keys: keys.clone(), consistency, resp: tx }, rx)
             });
         }
         let (per, slots) = split_keys(&self.cfg.router, keys);
@@ -486,7 +725,7 @@ impl Cluster {
         let ids: Vec<ShardId> = parts.iter().map(|(s, _)| *s).collect();
         let results = self.at_shard_leaders(&ids, |i| {
             let (tx, rx) = mpsc::sync_channel(1);
-            (Req::MultiGet { keys: parts[i].1.clone(), resp: tx }, rx)
+            (Req::MultiGet { keys: parts[i].1.clone(), consistency, resp: tx }, rx)
         })?;
         let mut by_shard: HashMap<usize, Vec<Option<Vec<u8>>>> =
             ids.iter().map(|&s| s as usize).zip(results).collect();
@@ -498,19 +737,34 @@ impl Cluster {
 
     /// Range scan `[start, end)` up to `limit` rows: fans out to every
     /// shard concurrently and k-way merges the key-sorted sub-results.
+    /// Replica-served consistency levels rotate each shard's scan over
+    /// its replicas instead of pinning it on the leader.
     pub fn scan(&self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        let consistency = self.cfg.read_consistency;
         let (start, end) = (start.to_vec(), end.to_vec());
         if self.cfg.shards() == 1 {
-            return self.at_leader(0, move || {
+            let make = move || {
                 let (tx, rx) = mpsc::sync_channel(1);
-                (Req::Scan { start: start.clone(), end: end.clone(), limit, resp: tx }, rx)
-            });
+                let (start, end) = (start.clone(), end.clone());
+                (Req::Scan { start, end, limit, consistency, resp: tx }, rx)
+            };
+            return if consistency == ReadConsistency::Leader {
+                self.at_leader(0, make)
+            } else {
+                self.at_replica(0, make)
+            };
         }
         let ids: Vec<ShardId> = (0..self.cfg.shards()).collect();
-        let per = self.at_shard_leaders(&ids, |_| {
+        let make = |_i: usize| {
             let (tx, rx) = mpsc::sync_channel(1);
-            (Req::Scan { start: start.clone(), end: end.clone(), limit, resp: tx }, rx)
-        })?;
+            let (start, end) = (start.clone(), end.clone());
+            (Req::Scan { start, end, limit, consistency, resp: tx }, rx)
+        };
+        let per = if consistency == ReadConsistency::Leader {
+            self.at_shard_leaders(&ids, make)?
+        } else {
+            self.at_shard_replicas(&ids, make)?
+        };
         Ok(merge_sorted(per, limit))
     }
 
@@ -624,6 +878,90 @@ impl Cluster {
 /// Max client write commands folded into one consensus round.
 const MAX_FOLD: usize = 512;
 
+/// How long a replica parks a linearizable read (barrier unresolved or
+/// apply point lagging) before failing it back so the client retries
+/// another replica.  Covers an election round with margin.
+const READ_BARRIER_TIMEOUT: Duration = Duration::from_secs(3);
+
+/// A read request parked in the replica's read-only lane while its
+/// ReadIndex barrier resolves.
+enum ReadWork {
+    Get {
+        key: Vec<u8>,
+        resp: SyncSender<Result<Option<Vec<u8>>>>,
+    },
+    MultiGet {
+        keys: Vec<Vec<u8>>,
+        resp: SyncSender<Result<Vec<Option<Vec<u8>>>>>,
+    },
+    Scan {
+        start: Vec<u8>,
+        end: Vec<u8>,
+        limit: usize,
+        resp: SyncSender<Result<Vec<(Vec<u8>, Vec<u8>)>>>,
+    },
+}
+
+/// Execute a read against the local engine and answer the client.
+fn serve_read(replica: &mut Replica, work: ReadWork) {
+    match work {
+        ReadWork::Get { key, resp } => {
+            let _ = resp.send(replica.engine().get(&key));
+        }
+        ReadWork::MultiGet { keys, resp } => {
+            let _ = resp.send(replica.engine().multi_get(&keys));
+        }
+        ReadWork::Scan { start, end, limit, resp } => {
+            let _ = resp.send(replica.engine().scan(&start, &end, limit));
+        }
+    }
+}
+
+/// Route one client read by its consistency level: serve immediately
+/// (`Leader` on the leader, `Stale` anywhere), reject (`Leader` on a
+/// non-leader), or park it behind a ReadIndex barrier
+/// (`Linearizable`) until the barrier resolves and the local apply
+/// point covers it.
+fn begin_read(
+    replica: &mut Replica,
+    reads: &mut ReadLane<ReadWork>,
+    work: ReadWork,
+    consistency: ReadConsistency,
+    send_out: &impl Fn(Outbox),
+) -> Result<()> {
+    match consistency {
+        ReadConsistency::Leader => {
+            if replica.node.is_leader() {
+                serve_read(replica, work);
+            } else {
+                fail_read(work, format!("not leader (hint {:?})", replica.node.leader_hint()));
+            }
+        }
+        ReadConsistency::Stale => serve_read(replica, work),
+        ReadConsistency::Linearizable => {
+            let ctx = reads.begin(work);
+            let out = replica.node.request_read(ctx)?;
+            send_out(out);
+        }
+    }
+    Ok(())
+}
+
+/// Fail a read back to the client (it retries another replica).
+fn fail_read(work: ReadWork, msg: String) {
+    match work {
+        ReadWork::Get { resp, .. } => {
+            let _ = resp.send(Err(anyhow!("{msg}")));
+        }
+        ReadWork::MultiGet { resp, .. } => {
+            let _ = resp.send(Err(anyhow!("{msg}")));
+        }
+        ReadWork::Scan { resp, .. } => {
+            let _ = resp.send(Err(anyhow!("{msg}")));
+        }
+    }
+}
+
 fn node_loop(
     id: NodeId,
     shard: ShardId,
@@ -665,6 +1003,8 @@ fn node_loop(
     let mut last_tick = Duration::ZERO;
     // (commit index awaited, responder)
     let mut pending: Vec<(u64, SyncSender<Result<()>>)> = Vec::new();
+    // Linearizable reads parked on their ReadIndex barrier.
+    let mut reads: ReadLane<ReadWork> = ReadLane::default();
 
     let send_out = |out: Outbox| {
         for (dst, msg) in out {
@@ -692,6 +1032,16 @@ fn node_loop(
             last_tick += cfg.tick;
             caught_up += 1;
             if caught_up > 2 {
+                // Forgive the stall for election purposes, but charge
+                // it to the node's lease clock: a leader lease measured
+                // against forgiven (under-counted) ticks could outlive
+                // the followers' election timers in wall time.  Charged
+                // rounding UP, plus this loop turn's own un-ticked
+                // step — over-crediting only shortens the lease, which
+                // is the safe direction.
+                let stalled = now.saturating_sub(last_tick).as_micros();
+                let skipped = stalled.div_ceil(cfg.tick.as_micros().max(1)) as u64 + 1;
+                replica.node.skip_ticks(skipped);
                 last_tick = now;
                 break;
             }
@@ -707,7 +1057,8 @@ fn node_loop(
             match req {
                 Req::PutBatch { ops, resp } => {
                     if !replica.node.is_leader() {
-                        let _ = resp.send(Err(anyhow!("not leader (hint {:?})", replica.node.leader_hint())));
+                        let hint = replica.node.leader_hint();
+                        let _ = resp.send(Err(anyhow!("not leader (hint {hint:?})")));
                         continue;
                     }
                     for (k, v) in ops {
@@ -717,35 +1068,24 @@ fn node_loop(
                 }
                 Req::Delete { key, resp } => {
                     if !replica.node.is_leader() {
-                        let _ = resp.send(Err(anyhow!("not leader (hint {:?})", replica.node.leader_hint())));
+                        let hint = replica.node.leader_hint();
+                        let _ = resp.send(Err(anyhow!("not leader (hint {hint:?})")));
                         continue;
                     }
                     write_cmds.push(Command::Delete { key });
                     write_resps.push((write_cmds.len(), resp));
                 }
-                Req::Get { key, resp } => {
-                    let r = if replica.node.is_leader() {
-                        replica.engine().get(&key)
-                    } else {
-                        Err(anyhow!("not leader (hint {:?})", replica.node.leader_hint()))
-                    };
-                    let _ = resp.send(r);
+                Req::Get { key, consistency, resp } => {
+                    let work = ReadWork::Get { key, resp };
+                    begin_read(&mut replica, &mut reads, work, consistency, &send_out)?;
                 }
-                Req::MultiGet { keys, resp } => {
-                    let r = if replica.node.is_leader() {
-                        replica.engine().multi_get(&keys)
-                    } else {
-                        Err(anyhow!("not leader (hint {:?})", replica.node.leader_hint()))
-                    };
-                    let _ = resp.send(r);
+                Req::MultiGet { keys, consistency, resp } => {
+                    let work = ReadWork::MultiGet { keys, resp };
+                    begin_read(&mut replica, &mut reads, work, consistency, &send_out)?;
                 }
-                Req::Scan { start, end, limit, resp } => {
-                    let r = if replica.node.is_leader() {
-                        replica.engine().scan(&start, &end, limit)
-                    } else {
-                        Err(anyhow!("not leader (hint {:?})", replica.node.leader_hint()))
-                    };
-                    let _ = resp.send(r);
+                Req::Scan { start, end, limit, consistency, resp } => {
+                    let work = ReadWork::Scan { start, end, limit, resp };
+                    begin_read(&mut replica, &mut reads, work, consistency, &send_out)?;
                 }
                 Req::Status { resp } => {
                     let s = replica.stats();
@@ -809,7 +1149,33 @@ fn node_loop(
             }
         }
 
-        // 4. Completions.
+        // 4. Read lane: barriers that resolved (or failed) via the
+        // network input above, apply-point releases, and timeouts.
+        // Node results are drained unconditionally — a barrier may
+        // resolve after its read already timed out of the lane.
+        let (ready, failed) = replica.node.take_read_results();
+        let applied = replica.node.last_applied();
+        for (ctx, ri) in ready {
+            if let Some(w) = reads.on_ready(ctx, ri, applied) {
+                serve_read(&mut replica, w);
+            }
+        }
+        for ctx in failed {
+            if let Some(w) = reads.on_failed(ctx) {
+                let hint = replica.node.leader_hint();
+                fail_read(w, format!("read barrier failed (hint {hint:?})"));
+            }
+        }
+        if !reads.is_empty() {
+            for w in reads.take_applied(replica.node.last_applied()) {
+                serve_read(&mut replica, w);
+            }
+            for w in reads.take_timed_out(READ_BARRIER_TIMEOUT) {
+                fail_read(w, format!("read barrier timed out on node {id} shard {shard}"));
+            }
+        }
+
+        // 5. Completions.
         if !pending.is_empty() {
             let applied = replica.node.last_applied();
             pending.retain(|(idx, resp)| {
@@ -822,7 +1188,7 @@ fn node_loop(
             });
         }
 
-        // 5. GC lifecycle.  A GC hiccup degrades (retried after
+        // 6. GC lifecycle.  A GC hiccup degrades (retried after
         // restart via the persisted GcState) but never kills the node.
         let now_ms = started.elapsed().as_millis() as u64;
         if let Err(e) = replica.pump_gc(now_ms) {
@@ -842,7 +1208,8 @@ mod tests {
     use super::*;
 
     fn cfg(name: &str, kind: EngineKind, nodes: usize) -> ClusterConfig {
-        let base = std::env::temp_dir().join(format!("nezha-cluster-{name}-{}", std::process::id()));
+        let base =
+            std::env::temp_dir().join(format!("nezha-cluster-{name}-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&base);
         let mut c = ClusterConfig::new(base, kind, nodes);
         c.engine.memtable_bytes = 64 << 10;
@@ -936,7 +1303,8 @@ mod tests {
 
     #[test]
     fn gc_under_load_preserves_reads() {
-        let base = std::env::temp_dir().join(format!("nezha-cluster-gcload-{}", std::process::id()));
+        let base =
+            std::env::temp_dir().join(format!("nezha-cluster-gcload-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&base);
         let mut c = ClusterConfig::new(base, EngineKind::Nezha, 3);
         c.engine.memtable_bytes = 64 << 10;
@@ -999,6 +1367,47 @@ mod tests {
         );
         a.shutdown().unwrap();
         b.shutdown().unwrap();
+    }
+
+    /// Tentpole acceptance: replica-served reads (both consistency
+    /// levels) answer exactly like leader reads over a settled
+    /// history, and the traffic genuinely spreads beyond the leader.
+    #[test]
+    fn replica_reads_match_leader_reads_and_spread() {
+        for consistency in [ReadConsistency::Linearizable, ReadConsistency::Stale] {
+            let name = format!("rread-{consistency:?}").to_ascii_lowercase();
+            let mut c = cfg(&name, EngineKind::Nezha, 3);
+            c.read_consistency = consistency;
+            let cluster = Cluster::start(c).unwrap();
+            let ops: Vec<(Vec<u8>, Vec<u8>)> = (0..60u32)
+                .map(|i| (format!("r{i:03}").into_bytes(), format!("v{i}").into_bytes()))
+                .collect();
+            cluster.put_batch(ops).unwrap();
+            cluster.delete(b"r007").unwrap();
+            // Stale reads only promise replica-local state: settle
+            // replication so every node answers alike.
+            cluster.wait_converged(Duration::from_secs(10)).unwrap();
+            let keys: Vec<Vec<u8>> = (0..70u32).map(|i| format!("r{i:03}").into_bytes()).collect();
+            let got = cluster.get_batch(&keys).unwrap();
+            for (i, v) in got.iter().enumerate() {
+                let want = if i == 7 || i >= 60 {
+                    None
+                } else {
+                    Some(format!("v{i}").into_bytes())
+                };
+                assert_eq!(*v, want, "{consistency:?} r{i:03}");
+            }
+            assert_eq!(cluster.get(b"r008").unwrap(), Some(b"v8".to_vec()));
+            let rows = cluster.scan(b"r000", b"r999", 100).unwrap();
+            assert_eq!(rows.len(), 59, "{consistency:?}");
+            assert!(rows.windows(2).all(|w| w[0].0 < w[1].0));
+            // The batch was big enough to spread: more than one node
+            // must have served gets.
+            let dist = cluster.read_distribution().unwrap();
+            let readers = dist.iter().filter(|(_, gets, _)| *gets > 0).count();
+            assert!(readers >= 2, "{consistency:?} reads did not spread: {dist:?}");
+            cluster.shutdown().unwrap();
+        }
     }
 
     /// Each shard group elects its own (preferentially rotated)

@@ -6,13 +6,15 @@
 //!   engine + GC lifecycle pump.
 //! * [`cluster`] — thread-per-(shard, node) cluster hosting one
 //!   independent Raft group per shard, with per-shard leader routing,
-//!   group-commit batching, concurrent cross-shard fan-out and a
-//!   blocking client API.
+//!   group-commit batching, concurrent cross-shard fan-out, a
+//!   [`cluster::ReadConsistency`] knob routing reads across *all*
+//!   replicas (ReadIndex/lease barriers for linearizable follower
+//!   reads), and a blocking client API.
 
 pub mod cluster;
 pub mod replica;
 pub mod router;
 
-pub use cluster::{shard_dir, Cluster, ClusterConfig, Status};
+pub use cluster::{shard_dir, Cluster, ClusterConfig, ReadConsistency, Status};
 pub use replica::Replica;
 pub use router::{ShardId, ShardRouter};

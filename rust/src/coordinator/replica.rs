@@ -9,9 +9,11 @@
 use crate::engine::{self, EngineKind, EngineOpts, EngineStats, KvEngine};
 use crate::gc::{FrozenEpoch, GcConfig, GcOutput, GcPhase};
 use crate::raft::node::Outbox;
-use crate::raft::{Command, Config as RaftConfig, Node, NodeId};
+use crate::raft::{Command, Config as RaftConfig, LogIndex, Node, NodeId};
 use anyhow::Result;
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
 pub struct Replica {
     pub node: Node<Box<dyn KvEngine>>,
@@ -20,6 +22,107 @@ pub struct Replica {
     last_gc_ms: u64,
     /// Completed GC cycles (for the harness).
     pub gc_history: Vec<GcOutput>,
+}
+
+/// The read-only request lane's bookkeeping: client reads parked
+/// first while their ReadIndex barrier resolves (the leader's term
+/// confirmation), then while the local apply point catches up to the
+/// barrier's index.  Generic over the parked payload so the protocol
+/// layer stays ignorant of responder channels.
+pub struct ReadLane<T> {
+    next_ctx: u64,
+    /// ctx → (parked read, when it was parked).
+    waiting_confirm: HashMap<u64, (T, Instant)>,
+    /// Barrier resolved; serve when `last_applied >= read_index`.
+    waiting_apply: Vec<(LogIndex, T, Instant)>,
+}
+
+impl<T> Default for ReadLane<T> {
+    fn default() -> Self {
+        Self { next_ctx: 0, waiting_confirm: HashMap::new(), waiting_apply: Vec::new() }
+    }
+}
+
+impl<T> ReadLane<T> {
+    pub fn is_empty(&self) -> bool {
+        self.waiting_confirm.is_empty() && self.waiting_apply.is_empty()
+    }
+
+    /// Park a read and allocate the barrier token to request with.
+    pub fn begin(&mut self, work: T) -> u64 {
+        self.next_ctx += 1;
+        let ctx = self.next_ctx;
+        self.waiting_confirm.insert(ctx, (work, Instant::now()));
+        ctx
+    }
+
+    /// A barrier resolved at `read_index`: returns the read if the
+    /// apply point already covers it, else parks it for
+    /// [`Self::take_applied`].  Unknown ctxs (already timed out) are
+    /// dropped.
+    pub fn on_ready(
+        &mut self,
+        ctx: u64,
+        read_index: LogIndex,
+        last_applied: LogIndex,
+    ) -> Option<T> {
+        let (work, since) = self.waiting_confirm.remove(&ctx)?;
+        if read_index <= last_applied {
+            return Some(work);
+        }
+        self.waiting_apply.push((read_index, work, since));
+        None
+    }
+
+    /// A barrier failed (no leader / leadership lost): hand the read
+    /// back so the caller can fail or retry it.
+    pub fn on_failed(&mut self, ctx: u64) -> Option<T> {
+        self.waiting_confirm.remove(&ctx).map(|(w, _)| w)
+    }
+
+    /// Reads whose barrier the apply point now covers, in park order.
+    pub fn take_applied(&mut self, last_applied: LogIndex) -> Vec<T> {
+        let mut due = Vec::new();
+        let mut keep = Vec::new();
+        for (ri, work, since) in self.waiting_apply.drain(..) {
+            if ri <= last_applied {
+                due.push(work);
+            } else {
+                keep.push((ri, work, since));
+            }
+        }
+        self.waiting_apply = keep;
+        due
+    }
+
+    /// Reads parked longer than `timeout` in either stage (leader
+    /// unreachable, or the apply point stalled): the caller fails them
+    /// so the client can retry another replica.
+    pub fn take_timed_out(&mut self, timeout: Duration) -> Vec<T> {
+        let now = Instant::now();
+        let mut out = Vec::new();
+        let expired: Vec<u64> = self
+            .waiting_confirm
+            .iter()
+            .filter(|(_, (_, since))| now.duration_since(*since) > timeout)
+            .map(|(&ctx, _)| ctx)
+            .collect();
+        for ctx in expired {
+            if let Some((w, _)) = self.waiting_confirm.remove(&ctx) {
+                out.push(w);
+            }
+        }
+        let mut keep = Vec::new();
+        for (ri, work, since) in self.waiting_apply.drain(..) {
+            if now.duration_since(since) > timeout {
+                out.push(work);
+            } else {
+                keep.push((ri, work, since));
+            }
+        }
+        self.waiting_apply = keep;
+        out
+    }
 }
 
 /// Directory layout for one replica.
@@ -115,8 +218,7 @@ impl Replica {
         // stays in the (retained) frozen epoch for the next cycle.
         // Only genuine overload (backlog above the configured bound)
         // defers the cycle.
-        let backlog =
-            self.node.log.last_index().saturating_sub(self.node.last_applied());
+        let backlog = self.node.log.last_index().saturating_sub(self.node.last_applied());
         let load_ok = backlog <= self.gc_cfg.max_load_entries;
         // Something must have been applied since the last snapshot, or
         // the flush would be empty.
@@ -288,9 +390,8 @@ mod tests {
         let applied_at_trigger = r.node.last_applied();
         // Build an apply backlog: propose without replicating.
         for i in 0..20u32 {
-            r.node
-                .propose(Command::Put { key: format!("b{i:03}").into_bytes(), value: vec![6u8; 512] })
-                .unwrap();
+            let key = format!("b{i:03}").into_bytes();
+            r.node.propose(Command::Put { key, value: vec![6u8; 512] }).unwrap();
         }
         assert!(r.node.log.last_index() > r.node.last_applied(), "backlog exists");
         r.pump_gc(0).unwrap();
@@ -322,6 +423,39 @@ mod tests {
         assert_eq!(r.engine().get(b"b010").unwrap(), Some(vec![6u8; 512]));
         assert_eq!(r.engine().get(b"a039").unwrap(), Some(vec![5u8; 512]));
         assert_eq!(r.engine().get(b"c025").unwrap(), Some(vec![7u8; 512]));
+    }
+
+    /// The read lane's three-stage lifecycle: confirm-wait →
+    /// apply-wait → served, plus failure hand-back and timeouts.
+    #[test]
+    fn read_lane_stages_failures_and_timeouts() {
+        let mut lane: ReadLane<&'static str> = ReadLane::default();
+        assert!(lane.is_empty());
+        let a = lane.begin("a");
+        let b = lane.begin("b");
+        assert_ne!(a, b);
+        // `a`'s barrier is already covered by the apply point.
+        assert_eq!(lane.on_ready(a, 5, 10), Some("a"));
+        // `b` must wait for the apply point to reach its barrier.
+        assert_eq!(lane.on_ready(b, 20, 10), None);
+        assert!(lane.take_applied(19).is_empty());
+        assert_eq!(lane.take_applied(20), vec!["b"]);
+        assert!(lane.is_empty());
+        // A failed barrier hands the work back exactly once.
+        let c = lane.begin("c");
+        assert_eq!(lane.on_failed(c), Some("c"));
+        assert_eq!(lane.on_failed(c), None);
+        // Unknown ctx (already failed/timed out) is dropped quietly.
+        assert_eq!(lane.on_ready(c, 1, 10), None);
+        // Timeouts expire both stages.
+        let _d = lane.begin("d");
+        let e = lane.begin("e");
+        assert_eq!(lane.on_ready(e, 99, 0), None);
+        std::thread::sleep(Duration::from_millis(5));
+        let mut out = lane.take_timed_out(Duration::from_millis(1));
+        out.sort_unstable();
+        assert_eq!(out, vec!["d", "e"]);
+        assert!(lane.is_empty());
     }
 
     #[test]

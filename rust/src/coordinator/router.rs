@@ -254,8 +254,7 @@ mod tests {
             }
             // Simulate per-shard answers (echo the key) and re-merge.
             let answers: Vec<Vec<Vec<u8>>> = per;
-            let merged: Vec<Vec<u8>> =
-                slots.iter().map(|&(s, p)| answers[s][p].clone()).collect();
+            let merged: Vec<Vec<u8>> = slots.iter().map(|&(s, p)| answers[s][p].clone()).collect();
             if merged != keys {
                 return Err("re-merge is not input order".into());
             }
@@ -273,8 +272,7 @@ mod tests {
             for _ in 0..g.usize_in(0..100) {
                 global.insert(g.key(1..10), g.bytes(0..8));
             }
-            let mut per: Vec<Vec<(Vec<u8>, Vec<u8>)>> =
-                vec![Vec::new(); router.shards() as usize];
+            let mut per: Vec<Vec<(Vec<u8>, Vec<u8>)>> = vec![Vec::new(); router.shards() as usize];
             // BTreeMap iteration is key-sorted, so each shard list is too.
             for (k, v) in &global {
                 per[router.route(k) as usize].push((k.clone(), v.clone()));

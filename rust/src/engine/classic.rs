@@ -171,7 +171,8 @@ mod tests {
     use std::path::PathBuf;
 
     fn opts(name: &str) -> EngineOpts {
-        let base: PathBuf = std::env::temp_dir().join(format!("nezha-classic-{name}-{}", std::process::id()));
+        let base: PathBuf =
+            std::env::temp_dir().join(format!("nezha-classic-{name}-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&base);
         let mut o = EngineOpts::new(base.join("engine"), base.join("raft"));
         o.memtable_bytes = 64 << 10;

@@ -9,7 +9,8 @@ use std::path::Path;
 /// Serialize a full KV state for InstallSnapshot (sorted by key — the
 /// scan already is).
 pub fn encode_kv_snapshot(pairs: &[(Vec<u8>, Vec<u8>)]) -> Vec<u8> {
-    let mut e = Encoder::with_capacity(64 + pairs.iter().map(|(k, v)| k.len() + v.len() + 8).sum::<usize>());
+    let payload: usize = pairs.iter().map(|(k, v)| k.len() + v.len() + 8).sum();
+    let mut e = Encoder::with_capacity(64 + payload);
     e.varint(pairs.len() as u64);
     for (k, v) in pairs {
         e.len_bytes(k).len_bytes(v);

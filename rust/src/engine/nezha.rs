@@ -151,8 +151,7 @@ impl NezhaEngine {
         // the resume below will finish — keep them.  Skip entirely for
         // just-adopted legacy layouts (no manifest on disk yet).
         if had_manifest.is_some() {
-            let live: std::collections::HashSet<u64> =
-                manifest.all_gens().into_iter().collect();
+            let live: std::collections::HashSet<u64> = manifest.all_gens().into_iter().collect();
             let inflight_from = state
                 .as_ref()
                 .filter(|s| s.running)
@@ -187,7 +186,8 @@ impl NezhaEngine {
         let cur_db = Db::open(lsm_options(&db_path(&opts.dir, cur_seq), &opts, true))?;
         // LSM dirs older than the ones in use are leftovers from a
         // crash between manifest commit and cleanup.
-        let keep_dbs: std::collections::HashSet<u64> = [Some(cur_seq), old_db.as_ref().map(|(_, s)| *s)]
+        let keep: [Option<u64>; 2] = [Some(cur_seq), old_db.as_ref().map(|(_, s)| *s)];
+        let keep_dbs: std::collections::HashSet<u64> = keep
             .into_iter()
             .flatten()
             .collect();
@@ -306,15 +306,15 @@ impl NezhaEngine {
         // runs that survived unchanged.  open_reusing touches
         // self.levels only once every new run opened successfully, so
         // a failure here leaves the committed stack serving reads.
-        let new_levels = LeveledStorage::open_reusing(&self.opts.dir, &out.levels, &mut self.levels)?;
+        let new_levels =
+            LeveledStorage::open_reusing(&self.opts.dir, &out.levels, &mut self.levels)?;
         self.levels = new_levels;
         self.manifest.levels = out.levels.clone();
         let max_written = out.written_gens.iter().copied().max().unwrap_or(0);
         self.manifest.next_gen = self.manifest.next_gen.max(max_written + 1);
         // Tombstone bookkeeping: adopt the counts of every run this
         // cycle wrote, drop counts of runs leaving the stack.
-        let live: std::collections::HashSet<u64> =
-            self.manifest.all_gens().into_iter().collect();
+        let live: std::collections::HashSet<u64> = self.manifest.all_gens().into_iter().collect();
         for &(g, t) in &out.run_tombstones {
             self.manifest.run_tombstones.insert(g, t);
         }
@@ -464,7 +464,8 @@ impl StateMachine for NezhaEngine {
         // Fresh currentDB (all old references are now invalid).
         let old_seq = self.cur_db_seq;
         self.cur_db_seq += 1;
-        self.cur_db = Db::open(lsm_options(&db_path(&self.opts.dir, self.cur_db_seq), &self.opts, true))?;
+        self.cur_db =
+            Db::open(lsm_options(&db_path(&self.opts.dir, self.cur_db_seq), &self.opts, true))?;
         Db::destroy(&db_path(&self.opts.dir, old_seq))?;
         if let Some((db, seq)) = self.old_db.take() {
             let dir = db_path(&self.opts.dir, seq);
@@ -797,7 +798,8 @@ mod tests {
         }
 
         fn with_opts(name: &str, gc: bool, tweak: impl Fn(&mut EngineOpts)) -> Self {
-            let base = std::env::temp_dir().join(format!("nezha-eng-{name}-{}", std::process::id()));
+            let base =
+                std::env::temp_dir().join(format!("nezha-eng-{name}-{}", std::process::id()));
             let _ = std::fs::remove_dir_all(&base);
             let log = RaftLog::open(&base.join("raft")).unwrap();
             let mut opts = EngineOpts::new(base.join("engine"), base.join("raft"));
@@ -816,7 +818,8 @@ mod tests {
             let base = self.base.clone();
             drop(std::mem::replace(
                 &mut self.eng,
-                NezhaEngine::open(EngineOpts::new(base.join("engine2"), base.join("raft")), false).unwrap(),
+                NezhaEngine::open(EngineOpts::new(base.join("engine2"), base.join("raft")), false)
+                    .unwrap(),
             ));
             let log = RaftLog::open(&base.join("raft")).unwrap();
             let mut opts = EngineOpts::new(base.join("engine"), base.join("raft"));
@@ -830,7 +833,8 @@ mod tests {
         fn put(&mut self, k: &str, v: &[u8]) {
             let idx = self.next_index;
             self.next_index += 1;
-            let e = LogEntry { term: 1, index: idx, cmd: Command::Put { key: k.into(), value: v.to_vec() } };
+            let cmd = Command::Put { key: k.into(), value: v.to_vec() };
+            let e = LogEntry { term: 1, index: idx, cmd };
             let vref = self.log.append(e.clone()).unwrap();
             self.log.flush().unwrap();
             self.eng.apply(&e, vref).unwrap();

@@ -826,7 +826,11 @@ mod tests {
         let dir = tmpdir("second");
         let v1 = write_epoch(
             &dir,
-            &[VEntry::put(1, 1, "a", "old"), VEntry::put(1, 2, "b", "old"), VEntry::put(1, 3, "d", "old")],
+            &[
+                VEntry::put(1, 1, "a", "old"),
+                VEntry::put(1, 2, "b", "old"),
+                VEntry::put(1, 3, "d", "old"),
+            ],
         );
         let out1 = run_gc(&inputs(&dir, v1, vec![], 1, 3)).unwrap();
         // Second epoch: update b, delete d, add c.
@@ -857,7 +861,11 @@ mod tests {
         let dir = tmpdir("merge");
         let v1 = write_epoch(
             &dir,
-            &[VEntry::put(1, 1, "a", "old"), VEntry::put(1, 2, "b", "old"), VEntry::put(1, 3, "d", "old")],
+            &[
+                VEntry::put(1, 1, "a", "old"),
+                VEntry::put(1, 2, "b", "old"),
+                VEntry::put(1, 3, "d", "old"),
+            ],
         );
         let out1 = run_gc(&inputs(&dir, v1, vec![], 1, 3)).unwrap();
         let p2 = dir.join("raft-000001.vlog");
@@ -924,7 +932,11 @@ mod tests {
         let dir = tmpdir("tail");
         let vlog = write_epoch(
             &dir,
-            &[VEntry::put(1, 1, "a", "1"), VEntry::put(1, 2, "b", "1"), VEntry::put(1, 3, "x", "uncommitted")],
+            &[
+                VEntry::put(1, 1, "a", "1"),
+                VEntry::put(1, 2, "b", "1"),
+                VEntry::put(1, 3, "x", "uncommitted"),
+            ],
         );
         // last_index = 2: entry 3 must not appear.
         run_gc(&inputs(&dir, vlog, vec![], 1, 2)).unwrap();
@@ -1101,7 +1113,8 @@ mod tests {
             if i % 5 == 0 {
                 v.append(&VEntry::delete(1, 61 + i, format!("key{:03}", i * 2))).unwrap();
             } else {
-                v.append(&VEntry::put(1, 61 + i, format!("key{:03}", i * 2), format!("new{i}"))).unwrap();
+                let e = VEntry::put(1, 61 + i, format!("key{:03}", i * 2), format!("new{i}"));
+                v.append(&e).unwrap();
             }
         }
         v.sync().unwrap();
@@ -1235,7 +1248,9 @@ mod tests {
     fn large_cycle_roundtrips() {
         let dir = tmpdir("large");
         let entries: Vec<VEntry> = (0..5000u64)
-            .map(|i| VEntry::put(1, i + 1, format!("user{:08}", i * 7 % 5000), vec![(i % 251) as u8; 64]))
+            .map(|i| {
+                VEntry::put(1, i + 1, format!("user{:08}", i * 7 % 5000), vec![(i % 251) as u8; 64])
+            })
             .collect();
         let vlog = write_epoch(&dir, &entries);
         let out = run_gc(&inputs(&dir, vlog, vec![], 1, 5000)).unwrap();
@@ -1267,7 +1282,8 @@ mod tests {
             let entries: Vec<VEntry> = (0..per_cycle)
                 .map(|i| {
                     index += 1;
-                    VEntry::put(1, index, format!("key{:06}", cycle as u64 * per_cycle + i), vec![7u8; 64])
+                    let key = format!("key{:06}", cycle as u64 * per_cycle + i);
+                    VEntry::put(1, index, key, vec![7u8; 64])
                 })
                 .collect();
             let v = write_epoch_file(&dir, cycle, &entries);

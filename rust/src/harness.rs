@@ -5,7 +5,7 @@
 //! *shapes* — who wins and by roughly what factor — are the
 //! reproduction target (DESIGN.md §4).
 
-use crate::coordinator::{Cluster, ClusterConfig, ShardRouter};
+use crate::coordinator::{Cluster, ClusterConfig, ReadConsistency, ShardRouter};
 use crate::engine::EngineKind;
 use crate::gc::GcConfig;
 use crate::raft::NetConfig;
@@ -52,6 +52,53 @@ pub fn bench_shards() -> usize {
         .max(1)
 }
 
+/// Parse a `--read-from WHO` (or `--read-from=WHO`) flag: `leader`
+/// (default; every read at the shard leader), `followers` (ReadIndex/
+/// lease-barriered linearizable reads spread over all replicas), or
+/// `stale` (replica-local reads, no barrier).
+pub fn parse_read_from_arg(args: &[String]) -> Option<ReadConsistency> {
+    let parse = |v: &str| match v.to_ascii_lowercase().as_str() {
+        "leader" => Some(ReadConsistency::Leader),
+        "followers" | "follower" | "linearizable" => Some(ReadConsistency::Linearizable),
+        "stale" => Some(ReadConsistency::Stale),
+        _ => None,
+    };
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--read-from" {
+            return it.next().and_then(|v| parse(v));
+        }
+        if let Some(v) = a.strip_prefix("--read-from=") {
+            return parse(v);
+        }
+    }
+    None
+}
+
+/// Read routing for benches: `--read-from leader|followers|stale` on
+/// the bench command line or the `NEZHA_BENCH_READ_FROM` env var;
+/// defaults to leader-served reads.  fig5/fig6/fig8 use this to plot
+/// leader vs follower read scaling at the same shard count.
+pub fn bench_read_from() -> ReadConsistency {
+    let args: Vec<String> = std::env::args().collect();
+    parse_read_from_arg(&args)
+        .or_else(|| {
+            std::env::var("NEZHA_BENCH_READ_FROM")
+                .ok()
+                .and_then(|v| parse_read_from_arg(&["--read-from".into(), v]))
+        })
+        .unwrap_or(ReadConsistency::Leader)
+}
+
+/// Short label for bench headers/rows.
+pub fn read_from_label(rf: ReadConsistency) -> &'static str {
+    match rf {
+        ReadConsistency::Leader => "leader",
+        ReadConsistency::Linearizable => "followers",
+        ReadConsistency::Stale => "stale",
+    }
+}
+
 /// Point reads folded into one leader round-trip (the read analogue of
 /// the coordinator's write-side fold).
 pub const GET_BATCH: usize = 16;
@@ -70,6 +117,9 @@ pub struct Spec {
     /// GC threshold as a fraction of loaded bytes (paper: 40 GB of
     /// 100 GB = 0.4).
     pub gc_fraction: f64,
+    /// Who serves reads (see [`ReadConsistency`]); `Leader` is the
+    /// pre-follower-read behavior.
+    pub read_from: ReadConsistency,
     pub seed: u64,
 }
 
@@ -82,6 +132,7 @@ impl Spec {
             value_size,
             load_bytes: (24 << 20) as u64,
             gc_fraction: 0.4,
+            read_from: ReadConsistency::Leader,
             seed: 42,
         }
     }
@@ -204,6 +255,7 @@ impl Env {
         let mut cfg = ClusterConfig::new(&dir, spec.kind, spec.nodes);
         cfg.seed = spec.seed;
         cfg.router = ShardRouter::hash(shards as u32);
+        cfg.read_consistency = spec.read_from;
         cfg.net = NetConfig { latency_us: (0, 0), loss: 0.0, seed: spec.seed };
         // Engine scale knobs proportional to the per-shard load (each
         // shard group sees roughly `load / shards` of the traffic).
@@ -274,7 +326,8 @@ impl Env {
     /// batched engine resolution per chunk); latency is recorded
     /// per-op as the batch mean, like the write path does.
     pub fn run_gets(&self, n: u64, label: &str) -> Result<Measurement> {
-        let mut g = Generator::new(WorkloadKind::C, self.spec.records(), self.spec.value_size, self.spec.seed + 1);
+        let (records, vs) = (self.spec.records(), self.spec.value_size);
+        let mut g = Generator::new(WorkloadKind::C, records, vs, self.spec.seed + 1);
         let keys: Vec<Vec<u8>> = (0..n)
             .map(|_| {
                 let Op::Read(key) = g.next_op() else { unreachable!() };
@@ -307,7 +360,8 @@ impl Env {
 
     /// Issue `n` range scans of `scan_len` records each.
     pub fn run_scans(&self, n: u64, scan_len: usize, label: &str) -> Result<Measurement> {
-        let mut g = Generator::new(WorkloadKind::C, self.spec.records(), self.spec.value_size, self.spec.seed + 2);
+        let (records, vs) = (self.spec.records(), self.spec.value_size);
+        let mut g = Generator::new(WorkloadKind::C, records, vs, self.spec.seed + 2);
         let mut lat = Histogram::new();
         let mut bytes = 0u64;
         let mut rows = 0u64;
@@ -370,8 +424,8 @@ impl Env {
             Ok(())
         }
 
-        let mut g = Generator::new(kind, self.spec.records(), self.spec.value_size, self.spec.seed + 3)
-            .with_scan_len(scan_len);
+        let (records, vs) = (self.spec.records(), self.spec.value_size);
+        let mut g = Generator::new(kind, records, vs, self.spec.seed + 3).with_scan_len(scan_len);
         let mut lat = Histogram::new();
         let mut wlat = Histogram::new();
         let mut rlat = Histogram::new();
@@ -446,6 +500,22 @@ impl Env {
     pub fn leader_stats(&self) -> Result<crate::engine::EngineStats> {
         let leader = self.cluster.wait_for_leader(std::time::Duration::from_secs(10))?;
         Ok(self.cluster.status(leader)?.engine)
+    }
+
+    /// Cluster-wide engine stats: with replica-served reads the
+    /// traffic lands on whichever node executed it, so the leader row
+    /// alone under-counts — this rollup is the honest accounting for
+    /// read bench lines.
+    pub fn cluster_stats(&self) -> Result<crate::engine::EngineStats> {
+        self.cluster.cluster_stats()
+    }
+
+    /// Print which nodes actually served the reads (`nN:<gets>g/<scans>s`).
+    pub fn print_read_distribution(&self) -> Result<()> {
+        let dist = self.cluster.read_distribution()?;
+        let parts: Vec<String> = dist.iter().map(|(id, g, s)| format!("n{id}:{g}g/{s}s")).collect();
+        println!("            reads by node: {}", parts.join(" "));
+        Ok(())
     }
 
     pub fn destroy(self) -> Result<()> {
@@ -541,5 +611,44 @@ mod tests {
         assert_eq!(parse_shards_arg(&args(&["--scale", "1"])), None);
         assert_eq!(parse_shards_arg(&args(&["--shards"])), None);
         assert_eq!(parse_shards_arg(&args(&["--shards", "x"])), None);
+    }
+
+    #[test]
+    fn read_from_flag_parses() {
+        let args = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(
+            parse_read_from_arg(&args(&["bench", "--read-from", "followers"])),
+            Some(ReadConsistency::Linearizable)
+        );
+        assert_eq!(
+            parse_read_from_arg(&args(&["--read-from=stale"])),
+            Some(ReadConsistency::Stale)
+        );
+        assert_eq!(
+            parse_read_from_arg(&args(&["--read-from", "Leader"])),
+            Some(ReadConsistency::Leader)
+        );
+        assert_eq!(parse_read_from_arg(&args(&["--read-from", "nope"])), None);
+        assert_eq!(parse_read_from_arg(&args(&["--read-from"])), None);
+        assert_eq!(parse_read_from_arg(&args(&["--shards", "2"])), None);
+    }
+
+    #[test]
+    fn tiny_end_to_end_follower_reads() {
+        // The harness path with reads spread over all replicas behind
+        // ReadIndex barriers.
+        let mut spec = Spec::new(EngineKind::Nezha, 1 << 10);
+        spec.load_bytes = 64 << 10;
+        spec.read_from = ReadConsistency::Linearizable;
+        let env = Env::start(spec).unwrap();
+        env.load("1KB").unwrap();
+        let get = env.run_gets(30, "1KB").unwrap();
+        assert!(get.bytes > 0, "follower gets found data");
+        let scan = env.run_scans(4, 8, "1KB").unwrap();
+        assert!(scan.ops >= 4);
+        // More than one node served gets.
+        let dist = env.cluster.read_distribution().unwrap();
+        assert!(dist.iter().filter(|(_, g, _)| *g > 0).count() >= 2, "{dist:?}");
+        env.destroy().unwrap();
     }
 }

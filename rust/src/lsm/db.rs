@@ -649,7 +649,8 @@ mod tests {
         db.flush().unwrap();
         let s = db.stats().snapshot();
         // WAL + flush alone write everything at least twice.
-        assert!(s.total_write_bytes() > user_bytes * 2, "wa={:.2}", s.total_write_bytes() as f64 / user_bytes as f64);
+        let wa = s.total_write_bytes() as f64 / user_bytes as f64;
+        assert!(s.total_write_bytes() > user_bytes * 2, "wa={wa:.2}");
     }
 
     #[test]

@@ -394,7 +394,8 @@ impl Iterator for TableIter<'_> {
     fn next(&mut self) -> Option<Self::Item> {
         loop {
             if self.pos < self.entries.len() {
-                let item = std::mem::replace(&mut self.entries[self.pos], (Vec::new(), Value::Delete));
+                let item =
+                    std::mem::replace(&mut self.entries[self.pos], (Vec::new(), Value::Delete));
                 self.pos += 1;
                 return Some(item);
             }

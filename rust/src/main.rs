@@ -102,10 +102,14 @@ fn cmd_load_serve(serve: bool, flags: &HashMap<String, String>) -> Result<()> {
     print_header("load");
     println!("{}", m.row());
     if serve {
-        println!("cluster up; issuing a smoke get/scan then exiting (interactive serving is exercised by examples/)");
+        println!(
+            "cluster up; issuing a smoke get/scan then exiting (interactive serving is \
+             exercised by examples/)"
+        );
         let v = env.cluster.get(&nezha::ycsb::key_of(0))?;
         println!("get(user0) -> {} bytes", v.map_or(0, |v| v.len()));
-        let rows = env.cluster.scan(&nezha::ycsb::key_of(0), &nezha::ycsb::key_of(u64::MAX / 2), 10)?;
+        let rows =
+            env.cluster.scan(&nezha::ycsb::key_of(0), &nezha::ycsb::key_of(u64::MAX / 2), 10)?;
         println!("scan(10) -> {} rows", rows.len());
     }
     env.destroy()

@@ -410,8 +410,7 @@ impl RaftLog {
         if cut.epoch != self.epoch {
             // Conflict inside a frozen epoch: kill all newer epochs,
             // reopen the containing epoch as live, truncated.
-            let newer: Vec<u32> =
-                self.old.keys().copied().filter(|&e| e > cut.epoch).collect();
+            let newer: Vec<u32> = self.old.keys().copied().filter(|&e| e > cut.epoch).collect();
             for e in newer {
                 self.old.remove(&e);
                 self.epoch_max.remove(&e);

@@ -13,6 +13,14 @@
 //! Module map: [`rpc`] (messages + wire codec), [`log`] (persistent
 //! log + hard state), [`node`] (the protocol state machine),
 //! [`transport`] (deterministic sim net + threaded bus).
+//!
+//! Linearizable reads avoid the log entirely: a **ReadIndex** barrier
+//! (leader confirms its term with one heartbeat quorum round and
+//! hands out its commit index) or the **leader lease** fast path (a
+//! clock-bound lease renewed by ordinary heartbeat echoes, so
+//! steady-state reads cost zero extra RPCs).  Any replica may serve a
+//! read once `last_applied` reaches the barrier's index — see
+//! [`node::Node::request_read`].
 
 pub mod log;
 pub mod node;

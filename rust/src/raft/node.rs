@@ -30,7 +30,12 @@ pub trait StateMachine: Send {
     /// Serialize current state for follower catch-up.
     fn snapshot_bytes(&mut self) -> Result<Vec<u8>>;
     /// Replace state with a received snapshot.
-    fn install_snapshot(&mut self, data: &[u8], last_index: LogIndex, last_term: Term) -> Result<()>;
+    fn install_snapshot(
+        &mut self,
+        data: &[u8],
+        last_index: LogIndex,
+        last_term: Term,
+    ) -> Result<()>;
     /// Conflict resolution truncated (and will rewrite) the log suffix;
     /// epoch files `>= live_epoch` changed in place.  Engines that
     /// cache ValueLog bytes must drop cached state for those epochs —
@@ -52,6 +57,12 @@ pub struct Config {
     /// fsync the log at persistence points (tests: on; benches choose
     /// one policy for all baselines).
     pub fsync: bool,
+    /// Lease fast path for linearizable reads: a leader whose last
+    /// heartbeat round was quorum-acked within 3/4 of
+    /// `election_timeout_min` serves read barriers without a fresh
+    /// quorum round (steady state: zero extra RPCs per read).  Off =
+    /// every ReadIndex pays a heartbeat quorum round.
+    pub lease_reads: bool,
 }
 
 impl Default for Config {
@@ -63,6 +74,7 @@ impl Default for Config {
             max_batch_bytes: 1 << 20,
             mem_keep_tail: 1024,
             fsync: false,
+            lease_reads: true,
         }
     }
 }
@@ -78,6 +90,23 @@ pub struct NodeMetrics {
     pub snapshots_sent: u64,
     pub snapshots_installed: u64,
     pub entries_applied: u64,
+    /// Read barriers resolved off the leader lease (no quorum round).
+    pub lease_reads: u64,
+    /// Read barriers that paid a heartbeat quorum round.
+    pub read_index_rounds: u64,
+}
+
+/// A read barrier parked on the leader until a heartbeat quorum round
+/// (issued at `seq`) confirms this node still leads its term.
+struct PendingConfirm {
+    ctx: u64,
+    /// `None`: this node's own read lane asked; `Some(n)`: node `n`
+    /// sent a [`Message::ReadIndex`] and gets the resp on completion.
+    requester: Option<NodeId>,
+    /// Acks count only for heartbeat rounds at or above this.
+    seq: u64,
+    /// Lease-clock instant the barrier was registered (for pruning).
+    issued_at: u64,
 }
 
 pub struct Node<S: StateMachine> {
@@ -98,6 +127,35 @@ pub struct Node<S: StateMachine> {
     ticks: u64,
     election_deadline: u64,
     last_heartbeat: u64,
+    /// Tick of the last AppendEntries/InstallSnapshot accepted from a
+    /// valid leader (0 = never).  Backs vote stickiness: see
+    /// [`Self::handle`].
+    last_leader_contact: u64,
+    // ReadIndex / lease state (leader side).
+    /// Heartbeat round counter; every AppendEntries carries it and the
+    /// follower echoes it back.
+    hb_seq: u64,
+    /// Lease-clock instant each recent heartbeat round was broadcast.
+    hb_sent_at: HashMap<u64, u64>,
+    /// Highest heartbeat round each peer has acked this term.
+    peer_ack: HashMap<NodeId, u64>,
+    /// Read barriers awaiting a heartbeat quorum round.
+    pending_confirm: Vec<PendingConfirm>,
+    /// Lease-clock instant the leader lease expires.
+    lease_until: u64,
+    /// Monotonic clock for lease accounting.  Advances with every tick
+    /// AND by [`Self::skip_ticks`] for wall stalls the election logic
+    /// forgives, so a lease can never outlive its wall-clock budget on
+    /// a stalled thread (ticks under-count wall time; this must not).
+    lease_clock: u64,
+    /// Index of the no-op this leader appended on winning its
+    /// election: read barriers resolve only once `commit_index` has
+    /// reached it (Raft §8 — a new leader's commit index is proven
+    /// current only after it commits in its own term).
+    term_start_index: LogIndex,
+    // ReadIndex state (requester side).
+    ready_reads: Vec<(u64, LogIndex)>,
+    failed_reads: Vec<u64>,
     rng: Rng,
     cfg: Config,
     sm: S,
@@ -134,6 +192,16 @@ impl<S: StateMachine> Node<S> {
             ticks: 0,
             election_deadline,
             last_heartbeat: 0,
+            last_leader_contact: 0,
+            hb_seq: 0,
+            hb_sent_at: HashMap::new(),
+            peer_ack: HashMap::new(),
+            pending_confirm: Vec::new(),
+            lease_until: 0,
+            lease_clock: 0,
+            term_start_index: 0,
+            ready_reads: Vec::new(),
+            failed_reads: Vec::new(),
             rng,
             cfg,
             sm,
@@ -206,8 +274,27 @@ impl<S: StateMachine> Node<S> {
     /// Advance one logical tick.
     pub fn tick(&mut self) -> Result<Outbox> {
         self.ticks += 1;
+        self.lease_clock += 1;
         match self.role {
             Role::Leader => {
+                // Abandon read barriers whose quorum round never
+                // completed (partitioned majority): the requester's
+                // lane times out and retries; local ctxs fail fast.
+                if !self.pending_confirm.is_empty() {
+                    let horizon = self.cfg.election_timeout_max * 2;
+                    let now = self.lease_clock;
+                    let failed = &mut self.failed_reads;
+                    self.pending_confirm.retain(|pc| {
+                        if now.saturating_sub(pc.issued_at) > horizon {
+                            if pc.requester.is_none() {
+                                failed.push(pc.ctx);
+                            }
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                }
                 if self.ticks - self.last_heartbeat >= self.cfg.heartbeat_interval {
                     return self.broadcast_append();
                 }
@@ -220,6 +307,17 @@ impl<S: StateMachine> Node<S> {
                 Ok(Vec::new())
             }
         }
+    }
+
+    /// Account for wall time the caller's tick loop *forgave* (a
+    /// stalled thread ticks at most a couple of times per loop so a
+    /// storage stall doesn't read as a dead leader).  Election logic
+    /// must not see these ticks, but the lease clock MUST: a lease
+    /// measured against an under-counting clock would stretch its wall
+    /// duration past the followers' election timeout and break the
+    /// no-other-leader guarantee.
+    pub fn skip_ticks(&mut self, skipped: u64) {
+        self.lease_clock += skipped;
     }
 
     fn reset_election_timer(&mut self) {
@@ -255,6 +353,19 @@ impl<S: StateMachine> Node<S> {
     }
 
     fn become_follower(&mut self, term: Term, leader: Option<NodeId>) -> Result<()> {
+        if self.role == Role::Leader {
+            // Deposed: the lease and every parked read barrier die with
+            // the leadership.  Remote requesters time out and retry
+            // against the new leader; local ctxs fail fast.
+            self.lease_until = 0;
+            self.peer_ack.clear();
+            self.hb_sent_at.clear();
+            for pc in self.pending_confirm.drain(..) {
+                if pc.requester.is_none() {
+                    self.failed_reads.push(pc.ctx);
+                }
+            }
+        }
         if term > self.hard.term {
             self.hard.term = term;
             self.hard.voted_for = None;
@@ -263,6 +374,7 @@ impl<S: StateMachine> Node<S> {
         self.role = Role::Follower;
         if leader.is_some() {
             self.leader_hint = leader;
+            self.last_leader_contact = self.ticks;
         }
         self.reset_election_timer();
         Ok(())
@@ -273,14 +385,26 @@ impl<S: StateMachine> Node<S> {
         self.leader_hint = Some(self.id);
         self.next_index.clear();
         self.match_index.clear();
+        self.peer_ack.clear();
+        self.hb_sent_at.clear();
+        self.pending_confirm.clear();
+        self.lease_until = 0;
         for &p in &self.peers {
             self.next_index.insert(p, self.log.last_index() + 1);
             self.match_index.insert(p, 0);
         }
-        // Commit barrier for prior-term entries (§5.4.2).
+        // Commit barrier for prior-term entries (§5.4.2).  Read
+        // barriers resolve only once this no-op commits.
         let idx = self.log.last_index() + 1;
+        self.term_start_index = idx;
         self.log.append(LogEntry { term: self.hard.term, index: idx, cmd: Command::Noop })?;
         self.persist_log()?;
+        // Single-node cluster: the no-op commits by itself — without
+        // this, the §8 read gate would block every barrier until the
+        // first client write.
+        if self.peers.is_empty() {
+            self.advance_commit()?;
+        }
         self.broadcast_append()
     }
 
@@ -319,6 +443,14 @@ impl<S: StateMachine> Node<S> {
 
     fn broadcast_append(&mut self) -> Result<Outbox> {
         self.last_heartbeat = self.ticks;
+        // New heartbeat round: record when it left so a quorum of
+        // echoes anchors the lease to this instant.
+        self.hb_seq += 1;
+        self.hb_sent_at.insert(self.hb_seq, self.lease_clock);
+        if self.hb_sent_at.len() > 128 {
+            let floor = self.hb_seq.saturating_sub(128);
+            self.hb_sent_at.retain(|&s, _| s >= floor);
+        }
         let mut out = Vec::new();
         let peers = self.peers.clone();
         for p in peers {
@@ -333,8 +465,8 @@ impl<S: StateMachine> Node<S> {
     fn append_for(&mut self, peer: NodeId) -> Result<Option<Message>> {
         let next = *self.next_index.get(&peer).unwrap_or(&1);
         // Peer too far behind the in-memory log → ship a snapshot.
-        if next <= self.log.snap_index || (next < self.log.first_in_mem() && next <= self.log.last_index())
-        {
+        let behind_mem = next < self.log.first_in_mem() && next <= self.log.last_index();
+        if next <= self.log.snap_index || behind_mem {
             let data = self.sm.snapshot_bytes()?;
             self.metrics.snapshots_sent += 1;
             // Snapshot covers the applied prefix.
@@ -362,12 +494,39 @@ impl<S: StateMachine> Node<S> {
             prev_log_term: prev_term,
             entries,
             leader_commit: self.commit_index,
+            seq: self.hb_seq,
         }))
     }
 
     // ---- message handling --------------------------------------------
 
     pub fn handle(&mut self, from: NodeId, msg: Message) -> Result<Outbox> {
+        // Vote stickiness (Raft §4.2.3), the lease's safety twin: a
+        // higher-term vote request is refused — term untouched — while
+        // this node recently heard from a live leader (or IS a leader
+        // holding a valid lease).  Without it, one flaky link lets a
+        // quorum elect a new leader and commit writes inside the old
+        // leader's lease window, making lease reads stale.  Silence
+        // for `election_timeout_min` re-enables voting, so a dead
+        // leader is still replaced.
+        if let Message::RequestVote { term, .. } = &msg {
+            let sticky = match self.role {
+                Role::Leader => self.lease_valid(),
+                _ => {
+                    self.leader_hint.is_some()
+                        && self.last_leader_contact > 0
+                        && self.ticks.saturating_sub(self.last_leader_contact)
+                            < self.cfg.election_timeout_min
+                }
+            };
+            if *term > self.hard.term && sticky {
+                self.metrics.msgs_sent += 1;
+                return Ok(vec![(
+                    from,
+                    Message::RequestVoteResp { term: self.hard.term, granted: false },
+                )]);
+            }
+        }
         if msg.term() > self.hard.term {
             let leader = match &msg {
                 Message::AppendEntries { leader, .. } | Message::InstallSnapshot { leader, .. } => {
@@ -382,17 +541,36 @@ impl<S: StateMachine> Node<S> {
                 self.on_request_vote(from, term, candidate, last_log_index, last_log_term)
             }
             Message::RequestVoteResp { term, granted } => self.on_vote_resp(term, granted),
-            Message::AppendEntries { term, leader, prev_log_index, prev_log_term, entries, leader_commit } => {
-                self.on_append(from, term, leader, prev_log_index, prev_log_term, entries, leader_commit)
-            }
-            Message::AppendEntriesResp { term, success, match_index } => {
-                self.on_append_resp(from, term, success, match_index)
+            Message::AppendEntries {
+                term,
+                leader,
+                prev_log_index,
+                prev_log_term,
+                entries,
+                leader_commit,
+                seq,
+            } => self.on_append(
+                from,
+                term,
+                leader,
+                prev_log_index,
+                prev_log_term,
+                entries,
+                leader_commit,
+                seq,
+            ),
+            Message::AppendEntriesResp { term, success, match_index, seq } => {
+                self.on_append_resp(from, term, success, match_index, seq)
             }
             Message::InstallSnapshot { term, leader, last_index, last_term, data } => {
                 self.on_install_snapshot(from, term, leader, last_index, last_term, data)
             }
             Message::InstallSnapshotResp { term, last_index } => {
                 self.on_snapshot_resp(from, term, last_index)
+            }
+            Message::ReadIndex { term, ctx } => self.on_read_index(from, term, ctx),
+            Message::ReadIndexResp { term, ctx, read_index, ok } => {
+                self.on_read_index_resp(term, ctx, read_index, ok)
             }
         }
     }
@@ -407,8 +585,7 @@ impl<S: StateMachine> Node<S> {
     ) -> Result<Outbox> {
         let mut granted = false;
         if term == self.hard.term {
-            let can_vote =
-                self.hard.voted_for.is_none() || self.hard.voted_for == Some(candidate);
+            let can_vote = self.hard.voted_for.is_none() || self.hard.voted_for == Some(candidate);
             // §5.4.1 up-to-date check.
             let up_to_date = last_log_term > self.log.last_term()
                 || (last_log_term == self.log.last_term()
@@ -447,12 +624,18 @@ impl<S: StateMachine> Node<S> {
         prev_log_term: Term,
         entries: Vec<LogEntry>,
         leader_commit: LogIndex,
+        seq: u64,
     ) -> Result<Outbox> {
         if term < self.hard.term {
             self.metrics.msgs_sent += 1;
             return Ok(vec![(
                 from,
-                Message::AppendEntriesResp { term: self.hard.term, success: false, match_index: 0 },
+                Message::AppendEntriesResp {
+                    term: self.hard.term,
+                    success: false,
+                    match_index: 0,
+                    seq,
+                },
             )]);
         }
         // Valid leader for this term.
@@ -479,6 +662,7 @@ impl<S: StateMachine> Node<S> {
                     term: self.hard.term,
                     success: false,
                     match_index: hint,
+                    seq,
                 },
             )]);
         }
@@ -517,7 +701,7 @@ impl<S: StateMachine> Node<S> {
         self.metrics.msgs_sent += 1;
         Ok(vec![(
             from,
-            Message::AppendEntriesResp { term: self.hard.term, success: true, match_index },
+            Message::AppendEntriesResp { term: self.hard.term, success: true, match_index, seq },
         )])
     }
 
@@ -527,31 +711,44 @@ impl<S: StateMachine> Node<S> {
         term: Term,
         success: bool,
         match_index: LogIndex,
+        seq: u64,
     ) -> Result<Outbox> {
         if self.role != Role::Leader || term != self.hard.term {
             return Ok(Vec::new());
         }
+        // Any term-matching response — even a log-mismatch rejection —
+        // proves the peer accepted this node as its term's leader when
+        // it echoed round `seq`: record the ack, refresh the lease,
+        // and complete read barriers the quorum now confirms.
+        let ack = self.peer_ack.entry(from).or_insert(0);
+        if seq > *ack {
+            *ack = seq;
+        }
+        self.refresh_lease();
+        let mut out = Vec::new();
         if success {
             self.match_index.insert(from, match_index);
             self.next_index.insert(from, match_index + 1);
             self.advance_commit()?;
+            out.extend(self.pump_read_confirms());
             // More to send?
             if match_index < self.log.last_index() {
                 if let Some(m) = self.append_for(from)? {
                     self.metrics.msgs_sent += 1;
-                    return Ok(vec![(from, m)]);
+                    out.push((from, m));
                 }
             }
         } else {
+            out.extend(self.pump_read_confirms());
             // Back up using the follower's hint.
             let next = self.next_index.entry(from).or_insert(1);
             *next = (match_index + 1).min((*next).saturating_sub(1)).max(1);
             if let Some(m) = self.append_for(from)? {
                 self.metrics.msgs_sent += 1;
-                return Ok(vec![(from, m)]);
+                out.push((from, m));
             }
         }
-        Ok(Vec::new())
+        Ok(out)
     }
 
     fn advance_commit(&mut self) -> Result<()> {
@@ -603,10 +800,9 @@ impl<S: StateMachine> Node<S> {
     ) -> Result<Outbox> {
         if term < self.hard.term {
             self.metrics.msgs_sent += 1;
-            return Ok(vec![(
-                from,
-                Message::InstallSnapshotResp { term: self.hard.term, last_index: self.log.last_index() },
-            )]);
+            let last_index = self.log.last_index();
+            let resp = Message::InstallSnapshotResp { term: self.hard.term, last_index };
+            return Ok(vec![(from, resp)]);
         }
         self.become_follower(term, Some(leader))?;
         if last_index > self.log.snap_index && last_index > self.last_applied {
@@ -617,13 +813,16 @@ impl<S: StateMachine> Node<S> {
             self.metrics.snapshots_installed += 1;
         }
         self.metrics.msgs_sent += 1;
-        Ok(vec![(
-            from,
-            Message::InstallSnapshotResp { term: self.hard.term, last_index: self.log.last_index() },
-        )])
+        let last_index = self.log.last_index();
+        Ok(vec![(from, Message::InstallSnapshotResp { term: self.hard.term, last_index })])
     }
 
-    fn on_snapshot_resp(&mut self, from: NodeId, term: Term, last_index: LogIndex) -> Result<Outbox> {
+    fn on_snapshot_resp(
+        &mut self,
+        from: NodeId,
+        term: Term,
+        last_index: LogIndex,
+    ) -> Result<Outbox> {
         if self.role != Role::Leader || term != self.hard.term {
             return Ok(Vec::new());
         }
@@ -634,6 +833,178 @@ impl<S: StateMachine> Node<S> {
             return Ok(vec![(from, m)]);
         }
         Ok(Vec::new())
+    }
+
+    // ---- linearizable read barriers (ReadIndex + leader lease) -------
+
+    /// Lease length in lease-clock ticks: 3/4 of the *minimum*
+    /// election timeout.  A follower that acked a heartbeat sent at
+    /// lease-instant `S` cannot vote out this leader before its own
+    /// election timer — reset no earlier than `S` — runs at least
+    /// `election_timeout_min` of its (never faster than wall) ticks,
+    /// so a lease anchored at `S` expires with margin to spare.
+    fn lease_len(&self) -> u64 {
+        self.cfg.election_timeout_min * 3 / 4
+    }
+
+    fn lease_valid(&self) -> bool {
+        self.cfg.lease_reads && self.role == Role::Leader && self.lease_clock < self.lease_until
+    }
+
+    /// Extend the lease to the newest heartbeat round a quorum has
+    /// echoed (self counts for its own latest round).
+    fn refresh_lease(&mut self) {
+        if !self.cfg.lease_reads {
+            return;
+        }
+        let mut acked: Vec<u64> = self.peer_ack.values().copied().collect();
+        acked.push(self.hb_seq);
+        let q = self.quorum();
+        if acked.len() < q {
+            return;
+        }
+        acked.sort_unstable();
+        // q-th largest: the newest round at least q members have seen.
+        let quorum_seq = acked[acked.len() - q];
+        if let Some(&sent) = self.hb_sent_at.get(&quorum_seq) {
+            self.lease_until = self.lease_until.max(sent + self.lease_len());
+        }
+    }
+
+    /// Complete every parked read barrier whose heartbeat round a
+    /// quorum has echoed.  Gated on the §8 no-op commit: the handed-out
+    /// index is the *current* commit index, which is at least the
+    /// commit point any already-acknowledged write had reached.
+    fn pump_read_confirms(&mut self) -> Outbox {
+        if self.pending_confirm.is_empty() || self.commit_index < self.term_start_index {
+            return Vec::new();
+        }
+        let q = self.quorum();
+        let mut out = Vec::new();
+        let mut still_pending = Vec::new();
+        for pc in std::mem::take(&mut self.pending_confirm) {
+            let acks = 1 + self.peer_ack.values().filter(|&&s| s >= pc.seq).count();
+            if acks >= q {
+                match pc.requester {
+                    Some(n) => {
+                        self.metrics.msgs_sent += 1;
+                        out.push((
+                            n,
+                            Message::ReadIndexResp {
+                                term: self.hard.term,
+                                ctx: pc.ctx,
+                                read_index: self.commit_index,
+                                ok: true,
+                            },
+                        ));
+                    }
+                    None => self.ready_reads.push((pc.ctx, self.commit_index)),
+                }
+            } else {
+                still_pending.push(pc);
+            }
+        }
+        self.pending_confirm = still_pending;
+        out
+    }
+
+    /// Begin a linearizable read barrier for an opaque caller token.
+    /// On a leader holding a valid lease the barrier resolves
+    /// immediately; otherwise a heartbeat quorum round confirms the
+    /// leadership first.  On a follower the request is forwarded to
+    /// the last known leader.  Outcomes surface through
+    /// [`Self::take_read_results`]: serve the read from local state
+    /// once `last_applied >= read_index`.
+    pub fn request_read(&mut self, ctx: u64) -> Result<Outbox> {
+        if self.role == Role::Leader {
+            if self.lease_valid() && self.commit_index >= self.term_start_index {
+                self.metrics.lease_reads += 1;
+                self.ready_reads.push((ctx, self.commit_index));
+                return Ok(Vec::new());
+            }
+            self.metrics.read_index_rounds += 1;
+            self.pending_confirm.push(PendingConfirm {
+                ctx,
+                requester: None,
+                seq: self.hb_seq + 1,
+                issued_at: self.lease_clock,
+            });
+            let mut out = self.broadcast_append()?;
+            // Single-node cluster: a quorum of one confirms instantly.
+            out.extend(self.pump_read_confirms());
+            return Ok(out);
+        }
+        match self.leader_hint {
+            Some(l) if l != self.id => {
+                self.metrics.msgs_sent += 1;
+                Ok(vec![(l, Message::ReadIndex { term: self.hard.term, ctx })])
+            }
+            _ => {
+                // No leader known: fail fast so the caller retries
+                // elsewhere (or after the next election).
+                self.failed_reads.push(ctx);
+                Ok(Vec::new())
+            }
+        }
+    }
+
+    fn on_read_index(&mut self, from: NodeId, _term: Term, ctx: u64) -> Result<Outbox> {
+        if self.role != Role::Leader {
+            // A higher-term ReadIndex already demoted us in `handle`;
+            // either way the requester must re-resolve the leader.
+            self.metrics.msgs_sent += 1;
+            return Ok(vec![(
+                from,
+                Message::ReadIndexResp { term: self.hard.term, ctx, read_index: 0, ok: false },
+            )]);
+        }
+        if self.lease_valid() && self.commit_index >= self.term_start_index {
+            self.metrics.lease_reads += 1;
+            self.metrics.msgs_sent += 1;
+            return Ok(vec![(
+                from,
+                Message::ReadIndexResp {
+                    term: self.hard.term,
+                    ctx,
+                    read_index: self.commit_index,
+                    ok: true,
+                },
+            )]);
+        }
+        self.metrics.read_index_rounds += 1;
+        self.pending_confirm.push(PendingConfirm {
+            ctx,
+            requester: Some(from),
+            seq: self.hb_seq + 1,
+            issued_at: self.lease_clock,
+        });
+        self.broadcast_append()
+    }
+
+    fn on_read_index_resp(
+        &mut self,
+        term: Term,
+        ctx: u64,
+        read_index: LogIndex,
+        ok: bool,
+    ) -> Result<Outbox> {
+        // A resp from a newer term already raised ours in `handle`, so
+        // equality means the grant is from our term's leader; anything
+        // else is a stale leader's answer and must not be trusted.
+        if ok && term == self.hard.term {
+            self.ready_reads.push((ctx, read_index));
+        } else {
+            self.failed_reads.push(ctx);
+        }
+        Ok(Vec::new())
+    }
+
+    /// Drain resolved read barriers: `(ctx, read_index)` pairs ready
+    /// to serve once `last_applied >= read_index`, and ctxs whose
+    /// barrier failed (no leader, lost leadership, stale grant) that
+    /// the caller must retry or surface.
+    pub fn take_read_results(&mut self) -> (Vec<(u64, LogIndex)>, Vec<u64>) {
+        (std::mem::take(&mut self.ready_reads), std::mem::take(&mut self.failed_reads))
     }
 }
 
@@ -702,20 +1073,17 @@ mod tests {
 
     impl Trio {
         fn new(name: &str) -> Self {
+            Self::with_cfg(name, Config::default())
+        }
+
+        fn with_cfg(name: &str, cfg: Config) -> Self {
             let ids = [1u64, 2, 3];
             let nodes = ids
                 .iter()
                 .map(|&id| {
                     let peers: Vec<u64> = ids.iter().copied().filter(|&p| p != id).collect();
-                    Node::new(
-                        id,
-                        peers,
-                        &tmpdir(name, id),
-                        MemSm::default(),
-                        Config::default(),
-                        42,
-                    )
-                    .unwrap()
+                    Node::new(id, peers, &tmpdir(name, id), MemSm::default(), cfg.clone(), 42)
+                        .unwrap()
                 })
                 .collect();
             Self { nodes }
@@ -785,10 +1153,9 @@ mod tests {
         let mut t = Trio::new("replicate");
         let leader = t.elect();
         for i in 0..20u32 {
-            t.propose_and_commit(
-                leader,
-                Command::Put { key: format!("k{i}").into_bytes(), value: format!("v{i}").into_bytes() },
-            );
+            let key = format!("k{i}").into_bytes();
+            let value = format!("v{i}").into_bytes();
+            t.propose_and_commit(leader, Command::Put { key, value });
         }
         // Followers learn the final commit index from the next
         // heartbeat — pump a few ticks.
@@ -817,7 +1184,8 @@ mod tests {
         // Detach node 3: leader + node 2 still commit.
         let mut t = Trio::new("quorum");
         let leader = t.elect();
-        let idx = t.node(leader).propose(Command::Put { key: b"q".to_vec(), value: b"1".to_vec() }).unwrap();
+        let cmd = Command::Put { key: b"q".to_vec(), value: b"1".to_vec() };
+        let idx = t.node(leader).propose(cmd).unwrap();
         let out = t.node(leader).replicate().unwrap();
         // Deliver only to one follower.
         let follower = t.nodes.iter().map(|n| n.id).find(|&id| id != leader).unwrap();
@@ -835,14 +1203,52 @@ mod tests {
         let mut t = Trio::new("dethrone");
         let leader = t.elect();
         let term = t.node(leader).term();
-        let out = t
-            .node(leader)
-            .handle(99, Message::RequestVote { term: term + 10, candidate: 99, last_log_index: 1 << 30, last_log_term: 1 << 30 })
-            .unwrap();
+        // Let the lease lapse first (ticks with no acks delivered):
+        // a live leader inside its lease rightly withholds the vote —
+        // see `live_leader_and_fresh_follower_withhold_votes`.
+        for _ in 0..Config::default().election_timeout_min * 2 {
+            let _ = t.node(leader).tick().unwrap();
+        }
+        let vote = Message::RequestVote {
+            term: term + 10,
+            candidate: 99,
+            last_log_index: 1 << 30,
+            last_log_term: 1 << 30,
+        };
+        let out = t.node(leader).handle(99, vote).unwrap();
         assert_eq!(t.node(leader).role(), Role::Follower);
         assert_eq!(t.node(leader).term(), term + 10);
         // And it granted the vote (log was up-to-date).
         assert!(matches!(out[0].1, Message::RequestVoteResp { granted: true, .. }));
+    }
+
+    /// Lease safety: while a leader's lease is valid (and while a
+    /// follower has freshly heard from that leader), a higher-term
+    /// vote request is refused without even bumping the local term —
+    /// otherwise a new leader could commit writes inside the lease
+    /// window and lease reads would go stale.
+    #[test]
+    fn live_leader_and_fresh_follower_withhold_votes() {
+        let mut t = Trio::new("sticky");
+        let leader = t.elect();
+        t.propose_and_commit(leader, Command::Put { key: b"k".to_vec(), value: b"v".to_vec() });
+        let term = t.node(leader).term();
+        let vote = |c: u64| Message::RequestVote {
+            term: term + 1,
+            candidate: c,
+            last_log_index: 1 << 30,
+            last_log_term: 1 << 30,
+        };
+        // The leaseholder stays leader at its own term.
+        let out = t.node(leader).handle(98, vote(98)).unwrap();
+        assert!(t.node(leader).is_leader(), "deposed inside a valid lease");
+        assert_eq!(t.node(leader).term(), term);
+        assert!(matches!(out[0].1, Message::RequestVoteResp { granted: false, .. }));
+        // A follower that just heard from this leader withholds too.
+        let follower = t.nodes.iter().map(|n| n.id).find(|&id| id != leader).unwrap();
+        let out = t.node(follower).handle(98, vote(98)).unwrap();
+        assert_eq!(t.node(follower).term(), term);
+        assert!(matches!(out[0].1, Message::RequestVoteResp { granted: false, .. }));
     }
 
     #[test]
@@ -852,10 +1258,13 @@ mod tests {
         t.propose_and_commit(leader, Command::Put { key: b"x".to_vec(), value: b"y".to_vec() });
         let term = t.node(leader).term();
         // A candidate with an empty log can't win a vote from the leader.
-        let out = t
-            .node(leader)
-            .handle(77, Message::RequestVote { term: term + 1, candidate: 77, last_log_index: 0, last_log_term: 0 })
-            .unwrap();
+        let vote = Message::RequestVote {
+            term: term + 1,
+            candidate: 77,
+            last_log_index: 0,
+            last_log_term: 0,
+        };
+        let out = t.node(leader).handle(77, vote).unwrap();
         assert!(matches!(out[0].1, Message::RequestVoteResp { granted: false, .. }));
     }
 
@@ -873,7 +1282,8 @@ mod tests {
         }
         // New empty node 4 joins as the replication target of leader.
         let dir = tmpdir("snapcatch", 4);
-        let mut n4 = Node::new(4, vec![leader], &dir, MemSm::default(), Config::default(), 7).unwrap();
+        let mut n4 =
+            Node::new(4, vec![leader], &dir, MemSm::default(), Config::default(), 7).unwrap();
         // Leader tracks node 4 as far behind.
         t.node(leader).next_index.insert(4, 1);
         t.node(leader).match_index.insert(4, 0);
@@ -892,8 +1302,9 @@ mod tests {
         let mut f = Node::new(1, vec![2], &dir, MemSm::default(), Config::default(), 3).unwrap();
         // Local divergent entries at term 1.
         f.hard.term = 1;
-        f.log.append(LogEntry { term: 1, index: 1, cmd: Command::Put { key: b"a".to_vec(), value: b"old".to_vec() } }).unwrap();
-        f.log.append(LogEntry { term: 1, index: 2, cmd: Command::Put { key: b"b".to_vec(), value: b"old".to_vec() } }).unwrap();
+        let old = |key: &[u8]| Command::Put { key: key.to_vec(), value: b"old".to_vec() };
+        f.log.append(LogEntry { term: 1, index: 1, cmd: old(b"a") }).unwrap();
+        f.log.append(LogEntry { term: 1, index: 2, cmd: old(b"b") }).unwrap();
         // Leader at term 2 replicates a different index-2.
         let out = f
             .handle(
@@ -903,15 +1314,115 @@ mod tests {
                     leader: 2,
                     prev_log_index: 1,
                     prev_log_term: 1,
-                    entries: vec![LogEntry { term: 2, index: 2, cmd: Command::Put { key: b"b2".to_vec(), value: b"new".to_vec() } }],
+                    entries: vec![LogEntry {
+                        term: 2,
+                        index: 2,
+                        cmd: Command::Put { key: b"b2".to_vec(), value: b"new".to_vec() },
+                    }],
                     leader_commit: 2,
+                    seq: 1,
                 },
             )
             .unwrap();
-        assert!(matches!(out[0].1, Message::AppendEntriesResp { success: true, match_index: 2, .. }));
+        let resp = &out[0].1;
+        assert!(
+            matches!(resp, Message::AppendEntriesResp { success: true, match_index: 2, .. }),
+            "{resp:?}"
+        );
         assert_eq!(f.log.entry(2).unwrap().term, 2);
         assert_eq!(f.log.entry(2).unwrap().cmd.key(), b"b2");
         assert_eq!(f.last_applied(), 2);
+    }
+
+    #[test]
+    fn leader_read_barrier_resolves_off_the_lease() {
+        let mut t = Trio::new("leaseread");
+        let leader = t.elect();
+        t.propose_and_commit(leader, Command::Put { key: b"k".to_vec(), value: b"v".to_vec() });
+        // The commit round's acks armed the lease: a leader-side read
+        // barrier resolves instantly, with zero messages.
+        let out = t.node(leader).request_read(1).unwrap();
+        assert!(out.is_empty(), "lease read should cost zero RPCs, sent {out:?}");
+        let (ready, failed) = t.node(leader).take_read_results();
+        assert!(failed.is_empty());
+        let commit = t.node(leader).commit_index();
+        assert_eq!(ready, vec![(1, commit)]);
+        assert!(t.node(leader).metrics.lease_reads >= 1);
+    }
+
+    #[test]
+    fn follower_read_barrier_round_trips_through_leader() {
+        let mut t = Trio::new("followread");
+        let leader = t.elect();
+        t.propose_and_commit(leader, Command::Put { key: b"k".to_vec(), value: b"v".to_vec() });
+        let follower = t.nodes.iter().map(|n| n.id).find(|&id| id != leader).unwrap();
+        let out = t.node(follower).request_read(9).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, leader);
+        assert!(matches!(out[0].1, Message::ReadIndex { ctx: 9, .. }));
+        let msgs: Vec<_> = out.into_iter().map(|(dst, m)| (follower, dst, m)).collect();
+        t.pump(msgs);
+        let commit = t.node(leader).commit_index();
+        let (ready, failed) = t.node(follower).take_read_results();
+        assert!(failed.is_empty());
+        assert_eq!(ready, vec![(9, commit)]);
+    }
+
+    #[test]
+    fn read_barrier_pays_quorum_round_without_lease() {
+        let cfg = Config { lease_reads: false, ..Config::default() };
+        let mut t = Trio::with_cfg("noleaseread", cfg);
+        let leader = t.elect();
+        t.propose_and_commit(leader, Command::Put { key: b"k".to_vec(), value: b"v".to_vec() });
+        let out = t.node(leader).request_read(3).unwrap();
+        assert_eq!(out.len(), 2, "a heartbeat round to both peers");
+        // Nothing resolves until the round's echoes return.
+        assert!(t.node(leader).take_read_results().0.is_empty());
+        let msgs: Vec<_> = out.into_iter().map(|(dst, m)| (leader, dst, m)).collect();
+        t.pump(msgs);
+        let (ready, failed) = t.node(leader).take_read_results();
+        assert!(failed.is_empty());
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].0, 3);
+        assert_eq!(t.node(leader).metrics.read_index_rounds, 1);
+        assert_eq!(t.node(leader).metrics.lease_reads, 0);
+    }
+
+    #[test]
+    fn deposed_leader_fails_parked_read_barriers() {
+        let cfg = Config { lease_reads: false, ..Config::default() };
+        let mut t = Trio::with_cfg("deposeread", cfg);
+        let leader = t.elect();
+        t.propose_and_commit(leader, Command::Put { key: b"k".to_vec(), value: b"v".to_vec() });
+        // Park a barrier (its heartbeat round is never delivered), then
+        // depose the leader with a higher-term vote request.
+        let _dropped = t.node(leader).request_read(5).unwrap();
+        let term = t.node(leader).term();
+        t.node(leader)
+            .handle(
+                99,
+                Message::RequestVote {
+                    term: term + 1,
+                    candidate: 99,
+                    last_log_index: 1 << 30,
+                    last_log_term: 1 << 30,
+                },
+            )
+            .unwrap();
+        let (ready, failed) = t.node(leader).take_read_results();
+        assert!(ready.is_empty(), "a deposed leader must not hand out read indexes");
+        assert_eq!(failed, vec![5]);
+    }
+
+    #[test]
+    fn read_barrier_without_known_leader_fails_fast() {
+        let dir = tmpdir("noleader", 1);
+        let mut n = Node::new(1, vec![2, 3], &dir, MemSm::default(), Config::default(), 1).unwrap();
+        let out = n.request_read(8).unwrap();
+        assert!(out.is_empty());
+        let (ready, failed) = n.take_read_results();
+        assert!(ready.is_empty());
+        assert_eq!(failed, vec![8]);
     }
 
     #[test]
@@ -929,6 +1440,7 @@ mod tests {
                     prev_log_term: 0,
                     entries: vec![],
                     leader_commit: 0,
+                    seq: 1,
                 },
             )
             .unwrap();

@@ -101,6 +101,11 @@ pub enum Message {
         prev_log_term: Term,
         entries: Vec<LogEntry>,
         leader_commit: LogIndex,
+        /// Heartbeat round number, echoed by the follower: an ack for
+        /// round `n` proves the follower saw this leader *after* round
+        /// `n` was broadcast — the quorum-confirmation primitive behind
+        /// ReadIndex barriers and leader leases.
+        seq: u64,
     },
     AppendEntriesResp {
         term: Term,
@@ -108,6 +113,8 @@ pub enum Message {
         /// Highest index known replicated on the follower (on success),
         /// or the follower's conflict hint (on failure).
         match_index: LogIndex,
+        /// Echo of the heartbeat round being answered.
+        seq: u64,
     },
     InstallSnapshot {
         term: Term,
@@ -123,6 +130,24 @@ pub enum Message {
         term: Term,
         last_index: LogIndex,
     },
+    /// Replica → leader: ask for a linearizable read barrier.  The
+    /// leader answers with its commit index once it has confirmed its
+    /// leadership for the current term (a heartbeat quorum round, or a
+    /// still-valid lease).  `ctx` is an opaque requester-side token.
+    ReadIndex {
+        term: Term,
+        ctx: u64,
+    },
+    /// Leader → requester: the `(read_index, term)` handed out for
+    /// `ctx`.  The requester serves its read from local state once
+    /// `last_applied >= read_index`.  `ok: false` means the node asked
+    /// was not a confirmed leader — re-resolve the leader and retry.
+    ReadIndexResp {
+        term: Term,
+        ctx: u64,
+        read_index: LogIndex,
+        ok: bool,
+    },
 }
 
 impl Message {
@@ -133,7 +158,9 @@ impl Message {
             | Message::AppendEntries { term, .. }
             | Message::AppendEntriesResp { term, .. }
             | Message::InstallSnapshot { term, .. }
-            | Message::InstallSnapshotResp { term, .. } => *term,
+            | Message::InstallSnapshotResp { term, .. }
+            | Message::ReadIndex { term, .. }
+            | Message::ReadIndexResp { term, .. } => *term,
         }
     }
 
@@ -146,21 +173,36 @@ impl Message {
             Message::RequestVoteResp { term, granted } => {
                 e.u8(1).u64(*term).u8(*granted as u8);
             }
-            Message::AppendEntries { term, leader, prev_log_index, prev_log_term, entries, leader_commit } => {
-                e.u8(2).u64(*term).u64(*leader).u64(*prev_log_index).u64(*prev_log_term).u64(*leader_commit);
+            Message::AppendEntries {
+                term,
+                leader,
+                prev_log_index,
+                prev_log_term,
+                entries,
+                leader_commit,
+                seq,
+            } => {
+                e.u8(2).u64(*term).u64(*leader).u64(*prev_log_index).u64(*prev_log_term);
+                e.u64(*leader_commit).u64(*seq);
                 e.varint(entries.len() as u64);
                 for ent in entries {
                     ent.encode_into(&mut e);
                 }
             }
-            Message::AppendEntriesResp { term, success, match_index } => {
-                e.u8(3).u64(*term).u8(*success as u8).u64(*match_index);
+            Message::AppendEntriesResp { term, success, match_index, seq } => {
+                e.u8(3).u64(*term).u8(*success as u8).u64(*match_index).u64(*seq);
             }
             Message::InstallSnapshot { term, leader, last_index, last_term, data } => {
                 e.u8(4).u64(*term).u64(*leader).u64(*last_index).u64(*last_term).len_bytes(data);
             }
             Message::InstallSnapshotResp { term, last_index } => {
                 e.u8(5).u64(*term).u64(*last_index);
+            }
+            Message::ReadIndex { term, ctx } => {
+                e.u8(6).u64(*term).u64(*ctx);
+            }
+            Message::ReadIndexResp { term, ctx, read_index, ok } => {
+                e.u8(7).u64(*term).u64(*ctx).u64(*read_index).u8(*ok as u8);
             }
         }
         e.into_vec()
@@ -183,17 +225,27 @@ impl Message {
                 let prev_log_index = d.u64()?;
                 let prev_log_term = d.u64()?;
                 let leader_commit = d.u64()?;
+                let seq = d.u64()?;
                 let n = d.varint()? as usize;
                 let mut entries = Vec::with_capacity(n);
                 for _ in 0..n {
                     entries.push(LogEntry::decode(&mut d)?);
                 }
-                Message::AppendEntries { term, leader, prev_log_index, prev_log_term, entries, leader_commit }
+                Message::AppendEntries {
+                    term,
+                    leader,
+                    prev_log_index,
+                    prev_log_term,
+                    entries,
+                    leader_commit,
+                    seq,
+                }
             }
             3 => Message::AppendEntriesResp {
                 term: d.u64()?,
                 success: d.u8()? != 0,
                 match_index: d.u64()?,
+                seq: d.u64()?,
             },
             4 => Message::InstallSnapshot {
                 term: d.u64()?,
@@ -203,6 +255,13 @@ impl Message {
                 data: d.len_bytes()?.to_vec(),
             },
             5 => Message::InstallSnapshotResp { term: d.u64()?, last_index: d.u64()? },
+            6 => Message::ReadIndex { term: d.u64()?, ctx: d.u64()? },
+            7 => Message::ReadIndexResp {
+                term: d.u64()?,
+                ctx: d.u64()?,
+                read_index: d.u64()?,
+                ok: d.u8()? != 0,
+            },
             other => bail!("rpc: unknown message tag {other}"),
         })
     }
@@ -221,7 +280,12 @@ mod tests {
 
     #[test]
     fn all_variants_roundtrip() {
-        roundtrip(&Message::RequestVote { term: 5, candidate: 2, last_log_index: 10, last_log_term: 4 });
+        roundtrip(&Message::RequestVote {
+            term: 5,
+            candidate: 2,
+            last_log_index: 10,
+            last_log_term: 4,
+        });
         roundtrip(&Message::RequestVoteResp { term: 5, granted: true });
         roundtrip(&Message::AppendEntries {
             term: 7,
@@ -229,21 +293,35 @@ mod tests {
             prev_log_index: 3,
             prev_log_term: 2,
             entries: vec![
-                LogEntry { term: 7, index: 4, cmd: Command::Put { key: b"k".to_vec(), value: vec![9; 100] } },
+                LogEntry {
+                    term: 7,
+                    index: 4,
+                    cmd: Command::Put { key: b"k".to_vec(), value: vec![9; 100] },
+                },
                 LogEntry { term: 7, index: 5, cmd: Command::Delete { key: b"d".to_vec() } },
                 LogEntry { term: 7, index: 6, cmd: Command::Noop },
             ],
             leader_commit: 3,
+            seq: 11,
         });
-        roundtrip(&Message::AppendEntriesResp { term: 7, success: false, match_index: 2 });
-        roundtrip(&Message::InstallSnapshot { term: 9, leader: 3, last_index: 100, last_term: 8, data: vec![1, 2, 3] });
+        roundtrip(&Message::AppendEntriesResp { term: 7, success: false, match_index: 2, seq: 11 });
+        roundtrip(&Message::InstallSnapshot {
+            term: 9,
+            leader: 3,
+            last_index: 100,
+            last_term: 8,
+            data: vec![1, 2, 3],
+        });
         roundtrip(&Message::InstallSnapshotResp { term: 9, last_index: 100 });
+        roundtrip(&Message::ReadIndex { term: 4, ctx: 77 });
+        roundtrip(&Message::ReadIndexResp { term: 4, ctx: 77, read_index: 1234, ok: true });
+        roundtrip(&Message::ReadIndexResp { term: 5, ctx: 0, read_index: 0, ok: false });
     }
 
     #[test]
     fn random_messages_roundtrip() {
         prop::check("rpc-roundtrip", 300, |g| {
-            let m = match g.usize_in(0..4) {
+            let m = match g.usize_in(0..6) {
                 0 => Message::RequestVote {
                     term: g.u64(),
                     candidate: g.u64_in(0..8),
@@ -265,6 +343,7 @@ mod tests {
                         },
                     }),
                     leader_commit: g.u64(),
+                    seq: g.u64(),
                 },
                 2 => Message::InstallSnapshot {
                     term: g.u64(),
@@ -273,7 +352,19 @@ mod tests {
                     last_term: g.u64(),
                     data: g.bytes(0..500),
                 },
-                _ => Message::AppendEntriesResp { term: g.u64(), success: g.bool(), match_index: g.u64() },
+                3 => Message::ReadIndex { term: g.u64(), ctx: g.u64() },
+                4 => Message::ReadIndexResp {
+                    term: g.u64(),
+                    ctx: g.u64(),
+                    read_index: g.u64(),
+                    ok: g.bool(),
+                },
+                _ => Message::AppendEntriesResp {
+                    term: g.u64(),
+                    success: g.bool(),
+                    match_index: g.u64(),
+                    seq: g.u64(),
+                },
             };
             let dec = Message::decode(&m.encode()).map_err(|e| e.to_string())?;
             if dec != m {

@@ -69,7 +69,15 @@ pub struct SimNet {
 impl SimNet {
     pub fn new(cfg: NetConfig) -> Self {
         let rng = Rng::new(cfg.seed);
-        Self { cfg, rng, now_us: 0, seq: 0, queue: BinaryHeap::new(), stats: WireStats::default(), cut: Vec::new() }
+        Self {
+            cfg,
+            rng,
+            now_us: 0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            stats: WireStats::default(),
+            cut: Vec::new(),
+        }
     }
 
     pub fn now_us(&self) -> u64 {

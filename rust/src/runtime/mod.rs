@@ -73,7 +73,13 @@ impl IndexPlanner {
     }
 
     /// Run one padded batch through the compiled module.
-    fn run_batch(&self, words: &[u32], lens: &[u32], n_buckets: u32, bloom_mask: u32) -> Result<PlanBatch> {
+    fn run_batch(
+        &self,
+        words: &[u32],
+        lens: &[u32],
+        n_buckets: u32,
+        bloom_mask: u32,
+    ) -> Result<PlanBatch> {
         debug_assert_eq!(words.len(), self.batch * KEY_WORDS);
         debug_assert_eq!(lens.len(), self.batch);
         let words_lit = xla::Literal::vec1(words).reshape(&[self.batch as i64, KEY_WORDS as i64])?;

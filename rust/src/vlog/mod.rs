@@ -277,8 +277,9 @@ mod batched_tests {
     #[test]
     fn batched_read_matches_single_reads_across_epochs() {
         let dir = tmpdir("match");
-        let e0: Vec<Entry> =
-            (0..40u64).map(|i| Entry::put(1, i + 1, format!("a{i:03}"), vec![i as u8; 100])).collect();
+        let e0: Vec<Entry> = (0..40u64)
+            .map(|i| Entry::put(1, i + 1, format!("a{i:03}"), vec![i as u8; 100]))
+            .collect();
         let e1: Vec<Entry> = (0..40u64)
             .map(|i| Entry::put(2, i + 41, format!("b{i:03}"), vec![(i + 1) as u8; 100]))
             .collect();

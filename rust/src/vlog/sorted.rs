@@ -283,7 +283,8 @@ impl SortedVLog {
             let crc = u32::from_le_bytes(buf[rel + 4..rel + 8].try_into().unwrap());
             if buf.len() < rel + 8 + len {
                 // Frame crosses the buffer end: refill anchored at pos.
-                refill(&self.file, &mut buf, &mut buf_start, pos, CHUNK.max(len + 8), self.file_size)?;
+                let want = CHUNK.max(len + 8);
+                refill(&self.file, &mut buf, &mut buf_start, pos, want, self.file_size)?;
                 let rel = (pos - buf_start) as usize;
                 if buf.len() < rel + 8 + len {
                     break 'outer; // truncated file

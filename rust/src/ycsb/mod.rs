@@ -27,8 +27,14 @@ pub enum WorkloadKind {
 }
 
 impl WorkloadKind {
-    pub const ALL: [WorkloadKind; 6] =
-        [WorkloadKind::A, WorkloadKind::B, WorkloadKind::C, WorkloadKind::D, WorkloadKind::E, WorkloadKind::F];
+    pub const ALL: [WorkloadKind; 6] = [
+        WorkloadKind::A,
+        WorkloadKind::B,
+        WorkloadKind::C,
+        WorkloadKind::D,
+        WorkloadKind::E,
+        WorkloadKind::F,
+    ];
 
     pub fn name(&self) -> &'static str {
         match self {
@@ -184,7 +190,11 @@ impl Generator {
     }
 
     /// The full load sequence (insert-only).
-    pub fn load_ops(records: u64, value_size: usize, seed: u64) -> impl Iterator<Item = (Vec<u8>, Vec<u8>)> {
+    pub fn load_ops(
+        records: u64,
+        value_size: usize,
+        seed: u64,
+    ) -> impl Iterator<Item = (Vec<u8>, Vec<u8>)> {
         let mut g = Generator::new(WorkloadKind::Load, 1, value_size, seed);
         (0..records).map(move |r| (key_of(r), g.value_for(r)))
     }
@@ -202,7 +212,15 @@ mod tests {
 
     #[test]
     fn mixes_sum_to_one() {
-        for k in [WorkloadKind::Load, WorkloadKind::A, WorkloadKind::B, WorkloadKind::C, WorkloadKind::D, WorkloadKind::E, WorkloadKind::F] {
+        for k in [
+            WorkloadKind::Load,
+            WorkloadKind::A,
+            WorkloadKind::B,
+            WorkloadKind::C,
+            WorkloadKind::D,
+            WorkloadKind::E,
+            WorkloadKind::F,
+        ] {
             let (r, u, i, s, m) = k.mix();
             assert!((r + u + i + s + m - 1.0).abs() < 1e-9, "{k:?}");
         }

@@ -3,7 +3,7 @@
 //! whole-cluster crash, and engine equivalence (all seven engines
 //! agree on query results for the same committed history).
 
-use nezha::coordinator::{Cluster, ClusterConfig, ShardRouter};
+use nezha::coordinator::{Cluster, ClusterConfig, ReadConsistency, ShardRouter};
 use nezha::engine::EngineKind;
 use nezha::raft::NetConfig;
 use std::path::PathBuf;
@@ -217,6 +217,49 @@ fn shard_leader_death_leaves_other_shards_committing() {
         let want = if i < 60 { vec![7u8; 256] } else { vec![8u8; 256] };
         assert_eq!(v.as_ref(), Some(&want), "yk{i:04}");
     }
+    cluster.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite fault test (stale-read safety): a `Linearizable` read —
+/// served by *any* replica behind a ReadIndex barrier — must never
+/// return a value older than a previously acknowledged write, even
+/// across a leader kill.  A single client alternates acknowledged
+/// counter writes with reads that round-robin over the replicas; the
+/// leader is killed mid-stream.  Any stale (or lost) read shows up as
+/// a counter regression.
+#[test]
+fn linearizable_reads_never_stale_across_leader_kill() {
+    let dir = base("readidx-kill");
+    let mut c = cfg(&dir, EngineKind::Nezha, 3);
+    c.read_consistency = ReadConsistency::Linearizable;
+    let mut cluster = Cluster::start(c).unwrap();
+    let key = b"counter";
+    let read_counter = |cluster: &Cluster| -> u64 {
+        let got = cluster.get(key).unwrap().expect("acknowledged counter must be visible");
+        u64::from_be_bytes(got[..8].try_into().unwrap())
+    };
+    for v in 1..=25u64 {
+        cluster.put(key, &v.to_be_bytes()).unwrap();
+        // Single writer ⇒ a linearizable read returns exactly the
+        // last acknowledged value.
+        assert_eq!(read_counter(&cluster), v, "stale read before the fault");
+    }
+    // Kill the leader mid-stream.  Writes retry until the survivors
+    // elect; reads must keep refusing any state older than v=25.
+    let victim = cluster.shard_leader(0).unwrap();
+    cluster.kill(0, victim).unwrap();
+    assert!(read_counter(&cluster) >= 25, "read lost an acknowledged write across the kill");
+    for v in 26..=40u64 {
+        cluster.put(key, &v.to_be_bytes()).unwrap();
+        assert_eq!(read_counter(&cluster), v, "stale read after leader change");
+    }
+    let new_leader = cluster.shard_leader(0).unwrap();
+    assert_ne!(new_leader, victim, "a survivor took over");
+    // The read traffic really was spread beyond the leader.
+    let dist = cluster.read_distribution().unwrap();
+    let readers = dist.iter().filter(|(_, gets, _)| *gets > 0).count();
+    assert!(readers >= 2, "reads never left one node: {dist:?}");
     cluster.shutdown().unwrap();
     let _ = std::fs::remove_dir_all(&dir);
 }
