@@ -46,7 +46,7 @@ fn ablation_index_backend() -> anyhow::Result<()> {
             println!("parity       : OK (bit-identical h1/bucket streams)");
             println!(
                 "note         : CPU PJRT runs the Pallas kernel in interpret mode; see \
-                 DESIGN.md §Hardware-Adaptation for the real-TPU estimate"
+                 DESIGN.md §1 for the real-TPU estimate"
             );
         }
         Err(e) => println!("xla backend  : skipped ({e:#})"),

@@ -5,24 +5,34 @@
 //!
 //! Scaled workload: `load_bytes = 12 MiB * NEZHA_BENCH_SCALE` per
 //! (system, size) cell.  Run: `cargo bench --bench fig4_put`.
+//! `--transport tcp` replays the same load over real loopback sockets
+//! for the in-process vs TCP delta (DESIGN.md §2/§4); the wire line
+//! reports msgs/bytes/dropped either way.
 
 use nezha::engine::EngineKind;
 use nezha::harness::{
-    bench_scale, engines_from_env, improvement_pct, print_header, value_sizes, Env, Spec,
+    bench_scale, bench_transport, engines_from_env, improvement_pct, print_header, value_sizes,
+    Env, Spec,
 };
 
 fn main() -> anyhow::Result<()> {
     let load = ((6 << 20) as f64 * bench_scale()) as u64;
-    print_header("Figure 4: put throughput/latency vs value size");
+    let transport = bench_transport();
+    print_header(&format!(
+        "Figure 4: put throughput/latency vs value size (transport: {})",
+        transport.name()
+    ));
     let mut nezha_tp = Vec::new();
     let mut orig_tp = Vec::new();
     for vs in value_sizes() {
         for kind in engines_from_env() {
             let mut spec = Spec::new(kind, vs);
             spec.load_bytes = load;
+            spec.transport = transport;
             let env = Env::start(spec)?;
             let m = env.load(&format!("{}KB", vs >> 10))?;
             println!("{}", m.row());
+            env.print_wire_line();
             if kind == EngineKind::Nezha {
                 nezha_tp.push(m.mib_per_sec());
             }

@@ -10,12 +10,15 @@
 //! routes the same query stream across *every* replica behind
 //! ReadIndex/lease barriers (vs the default leader-only serving), so
 //! the leader-vs-follower read scaling plots share one harness.
+//! `--transport tcp` runs the same cluster over real loopback sockets
+//! and the wire line reports msgs/bytes/dropped for the in-process vs
+//! TCP delta (DESIGN.md §2/§4).
 
 use nezha::coordinator::ReadConsistency;
 use nezha::engine::EngineKind;
 use nezha::harness::{
-    bench_read_from, bench_scale, bench_shards, engines_from_env, improvement_pct, print_header,
-    print_readahead_line, read_from_label, value_sizes, Env, Spec,
+    bench_read_from, bench_scale, bench_shards, bench_transport, engines_from_env,
+    improvement_pct, print_header, print_readahead_line, read_from_label, value_sizes, Env, Spec,
 };
 
 fn main() -> anyhow::Result<()> {
@@ -23,9 +26,12 @@ fn main() -> anyhow::Result<()> {
     let gets = (400.0 * bench_scale()) as u64;
     let shards = bench_shards();
     let read_from = bench_read_from();
+    let transport = bench_transport();
     print_header(&format!(
-        "Figure 5: get throughput/latency vs value size ({shards} shard(s), reads: {})",
-        read_from_label(read_from)
+        "Figure 5: get throughput/latency vs value size ({shards} shard(s), reads: {}, \
+         transport: {})",
+        read_from_label(read_from),
+        transport.name()
     ));
     let mut nezha_tp = Vec::new();
     let mut orig_tp = Vec::new();
@@ -35,6 +41,7 @@ fn main() -> anyhow::Result<()> {
             spec.load_bytes = load;
             spec.shards = shards;
             spec.read_from = read_from;
+            spec.transport = transport;
             let env = Env::start(spec)?;
             env.load("preload")?;
             env.settle()?;
@@ -43,6 +50,7 @@ fn main() -> anyhow::Result<()> {
             // Reads land on whichever replica served them: report the
             // cluster-wide rollup, not just the leader's row.
             print_readahead_line(&env.cluster_stats()?);
+            env.print_wire_line();
             if read_from != ReadConsistency::Leader {
                 env.print_read_distribution()?;
             }

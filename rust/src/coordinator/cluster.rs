@@ -3,11 +3,14 @@
 //! A `Cluster` hosts `shards × nodes` replicas: the keyspace is
 //! partitioned by the deterministic [`ShardRouter`] recorded in
 //! [`ClusterConfig`], and each shard is an **independent Raft group**
-//! with its own [`Bus`], its own leader, its own raft ValueLog and its
-//! own engine + GC lifecycle — the Bizur-style scale-out structure on
-//! top of the paper's per-replica Nezha write path.  One thread per
-//! (shard, node); an in-process [`Bus`] per shard carries encoded Raft
-//! frames.
+//! with its own transport, its own leader, its own raft ValueLog and
+//! its own engine + GC lifecycle — the Bizur-style scale-out structure
+//! on top of the paper's per-replica Nezha write path.  One thread per
+//! (shard, node); per shard, a [`Net`] carries encoded Raft frames —
+//! the in-process [`Bus`] by default, or real TCP sockets
+//! ([`TcpNet`], `ClusterConfig::transport = TransportKind::Tcp`) so
+//! the same cluster code runs over loopback sockets in one process or
+//! across processes under `nezha serve` (DESIGN.md §2).
 //!
 //! The client handle splits `put_batch`/`get_batch` by shard, issues
 //! the per-shard sub-batches concurrently (every sub-request is in
@@ -37,7 +40,10 @@ use super::router::{merge_sorted, split_keys, split_ops, ShardId, ShardRouter};
 use crate::engine::{EngineKind, EngineOpts, EngineStats};
 use crate::gc::{GcConfig, GcOutput, GcPhase};
 use crate::raft::node::Outbox;
-use crate::raft::{Bus, Command, Config as RaftConfig, NetConfig, NodeId, Role};
+use crate::raft::{
+    Bus, Command, Config as RaftConfig, Net, NetConfig, NodeId, Role, TcpNet, TransportKind,
+    WireSnapshot,
+};
 use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
@@ -148,6 +154,11 @@ pub struct ClusterConfig {
     /// How `get`/`get_batch`/`scan` are served (see
     /// [`ReadConsistency`]); writes always go through the leader.
     pub read_consistency: ReadConsistency,
+    /// Which wire carries Raft frames between replicas: in-process
+    /// mailboxes (the default, the PR-1..4 simulation path) or real
+    /// TCP sockets over loopback.  Multi-process clusters
+    /// (`nezha serve`) always run TCP with explicit peer addresses.
+    pub transport: TransportKind,
 }
 
 impl ClusterConfig {
@@ -175,6 +186,7 @@ impl ClusterConfig {
             seed: 42,
             router: ShardRouter::hash(1),
             read_consistency: ReadConsistency::default(),
+            transport: TransportKind::default(),
             base_dir: base,
         }
     }
@@ -207,8 +219,9 @@ struct NodeThread {
 pub struct Cluster {
     cfg: ClusterConfig,
     threads: HashMap<(ShardId, NodeId), NodeThread>,
-    /// One in-process network per shard group.
-    buses: Vec<Bus>,
+    /// One network per shard group ([`Bus`] or [`TcpNet`] per
+    /// [`ClusterConfig::transport`]).
+    nets: Vec<Net>,
     /// Per-shard cached leader hint.
     leader_cache: Vec<Mutex<Option<NodeId>>>,
     /// Per-shard round-robin cursor for replica-served reads.
@@ -221,37 +234,57 @@ impl Cluster {
     pub fn start(cfg: ClusterConfig) -> Result<Self> {
         let shards = cfg.shards();
         let ids: Vec<NodeId> = (1..=cfg.nodes as u64).collect();
-        let mut buses = Vec::with_capacity(shards as usize);
+        let mut nets = Vec::with_capacity(shards as usize);
         let mut threads = HashMap::new();
         for shard in 0..shards {
-            let bus = Bus::new(cfg.net.clone());
+            let net = match cfg.transport {
+                TransportKind::Inproc => Net::Bus(Bus::new(cfg.net.clone())),
+                // Loopback TCP with OS-assigned ports; peers discover
+                // each other through the shared address map.
+                TransportKind::Tcp => Net::Tcp(TcpNet::new()),
+            };
+            // Register every node before spawning any thread so the
+            // first elections don't race listener/mailbox setup.
+            let mut mailboxes = Vec::with_capacity(ids.len());
             for &id in &ids {
+                mailboxes.push(net.register(id)?);
+            }
+            for (&id, mailbox) in ids.iter().zip(mailboxes) {
                 let peers: Vec<NodeId> = ids.iter().copied().filter(|&p| p != id).collect();
-                let mailbox = bus.register(id);
                 let mailbox2 = Arc::clone(&mailbox);
                 let (tx, rx) = mpsc::channel::<Req>();
                 let cfg2 = cfg.clone();
-                let bus2 = bus.clone();
+                let net2 = net.clone();
                 let join = std::thread::Builder::new()
                     .name(format!("nezha-s{shard}-n{id}"))
                     .spawn(move || {
-                        if let Err(e) = node_loop(id, shard, peers, cfg2, bus2, mailbox2, rx) {
+                        if let Err(e) = node_loop(id, shard, peers, cfg2, net2, mailbox2, rx) {
                             eprintln!("node {id} shard {shard} crashed: {e:#}");
                         }
                     })?;
                 threads.insert((shard, id), NodeThread { tx, mailbox, join });
             }
-            buses.push(bus);
+            nets.push(net);
         }
         let cluster = Self {
             leader_cache: (0..shards).map(|_| Mutex::new(None)).collect(),
             read_rr: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
             cfg,
             threads,
-            buses,
+            nets,
         };
         cluster.wait_for_leader(Duration::from_secs(10 * shards as u64))?;
         Ok(cluster)
+    }
+
+    /// Aggregate wire counters across every shard's transport —
+    /// msgs/bytes/dropped as counted by [`crate::raft::WireStats`].
+    pub fn wire_stats(&self) -> WireSnapshot {
+        let mut agg = WireSnapshot::default();
+        for net in &self.nets {
+            agg.absorb(net.stats());
+        }
+        agg
     }
 
     pub fn config(&self) -> &ClusterConfig {
@@ -852,11 +885,12 @@ impl Cluster {
         let _ = t.tx.send(Req::Stop);
         t.mailbox.notify();
         let _ = t.join.join();
-        // Unregister from the shard's bus: the survivors keep sending
-        // heartbeats to the dead node, and those frames must count as
-        // dropped rather than queueing forever in a mailbox nobody
-        // drains.
-        self.buses[shard as usize].unregister(id);
+        // Unregister from the shard's transport: the survivors keep
+        // sending heartbeats to the dead node, and those frames must
+        // count as dropped rather than queueing forever in a mailbox
+        // nobody drains.  Over TCP this also closes the node's
+        // listener and connections — the process-kill analogue.
+        self.nets[shard as usize].unregister(id);
         *self.leader_cache[shard as usize].lock().unwrap() = None;
         Ok(())
     }
@@ -865,14 +899,21 @@ impl Cluster {
         for t in self.threads.values() {
             let _ = t.tx.send(Req::Stop);
         }
-        for bus in &self.buses {
-            bus.shutdown();
+        for net in &self.nets {
+            net.shutdown();
         }
         for (_, t) in self.threads.drain() {
             let _ = t.join.join();
         }
         Ok(())
     }
+}
+
+/// Canonical stale-leader rejection text.  `coordinator::server`
+/// parses exactly this shape into its structured `NotLeader` client
+/// redirect (`server::parse_not_leader`) — change the two together.
+pub(crate) fn not_leader_msg(hint: Option<NodeId>) -> String {
+    format!("not leader (hint {hint:?})")
 }
 
 /// Max client write commands folded into one consensus round.
@@ -934,7 +975,7 @@ fn begin_read(
             if replica.node.is_leader() {
                 serve_read(replica, work);
             } else {
-                fail_read(work, format!("not leader (hint {:?})", replica.node.leader_hint()));
+                fail_read(work, not_leader_msg(replica.node.leader_hint()));
             }
         }
         ReadConsistency::Stale => serve_read(replica, work),
@@ -962,12 +1003,12 @@ fn fail_read(work: ReadWork, msg: String) {
     }
 }
 
-fn node_loop(
+pub(crate) fn node_loop(
     id: NodeId,
     shard: ShardId,
     peers: Vec<NodeId>,
     cfg: ClusterConfig,
-    bus: Bus,
+    net: Net,
     mailbox: Arc<crate::raft::transport::Mailbox>,
     rx: Receiver<Req>,
 ) -> Result<()> {
@@ -1008,7 +1049,7 @@ fn node_loop(
 
     let send_out = |out: Outbox| {
         for (dst, msg) in out {
-            bus.send(id, dst, &msg);
+            net.send(id, dst, &msg);
         }
     };
 
@@ -1058,7 +1099,7 @@ fn node_loop(
                 Req::PutBatch { ops, resp } => {
                     if !replica.node.is_leader() {
                         let hint = replica.node.leader_hint();
-                        let _ = resp.send(Err(anyhow!("not leader (hint {hint:?})")));
+                        let _ = resp.send(Err(anyhow!("{}", not_leader_msg(hint))));
                         continue;
                     }
                     for (k, v) in ops {
@@ -1069,7 +1110,7 @@ fn node_loop(
                 Req::Delete { key, resp } => {
                     if !replica.node.is_leader() {
                         let hint = replica.node.leader_hint();
-                        let _ = resp.send(Err(anyhow!("not leader (hint {hint:?})")));
+                        let _ = resp.send(Err(anyhow!("{}", not_leader_msg(hint))));
                         continue;
                     }
                     write_cmds.push(Command::Delete { key });
@@ -1408,6 +1449,56 @@ mod tests {
             assert!(readers >= 2, "{consistency:?} reads did not spread: {dist:?}");
             cluster.shutdown().unwrap();
         }
+    }
+
+    /// Tentpole: the same cluster over real loopback TCP sockets
+    /// answers exactly like the in-process bus — and the frames really
+    /// crossed the network stack (wire stats move).
+    #[test]
+    fn tcp_transport_put_get_scan_matches_bus() {
+        let mut c = cfg("tcp-basic", EngineKind::Nezha, 3);
+        c.transport = TransportKind::Tcp;
+        let cluster = Cluster::start(c).unwrap();
+        for i in 0..50u32 {
+            cluster.put(format!("t{i:03}").as_bytes(), format!("val{i}").as_bytes()).unwrap();
+        }
+        cluster.delete(b"t007").unwrap();
+        assert_eq!(cluster.get(b"t025").unwrap(), Some(b"val25".to_vec()));
+        assert_eq!(cluster.get(b"t007").unwrap(), None);
+        assert_eq!(cluster.get(b"nothere").unwrap(), None);
+        let rows = cluster.scan(b"t010", b"t030", 100).unwrap();
+        assert_eq!(rows.len(), 19);
+        let keys: Vec<Vec<u8>> = (0..60u32).map(|i| format!("t{i:03}").into_bytes()).collect();
+        let got = cluster.get_batch(&keys).unwrap();
+        for (i, v) in got.iter().enumerate() {
+            let want = if i == 7 || i >= 50 { None } else { Some(format!("val{i}").into_bytes()) };
+            assert_eq!(*v, want, "t{i:03}");
+        }
+        let wire = cluster.wire_stats();
+        assert!(wire.msgs > 0 && wire.bytes > 0, "no frames crossed TCP: {wire:?}");
+        cluster.shutdown().unwrap();
+    }
+
+    /// A 2-shard TCP cluster: two independent raft groups, each over
+    /// its own sockets, splitting and merging batches transparently.
+    #[test]
+    fn tcp_transport_two_shards() {
+        let mut c = sharded("tcp-shard2", EngineKind::Nezha, 3, 2);
+        c.transport = TransportKind::Tcp;
+        let cluster = Cluster::start(c).unwrap();
+        let ops: Vec<(Vec<u8>, Vec<u8>)> = (0..60u32)
+            .map(|i| (format!("u{i:03}").into_bytes(), format!("v{i}").into_bytes()))
+            .collect();
+        cluster.put_batch(ops).unwrap();
+        let keys: Vec<Vec<u8>> = (0..60u32).map(|i| format!("u{i:03}").into_bytes()).collect();
+        let got = cluster.get_batch(&keys).unwrap();
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v, Some(format!("v{i}").into_bytes()), "u{i:03}");
+        }
+        let rows = cluster.scan(b"u000", b"u999", 1000).unwrap();
+        assert_eq!(rows.len(), 60);
+        assert!(rows.windows(2).all(|w| w[0].0 < w[1].0), "merged scan out of order");
+        cluster.shutdown().unwrap();
     }
 
     /// Each shard group elects its own (preferentially rotated)

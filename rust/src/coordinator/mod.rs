@@ -9,12 +9,19 @@
 //!   group-commit batching, concurrent cross-shard fan-out, a
 //!   [`cluster::ReadConsistency`] knob routing reads across *all*
 //!   replicas (ReadIndex/lease barriers for linearizable follower
-//!   reads), and a blocking client API.
+//!   reads), and a blocking client API.  The shard groups run over an
+//!   in-process bus or real TCP sockets
+//!   (`ClusterConfig::transport` — DESIGN.md §2).
+//! * [`server`] — the multi-process deployment: one [`server::Server`]
+//!   per process hosting one node's replica of every shard
+//!   (`nezha serve`), plus the framed TCP [`server::Client`].
 
 pub mod cluster;
 pub mod replica;
 pub mod router;
+pub mod server;
 
 pub use cluster::{shard_dir, Cluster, ClusterConfig, ReadConsistency, Status};
 pub use replica::Replica;
 pub use router::{ShardId, ShardRouter};
+pub use server::{Client, Server, ServerOpts, StatusRow};

@@ -1,0 +1,934 @@
+//! Multi-process cluster runtime (`nezha serve`) and the thin TCP
+//! client that talks to it.
+//!
+//! One [`Server`] per process hosts **one node's replica of every
+//! shard group** — the deployment shape of the paper's evaluation
+//! cluster (DESIGN.md §2).  Raft frames travel over [`TcpNet`] with a
+//! fixed peer address map; clients speak a tiny length-prefixed
+//! CRC-framed request protocol ([`ClientMsg`]/[`ClientResp`]) on a
+//! separate listener.
+//!
+//! **Port convention.**  The `--peers` list names every node's
+//! *client* address; node `n`'s raft listener for shard `s` binds the
+//! same host at `client_port + 1 + s`.  A 3-node, 2-shard cluster on
+//! one machine therefore spans ports 7100..=7102, 7200..=7202,
+//! 7300..=7302 for peers `1=127.0.0.1:7100,2=127.0.0.1:7200,
+//! 3=127.0.0.1:7300`.
+//!
+//! **Routing.**  The server is deliberately dumb: it serves a request
+//! from its *local* replica of the routed shard and answers
+//! [`ClientResp::NotLeader`] when that replica cannot (writes, or
+//! leader-consistency reads, on a follower).  The [`Client`] owns the
+//! retry loop: it caches a leader guess per shard, follows hints, and
+//! walks the membership when a node is unreachable — the same policy
+//! as the in-process `Cluster` handle, minus the fan-out parallelism
+//! (it is a *thin* client).
+
+use super::cluster::{node_loop, ClusterConfig, ReadConsistency, Req, Status};
+use super::router::{merge_sorted, split_keys, ShardId, ShardRouter};
+use crate::raft::transport::tcp::{frame_encode, frame_parse, TcpNet};
+use crate::raft::transport::{Mailbox, Net, WireSnapshot};
+use crate::raft::NodeId;
+use crate::util::{Decoder, Encoder};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::hash_map::Entry;
+use std::collections::{BTreeMap, HashMap};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long a server-side request may sit in a shard replica before
+/// the handler gives up and the client retries elsewhere.
+const SERVER_REQ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Client-side budget for one logical operation across all its
+/// retries (leader moves, node restarts).  Checked *between*
+/// attempts: a single in-flight round-trip against a wedged-but-alive
+/// server can extend the total by up to the server-side timeout.
+const CLIENT_OP_DEADLINE: Duration = Duration::from_secs(20);
+
+/// The raft listener for shard `s` of a node whose client address is
+/// `addr` (see the module docs' port convention).
+pub fn raft_addr(addr: SocketAddr, shard: ShardId) -> SocketAddr {
+    SocketAddr::new(addr.ip(), addr.port() + 1 + shard as u16)
+}
+
+// ---------------------------------------------------------------------
+// Client protocol
+// ---------------------------------------------------------------------
+
+/// One client request (framed like raft traffic: `len ∥ crc ∥ body`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClientMsg {
+    Put { key: Vec<u8>, value: Vec<u8> },
+    Delete { key: Vec<u8> },
+    Get { key: Vec<u8> },
+    /// Batched point read; the thin client pre-splits batches by
+    /// shard, but the server re-routes defensively.
+    MultiGet { keys: Vec<Vec<u8>> },
+    /// Range scan over **one** shard (the client fans out and k-way
+    /// merges, exactly like the in-process cluster handle).
+    Scan { shard: ShardId, start: Vec<u8>, end: Vec<u8>, limit: u64 },
+    /// This node's per-shard status rows.
+    Status,
+}
+
+impl ClientMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        match self {
+            ClientMsg::Put { key, value } => {
+                e.u8(0).len_bytes(key).len_bytes(value);
+            }
+            ClientMsg::Delete { key } => {
+                e.u8(1).len_bytes(key);
+            }
+            ClientMsg::Get { key } => {
+                e.u8(2).len_bytes(key);
+            }
+            ClientMsg::MultiGet { keys } => {
+                e.u8(3).varint(keys.len() as u64);
+                for k in keys {
+                    e.len_bytes(k);
+                }
+            }
+            ClientMsg::Scan { shard, start, end, limit } => {
+                e.u8(4).u32(*shard).len_bytes(start).len_bytes(end).u64(*limit);
+            }
+            ClientMsg::Status => {
+                e.u8(5);
+            }
+        }
+        e.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut d = Decoder::new(buf);
+        Ok(match d.u8()? {
+            0 => ClientMsg::Put { key: d.len_bytes()?.to_vec(), value: d.len_bytes()?.to_vec() },
+            1 => ClientMsg::Delete { key: d.len_bytes()?.to_vec() },
+            2 => ClientMsg::Get { key: d.len_bytes()?.to_vec() },
+            3 => {
+                let n = d.varint()? as usize;
+                let mut keys = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    keys.push(d.len_bytes()?.to_vec());
+                }
+                ClientMsg::MultiGet { keys }
+            }
+            4 => ClientMsg::Scan {
+                shard: d.u32()?,
+                start: d.len_bytes()?.to_vec(),
+                end: d.len_bytes()?.to_vec(),
+                limit: d.u64()?,
+            },
+            5 => ClientMsg::Status,
+            other => bail!("client msg: unknown tag {other}"),
+        })
+    }
+}
+
+/// One row of [`ClientResp::Status`]: this node's view of one shard.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StatusRow {
+    pub shard: ShardId,
+    pub role: String,
+    pub term: u64,
+    pub last_applied: u64,
+    pub leader_hint: Option<NodeId>,
+}
+
+/// Server answer to a [`ClientMsg`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClientResp {
+    /// Write acknowledged (committed + applied on the shard leader).
+    Ok,
+    Value(Option<Vec<u8>>),
+    Values(Vec<Option<Vec<u8>>>),
+    Rows(Vec<(Vec<u8>, Vec<u8>)>),
+    Status(Vec<StatusRow>),
+    /// The contacted replica cannot serve this request for `shard`;
+    /// retry at `hint` (or walk the membership if `None`).
+    NotLeader { shard: ShardId, hint: Option<NodeId> },
+    Err(String),
+}
+
+fn encode_opt(e: &mut Encoder, v: &Option<Vec<u8>>) {
+    match v {
+        Some(b) => {
+            e.u8(1).len_bytes(b);
+        }
+        None => {
+            e.u8(0);
+        }
+    }
+}
+
+fn decode_opt(d: &mut Decoder) -> Result<Option<Vec<u8>>> {
+    Ok(match d.u8()? {
+        0 => None,
+        _ => Some(d.len_bytes()?.to_vec()),
+    })
+}
+
+impl ClientResp {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        match self {
+            ClientResp::Ok => {
+                e.u8(0);
+            }
+            ClientResp::Value(v) => {
+                e.u8(1);
+                encode_opt(&mut e, v);
+            }
+            ClientResp::Values(vs) => {
+                e.u8(2).varint(vs.len() as u64);
+                for v in vs {
+                    encode_opt(&mut e, v);
+                }
+            }
+            ClientResp::Rows(rows) => {
+                e.u8(3).varint(rows.len() as u64);
+                for (k, v) in rows {
+                    e.len_bytes(k).len_bytes(v);
+                }
+            }
+            ClientResp::Status(rows) => {
+                e.u8(4).varint(rows.len() as u64);
+                for r in rows {
+                    e.u32(r.shard).len_bytes(r.role.as_bytes()).u64(r.term).u64(r.last_applied);
+                    e.u64(r.leader_hint.map_or(0, |h| h + 1));
+                }
+            }
+            ClientResp::NotLeader { shard, hint } => {
+                e.u8(5).u32(*shard).u64(hint.map_or(0, |h| h + 1));
+            }
+            ClientResp::Err(msg) => {
+                e.u8(6).len_bytes(msg.as_bytes());
+            }
+        }
+        e.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut d = Decoder::new(buf);
+        Ok(match d.u8()? {
+            0 => ClientResp::Ok,
+            1 => ClientResp::Value(decode_opt(&mut d)?),
+            2 => {
+                let n = d.varint()? as usize;
+                let mut vs = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    vs.push(decode_opt(&mut d)?);
+                }
+                ClientResp::Values(vs)
+            }
+            3 => {
+                let n = d.varint()? as usize;
+                let mut rows = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    rows.push((d.len_bytes()?.to_vec(), d.len_bytes()?.to_vec()));
+                }
+                ClientResp::Rows(rows)
+            }
+            4 => {
+                let n = d.varint()? as usize;
+                let mut rows = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    let shard = d.u32()?;
+                    let role = String::from_utf8_lossy(d.len_bytes()?).into_owned();
+                    let term = d.u64()?;
+                    let last_applied = d.u64()?;
+                    let hint = d.u64()?;
+                    rows.push(StatusRow {
+                        shard,
+                        role,
+                        term,
+                        last_applied,
+                        leader_hint: hint.checked_sub(1),
+                    });
+                }
+                ClientResp::Status(rows)
+            }
+            5 => {
+                let shard = d.u32()?;
+                let hint = d.u64()?;
+                ClientResp::NotLeader { shard, hint: hint.checked_sub(1) }
+            }
+            6 => ClientResp::Err(String::from_utf8_lossy(d.len_bytes()?).into_owned()),
+            other => bail!("client resp: unknown tag {other}"),
+        })
+    }
+}
+
+/// Lift a replica rejection of the form `"not leader (hint Some(2))"`
+/// into a structured redirect; returns `None` for every other error.
+/// The shape is single-sourced in `cluster::not_leader_msg` — the two
+/// functions form one contract and must change together (pinned by
+/// the tests below).
+fn parse_not_leader(msg: &str) -> Option<Option<NodeId>> {
+    let rest = msg.split("not leader (hint ").nth(1)?;
+    if let Some(num) = rest.strip_prefix("Some(") {
+        let digits: String = num.chars().take_while(|c| c.is_ascii_digit()).collect();
+        return digits.parse().ok().map(Some);
+    }
+    rest.starts_with("None").then_some(None)
+}
+
+/// Read one frame off a client connection.  `Ok(None)` means the peer
+/// closed (or the server is shutting down); `Err` means the stream is
+/// corrupt, or `deadline` passed, and the connection must be dropped.
+/// The stream needs a read timeout set so the loop can poll `closed`
+/// and `deadline`.
+fn read_frame(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    closed: &AtomicBool,
+    deadline: Option<Instant>,
+) -> Result<Option<Vec<u8>>> {
+    let mut chunk = vec![0u8; 16 << 10];
+    loop {
+        if let Some((payload, used)) = frame_parse(buf)? {
+            buf.drain(..used);
+            return Ok(Some(payload));
+        }
+        if closed.load(Ordering::Relaxed) {
+            return Ok(None);
+        }
+        if deadline.is_some_and(|d| Instant::now() > d) {
+            bail!("response timed out");
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok(None),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------
+
+/// Configuration for one `nezha serve` process.
+#[derive(Clone)]
+pub struct ServerOpts {
+    /// Which node this process is.
+    pub node: NodeId,
+    /// Every node's **client** address (raft listeners derive from it
+    /// — see the module docs).  Node ids must be `1..=len`.
+    pub peers: BTreeMap<NodeId, SocketAddr>,
+    /// Engine/raft/GC knobs + data dir + shard router.  `nodes` and
+    /// `transport` are derived from `peers`/TCP and need not be set.
+    pub cluster: ClusterConfig,
+}
+
+/// Cloned into each client-connection handler thread.
+#[derive(Clone)]
+struct ShardPorts {
+    txs: Vec<Sender<Req>>,
+    doorbells: Vec<Arc<Mailbox>>,
+}
+
+struct ServerShared {
+    router: ShardRouter,
+    consistency: ReadConsistency,
+    closed: AtomicBool,
+}
+
+/// A running `nezha serve` process: this node's replica of every
+/// shard, raft over [`TcpNet`], plus the client-protocol listener.
+pub struct Server {
+    node: NodeId,
+    client_addr: SocketAddr,
+    shared: Arc<ServerShared>,
+    ports: ShardPorts,
+    nets: Vec<TcpNet>,
+    node_joins: Vec<JoinHandle<()>>,
+    accept_join: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn start(opts: ServerOpts) -> Result<Self> {
+        let ServerOpts { node, peers, mut cluster } = opts;
+        let n = peers.len();
+        if n == 0 {
+            bail!("serve: empty peer list");
+        }
+        let ids: Vec<NodeId> = peers.keys().copied().collect();
+        if ids != (1..=n as u64).collect::<Vec<_>>() {
+            bail!("serve: node ids must be 1..={n}, got {ids:?}");
+        }
+        let me = *peers.get(&node).ok_or_else(|| anyhow!("serve: node {node} not in peers"))?;
+        cluster.nodes = n;
+        cluster.transport = crate::raft::TransportKind::Tcp;
+        let shards = cluster.shards();
+        let mut nets = Vec::with_capacity(shards as usize);
+        let mut txs = Vec::with_capacity(shards as usize);
+        let mut doorbells = Vec::with_capacity(shards as usize);
+        let mut node_joins = Vec::with_capacity(shards as usize);
+        for shard in 0..shards {
+            let raft_peers: HashMap<NodeId, SocketAddr> =
+                peers.iter().map(|(&id, &addr)| (id, raft_addr(addr, shard))).collect();
+            let net = TcpNet::with_peers(raft_peers);
+            let mailbox = net.register(node)?;
+            let (tx, rx) = mpsc::channel::<Req>();
+            let others: Vec<NodeId> = ids.iter().copied().filter(|&p| p != node).collect();
+            let cfg2 = cluster.clone();
+            let net2 = Net::Tcp(net.clone());
+            let mailbox2 = Arc::clone(&mailbox);
+            let join = std::thread::Builder::new()
+                .name(format!("nezha-serve-s{shard}"))
+                .spawn(move || {
+                    if let Err(e) = node_loop(node, shard, others, cfg2, net2, mailbox2, rx) {
+                        eprintln!("node {node} shard {shard} crashed: {e:#}");
+                    }
+                })?;
+            nets.push(net);
+            txs.push(tx);
+            doorbells.push(mailbox);
+            node_joins.push(join);
+        }
+        let shared = Arc::new(ServerShared {
+            router: cluster.router.clone(),
+            consistency: cluster.read_consistency,
+            closed: AtomicBool::new(false),
+        });
+        let ports = ShardPorts { txs, doorbells };
+        let listener = TcpListener::bind(me).with_context(|| format!("serve: bind {me}"))?;
+        let client_addr = listener.local_addr()?;
+        let accept_join = {
+            let shared = Arc::clone(&shared);
+            let ports = ports.clone();
+            std::thread::Builder::new()
+                .name("nezha-client-accept".into())
+                .spawn(move || client_accept_loop(listener, shared, ports))?
+        };
+        Ok(Self {
+            node,
+            client_addr,
+            shared,
+            ports,
+            nets,
+            node_joins,
+            accept_join: Some(accept_join),
+        })
+    }
+
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+
+    /// Where this process accepts client connections.
+    pub fn client_addr(&self) -> SocketAddr {
+        self.client_addr
+    }
+
+    /// Aggregate raft wire counters across this node's shard nets.
+    pub fn wire_stats(&self) -> WireSnapshot {
+        let mut agg = WireSnapshot::default();
+        for net in &self.nets {
+            agg.absorb(net.stats().snapshot());
+        }
+        agg
+    }
+
+    /// This node's per-shard status rows (the same data `Status`
+    /// requests serve remotely).
+    pub fn status(&self) -> Vec<StatusRow> {
+        status_rows(&self.ports)
+    }
+
+    /// Graceful stop: finish in-flight GC, close sockets, join
+    /// threads.  The killed-process fault case needs no cooperation —
+    /// peers see connection resets and their frames count dropped.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shared.closed.store(true, Ordering::Relaxed);
+        for (tx, bell) in self.ports.txs.iter().zip(&self.ports.doorbells) {
+            let _ = tx.send(Req::Stop);
+            bell.notify();
+        }
+        for j in self.node_joins.drain(..) {
+            let _ = j.join();
+        }
+        for net in &self.nets {
+            net.shutdown();
+        }
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+        Ok(())
+    }
+}
+
+fn client_accept_loop(listener: TcpListener, shared: Arc<ServerShared>, ports: ShardPorts) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    loop {
+        if shared.closed.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let shared = Arc::clone(&shared);
+                let ports = ports.clone();
+                let _ = std::thread::Builder::new()
+                    .name("nezha-client-conn".into())
+                    .spawn(move || client_conn_loop(stream, shared, ports));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+fn client_conn_loop(mut stream: TcpStream, shared: Arc<ServerShared>, ports: ShardPorts) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let mut buf = Vec::new();
+    loop {
+        match read_frame(&mut stream, &mut buf, &shared.closed, None) {
+            Ok(Some(payload)) => {
+                let resp = match ClientMsg::decode(&payload) {
+                    Ok(msg) => handle_client_msg(&shared, &ports, msg),
+                    Err(e) => ClientResp::Err(format!("bad request: {e:#}")),
+                };
+                if stream.write_all(&frame_encode(&resp.encode())).is_err() {
+                    return;
+                }
+            }
+            Ok(None) | Err(_) => return,
+        }
+    }
+}
+
+/// Send one request into a local shard replica and await its answer.
+fn ask<T>(
+    ports: &ShardPorts,
+    shard: usize,
+    make: impl FnOnce(SyncSender<Result<T>>) -> Req,
+) -> Result<T> {
+    let (tx, rx) = mpsc::sync_channel(1);
+    ports.txs[shard].send(make(tx)).map_err(|_| anyhow!("shard {shard} stopped"))?;
+    ports.doorbells[shard].notify();
+    rx.recv_timeout(SERVER_REQ_TIMEOUT).map_err(|_| anyhow!("shard {shard} request timed out"))?
+}
+
+/// Map a replica-level result onto the wire: stale-leader rejections
+/// become structured redirects, other failures become `Err`.
+fn finish<T>(shard: usize, r: Result<T>, ok: impl FnOnce(T) -> ClientResp) -> ClientResp {
+    match r {
+        Ok(v) => ok(v),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            match parse_not_leader(&msg) {
+                Some(hint) => ClientResp::NotLeader { shard: shard as ShardId, hint },
+                None => ClientResp::Err(msg),
+            }
+        }
+    }
+}
+
+/// One row per shard, *always* — clients derive the cluster's shard
+/// count from this list's length, so a wedged replica yields a
+/// placeholder row rather than a shorter answer.
+fn status_rows(ports: &ShardPorts) -> Vec<StatusRow> {
+    let mut rows = Vec::with_capacity(ports.txs.len());
+    for shard in 0..ports.txs.len() {
+        let (tx, rx) = mpsc::sync_channel::<Status>(1);
+        let mut answered = None;
+        if ports.txs[shard].send(Req::Status { resp: tx }).is_ok() {
+            ports.doorbells[shard].notify();
+            answered = rx.recv_timeout(SERVER_REQ_TIMEOUT).ok();
+        }
+        rows.push(match answered {
+            Some(st) => StatusRow {
+                shard: shard as ShardId,
+                role: format!("{:?}", st.role),
+                term: st.term,
+                last_applied: st.last_applied,
+                leader_hint: st.leader_hint,
+            },
+            None => StatusRow {
+                shard: shard as ShardId,
+                role: "Unreachable".into(),
+                term: 0,
+                last_applied: 0,
+                leader_hint: None,
+            },
+        });
+    }
+    rows
+}
+
+fn handle_client_msg(shared: &ServerShared, ports: &ShardPorts, msg: ClientMsg) -> ClientResp {
+    let consistency = shared.consistency;
+    match msg {
+        ClientMsg::Put { key, value } => {
+            let shard = shared.router.route(&key) as usize;
+            let r = ask(ports, shard, |tx| Req::PutBatch { ops: vec![(key, value)], resp: tx });
+            finish(shard, r, |()| ClientResp::Ok)
+        }
+        ClientMsg::Delete { key } => {
+            let shard = shared.router.route(&key) as usize;
+            let r = ask(ports, shard, |tx| Req::Delete { key, resp: tx });
+            finish(shard, r, |()| ClientResp::Ok)
+        }
+        ClientMsg::Get { key } => {
+            let shard = shared.router.route(&key) as usize;
+            let r = ask(ports, shard, |tx| Req::Get { key, consistency, resp: tx });
+            finish(shard, r, ClientResp::Value)
+        }
+        ClientMsg::MultiGet { keys } => {
+            // Defensive re-split: the thin client sends single-shard
+            // batches, but any mix still answers correctly.
+            let (per, slots) = split_keys(&shared.router, &keys);
+            let mut per_out: Vec<Vec<Option<Vec<u8>>>> = per.iter().map(|_| Vec::new()).collect();
+            for (shard, list) in per.into_iter().enumerate() {
+                if list.is_empty() {
+                    continue;
+                }
+                let r = ask(ports, shard, |tx| Req::MultiGet { keys: list, consistency, resp: tx });
+                match r {
+                    Ok(vs) => per_out[shard] = vs,
+                    Err(e) => return finish(shard, Err(e), |_: ()| ClientResp::Ok),
+                }
+            }
+            ClientResp::Values(slots.into_iter().map(|(s, p)| per_out[s][p].take()).collect())
+        }
+        ClientMsg::Scan { shard, start, end, limit } => {
+            let shard = shard as usize;
+            if shard >= ports.txs.len() {
+                return ClientResp::Err(format!("no shard {shard}"));
+            }
+            let r = ask(ports, shard, |tx| Req::Scan {
+                start,
+                end,
+                limit: limit as usize,
+                consistency,
+                resp: tx,
+            });
+            finish(shard, r, ClientResp::Rows)
+        }
+        ClientMsg::Status => ClientResp::Status(status_rows(ports)),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Thin client
+// ---------------------------------------------------------------------
+
+/// Blocking single-connection-per-node client for `nezha serve`
+/// clusters: routes by shard, caches a per-shard leader guess, and
+/// retries across the membership on redirects/failures.
+pub struct Client {
+    peers: BTreeMap<NodeId, SocketAddr>,
+    router: ShardRouter,
+    conns: HashMap<NodeId, (TcpStream, Vec<u8>)>,
+    leaders: HashMap<ShardId, NodeId>,
+    /// Shard count confirmed against a live server (`None` until the
+    /// first scan's discovery round-trip).
+    discovered_shards: Option<u32>,
+    rr: usize,
+}
+
+impl Client {
+    /// `peers` is the same node → client-address map the servers were
+    /// started with; `shards` should match the cluster's router.  A
+    /// mismatch is tolerated: key-addressed ops are re-routed
+    /// authoritatively by the servers, and scans validate the real
+    /// shard count against a live node before fanning out.
+    pub fn connect(peers: BTreeMap<NodeId, SocketAddr>, shards: u32) -> Self {
+        Self {
+            peers,
+            router: ShardRouter::hash(shards),
+            conns: HashMap::new(),
+            leaders: HashMap::new(),
+            discovered_shards: None,
+            rr: 0,
+        }
+    }
+
+    pub fn shards(&self) -> u32 {
+        self.router.shards()
+    }
+
+    /// The cluster's true shard count, discovered from the first
+    /// reachable node's status rows and cached.  Guards scan fan-out
+    /// against a mis-specified `--shards` (which would otherwise
+    /// silently truncate results); on mismatch the client's router is
+    /// realigned too.
+    fn cluster_shards(&mut self) -> Result<u32> {
+        if let Some(n) = self.discovered_shards {
+            return Ok(n);
+        }
+        let nodes: Vec<NodeId> = self.peers.keys().copied().collect();
+        let mut last_err: Option<anyhow::Error> = None;
+        for node in nodes {
+            match self.call(node, &ClientMsg::Status) {
+                Ok(ClientResp::Status(rows)) if !rows.is_empty() => {
+                    let n = rows.len() as u32;
+                    if n != self.router.shards() {
+                        self.router = ShardRouter::hash(n);
+                        self.leaders.clear();
+                    }
+                    self.discovered_shards = Some(n);
+                    return Ok(n);
+                }
+                Ok(other) => last_err = Some(anyhow!("unexpected status response: {other:?}")),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow!("no peers to discover the shard count from")))
+    }
+
+    /// One framed request/response round-trip against a specific node.
+    fn call(&mut self, node: NodeId, msg: &ClientMsg) -> Result<ClientResp> {
+        let addr = *self.peers.get(&node).ok_or_else(|| anyhow!("unknown node {node}"))?;
+        if let Entry::Vacant(slot) = self.conns.entry(node) {
+            let stream = TcpStream::connect_timeout(&addr, Duration::from_millis(500))
+                .with_context(|| format!("connect node {node} at {addr}"))?;
+            let _ = stream.set_nodelay(true);
+            stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+            stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+            slot.insert((stream, Vec::new()));
+        }
+        let (stream, buf) = self.conns.get_mut(&node).expect("just inserted");
+        let r = (|| -> Result<ClientResp> {
+            stream.write_all(&frame_encode(&msg.encode()))?;
+            let deadline = Instant::now() + SERVER_REQ_TIMEOUT + Duration::from_secs(5);
+            let never = AtomicBool::new(false);
+            match read_frame(stream, buf, &never, Some(deadline))? {
+                Some(payload) => ClientResp::decode(&payload),
+                None => bail!("node {node} closed the connection"),
+            }
+        })();
+        if r.is_err() {
+            // Drop the (possibly desynced) connection; the retry loop
+            // dials fresh.
+            self.conns.remove(&node);
+        }
+        r
+    }
+
+    /// Issue `msg` for `shard`, following redirects and walking the
+    /// membership until it answers or the op deadline lapses.
+    fn shard_call(&mut self, shard: ShardId, msg: &ClientMsg) -> Result<ClientResp> {
+        let nodes: Vec<NodeId> = self.peers.keys().copied().collect();
+        let deadline = Instant::now() + CLIENT_OP_DEADLINE;
+        let mut target = self.leaders.get(&shard).copied().unwrap_or_else(|| {
+            self.rr += 1;
+            nodes[self.rr % nodes.len()]
+        });
+        let mut last_err: Option<anyhow::Error> = None;
+        loop {
+            if Instant::now() > deadline {
+                let detail = last_err.map_or_else(String::new, |e| format!(": {e:#}"));
+                bail!("shard {shard} request exhausted its retry budget{detail}");
+            }
+            match self.call(target, msg) {
+                Ok(ClientResp::NotLeader { hint, .. }) => {
+                    self.leaders.remove(&shard);
+                    target = match hint.filter(|h| self.peers.contains_key(h)) {
+                        Some(h) if h != target => h,
+                        _ => {
+                            self.rr += 1;
+                            nodes[self.rr % nodes.len()]
+                        }
+                    };
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Ok(ClientResp::Err(msg_text)) => {
+                    self.leaders.remove(&shard);
+                    last_err = Some(anyhow!("{msg_text}"));
+                    self.rr += 1;
+                    target = nodes[self.rr % nodes.len()];
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Ok(resp) => {
+                    // Writes only succeed at the leader; remember it.
+                    if matches!(msg, ClientMsg::Put { .. } | ClientMsg::Delete { .. }) {
+                        self.leaders.insert(shard, target);
+                    }
+                    return Ok(resp);
+                }
+                Err(e) => {
+                    self.leaders.remove(&shard);
+                    last_err = Some(e);
+                    self.rr += 1;
+                    target = nodes[self.rr % nodes.len()];
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    pub fn put(&mut self, key: &[u8], value: &[u8]) -> Result<()> {
+        let shard = self.router.route(key);
+        let msg = ClientMsg::Put { key: key.to_vec(), value: value.to_vec() };
+        match self.shard_call(shard, &msg)? {
+            ClientResp::Ok => Ok(()),
+            other => bail!("unexpected put response: {other:?}"),
+        }
+    }
+
+    pub fn delete(&mut self, key: &[u8]) -> Result<()> {
+        let shard = self.router.route(key);
+        let msg = ClientMsg::Delete { key: key.to_vec() };
+        match self.shard_call(shard, &msg)? {
+            ClientResp::Ok => Ok(()),
+            other => bail!("unexpected delete response: {other:?}"),
+        }
+    }
+
+    pub fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        let shard = self.router.route(key);
+        let msg = ClientMsg::Get { key: key.to_vec() };
+        match self.shard_call(shard, &msg)? {
+            ClientResp::Value(v) => Ok(v),
+            other => bail!("unexpected get response: {other:?}"),
+        }
+    }
+
+    /// Batched point read in input order (split by shard client-side,
+    /// one round-trip per involved shard).
+    pub fn get_batch(&mut self, keys: &[Vec<u8>]) -> Result<Vec<Option<Vec<u8>>>> {
+        if keys.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (per, slots) = split_keys(&self.router, keys);
+        let mut per_out: Vec<Vec<Option<Vec<u8>>>> = per.iter().map(|_| Vec::new()).collect();
+        for (shard, list) in per.into_iter().enumerate() {
+            if list.is_empty() {
+                continue;
+            }
+            let n = list.len();
+            let msg = ClientMsg::MultiGet { keys: list };
+            match self.shard_call(shard as ShardId, &msg)? {
+                ClientResp::Values(vs) if vs.len() == n => per_out[shard] = vs,
+                other => bail!("unexpected multi-get response: {other:?}"),
+            }
+        }
+        Ok(slots.into_iter().map(|(s, p)| per_out[s][p].take()).collect())
+    }
+
+    /// Range scan `[start, end)` up to `limit` rows: one sub-scan per
+    /// shard (the shard count is confirmed against a live server, so
+    /// a wrong client-side `--shards` cannot silently truncate the
+    /// result), k-way merged by key.
+    pub fn scan(
+        &mut self,
+        start: &[u8],
+        end: &[u8],
+        limit: usize,
+    ) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        let shards = self.cluster_shards()?;
+        let mut per = Vec::with_capacity(shards as usize);
+        for shard in 0..shards {
+            let msg = ClientMsg::Scan {
+                shard,
+                start: start.to_vec(),
+                end: end.to_vec(),
+                limit: limit as u64,
+            };
+            match self.shard_call(shard, &msg)? {
+                ClientResp::Rows(rows) => per.push(rows),
+                other => bail!("unexpected scan response: {other:?}"),
+            }
+        }
+        Ok(merge_sorted(per, limit))
+    }
+
+    /// One node's per-shard status rows.
+    pub fn status(&mut self, node: NodeId) -> Result<Vec<StatusRow>> {
+        match self.call(node, &ClientMsg::Status)? {
+            ClientResp::Status(rows) => Ok(rows),
+            other => bail!("unexpected status response: {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_msg_roundtrip() {
+        let msgs = [
+            ClientMsg::Put { key: b"k".to_vec(), value: vec![7; 300] },
+            ClientMsg::Delete { key: b"gone".to_vec() },
+            ClientMsg::Get { key: b"".to_vec() },
+            ClientMsg::MultiGet { keys: vec![b"a".to_vec(), b"bb".to_vec(), Vec::new()] },
+            ClientMsg::Scan {
+                shard: 3,
+                start: b"a".to_vec(),
+                end: b"z".to_vec(),
+                limit: u64::MAX,
+            },
+            ClientMsg::Status,
+        ];
+        for m in &msgs {
+            assert_eq!(&ClientMsg::decode(&m.encode()).unwrap(), m);
+        }
+        assert!(ClientMsg::decode(&[99]).is_err());
+        assert!(ClientMsg::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn client_resp_roundtrip() {
+        let resps = [
+            ClientResp::Ok,
+            ClientResp::Value(None),
+            ClientResp::Value(Some(vec![1, 2, 3])),
+            ClientResp::Values(vec![None, Some(b"x".to_vec()), Some(Vec::new())]),
+            ClientResp::Rows(vec![(b"k".to_vec(), b"v".to_vec()), (Vec::new(), Vec::new())]),
+            ClientResp::Status(vec![StatusRow {
+                shard: 1,
+                role: "Leader".into(),
+                term: 9,
+                last_applied: 1234,
+                leader_hint: Some(2),
+            }]),
+            ClientResp::NotLeader { shard: 0, hint: Some(3) },
+            ClientResp::NotLeader { shard: 2, hint: None },
+            ClientResp::Err("boom".into()),
+        ];
+        for r in &resps {
+            assert_eq!(&ClientResp::decode(&r.encode()).unwrap(), r);
+        }
+        assert!(ClientResp::decode(&[99]).is_err());
+    }
+
+    /// The redirect contract: whatever `cluster::not_leader_msg`
+    /// emits, `parse_not_leader` must lift — pinned here so the two
+    /// sides cannot drift apart silently.
+    #[test]
+    fn not_leader_contract_matches_cluster_format() {
+        use super::super::cluster::not_leader_msg;
+        assert_eq!(parse_not_leader(&not_leader_msg(Some(2))), Some(Some(2)));
+        assert_eq!(parse_not_leader(&not_leader_msg(None)), Some(None));
+    }
+
+    #[test]
+    fn not_leader_hints_parse() {
+        assert_eq!(parse_not_leader("not leader (hint Some(3))"), Some(Some(3)));
+        assert_eq!(parse_not_leader("not leader (hint None)"), Some(None));
+        assert_eq!(parse_not_leader("shard 0: not leader (hint Some(12)) extra"), Some(Some(12)));
+        assert_eq!(parse_not_leader("read barrier failed (hint Some(1))"), None);
+        assert_eq!(parse_not_leader("CONSENSUS_TIMEOUT"), None);
+    }
+
+    #[test]
+    fn raft_addr_convention() {
+        let base: SocketAddr = "127.0.0.1:7100".parse().unwrap();
+        assert_eq!(raft_addr(base, 0), "127.0.0.1:7101".parse().unwrap());
+        assert_eq!(raft_addr(base, 3), "127.0.0.1:7104".parse().unwrap());
+    }
+}

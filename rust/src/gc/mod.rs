@@ -1,4 +1,6 @@
-//! Raft-aware garbage collection framework (paper §III-C/§III-D).
+//! Raft-aware garbage collection framework (paper §III-C/§III-D;
+//! DESIGN.md §3 documents the leveling discipline and its crash
+//! contract).
 //!
 //! A GC cycle takes the frozen Active Storage (the raft ValueLog
 //! epochs frozen since the last snapshot point, plus the frozen

@@ -8,7 +8,7 @@
 use crate::coordinator::{Cluster, ClusterConfig, ReadConsistency, ShardRouter};
 use crate::engine::EngineKind;
 use crate::gc::GcConfig;
-use crate::raft::NetConfig;
+use crate::raft::{NetConfig, TransportKind};
 use crate::util::Histogram;
 use crate::ycsb::{key_of, Generator, Op, WorkloadKind};
 use anyhow::Result;
@@ -99,6 +99,36 @@ pub fn read_from_label(rf: ReadConsistency) -> &'static str {
     }
 }
 
+/// Parse a `--transport KIND` (or `--transport=KIND`) flag: `inproc`
+/// (default; the in-process bus) or `tcp` (real loopback sockets).
+pub fn parse_transport_arg(args: &[String]) -> Option<TransportKind> {
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--transport" {
+            return it.next().and_then(|v| TransportKind::parse(v));
+        }
+        if let Some(v) = a.strip_prefix("--transport=") {
+            return TransportKind::parse(v);
+        }
+    }
+    None
+}
+
+/// Raft transport for benches: `--transport inproc|tcp` on the bench
+/// command line or the `NEZHA_BENCH_TRANSPORT` env var; defaults to
+/// the in-process bus.  fig4/fig5 use this to report in-process vs
+/// real-TCP deltas on the same workload (DESIGN.md §2).
+pub fn bench_transport() -> TransportKind {
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(t) = parse_transport_arg(&args) {
+        return t;
+    }
+    std::env::var("NEZHA_BENCH_TRANSPORT")
+        .ok()
+        .and_then(|v| TransportKind::parse(&v))
+        .unwrap_or_default()
+}
+
 /// Point reads folded into one leader round-trip (the read analogue of
 /// the coordinator's write-side fold).
 pub const GET_BATCH: usize = 16;
@@ -120,6 +150,9 @@ pub struct Spec {
     /// Who serves reads (see [`ReadConsistency`]); `Leader` is the
     /// pre-follower-read behavior.
     pub read_from: ReadConsistency,
+    /// Which wire carries Raft frames: the in-process bus (default)
+    /// or real loopback TCP sockets.
+    pub transport: TransportKind,
     pub seed: u64,
 }
 
@@ -133,6 +166,7 @@ impl Spec {
             load_bytes: (24 << 20) as u64,
             gc_fraction: 0.4,
             read_from: ReadConsistency::Leader,
+            transport: TransportKind::Inproc,
             seed: 42,
         }
     }
@@ -256,6 +290,7 @@ impl Env {
         cfg.seed = spec.seed;
         cfg.router = ShardRouter::hash(shards as u32);
         cfg.read_consistency = spec.read_from;
+        cfg.transport = spec.transport;
         cfg.net = NetConfig { latency_us: (0, 0), loss: 0.0, seed: spec.seed };
         // Engine scale knobs proportional to the per-shard load (each
         // shard group sees roughly `load / shards` of the traffic).
@@ -518,6 +553,20 @@ impl Env {
         Ok(())
     }
 
+    /// Print the raft wire volume this env's cluster moved so far
+    /// (msgs/bytes/dropped summed over every shard's transport) — the
+    /// line that makes in-process vs TCP runs comparable.
+    pub fn print_wire_line(&self) {
+        let w = self.cluster.wire_stats();
+        println!(
+            "            wire[{}]: {} msgs, {:.2} MiB, {} dropped",
+            self.spec.transport.name(),
+            w.msgs,
+            w.bytes as f64 / (1 << 20) as f64,
+            w.dropped
+        );
+    }
+
     pub fn destroy(self) -> Result<()> {
         self.cluster.shutdown()?;
         let _ = std::fs::remove_dir_all(&self.dir);
@@ -631,6 +680,39 @@ mod tests {
         assert_eq!(parse_read_from_arg(&args(&["--read-from", "nope"])), None);
         assert_eq!(parse_read_from_arg(&args(&["--read-from"])), None);
         assert_eq!(parse_read_from_arg(&args(&["--shards", "2"])), None);
+    }
+
+    #[test]
+    fn transport_flag_parses() {
+        let args = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(
+            parse_transport_arg(&args(&["bench", "--transport", "tcp"])),
+            Some(TransportKind::Tcp)
+        );
+        assert_eq!(
+            parse_transport_arg(&args(&["--transport=inproc"])),
+            Some(TransportKind::Inproc)
+        );
+        assert_eq!(parse_transport_arg(&args(&["--transport", "carrier-pigeon"])), None);
+        assert_eq!(parse_transport_arg(&args(&["--transport"])), None);
+        assert_eq!(parse_transport_arg(&args(&["--shards", "2"])), None);
+    }
+
+    #[test]
+    fn tiny_end_to_end_over_tcp() {
+        // The harness path with every raft frame crossing real
+        // loopback sockets.
+        let mut spec = Spec::new(EngineKind::Nezha, 1 << 10);
+        spec.load_bytes = 64 << 10;
+        spec.transport = TransportKind::Tcp;
+        let env = Env::start(spec).unwrap();
+        let put = env.load("1KB").unwrap();
+        assert_eq!(put.ops, 64);
+        let get = env.run_gets(20, "1KB").unwrap();
+        assert!(get.bytes > 0, "gets found data over tcp");
+        let w = env.cluster.wire_stats();
+        assert!(w.msgs > 0 && w.bytes > 0, "no frames crossed the sockets: {w:?}");
+        env.destroy().unwrap();
     }
 
     #[test]

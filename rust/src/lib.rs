@@ -15,16 +15,24 @@
 //!   (Pre/During/Post-GC) request processing of paper §III-C/D.
 //! * [`engine`] — the seven evaluation configurations (Original, PASV,
 //!   TiKV, Dwisckey, LSM-Raft, Nezha-NoGC, Nezha) behind one trait.
-//! * [`coordinator`] — multi-node cluster runtime, leader routing,
-//!   group-commit batching, metrics.
+//! * [`coordinator`] — multi-node cluster runtime: shard routing,
+//!   leader routing, group-commit batching, follower reads, metrics —
+//!   plus the multi-process `nezha serve` server and its thin TCP
+//!   client ([`coordinator::server`]).
 //! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas
 //!   index-build module (`artifacts/index_build.hlo.txt`).
 //! * [`ycsb`] — YCSB workload generator (Load, A–F).
 //! * [`harness`] — the experiment harness regenerating every paper
 //!   figure (see `benches/fig*.rs`).
 //!
-//! See `DESIGN.md` for the paper→repo mapping and `EXPERIMENTS.md` for
-//! measured-vs-paper results.
+//! The cluster runs over one of two interchangeable transports
+//! ([`raft::transport`]): the in-process bus the early reproduction
+//! measured with, or real TCP sockets — in one process over loopback
+//! (`--transport tcp`) or across processes (`nezha serve`).
+//!
+//! See `README.md` for the quickstart, `DESIGN.md` §1–§4 for the
+//! paper→repo mapping and substitutions, and `ROADMAP.md` for
+//! invariants and open items.
 
 pub mod util;
 pub mod lsm;

@@ -136,7 +136,7 @@ impl IoStatsSnapshot {
     }
 }
 
-/// FIFO-with-reinsertion block cache (approximate LRU; DESIGN.md §Perf
+/// FIFO-with-reinsertion block cache (approximate LRU; DESIGN.md §2
 /// discusses why this is sufficient at bench scale).
 pub struct BlockCache {
     inner: Mutex<CacheInner>,

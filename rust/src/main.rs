@@ -1,32 +1,50 @@
 //! `nezha` CLI — launcher for the reproduction.
 //!
 //! ```text
-//! nezha serve   --engine nezha --nodes 3 --dir /tmp/nezha [--ops N]
+//! nezha serve   --node 1 --peers 1=127.0.0.1:7100,2=127.0.0.1:7200,3=127.0.0.1:7300 \
+//!               [--shards S] [--engine E] [--dir PATH] [--read-from WHO]
+//! nezha client  --peers 1=...,2=...,3=... [--shards S] put KEY VALUE
+//! nezha client  --peers ... get KEY | del KEY | scan START END LIMIT | status
 //! nezha load    --engine nezha --records 10000 --value-size 16384
 //! nezha ycsb    --engine nezha --workload A --ops 2000
 //! nezha recover --dir <replica base dir> --engine nezha
 //! nezha engines                      # list engine variants
 //! ```
 //!
-//! Arg parsing is hand-rolled (clap is unavailable offline —
-//! DESIGN.md §2).
+//! `serve` runs **one process = one node**: this node's replica of
+//! every shard group, Raft over real TCP (the `--peers` list names
+//! each node's client address; shard `s`'s raft listener binds
+//! `client_port + 1 + s`).  `client` is the thin framed-TCP client.
+//! `load`/`ycsb` spin up a full in-process cluster instead (the bench
+//! harness path).  Arg parsing is hand-rolled (clap is unavailable
+//! offline — DESIGN.md §2).
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
+use nezha::coordinator::{Client, ClusterConfig, Server, ServerOpts, ShardRouter, StatusRow};
 use nezha::engine::EngineKind;
-use nezha::harness::{print_header, Env, Spec};
+use nezha::harness::{parse_read_from_arg, print_header, Env, Spec};
+use nezha::raft::NodeId;
 use nezha::ycsb::WorkloadKind;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::net::{SocketAddr, ToSocketAddrs};
+use std::time::Duration;
 
 fn usage() -> ! {
     eprintln!(
         "nezha — key-value separated distributed store (paper reproduction)
 
 USAGE:
-  nezha serve   [--engine E] [--nodes N] [--shards S] [--dir PATH] [--records R] [--value-size B]
+  nezha serve   --node N --peers LIST [--shards S] [--engine E] [--dir PATH] [--read-from WHO]
+  nezha client  --peers LIST [--shards S] put KEY VALUE | get KEY | del KEY |
+                scan START END LIMIT | status
   nezha load    [--engine E] [--nodes N] [--shards S] [--records R] [--value-size B]
   nezha ycsb    [--engine E] [--workload A..F] [--shards S] [--ops N] [--records R] [--value-size B]
   nezha recover --dir PATH [--engine E]
   nezha engines
+
+PEERS is `id=host:port,...` naming every node's client address; node N's raft
+listener for shard S binds the same host at port+1+S.  WHO is
+leader|followers|stale.
 
 ENGINES: {}",
         EngineKind::ALL.map(|k| k.name()).join(", ")
@@ -34,22 +52,31 @@ ENGINES: {}",
     std::process::exit(2)
 }
 
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
-    let mut m = HashMap::new();
+/// Split argv into `--flag value` (or `--flag=value`) pairs plus the
+/// remaining positional words, in order.
+fn parse_args(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut flags = HashMap::new();
+    let mut pos = Vec::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(name) = args[i].strip_prefix("--") {
-            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                i += 1;
-                args[i].clone()
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
             } else {
-                "true".to_string()
-            };
-            m.insert(name.to_string(), val);
+                let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    i += 1;
+                    args[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), val);
+            }
+        } else {
+            pos.push(args[i].clone());
         }
         i += 1;
     }
-    m
+    (flags, pos)
 }
 
 fn flag<T: std::str::FromStr>(m: &HashMap<String, String>, k: &str, default: T) -> T {
@@ -61,10 +88,32 @@ fn engine_of(m: &HashMap<String, String>) -> Result<EngineKind> {
     EngineKind::parse(name).with_context(|| format!("unknown engine {name:?}"))
 }
 
+/// Parse `1=host:port,2=host:port,...` into the node→address map.
+fn parse_peers(s: &str) -> Result<BTreeMap<NodeId, SocketAddr>> {
+    let mut m = BTreeMap::new();
+    for part in s.split(',') {
+        let (id, addr) = part
+            .split_once('=')
+            .with_context(|| format!("peer {part:?} is not id=host:port"))?;
+        let id: NodeId = id.trim().parse().with_context(|| format!("bad node id {id:?}"))?;
+        let addr = addr
+            .trim()
+            .to_socket_addrs()
+            .with_context(|| format!("bad address {addr:?}"))?
+            .next()
+            .ok_or_else(|| anyhow!("address {addr:?} resolved to nothing"))?;
+        m.insert(id, addr);
+    }
+    if m.is_empty() {
+        bail!("--peers list is empty");
+    }
+    Ok(m)
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
-    let flags = parse_flags(&args[1..]);
+    let (flags, pos) = parse_args(&args[1..]);
     match cmd.as_str() {
         "engines" => {
             for k in EngineKind::ALL {
@@ -72,14 +121,124 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
-        "load" | "serve" => cmd_load_serve(cmd == "serve", &flags),
+        "serve" => cmd_serve(&flags),
+        "client" => cmd_client(&flags, &pos),
+        "load" => cmd_load(&flags),
         "ycsb" => cmd_ycsb(&flags),
         "recover" => cmd_recover(&flags),
         _ => usage(),
     }
 }
 
-fn cmd_load_serve(serve: bool, flags: &HashMap<String, String>) -> Result<()> {
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let kind = engine_of(flags)?;
+    let peers = parse_peers(flags.get("peers").context("--peers required")?)?;
+    let node: NodeId = flag(flags, "node", 0);
+    if node == 0 {
+        bail!("--node N required (one of the ids in --peers)");
+    }
+    let shards: u32 = flag(flags, "shards", 1);
+    let dir = flags.get("dir").cloned().unwrap_or_else(|| format!("./nezha-node-{node}"));
+    let mut cfg = ClusterConfig::new(dir.clone(), kind, peers.len());
+    cfg.router = ShardRouter::hash(shards.max(1));
+    if let Some(rf) = flags.get("read-from") {
+        cfg.read_consistency = parse_read_from_arg(&["--read-from".to_string(), rf.clone()])
+            .with_context(|| format!("bad --read-from {rf:?} (leader|followers|stale)"))?;
+    }
+    let server = Server::start(ServerOpts { node, peers, cluster: cfg })?;
+    println!(
+        "node {node} up: engine {}, {} shard group(s), data under {dir}",
+        kind.name(),
+        shards.max(1)
+    );
+    println!(
+        "clients at {}; raft listeners at ports +1..+{} — ctrl-c to stop",
+        server.client_addr(),
+        shards.max(1)
+    );
+    // Park forever, logging a status heartbeat.  An abrupt kill is a
+    // supported fault: peers count the dead connections as dropped and
+    // re-elect, and restart recovers from the data dir.
+    loop {
+        std::thread::sleep(Duration::from_secs(30));
+        let wire = server.wire_stats();
+        let rows: Vec<String> = server
+            .status()
+            .iter()
+            .map(|r| format!("s{}:{}@t{} a{}", r.shard, r.role, r.term, r.last_applied))
+            .collect();
+        println!(
+            "status: {} | wire: {} msgs, {:.1} MiB, {} dropped",
+            rows.join(" "),
+            wire.msgs,
+            wire.bytes as f64 / (1 << 20) as f64,
+            wire.dropped
+        );
+    }
+}
+
+fn print_status_rows(node: NodeId, rows: &[StatusRow]) {
+    for r in rows {
+        println!(
+            "node {node} shard {}: {:<9} term {:<4} applied {:<8} leader_hint {}",
+            r.shard,
+            r.role,
+            r.term,
+            r.last_applied,
+            r.leader_hint.map_or_else(|| "-".into(), |h| h.to_string())
+        );
+    }
+}
+
+fn cmd_client(flags: &HashMap<String, String>, pos: &[String]) -> Result<()> {
+    let peers = parse_peers(flags.get("peers").context("--peers required")?)?;
+    let shards: u32 = flag(flags, "shards", 1);
+    let nodes: Vec<NodeId> = peers.keys().copied().collect();
+    let mut client = Client::connect(peers, shards.max(1));
+    let op = pos.first().map(String::as_str).unwrap_or("");
+    match op {
+        "put" => {
+            let k = pos.get(1).context("put KEY VALUE")?;
+            let v = pos.get(2).context("put KEY VALUE")?;
+            client.put(k.as_bytes(), v.as_bytes())?;
+            println!("OK");
+        }
+        "get" => {
+            let k = pos.get(1).context("get KEY")?;
+            match client.get(k.as_bytes())? {
+                Some(v) => println!("{} ({} bytes)", String::from_utf8_lossy(&v), v.len()),
+                None => println!("(nil)"),
+            }
+        }
+        "del" => {
+            let k = pos.get(1).context("del KEY")?;
+            client.delete(k.as_bytes())?;
+            println!("OK");
+        }
+        "scan" => {
+            let start = pos.get(1).context("scan START END LIMIT")?;
+            let end = pos.get(2).context("scan START END LIMIT")?;
+            let limit: usize = pos.get(3).context("scan START END LIMIT")?.parse()?;
+            let rows = client.scan(start.as_bytes(), end.as_bytes(), limit)?;
+            for (k, v) in &rows {
+                println!("{} = {} bytes", String::from_utf8_lossy(k), v.len());
+            }
+            println!("({} rows)", rows.len());
+        }
+        "status" => {
+            for node in nodes {
+                match client.status(node) {
+                    Ok(rows) => print_status_rows(node, &rows),
+                    Err(e) => println!("node {node}: unreachable ({e:#})"),
+                }
+            }
+        }
+        _ => bail!("client op must be put|get|del|scan|status"),
+    }
+    Ok(())
+}
+
+fn cmd_load(flags: &HashMap<String, String>) -> Result<()> {
     let kind = engine_of(flags)?;
     let nodes: usize = flag(flags, "nodes", 3);
     let value_size: usize = flag(flags, "value-size", 16 << 10);
@@ -101,26 +260,12 @@ fn cmd_load_serve(serve: bool, flags: &HashMap<String, String>) -> Result<()> {
     let m = env.load("load")?;
     print_header("load");
     println!("{}", m.row());
-    if serve {
-        println!(
-            "cluster up; issuing a smoke get/scan then exiting (interactive serving is \
-             exercised by examples/)"
-        );
-        let v = env.cluster.get(&nezha::ycsb::key_of(0))?;
-        println!("get(user0) -> {} bytes", v.map_or(0, |v| v.len()));
-        let rows =
-            env.cluster.scan(&nezha::ycsb::key_of(0), &nezha::ycsb::key_of(u64::MAX / 2), 10)?;
-        println!("scan(10) -> {} rows", rows.len());
-    }
     env.destroy()
 }
 
 fn cmd_ycsb(flags: &HashMap<String, String>) -> Result<()> {
     let kind = engine_of(flags)?;
-    let wl = flags
-        .get("workload")
-        .map(String::as_str)
-        .unwrap_or("A");
+    let wl = flags.get("workload").map(String::as_str).unwrap_or("A");
     let Some(wl) = WorkloadKind::parse(wl) else {
         bail!("unknown workload {wl:?}");
     };

@@ -12,7 +12,9 @@
 //!
 //! Module map: [`rpc`] (messages + wire codec), [`log`] (persistent
 //! log + hard state), [`node`] (the protocol state machine),
-//! [`transport`] (deterministic sim net + threaded bus).
+//! [`transport`] (deterministic sim net, threaded in-process bus, and
+//! the real TCP transport behind one [`transport::Net`] handle —
+//! DESIGN.md §2).
 //!
 //! Linearizable reads avoid the log entirely: a **ReadIndex** barrier
 //! (leader confirms its term with one heartbeat quorum round and
@@ -30,4 +32,6 @@ pub mod transport;
 pub use log::{HardState, RaftLog};
 pub use node::{Config, Node, NodeId, NodeMetrics, Role, StateMachine};
 pub use rpc::{Command, LogEntry, LogIndex, Message, Term};
-pub use transport::{Bus, NetConfig, SimNet, Transport};
+pub use transport::{
+    Bus, Net, NetConfig, SimNet, TcpNet, Transport, TransportKind, WireSnapshot, WireStats,
+};

@@ -1,0 +1,655 @@
+//! Real TCP transport (DESIGN.md §2).
+//!
+//! [`TcpNet`] carries the same encoded [`Message`] frames as the
+//! in-process [`super::Bus`], over real sockets, with the same
+//! register/send/drain contract and [`WireStats`] parity:
+//!
+//! * **Framing.**  Every frame is `u32 len ∥ u32 crc32 ∥ payload`
+//!   (little-endian, CRC over the payload — the same discipline as the
+//!   ValueLog's on-disk records).  The first frame on a connection is a
+//!   handshake naming the sender, so per-message frames carry no
+//!   addressing overhead.  A frame that fails its CRC (or declares an
+//!   absurd length) desynchronizes the stream: the receiver counts it
+//!   `dropped` and closes the connection; the sender reconnects lazily.
+//! * **Inbound.**  `register(id)` binds one listener per local node and
+//!   spawns an accept loop; each accepted connection gets a reader
+//!   thread that parses frames and pushes them into the node's
+//!   [`Mailbox`] — the node loop's `drain` is unchanged from the bus.
+//! * **Outbound.**  Connections are established lazily on first send
+//!   and re-established (rate-limited) after failures.  Each (from, to)
+//!   pair has a writer thread behind a **bounded** queue: a dead or
+//!   slow peer overflows the queue and the frames count `dropped` —
+//!   the sending node loop never blocks on a peer (Raft retries by
+//!   design; blocking a leader's loop on a dead follower would stall
+//!   the whole shard).
+//!
+//! Two construction modes:
+//! * [`TcpNet::new`] — loopback with OS-assigned ports; the cluster
+//!   harness registers every node in one process and peers discover
+//!   each other through the shared address map (`--transport tcp`).
+//! * [`TcpNet::with_peers`] — a fixed node→address map for real
+//!   multi-process clusters (`nezha serve`): each process registers
+//!   only its own node and dials the others at the configured
+//!   addresses.
+
+use super::super::node::NodeId;
+use super::super::rpc::Message;
+use super::{Mailbox, WireStats};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Upper bound on one frame's payload.  Generous enough for an
+/// `InstallSnapshot` carrying a whole sorted-ValueLog snapshot at bench
+/// scale; small enough that a corrupt length field can't trigger a
+/// multi-gigabyte allocation.
+pub const MAX_FRAME: usize = 256 << 20;
+
+/// Magic opening the handshake frame ("NZRA": Nezha raft).
+const HELLO_MAGIC: u32 = 0x4E5A_5241;
+
+/// Frames queued per (from, to) connection before sends to that peer
+/// start counting `dropped`.  Bounded so a dead peer's queue cannot
+/// grow without limit while reconnects fail.
+const SEND_QUEUE_FRAMES: usize = 256;
+
+/// Minimum spacing between reconnect attempts to one peer.  Frames
+/// arriving inside the window are dropped immediately instead of
+/// paying a connect timeout each (Raft's own retries provide the
+/// eventual redelivery).
+const RECONNECT_PACE: Duration = Duration::from_millis(50);
+
+// ---------------------------------------------------------------------
+// Frame codec
+// ---------------------------------------------------------------------
+
+/// Encode one wire frame: `u32 len ∥ u32 crc32(payload) ∥ payload`.
+pub fn frame_encode(payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&crc32fast::hash(payload).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// Parse one frame off the front of `buf`.
+///
+/// * `Ok(Some((payload, consumed)))` — a complete, CRC-valid frame.
+/// * `Ok(None)` — the buffer holds a truncated frame; read more bytes.
+/// * `Err(_)` — the stream is corrupt (bad CRC or an absurd length):
+///   the connection cannot be resynchronized and must be dropped.
+pub fn frame_parse(buf: &[u8]) -> Result<Option<(Vec<u8>, usize)>> {
+    if buf.len() < 8 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        bail!("tcp: frame length {len} exceeds the {MAX_FRAME}-byte cap");
+    }
+    let crc = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if buf.len() < 8 + len {
+        return Ok(None);
+    }
+    let payload = &buf[8..8 + len];
+    if crc32fast::hash(payload) != crc {
+        bail!("tcp: frame crc mismatch");
+    }
+    Ok(Some((payload.to_vec(), 8 + len)))
+}
+
+/// Write one frame to a stream.  Small payloads are copied into one
+/// contiguous buffer (one syscall, one packet under `TCP_NODELAY`);
+/// large ones — bulk AppendEntries, snapshots — write the 8-byte
+/// header separately so the payload is never memcpy'd a second time.
+fn write_frame(s: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
+    const INLINE_FRAME: usize = 64 << 10;
+    if payload.len() <= INLINE_FRAME {
+        return s.write_all(&frame_encode(payload));
+    }
+    let mut hdr = [0u8; 8];
+    hdr[0..4].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    hdr[4..8].copy_from_slice(&crc32fast::hash(payload).to_le_bytes());
+    s.write_all(&hdr)?;
+    s.write_all(payload)
+}
+
+fn hello_payload(id: NodeId) -> Vec<u8> {
+    let mut p = Vec::with_capacity(12);
+    p.extend_from_slice(&HELLO_MAGIC.to_le_bytes());
+    p.extend_from_slice(&id.to_le_bytes());
+    p
+}
+
+fn parse_hello(p: &[u8]) -> Option<NodeId> {
+    if p.len() != 12 || u32::from_le_bytes(p[0..4].try_into().unwrap()) != HELLO_MAGIC {
+        return None;
+    }
+    Some(u64::from_le_bytes(p[4..12].try_into().unwrap()))
+}
+
+// ---------------------------------------------------------------------
+// Transport
+// ---------------------------------------------------------------------
+
+struct LocalNode {
+    mailbox: Arc<Mailbox>,
+    /// Stops this node's accept loop and reader threads (fault
+    /// injection / shutdown).
+    closed: Arc<AtomicBool>,
+}
+
+struct TcpInner {
+    /// node → dialable address.  Pre-filled by [`TcpNet::with_peers`];
+    /// filled at `register` time (with the OS-assigned port) in
+    /// loopback mode.  Shared with writer threads so lazily-dialed
+    /// peers resolve whenever they come up.
+    addrs: Arc<Mutex<HashMap<NodeId, SocketAddr>>>,
+    local: Mutex<HashMap<NodeId, LocalNode>>,
+    /// (from, to) → bounded frame queue into that pair's writer thread.
+    conns: Mutex<HashMap<(NodeId, NodeId), SyncSender<Vec<u8>>>>,
+    stats: Arc<WireStats>,
+    closed: Arc<AtomicBool>,
+}
+
+/// Thread-safe TCP network handle: register local nodes, then clone
+/// freely (same contract as [`super::Bus`]).
+#[derive(Clone)]
+pub struct TcpNet {
+    inner: Arc<TcpInner>,
+}
+
+impl Default for TcpNet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TcpNet {
+    /// Loopback mode: every registered node binds `127.0.0.1:0` and
+    /// advertises its OS-assigned port through the shared address map.
+    pub fn new() -> Self {
+        Self::with_peers(HashMap::new())
+    }
+
+    /// Multi-process mode: `peers` maps every node (including the
+    /// local one) to its raft address.  `register(id)` binds the
+    /// configured address for `id`; sends dial the others.
+    pub fn with_peers(peers: HashMap<NodeId, SocketAddr>) -> Self {
+        Self {
+            inner: Arc::new(TcpInner {
+                addrs: Arc::new(Mutex::new(peers)),
+                local: Mutex::new(HashMap::new()),
+                conns: Mutex::new(HashMap::new()),
+                stats: Arc::new(WireStats::default()),
+                closed: Arc::new(AtomicBool::new(false)),
+            }),
+        }
+    }
+
+    pub fn stats(&self) -> &WireStats {
+        &self.inner.stats
+    }
+
+    /// The address a registered node actually listens on (loopback
+    /// mode assigns ports at bind time).
+    pub fn addr_of(&self, id: NodeId) -> Option<SocketAddr> {
+        self.inner.addrs.lock().unwrap().get(&id).copied()
+    }
+
+    /// Bind `id`'s listener, spawn its accept loop, and return its
+    /// mailbox.  In loopback mode the listener binds an OS-assigned
+    /// port and publishes it; in `with_peers` mode it binds the
+    /// configured address.
+    pub fn register(&self, id: NodeId) -> Result<Arc<Mailbox>> {
+        let configured = self.inner.addrs.lock().unwrap().get(&id).copied();
+        let bind_addr = configured.unwrap_or_else(|| SocketAddr::from(([127, 0, 0, 1], 0)));
+        let listener = TcpListener::bind(bind_addr)
+            .with_context(|| format!("tcp: bind {bind_addr} for node {id}"))?;
+        let actual = listener.local_addr().context("tcp: local_addr")?;
+        self.inner.addrs.lock().unwrap().insert(id, actual);
+        let mailbox = Arc::new(Mailbox::new(Arc::clone(&self.inner.stats)));
+        let node_closed = Arc::new(AtomicBool::new(false));
+        {
+            let mailbox = Arc::clone(&mailbox);
+            let stats = Arc::clone(&self.inner.stats);
+            let node_closed = Arc::clone(&node_closed);
+            let net_closed = Arc::clone(&self.inner.closed);
+            std::thread::Builder::new()
+                .name(format!("tcp-accept-{id}"))
+                .spawn(move || accept_loop(listener, mailbox, stats, node_closed, net_closed))
+                .context("tcp: spawn accept loop")?;
+        }
+        self.inner
+            .local
+            .lock()
+            .unwrap()
+            .insert(id, LocalNode { mailbox: Arc::clone(&mailbox), closed: node_closed });
+        Ok(mailbox)
+    }
+
+    /// Send one message.  Never blocks: the frame is handed to the
+    /// (from, to) writer's bounded queue, and a full or dead queue
+    /// counts the frame `dropped`.
+    pub fn send(&self, from: NodeId, to: NodeId, msg: &Message) {
+        let buf = msg.encode();
+        let stats = &self.inner.stats;
+        stats.msgs.fetch_add(1, Ordering::Relaxed);
+        stats.bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        if buf.len() > MAX_FRAME {
+            // The receiver would reject the length prefix and kill
+            // the connection, and Raft would retry the identical
+            // frame forever — drop it here, visibly, instead of
+            // livelocking the link.
+            stats.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if self.inner.closed.load(Ordering::Relaxed) {
+            stats.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let tx = {
+            let mut conns = self.inner.conns.lock().unwrap();
+            conns.entry((from, to)).or_insert_with(|| self.spawn_writer(from, to)).clone()
+        };
+        if tx.try_send(buf).is_err() {
+            // Full (slow peer) or disconnected (the writer exited at
+            // shutdown): either way the frame is dropped, the node
+            // loop moves on.
+            stats.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn spawn_writer(&self, from: NodeId, to: NodeId) -> SyncSender<Vec<u8>> {
+        let (tx, rx) = mpsc::sync_channel::<Vec<u8>>(SEND_QUEUE_FRAMES);
+        let addrs = Arc::clone(&self.inner.addrs);
+        let stats = Arc::clone(&self.inner.stats);
+        let closed = Arc::clone(&self.inner.closed);
+        // Writer threads are detached: they exit when their sender is
+        // dropped (unregister/shutdown clears the conns map) or when
+        // the net-wide closed flag trips.
+        let _ = std::thread::Builder::new()
+            .name(format!("tcp-w-{from}-{to}"))
+            .spawn(move || writer_loop(from, to, rx, addrs, stats, closed));
+        tx
+    }
+
+    /// Remove a node for good: close its mailbox, stop its accept
+    /// loop/readers (releasing the listening port) and kill its
+    /// outbound connections.  Peers' subsequent sends to it fail and
+    /// count `dropped` — the in-process analogue of killing the
+    /// node's process.
+    pub fn unregister(&self, id: NodeId) {
+        if let Some(node) = self.inner.local.lock().unwrap().remove(&id) {
+            node.closed.store(true, Ordering::Relaxed);
+            node.mailbox.close();
+        }
+        self.inner.addrs.lock().unwrap().remove(&id);
+        // Dropping the senders disconnects the writers' queues.
+        self.inner.conns.lock().unwrap().retain(|&(f, _), _| f != id);
+    }
+
+    pub fn shutdown(&self) {
+        self.inner.closed.store(true, Ordering::Relaxed);
+        for (_, node) in self.inner.local.lock().unwrap().drain() {
+            node.closed.store(true, Ordering::Relaxed);
+            node.mailbox.close();
+        }
+        self.inner.conns.lock().unwrap().clear();
+    }
+}
+
+/// Accept connections for one local node until it (or the whole net)
+/// closes.  Nonblocking accept polled on a short interval: connections
+/// are long-lived, so accept latency is irrelevant, and polling lets
+/// the loop observe the closed flags without a self-connect trick.
+fn accept_loop(
+    listener: TcpListener,
+    mailbox: Arc<Mailbox>,
+    stats: Arc<WireStats>,
+    node_closed: Arc<AtomicBool>,
+    net_closed: Arc<AtomicBool>,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    loop {
+        if node_closed.load(Ordering::Relaxed) || net_closed.load(Ordering::Relaxed) {
+            return; // drops the listener, releasing the port
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                let mailbox = Arc::clone(&mailbox);
+                let stats = Arc::clone(&stats);
+                let node_closed = Arc::clone(&node_closed);
+                let net_closed = Arc::clone(&net_closed);
+                let _ = std::thread::Builder::new()
+                    .name("tcp-read".into())
+                    .spawn(move || reader_loop(stream, mailbox, stats, node_closed, net_closed));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+/// Read frames off one inbound connection into the node's mailbox.
+/// The first frame must be the handshake naming the sender; every
+/// later frame is an encoded [`Message`] body.  Frame-level corruption
+/// (CRC/length) counts `dropped` and closes the connection — the
+/// stream cannot be resynchronized past a bad length prefix.
+fn reader_loop(
+    mut stream: TcpStream,
+    mailbox: Arc<Mailbox>,
+    stats: Arc<WireStats>,
+    node_closed: Arc<AtomicBool>,
+    net_closed: Arc<AtomicBool>,
+) {
+    // The timeout bounds how long a dying node's reader lingers.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut buf: Vec<u8> = Vec::new();
+    let mut from: Option<NodeId> = None;
+    let mut chunk = vec![0u8; 64 << 10];
+    loop {
+        if node_closed.load(Ordering::Relaxed) || net_closed.load(Ordering::Relaxed) {
+            return;
+        }
+        let n = match stream.read(&mut chunk) {
+            Ok(0) => return, // peer closed
+            Ok(n) => n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => continue,
+            Err(_) => return,
+        };
+        buf.extend_from_slice(&chunk[..n]);
+        loop {
+            match frame_parse(&buf) {
+                Ok(Some((payload, consumed))) => {
+                    buf.drain(..consumed);
+                    match from {
+                        None => match parse_hello(&payload) {
+                            Some(id) => from = Some(id),
+                            None => {
+                                // Not one of ours (or garbage): count
+                                // and drop the connection.
+                                stats.dropped.fetch_add(1, Ordering::Relaxed);
+                                return;
+                            }
+                        },
+                        Some(id) => mailbox.push(id, payload),
+                    }
+                }
+                Ok(None) => break, // partial frame: need more bytes
+                Err(_) => {
+                    stats.dropped.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// One (from, to) pair's outbound worker: connect lazily (paced after
+/// failures), handshake, then stream frames from the bounded queue.  A
+/// frame that cannot be delivered — peer unknown, connect failed, or
+/// the write errored — counts `dropped`; the next frame retries the
+/// connection.
+fn writer_loop(
+    from: NodeId,
+    to: NodeId,
+    rx: Receiver<Vec<u8>>,
+    addrs: Arc<Mutex<HashMap<NodeId, SocketAddr>>>,
+    stats: Arc<WireStats>,
+    closed: Arc<AtomicBool>,
+) {
+    let mut stream: Option<TcpStream> = None;
+    let mut last_attempt: Option<Instant> = None;
+    loop {
+        let buf = match rx.recv_timeout(Duration::from_millis(200)) {
+            Ok(b) => b,
+            Err(RecvTimeoutError::Timeout) => {
+                if closed.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        };
+        if closed.load(Ordering::Relaxed) {
+            stats.dropped.fetch_add(1, Ordering::Relaxed);
+            continue; // drain the queue counting drops until disconnect
+        }
+        if stream.is_none() {
+            if last_attempt.is_some_and(|t| t.elapsed() < RECONNECT_PACE) {
+                // Inside the reconnect pacing window: drop instead of
+                // paying a connect timeout per queued frame.
+                stats.dropped.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            last_attempt = Some(Instant::now());
+            let addr = addrs.lock().unwrap().get(&to).copied();
+            let Some(addr) = addr else {
+                stats.dropped.fetch_add(1, Ordering::Relaxed);
+                continue;
+            };
+            match TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
+                Ok(mut s) => {
+                    let _ = s.set_nodelay(true);
+                    let _ = s.set_write_timeout(Some(Duration::from_secs(2)));
+                    if write_frame(&mut s, &hello_payload(from)).is_err() {
+                        stats.dropped.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    stream = Some(s);
+                    last_attempt = None;
+                }
+                Err(_) => {
+                    stats.dropped.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+            }
+        }
+        let s = stream.as_mut().expect("connected above");
+        if write_frame(s, &buf).is_err() {
+            // Connection died mid-write: this frame is lost; the next
+            // one re-dials.
+            stream = None;
+            stats.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::raft::rpc::{Command, LogEntry};
+    use std::time::Instant;
+
+    fn msg(term: u64) -> Message {
+        Message::RequestVoteResp { term, granted: true }
+    }
+
+    fn wait_for(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed() < deadline {
+            if cond() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        cond()
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let payloads: Vec<Vec<u8>> = vec![Vec::new(), b"x".to_vec(), vec![7u8; 100_000]];
+        for payload in &payloads {
+            let framed = frame_encode(payload);
+            let (got, consumed) = frame_parse(&framed).unwrap().expect("complete");
+            assert_eq!(&got, payload);
+            assert_eq!(consumed, framed.len());
+        }
+        // Two frames back to back parse in sequence.
+        let mut both = frame_encode(b"first");
+        both.extend_from_slice(&frame_encode(b"second"));
+        let (p1, c1) = frame_parse(&both).unwrap().unwrap();
+        assert_eq!(p1, b"first");
+        let (p2, c2) = frame_parse(&both[c1..]).unwrap().unwrap();
+        assert_eq!(p2, b"second");
+        assert_eq!(c1 + c2, both.len());
+    }
+
+    #[test]
+    fn truncated_frames_wait_for_more_bytes() {
+        let framed = frame_encode(b"hello world");
+        for cut in 0..framed.len() {
+            assert!(
+                frame_parse(&framed[..cut]).unwrap().is_none(),
+                "prefix of {cut} bytes must parse as incomplete"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        // Flipped payload byte → CRC mismatch.
+        let mut framed = frame_encode(b"payload");
+        let last = framed.len() - 1;
+        framed[last] ^= 0xff;
+        assert!(frame_parse(&framed).is_err());
+        // Flipped CRC byte.
+        let mut framed = frame_encode(b"payload");
+        framed[4] ^= 0xff;
+        assert!(frame_parse(&framed).is_err());
+        // Absurd length prefix must not allocate; it must error.
+        let mut framed = frame_encode(b"payload");
+        framed[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(frame_parse(&framed).is_err());
+    }
+
+    #[test]
+    fn hello_roundtrip_and_rejection() {
+        assert_eq!(parse_hello(&hello_payload(42)), Some(42));
+        assert_eq!(parse_hello(b"not a hello"), None);
+        assert_eq!(parse_hello(&hello_payload(1)[..11]), None);
+        let mut bad = hello_payload(1);
+        bad[0] ^= 0xff;
+        assert_eq!(parse_hello(&bad), None);
+    }
+
+    #[test]
+    fn loopback_roundtrip_between_nodes() {
+        let net = TcpNet::new();
+        let mb1 = net.register(1).unwrap();
+        let mb2 = net.register(2).unwrap();
+        net.send(1, 2, &msg(5));
+        let got = recv_one(&mb2);
+        assert_eq!(got, (1, msg(5)));
+        net.send(2, 1, &msg(9));
+        let got = recv_one(&mb1);
+        assert_eq!(got, (2, msg(9)));
+        let st = net.stats().snapshot();
+        assert_eq!(st.msgs, 2);
+        assert!(st.bytes > 0);
+        assert_eq!(st.dropped, 0);
+        net.shutdown();
+    }
+
+    fn recv_one(mb: &Arc<Mailbox>) -> (NodeId, Message) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let batch = mb.drain(Duration::from_millis(100)).expect("mailbox open");
+            if let Some(first) = batch.into_iter().next() {
+                return first;
+            }
+            assert!(Instant::now() < deadline, "no message within deadline");
+        }
+    }
+
+    #[test]
+    fn send_to_unknown_peer_counts_dropped() {
+        let net = TcpNet::new();
+        let _mb = net.register(1).unwrap();
+        net.send(1, 99, &msg(1));
+        assert!(
+            wait_for(Duration::from_secs(5), || net.stats().snapshot().dropped >= 1),
+            "send to unknown peer never counted dropped"
+        );
+        net.shutdown();
+    }
+
+    #[test]
+    fn unregister_makes_peer_dead_and_sends_count_dropped() {
+        let net = TcpNet::new();
+        let mb1 = net.register(1).unwrap();
+        let mb2 = net.register(2).unwrap();
+        net.send(1, 2, &msg(1));
+        assert_eq!(recv_one(&mb2), (1, msg(1)));
+        net.unregister(2);
+        assert!(mb2.drain(Duration::from_millis(10)).is_none(), "mailbox closed");
+        // The established connection dies (listener + readers closed);
+        // subsequent sends eventually count dropped.
+        let before = net.stats().snapshot().dropped;
+        assert!(
+            wait_for(Duration::from_secs(10), || {
+                net.send(1, 2, &msg(2));
+                net.stats().snapshot().dropped > before
+            }),
+            "sends to a dead peer never counted dropped"
+        );
+        drop(mb1);
+        net.shutdown();
+    }
+
+    #[test]
+    fn garbage_connection_counts_dropped_and_is_closed() {
+        let net = TcpNet::new();
+        let _mb = net.register(1).unwrap();
+        let addr = net.addr_of(1).unwrap();
+        // A raw client that speaks garbage instead of the handshake.
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&frame_encode(b"definitely not a handshake")).unwrap();
+        assert!(
+            wait_for(Duration::from_secs(5), || net.stats().snapshot().dropped >= 1),
+            "garbage handshake never counted dropped"
+        );
+        // Corrupt framing (not just a bad handshake) is also counted.
+        let mut s2 = TcpStream::connect(addr).unwrap();
+        s2.write_all(&[0xff; 16]).unwrap();
+        assert!(
+            wait_for(Duration::from_secs(5), || net.stats().snapshot().dropped >= 2),
+            "corrupt frame never counted dropped"
+        );
+        net.shutdown();
+    }
+
+    #[test]
+    fn large_frames_cross_intact() {
+        // An AppendEntries with a payload comfortably above one read
+        // chunk (64 KiB) must reassemble from partial reads.
+        let net = TcpNet::new();
+        let _mb1 = net.register(1).unwrap();
+        let mb2 = net.register(2).unwrap();
+        let big = Message::AppendEntries {
+            term: 3,
+            leader: 1,
+            prev_log_index: 0,
+            prev_log_term: 0,
+            entries: vec![LogEntry {
+                term: 3,
+                index: 1,
+                cmd: Command::Put { key: b"big".to_vec(), value: vec![0xAB; 300 << 10] },
+            }],
+            leader_commit: 0,
+            seq: 1,
+        };
+        net.send(1, 2, &big);
+        let (from, got) = recv_one(&mb2);
+        assert_eq!(from, 1);
+        assert_eq!(got, big);
+        net.shutdown();
+    }
+}

@@ -12,8 +12,13 @@
 //!   `last_term`/`last_index` per §III-C).
 //! * [`hashindex`] — the open-addressing hash index over a sorted
 //!   ValueLog that gives Nezha its point-lookup edge (built either in
-//!   Rust or from the AOT XLA `index_build` artifact).
+//!   Rust or from the AOT XLA `index_build` artifact — the parity
+//!   contract of DESIGN.md §1).
 //! * [`hash`] — the key hash, bit-identical to the L1 Pallas kernel.
+//! * [`readahead`] — the fixed-capacity segment cache behind batched
+//!   point-read resolution.
+//!
+//! GC's leveling of the sorted ValueLog is specified in DESIGN.md §3.
 
 pub mod hash;
 pub mod hashindex;

@@ -5,7 +5,7 @@
 
 use nezha::coordinator::{Cluster, ClusterConfig, ReadConsistency, ShardRouter};
 use nezha::engine::EngineKind;
-use nezha::raft::NetConfig;
+use nezha::raft::{NetConfig, TransportKind};
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -260,6 +260,49 @@ fn linearizable_reads_never_stale_across_leader_kill() {
     let dist = cluster.read_distribution().unwrap();
     let readers = dist.iter().filter(|(_, gets, _)| *gets > 0).count();
     assert!(readers >= 2, "reads never left one node: {dist:?}");
+    cluster.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// TCP-transport mirror of the ReadIndex fault test above: the same
+/// single-writer counter stream over real loopback sockets, killing
+/// one node — thread stopped, **listener and connections torn down**,
+/// the in-process analogue of killing its process mid-stream.  The
+/// shard re-elects, the survivors' frames to the dead peer count
+/// `dropped`, and linearizable reads never regress an acknowledged
+/// write.
+#[test]
+fn tcp_linearizable_reads_survive_leader_kill() {
+    let dir = base("tcp-readidx-kill");
+    let mut c = cfg(&dir, EngineKind::Nezha, 3);
+    c.transport = TransportKind::Tcp;
+    c.read_consistency = ReadConsistency::Linearizable;
+    let mut cluster = Cluster::start(c).unwrap();
+    let key = b"counter";
+    let read_counter = |cluster: &Cluster| -> u64 {
+        let got = cluster.get(key).unwrap().expect("acknowledged counter must be visible");
+        u64::from_be_bytes(got[..8].try_into().unwrap())
+    };
+    for v in 1..=15u64 {
+        cluster.put(key, &v.to_be_bytes()).unwrap();
+        assert_eq!(read_counter(&cluster), v, "stale read before the fault");
+    }
+    // Kill the shard leader: its process-equivalent (thread + TCP
+    // listener + connections) disappears mid-stream.
+    let victim = cluster.shard_leader(0).unwrap();
+    cluster.kill(0, victim).unwrap();
+    assert!(read_counter(&cluster) >= 15, "read lost an acknowledged write across the kill");
+    for v in 16..=25u64 {
+        cluster.put(key, &v.to_be_bytes()).unwrap();
+        assert_eq!(read_counter(&cluster), v, "stale read after leader change");
+    }
+    let new_leader = cluster.shard_leader(0).unwrap();
+    assert_ne!(new_leader, victim, "a survivor took over");
+    // The survivors really were talking TCP, and their frames to the
+    // dead peer were accounted as drops, not silently queued.
+    let wire = cluster.wire_stats();
+    assert!(wire.msgs > 0 && wire.bytes > 0, "no TCP traffic recorded: {wire:?}");
+    assert!(wire.dropped > 0, "frames to the killed node must count dropped: {wire:?}");
     cluster.shutdown().unwrap();
     let _ = std::fs::remove_dir_all(&dir);
 }
