@@ -159,6 +159,36 @@ fn main() -> anyhow::Result<()> {
         println!("{:<22} {:>12.1}", "Nezha (During-GC)", ms);
     }
 
+    // Nezha During-GC, faulted: the cycle genuinely runs and its
+    // commit point — the LEVELS manifest fsync — fails via an injected
+    // disk fault, leaving real torn during-GC state on disk (partial
+    // output runs, GcState running, pre-fault manifest).  Recovery
+    // must adopt the old manifest and resume the cycle.  This is the
+    // faulted twin of the synthetic During-GC scenario above.
+    {
+        let dir = base("faulted");
+        let dirs = shard_dirs(&dir, shards);
+        build_shards(&dirs, EngineKind::Nezha, per_shard, vs, |r, dir| {
+            let last_index = r.node.last_applied();
+            let last_term = r.node.log.term_at(last_index).unwrap_or(1);
+            let frozen = r.node.log.rotate()?;
+            let edir = nezha::coordinator::replica::engine_dir(dir);
+            nezha::fault::disk::arm(
+                &[edir.to_string_lossy().into_owned(), "LEVELS".into()],
+                nezha::fault::disk::DiskOp::Sync,
+                1,
+            );
+            r.engine().begin_gc(&[FrozenEpoch::new(frozen)], 0, last_index, last_term)?;
+            // The commit fails; the cycle stays interrupted (During).
+            let torn = r.finish_gc().is_err() || r.gc_history.is_empty();
+            nezha::fault::disk::clear();
+            anyhow::ensure!(torn, "LEVELS fault did not tear the GC commit");
+            Ok(())
+        })?;
+        let ms = time_reopen(&dirs, EngineKind::Nezha)?;
+        println!("{:<22} {:>12.1}", "Nezha (During, torn)", ms);
+    }
+
     // Nezha Post-GC: a completed cycle, then a crash.
     {
         let dir = base("post");

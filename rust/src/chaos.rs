@@ -1,0 +1,350 @@
+//! Chaos harness: concurrent clients + nemesis + linearizability check.
+//!
+//! One [`run_chaos`] call is a complete Jepsen-style experiment:
+//!
+//! 1. start a replicated cluster (Bus or TCP transport) with its
+//!    [`crate::fault::FaultPlan`] seeded from the run seed,
+//! 2. spawn client threads doing register writes/reads over a small
+//!    key space, each recording a [`crate::check::ClientOp`] history
+//!    entry with monotonic call/return timestamps,
+//! 3. walk a [`Nemesis`] schedule against the live cluster — leader
+//!    partitions, link flapping, disk-fault + crash + restart —
+//!    picked by [`ScheduleKind`],
+//! 4. repair everything (heal, disarm disk faults, restart dead
+//!    nodes), let the clients run a short post-heal grace period so
+//!    the rejoined node serves traffic,
+//! 5. stop, merge histories, and run the WGL checker
+//!    ([`crate::check::check_history`]) in the mode matching the
+//!    cluster's read consistency.
+//!
+//! Failed writes are recorded as *indeterminate* (the proposal may
+//! commit after the client gave up — the checker treats them as
+//! optional); failed reads carry no information and are dropped.
+//!
+//! Determinism: the fault plan's drop/duplicate/reorder verdicts are a
+//! pure function of the seed (see `fault::tests` and the SimNet trace
+//! test), and the nemesis schedule is fixed data derived from the
+//! options — so a seed names one abuse pattern exactly.  Thread
+//! interleaving still varies between runs; the *checker* is what turns
+//! that nondeterminism into a pass/fail oracle.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::check::{check_history, ClientOp, Mode, OpKind, Violation};
+use crate::coordinator::{Cluster, ClusterConfig, Nemesis, NemesisEvent, NemesisOp, ReadConsistency};
+use crate::engine::EngineKind;
+use crate::fault::disk::DiskOp;
+use crate::raft::{NetConfig, NodeId, TransportKind};
+use crate::util::{now_micros, Rng};
+
+/// Which abuse pattern the nemesis walks (offsets are fractions of
+/// [`ChaosOpts::run_ms`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// Symmetrically partition the leader off at 20%, heal at 60%.
+    PartitionHeal,
+    /// Arm a one-shot LEVELS-manifest fsync fault on the leader at
+    /// 15% (its next GC commit point fails mid-cycle), crash that
+    /// node abruptly at 45%, restart it at 65% — the genuine
+    /// "kill -9 mid-GC, recover from disk" drill.
+    CrashRestartMidGc,
+    /// Three down/up rounds of fully-lossy leader links starting at
+    /// 20%, with background duplication + reordering for the whole
+    /// run.
+    FlappingLinks,
+}
+
+impl ScheduleKind {
+    pub const ALL: [ScheduleKind; 3] =
+        [ScheduleKind::PartitionHeal, ScheduleKind::CrashRestartMidGc, ScheduleKind::FlappingLinks];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ScheduleKind::PartitionHeal => "partition-heal",
+            ScheduleKind::CrashRestartMidGc => "crash-restart-mid-gc",
+            ScheduleKind::FlappingLinks => "flapping-links",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ScheduleKind> {
+        ScheduleKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+
+    fn events(self, run_ms: u64) -> Vec<NemesisEvent> {
+        let at = |f: f64| (run_ms as f64 * f) as u64;
+        match self {
+            ScheduleKind::PartitionHeal => vec![
+                NemesisEvent { at_ms: at(0.2), op: NemesisOp::PartitionLeader { shard: 0 } },
+                NemesisEvent { at_ms: at(0.6), op: NemesisOp::Heal },
+            ],
+            ScheduleKind::CrashRestartMidGc => vec![
+                NemesisEvent {
+                    at_ms: at(0.15),
+                    op: NemesisOp::ArmLeaderDiskFault {
+                        shard: 0,
+                        file_substr: "LEVELS".to_string(),
+                        op: DiskOp::Sync,
+                        nth: 1,
+                    },
+                },
+                NemesisEvent { at_ms: at(0.45), op: NemesisOp::CrashRemembered },
+                NemesisEvent { at_ms: at(0.5), op: NemesisOp::ClearDiskFaults },
+                NemesisEvent { at_ms: at(0.65), op: NemesisOp::RestartRemembered },
+            ],
+            ScheduleKind::FlappingLinks => vec![
+                NemesisEvent { at_ms: at(0.05), op: NemesisOp::SetDuplication(0.05) },
+                NemesisEvent { at_ms: at(0.05), op: NemesisOp::SetReorder(0.10, 500) },
+                NemesisEvent {
+                    at_ms: at(0.2),
+                    op: NemesisOp::FlapLeaderLink { shard: 0, times: 3, down_ms: 150, up_ms: 150 },
+                },
+            ],
+        }
+    }
+}
+
+/// One chaos experiment's knobs.
+#[derive(Clone, Debug)]
+pub struct ChaosOpts {
+    /// Seeds the fault plan, the client op streams, and the data dir
+    /// name.  Same seed ⇒ same abuse pattern.
+    pub seed: u64,
+    pub schedule: ScheduleKind,
+    pub read_consistency: ReadConsistency,
+    pub transport: TransportKind,
+    pub clients: usize,
+    /// Nominal run length; the post-heal grace period adds ~25%.
+    pub run_ms: u64,
+    /// Data directory; defaults to a seed-named temp dir (removed on
+    /// success, kept on violation for the post-mortem).
+    pub dir: Option<PathBuf>,
+}
+
+impl ChaosOpts {
+    pub fn new(seed: u64, schedule: ScheduleKind) -> Self {
+        Self {
+            seed,
+            schedule,
+            read_consistency: ReadConsistency::Linearizable,
+            transport: TransportKind::Inproc,
+            clients: 3,
+            run_ms: 4_000,
+            dir: None,
+        }
+    }
+}
+
+/// What a chaos run produced.
+#[derive(Debug)]
+pub struct ChaosReport {
+    pub writes: usize,
+    pub reads: usize,
+    /// Writes whose ack was lost (errored/timed out); the checker
+    /// treats them as may-or-may-not-have-happened.
+    pub indeterminate: usize,
+    /// `None` = history checked clean.
+    pub violation: Option<Violation>,
+    /// The nemesis's fired-event record, for failure dumps.
+    pub nemesis_log: Vec<String>,
+    /// Nodes that were dead at repair time and restarted.
+    pub restarted: Vec<NodeId>,
+}
+
+impl ChaosReport {
+    pub fn ok(&self) -> bool {
+        self.violation.is_none()
+    }
+}
+
+const KEYS: usize = 6;
+
+/// Stored value size.  The register payload is the first 8 bytes; the
+/// zero padding keeps the vlog growing fast enough that GC cycles
+/// genuinely run during a few-second chaos window.
+const VALUE_BYTES: usize = 256;
+
+fn chaos_key(k: usize) -> Vec<u8> {
+    format!("chaos-key-{k}").into_bytes()
+}
+
+fn encode_value(v: u64) -> Vec<u8> {
+    let mut buf = v.to_be_bytes().to_vec();
+    buf.resize(VALUE_BYTES, 0);
+    buf
+}
+
+fn parse_value(bytes: &[u8]) -> Option<u64> {
+    bytes.get(..8).map(|b| u64::from_be_bytes(b.try_into().expect("8 bytes")))
+}
+
+/// Run one chaos experiment end to end.  `Ok(report)` even when the
+/// checker found a violation — `report.violation` is the verdict;
+/// `Err` means the harness itself broke (cluster never started, node
+/// never restarted, ...).
+pub fn run_chaos(opts: &ChaosOpts) -> Result<ChaosReport> {
+    let dir = opts.dir.clone().unwrap_or_else(|| {
+        std::env::temp_dir().join(format!(
+            "nezha-chaos-{}-{}-{:x}-{}",
+            opts.schedule.name(),
+            match opts.transport {
+                TransportKind::Inproc => "bus",
+                TransportKind::Tcp => "tcp",
+            },
+            opts.seed,
+            std::process::id()
+        ))
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut cfg = ClusterConfig::new(&dir, EngineKind::Nezha, 3);
+    cfg.engine.memtable_bytes = 64 << 10;
+    cfg.gc.threshold_bytes = 32 << 10; // plenty of GC cycles during the run
+    cfg.net = NetConfig { latency_us: (0, 0), loss: 0.0, seed: opts.seed };
+    cfg.seed = opts.seed;
+    cfg.read_consistency = opts.read_consistency;
+    cfg.transport = opts.transport;
+    cfg.faults = Arc::new(crate::fault::FaultPlan::new(opts.seed));
+    // A clean slate in case an earlier run in this process armed one.
+    crate::fault::disk::clear();
+
+    let cluster = Arc::new(Cluster::start(cfg).context("chaos cluster start")?);
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Client threads: register writes/reads over a small key space,
+    // values unique per (client, seq) so the checker can map a read
+    // back to its write.
+    let mut workers = Vec::new();
+    for c in 0..opts.clients {
+        let cluster = Arc::clone(&cluster);
+        let stop = Arc::clone(&stop);
+        let seed = opts.seed;
+        workers.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(seed.wrapping_mul(1_000_003).wrapping_add(c as u64 + 1));
+            let mut history: Vec<ClientOp> = Vec::new();
+            let mut seq = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let key = chaos_key(rng.below(KEYS as u64) as usize);
+                if rng.chance(0.5) {
+                    seq += 1;
+                    let value = ((c as u64 + 1) << 32) | seq;
+                    let call_us = now_micros();
+                    let res = cluster.put(&key, &encode_value(value));
+                    let ret_us = now_micros();
+                    history.push(ClientOp {
+                        client: c as u32,
+                        key,
+                        kind: OpKind::Write { value, acked: res.is_ok() },
+                        call_us,
+                        ret_us: if res.is_ok() { ret_us } else { u64::MAX },
+                    });
+                } else {
+                    let call_us = now_micros();
+                    let res = cluster.get(&key);
+                    let ret_us = now_micros();
+                    if let Ok(v) = res {
+                        history.push(ClientOp {
+                            client: c as u32,
+                            key,
+                            kind: OpKind::Read { value: v.as_deref().and_then(parse_value) },
+                            call_us,
+                            ret_us,
+                        });
+                    }
+                    // A failed read observed nothing: drop it.
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            history
+        }));
+    }
+
+    // The nemesis walks its schedule on this thread.
+    let mut nemesis = Nemesis::new(opts.schedule.events(opts.run_ms));
+    nemesis.run(&cluster);
+
+    // Repair: heal the network, disarm disk faults, restart whatever
+    // died, and insist on a leader before the grace period.
+    cluster.fault_plan().clear();
+    crate::fault::disk::clear();
+    let alive = cluster.node_ids();
+    let mut restarted = Vec::new();
+    for id in 1..=3u64 {
+        if !alive.contains(&id) {
+            cluster.restart(0, id).with_context(|| format!("repair restart of node {id}"))?;
+            restarted.push(id);
+        }
+    }
+    cluster.wait_for_leader(Duration::from_secs(10)).context("no leader after repair")?;
+
+    // Post-heal grace: the rejoined/restarted node takes live traffic.
+    std::thread::sleep(Duration::from_millis(opts.run_ms / 4));
+    stop.store(true, Ordering::Relaxed);
+
+    let mut history: Vec<ClientOp> = Vec::new();
+    let mut indeterminate = 0;
+    for w in workers {
+        let h = w.join().expect("client thread panicked");
+        indeterminate +=
+            h.iter().filter(|o| matches!(o.kind, OpKind::Write { acked: false, .. })).count();
+        history.extend(h);
+    }
+    let writes = history.iter().filter(|o| matches!(o.kind, OpKind::Write { .. })).count();
+    let reads = history.len() - writes;
+
+    let mode = match opts.read_consistency {
+        ReadConsistency::Stale => Mode::Stale,
+        _ => Mode::Linearizable,
+    };
+    let violation = check_history(&history, mode).err();
+
+    let report = ChaosReport {
+        writes,
+        reads,
+        indeterminate,
+        violation,
+        nemesis_log: nemesis.log().to_vec(),
+        restarted,
+    };
+
+    let cluster = Arc::try_unwrap(cluster)
+        .map_err(|_| anyhow::anyhow!("cluster Arc still shared after join"))?;
+    cluster.shutdown().context("chaos cluster shutdown")?;
+    if report.ok() && opts.dir.is_none() {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full chaos experiments live in `tests/chaos.rs` (they take
+    // seconds each); here we only pin the cheap pure pieces.
+
+    #[test]
+    fn schedules_are_sorted_and_in_range() {
+        for kind in ScheduleKind::ALL {
+            let evs = kind.events(4_000);
+            assert!(!evs.is_empty());
+            assert!(evs.windows(2).all(|w| w[0].at_ms <= w[1].at_ms), "{kind:?}");
+            assert!(evs.iter().all(|e| e.at_ms < 4_000), "{kind:?}");
+            assert_eq!(ScheduleKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ScheduleKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn value_codec_round_trips() {
+        let v = (7u64 << 32) | 42;
+        assert_eq!(parse_value(&encode_value(v)), Some(v));
+        assert_eq!(encode_value(v).len(), VALUE_BYTES);
+        assert_eq!(parse_value(b""), None);
+        assert_eq!(parse_value(b"short"), None);
+    }
+}

@@ -1,0 +1,431 @@
+//! Linearizability checking over recorded client histories.
+//!
+//! The chaos harness ([`crate::chaos`]) records every client operation
+//! as a [`ClientOp`]: a register write or read against one key, with
+//! wall-clock call/return instants ([`crate::util::now_micros`]).  This
+//! module decides whether such a history is **linearizable** — some
+//! total order of the operations (i) respects real time (an op that
+//! returned before another was called orders first) and (ii) matches
+//! sequential register semantics (every read returns the latest
+//! preceding write, or `None` before any write).
+//!
+//! The search is the Wing & Gong / WGL construction: per key
+//! (independent registers linearize independently), depth-first over
+//! "which pending op linearizes next", with the classic candidate rule
+//! — an op may go next only if it was *called* no later than the
+//! earliest *return* among pending required ops — and memoization on
+//! `(linearized-set, register value)` so revisited configurations
+//! prune (Lowe's optimization, the difference between exponential and
+//! usable).
+//!
+//! **Indeterminate writes** (the client saw an error or a timeout; the
+//! proposal may still commit later) get `ret_us = ∞` and become
+//! *optional*: the search may linearize them at any point after their
+//! call, or never.  This is exactly Jepsen's `:info` op treatment.
+//!
+//! [`Mode::Stale`] is the weaker contract for
+//! `ReadConsistency::Stale`: stale reads may lag acknowledged writes,
+//! so full linearizability is out — instead every read must return
+//! `None` or a value whose write was *called* before the read
+//! returned (no fabricated and no from-the-future values), and the
+//! writes alone must still be linearizable.
+
+use std::collections::{HashMap, HashSet};
+
+/// One recorded client operation against one key.
+#[derive(Clone, Debug)]
+pub struct ClientOp {
+    /// Recording client (diagnostics only; the checker is shared-memory
+    /// linearizability, not per-client sequential consistency).
+    pub client: u32,
+    pub key: Vec<u8>,
+    pub kind: OpKind,
+    /// Invocation instant, µs (monotonic, shared by all clients).
+    pub call_us: u64,
+    /// Return instant, µs.  `u64::MAX` marks an indeterminate op
+    /// (errored/timed out — it may or may not have taken effect).
+    pub ret_us: u64,
+}
+
+/// Register semantics: unique-valued writes, point reads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// `acked = false` ⇒ indeterminate (optional in the search).
+    Write { value: u64, acked: bool },
+    Read { value: Option<u64> },
+}
+
+/// What contract to hold the history to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Linearizable,
+    /// Writes linearizable; reads bounded by "no fabricated, no
+    /// future values" (see module docs).
+    Stale,
+}
+
+/// A checker verdict: which key failed and why.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub key: Vec<u8>,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "key {:?}: {}", String::from_utf8_lossy(&self.key), self.detail)
+    }
+}
+
+/// Check a whole history (all keys) against `mode`.
+pub fn check_history(ops: &[ClientOp], mode: Mode) -> Result<(), Violation> {
+    let mut per_key: HashMap<&[u8], Vec<&ClientOp>> = HashMap::new();
+    for op in ops {
+        per_key.entry(&op.key).or_default().push(op);
+    }
+    // Deterministic key order so a failing run reports stably.
+    let mut keys: Vec<&[u8]> = per_key.keys().copied().collect();
+    keys.sort_unstable();
+    for key in keys {
+        let mut kops = per_key.remove(key).expect("key listed");
+        kops.sort_by_key(|o| (o.call_us, o.ret_us));
+        let res = match mode {
+            Mode::Linearizable => check_key(&kops),
+            Mode::Stale => check_key_stale(&kops),
+        };
+        if let Err(detail) = res {
+            return Err(Violation { key: key.to_vec(), detail });
+        }
+    }
+    Ok(())
+}
+
+/// Effective return instant: indeterminate ops never constrain the
+/// candidate rule.
+fn ret_of(op: &ClientOp) -> u64 {
+    match op.kind {
+        OpKind::Write { acked: false, .. } => u64::MAX,
+        _ => op.ret_us,
+    }
+}
+
+fn required(op: &ClientOp) -> bool {
+    !matches!(op.kind, OpKind::Write { acked: false, .. })
+}
+
+/// Fixed-size-free bitset key for the memo table.
+fn mask_of(done: &[bool]) -> Vec<u64> {
+    let mut m = vec![0u64; done.len().div_ceil(64)];
+    for (i, &d) in done.iter().enumerate() {
+        if d {
+            m[i / 64] |= 1 << (i % 64);
+        }
+    }
+    m
+}
+
+/// WGL search for one key's register history.
+fn check_key(ops: &[&ClientOp]) -> Result<(), String> {
+    // Cheap pre-pass: a read returning a value no write ever carried
+    // can never linearize; fail it without burning search time.
+    let written: HashSet<u64> = ops
+        .iter()
+        .filter_map(|o| match o.kind {
+            OpKind::Write { value, .. } => Some(value),
+            _ => None,
+        })
+        .collect();
+    for o in ops {
+        if let OpKind::Read { value: Some(v) } = o.kind {
+            if !written.contains(&v) {
+                return Err(format!("read returned {v}, which no write ever wrote"));
+            }
+        }
+    }
+
+    let n = ops.len();
+    let mut done = vec![false; n];
+    let mut reg: Option<u64> = None;
+    // (index linearized, register value it replaced)
+    let mut stack: Vec<(usize, Option<u64>)> = Vec::new();
+    let mut memo: HashSet<(Vec<u64>, Option<u64>)> = HashSet::new();
+    // Resume point after backtracking: start scanning candidates
+    // strictly after the op we just undid.
+    let mut resume = 0usize;
+
+    loop {
+        // Done when every required op is linearized (leftover
+        // indeterminate writes simply never took effect).
+        if ops.iter().enumerate().all(|(i, o)| done[i] || !required(o)) {
+            return Ok(());
+        }
+        // Candidate bound: the earliest return among pending required
+        // ops.  Anything called after that cannot go first.
+        let bound = ops
+            .iter()
+            .enumerate()
+            .filter(|&(i, o)| !done[i] && required(o))
+            .map(|(_, o)| ret_of(o))
+            .min()
+            .unwrap_or(u64::MAX);
+        let mut advanced = false;
+        for i in resume..n {
+            if done[i] || ops[i].call_us > bound {
+                continue;
+            }
+            // Does op i linearize against the current register?
+            let next_reg = match ops[i].kind {
+                OpKind::Write { value, .. } => Some(value),
+                OpKind::Read { value } => {
+                    if value != reg {
+                        continue;
+                    }
+                    reg
+                }
+            };
+            done[i] = true;
+            let memo_key = (mask_of(&done), next_reg);
+            if !memo.insert(memo_key) {
+                done[i] = false;
+                continue; // configuration already explored
+            }
+            stack.push((i, reg));
+            reg = next_reg;
+            resume = 0;
+            advanced = true;
+            break;
+        }
+        if advanced {
+            continue;
+        }
+        // Dead end: undo the last choice and try later candidates.
+        match stack.pop() {
+            Some((i, prev_reg)) => {
+                done[i] = false;
+                reg = prev_reg;
+                resume = i + 1;
+            }
+            None => {
+                return Err(format!(
+                    "no linearization exists ({} ops; first unexplained: {})",
+                    n,
+                    first_unexplained(ops)
+                ));
+            }
+        }
+    }
+}
+
+/// Diagnostic: the earliest-returning read (reads are what make
+/// register histories fail).
+fn first_unexplained(ops: &[&ClientOp]) -> String {
+    ops.iter()
+        .filter(|o| matches!(o.kind, OpKind::Read { .. }))
+        .min_by_key(|o| o.ret_us)
+        .map(|o| {
+            format!(
+                "client {} read {:?} in [{}, {}]µs",
+                o.client,
+                match o.kind {
+                    OpKind::Read { value } => value,
+                    _ => None,
+                },
+                o.call_us,
+                o.ret_us
+            )
+        })
+        .unwrap_or_else(|| "(no reads)".to_string())
+}
+
+/// The `Stale` contract for one key (see module docs).
+fn check_key_stale(ops: &[&ClientOp]) -> Result<(), String> {
+    // 1. No fabricated and no from-the-future read values: the value's
+    //    write must have been *called* before the read *returned*.
+    let mut write_call: HashMap<u64, u64> = HashMap::new();
+    for o in ops {
+        if let OpKind::Write { value, .. } = o.kind {
+            write_call.insert(value, o.call_us);
+        }
+    }
+    for o in ops {
+        if let OpKind::Read { value: Some(v) } = o.kind {
+            match write_call.get(&v) {
+                None => return Err(format!("stale read returned {v}, which was never written")),
+                Some(&wc) if wc > o.ret_us => {
+                    return Err(format!(
+                        "stale read returned {v} before its write was even called \
+                         (write call {wc}µs > read return {}µs)",
+                        o.ret_us
+                    ));
+                }
+                Some(_) => {}
+            }
+        }
+    }
+    // 2. The writes alone must still linearize (they go through the
+    //    leader regardless of read consistency).
+    let writes: Vec<&ClientOp> =
+        ops.iter().copied().filter(|o| matches!(o.kind, OpKind::Write { .. })).collect();
+    check_key(&writes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(client: u32, value: u64, call: u64, ret: u64) -> ClientOp {
+        ClientOp {
+            client,
+            key: b"k".to_vec(),
+            kind: OpKind::Write { value, acked: true },
+            call_us: call,
+            ret_us: ret,
+        }
+    }
+
+    fn w_maybe(client: u32, value: u64, call: u64) -> ClientOp {
+        ClientOp {
+            client,
+            key: b"k".to_vec(),
+            kind: OpKind::Write { value, acked: false },
+            call_us: call,
+            ret_us: u64::MAX,
+        }
+    }
+
+    fn r(client: u32, value: Option<u64>, call: u64, ret: u64) -> ClientOp {
+        ClientOp {
+            client,
+            key: b"k".to_vec(),
+            kind: OpKind::Read { value },
+            call_us: call,
+            ret_us: ret,
+        }
+    }
+
+    #[test]
+    fn empty_and_trivial_histories_pass() {
+        assert!(check_history(&[], Mode::Linearizable).is_ok());
+        let h = [w(1, 10, 0, 5), r(1, Some(10), 6, 8)];
+        assert!(check_history(&h, Mode::Linearizable).is_ok());
+        let h = [r(1, None, 0, 2)];
+        assert!(check_history(&h, Mode::Linearizable).is_ok());
+    }
+
+    #[test]
+    fn stale_read_after_acked_write_fails() {
+        // w=10 fully returned before the read began, yet the read saw
+        // the initial state: the canonical linearizability violation.
+        let h = [w(1, 10, 0, 5), r(2, None, 10, 12)];
+        let err = check_history(&h, Mode::Linearizable).unwrap_err();
+        assert!(err.detail.contains("no linearization"), "{err}");
+    }
+
+    #[test]
+    fn old_value_after_newer_acked_write_fails() {
+        let h = [w(1, 10, 0, 5), w(1, 20, 6, 9), r(2, Some(10), 15, 18)];
+        assert!(check_history(&h, Mode::Linearizable).is_err());
+    }
+
+    #[test]
+    fn concurrent_read_may_see_either_side() {
+        // The read overlaps the write: both old and new values are
+        // legal linearizations.
+        let h1 = [w(1, 10, 0, 5), w(1, 20, 10, 20), r(2, Some(10), 12, 18)];
+        assert!(check_history(&h1, Mode::Linearizable).is_ok());
+        let h2 = [w(1, 10, 0, 5), w(1, 20, 10, 20), r(2, Some(20), 12, 18)];
+        assert!(check_history(&h2, Mode::Linearizable).is_ok());
+    }
+
+    #[test]
+    fn fabricated_value_fails_fast() {
+        let h = [w(1, 10, 0, 5), r(2, Some(99), 6, 8)];
+        let err = check_history(&h, Mode::Linearizable).unwrap_err();
+        assert!(err.detail.contains("no write ever wrote"), "{err}");
+    }
+
+    #[test]
+    fn indeterminate_write_may_or_may_not_apply() {
+        // The errored write's value shows up later: legal (it committed
+        // after the client gave up).
+        let h = [w_maybe(1, 10, 0), r(2, Some(10), 100, 110)];
+        assert!(check_history(&h, Mode::Linearizable).is_ok());
+        // It never shows up: equally legal.
+        let h = [w_maybe(1, 10, 0), r(2, None, 100, 110)];
+        assert!(check_history(&h, Mode::Linearizable).is_ok());
+        // But it cannot un-write an acked later value...
+        let h = [w_maybe(1, 10, 0), w(2, 20, 50, 60), r(3, Some(20), 100, 110)];
+        assert!(check_history(&h, Mode::Linearizable).is_ok());
+        // ...unless it linearized after it (overlapping futures): the
+        // old value may legally surface if the indeterminate write
+        // landed after the acked one.
+        let h = [w_maybe(1, 10, 0), w(2, 20, 50, 60), r(3, Some(10), 100, 110)];
+        assert!(check_history(&h, Mode::Linearizable).is_ok());
+    }
+
+    #[test]
+    fn real_time_order_is_respected_for_writes() {
+        // w=10 ret 5, w=20 call 10 (strictly later), read well after
+        // both sees 10: only legal if w=10 linearized after w=20 —
+        // impossible in real time.
+        let h = [w(1, 10, 0, 5), w(2, 20, 10, 15), r(3, Some(10), 20, 25)];
+        assert!(check_history(&h, Mode::Linearizable).is_err());
+    }
+
+    #[test]
+    fn keys_check_independently() {
+        let mut a = w(1, 10, 0, 5);
+        a.key = b"a".to_vec();
+        let mut b = r(2, None, 10, 12);
+        b.key = b"b".to_vec();
+        // Stale on key "a" would fail; the read is on key "b".
+        assert!(check_history(&[a, b], Mode::Linearizable).is_ok());
+    }
+
+    #[test]
+    fn stale_mode_allows_lag_but_not_fabrication_or_futures() {
+        // Lagging read (saw the older value after a newer ack): fine.
+        let h = [w(1, 10, 0, 5), w(1, 20, 6, 9), r(2, Some(10), 15, 18)];
+        assert!(check_history(&h, Mode::Stale).is_ok());
+        // Initial-state read long after writes: fine under Stale.
+        let h = [w(1, 10, 0, 5), r(2, None, 15, 18)];
+        assert!(check_history(&h, Mode::Stale).is_ok());
+        // Fabricated value: never fine.
+        let h = [w(1, 10, 0, 5), r(2, Some(99), 15, 18)];
+        assert!(check_history(&h, Mode::Stale).is_err());
+        // Value from the future (write called after the read
+        // returned): never fine.
+        let h = [r(2, Some(10), 0, 3), w(1, 10, 50, 55)];
+        assert!(check_history(&h, Mode::Stale).is_err());
+    }
+
+    #[test]
+    fn interleaved_multi_client_history_passes() {
+        // A dense, fully sequential ping-pong: always linearizable.
+        let mut h = Vec::new();
+        let mut t = 0;
+        let mut last = None;
+        for i in 0..200u64 {
+            let c = (i % 3) as u32 + 1;
+            if i % 2 == 0 {
+                h.push(w(c, i, t, t + 3));
+                last = Some(i);
+            } else {
+                h.push(r(c, last, t, t + 3));
+            }
+            t += 5;
+        }
+        assert!(check_history(&h, Mode::Linearizable).is_ok());
+        assert!(check_history(&h, Mode::Stale).is_ok());
+    }
+
+    #[test]
+    fn memoization_survives_heavy_concurrency() {
+        // 12 fully-overlapping writes then a read of one of them: the
+        // naive search is 12! orders; the memo table must make this
+        // instant.
+        let mut h: Vec<ClientOp> = (0..12u64).map(|i| w(i as u32, i, 0, 100)).collect();
+        h.push(r(99, Some(7), 200, 210));
+        assert!(check_history(&h, Mode::Linearizable).is_ok());
+    }
+}

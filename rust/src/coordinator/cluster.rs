@@ -38,6 +38,7 @@
 use super::replica::{ReadLane, Replica};
 use super::router::{merge_sorted, split_keys, split_ops, ShardId, ShardRouter};
 use crate::engine::{EngineKind, EngineOpts, EngineStats};
+use crate::fault::FaultPlan;
 use crate::gc::{GcConfig, GcOutput, GcPhase};
 use crate::raft::node::Outbox;
 use crate::raft::{
@@ -112,6 +113,11 @@ pub enum Req {
         resp: SyncSender<Vec<GcOutput>>,
     },
     Stop,
+    /// Abrupt stop (nemesis): exit the node loop immediately, WITHOUT
+    /// finishing in-flight GC or answering queued requests — the
+    /// in-process analogue of `kill -9`.  Recovery must cope with
+    /// whatever the disk holds.
+    Crash,
 }
 
 /// One (shard, node) replica's status row.  [`Cluster::status`] rolls
@@ -159,6 +165,13 @@ pub struct ClusterConfig {
     /// TCP sockets over loopback.  Multi-process clusters
     /// (`nezha serve`) always run TCP with explicit peer addresses.
     pub transport: TransportKind,
+    /// Shared network fault plan, threaded into every shard's
+    /// transport.  Inert by default; the nemesis driver mutates it at
+    /// runtime ([`Cluster::fault_plan`]).  One plan covers all shards
+    /// — node ids are identical across shard groups, so a partition
+    /// of node 2 cuts node 2's links in every group, which is exactly
+    /// the machine-level fault a real partition is.
+    pub faults: Arc<FaultPlan>,
 }
 
 impl ClusterConfig {
@@ -187,6 +200,7 @@ impl ClusterConfig {
             router: ShardRouter::hash(1),
             read_consistency: ReadConsistency::default(),
             transport: TransportKind::default(),
+            faults: Arc::new(FaultPlan::new(0xFA17)),
             base_dir: base,
         }
     }
@@ -218,7 +232,11 @@ struct NodeThread {
 /// A running cluster.
 pub struct Cluster {
     cfg: ClusterConfig,
-    threads: HashMap<(ShardId, NodeId), NodeThread>,
+    /// Live replica threads.  Behind a mutex so fault injection
+    /// ([`Self::kill`]/[`Self::crash`]/[`Self::restart`]) works
+    /// through `&self` — a chaos run shares one `Arc<Cluster>` between
+    /// client threads and the nemesis driver.
+    threads: Mutex<HashMap<(ShardId, NodeId), NodeThread>>,
     /// One network per shard group ([`Bus`] or [`TcpNet`] per
     /// [`ClusterConfig::transport`]).
     nets: Vec<Net>,
@@ -226,6 +244,32 @@ pub struct Cluster {
     leader_cache: Vec<Mutex<Option<NodeId>>>,
     /// Per-shard round-robin cursor for replica-served reads.
     read_rr: Vec<AtomicUsize>,
+}
+
+/// Spawn one (shard, node) replica thread on an already-registered
+/// mailbox.  Shared by [`Cluster::start`] and [`Cluster::restart`] so
+/// a restarted node is configured identically to its first life.
+fn spawn_node(
+    cfg: &ClusterConfig,
+    net: &Net,
+    shard: ShardId,
+    id: NodeId,
+    mailbox: Arc<crate::raft::transport::Mailbox>,
+) -> Result<NodeThread> {
+    let ids: Vec<NodeId> = (1..=cfg.nodes as u64).collect();
+    let peers: Vec<NodeId> = ids.into_iter().filter(|&p| p != id).collect();
+    let mailbox2 = Arc::clone(&mailbox);
+    let (tx, rx) = mpsc::channel::<Req>();
+    let cfg2 = cfg.clone();
+    let net2 = net.clone();
+    let join = std::thread::Builder::new()
+        .name(format!("nezha-s{shard}-n{id}"))
+        .spawn(move || {
+            if let Err(e) = node_loop(id, shard, peers, cfg2, net2, mailbox2, rx) {
+                eprintln!("node {id} shard {shard} crashed: {e:#}");
+            }
+        })?;
+    Ok(NodeThread { tx, mailbox, join })
 }
 
 impl Cluster {
@@ -238,10 +282,12 @@ impl Cluster {
         let mut threads = HashMap::new();
         for shard in 0..shards {
             let net = match cfg.transport {
-                TransportKind::Inproc => Net::Bus(Bus::new(cfg.net.clone())),
+                TransportKind::Inproc => {
+                    Net::Bus(Bus::with_faults(cfg.net.clone(), Arc::clone(&cfg.faults)))
+                }
                 // Loopback TCP with OS-assigned ports; peers discover
                 // each other through the shared address map.
-                TransportKind::Tcp => Net::Tcp(TcpNet::new()),
+                TransportKind::Tcp => Net::Tcp(TcpNet::with_faults(Arc::clone(&cfg.faults))),
             };
             // Register every node before spawning any thread so the
             // first elections don't race listener/mailbox setup.
@@ -250,19 +296,7 @@ impl Cluster {
                 mailboxes.push(net.register(id)?);
             }
             for (&id, mailbox) in ids.iter().zip(mailboxes) {
-                let peers: Vec<NodeId> = ids.iter().copied().filter(|&p| p != id).collect();
-                let mailbox2 = Arc::clone(&mailbox);
-                let (tx, rx) = mpsc::channel::<Req>();
-                let cfg2 = cfg.clone();
-                let net2 = net.clone();
-                let join = std::thread::Builder::new()
-                    .name(format!("nezha-s{shard}-n{id}"))
-                    .spawn(move || {
-                        if let Err(e) = node_loop(id, shard, peers, cfg2, net2, mailbox2, rx) {
-                            eprintln!("node {id} shard {shard} crashed: {e:#}");
-                        }
-                    })?;
-                threads.insert((shard, id), NodeThread { tx, mailbox, join });
+                threads.insert((shard, id), spawn_node(&cfg, &net, shard, id, mailbox)?);
             }
             nets.push(net);
         }
@@ -270,11 +304,17 @@ impl Cluster {
             leader_cache: (0..shards).map(|_| Mutex::new(None)).collect(),
             read_rr: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
             cfg,
-            threads,
+            threads: Mutex::new(threads),
             nets,
         };
         cluster.wait_for_leader(Duration::from_secs(10 * shards as u64))?;
         Ok(cluster)
+    }
+
+    /// The shared network fault plan — mutate it to inject partitions,
+    /// duplication, reordering, or link overrides at runtime.
+    pub fn fault_plan(&self) -> Arc<FaultPlan> {
+        Arc::clone(&self.cfg.faults)
     }
 
     /// Aggregate wire counters across every shard's transport —
@@ -292,7 +332,8 @@ impl Cluster {
     }
 
     pub fn node_ids(&self) -> Vec<NodeId> {
-        let mut v: Vec<NodeId> = self.threads.keys().map(|&(_, id)| id).collect();
+        let mut v: Vec<NodeId> =
+            self.threads.lock().unwrap().keys().map(|&(_, id)| id).collect();
         v.sort_unstable();
         v.dedup();
         v
@@ -303,13 +344,15 @@ impl Cluster {
     }
 
     fn req(&self, shard: ShardId, id: NodeId, req: Req) -> Result<()> {
-        let t = self
-            .threads
-            .get(&(shard, id))
-            .ok_or_else(|| anyhow!("no node {id} for shard {shard}"))?;
-        t.tx.send(req)
-            .map_err(|_| anyhow!("node {id} shard {shard} stopped"))?;
-        t.mailbox.notify(); // wake the node loop immediately
+        let (tx, mailbox) = {
+            let threads = self.threads.lock().unwrap();
+            let t = threads
+                .get(&(shard, id))
+                .ok_or_else(|| anyhow!("no node {id} for shard {shard}"))?;
+            (t.tx.clone(), Arc::clone(&t.mailbox))
+        };
+        tx.send(req).map_err(|_| anyhow!("node {id} shard {shard} stopped"))?;
+        mailbox.notify(); // wake the node loop immediately
         Ok(())
     }
 
@@ -352,7 +395,8 @@ impl Cluster {
     /// accounting.
     pub fn cluster_stats(&self) -> Result<EngineStats> {
         let mut agg = EngineStats::default();
-        let mut keys: Vec<(ShardId, NodeId)> = self.threads.keys().copied().collect();
+        let mut keys: Vec<(ShardId, NodeId)> =
+            self.threads.lock().unwrap().keys().copied().collect();
         keys.sort_unstable();
         for (shard, id) in keys {
             agg.absorb(&self.shard_status(id, shard)?.engine);
@@ -366,7 +410,8 @@ impl Cluster {
     /// replicas otherwise).
     pub fn read_distribution(&self) -> Result<Vec<(NodeId, u64, u64)>> {
         let mut per_node: BTreeMap<NodeId, (u64, u64)> = BTreeMap::new();
-        let mut keys: Vec<(ShardId, NodeId)> = self.threads.keys().copied().collect();
+        let mut keys: Vec<(ShardId, NodeId)> =
+            self.threads.lock().unwrap().keys().copied().collect();
         keys.sort_unstable();
         for (shard, id) in keys {
             let st = self.shard_status(id, shard)?;
@@ -516,6 +561,8 @@ impl Cluster {
     fn shard_nodes(&self, shard: ShardId) -> Vec<NodeId> {
         let mut v: Vec<NodeId> = self
             .threads
+            .lock()
+            .unwrap()
             .keys()
             .filter(|&&(s, _)| s == shard)
             .map(|&(_, id)| id)
@@ -861,8 +908,10 @@ impl Cluster {
     /// box it would otherwise compete with the leaders' read service
     /// (DESIGN.md §2).
     pub fn drain_gc_all(&self) -> Result<()> {
+        let keys: Vec<(ShardId, NodeId)> =
+            self.threads.lock().unwrap().keys().copied().collect();
         let mut waits = Vec::new();
-        for &(shard, id) in self.threads.keys() {
+        for (shard, id) in keys {
             let (tx, rx) = mpsc::sync_channel(1);
             self.req(shard, id, Req::DrainGc { resp: tx })?;
             waits.push((shard, id, rx));
@@ -874,15 +923,30 @@ impl Cluster {
         Ok(())
     }
 
-    /// Fault injection: stop one (shard, node) replica thread.  The
-    /// shard's surviving members re-elect once the election timeout
-    /// lapses; every other shard group is untouched.
-    pub fn kill(&mut self, shard: ShardId, id: NodeId) -> Result<()> {
+    /// Fault injection: stop one (shard, node) replica thread
+    /// gracefully (in-flight GC finishes — the clean-stop analogue).
+    /// The shard's surviving members re-elect once the election
+    /// timeout lapses; every other shard group is untouched.
+    pub fn kill(&self, shard: ShardId, id: NodeId) -> Result<()> {
+        self.stop_node(shard, id, Req::Stop)
+    }
+
+    /// Fault injection: stop one replica thread **abruptly** — the
+    /// node loop exits without finishing in-flight GC or answering
+    /// queued requests (`kill -9`).  Use with [`Self::restart`] to
+    /// exercise recovery from genuinely interrupted on-disk state.
+    pub fn crash(&self, shard: ShardId, id: NodeId) -> Result<()> {
+        self.stop_node(shard, id, Req::Crash)
+    }
+
+    fn stop_node(&self, shard: ShardId, id: NodeId, req: Req) -> Result<()> {
         let t = self
             .threads
+            .lock()
+            .unwrap()
             .remove(&(shard, id))
             .ok_or_else(|| anyhow!("no node {id} for shard {shard}"))?;
-        let _ = t.tx.send(Req::Stop);
+        let _ = t.tx.send(req);
         t.mailbox.notify();
         let _ = t.join.join();
         // Unregister from the shard's transport: the survivors keep
@@ -895,14 +959,39 @@ impl Cluster {
         Ok(())
     }
 
-    pub fn shutdown(mut self) -> Result<()> {
-        for t in self.threads.values() {
+    /// Fault injection: the inverse of [`Self::kill`]/[`Self::crash`].
+    /// Re-registers `(shard, id)` on the shard's transport (over TCP
+    /// this binds a fresh listener and republishes the address so
+    /// peers re-dial) and rebuilds the replica thread from whatever
+    /// its data directory holds — raft log replay, engine recovery,
+    /// and any interrupted GC cycle's resumption included.
+    pub fn restart(&self, shard: ShardId, id: NodeId) -> Result<()> {
+        if id == 0 || id > self.cfg.nodes as NodeId {
+            bail!("node {id} is not a member (1..={})", self.cfg.nodes);
+        }
+        {
+            let threads = self.threads.lock().unwrap();
+            if threads.contains_key(&(shard, id)) {
+                bail!("node {id} shard {shard} is still running");
+            }
+        }
+        let net = &self.nets[shard as usize];
+        let mailbox = net.register(id)?;
+        let t = spawn_node(&self.cfg, net, shard, id, mailbox)?;
+        self.threads.lock().unwrap().insert((shard, id), t);
+        *self.leader_cache[shard as usize].lock().unwrap() = None;
+        Ok(())
+    }
+
+    pub fn shutdown(self) -> Result<()> {
+        let mut threads = self.threads.lock().unwrap();
+        for t in threads.values() {
             let _ = t.tx.send(Req::Stop);
         }
         for net in &self.nets {
             net.shutdown();
         }
-        for (_, t) in self.threads.drain() {
+        for (_, t) in threads.drain() {
             let _ = t.join.join();
         }
         Ok(())
@@ -923,6 +1012,14 @@ const MAX_FOLD: usize = 512;
 /// apply point lagging) before failing it back so the client retries
 /// another replica.  Covers an election round with margin.
 const READ_BARRIER_TIMEOUT: Duration = Duration::from_secs(3);
+
+/// How long a proposed write may wait for its apply point before the
+/// replica fails it back as a stale-leader rejection.  A leader cut
+/// off from its quorum (partition) cannot commit, and without this
+/// bound the client would park the full 30 s request timeout on a
+/// write that is going nowhere.  Failing is safe: the client re-routes
+/// and re-proposes, and put/delete re-proposals are idempotent.
+const WRITE_COMMIT_TIMEOUT: Duration = Duration::from_secs(3);
 
 /// A read request parked in the replica's read-only lane while its
 /// ReadIndex barrier resolves.
@@ -972,10 +1069,20 @@ fn begin_read(
 ) -> Result<()> {
     match consistency {
         ReadConsistency::Leader => {
-            if replica.node.is_leader() {
+            if !replica.node.is_leader() {
+                fail_read(work, not_leader_msg(replica.node.leader_hint()));
+            } else if replica.node.can_serve_leader_read() {
                 serve_read(replica, work);
             } else {
-                fail_read(work, not_leader_msg(replica.node.leader_hint()));
+                // Leader without a live lease — possibly deposed and
+                // unaware (partitioned-leader shape).  Serving from
+                // local state here is the classic stale-read bug, so
+                // confirm leadership through a barrier first; a real
+                // leader resolves it in one heartbeat round, a deposed
+                // one times out and the client re-routes.
+                let ctx = reads.begin(work);
+                let out = replica.node.request_read(ctx)?;
+                send_out(out);
             }
         }
         ReadConsistency::Stale => serve_read(replica, work),
@@ -1042,8 +1149,8 @@ pub(crate) fn node_loop(
 
     let started = Instant::now();
     let mut last_tick = Duration::ZERO;
-    // (commit index awaited, responder)
-    let mut pending: Vec<(u64, SyncSender<Result<()>>)> = Vec::new();
+    // (commit index awaited, proposed-at, responder)
+    let mut pending: Vec<(u64, Instant, SyncSender<Result<()>>)> = Vec::new();
     // Linearizable reads parked on their ReadIndex barrier.
     let mut reads: ReadLane<ReadWork> = ReadLane::default();
 
@@ -1165,6 +1272,10 @@ pub(crate) fn node_loop(
                     let _ = resp.send(replica.gc_history.clone());
                 }
                 Req::Stop => stop = true,
+                // Abrupt exit: no finish_gc, no responses to anything
+                // still queued — pending responders drop, clients see
+                // a closed channel and retry elsewhere.
+                Req::Crash => return Ok(()),
             }
             if write_cmds.len() >= MAX_FOLD {
                 break;
@@ -1175,10 +1286,11 @@ pub(crate) fn node_loop(
             match replica.propose_batch(write_cmds) {
                 Ok((indexes, out)) => {
                     send_out(out);
+                    let now = Instant::now();
                     for (upto, resp) in write_resps {
                         // Command i completes when its index applies.
                         let idx = indexes[upto - 1];
-                        pending.push((idx, resp));
+                        pending.push((idx, now, resp));
                     }
                 }
                 Err(e) => {
@@ -1216,12 +1328,24 @@ pub(crate) fn node_loop(
             }
         }
 
-        // 5. Completions.
+        // 5. Completions.  A write whose apply point never comes —
+        // leadership lost after the propose, or a quorum-less leader
+        // that cannot commit (partition) — is failed back as a
+        // stale-leader rejection instead of parking until the client's
+        // 30 s request timeout.  Re-proposal is idempotent, and on a
+        // genuinely deposed leader the entry may still commit later:
+        // the client-visible outcome is "indeterminate, retried",
+        // exactly what the linearizability checker models.
         if !pending.is_empty() {
             let applied = replica.node.last_applied();
-            pending.retain(|(idx, resp)| {
+            let deposed = !replica.node.is_leader();
+            let hint = replica.node.leader_hint();
+            pending.retain(|(idx, at, resp)| {
                 if *idx <= applied {
                     let _ = resp.send(Ok(()));
+                    false
+                } else if deposed || at.elapsed() > WRITE_COMMIT_TIMEOUT {
+                    let _ = resp.send(Err(anyhow!("{}", not_leader_msg(hint))));
                     false
                 } else {
                     true

@@ -12,16 +12,21 @@
 //!   reads), and a blocking client API.  The shard groups run over an
 //!   in-process bus or real TCP sockets
 //!   (`ClusterConfig::transport` — DESIGN.md §2).
+//! * [`nemesis`] — deterministic fault-schedule driver (partitions,
+//!   link flapping, crash/restart, disk faults) walked against a live
+//!   cluster by the chaos harness ([`crate::chaos`]).
 //! * [`server`] — the multi-process deployment: one [`server::Server`]
 //!   per process hosting one node's replica of every shard
 //!   (`nezha serve`), plus the framed TCP [`server::Client`].
 
 pub mod cluster;
+pub mod nemesis;
 pub mod replica;
 pub mod router;
 pub mod server;
 
 pub use cluster::{shard_dir, Cluster, ClusterConfig, ReadConsistency, Status};
+pub use nemesis::{Nemesis, NemesisEvent, NemesisOp};
 pub use replica::Replica;
 pub use router::{ShardId, ShardRouter};
 pub use server::{Client, Server, ServerOpts, StatusRow};

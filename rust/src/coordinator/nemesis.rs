@@ -1,0 +1,218 @@
+//! Nemesis: a deterministic fault-schedule driver for a live cluster.
+//!
+//! A nemesis (the Jepsen term) is the adversary thread of a chaos run:
+//! while client threads hammer the cluster, the nemesis walks a
+//! pre-built schedule of [`NemesisEvent`]s — partition the leader,
+//! heal, kill and restart a node, arm a disk fault — each at a fixed
+//! offset from the run's start.  The schedule is *data*, so a chaos
+//! test seed fully determines which faults fire and (modulo thread
+//! scheduling) when; re-running a failing seed replays the same abuse.
+//!
+//! The nemesis only ever calls public [`Cluster`] surface —
+//! [`Cluster::fault_plan`] for network faults,
+//! [`Cluster::kill`]/[`Cluster::crash`]/[`Cluster::restart`] for
+//! process faults, and [`crate::fault::disk`] for storage faults — so
+//! everything it does is equally scriptable from a test by hand.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::cluster::{shard_dir, Cluster};
+use crate::coordinator::router::ShardId;
+use crate::fault::disk::DiskOp;
+use crate::raft::NodeId;
+
+/// One fault (or repair) action.
+#[derive(Clone, Debug)]
+pub enum NemesisOp {
+    /// Cut the current leader of `shard` off from every peer
+    /// (symmetric).  Resolved against live status at fire time.
+    PartitionLeader { shard: ShardId },
+    /// Symmetric cut between two named nodes.
+    Partition(NodeId, NodeId),
+    /// One-way cut: `from` → `to` frames drop, replies still flow.
+    PartitionOneWay(NodeId, NodeId),
+    /// Remove every partition (duplication/reorder/link overrides are
+    /// left alone — use [`NemesisOp::ClearNetFaults`] for a full
+    /// reset).
+    Heal,
+    /// Clear the entire network fault plan.
+    ClearNetFaults,
+    /// Graceful stop (flushes GC state on the way out).
+    Kill { shard: ShardId, id: NodeId },
+    /// Abrupt stop — the `kill -9` analogue; no GC finalization.
+    Crash { shard: ShardId, id: NodeId },
+    Restart { shard: ShardId, id: NodeId },
+    /// Arm a one-shot disk fault against the *current leader* of
+    /// `shard`: the `nth` matching `op` on a path under its data dir
+    /// containing `file_substr` fails.  Remembers the victim so a
+    /// later [`NemesisOp::CrashRemembered`] /
+    /// [`NemesisOp::RestartRemembered`] hits the same node even after
+    /// leadership moves.
+    ArmLeaderDiskFault { shard: ShardId, file_substr: String, op: DiskOp, nth: u64 },
+    /// Abruptly stop the node remembered by the last
+    /// [`NemesisOp::ArmLeaderDiskFault`] (no-op if none).
+    CrashRemembered,
+    RestartRemembered,
+    /// Disarm all pending disk faults.
+    ClearDiskFaults,
+    /// Flap the current leader's links: `times` rounds of
+    /// `down_ms` fully lossy / `up_ms` healthy, via per-link loss
+    /// overrides (not `heal`, so concurrent partitions survive).
+    FlapLeaderLink { shard: ShardId, times: u32, down_ms: u64, up_ms: u64 },
+    /// Set global frame duplication probability.
+    SetDuplication(f64),
+    /// Set global reorder probability and extra-latency window (µs).
+    SetReorder(f64, u64),
+}
+
+/// One scheduled action, `at_ms` after the run starts.
+#[derive(Clone, Debug)]
+pub struct NemesisEvent {
+    pub at_ms: u64,
+    pub op: NemesisOp,
+}
+
+/// Walks a schedule against a live cluster.  Construct, then hand to a
+/// thread with an `Arc<Cluster>`; [`Nemesis::run`] sleeps between
+/// events and returns when the schedule is exhausted.
+pub struct Nemesis {
+    events: Vec<NemesisEvent>,
+    /// Human-readable record of everything that fired (with actual
+    /// offsets), for test failure dumps.
+    log: Vec<String>,
+    /// Victim of the last `ArmLeaderDiskFault`.
+    remembered: Option<(ShardId, NodeId)>,
+}
+
+impl Nemesis {
+    pub fn new(mut events: Vec<NemesisEvent>) -> Self {
+        events.sort_by_key(|e| e.at_ms);
+        Self { events, log: Vec::new(), remembered: None }
+    }
+
+    /// The fired-event record (available after [`Nemesis::run`]).
+    pub fn log(&self) -> &[String] {
+        &self.log
+    }
+
+    /// Execute the schedule.  Individual op failures (e.g. restarting
+    /// a node that raced a concurrent kill) are recorded in the log
+    /// and do not abort the schedule — a nemesis losing a race with
+    /// the cluster is normal chaos, not a harness bug.
+    pub fn run(&mut self, cluster: &Arc<Cluster>) {
+        let start = Instant::now();
+        let events = std::mem::take(&mut self.events);
+        for ev in events {
+            let due = Duration::from_millis(ev.at_ms);
+            if let Some(wait) = due.checked_sub(start.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            let outcome = self.apply(cluster, &ev.op);
+            let at = start.elapsed().as_millis();
+            match outcome {
+                Ok(desc) => self.log.push(format!("[{at:>6}ms] {desc}")),
+                Err(e) => self.log.push(format!("[{at:>6}ms] {:?} failed: {e:#}", ev.op)),
+            }
+        }
+    }
+
+    fn apply(&mut self, cluster: &Arc<Cluster>, op: &NemesisOp) -> Result<String> {
+        let plan = cluster.fault_plan();
+        Ok(match op {
+            NemesisOp::PartitionLeader { shard } => {
+                let leader = cluster.shard_leader(*shard)?;
+                let peers: Vec<NodeId> =
+                    cluster.node_ids().into_iter().filter(|&p| p != leader).collect();
+                plan.isolate(leader, &peers);
+                format!("partitioned leader {leader} of shard {shard} from {peers:?}")
+            }
+            NemesisOp::Partition(a, b) => {
+                plan.partition(*a, *b);
+                format!("partitioned {a} <-> {b}")
+            }
+            NemesisOp::PartitionOneWay(from, to) => {
+                plan.partition_one_way(*from, *to);
+                format!("partitioned one-way {from} -> {to}")
+            }
+            NemesisOp::Heal => {
+                plan.heal();
+                "healed all partitions".to_string()
+            }
+            NemesisOp::ClearNetFaults => {
+                plan.clear();
+                "cleared the network fault plan".to_string()
+            }
+            NemesisOp::Kill { shard, id } => {
+                cluster.kill(*shard, *id)?;
+                format!("killed node {id} shard {shard}")
+            }
+            NemesisOp::Crash { shard, id } => {
+                cluster.crash(*shard, *id)?;
+                format!("crashed node {id} shard {shard}")
+            }
+            NemesisOp::Restart { shard, id } => {
+                cluster.restart(*shard, *id)?;
+                format!("restarted node {id} shard {shard}")
+            }
+            NemesisOp::ArmLeaderDiskFault { shard, file_substr, op, nth } => {
+                let leader = cluster.shard_leader(*shard)?;
+                let dir = shard_dir(&cluster.config().base_dir, leader, *shard);
+                let dir_str = dir.to_string_lossy().into_owned();
+                crate::fault::disk::arm(&[dir_str, file_substr.clone()], *op, *nth);
+                self.remembered = Some((*shard, leader));
+                format!(
+                    "armed disk fault: {op:?} #{nth} on *{file_substr}* under node \
+                     {leader} shard {shard}"
+                )
+            }
+            NemesisOp::CrashRemembered => match self.remembered {
+                Some((shard, id)) => {
+                    cluster.crash(shard, id)?;
+                    format!("crashed remembered node {id} shard {shard}")
+                }
+                None => "crash-remembered: nothing remembered".to_string(),
+            },
+            NemesisOp::RestartRemembered => match self.remembered {
+                Some((shard, id)) => {
+                    cluster.restart(shard, id)?;
+                    format!("restarted remembered node {id} shard {shard}")
+                }
+                None => "restart-remembered: nothing remembered".to_string(),
+            },
+            NemesisOp::ClearDiskFaults => {
+                crate::fault::disk::clear();
+                "cleared disk faults".to_string()
+            }
+            NemesisOp::FlapLeaderLink { shard, times, down_ms, up_ms } => {
+                let leader = cluster.shard_leader(*shard)?;
+                let peers: Vec<NodeId> =
+                    cluster.node_ids().into_iter().filter(|&p| p != leader).collect();
+                let lossy = crate::fault::LinkFault { latency_us: None, loss: Some(1.0) };
+                for _ in 0..*times {
+                    for &p in &peers {
+                        plan.set_link(leader, p, lossy);
+                        plan.set_link(p, leader, lossy);
+                    }
+                    std::thread::sleep(Duration::from_millis(*down_ms));
+                    for &p in &peers {
+                        plan.clear_link(leader, p);
+                        plan.clear_link(p, leader);
+                    }
+                    std::thread::sleep(Duration::from_millis(*up_ms));
+                }
+                format!("flapped leader {leader} links x{times} ({down_ms}ms down / {up_ms}ms up)")
+            }
+            NemesisOp::SetDuplication(p) => {
+                plan.set_duplication(*p);
+                format!("set duplication p={p}")
+            }
+            NemesisOp::SetReorder(p, window) => {
+                plan.set_reorder(*p, *window);
+                format!("set reorder p={p} window={window}us")
+            }
+        })
+    }
+}

@@ -637,6 +637,9 @@ pub struct Client {
     /// first scan's discovery round-trip).
     discovered_shards: Option<u32>,
     rr: usize,
+    /// Jitter source for retry backoff (decorrelates clients that all
+    /// observed the same leader failure).
+    rng: crate::util::Rng,
 }
 
 impl Client {
@@ -653,6 +656,7 @@ impl Client {
             leaders: HashMap::new(),
             discovered_shards: None,
             rr: 0,
+            rng: crate::util::Rng::new(std::process::id() as u64 ^ crate::util::now_micros()),
         }
     }
 
@@ -718,6 +722,24 @@ impl Client {
         r
     }
 
+    /// Jittered exponential backoff between retry attempts: sleep a
+    /// uniform draw from `[cur/2, cur]`, clamped to the time left
+    /// before `deadline`, then double `cur` up to the cap.  Bounded
+    /// growth keeps a long outage from pushing the retry cadence past
+    /// the election timescale; jitter keeps a fleet of clients that
+    /// all saw the same leader die from re-dialing in lockstep.
+    fn backoff_sleep(&mut self, cur: &mut Duration, deadline: Instant) {
+        const CAP: Duration = Duration::from_millis(640);
+        let ms = cur.as_millis() as u64;
+        let mut sleep = Duration::from_millis(self.rng.range(ms / 2, ms + 1));
+        match deadline.checked_duration_since(Instant::now()) {
+            Some(left) => sleep = sleep.min(left),
+            None => return, // the deadline check at loop top fails the op
+        }
+        std::thread::sleep(sleep);
+        *cur = (*cur * 2).min(CAP);
+    }
+
     /// Issue `msg` for `shard`, following redirects and walking the
     /// membership until it answers or the op deadline lapses.
     fn shard_call(&mut self, shard: ShardId, msg: &ClientMsg) -> Result<ClientResp> {
@@ -728,6 +750,7 @@ impl Client {
             nodes[self.rr % nodes.len()]
         });
         let mut last_err: Option<anyhow::Error> = None;
+        let mut backoff = Duration::from_millis(10);
         loop {
             if Instant::now() > deadline {
                 let detail = last_err.map_or_else(String::new, |e| format!(": {e:#}"));
@@ -736,21 +759,23 @@ impl Client {
             match self.call(target, msg) {
                 Ok(ClientResp::NotLeader { hint, .. }) => {
                     self.leaders.remove(&shard);
-                    target = match hint.filter(|h| self.peers.contains_key(h)) {
-                        Some(h) if h != target => h,
+                    match hint.filter(|h| self.peers.contains_key(h)) {
+                        // A fresh redirect is authoritative: follow it
+                        // immediately, no backoff.
+                        Some(h) if h != target => target = h,
                         _ => {
                             self.rr += 1;
-                            nodes[self.rr % nodes.len()]
+                            target = nodes[self.rr % nodes.len()];
+                            self.backoff_sleep(&mut backoff, deadline);
                         }
-                    };
-                    std::thread::sleep(Duration::from_millis(25));
+                    }
                 }
                 Ok(ClientResp::Err(msg_text)) => {
                     self.leaders.remove(&shard);
                     last_err = Some(anyhow!("{msg_text}"));
                     self.rr += 1;
                     target = nodes[self.rr % nodes.len()];
-                    std::thread::sleep(Duration::from_millis(50));
+                    self.backoff_sleep(&mut backoff, deadline);
                 }
                 Ok(resp) => {
                     // Writes only succeed at the leader; remember it.
@@ -764,7 +789,7 @@ impl Client {
                     last_err = Some(e);
                     self.rr += 1;
                     target = nodes[self.rr % nodes.len()];
-                    std::thread::sleep(Duration::from_millis(50));
+                    self.backoff_sleep(&mut backoff, deadline);
                 }
             }
         }

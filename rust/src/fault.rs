@@ -1,0 +1,440 @@
+//! Deterministic fault injection: the nemesis substrate.
+//!
+//! [`FaultPlan`] is a runtime-mutable description of injected network
+//! faults — symmetric and one-way **partitions**, message
+//! **duplication**, **reordering** jitter, and per-link latency/loss
+//! overrides — shared by every transport of one cluster
+//! ([`crate::raft::Bus`], [`crate::raft::SimNet`], and best-effort
+//! [`crate::raft::TcpNet`]).  All randomness comes from one seeded
+//! [`Rng`], so a `(seed, plan-mutation sequence, decide sequence)`
+//! triple replays byte-identically: the determinism regression test in
+//! `raft::transport` holds the whole stack to that.
+//!
+//! [`disk`] is the storage-side counterpart: arm an injected failure
+//! for the Nth fsync/write whose path matches a set of substrings
+//! (raft log, vlog, LEVELS manifest), then crash-restart the node and
+//! assert the GC commit-point ordering recovers.  Hooks live in
+//! `vlog::log::VLog::sync`/`flush_buf` and `gc::levels::save_framed` —
+//! every durability decision in the tree funnels through those.
+//!
+//! Neither side is compiled out in release builds: an inert plan is a
+//! single relaxed atomic load on the send path and the disk registry a
+//! single atomic load per sync, so the production cost is negligible
+//! and chaos tests exercise the exact shipping code.
+
+use crate::raft::NodeId;
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Per-link overrides, applied to frames from one ordered `(from, to)`
+/// pair.  `None` fields keep the transport's configured behaviour.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkFault {
+    /// Replace the configured one-way latency range (µs, inclusive lo,
+    /// exclusive hi+1 — same convention as [`crate::raft::NetConfig`]).
+    pub latency_us: Option<(u64, u64)>,
+    /// Replace the configured loss probability.
+    pub loss: Option<f64>,
+}
+
+/// The verdict [`FaultPlan::decide`] hands a transport for one frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Delivery {
+    /// Extra per-copy delay in µs; one entry per copy to deliver
+    /// (duplication injects a second entry, reordering a non-zero
+    /// delay).  **Empty means the fault plan dropped the frame.**
+    pub copies: Vec<u64>,
+    /// Per-link latency override to use instead of the configured
+    /// range, if one is set.
+    pub latency_us: Option<(u64, u64)>,
+}
+
+impl Delivery {
+    pub fn dropped(&self) -> bool {
+        self.copies.is_empty()
+    }
+}
+
+#[derive(Debug)]
+struct PlanState {
+    rng: Rng,
+    /// Symmetric partitions: both directions blocked.
+    cuts: Vec<(NodeId, NodeId)>,
+    /// One-way partitions: only `from → to` blocked.
+    one_way: Vec<(NodeId, NodeId)>,
+    links: HashMap<(NodeId, NodeId), LinkFault>,
+    /// Probability a frame is delivered twice.
+    dup: f64,
+    /// Probability a frame is delayed by up to `reorder_window_us`,
+    /// letting later frames overtake it.
+    reorder: f64,
+    reorder_window_us: u64,
+}
+
+impl PlanState {
+    fn blocked(&self, from: NodeId, to: NodeId) -> bool {
+        self.one_way.contains(&(from, to))
+            || self.cuts.iter().any(|&(a, b)| (a == from && b == to) || (a == to && b == from))
+    }
+
+    fn any_fault(&self) -> bool {
+        !self.cuts.is_empty()
+            || !self.one_way.is_empty()
+            || !self.links.is_empty()
+            || self.dup > 0.0
+            || self.reorder > 0.0
+    }
+}
+
+/// Runtime-mutable, deterministic network fault plan.  Cheap to share
+/// (`Arc<FaultPlan>`), cheap when inert (one relaxed load per send).
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// Fast path: false ⇒ `decide` returns `None` without locking.
+    active: AtomicBool,
+    inner: Mutex<PlanState>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            active: AtomicBool::new(false),
+            inner: Mutex::new(PlanState {
+                rng: Rng::new(seed),
+                cuts: Vec::new(),
+                one_way: Vec::new(),
+                links: HashMap::new(),
+                dup: 0.0,
+                reorder: 0.0,
+                reorder_window_us: 0,
+            }),
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    fn mutate(&self, f: impl FnOnce(&mut PlanState)) {
+        let mut st = self.inner.lock().unwrap();
+        f(&mut st);
+        self.active.store(st.any_fault(), Ordering::Relaxed);
+    }
+
+    /// Block all traffic between `a` and `b` (both directions).
+    pub fn partition(&self, a: NodeId, b: NodeId) {
+        self.mutate(|st| st.cuts.push((a, b)));
+    }
+
+    /// Block only `from → to`; the reverse direction still flows (the
+    /// asymmetric-link shape that breaks naive leader leases).
+    pub fn partition_one_way(&self, from: NodeId, to: NodeId) {
+        self.mutate(|st| st.one_way.push((from, to)));
+    }
+
+    /// Cut `id` off from every listed peer, both directions.
+    pub fn isolate(&self, id: NodeId, peers: &[NodeId]) {
+        self.mutate(|st| {
+            for &p in peers {
+                if p != id {
+                    st.cuts.push((id, p));
+                }
+            }
+        });
+    }
+
+    /// Remove every partition (symmetric and one-way).  Duplication,
+    /// reordering, and link overrides stay armed — use
+    /// [`Self::clear`] for a full reset.
+    pub fn heal(&self) {
+        self.mutate(|st| {
+            st.cuts.clear();
+            st.one_way.clear();
+        });
+    }
+
+    /// Deliver a fraction `p` of frames twice.
+    pub fn set_duplication(&self, p: f64) {
+        self.mutate(|st| st.dup = p.clamp(0.0, 1.0));
+    }
+
+    /// Delay a fraction `p` of frames by up to `window_us`, letting
+    /// later frames overtake them.
+    pub fn set_reorder(&self, p: f64, window_us: u64) {
+        self.mutate(|st| {
+            st.reorder = p.clamp(0.0, 1.0);
+            st.reorder_window_us = window_us;
+        });
+    }
+
+    /// Override one ordered link's latency/loss.
+    pub fn set_link(&self, from: NodeId, to: NodeId, fault: LinkFault) {
+        self.mutate(|st| {
+            st.links.insert((from, to), fault);
+        });
+    }
+
+    pub fn clear_link(&self, from: NodeId, to: NodeId) {
+        self.mutate(|st| {
+            st.links.remove(&(from, to));
+        });
+    }
+
+    /// Full reset: no partitions, no dup/reorder, no link overrides.
+    pub fn clear(&self) {
+        self.mutate(|st| {
+            st.cuts.clear();
+            st.one_way.clear();
+            st.links.clear();
+            st.dup = 0.0;
+            st.reorder = 0.0;
+            st.reorder_window_us = 0;
+        });
+    }
+
+    pub fn is_blocked(&self, from: NodeId, to: NodeId) -> bool {
+        self.is_active() && self.inner.lock().unwrap().blocked(from, to)
+    }
+
+    /// The transport-facing entry point: decide the fate of one frame.
+    /// `None` means "no plan active, use the configured behaviour" —
+    /// the inert fast path.  RNG draws happen in a fixed order (loss,
+    /// dup, per-copy reorder), so identical plan/decide sequences
+    /// replay identically.
+    pub fn decide(&self, from: NodeId, to: NodeId) -> Option<Delivery> {
+        if !self.is_active() {
+            return None;
+        }
+        let mut st = self.inner.lock().unwrap();
+        if st.blocked(from, to) {
+            return Some(Delivery { copies: Vec::new(), latency_us: None });
+        }
+        let link = st.links.get(&(from, to)).copied().unwrap_or_default();
+        if let Some(p) = link.loss {
+            if p > 0.0 && st.rng.chance(p) {
+                return Some(Delivery { copies: Vec::new(), latency_us: link.latency_us });
+            }
+        }
+        let n = if st.dup > 0.0 && st.rng.chance(st.dup) { 2 } else { 1 };
+        let mut copies = Vec::with_capacity(n);
+        for _ in 0..n {
+            let extra = if st.reorder > 0.0 && st.rng.chance(st.reorder) {
+                st.rng.below(st.reorder_window_us.max(1) + 1)
+            } else {
+                0
+            };
+            copies.push(extra);
+        }
+        Some(Delivery { copies, latency_us: link.latency_us })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Disk faults
+// ---------------------------------------------------------------------
+
+/// Injected storage failures: fail the Nth fsync/write whose path
+/// matches every armed substring.  Global (one registry per process)
+/// because the durability hooks sit deep under `VLog`/`save_framed`
+/// where no handle can be threaded through; tests scope their patterns
+/// with unique temp-dir components so parallel tests cannot cross-fire.
+pub mod disk {
+    use anyhow::{bail, Result};
+    use std::path::Path;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Mutex, OnceLock};
+
+    /// Which durability operation an armed fault targets.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum DiskOp {
+        /// `sync_data`-class commit points (vlog/raft-log fsync, the
+        /// framed-manifest rename barrier).
+        Sync,
+        /// Buffered payload writes ahead of the sync.
+        Write,
+    }
+
+    #[derive(Debug)]
+    struct Armed {
+        substrs: Vec<String>,
+        op: DiskOp,
+        /// Fires (and disarms) when this reaches zero.
+        remaining: u64,
+    }
+
+    static ACTIVE: AtomicBool = AtomicBool::new(false);
+    static FIRED: AtomicU64 = AtomicU64::new(0);
+
+    fn registry() -> &'static Mutex<Vec<Armed>> {
+        static R: OnceLock<Mutex<Vec<Armed>>> = OnceLock::new();
+        R.get_or_init(|| Mutex::new(Vec::new()))
+    }
+
+    /// Arm one fault: the `nth` (1-based) `op` on a path containing
+    /// **every** substring in `substrs` fails with an injected error,
+    /// then the fault disarms itself.
+    pub fn arm(substrs: &[impl AsRef<str>], op: DiskOp, nth: u64) {
+        let mut reg = registry().lock().unwrap();
+        reg.push(Armed {
+            substrs: substrs.iter().map(|s| s.as_ref().to_string()).collect(),
+            op,
+            remaining: nth.max(1),
+        });
+        ACTIVE.store(true, Ordering::Release);
+    }
+
+    /// Disarm everything (fired or not).
+    pub fn clear() {
+        let mut reg = registry().lock().unwrap();
+        reg.clear();
+        ACTIVE.store(false, Ordering::Release);
+    }
+
+    /// Total injected failures since process start.
+    pub fn fired() -> u64 {
+        FIRED.load(Ordering::Relaxed)
+    }
+
+    /// Armed (not yet fired) fault count.
+    pub fn pending() -> usize {
+        if !ACTIVE.load(Ordering::Acquire) {
+            return 0;
+        }
+        registry().lock().unwrap().len()
+    }
+
+    /// The hook the storage layer calls before committing `op` on
+    /// `path`.  Inert unless something is armed (one atomic load).
+    pub fn check(path: &Path, op: DiskOp) -> Result<()> {
+        if !ACTIVE.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let p = path.to_string_lossy();
+        let mut reg = registry().lock().unwrap();
+        let hit = reg
+            .iter()
+            .position(|a| a.op == op && a.substrs.iter().all(|s| p.contains(s.as_str())));
+        if let Some(i) = hit {
+            reg[i].remaining -= 1;
+            if reg[i].remaining == 0 {
+                reg.remove(i);
+                if reg.is_empty() {
+                    ACTIVE.store(false, Ordering::Release);
+                }
+                FIRED.fetch_add(1, Ordering::Relaxed);
+                bail!("injected disk fault: {op:?} on {p}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_plan_decides_nothing() {
+        let plan = FaultPlan::new(1);
+        assert!(!plan.is_active());
+        assert!(plan.decide(1, 2).is_none());
+    }
+
+    #[test]
+    fn partition_blocks_both_ways_until_heal() {
+        let plan = FaultPlan::new(2);
+        plan.partition(1, 2);
+        assert!(plan.decide(1, 2).unwrap().dropped());
+        assert!(plan.decide(2, 1).unwrap().dropped());
+        assert!(!plan.decide(1, 3).unwrap().dropped());
+        plan.heal();
+        assert!(!plan.is_active());
+        assert!(plan.decide(1, 2).is_none());
+    }
+
+    #[test]
+    fn one_way_partition_is_asymmetric() {
+        let plan = FaultPlan::new(3);
+        plan.partition_one_way(1, 2);
+        assert!(plan.decide(1, 2).unwrap().dropped());
+        assert!(!plan.decide(2, 1).unwrap().dropped());
+    }
+
+    #[test]
+    fn isolate_cuts_every_listed_peer() {
+        let plan = FaultPlan::new(4);
+        plan.isolate(2, &[1, 2, 3]);
+        assert!(plan.decide(2, 1).unwrap().dropped());
+        assert!(plan.decide(3, 2).unwrap().dropped());
+        assert!(!plan.decide(1, 3).unwrap().dropped());
+    }
+
+    #[test]
+    fn duplication_and_reorder_emit_extra_copies_and_delays() {
+        let plan = FaultPlan::new(5);
+        plan.set_duplication(1.0);
+        plan.set_reorder(1.0, 500);
+        let d = plan.decide(1, 2).unwrap();
+        assert_eq!(d.copies.len(), 2);
+        assert!(d.copies.iter().all(|&c| c <= 500));
+    }
+
+    #[test]
+    fn link_overrides_apply_per_direction() {
+        let plan = FaultPlan::new(6);
+        plan.set_link(1, 2, LinkFault { latency_us: Some((10, 20)), loss: Some(1.0) });
+        assert!(plan.decide(1, 2).unwrap().dropped());
+        let rev = plan.decide(2, 1).unwrap();
+        assert!(!rev.dropped());
+        assert_eq!(rev.latency_us, None);
+        plan.clear_link(1, 2);
+        assert!(plan.decide(1, 2).is_none(), "clearing the only fault deactivates the plan");
+    }
+
+    #[test]
+    fn decide_sequence_replays_per_seed() {
+        let run = |seed| {
+            let plan = FaultPlan::new(seed);
+            plan.set_duplication(0.3);
+            plan.set_reorder(0.4, 1000);
+            plan.set_link(1, 2, LinkFault { latency_us: None, loss: Some(0.5) });
+            let mut out = Vec::new();
+            for i in 0..200u64 {
+                let (from, to) = (1 + i % 3, 1 + (i + 1) % 3);
+                out.push(plan.decide(from, to));
+            }
+            out
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn disk_fault_fires_on_nth_match_then_disarms() {
+        use disk::DiskOp;
+        let tag = format!("fault-unit-{}", std::process::id());
+        let path = std::path::PathBuf::from(format!("/tmp/{tag}/node-1/engine/LEVELS"));
+        disk::arm(&[tag.as_str(), "LEVELS"], DiskOp::Sync, 2);
+        assert!(disk::check(&path, DiskOp::Write).is_ok(), "op kind must match");
+        assert!(disk::check(&path, DiskOp::Sync).is_ok(), "first match survives (nth=2)");
+        let before = disk::fired();
+        assert!(disk::check(&path, DiskOp::Sync).is_err(), "second match fails");
+        assert_eq!(disk::fired(), before + 1);
+        assert!(disk::check(&path, DiskOp::Sync).is_ok(), "fault disarmed after firing");
+        disk::clear();
+    }
+
+    #[test]
+    fn disk_fault_requires_every_substring() {
+        use disk::DiskOp;
+        let tag = format!("fault-scope-{}", std::process::id());
+        disk::arm(&[tag.as_str(), "node-2", "raft"], DiskOp::Sync, 1);
+        let other = std::path::PathBuf::from(format!("/tmp/{tag}/node-1/raft/epoch-0"));
+        assert!(disk::check(&other, DiskOp::Sync).is_ok(), "node-1 must not trip node-2's fault");
+        let target = std::path::PathBuf::from(format!("/tmp/{tag}/node-2/raft/epoch-0"));
+        assert!(disk::check(&target, DiskOp::Sync).is_err());
+        disk::clear();
+    }
+}

@@ -117,6 +117,7 @@ pub(crate) fn save_framed(dir: &Path, name: &str, body: &[u8]) -> Result<()> {
     {
         let mut f = std::fs::File::create(&tmp)?;
         f.write_all(framed.as_slice())?;
+        crate::fault::disk::check(&tmp, crate::fault::disk::DiskOp::Sync)?;
         f.sync_data()?;
     }
     std::fs::rename(tmp, dir.join(name))?;

@@ -24,6 +24,15 @@
 //! * [`ycsb`] — YCSB workload generator (Load, A–F).
 //! * [`harness`] — the experiment harness regenerating every paper
 //!   figure (see `benches/fig*.rs`).
+//! * [`fault`] — deterministic fault injection: the runtime-mutable
+//!   network [`fault::FaultPlan`] shared by every transport, and the
+//!   [`fault::disk`] registry failing the Nth fsync/write on armed
+//!   storage paths.
+//! * [`check`] — WGL-style linearizability checker over recorded
+//!   per-client register histories.
+//! * [`chaos`] — the nemesis harness: concurrent clients + fault
+//!   schedules against a live cluster, verified by [`check`]
+//!   (`rust/tests/chaos.rs`, `nezha chaos --seed N`).
 //!
 //! The cluster runs over one of two interchangeable transports
 //! ([`raft::transport`]): the in-process bus the early reproduction
@@ -44,6 +53,9 @@ pub mod coordinator;
 pub mod runtime;
 pub mod ycsb;
 pub mod harness;
+pub mod fault;
+pub mod check;
+pub mod chaos;
 
 pub use engine::{EngineKind, KvEngine};
 

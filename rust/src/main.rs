@@ -8,6 +8,7 @@
 //! nezha load    --engine nezha --records 10000 --value-size 16384
 //! nezha ycsb    --engine nezha --workload A --ops 2000
 //! nezha recover --dir <replica base dir> --engine nezha
+//! nezha chaos   --seed 7 [--schedule all] [--read-from leader] [--ms 4000] [--tcp]
 //! nezha engines                      # list engine variants
 //! ```
 //!
@@ -40,11 +41,18 @@ USAGE:
   nezha load    [--engine E] [--nodes N] [--shards S] [--records R] [--value-size B]
   nezha ycsb    [--engine E] [--workload A..F] [--shards S] [--ops N] [--records R] [--value-size B]
   nezha recover --dir PATH [--engine E]
+  nezha chaos   [--seed N] [--schedule NAME|all] [--read-from WHO] [--clients C]
+                [--ms MS] [--tcp]
   nezha engines
 
 PEERS is `id=host:port,...` naming every node's client address; node N's raft
 listener for shard S binds the same host at port+1+S.  WHO is
 leader|followers|stale.
+
+`chaos` runs a seeded nemesis schedule (partitions, link flapping, disk-fault +
+crash + restart) against a live in-process cluster while concurrent clients
+record a history, then checks it for linearizability.  Exits non-zero on any
+violation.  Schedules: partition-heal, crash-restart-mid-gc, flapping-links.
 
 ENGINES: {}",
         EngineKind::ALL.map(|k| k.name()).join(", ")
@@ -126,6 +134,7 @@ fn main() -> Result<()> {
         "load" => cmd_load(&flags),
         "ycsb" => cmd_ycsb(&flags),
         "recover" => cmd_recover(&flags),
+        "chaos" => cmd_chaos(&flags),
         _ => usage(),
     }
 }
@@ -286,6 +295,62 @@ fn cmd_ycsb(flags: &HashMap<String, String>) -> Result<()> {
     println!("write lat: {}", wlat.summary());
     println!("read  lat: {}", rlat.summary());
     env.destroy()
+}
+
+fn cmd_chaos(flags: &HashMap<String, String>) -> Result<()> {
+    use nezha::chaos::{run_chaos, ChaosOpts, ScheduleKind};
+    let seed: u64 = flag(flags, "seed", 7);
+    let schedules: Vec<ScheduleKind> = match flags.get("schedule").map(String::as_str) {
+        None | Some("all") => ScheduleKind::ALL.to_vec(),
+        Some(name) => vec![ScheduleKind::parse(name).with_context(|| {
+            format!(
+                "unknown schedule {name:?} (have: {})",
+                ScheduleKind::ALL.map(|k| k.name()).join(", ")
+            )
+        })?],
+    };
+    let mut failed = false;
+    for schedule in schedules {
+        let mut opts = ChaosOpts::new(seed, schedule);
+        if let Some(rf) = flags.get("read-from") {
+            opts.read_consistency = parse_read_from_arg(&["--read-from".to_string(), rf.clone()])
+                .with_context(|| format!("bad --read-from {rf:?} (leader|followers|stale)"))?;
+        }
+        opts.clients = flag(flags, "clients", 3);
+        opts.run_ms = flag(flags, "ms", 4_000);
+        if flags.contains_key("tcp") {
+            opts.transport = nezha::raft::TransportKind::Tcp;
+        }
+        println!(
+            "chaos seed {seed} schedule {} ({:?}, {} clients, {} ms)...",
+            schedule.name(),
+            opts.read_consistency,
+            opts.clients,
+            opts.run_ms
+        );
+        let report = run_chaos(&opts)?;
+        for line in &report.nemesis_log {
+            println!("  nemesis {line}");
+        }
+        println!(
+            "  {} writes ({} indeterminate), {} reads, {} restarted",
+            report.writes,
+            report.indeterminate,
+            report.reads,
+            report.restarted.len()
+        );
+        match &report.violation {
+            None => println!("  OK: history is {:?}-consistent", opts.read_consistency),
+            Some(v) => {
+                println!("  VIOLATION: {v}");
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    Ok(())
 }
 
 fn cmd_recover(flags: &HashMap<String, String>) -> Result<()> {

@@ -33,5 +33,6 @@ pub use log::{HardState, RaftLog};
 pub use node::{Config, Node, NodeId, NodeMetrics, Role, StateMachine};
 pub use rpc::{Command, LogEntry, LogIndex, Message, Term};
 pub use transport::{
-    Bus, Net, NetConfig, SimNet, TcpNet, Transport, TransportKind, WireSnapshot, WireStats,
+    Bus, Net, NetConfig, SimNet, TcpNet, TraceEvent, Transport, TransportKind, WireSnapshot,
+    WireStats,
 };

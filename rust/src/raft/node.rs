@@ -243,6 +243,16 @@ impl<S: StateMachine> Node<S> {
         self.role == Role::Leader
     }
 
+    /// True when a Leader-consistency read may be served from local
+    /// applied state right now: this node is leader *and* — when lease
+    /// reads are enabled — its lease is live, so a deposed-but-unaware
+    /// leader (classic partitioned-leader shape) cannot hand out stale
+    /// state.  With `lease_reads` off this degrades to plain
+    /// [`Self::is_leader`], the pre-lease behaviour.
+    pub fn can_serve_leader_read(&self) -> bool {
+        self.role == Role::Leader && (!self.cfg.lease_reads || self.lease_valid())
+    }
+
     pub fn sm(&self) -> &S {
         &self.sm
     }

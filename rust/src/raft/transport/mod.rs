@@ -20,9 +20,19 @@
 //! [`Net`] is the runtime-chosen handle ([`Bus`] or [`TcpNet`]) the
 //! coordinator threads the cluster over; [`TransportKind`] is the
 //! config knob that picks it.
+//!
+//! Every transport consults a shared [`crate::fault::FaultPlan`]
+//! before delivering: partitions, duplication, reordering, and
+//! per-link overrides inject at the send boundary, and
+//! [`WireStats::fault_dropped`] attributes those drops separately from
+//! real backpressure.  [`SimNet`] applies the full plan
+//! deterministically; [`Bus`] applies drops and duplication (thread
+//! scheduling already reorders); [`TcpNet`] applies drops and
+//! duplication best-effort at the send queue.
 
 use super::node::NodeId;
 use super::rpc::Message;
+use crate::fault::FaultPlan;
 use crate::util::Rng;
 use anyhow::Result;
 use std::cmp::Reverse;
@@ -52,15 +62,22 @@ impl Default for NetConfig {
 }
 
 /// Wire accounting shared by every transport.  `dropped` counts
-/// frames that were sent but never delivered to a mailbox: lossy-link
-/// and partition drops, sends to unknown/dead peers, full or broken
-/// TCP send queues, and frames that failed [`Message::decode`] on the
-/// receive side.
+/// **every** frame that was sent but never delivered to a mailbox:
+/// lossy-link and partition drops, sends to unknown/dead peers, full
+/// or broken TCP send queues, and frames that failed
+/// [`Message::decode`] on the receive side.  `fault_dropped` is the
+/// subset attributable to *injected* faults (a [`FaultPlan`] verdict
+/// or a [`SimNet`] partition), so chaos runs can tell nemesis damage
+/// apart from real backpressure: `dropped - fault_dropped` is the
+/// structural loss.  `reconnects` counts outbound TCP dial attempts
+/// ([`TcpNet`] only; zero elsewhere).
 #[derive(Debug, Default)]
 pub struct WireStats {
     pub msgs: AtomicU64,
     pub bytes: AtomicU64,
     pub dropped: AtomicU64,
+    pub fault_dropped: AtomicU64,
+    pub reconnects: AtomicU64,
 }
 
 impl WireStats {
@@ -69,6 +86,17 @@ impl WireStats {
             msgs: self.msgs.load(Ordering::Relaxed),
             bytes: self.bytes.load(Ordering::Relaxed),
             dropped: self.dropped.load(Ordering::Relaxed),
+            fault_dropped: self.fault_dropped.load(Ordering::Relaxed),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Count one dropped frame; `fault` attributes it to injected
+    /// faults on top of the total.
+    fn count_drop(&self, fault: bool) {
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+        if fault {
+            self.fault_dropped.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
@@ -79,6 +107,10 @@ pub struct WireSnapshot {
     pub msgs: u64,
     pub bytes: u64,
     pub dropped: u64,
+    /// Subset of `dropped` caused by injected faults.
+    pub fault_dropped: u64,
+    /// Outbound dial attempts (TCP transports only).
+    pub reconnects: u64,
 }
 
 impl WireSnapshot {
@@ -87,6 +119,8 @@ impl WireSnapshot {
         self.msgs += other.msgs;
         self.bytes += other.bytes;
         self.dropped += other.dropped;
+        self.fault_dropped += other.fault_dropped;
+        self.reconnects += other.reconnects;
     }
 }
 
@@ -183,6 +217,19 @@ impl Net {
 // Deterministic simulator
 // ---------------------------------------------------------------------
 
+/// One event in a [`SimNet`] delivery/drop trace — the determinism
+/// regression currency: same `(NetConfig seed, FaultPlan)` ⇒ same
+/// trace, element for element.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// A copy entered the queue, due at `at_us`.
+    Queued { from: NodeId, to: NodeId, at_us: u64, len: usize },
+    /// A frame was dropped; `fault` attributes it to injected faults.
+    Dropped { from: NodeId, to: NodeId, at_us: u64, fault: bool },
+    /// A frame reached its destination at `at_us`.
+    Delivered { from: NodeId, to: NodeId, at_us: u64, len: usize },
+}
+
 /// Single-threaded discrete-event network with logical microseconds.
 pub struct SimNet {
     cfg: NetConfig,
@@ -194,6 +241,10 @@ pub struct SimNet {
     pub stats: WireStats,
     /// Partitioned node pairs (both directions blocked).
     cut: Vec<(NodeId, NodeId)>,
+    /// Shared fault plan (partitions/dup/reorder/link overrides).
+    faults: Option<Arc<FaultPlan>>,
+    /// When `Some`, every queue/drop/deliver event is recorded.
+    trace: Option<Vec<TraceEvent>>,
 }
 
 impl SimNet {
@@ -207,11 +258,43 @@ impl SimNet {
             queue: BinaryHeap::new(),
             stats: WireStats::default(),
             cut: Vec::new(),
+            faults: None,
+            trace: None,
         }
     }
 
     pub fn now_us(&self) -> u64 {
         self.now_us
+    }
+
+    /// Attach a shared fault plan; consulted on every subsequent send.
+    pub fn set_faults(&mut self, plan: Arc<FaultPlan>) {
+        self.faults = Some(plan);
+    }
+
+    /// Start recording a delivery/drop trace (determinism regression).
+    pub fn enable_trace(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    /// Take the recorded trace, leaving recording enabled.
+    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+        match self.trace.as_mut() {
+            Some(t) => std::mem::take(t),
+            None => Vec::new(),
+        }
+    }
+
+    fn record(&mut self, ev: TraceEvent) {
+        if let Some(t) = self.trace.as_mut() {
+            t.push(ev);
+        }
+    }
+
+    fn drop_frame(&mut self, from: NodeId, to: NodeId, fault: bool) {
+        self.stats.count_drop(fault);
+        let at_us = self.now_us;
+        self.record(TraceEvent::Dropped { from, to, at_us, fault });
     }
 
     /// Block all traffic between `a` and `b`.
@@ -236,17 +319,26 @@ impl SimNet {
             if *at > self.now_us {
                 break;
             }
-            let Reverse((_, _, from, to, buf)) = self.queue.pop().unwrap();
-            if self.is_cut(from, to) {
-                self.stats.dropped.fetch_add(1, Ordering::Relaxed);
+            let Reverse((at, _, from, to, buf)) = self.queue.pop().unwrap();
+            // Re-check partitions at delivery time: a frame in flight
+            // when the cut landed is lost, like a real link going dark.
+            let cut_now = self.is_cut(from, to)
+                || self.faults.as_ref().is_some_and(|p| p.is_blocked(from, to));
+            if cut_now {
+                self.stats.count_drop(true);
+                self.record(TraceEvent::Dropped { from, to, at_us: at, fault: true });
                 continue;
             }
             match Message::decode(&buf) {
-                Ok(m) => out.push((from, to, m)),
+                Ok(m) => {
+                    self.record(TraceEvent::Delivered { from, to, at_us: at, len: buf.len() });
+                    out.push((from, to, m));
+                }
                 // An undecodable frame is a lost frame, not a silent
                 // no-op: it must show up in the drop accounting.
                 Err(_) => {
-                    self.stats.dropped.fetch_add(1, Ordering::Relaxed);
+                    self.stats.count_drop(false);
+                    self.record(TraceEvent::Dropped { from, to, at_us: at, fault: false });
                 }
             }
         }
@@ -268,18 +360,35 @@ impl Transport for SimNet {
         let buf = msg.encode();
         self.stats.msgs.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        // Configured (structural) loss draws first so the fault plan
+        // never perturbs the baseline RNG sequence.
         if self.cfg.loss > 0.0 && self.rng.chance(self.cfg.loss) {
-            self.stats.dropped.fetch_add(1, Ordering::Relaxed);
+            self.drop_frame(from, to, false);
             return;
         }
         if self.is_cut(from, to) {
-            self.stats.dropped.fetch_add(1, Ordering::Relaxed);
+            self.drop_frame(from, to, true);
             return;
         }
-        let (lo, hi) = self.cfg.latency_us;
-        let lat = if hi > lo { self.rng.range(lo, hi + 1) } else { lo };
-        self.seq += 1;
-        self.queue.push(Reverse((self.now_us + lat, self.seq, from, to, buf)));
+        let verdict = self.faults.as_ref().and_then(|p| p.decide(from, to));
+        if let Some(d) = &verdict {
+            if d.dropped() {
+                self.drop_frame(from, to, true);
+                return;
+            }
+        }
+        let (lo, hi) = verdict
+            .as_ref()
+            .and_then(|d| d.latency_us)
+            .unwrap_or(self.cfg.latency_us);
+        let copies = verdict.map_or_else(|| vec![0], |d| d.copies);
+        for extra in copies {
+            let lat = if hi > lo { self.rng.range(lo, hi + 1) } else { lo };
+            self.seq += 1;
+            let at_us = self.now_us + lat + extra;
+            self.record(TraceEvent::Queued { from, to, at_us, len: buf.len() });
+            self.queue.push(Reverse((at_us, self.seq, from, to, buf.clone())));
+        }
     }
 }
 
@@ -380,16 +489,29 @@ pub struct Bus {
     cfg: Arc<NetConfig>,
     rng: Arc<Mutex<Rng>>,
     pub stats: Arc<WireStats>,
+    /// Shared fault plan (inert by default).  The bus applies drops
+    /// (partitions, link loss) and duplication; reordering and latency
+    /// overrides are simulation-only — thread scheduling already
+    /// reorders, and the node loops poll faster than any realistic
+    /// injected latency.
+    faults: Arc<FaultPlan>,
 }
 
 impl Bus {
     pub fn new(cfg: NetConfig) -> Self {
+        let plan = Arc::new(FaultPlan::new(cfg.seed ^ 0xFA17));
+        Self::with_faults(cfg, plan)
+    }
+
+    /// A bus whose sends consult `faults` (shared with the nemesis).
+    pub fn with_faults(cfg: NetConfig, faults: Arc<FaultPlan>) -> Self {
         let rng = Rng::new(cfg.seed);
         Self {
             mailboxes: Arc::new(Mutex::new(HashMap::new())),
             cfg: Arc::new(cfg),
             rng: Arc::new(Mutex::new(rng)),
             stats: Arc::new(WireStats::default()),
+            faults,
         }
     }
 
@@ -413,9 +535,17 @@ impl Bus {
         self.stats.msgs.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
         if self.cfg.loss > 0.0 && self.rng.lock().unwrap().chance(self.cfg.loss) {
-            self.stats.dropped.fetch_add(1, Ordering::Relaxed);
+            self.stats.count_drop(false);
             return;
         }
+        let copies = match self.faults.decide(from, to) {
+            Some(d) if d.dropped() => {
+                self.stats.count_drop(true);
+                return;
+            }
+            Some(d) => d.copies.len(),
+            None => 1,
+        };
         // Latency: at bench scale the contribution is simulated by the
         // node loop's poll granularity; we spin-sleep only for large
         // configured latencies to avoid burning the single test core.
@@ -426,9 +556,11 @@ impl Bus {
         }
         let mb = self.mailboxes.lock().unwrap().get(&to).cloned();
         if let Some(mb) = mb {
-            mb.push(from, buf);
+            for _ in 0..copies {
+                mb.push(from, buf.clone());
+            }
         } else {
-            self.stats.dropped.fetch_add(1, Ordering::Relaxed);
+            self.stats.count_drop(false);
         }
     }
 
@@ -583,8 +715,120 @@ mod tests {
         s.msgs.fetch_add(3, Ordering::Relaxed);
         s.bytes.fetch_add(100, Ordering::Relaxed);
         let mut a = s.snapshot();
-        a.absorb(WireSnapshot { msgs: 1, bytes: 10, dropped: 2 });
-        assert_eq!(a, WireSnapshot { msgs: 4, bytes: 110, dropped: 2 });
+        let other =
+            WireSnapshot { msgs: 1, bytes: 10, dropped: 2, fault_dropped: 1, reconnects: 4 };
+        a.absorb(other);
+        let want =
+            WireSnapshot { msgs: 4, bytes: 110, dropped: 2, fault_dropped: 1, reconnects: 4 };
+        assert_eq!(a, want);
+    }
+
+    #[test]
+    fn simnet_fault_plan_partitions_and_attributes_drops() {
+        let plan = Arc::new(FaultPlan::new(11));
+        let mut net = SimNet::new(NetConfig { latency_us: (10, 10), loss: 0.0, seed: 11 });
+        net.set_faults(Arc::clone(&plan));
+        plan.partition_one_way(1, 2);
+        net.send(1, 2, msg(1)); // blocked direction
+        net.send(2, 1, msg(2)); // open direction
+        let got = net.advance(1_000);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, 2);
+        let s = net.stats.snapshot();
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.fault_dropped, 1, "partition drops attribute to faults");
+        plan.heal();
+        net.send(1, 2, msg(3));
+        assert_eq!(net.advance(2_000).len(), 1);
+    }
+
+    #[test]
+    fn simnet_duplication_delivers_twice() {
+        let plan = Arc::new(FaultPlan::new(12));
+        plan.set_duplication(1.0);
+        let mut net = SimNet::new(NetConfig { latency_us: (5, 5), loss: 0.0, seed: 12 });
+        net.set_faults(plan);
+        net.send(1, 2, msg(1));
+        let got = net.advance(1_000);
+        assert_eq!(got.len(), 2, "dup=1.0 delivers two copies");
+        assert_eq!(got[0].2, got[1].2);
+        assert_eq!(net.stats.msgs.load(Ordering::Relaxed), 1, "one logical send");
+    }
+
+    #[test]
+    fn simnet_reorder_lets_later_frames_overtake() {
+        let plan = Arc::new(FaultPlan::new(13));
+        let mut net = SimNet::new(NetConfig { latency_us: (10, 10), loss: 0.0, seed: 13 });
+        net.set_faults(Arc::clone(&plan));
+        // First frame delayed far beyond the second's arrival.
+        plan.set_reorder(1.0, 10_000);
+        net.send(1, 2, msg(1));
+        plan.set_reorder(0.0, 0);
+        net.send(1, 2, msg(2));
+        let got = net.advance(1_000_000);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].2, msg(2), "undelayed frame overtakes the reordered one");
+    }
+
+    /// Satellite: same `NetConfig` seed + same `FaultPlan` ⇒ identical
+    /// delivery/drop trace across two runs, event for event.
+    #[test]
+    fn simnet_trace_is_identical_across_runs_for_same_seed_and_plan() {
+        let run = |net_seed: u64, plan_seed: u64| {
+            let plan = Arc::new(FaultPlan::new(plan_seed));
+            plan.set_duplication(0.25);
+            plan.set_reorder(0.25, 2_000);
+            plan.set_link(1, 2, crate::fault::LinkFault { latency_us: None, loss: Some(0.3) });
+            let mut net =
+                SimNet::new(NetConfig { latency_us: (20, 80), loss: 0.1, seed: net_seed });
+            net.set_faults(Arc::clone(&plan));
+            net.enable_trace();
+            let mut t = 0;
+            for i in 0..300u64 {
+                let (from, to) = (1 + i % 3, 1 + (i + 1) % 3);
+                net.send(from, to, msg(i));
+                if i == 100 {
+                    plan.partition(2, 3);
+                }
+                if i == 200 {
+                    plan.heal();
+                }
+                t += 40;
+                let _ = net.advance(t);
+            }
+            let _ = net.advance(t + 100_000);
+            net.take_trace()
+        };
+        let a = run(0xDECAF, 0x5EED);
+        let b = run(0xDECAF, 0x5EED);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same (seed, plan) must replay the identical trace");
+        let c = run(0xDECAF, 0x5EED + 1);
+        assert_ne!(a, c, "a different plan seed must perturb the trace");
+    }
+
+    #[test]
+    fn bus_fault_plan_drops_and_duplicates() {
+        let plan = Arc::new(FaultPlan::new(21));
+        let bus = Bus::with_faults(
+            NetConfig { latency_us: (0, 0), loss: 0.0, seed: 21 },
+            Arc::clone(&plan),
+        );
+        let mb1 = bus.register(1);
+        let mb2 = bus.register(2);
+        plan.partition(1, 2);
+        bus.send(1, 2, &msg(1));
+        bus.send(2, 1, &msg(2));
+        assert!(mb2.drain(std::time::Duration::from_millis(10)).unwrap().is_empty());
+        assert!(mb1.drain(std::time::Duration::from_millis(10)).unwrap().is_empty());
+        let s = bus.stats.snapshot();
+        assert_eq!(s.dropped, 2);
+        assert_eq!(s.fault_dropped, 2);
+        plan.clear();
+        plan.set_duplication(1.0);
+        bus.send(1, 2, &msg(3));
+        let got = mb2.drain(std::time::Duration::from_millis(100)).unwrap();
+        assert_eq!(got.len(), 2, "dup=1.0 delivers two copies over the bus");
     }
 
     #[test]

@@ -35,6 +35,7 @@
 use super::super::node::NodeId;
 use super::super::rpc::Message;
 use super::{Mailbox, WireStats};
+use crate::fault::FaultPlan;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
@@ -154,6 +155,15 @@ struct TcpInner {
     conns: Mutex<HashMap<(NodeId, NodeId), SyncSender<Vec<u8>>>>,
     stats: Arc<WireStats>,
     closed: Arc<AtomicBool>,
+    /// Shared fault plan, applied best-effort at the send queue: the
+    /// plan's drop verdicts (partitions, link loss) and duplication
+    /// inject before enqueue; latency/reordering are not simulated —
+    /// the kernel's scheduling already provides both on a real wire.
+    faults: Arc<FaultPlan>,
+    /// Per-peer outbound dial attempts (successful or not), so chaos
+    /// runs can assert redial pacing.  The total also feeds
+    /// [`WireStats::reconnects`].
+    dials: Arc<Mutex<HashMap<NodeId, u64>>>,
 }
 
 /// Thread-safe TCP network handle: register local nodes, then clone
@@ -180,6 +190,20 @@ impl TcpNet {
     /// local one) to its raft address.  `register(id)` binds the
     /// configured address for `id`; sends dial the others.
     pub fn with_peers(peers: HashMap<NodeId, SocketAddr>) -> Self {
+        Self::with_peers_and_faults(peers, Arc::new(FaultPlan::new(0xFA17)))
+    }
+
+    /// Loopback mode whose sends consult `faults` (shared with the
+    /// nemesis driver).
+    pub fn with_faults(faults: Arc<FaultPlan>) -> Self {
+        Self::with_peers_and_faults(HashMap::new(), faults)
+    }
+
+    /// Full constructor: explicit peer map + shared fault plan.
+    pub fn with_peers_and_faults(
+        peers: HashMap<NodeId, SocketAddr>,
+        faults: Arc<FaultPlan>,
+    ) -> Self {
         Self {
             inner: Arc::new(TcpInner {
                 addrs: Arc::new(Mutex::new(peers)),
@@ -187,12 +211,24 @@ impl TcpNet {
                 conns: Mutex::new(HashMap::new()),
                 stats: Arc::new(WireStats::default()),
                 closed: Arc::new(AtomicBool::new(false)),
+                faults,
+                dials: Arc::new(Mutex::new(HashMap::new())),
             }),
         }
     }
 
     pub fn stats(&self) -> &WireStats {
         &self.inner.stats
+    }
+
+    /// Per-peer outbound dial attempts, sorted by peer id — the chaos
+    /// suite asserts redial pacing against this instead of eyeballing
+    /// logs.
+    pub fn reconnect_counts(&self) -> Vec<(NodeId, u64)> {
+        let mut v: Vec<(NodeId, u64)> =
+            self.inner.dials.lock().unwrap().iter().map(|(&k, &n)| (k, n)).collect();
+        v.sort_unstable();
+        v
     }
 
     /// The address a registered node actually listens on (loopback
@@ -252,15 +288,27 @@ impl TcpNet {
             stats.dropped.fetch_add(1, Ordering::Relaxed);
             return;
         }
+        // Injected faults apply at the send queue (best-effort: frames
+        // already in flight are beyond reach on a real wire).
+        let copies = match self.inner.faults.decide(from, to) {
+            Some(d) if d.dropped() => {
+                stats.count_drop(true);
+                return;
+            }
+            Some(d) => d.copies.len(),
+            None => 1,
+        };
         let tx = {
             let mut conns = self.inner.conns.lock().unwrap();
             conns.entry((from, to)).or_insert_with(|| self.spawn_writer(from, to)).clone()
         };
-        if tx.try_send(buf).is_err() {
-            // Full (slow peer) or disconnected (the writer exited at
-            // shutdown): either way the frame is dropped, the node
-            // loop moves on.
-            stats.dropped.fetch_add(1, Ordering::Relaxed);
+        for _ in 0..copies {
+            if tx.try_send(buf.clone()).is_err() {
+                // Full (slow peer) or disconnected (the writer exited
+                // at shutdown): either way the frame is dropped, the
+                // node loop moves on.
+                stats.dropped.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 
@@ -269,12 +317,13 @@ impl TcpNet {
         let addrs = Arc::clone(&self.inner.addrs);
         let stats = Arc::clone(&self.inner.stats);
         let closed = Arc::clone(&self.inner.closed);
+        let dials = Arc::clone(&self.inner.dials);
         // Writer threads are detached: they exit when their sender is
         // dropped (unregister/shutdown clears the conns map) or when
         // the net-wide closed flag trips.
         let _ = std::thread::Builder::new()
             .name(format!("tcp-w-{from}-{to}"))
-            .spawn(move || writer_loop(from, to, rx, addrs, stats, closed));
+            .spawn(move || writer_loop(from, to, rx, addrs, stats, closed, dials));
         tx
     }
 
@@ -404,6 +453,7 @@ fn writer_loop(
     addrs: Arc<Mutex<HashMap<NodeId, SocketAddr>>>,
     stats: Arc<WireStats>,
     closed: Arc<AtomicBool>,
+    dials: Arc<Mutex<HashMap<NodeId, u64>>>,
 ) {
     let mut stream: Option<TcpStream> = None;
     let mut last_attempt: Option<Instant> = None;
@@ -435,6 +485,10 @@ fn writer_loop(
                 stats.dropped.fetch_add(1, Ordering::Relaxed);
                 continue;
             };
+            // This is a real dial attempt: count it per peer (and in
+            // the aggregate) whether or not it succeeds.
+            *dials.lock().unwrap().entry(to).or_insert(0) += 1;
+            stats.reconnects.fetch_add(1, Ordering::Relaxed);
             match TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
                 Ok(mut s) => {
                     let _ = s.set_nodelay(true);
@@ -623,6 +677,60 @@ mod tests {
             wait_for(Duration::from_secs(5), || net.stats().snapshot().dropped >= 2),
             "corrupt frame never counted dropped"
         );
+        net.shutdown();
+    }
+
+    #[test]
+    fn fault_plan_drops_at_send_and_attributes() {
+        let plan = Arc::new(FaultPlan::new(31));
+        let net = TcpNet::with_faults(Arc::clone(&plan));
+        let _mb1 = net.register(1).unwrap();
+        let mb2 = net.register(2).unwrap();
+        net.send(1, 2, &msg(1));
+        assert_eq!(recv_one(&mb2), (1, msg(1)));
+        plan.partition(1, 2);
+        net.send(1, 2, &msg(2));
+        let st = net.stats().snapshot();
+        assert_eq!(st.fault_dropped, 1, "partitioned send attributes to faults");
+        assert_eq!(st.dropped, 1);
+        plan.heal();
+        net.send(1, 2, &msg(3));
+        assert_eq!(recv_one(&mb2), (1, msg(3)));
+        net.shutdown();
+    }
+
+    /// Satellite: redial pacing is observable through per-peer
+    /// reconnect counts instead of eyeballing logs.  A dead peer that
+    /// refuses connections must see roughly `duration / RECONNECT_PACE`
+    /// dial attempts, not one per frame.
+    #[test]
+    fn reconnect_attempts_are_paced_and_counted_per_peer() {
+        // An address that refuses connections: bind, note the port,
+        // drop the listener.
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let mut peers = HashMap::new();
+        peers.insert(2u64, dead);
+        let net = TcpNet::with_peers(peers);
+        let _mb1 = net.register(1).unwrap();
+        let window = Duration::from_millis(400);
+        let t0 = Instant::now();
+        while t0.elapsed() < window {
+            net.send(1, 2, &msg(1));
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Let the writer drain its queue before reading the counters.
+        std::thread::sleep(Duration::from_millis(100));
+        let counts = net.reconnect_counts();
+        let to_peer2 = counts.iter().find(|&&(id, _)| id == 2).map_or(0, |&(_, n)| n);
+        assert!(to_peer2 >= 2, "expected repeated dial attempts, got {to_peer2}");
+        // Pacing bound: attempts ≤ window / RECONNECT_PACE, with slack
+        // for the first unpaced dial and scheduling jitter.
+        let ceiling = (window.as_millis() / RECONNECT_PACE.as_millis()) as u64 + 3;
+        assert!(to_peer2 <= ceiling, "dial attempts {to_peer2} exceed pacing ceiling {ceiling}");
+        assert_eq!(net.stats().snapshot().reconnects, to_peer2, "aggregate mirrors per-peer");
         net.shutdown();
     }
 

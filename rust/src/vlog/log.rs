@@ -103,6 +103,7 @@ impl VLog {
     fn flush_buf(&mut self) -> Result<()> {
         if !self.buf.is_empty() {
             use std::os::unix::fs::FileExt;
+            crate::fault::disk::check(&self.path, crate::fault::disk::DiskOp::Write)?;
             self.file.write_all_at(&self.buf, self.len)?;
             self.len += self.buf.len() as u64;
             self.buf.clear();
@@ -118,6 +119,7 @@ impl VLog {
     /// Durability point: flush + fdatasync.
     pub fn sync(&mut self) -> Result<()> {
         self.flush_buf()?;
+        crate::fault::disk::check(&self.path, crate::fault::disk::DiskOp::Sync)?;
         self.file.sync_data()?;
         Ok(())
     }

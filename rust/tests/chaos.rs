@@ -1,0 +1,163 @@
+//! Chaos suite: nemesis schedules against live clusters, checked for
+//! linearizability (ISSUE 6's acceptance gate).
+//!
+//! Each schedule test sweeps a seed matrix (override with
+//! `NEZHA_CHAOS_SEEDS=1,2,3`), pairing seeds with read-consistency
+//! modes so all three modes are exercised per schedule; set
+//! `NEZHA_CHAOS_FULL=1` for the full seeds × modes product (the CI
+//! chaos job runs that in release).  Any violation fails with the
+//! nemesis event log attached.
+//!
+//! The restart round-trip tests pin the `kill` → `restart` contract on
+//! both transports: a node rebuilt from its data directory rejoins the
+//! group, catches up, and *serves reads*.
+
+use nezha::chaos::{run_chaos, ChaosOpts, ScheduleKind};
+use nezha::coordinator::{Cluster, ClusterConfig, ReadConsistency};
+use nezha::engine::EngineKind;
+use nezha::raft::{NetConfig, TransportKind};
+use std::path::PathBuf;
+use std::time::Duration;
+
+const MODES: [ReadConsistency; 3] =
+    [ReadConsistency::Leader, ReadConsistency::Linearizable, ReadConsistency::Stale];
+
+fn seeds() -> Vec<u64> {
+    match std::env::var("NEZHA_CHAOS_SEEDS") {
+        Ok(s) => s
+            .split(',')
+            .map(|t| t.trim().parse().expect("NEZHA_CHAOS_SEEDS must be u64s"))
+            .collect(),
+        Err(_) => vec![5, 7, 11, 13],
+    }
+}
+
+/// The (seed, mode) pairs a schedule test runs: the full product under
+/// `NEZHA_CHAOS_FULL=1`, else one mode per seed with all three modes
+/// covered across the sweep.
+fn matrix() -> Vec<(u64, ReadConsistency)> {
+    let seeds = seeds();
+    if std::env::var("NEZHA_CHAOS_FULL").is_ok_and(|v| v == "1") {
+        seeds.iter().flat_map(|&s| MODES.map(|m| (s, m))).collect()
+    } else {
+        seeds.iter().enumerate().map(|(i, &s)| (s, MODES[i % MODES.len()])).collect()
+    }
+}
+
+fn run_schedule(schedule: ScheduleKind, transport: TransportKind) {
+    for (seed, mode) in matrix() {
+        let mut opts = ChaosOpts::new(seed, schedule);
+        opts.read_consistency = mode;
+        opts.transport = transport;
+        opts.run_ms = 2_200;
+        let report = run_chaos(&opts)
+            .unwrap_or_else(|e| panic!("{} seed {seed} {mode:?}: harness: {e:#}", schedule.name()));
+        assert!(
+            report.writes > 0 && report.reads > 0,
+            "{} seed {seed} {mode:?}: degenerate run: {report:?}",
+            schedule.name()
+        );
+        if let Some(v) = &report.violation {
+            panic!(
+                "{} seed {seed} {mode:?}: {v}\n  {} writes ({} indeterminate), {} reads\n  \
+                 nemesis log:\n    {}",
+                schedule.name(),
+                report.writes,
+                report.indeterminate,
+                report.reads,
+                report.nemesis_log.join("\n    ")
+            );
+        }
+    }
+}
+
+#[test]
+fn chaos_partition_heal() {
+    run_schedule(ScheduleKind::PartitionHeal, TransportKind::Inproc);
+}
+
+#[test]
+fn chaos_crash_restart_mid_gc() {
+    run_schedule(ScheduleKind::CrashRestartMidGc, TransportKind::Inproc);
+}
+
+#[test]
+fn chaos_flapping_links() {
+    run_schedule(ScheduleKind::FlappingLinks, TransportKind::Inproc);
+}
+
+/// One TCP-transport chaos run: the fault plan drops frames at the
+/// send edge and kill/restart tears down and rebinds real listeners.
+#[test]
+fn chaos_partition_heal_over_tcp() {
+    let mut opts = ChaosOpts::new(7, ScheduleKind::PartitionHeal);
+    opts.read_consistency = ReadConsistency::Linearizable;
+    opts.transport = TransportKind::Tcp;
+    opts.run_ms = 2_200;
+    let report = run_chaos(&opts).expect("tcp chaos harness");
+    assert!(report.writes > 0 && report.reads > 0, "degenerate run: {report:?}");
+    if let Some(v) = &report.violation {
+        panic!("tcp partition-heal: {v}\n  nemesis log:\n    {}", report.nemesis_log.join("\n    "));
+    }
+}
+
+// ---------------------------------------------------------------------
+// kill → restart round-trip (both transports)
+// ---------------------------------------------------------------------
+
+fn base(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("nezha-chaos-rt-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Kill node 3 mid-stream, keep committing, restart it from its data
+/// dir, and require that the rejoined node both caught up and serves
+/// reads (Stale mode round-robins reads over every live replica, so a
+/// node that never shows up in the read distribution never rejoined).
+fn restart_roundtrip(transport: TransportKind, tag: &str) {
+    let dir = base(tag);
+    let mut c = ClusterConfig::new(&dir, EngineKind::Nezha, 3);
+    c.engine.memtable_bytes = 64 << 10;
+    c.net = NetConfig { latency_us: (0, 0), loss: 0.0, seed: 9 };
+    c.read_consistency = ReadConsistency::Stale;
+    c.transport = transport;
+    let cluster = Cluster::start(c).unwrap();
+    let key = |i: u32| format!("rt{i:03}").into_bytes();
+    for i in 0..20u32 {
+        cluster.put(&key(i), format!("v{i}").as_bytes()).unwrap();
+    }
+    cluster.kill(0, 3).unwrap();
+    assert!(!cluster.node_ids().contains(&3), "node 3 still listed after kill");
+    // The survivors keep committing while 3 is down.
+    for i in 20..40u32 {
+        cluster.put(&key(i), format!("v{i}").as_bytes()).unwrap();
+    }
+    cluster.restart(0, 3).unwrap();
+    assert!(cluster.node_ids().contains(&3), "node 3 missing after restart");
+    cluster.wait_converged(Duration::from_secs(20)).unwrap();
+    // Enough reads that the round-robin provably reaches node 3,
+    // including keys committed while it was down.
+    let keys: Vec<Vec<u8>> = (0..40u32).map(key).collect();
+    for _ in 0..3 {
+        let got = cluster.get_batch(&keys).unwrap();
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(v.as_deref(), Some(format!("v{i}").as_bytes()), "rt{i:03}");
+        }
+    }
+    let dist = cluster.read_distribution().unwrap();
+    let n3 = dist.iter().find(|(id, _, _)| *id == 3).expect("node 3 in distribution");
+    assert!(n3.1 > 0, "rejoined node served no reads: {dist:?}");
+    cluster.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restart_roundtrip_over_bus() {
+    restart_roundtrip(TransportKind::Inproc, "bus");
+}
+
+#[test]
+fn restart_roundtrip_over_tcp() {
+    restart_roundtrip(TransportKind::Tcp, "tcp");
+}

@@ -3,7 +3,7 @@
 //! whole-cluster crash, and engine equivalence (all seven engines
 //! agree on query results for the same committed history).
 
-use nezha::coordinator::{Cluster, ClusterConfig, ReadConsistency, ShardRouter};
+use nezha::coordinator::{shard_dir, Cluster, ClusterConfig, ReadConsistency, ShardRouter};
 use nezha::engine::EngineKind;
 use nezha::raft::{NetConfig, TransportKind};
 use std::path::PathBuf;
@@ -54,28 +54,60 @@ fn whole_cluster_restart_preserves_data() {
 
 #[test]
 fn cluster_crash_mid_gc_recovers_and_resumes() {
+    // Genuinely cut a GC cycle mid-flight: arm a one-shot disk fault
+    // on the leader's LEVELS-manifest fsync so its next GC commit
+    // point fails (the cycle stays interrupted, phase During), then
+    // crash that node abruptly — `Cluster::crash` skips the graceful
+    // GC finalization that `shutdown` performs — and restart it from
+    // the half-written directory.
     let dir = base("gccrash");
-    {
-        let mut c = cfg(&dir, EngineKind::Nezha, 3);
-        c.gc.threshold_bytes = 256 << 10; // force cycles during load
-        let cluster = Cluster::start(c).unwrap();
-        for i in 0..400u32 {
-            cluster.put(format!("g{i:04}").as_bytes(), &[9u8; 2048]).unwrap();
-        }
-        // Shut down abruptly without draining GC (drop without
-        // waiting is modelled by shutdown, which finishes in-flight
-        // cycles; to get a genuinely interrupted cycle we also test
-        // at the engine level — see engine::nezha tests).
-        cluster.shutdown().unwrap();
+    let mut c = cfg(&dir, EngineKind::Nezha, 3);
+    c.gc.threshold_bytes = 256 << 10; // force cycles during load
+    let cluster = Cluster::start(c).unwrap();
+    for i in 0..200u32 {
+        cluster.put(format!("g{i:04}").as_bytes(), &[9u8; 2048]).unwrap();
     }
-    let cluster = Cluster::start(cfg(&dir, EngineKind::Nezha, 3)).unwrap();
-    for i in (0..400u32).step_by(41) {
+    // Target the current leader's data dir: its next LEVELS sync —
+    // the commit point of a compaction/GC step — fails once.
+    let victim = cluster.shard_leader(0).unwrap();
+    let victim_dir = shard_dir(&cluster.config().base_dir, victim, 0);
+    nezha::fault::disk::arm(
+        &[victim_dir.to_string_lossy().into_owned(), "LEVELS".into()],
+        nezha::fault::disk::DiskOp::Sync,
+        1,
+    );
+    // Keep writing until the fault fires (GC/compaction cycles run as
+    // the vlog grows), then crash the victim with the cycle torn.
+    let mut i = 200u32;
+    while nezha::fault::disk::fired() == 0 {
+        assert!(i < 2000, "LEVELS disk fault never fired");
+        cluster.put(format!("g{i:04}").as_bytes(), &[9u8; 2048]).unwrap();
+        i += 1;
+    }
+    let total = i;
+    cluster.crash(0, victim).unwrap();
+    nezha::fault::disk::clear();
+    // The survivors keep committing while the victim is down.
+    for j in 0..40u32 {
+        cluster.put(format!("h{j:04}").as_bytes(), &[6u8; 512]).unwrap();
+    }
+    // Restart from the interrupted directory: recovery must adopt the
+    // pre-fault manifest (the failed cycle never committed), resume
+    // GC, and catch up through Raft.
+    cluster.restart(0, victim).unwrap();
+    cluster.wait_converged(Duration::from_secs(20)).unwrap();
+    cluster.drain_gc_all().unwrap();
+    for i in (0..total).step_by(41) {
         assert_eq!(
             cluster.get(format!("g{i:04}").as_bytes()).unwrap(),
             Some(vec![9u8; 2048]),
             "g{i:04}"
         );
     }
+    assert_eq!(cluster.get(b"h0020").unwrap(), Some(vec![6u8; 512]));
+    // The restarted node's GC made progress after the torn cycle.
+    let st = cluster.shard_status(victim, 0).unwrap();
+    assert!(st.last_applied > 0, "restarted node never re-applied: {st:?}");
     cluster.shutdown().unwrap();
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -184,7 +216,7 @@ fn shard_leader_death_leaves_other_shards_committing() {
     let dir = base("shard-kill");
     let mut c = cfg(&dir, EngineKind::Nezha, 3);
     c.router = ShardRouter::hash(3);
-    let mut cluster = Cluster::start(c).unwrap();
+    let cluster = Cluster::start(c).unwrap();
     let key = |i: u32| format!("yk{i:04}").into_bytes();
     // First half of a YCSB-style insert stream.
     for i in 0..60u32 {
@@ -233,7 +265,7 @@ fn linearizable_reads_never_stale_across_leader_kill() {
     let dir = base("readidx-kill");
     let mut c = cfg(&dir, EngineKind::Nezha, 3);
     c.read_consistency = ReadConsistency::Linearizable;
-    let mut cluster = Cluster::start(c).unwrap();
+    let cluster = Cluster::start(c).unwrap();
     let key = b"counter";
     let read_counter = |cluster: &Cluster| -> u64 {
         let got = cluster.get(key).unwrap().expect("acknowledged counter must be visible");
@@ -277,7 +309,7 @@ fn tcp_linearizable_reads_survive_leader_kill() {
     let mut c = cfg(&dir, EngineKind::Nezha, 3);
     c.transport = TransportKind::Tcp;
     c.read_consistency = ReadConsistency::Linearizable;
-    let mut cluster = Cluster::start(c).unwrap();
+    let cluster = Cluster::start(c).unwrap();
     let key = b"counter";
     let read_counter = |cluster: &Cluster| -> u64 {
         let got = cluster.get(key).unwrap().expect("acknowledged counter must be visible");
