@@ -7,49 +7,135 @@
 //! (system, size) cell.  Run: `cargo bench --bench fig4_put`.
 //! `--transport tcp` replays the same load over real loopback sockets
 //! for the in-process vs TCP delta (DESIGN.md §2/§4); the wire line
-//! reports msgs/bytes/dropped either way.
+//! reports msgs/bytes/dropped either way.  `--clients N` drives the
+//! load from N concurrent client threads so group commit has
+//! overlapping proposals to batch — each row reports the resulting
+//! fsyncs-per-committed-entry ratio (DESIGN.md §6) — and `--shards M`
+//! hash-partitions the keyspace over M consensus groups.  Every run
+//! also writes the table to `BENCH_fig4.json`.
 
-use nezha::engine::EngineKind;
 use nezha::harness::{
-    bench_scale, bench_transport, engines_from_env, improvement_pct, print_header, value_sizes,
-    Env, Spec,
+    bench_clients, bench_scale, bench_shards, bench_transport, engines_from_env, improvement_pct,
+    print_header, value_sizes, Env, Spec,
 };
+
+/// One `BENCH_fig4.json` row (hand-rolled JSON; all fields numeric or
+/// plain ASCII, so no escaping is needed).
+struct JsonRow {
+    system: String,
+    value_size: usize,
+    ops_per_sec: f64,
+    mib_per_sec: f64,
+    mean_us: f64,
+    p50_us: u64,
+    p99_us: u64,
+    log_syncs: u64,
+    entries_committed: u64,
+    syncs_per_entry: f64,
+}
+
+impl JsonRow {
+    fn render(&self) -> String {
+        format!(
+            "    {{\"system\": \"{}\", \"value_size\": {}, \"ops_per_sec\": {:.1}, \
+             \"mib_per_sec\": {:.2}, \"mean_us\": {:.0}, \"p50_us\": {}, \"p99_us\": {}, \
+             \"log_syncs\": {}, \"entries_committed\": {}, \"syncs_per_entry\": {:.4}}}",
+            self.system,
+            self.value_size,
+            self.ops_per_sec,
+            self.mib_per_sec,
+            self.mean_us,
+            self.p50_us,
+            self.p99_us,
+            self.log_syncs,
+            self.entries_committed,
+            self.syncs_per_entry,
+        )
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let load = ((6 << 20) as f64 * bench_scale()) as u64;
     let transport = bench_transport();
+    let clients = bench_clients();
+    let shards = bench_shards();
     print_header(&format!(
-        "Figure 4: put throughput/latency vs value size (transport: {})",
+        "Figure 4: put throughput/latency vs value size (transport: {}, {clients} client(s), \
+         {shards} shard(s))",
         transport.name()
     ));
     let mut nezha_tp = Vec::new();
     let mut orig_tp = Vec::new();
+    let mut rows: Vec<JsonRow> = Vec::new();
     for vs in value_sizes() {
         for kind in engines_from_env() {
             let mut spec = Spec::new(kind, vs);
             spec.load_bytes = load;
             spec.transport = transport;
+            spec.clients = clients;
+            spec.shards = shards;
             let env = Env::start(spec)?;
             let m = env.load(&format!("{}KB", vs >> 10))?;
             println!("{}", m.row());
             env.print_wire_line();
-            if kind == EngineKind::Nezha {
+            // The group-commit line: with overlapping clients one
+            // raft-log persist covers a batch of proposals, so the
+            // ratio drops below 1 (the gate for --clients >= 8 on one
+            // shard is < 0.5).
+            let st = env.leader_stats()?;
+            let ratio = st.log_syncs as f64 / st.entries_committed.max(1) as f64;
+            println!(
+                "            group commit: {} syncs / {} entries = {:.3} fsyncs per committed \
+                 entry ({} batches, max {})",
+                st.log_syncs,
+                st.entries_committed,
+                ratio,
+                st.group_commit_batches,
+                st.group_commit_max_batch
+            );
+            rows.push(JsonRow {
+                system: m.system.clone(),
+                value_size: vs,
+                ops_per_sec: m.ops_per_sec(),
+                mib_per_sec: m.mib_per_sec(),
+                mean_us: m.lat.mean(),
+                p50_us: m.lat.p50(),
+                p99_us: m.lat.p99(),
+                log_syncs: st.log_syncs,
+                entries_committed: st.entries_committed,
+                syncs_per_entry: ratio,
+            });
+            if kind == nezha::engine::EngineKind::Nezha {
                 nezha_tp.push(m.mib_per_sec());
             }
-            if kind == EngineKind::Original {
+            if kind == nezha::engine::EngineKind::Original {
                 orig_tp.push(m.mib_per_sec());
             }
             env.destroy()?;
         }
     }
+    let mut avg = None;
     if !nezha_tp.is_empty() && nezha_tp.len() == orig_tp.len() {
-        let avg: f64 = nezha_tp
+        let a: f64 = nezha_tp
             .iter()
             .zip(&orig_tp)
             .map(|(n, o)| improvement_pct(*n, *o))
             .sum::<f64>()
             / nezha_tp.len() as f64;
-        println!("\nNezha vs Original average put improvement: {avg:+.1}%  (paper: +460.2%)");
+        println!("\nNezha vs Original average put improvement: {a:+.1}%  (paper: +460.2%)");
+        avg = Some(a);
     }
+    let body: Vec<String> = rows.iter().map(JsonRow::render).collect();
+    let json = format!(
+        "{{\n  \"figure\": \"fig4_put\",\n  \"transport\": \"{}\",\n  \"clients\": {clients},\n  \
+         \"shards\": {shards},\n  \"scale\": {},\n  \"nezha_vs_original_avg_pct\": {},\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
+        transport.name(),
+        bench_scale(),
+        avg.map_or("null".into(), |a| format!("{a:.1}")),
+        body.join(",\n")
+    );
+    std::fs::write("BENCH_fig4.json", &json)?;
+    println!("wrote BENCH_fig4.json ({} rows)", rows.len());
     Ok(())
 }

@@ -29,8 +29,8 @@ fn main() -> anyhow::Result<()> {
         replica.node.tick()?;
     }
 
-    println!("phase = {:?} (Pre-GC: only the Active Storage)", replica.engine_ref().gc_phase());
-    assert_eq!(replica.engine_ref().gc_phase(), GcPhase::Pre);
+    println!("phase = {:?} (Pre-GC: only the Active Storage)", replica.engine().gc_phase());
+    assert_eq!(replica.engine().gc_phase(), GcPhase::Pre);
 
     // Write past the threshold.
     for i in 0..256u32 {
@@ -42,9 +42,9 @@ fn main() -> anyhow::Result<()> {
     }
     println!("wrote 4 MiB; pumping the GC trigger...");
     replica.pump_gc(0)?;
-    let phase = replica.engine_ref().gc_phase();
+    let phase = replica.engine().gc_phase();
     println!("phase = {phase:?} (During-GC: New + frozen Active Storage)");
-    assert_eq!(replica.engine_ref().gc_phase(), GcPhase::During);
+    assert_eq!(replica.engine().gc_phase(), GcPhase::During);
 
     // Reads and writes keep flowing mid-GC.
     let put = Command::Put { key: b"during-gc".to_vec(), value: b"still writable".to_vec() };
@@ -66,9 +66,9 @@ fn main() -> anyhow::Result<()> {
         out.index_backend,
         out.wall_ms
     );
-    let phase = replica.engine_ref().gc_phase();
+    let phase = replica.engine().gc_phase();
     println!("phase = {phase:?} (Post-GC: New + Final Compacted Storage)");
-    assert_eq!(replica.engine_ref().gc_phase(), GcPhase::Post);
+    assert_eq!(replica.engine().gc_phase(), GcPhase::Post);
 
     // Post-GC reads hit the hash-indexed sorted ValueLog.
     assert!(replica.engine().get(b"key00100")?.is_some());
@@ -79,7 +79,7 @@ fn main() -> anyhow::Result<()> {
     // live epoch (Figure 11's scenario).
     drop(replica);
     let t0 = std::time::Instant::now();
-    let mut recovered = Replica::open(
+    let recovered = Replica::open(
         1,
         vec![],
         &dir,

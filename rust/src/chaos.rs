@@ -8,8 +8,8 @@
 //!    key space, each recording a [`crate::check::ClientOp`] history
 //!    entry with monotonic call/return timestamps,
 //! 3. walk a [`Nemesis`] schedule against the live cluster — leader
-//!    partitions, link flapping, disk-fault + crash + restart —
-//!    picked by [`ScheduleKind`],
+//!    partitions, link flapping, disk-fault + crash + restart, torn
+//!    group commit — picked by [`ScheduleKind`],
 //! 4. repair everything (heal, disarm disk faults, restart dead
 //!    nodes), let the clients run a short post-heal grace period so
 //!    the rejoined node serves traffic,
@@ -57,17 +57,32 @@ pub enum ScheduleKind {
     /// 20%, with background duplication + reordering for the whole
     /// run.
     FlappingLinks,
+    /// Torn group commit: the run enables raft-log fsync plus a 500 µs
+    /// group-commit budget, arms a one-shot fsync fault on the
+    /// leader's raft log at 15% (so its next group-commit flush fails
+    /// *after* the pipelined AppendEntries broadcast already left),
+    /// crashes the remembered node at 45%, restarts it at 65%.
+    /// Exercises the pipelining safety argument: entries the dead
+    /// leader never made durable locally may still commit through the
+    /// follower quorum, and every acknowledged write must survive its
+    /// recovery.
+    TornGroupCommit,
 }
 
 impl ScheduleKind {
-    pub const ALL: [ScheduleKind; 3] =
-        [ScheduleKind::PartitionHeal, ScheduleKind::CrashRestartMidGc, ScheduleKind::FlappingLinks];
+    pub const ALL: [ScheduleKind; 4] = [
+        ScheduleKind::PartitionHeal,
+        ScheduleKind::CrashRestartMidGc,
+        ScheduleKind::FlappingLinks,
+        ScheduleKind::TornGroupCommit,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
             ScheduleKind::PartitionHeal => "partition-heal",
             ScheduleKind::CrashRestartMidGc => "crash-restart-mid-gc",
             ScheduleKind::FlappingLinks => "flapping-links",
+            ScheduleKind::TornGroupCommit => "torn-group-commit",
         }
     }
 
@@ -103,6 +118,20 @@ impl ScheduleKind {
                     at_ms: at(0.2),
                     op: NemesisOp::FlapLeaderLink { shard: 0, times: 3, down_ms: 150, up_ms: 150 },
                 },
+            ],
+            ScheduleKind::TornGroupCommit => vec![
+                NemesisEvent {
+                    at_ms: at(0.15),
+                    op: NemesisOp::ArmLeaderDiskFault {
+                        shard: 0,
+                        file_substr: "raft-".to_string(),
+                        op: DiskOp::Sync,
+                        nth: 1,
+                    },
+                },
+                NemesisEvent { at_ms: at(0.45), op: NemesisOp::CrashRemembered },
+                NemesisEvent { at_ms: at(0.5), op: NemesisOp::ClearDiskFaults },
+                NemesisEvent { at_ms: at(0.65), op: NemesisOp::RestartRemembered },
             ],
         }
     }
@@ -209,6 +238,13 @@ pub fn run_chaos(opts: &ChaosOpts) -> Result<ChaosReport> {
     cfg.read_consistency = opts.read_consistency;
     cfg.transport = opts.transport;
     cfg.faults = Arc::new(crate::fault::FaultPlan::new(opts.seed));
+    if opts.schedule == ScheduleKind::TornGroupCommit {
+        // The torn-write drill needs real fsyncs (the armed fault
+        // fires on the raft log's sync path) and a group-commit
+        // window for the broadcast to be pipelined ahead of.
+        cfg.raft.fsync = true;
+        cfg.raft.group_commit_us = 500;
+    }
     // A clean slate in case an earlier run in this process armed one.
     crate::fault::disk::clear();
 

@@ -5,9 +5,16 @@
 //! [`ClusterConfig`], and each shard is an **independent Raft group**
 //! with its own transport, its own leader, its own raft ValueLog and
 //! its own engine + GC lifecycle — the Bizur-style scale-out structure
-//! on top of the paper's per-replica Nezha write path.  One thread per
-//! (shard, node); per shard, a [`Net`] carries encoded Raft frames —
-//! the in-process [`Bus`] by default, or real TCP sockets
+//! on top of the paper's per-replica Nezha write path.  Every replica
+//! runs as two cooperatively-scheduled tasks on one small shared
+//! [`Reactor`] worker pool (DESIGN.md §6): a consensus task (network
+//! input, ticks, client requests, group commit, GC) and an apply-lane
+//! applier that feeds committed entries into the shard's engine — so
+//! a 64-shard × 3-node cluster needs a handful of threads, not 192.
+//! Mailbox and client-request doorbells wake the consensus task the
+//! moment input arrives; tick and group-commit deadlines come from the
+//! reactor's timer wheel.  Per shard, a [`Net`] carries encoded Raft
+//! frames — the in-process [`Bus`] by default, or real TCP sockets
 //! ([`TcpNet`], `ClusterConfig::transport = TransportKind::Tcp`) so
 //! the same cluster code runs over loopback sockets in one process or
 //! across processes under `nezha serve` (DESIGN.md §2).
@@ -37,14 +44,15 @@
 
 use super::replica::{ReadLane, Replica};
 use super::router::{merge_sorted, split_keys, split_ops, ShardId, ShardRouter};
-use crate::engine::{EngineKind, EngineOpts, EngineStats};
+use crate::engine::{EngineCell, EngineKind, EngineOpts, EngineStats};
 use crate::fault::FaultPlan;
 use crate::gc::{GcConfig, GcOutput, GcPhase};
 use crate::raft::node::Outbox;
 use crate::raft::{
-    Bus, Command, Config as RaftConfig, Net, NetConfig, NodeId, Role, TcpNet, TransportKind,
-    WireSnapshot,
+    ApplyLane, Bus, Command, Config as RaftConfig, Net, NetConfig, NodeId, Role, StateMachine,
+    TcpNet, TransportKind, WireSnapshot,
 };
+use crate::runtime::reactor::{self, PollOutcome, Reactor, Task, TaskId};
 use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
@@ -222,21 +230,27 @@ pub fn shard_dir(base: &Path, id: NodeId, shard: ShardId) -> PathBuf {
     }
 }
 
-struct NodeThread {
-    tx: Sender<Req>,
-    /// Doorbell handle: wakes the node loop when a request is queued.
-    mailbox: Arc<crate::raft::transport::Mailbox>,
-    join: std::thread::JoinHandle<()>,
+/// One (shard, node) replica's handles: the request channel, its
+/// doorbell, and the two reactor tasks it runs as.
+pub(crate) struct NodeSlot {
+    pub(crate) tx: Sender<Req>,
+    /// Doorbell handle: wakes the consensus task when a request or a
+    /// network frame is queued.
+    pub(crate) mailbox: Arc<crate::raft::transport::Mailbox>,
+    /// Consensus task (network input, ticks, requests, group commit).
+    pub(crate) task: TaskId,
+    /// Apply-lane applier task (committed entries → engine).
+    pub(crate) applier: TaskId,
 }
 
 /// A running cluster.
 pub struct Cluster {
     cfg: ClusterConfig,
-    /// Live replica threads.  Behind a mutex so fault injection
+    /// Live replica slots.  Behind a mutex so fault injection
     /// ([`Self::kill`]/[`Self::crash`]/[`Self::restart`]) works
     /// through `&self` — a chaos run shares one `Arc<Cluster>` between
     /// client threads and the nemesis driver.
-    threads: Mutex<HashMap<(ShardId, NodeId), NodeThread>>,
+    slots: Mutex<HashMap<(ShardId, NodeId), NodeSlot>>,
     /// One network per shard group ([`Bus`] or [`TcpNet`] per
     /// [`ClusterConfig::transport`]).
     nets: Vec<Net>,
@@ -244,32 +258,90 @@ pub struct Cluster {
     leader_cache: Vec<Mutex<Option<NodeId>>>,
     /// Per-shard round-robin cursor for replica-served reads.
     read_rr: Vec<AtomicUsize>,
+    /// The shared worker pool every replica task runs on.
+    reactor: Reactor,
 }
 
-/// Spawn one (shard, node) replica thread on an already-registered
-/// mailbox.  Shared by [`Cluster::start`] and [`Cluster::restart`] so
-/// a restarted node is configured identically to its first life.
-fn spawn_node(
+/// Open one (shard, node) replica and schedule its consensus task and
+/// apply-lane applier on the reactor.  Shared by [`Cluster::start`],
+/// [`Cluster::restart`] and the multi-process server
+/// (`coordinator::server`) so a restarted node is configured
+/// identically to its first life.
+pub(crate) fn spawn_replica(
+    reactor: &Reactor,
     cfg: &ClusterConfig,
     net: &Net,
     shard: ShardId,
     id: NodeId,
     mailbox: Arc<crate::raft::transport::Mailbox>,
-) -> Result<NodeThread> {
+) -> Result<NodeSlot> {
     let ids: Vec<NodeId> = (1..=cfg.nodes as u64).collect();
     let peers: Vec<NodeId> = ids.into_iter().filter(|&p| p != id).collect();
-    let mailbox2 = Arc::clone(&mailbox);
+    let base = shard_dir(&cfg.base_dir, id, shard);
+    let mut opts = cfg.engine.clone();
+    // Asymmetric role assignment, rotated per shard: shard `s` prefers
+    // node `(s % nodes) + 1` as leader (shorter election timeout), so
+    // a multi-shard cluster spreads its leaders across the nodes
+    // instead of serializing every group on node 1.  LSM-Raft's
+    // follower (SSTable-shipping) path follows the same preference
+    // (bench simplification, DESIGN.md §2).
+    let preferred = (shard as u64 % cfg.nodes.max(1) as u64) + 1;
+    let mut raft_cfg = cfg.raft.clone();
+    if id == preferred {
+        raft_cfg.election_timeout_min /= 2;
+        raft_cfg.election_timeout_max = raft_cfg.election_timeout_min + 2;
+    }
+    opts.follower = cfg.kind == EngineKind::LsmRaft && id != preferred;
+    let mut replica = Replica::open(
+        id,
+        peers,
+        &base,
+        cfg.kind,
+        opts,
+        raft_cfg,
+        cfg.gc.clone(),
+        // Distinct election jitter per shard group (shard 0 keeps the
+        // configured seed, preserving single-shard determinism).
+        cfg.seed.wrapping_add(shard as u64 * 7919),
+    )?;
+    let lane = ApplyLane::new();
+    replica.node.attach_apply_lane(Arc::clone(&lane));
+    let engine = replica.engine_cell();
     let (tx, rx) = mpsc::channel::<Req>();
-    let cfg2 = cfg.clone();
-    let net2 = net.clone();
-    let join = std::thread::Builder::new()
-        .name(format!("nezha-s{shard}-n{id}"))
-        .spawn(move || {
-            if let Err(e) = node_loop(id, shard, peers, cfg2, net2, mailbox2, rx) {
-                eprintln!("node {id} shard {shard} crashed: {e:#}");
-            }
-        })?;
-    Ok(NodeThread { tx, mailbox, join })
+    let task = reactor.spawn(Box::new(ReplicaTask {
+        id,
+        shard,
+        tick: cfg.tick,
+        group_commit_us: cfg.raft.group_commit_us,
+        net: net.clone(),
+        mailbox: Arc::clone(&mailbox),
+        rx,
+        replica,
+        lane: Arc::clone(&lane),
+        started: Instant::now(),
+        last_tick: Duration::ZERO,
+        pending: Vec::new(),
+        reads: ReadLane::default(),
+        flush_deadline: None,
+    }));
+    let applier = reactor.spawn(Box::new(ApplierTask {
+        id,
+        shard,
+        lane: Arc::clone(&lane),
+        engine,
+        mailbox: Arc::clone(&mailbox),
+    }));
+    // Doorbells: network frames and client requests ring the mailbox
+    // (waking the consensus task); committed handoffs ring the lane
+    // (waking the applier).  Ring both once after wiring to cover
+    // anything that arrived before the wakers existed.
+    let h = reactor.handle();
+    mailbox.set_waker(Box::new(move || h.wake(task)));
+    let h = reactor.handle();
+    lane.set_waker(Box::new(move || h.wake(applier)));
+    reactor.wake(task);
+    reactor.wake(applier);
+    Ok(NodeSlot { tx, mailbox, task, applier })
 }
 
 impl Cluster {
@@ -278,8 +350,9 @@ impl Cluster {
     pub fn start(cfg: ClusterConfig) -> Result<Self> {
         let shards = cfg.shards();
         let ids: Vec<NodeId> = (1..=cfg.nodes as u64).collect();
+        let reactor = Reactor::new(reactor::default_workers());
         let mut nets = Vec::with_capacity(shards as usize);
-        let mut threads = HashMap::new();
+        let mut slots = HashMap::new();
         for shard in 0..shards {
             let net = match cfg.transport {
                 TransportKind::Inproc => {
@@ -289,14 +362,14 @@ impl Cluster {
                 // each other through the shared address map.
                 TransportKind::Tcp => Net::Tcp(TcpNet::with_faults(Arc::clone(&cfg.faults))),
             };
-            // Register every node before spawning any thread so the
+            // Register every node before scheduling any task so the
             // first elections don't race listener/mailbox setup.
             let mut mailboxes = Vec::with_capacity(ids.len());
             for &id in &ids {
                 mailboxes.push(net.register(id)?);
             }
             for (&id, mailbox) in ids.iter().zip(mailboxes) {
-                threads.insert((shard, id), spawn_node(&cfg, &net, shard, id, mailbox)?);
+                slots.insert((shard, id), spawn_replica(&reactor, &cfg, &net, shard, id, mailbox)?);
             }
             nets.push(net);
         }
@@ -304,8 +377,9 @@ impl Cluster {
             leader_cache: (0..shards).map(|_| Mutex::new(None)).collect(),
             read_rr: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
             cfg,
-            threads: Mutex::new(threads),
+            slots: Mutex::new(slots),
             nets,
+            reactor,
         };
         cluster.wait_for_leader(Duration::from_secs(10 * shards as u64))?;
         Ok(cluster)
@@ -332,8 +406,7 @@ impl Cluster {
     }
 
     pub fn node_ids(&self) -> Vec<NodeId> {
-        let mut v: Vec<NodeId> =
-            self.threads.lock().unwrap().keys().map(|&(_, id)| id).collect();
+        let mut v: Vec<NodeId> = self.slots.lock().unwrap().keys().map(|&(_, id)| id).collect();
         v.sort_unstable();
         v.dedup();
         v
@@ -345,14 +418,14 @@ impl Cluster {
 
     fn req(&self, shard: ShardId, id: NodeId, req: Req) -> Result<()> {
         let (tx, mailbox) = {
-            let threads = self.threads.lock().unwrap();
-            let t = threads
+            let slots = self.slots.lock().unwrap();
+            let t = slots
                 .get(&(shard, id))
                 .ok_or_else(|| anyhow!("no node {id} for shard {shard}"))?;
             (t.tx.clone(), Arc::clone(&t.mailbox))
         };
         tx.send(req).map_err(|_| anyhow!("node {id} shard {shard} stopped"))?;
-        mailbox.notify(); // wake the node loop immediately
+        mailbox.notify(); // doorbell: wakes the consensus task immediately
         Ok(())
     }
 
@@ -395,8 +468,7 @@ impl Cluster {
     /// accounting.
     pub fn cluster_stats(&self) -> Result<EngineStats> {
         let mut agg = EngineStats::default();
-        let mut keys: Vec<(ShardId, NodeId)> =
-            self.threads.lock().unwrap().keys().copied().collect();
+        let mut keys: Vec<(ShardId, NodeId)> = self.slots.lock().unwrap().keys().copied().collect();
         keys.sort_unstable();
         for (shard, id) in keys {
             agg.absorb(&self.shard_status(id, shard)?.engine);
@@ -410,8 +482,7 @@ impl Cluster {
     /// replicas otherwise).
     pub fn read_distribution(&self) -> Result<Vec<(NodeId, u64, u64)>> {
         let mut per_node: BTreeMap<NodeId, (u64, u64)> = BTreeMap::new();
-        let mut keys: Vec<(ShardId, NodeId)> =
-            self.threads.lock().unwrap().keys().copied().collect();
+        let mut keys: Vec<(ShardId, NodeId)> = self.slots.lock().unwrap().keys().copied().collect();
         keys.sort_unstable();
         for (shard, id) in keys {
             let st = self.shard_status(id, shard)?;
@@ -560,7 +631,7 @@ impl Cluster {
     /// One shard's live replicas (killed nodes excluded), sorted.
     fn shard_nodes(&self, shard: ShardId) -> Vec<NodeId> {
         let mut v: Vec<NodeId> = self
-            .threads
+            .slots
             .lock()
             .unwrap()
             .keys()
@@ -908,8 +979,7 @@ impl Cluster {
     /// box it would otherwise compete with the leaders' read service
     /// (DESIGN.md §2).
     pub fn drain_gc_all(&self) -> Result<()> {
-        let keys: Vec<(ShardId, NodeId)> =
-            self.threads.lock().unwrap().keys().copied().collect();
+        let keys: Vec<(ShardId, NodeId)> = self.slots.lock().unwrap().keys().copied().collect();
         let mut waits = Vec::new();
         for (shard, id) in keys {
             let (tx, rx) = mpsc::sync_channel(1);
@@ -941,14 +1011,22 @@ impl Cluster {
 
     fn stop_node(&self, shard: ShardId, id: NodeId, req: Req) -> Result<()> {
         let t = self
-            .threads
+            .slots
             .lock()
             .unwrap()
             .remove(&(shard, id))
             .ok_or_else(|| anyhow!("no node {id} for shard {shard}"))?;
         let _ = t.tx.send(req);
         t.mailbox.notify();
-        let _ = t.join.join();
+        // Wait out both tasks: `wait_done` returning means the task box
+        // — and with it the Replica's files — is dropped, so a restart
+        // may reopen the data directory immediately.
+        if !self.reactor.wait_done(t.task, Duration::from_secs(30)) {
+            bail!("node {id} shard {shard} did not stop within 30s");
+        }
+        if !self.reactor.wait_done(t.applier, Duration::from_secs(30)) {
+            bail!("node {id} shard {shard} applier did not stop within 30s");
+        }
         // Unregister from the shard's transport: the survivors keep
         // sending heartbeats to the dead node, and those frames must
         // count as dropped rather than queueing forever in a mailbox
@@ -970,30 +1048,39 @@ impl Cluster {
             bail!("node {id} is not a member (1..={})", self.cfg.nodes);
         }
         {
-            let threads = self.threads.lock().unwrap();
-            if threads.contains_key(&(shard, id)) {
+            let slots = self.slots.lock().unwrap();
+            if slots.contains_key(&(shard, id)) {
                 bail!("node {id} shard {shard} is still running");
             }
         }
         let net = &self.nets[shard as usize];
         let mailbox = net.register(id)?;
-        let t = spawn_node(&self.cfg, net, shard, id, mailbox)?;
-        self.threads.lock().unwrap().insert((shard, id), t);
+        let t = spawn_replica(&self.reactor, &self.cfg, net, shard, id, mailbox)?;
+        self.slots.lock().unwrap().insert((shard, id), t);
         *self.leader_cache[shard as usize].lock().unwrap() = None;
         Ok(())
     }
 
     pub fn shutdown(self) -> Result<()> {
-        let mut threads = self.threads.lock().unwrap();
-        for t in threads.values() {
-            let _ = t.tx.send(Req::Stop);
+        // Ring every doorbell alongside the Stop — a consensus task
+        // parked on its tick deadline must notice the request now, not
+        // a tick later.
+        let ids: Vec<(TaskId, TaskId)> = {
+            let mut slots = self.slots.lock().unwrap();
+            for t in slots.values() {
+                let _ = t.tx.send(Req::Stop);
+                t.mailbox.notify();
+            }
+            slots.drain().map(|(_, t)| (t.task, t.applier)).collect()
+        };
+        for (task, applier) in ids {
+            let _ = self.reactor.wait_done(task, Duration::from_secs(30));
+            let _ = self.reactor.wait_done(applier, Duration::from_secs(30));
         }
         for net in &self.nets {
             net.shutdown();
         }
-        for (_, t) in threads.drain() {
-            let _ = t.join.join();
-        }
+        self.reactor.shutdown();
         Ok(())
     }
 }
@@ -1041,7 +1128,7 @@ enum ReadWork {
 }
 
 /// Execute a read against the local engine and answer the client.
-fn serve_read(replica: &mut Replica, work: ReadWork) {
+fn serve_read(replica: &Replica, work: ReadWork) {
     match work {
         ReadWork::Get { key, resp } => {
             let _ = resp.send(replica.engine().get(&key));
@@ -1110,87 +1197,127 @@ fn fail_read(work: ReadWork, msg: String) {
     }
 }
 
-pub(crate) fn node_loop(
+/// Max committed entries applied per applier poll: bounds how long the
+/// engine lock is held in one stretch so reads and GC interleave even
+/// under a large apply backlog.
+const APPLY_CHUNK: usize = 256;
+
+/// One replica's engine stats with the consensus-side counters — raft
+/// log fsyncs, committed entries, group-commit batching, apply-lane
+/// queue depth — overlaid.  This is the view [`Status`] reports and
+/// the fsyncs-per-committed-entry figure is computed from.
+fn replica_stats(replica: &Replica, lane: &ApplyLane) -> EngineStats {
+    let mut s = replica.stats();
+    let m = &replica.node.metrics;
+    s.log_syncs += m.log_syncs;
+    s.entries_committed += m.entries_committed;
+    s.group_commit_batches += m.group_commit_batches;
+    s.group_commit_entries += m.group_commit_entries;
+    s.group_commit_max_batch = s.group_commit_max_batch.max(m.group_commit_max_batch);
+    s.apply_queue_depth = s.apply_queue_depth.max(lane.depth_max());
+    s
+}
+
+/// The consensus half of one (shard, node) replica, scheduled on the
+/// shared [`Reactor`].  Each poll is one former `node_loop` turn —
+/// network input, tick catch-up, client requests, group-commit flush,
+/// read/write completions, GC pump — except that instead of blocking
+/// on its mailbox for 300 µs it parks until a doorbell rings or its
+/// next tick (or group-commit) deadline fires.
+struct ReplicaTask {
     id: NodeId,
     shard: ShardId,
-    peers: Vec<NodeId>,
-    cfg: ClusterConfig,
+    tick: Duration,
+    /// Group-commit budget in µs; 0 = sync inside `propose_batch`.
+    group_commit_us: u64,
     net: Net,
     mailbox: Arc<crate::raft::transport::Mailbox>,
     rx: Receiver<Req>,
-) -> Result<()> {
-    let base = shard_dir(&cfg.base_dir, id, shard);
-    let mut opts = cfg.engine.clone();
-    // Asymmetric role assignment, rotated per shard: shard `s` prefers
-    // node `(s % nodes) + 1` as leader (shorter election timeout), so
-    // a multi-shard cluster spreads its leaders across the nodes
-    // instead of serializing every group on node 1.  LSM-Raft's
-    // follower (SSTable-shipping) path follows the same preference
-    // (bench simplification, DESIGN.md §2).
-    let preferred = (shard as u64 % cfg.nodes.max(1) as u64) + 1;
-    let mut raft_cfg = cfg.raft.clone();
-    if id == preferred {
-        raft_cfg.election_timeout_min /= 2;
-        raft_cfg.election_timeout_max = raft_cfg.election_timeout_min + 2;
-    }
-    opts.follower = cfg.kind == EngineKind::LsmRaft && id != preferred;
-    let mut replica = Replica::open(
-        id,
-        peers,
-        &base,
-        cfg.kind,
-        opts,
-        raft_cfg,
-        cfg.gc.clone(),
-        // Distinct election jitter per shard group (shard 0 keeps the
-        // configured seed, preserving single-shard determinism).
-        cfg.seed.wrapping_add(shard as u64 * 7919),
-    )?;
+    replica: Replica,
+    lane: Arc<ApplyLane>,
+    started: Instant,
+    last_tick: Duration,
+    /// (commit index awaited, proposed-at, responder)
+    pending: Vec<(u64, Instant, SyncSender<Result<()>>)>,
+    /// Linearizable reads parked on their ReadIndex barrier.
+    reads: ReadLane<ReadWork>,
+    /// Armed while proposals await their covering raft-log fsync.
+    flush_deadline: Option<Instant>,
+}
 
-    let started = Instant::now();
-    let mut last_tick = Duration::ZERO;
-    // (commit index awaited, proposed-at, responder)
-    let mut pending: Vec<(u64, Instant, SyncSender<Result<()>>)> = Vec::new();
-    // Linearizable reads parked on their ReadIndex barrier.
-    let mut reads: ReadLane<ReadWork> = ReadLane::default();
-
-    let send_out = |out: Outbox| {
-        for (dst, msg) in out {
-            net.send(id, dst, &msg);
+impl Task for ReplicaTask {
+    fn poll(&mut self) -> PollOutcome {
+        match self.turn() {
+            Ok(outcome) => outcome,
+            Err(e) => {
+                eprintln!("node {} shard {} crashed: {e:#}", self.id, self.shard);
+                self.lane.close_discard();
+                PollOutcome::Done
+            }
         }
-    };
+    }
+}
 
-    loop {
+impl ReplicaTask {
+    fn turn(&mut self) -> Result<PollOutcome> {
+        // Disjoint field borrows: `send_out` captures the net while
+        // the replica, lanes and queues are mutated independently.
+        let Self {
+            id,
+            shard,
+            tick,
+            group_commit_us,
+            net,
+            mailbox,
+            rx,
+            replica,
+            lane,
+            started,
+            last_tick,
+            pending,
+            reads,
+            flush_deadline,
+        } = self;
+        let (id, shard) = (*id, *shard);
+        let send_out = |out: Outbox| {
+            for (dst, msg) in out {
+                net.send(id, dst, &msg);
+            }
+        };
+
         // 1. Network input.
-        let Some(msgs) = mailbox.drain(Duration::from_micros(300)) else {
-            return Ok(()); // bus shut down
+        let Some(msgs) = mailbox.try_drain() else {
+            // Transport shut down: drain what is committed, then exit.
+            lane.close();
+            return Ok(PollOutcome::Done);
         };
         for (from, msg) in msgs {
             let out = replica.node.handle(from, msg)?;
             send_out(out);
         }
 
-        // 2. Logical time.  Catch-up is capped: a thread stalled in a
-        // slow engine apply must not burn its whole election budget in
-        // one burst (busy ≠ dead) — it ticks at most twice per loop and
-        // forgives the rest of the stall.
+        // 2. Logical time.  Catch-up is capped: a task stalled in a
+        // slow engine apply (or starved by a busy worker pool) must not
+        // burn its whole election budget in one burst (busy ≠ dead) —
+        // it ticks at most twice per poll and forgives the rest of the
+        // stall.
         let now = started.elapsed();
         let mut caught_up = 0;
-        while now.saturating_sub(last_tick) >= cfg.tick {
-            last_tick += cfg.tick;
+        while now.saturating_sub(*last_tick) >= *tick {
+            *last_tick += *tick;
             caught_up += 1;
             if caught_up > 2 {
                 // Forgive the stall for election purposes, but charge
                 // it to the node's lease clock: a leader lease measured
                 // against forgiven (under-counted) ticks could outlive
                 // the followers' election timers in wall time.  Charged
-                // rounding UP, plus this loop turn's own un-ticked
-                // step — over-crediting only shortens the lease, which
-                // is the safe direction.
-                let stalled = now.saturating_sub(last_tick).as_micros();
-                let skipped = stalled.div_ceil(cfg.tick.as_micros().max(1)) as u64 + 1;
+                // rounding UP, plus this poll's own un-ticked step —
+                // over-crediting only shortens the lease, which is the
+                // safe direction.
+                let stalled = now.saturating_sub(*last_tick).as_micros();
+                let skipped = stalled.div_ceil(tick.as_micros().max(1)) as u64 + 1;
                 replica.node.skip_ticks(skipped);
-                last_tick = now;
+                *last_tick = now;
                 break;
             }
             let out = replica.node.tick()?;
@@ -1225,18 +1352,18 @@ pub(crate) fn node_loop(
                 }
                 Req::Get { key, consistency, resp } => {
                     let work = ReadWork::Get { key, resp };
-                    begin_read(&mut replica, &mut reads, work, consistency, &send_out)?;
+                    begin_read(replica, reads, work, consistency, &send_out)?;
                 }
                 Req::MultiGet { keys, consistency, resp } => {
                     let work = ReadWork::MultiGet { keys, resp };
-                    begin_read(&mut replica, &mut reads, work, consistency, &send_out)?;
+                    begin_read(replica, reads, work, consistency, &send_out)?;
                 }
                 Req::Scan { start, end, limit, consistency, resp } => {
                     let work = ReadWork::Scan { start, end, limit, resp };
-                    begin_read(&mut replica, &mut reads, work, consistency, &send_out)?;
+                    begin_read(replica, reads, work, consistency, &send_out)?;
                 }
                 Req::Status { resp } => {
-                    let s = replica.stats();
+                    let s = replica_stats(replica, lane);
                     let _ = resp.send(Status {
                         id,
                         shard,
@@ -1245,9 +1372,9 @@ pub(crate) fn node_loop(
                         leader_hint: replica.node.leader_hint(),
                         last_applied: replica.node.last_applied(),
                         raft_vlog_bytes: replica.raft_vlog_bytes(),
-                        engine: s,
-                        gc_phase: replica.engine_ref().gc_phase(),
+                        gc_phase: replica.engine().gc_phase(),
                         gc_cycles: s.gc_cycles,
+                        engine: s,
                     });
                 }
                 Req::DrainGc { resp } => {
@@ -1258,7 +1385,7 @@ pub(crate) fn node_loop(
                     let r = (|| -> Result<()> {
                         for _ in 0..8 {
                             replica.pump_gc(now_ms)?;
-                            if replica.engine_ref().gc_phase() == crate::gc::GcPhase::During {
+                            if replica.engine().gc_phase() == GcPhase::During {
                                 replica.finish_gc()?;
                             } else {
                                 break;
@@ -1274,13 +1401,19 @@ pub(crate) fn node_loop(
                 Req::Stop => stop = true,
                 // Abrupt exit: no finish_gc, no responses to anything
                 // still queued — pending responders drop, clients see
-                // a closed channel and retry elsewhere.
-                Req::Crash => return Ok(()),
+                // a closed channel and retry elsewhere.  Queued apply
+                // work is discarded too; the committed entries
+                // re-apply from the log on restart.
+                Req::Crash => {
+                    lane.close_discard();
+                    return Ok(PollOutcome::Done);
+                }
             }
             if write_cmds.len() >= MAX_FOLD {
                 break;
             }
         }
+        let saturated = write_cmds.len() >= MAX_FOLD;
 
         if !write_cmds.is_empty() {
             match replica.propose_batch(write_cmds) {
@@ -1302,6 +1435,28 @@ pub(crate) fn node_loop(
             }
         }
 
+        // 3b. Group commit: with a budget configured, proposals above
+        // were broadcast WITHOUT a local raft-log sync; one fsync at
+        // the deadline covers every entry appended since the last one.
+        // Commit still requires a quorum of durable copies — the
+        // leader's own durable index is simply allowed to arrive last
+        // (DESIGN.md §6).
+        if *group_commit_us > 0 {
+            if replica.node.has_unsynced() {
+                let now = Instant::now();
+                let budget = Duration::from_micros(*group_commit_us);
+                let at = *flush_deadline.get_or_insert(now + budget);
+                if now >= at {
+                    replica.node.flush_group_commit()?;
+                    *flush_deadline = None;
+                }
+            } else {
+                // Followers (or a quorum of durable acks) covered the
+                // batch; nothing left to flush.
+                *flush_deadline = None;
+            }
+        }
+
         // 4. Read lane: barriers that resolved (or failed) via the
         // network input above, apply-point releases, and timeouts.
         // Node results are drained unconditionally — a barrier may
@@ -1310,7 +1465,7 @@ pub(crate) fn node_loop(
         let applied = replica.node.last_applied();
         for (ctx, ri) in ready {
             if let Some(w) = reads.on_ready(ctx, ri, applied) {
-                serve_read(&mut replica, w);
+                serve_read(replica, w);
             }
         }
         for ctx in failed {
@@ -1321,7 +1476,7 @@ pub(crate) fn node_loop(
         }
         if !reads.is_empty() {
             for w in reads.take_applied(replica.node.last_applied()) {
-                serve_read(&mut replica, w);
+                serve_read(replica, w);
             }
             for w in reads.take_timed_out(READ_BARRIER_TIMEOUT) {
                 fail_read(w, format!("read barrier timed out on node {id} shard {shard}"));
@@ -1361,9 +1516,70 @@ pub(crate) fn node_loop(
         }
 
         if stop {
-            // Finish any GC so files are consistent on disk.
+            // Finish any GC so files are consistent on disk; the
+            // applier drains what is already committed, kept alive by
+            // its own handle on the engine cell.
             let _ = replica.finish_gc();
-            return Ok(());
+            lane.close();
+            return Ok(PollOutcome::Done);
+        }
+
+        // 7. Park.  More folded requests than one turn takes → requeue
+        // behind other runnable tasks; otherwise sleep until the next
+        // doorbell or the earlier of the tick and group-commit
+        // deadlines.
+        if saturated {
+            return Ok(PollOutcome::Yield);
+        }
+        let next_tick = *started + *last_tick + *tick;
+        let at = flush_deadline.map_or(next_tick, |d| next_tick.min(d));
+        Ok(PollOutcome::Pending(Some(at)))
+    }
+}
+
+/// The apply half of one replica: drains committed entries from the
+/// [`ApplyLane`] into the shard's engine (sharing it with the
+/// consensus task through the [`EngineCell`] lock), publishes the
+/// apply cursor, and rings the replica's doorbell so parked read
+/// barriers and write completions re-check it.
+struct ApplierTask {
+    id: NodeId,
+    shard: ShardId,
+    lane: Arc<ApplyLane>,
+    engine: EngineCell,
+    mailbox: Arc<crate::raft::transport::Mailbox>,
+}
+
+impl Task for ApplierTask {
+    fn poll(&mut self) -> PollOutcome {
+        let Some((generation, chunk)) = self.lane.pop_chunk(APPLY_CHUNK) else {
+            return PollOutcome::Done;
+        };
+        if chunk.is_empty() {
+            return PollOutcome::Pending(None);
+        }
+        {
+            let mut eng = self.engine.lock();
+            for (idx, entry, vref) in chunk {
+                // A snapshot install superseded this chunk mid-flight:
+                // drop the rest — the installer republishes the cursor.
+                if self.lane.generation() != generation {
+                    break;
+                }
+                if let Err(e) = eng.apply(&entry, vref) {
+                    let (id, shard) = (self.id, self.shard);
+                    eprintln!("node {id} shard {shard}: apply failed at {idx}: {e:#}");
+                    self.lane.close_discard();
+                    return PollOutcome::Done;
+                }
+                self.lane.set_applied(idx);
+            }
+        }
+        self.mailbox.notify();
+        if self.lane.depth() > 0 {
+            PollOutcome::Yield
+        } else {
+            PollOutcome::Pending(None)
         }
     }
 }
@@ -1651,6 +1867,51 @@ mod tests {
         let agg = cluster.status(id).unwrap();
         assert_eq!(rows.len(), 3);
         assert_eq!(agg.last_applied, rows.iter().map(|s| s.last_applied).sum::<u64>());
+        cluster.shutdown().unwrap();
+    }
+
+    /// The tentpole scaling claim: a 64-shard × 3-node cluster (192
+    /// replicas, 384 tasks) runs on a worker pool far smaller than one
+    /// thread per replica — the reactor multiplexes them.
+    #[test]
+    fn many_shards_run_on_a_small_worker_pool() {
+        let cluster = Cluster::start(sharded("manyshards", EngineKind::Original, 3, 64)).unwrap();
+        assert!(
+            cluster.reactor.workers() < 64 * 3,
+            "expected a multiplexing pool, got {} workers for 192 replicas",
+            cluster.reactor.workers()
+        );
+        for i in 0..64u32 {
+            cluster.put(format!("w{i:03}").as_bytes(), format!("v{i}").as_bytes()).unwrap();
+        }
+        assert_eq!(cluster.get(b"w031").unwrap(), Some(b"v31".to_vec()));
+        assert_eq!(cluster.get(b"w063").unwrap(), Some(b"v63".to_vec()));
+        cluster.shutdown().unwrap();
+    }
+
+    /// With a (deliberately huge) group-commit budget on a single-node
+    /// cluster, a lone put can only commit through the deadline flush:
+    /// the leader's own durable index is the entire quorum, so nothing
+    /// commits until the batched fsync runs.  The put completing at
+    /// all proves the timed-out budget flushes a partial batch.
+    #[test]
+    fn group_commit_deadline_flushes_partial_batch() {
+        let mut c = cfg("gcommit", EngineKind::Nezha, 1);
+        c.raft.group_commit_us = 50_000;
+        let cluster = Cluster::start(c).unwrap();
+        cluster.put(b"gk", b"gv").unwrap();
+        assert_eq!(cluster.get(b"gk").unwrap(), Some(b"gv".to_vec()));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let s = cluster.status(1).unwrap().engine;
+            if s.group_commit_batches >= 1 {
+                assert!(s.group_commit_entries >= 1);
+                assert!(s.group_commit_max_batch >= 1);
+                break;
+            }
+            assert!(Instant::now() < deadline, "no group-commit batch recorded: {s:?}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
         cluster.shutdown().unwrap();
     }
 }

@@ -6,17 +6,20 @@
 //! into the engine, and drives the GC lifecycle (rotation → background
 //! compaction → snapshot mark → epoch cleanup).
 
-use crate::engine::{self, EngineKind, EngineOpts, EngineStats, KvEngine};
+use crate::engine::{self, EngineCell, EngineKind, EngineOpts, EngineStats, KvEngine};
 use crate::gc::{FrozenEpoch, GcConfig, GcOutput, GcPhase};
 use crate::raft::node::Outbox;
 use crate::raft::{Command, Config as RaftConfig, LogIndex, Node, NodeId};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::MutexGuard;
 use std::time::{Duration, Instant};
 
 pub struct Replica {
-    pub node: Node<Box<dyn KvEngine>>,
+    /// The consensus node drives an [`EngineCell`] — the engine behind
+    /// a lock — so the apply-lane applier task can share it.
+    pub node: Node<EngineCell>,
     pub kind: EngineKind,
     pub gc_cfg: GcConfig,
     last_gc_ms: u64,
@@ -150,20 +153,25 @@ impl Replica {
         engine_opts.dir = engine_dir(base);
         engine_opts.raft_dir = raft_dir(base);
         let eng = engine::build(kind, engine_opts)?;
-        let node = Node::new(id, peers, &raft_dir(base), eng, raft_cfg, seed)?;
+        let cell = EngineCell::new(eng);
+        let node = Node::new(id, peers, &raft_dir(base), cell, raft_cfg, seed)?;
         Ok(Self { node, kind, gc_cfg, last_gc_ms: 0, gc_history: Vec::new() })
     }
 
-    pub fn engine(&mut self) -> &mut dyn KvEngine {
-        &mut **self.node.sm_mut()
+    /// Lock the shared engine.  Consensus applies (or the apply-lane
+    /// applier), reads, and GC all serialize on this lock; hold the
+    /// guard only for the duration of one operation.
+    pub fn engine(&self) -> MutexGuard<'_, Box<dyn KvEngine>> {
+        self.node.sm().lock()
     }
 
-    pub fn engine_ref(&self) -> &dyn KvEngine {
-        &**self.node.sm()
+    /// The shared engine cell, for wiring an apply-lane applier task.
+    pub fn engine_cell(&self) -> EngineCell {
+        self.node.sm().clone()
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.engine_ref().stats()
+        self.engine().stats()
     }
 
     /// Total bytes the raft ValueLog has absorbed (the single value
@@ -201,13 +209,15 @@ impl Replica {
         if self.kind != EngineKind::Nezha {
             return Ok(None);
         }
-        // Completion side.
-        if let Some(out) = self.engine().poll_gc()? {
+        // Completion side.  (Bind the poll result first: the engine
+        // guard must drop before `complete_cycle` re-borrows self.)
+        let polled = self.engine().poll_gc()?;
+        if let Some(out) = polled {
             return self.complete_cycle(out).map(Some);
         }
         // Trigger side (paper's multidimensional triggers: size +
         // schedule floor + load; see GcConfig).
-        let phase = self.engine_ref().gc_phase();
+        let phase = self.engine().gc_phase();
         if phase == GcPhase::During {
             return Ok(None);
         }
@@ -248,7 +258,8 @@ impl Replica {
         if self.kind != EngineKind::Nezha {
             return Ok(None);
         }
-        if let Some(out) = self.engine().wait_gc()? {
+        let waited = self.engine().wait_gc()?;
+        if let Some(out) = waited {
             return self.complete_cycle(out).map(Some);
         }
         Ok(None)
@@ -324,9 +335,9 @@ mod tests {
         }
         // Size threshold crossed; pump should start + eventually finish.
         r.pump_gc(1000).unwrap();
-        assert_eq!(r.engine_ref().gc_phase(), GcPhase::During);
+        assert_eq!(r.engine().gc_phase(), GcPhase::During);
         r.finish_gc().unwrap();
-        assert_eq!(r.engine_ref().gc_phase(), GcPhase::Post);
+        assert_eq!(r.engine().gc_phase(), GcPhase::Post);
         // Raft log dropped old epoch; data still readable.
         assert_eq!(r.engine().get(b"key0042").unwrap(), Some(vec![7u8; 512]));
         assert!(r.node.log.snap_index > 0);
@@ -360,7 +371,7 @@ mod tests {
             put(&mut r, &format!("h{i:03}"), &[3u8; 512]);
         }
         r.pump_gc(0).unwrap();
-        assert_eq!(r.engine_ref().gc_phase(), GcPhase::During);
+        assert_eq!(r.engine().gc_phase(), GcPhase::During);
         let out = r.finish_gc().unwrap().expect("cycle output returned");
         assert_eq!(r.gc_history.len(), 1, "finish_gc dropped the cycle from history");
         assert_eq!(r.gc_history[0].gen, out.gen);
@@ -396,7 +407,7 @@ mod tests {
         assert!(r.node.log.last_index() > r.node.last_applied(), "backlog exists");
         r.pump_gc(0).unwrap();
         assert_eq!(
-            r.engine_ref().gc_phase(),
+            r.engine().gc_phase(),
             GcPhase::During,
             "trigger starved by backlog"
         );
@@ -418,7 +429,7 @@ mod tests {
             put(&mut r, &format!("c{i:03}"), &[7u8; 512]);
         }
         r.pump_gc(10_000).unwrap();
-        assert_eq!(r.engine_ref().gc_phase(), GcPhase::During, "second cycle runs");
+        assert_eq!(r.engine().gc_phase(), GcPhase::During, "second cycle runs");
         r.finish_gc().unwrap().expect("second cycle output");
         assert_eq!(r.engine().get(b"b010").unwrap(), Some(vec![6u8; 512]));
         assert_eq!(r.engine().get(b"a039").unwrap(), Some(vec![5u8; 512]));
@@ -466,7 +477,7 @@ mod tests {
             put(&mut r, &format!("k{i}"), &[1u8; 256]);
         }
         assert!(r.pump_gc(10_000).unwrap().is_none());
-        assert_eq!(r.engine_ref().gc_phase(), GcPhase::Pre);
+        assert_eq!(r.engine().gc_phase(), GcPhase::Pre);
     }
 
     #[test]

@@ -24,11 +24,12 @@
 //! as the in-process `Cluster` handle, minus the fan-out parallelism
 //! (it is a *thin* client).
 
-use super::cluster::{node_loop, ClusterConfig, ReadConsistency, Req, Status};
+use super::cluster::{spawn_replica, ClusterConfig, NodeSlot, ReadConsistency, Req, Status};
 use super::router::{merge_sorted, split_keys, ShardId, ShardRouter};
 use crate::raft::transport::tcp::{frame_encode, frame_parse, TcpNet};
 use crate::raft::transport::{Mailbox, Net, WireSnapshot};
 use crate::raft::NodeId;
+use crate::runtime::reactor::{self, Reactor};
 use crate::util::{Decoder, Encoder};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::hash_map::Entry;
@@ -344,13 +345,19 @@ struct ServerShared {
 
 /// A running `nezha serve` process: this node's replica of every
 /// shard, raft over [`TcpNet`], plus the client-protocol listener.
+/// Shard replicas run as tasks on one process-wide [`Reactor`] pool
+/// (the same runtime the in-process `Cluster` uses — DESIGN.md §6),
+/// so serving many shards does not cost a thread per shard.
 pub struct Server {
     node: NodeId,
     client_addr: SocketAddr,
     shared: Arc<ServerShared>,
     ports: ShardPorts,
     nets: Vec<TcpNet>,
-    node_joins: Vec<JoinHandle<()>>,
+    /// One slot per shard: this node's replica of that shard group.
+    slots: Vec<NodeSlot>,
+    /// The worker pool every shard replica task runs on.
+    reactor: Reactor,
     accept_join: Option<JoinHandle<()>>,
 }
 
@@ -369,38 +376,28 @@ impl Server {
         cluster.nodes = n;
         cluster.transport = crate::raft::TransportKind::Tcp;
         let shards = cluster.shards();
+        let reactor = Reactor::new(reactor::default_workers());
         let mut nets = Vec::with_capacity(shards as usize);
-        let mut txs = Vec::with_capacity(shards as usize);
-        let mut doorbells = Vec::with_capacity(shards as usize);
-        let mut node_joins = Vec::with_capacity(shards as usize);
+        let mut slots = Vec::with_capacity(shards as usize);
         for shard in 0..shards {
             let raft_peers: HashMap<NodeId, SocketAddr> =
                 peers.iter().map(|(&id, &addr)| (id, raft_addr(addr, shard))).collect();
             let net = TcpNet::with_peers(raft_peers);
             let mailbox = net.register(node)?;
-            let (tx, rx) = mpsc::channel::<Req>();
-            let others: Vec<NodeId> = ids.iter().copied().filter(|&p| p != node).collect();
-            let cfg2 = cluster.clone();
-            let net2 = Net::Tcp(net.clone());
-            let mailbox2 = Arc::clone(&mailbox);
-            let join = std::thread::Builder::new()
-                .name(format!("nezha-serve-s{shard}"))
-                .spawn(move || {
-                    if let Err(e) = node_loop(node, shard, others, cfg2, net2, mailbox2, rx) {
-                        eprintln!("node {node} shard {shard} crashed: {e:#}");
-                    }
-                })?;
+            let slot =
+                spawn_replica(&reactor, &cluster, &Net::Tcp(net.clone()), shard, node, mailbox)?;
             nets.push(net);
-            txs.push(tx);
-            doorbells.push(mailbox);
-            node_joins.push(join);
+            slots.push(slot);
         }
         let shared = Arc::new(ServerShared {
             router: cluster.router.clone(),
             consistency: cluster.read_consistency,
             closed: AtomicBool::new(false),
         });
-        let ports = ShardPorts { txs, doorbells };
+        let ports = ShardPorts {
+            txs: slots.iter().map(|s| s.tx.clone()).collect(),
+            doorbells: slots.iter().map(|s| Arc::clone(&s.mailbox)).collect(),
+        };
         let listener = TcpListener::bind(me).with_context(|| format!("serve: bind {me}"))?;
         let client_addr = listener.local_addr()?;
         let accept_join = {
@@ -416,7 +413,8 @@ impl Server {
             shared,
             ports,
             nets,
-            node_joins,
+            slots,
+            reactor,
             accept_join: Some(accept_join),
         })
     }
@@ -445,21 +443,26 @@ impl Server {
         status_rows(&self.ports)
     }
 
-    /// Graceful stop: finish in-flight GC, close sockets, join
-    /// threads.  The killed-process fault case needs no cooperation —
-    /// peers see connection resets and their frames count dropped.
+    /// Graceful stop: finish in-flight GC, close sockets, wait out
+    /// every shard task.  The killed-process fault case needs no
+    /// cooperation — peers see connection resets and their frames
+    /// count dropped.
     pub fn shutdown(mut self) -> Result<()> {
         self.shared.closed.store(true, Ordering::Relaxed);
-        for (tx, bell) in self.ports.txs.iter().zip(&self.ports.doorbells) {
-            let _ = tx.send(Req::Stop);
-            bell.notify();
+        // Stop + doorbell every shard first so tasks parked on tick
+        // deadlines notice now, then wait each one out.
+        for slot in &self.slots {
+            let _ = slot.tx.send(Req::Stop);
+            slot.mailbox.notify();
         }
-        for j in self.node_joins.drain(..) {
-            let _ = j.join();
+        for slot in self.slots.drain(..) {
+            let _ = self.reactor.wait_done(slot.task, Duration::from_secs(30));
+            let _ = self.reactor.wait_done(slot.applier, Duration::from_secs(30));
         }
         for net in &self.nets {
             net.shutdown();
         }
+        self.reactor.shutdown();
         if let Some(j) = self.accept_join.take() {
             let _ = j.join();
         }

@@ -160,6 +160,7 @@ impl KvEngine for ClassicEngine {
             compact_bytes: s.compact_bytes,
             gets: self.gets,
             scans: self.scans,
+            log_syncs: s.log_syncs,
             ..Default::default()
         }
     }

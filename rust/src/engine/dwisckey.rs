@@ -174,6 +174,7 @@ impl KvEngine for DwisckeyEngine {
             scans: self.scans,
             vlog_reads: self.vlog_reads,
             vlog_read_bytes: self.vlog_read_bytes,
+            log_syncs: s.log_syncs,
             ..Default::default()
         }
     }

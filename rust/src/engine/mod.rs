@@ -150,6 +150,20 @@ pub struct EngineStats {
     /// batched resolution; zero for engines without value separation).
     pub readahead_hits: u64,
     pub readahead_misses: u64,
+    /// Persistence barriers on the raft log + engine WAL (overlaid by
+    /// the cluster from `NodeMetrics`/`IoStats`; the group-commit win
+    /// shows up as `log_syncs / entries_committed` < 1).
+    pub log_syncs: u64,
+    /// Entries committed by consensus (overlaid from `NodeMetrics`).
+    pub entries_committed: u64,
+    /// Group-commit flush batches (overlaid from `NodeMetrics`).
+    pub group_commit_batches: u64,
+    /// Entries those flushes covered (sum).
+    pub group_commit_entries: u64,
+    /// Largest single group-commit batch.
+    pub group_commit_max_batch: u64,
+    /// Apply-lane queue depth high-water mark (0 without a lane).
+    pub apply_queue_depth: u64,
 }
 
 impl EngineStats {
@@ -176,6 +190,13 @@ impl EngineStats {
         self.vlog_read_bytes += o.vlog_read_bytes;
         self.readahead_hits += o.readahead_hits;
         self.readahead_misses += o.readahead_misses;
+        self.log_syncs += o.log_syncs;
+        self.entries_committed += o.entries_committed;
+        self.group_commit_batches += o.group_commit_batches;
+        self.group_commit_entries += o.group_commit_entries;
+        // High-water marks: the rolled-up view keeps the worst shard.
+        self.group_commit_max_batch = self.group_commit_max_batch.max(o.group_commit_max_batch);
+        self.apply_queue_depth = self.apply_queue_depth.max(o.apply_queue_depth);
     }
 
     /// Readahead cache hit rate in `[0, 1]` (0 when the cache was never
@@ -270,6 +291,42 @@ impl StateMachine for Box<dyn KvEngine> {
 
     fn on_log_truncated(&mut self, live_epoch: u32) {
         (**self).on_log_truncated(live_epoch)
+    }
+}
+
+/// Shared-engine state machine: the engine behind a lock, so a
+/// replica's consensus loop (snapshots, truncation) and its apply-lane
+/// applier can both reach it.  Reads and GC lock it the same way via
+/// `Replica::engine()`.  Lock discipline: never taken while holding
+/// the apply-lane queue lock, so the pair cannot deadlock.
+#[derive(Clone)]
+pub struct EngineCell(pub Arc<std::sync::Mutex<Box<dyn KvEngine>>>);
+
+impl EngineCell {
+    pub fn new(engine: Box<dyn KvEngine>) -> Self {
+        Self(Arc::new(std::sync::Mutex::new(engine)))
+    }
+
+    pub fn lock(&self) -> std::sync::MutexGuard<'_, Box<dyn KvEngine>> {
+        self.0.lock().unwrap()
+    }
+}
+
+impl StateMachine for EngineCell {
+    fn apply(&mut self, entry: &crate::raft::LogEntry, vref: crate::vlog::VRef) -> Result<()> {
+        self.0.lock().unwrap().apply(entry, vref)
+    }
+
+    fn snapshot_bytes(&mut self) -> Result<Vec<u8>> {
+        self.0.lock().unwrap().snapshot_bytes()
+    }
+
+    fn install_snapshot(&mut self, data: &[u8], li: u64, lt: u64) -> Result<()> {
+        self.0.lock().unwrap().install_snapshot(data, li, lt)
+    }
+
+    fn on_log_truncated(&mut self, live_epoch: u32) {
+        self.0.lock().unwrap().on_log_truncated(live_epoch)
     }
 }
 

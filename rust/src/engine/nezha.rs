@@ -679,6 +679,8 @@ impl KvEngine for NezhaEngine {
             vlog_read_bytes: vlog_io.vlog_read_bytes,
             readahead_hits: vlog_io.readahead_hits,
             readahead_misses: vlog_io.readahead_misses,
+            log_syncs: s.log_syncs + olds.log_syncs,
+            ..Default::default()
         }
     }
 

@@ -52,6 +52,34 @@ pub fn bench_shards() -> usize {
         .max(1)
 }
 
+/// Parse a `--clients N` (or `--clients=N`) flag out of an argv slice.
+pub fn parse_clients_arg(args: &[String]) -> Option<usize> {
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--clients" {
+            return it.next().and_then(|v| v.parse().ok());
+        }
+        if let Some(v) = a.strip_prefix("--clients=") {
+            return v.parse().ok();
+        }
+    }
+    None
+}
+
+/// Concurrent client threads for the put experiment: `--clients N` on
+/// the bench command line (`cargo bench --bench fig4_put -- --clients
+/// 8`) or the `NEZHA_BENCH_CLIENTS` env var; defaults to 1 (the
+/// original single-stream load).  Overlapping clients are what give
+/// group commit batches to amortize — one lock-step stream commits
+/// before the next proposal arrives.
+pub fn bench_clients() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    parse_clients_arg(&args)
+        .or_else(|| std::env::var("NEZHA_BENCH_CLIENTS").ok().and_then(|s| s.parse().ok()))
+        .unwrap_or(1)
+        .max(1)
+}
+
 /// Parse a `--read-from WHO` (or `--read-from=WHO`) flag: `leader`
 /// (default; every read at the shard leader), `followers` (ReadIndex/
 /// lease-barriered linearizable reads spread over all replicas), or
@@ -153,6 +181,9 @@ pub struct Spec {
     /// Which wire carries Raft frames: the in-process bus (default)
     /// or real loopback TCP sockets.
     pub transport: TransportKind,
+    /// Concurrent client threads driving the load phase (1 = the
+    /// original single-stream load); see [`bench_clients`].
+    pub clients: usize,
     pub seed: u64,
 }
 
@@ -167,6 +198,7 @@ impl Spec {
             gc_fraction: 0.4,
             read_from: ReadConsistency::Leader,
             transport: TransportKind::Inproc,
+            clients: 1,
             seed: 42,
         }
     }
@@ -292,6 +324,11 @@ impl Env {
         cfg.read_consistency = spec.read_from;
         cfg.transport = spec.transport;
         cfg.net = NetConfig { latency_us: (0, 0), loss: 0.0, seed: spec.seed };
+        // Group commit on for the bench path: proposals arriving
+        // within a 200 µs window share one raft-log persist, so
+        // overlapping clients amortize syncs (fig4 reports the
+        // fsyncs-per-committed-entry ratio).
+        cfg.raft.group_commit_us = 200;
         // Engine scale knobs proportional to the per-shard load (each
         // shard group sees roughly `load / shards` of the traffic).
         let shard_load = (spec.load_bytes / shards as u64).max(1);
@@ -311,40 +348,36 @@ impl Env {
     }
 
     /// Load `records()` sequential inserts; returns the put
-    /// measurement (this IS the put experiment).
+    /// measurement (this IS the put experiment).  With `spec.clients
+    /// > 1` the key range is split into contiguous slices driven by
+    /// that many concurrent client threads, so the leader sees
+    /// overlapping proposals for group commit to batch instead of one
+    /// lock-step stream.
     pub fn load(&self, label: &str) -> Result<Measurement> {
         let records = self.spec.records();
-        let vs = self.spec.value_size;
-        // Batch size: keep batches ~2 MiB so latency samples are
-        // meaningful but consensus rounds amortize.
-        let batch = ((2 << 20) / vs.max(1)).clamp(1, 256);
+        let clients = (self.spec.clients.max(1) as u64).min(records);
+        let per = records / clients;
+        let t0 = Instant::now();
         let mut lat = Histogram::new();
         let mut loaded = 0u64;
-        let t0 = Instant::now();
-        let mut ops_iter = Generator::load_ops(records, vs, self.spec.seed);
-        let mut done = false;
-        while !done {
-            let mut ops = Vec::with_capacity(batch);
-            for _ in 0..batch {
-                match ops_iter.next() {
-                    Some(kv) => ops.push(kv),
-                    None => {
-                        done = true;
-                        break;
-                    }
-                }
+        if clients == 1 {
+            (loaded, lat) = self.load_range(0, records)?;
+        } else {
+            let parts: Vec<Result<(u64, Histogram)>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..clients)
+                    .map(|c| {
+                        let start = c * per;
+                        let end = if c == clients - 1 { records } else { start + per };
+                        s.spawn(move || self.load_range(start, end))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+            });
+            for part in parts {
+                let (n, h) = part?;
+                loaded += n;
+                lat.merge(&h);
             }
-            if ops.is_empty() {
-                break;
-            }
-            let n = ops.len() as u64;
-            let bt0 = Instant::now();
-            self.cluster.put_batch(ops)?;
-            let per_op = bt0.elapsed().as_micros() as u64 / n.max(1);
-            for _ in 0..n {
-                lat.record(per_op.max(1));
-            }
-            loaded += n;
         }
         Ok(Measurement {
             system: self.spec.kind.name().into(),
@@ -352,8 +385,34 @@ impl Env {
             ops: loaded,
             wall_s: t0.elapsed().as_secs_f64(),
             lat,
-            bytes: loaded * vs as u64,
+            bytes: loaded * self.spec.value_size as u64,
         })
+    }
+
+    /// One client's slice of the load: records `[start, end)` in
+    /// ~2 MiB batches (big enough that consensus rounds amortize,
+    /// small enough that batch-mean latency samples stay meaningful).
+    fn load_range(&self, start: u64, end: u64) -> Result<(u64, Histogram)> {
+        let vs = self.spec.value_size;
+        let batch = ((2 << 20) / vs.max(1)).clamp(1, 256) as u64;
+        let mut g = Generator::new(WorkloadKind::Load, 1, vs, self.spec.seed);
+        let mut lat = Histogram::new();
+        let mut loaded = 0u64;
+        let mut r = start;
+        while r < end {
+            let n = batch.min(end - r);
+            let ops: Vec<(Vec<u8>, Vec<u8>)> =
+                (r..r + n).map(|i| (key_of(i), g.value_for(i))).collect();
+            let bt0 = Instant::now();
+            self.cluster.put_batch(ops)?;
+            let per_op = bt0.elapsed().as_micros() as u64 / n.max(1);
+            for _ in 0..n {
+                lat.record(per_op.max(1));
+            }
+            loaded += n;
+            r += n;
+        }
+        Ok((loaded, lat))
     }
 
     /// Issue `n` Zipf point queries, `GET_BATCH` at a time through
@@ -660,6 +719,33 @@ mod tests {
         assert_eq!(parse_shards_arg(&args(&["--scale", "1"])), None);
         assert_eq!(parse_shards_arg(&args(&["--shards"])), None);
         assert_eq!(parse_shards_arg(&args(&["--shards", "x"])), None);
+    }
+
+    #[test]
+    fn clients_flag_parses() {
+        let args = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(parse_clients_arg(&args(&["bench", "--clients", "8"])), Some(8));
+        assert_eq!(parse_clients_arg(&args(&["--clients=2"])), Some(2));
+        assert_eq!(parse_clients_arg(&args(&["--shards", "4"])), None);
+        assert_eq!(parse_clients_arg(&args(&["--clients"])), None);
+        assert_eq!(parse_clients_arg(&args(&["--clients", "x"])), None);
+    }
+
+    #[test]
+    fn tiny_end_to_end_with_concurrent_clients() {
+        // Four client threads split the key range; every record still
+        // lands exactly once and the loaded data reads back.
+        let mut spec = Spec::new(EngineKind::Nezha, 1 << 10);
+        spec.load_bytes = 64 << 10;
+        spec.clients = 4;
+        let env = Env::start(spec).unwrap();
+        let put = env.load("1KB").unwrap();
+        assert_eq!(put.ops, 64);
+        let get = env.run_gets(20, "1KB").unwrap();
+        assert!(get.bytes > 0, "gets found data after concurrent load");
+        let st = env.leader_stats().unwrap();
+        assert!(st.entries_committed > 0, "leader committed nothing: {st:?}");
+        env.destroy().unwrap();
     }
 
     #[test]

@@ -20,7 +20,10 @@
 //!   plus the multi-process `nezha serve` server and its thin TCP
 //!   client ([`coordinator::server`]).
 //! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas
-//!   index-build module (`artifacts/index_build.hlo.txt`).
+//!   index-build module (`artifacts/index_build.hlo.txt`), plus the
+//!   event-driven replica reactor ([`runtime::reactor`]) that
+//!   multiplexes every (shard, node) loop of a process over a small
+//!   worker pool.
 //! * [`ycsb`] — YCSB workload generator (Load, A–F).
 //! * [`harness`] — the experiment harness regenerating every paper
 //!   figure (see `benches/fig*.rs`).

@@ -87,6 +87,8 @@ pub struct IoStats {
     pub readahead_hits: AtomicU64,
     /// Readahead-cache segment loads (misses).
     pub readahead_misses: AtomicU64,
+    /// WAL durability barriers ([`Db::sync_wal`] calls that hit a WAL).
+    pub log_syncs: AtomicU64,
 }
 
 impl IoStats {
@@ -110,6 +112,7 @@ impl IoStats {
             vlog_read_bytes: self.vlog_read_bytes.load(Ordering::Relaxed),
             readahead_hits: self.readahead_hits.load(Ordering::Relaxed),
             readahead_misses: self.readahead_misses.load(Ordering::Relaxed),
+            log_syncs: self.log_syncs.load(Ordering::Relaxed),
         }
     }
 }
@@ -128,6 +131,7 @@ pub struct IoStatsSnapshot {
     pub vlog_read_bytes: u64,
     pub readahead_hits: u64,
     pub readahead_misses: u64,
+    pub log_syncs: u64,
 }
 
 impl IoStatsSnapshot {
@@ -304,6 +308,7 @@ impl Db {
     pub fn sync_wal(&mut self) -> Result<()> {
         if let Some(wal) = &mut self.wal {
             wal.sync()?;
+            self.stats.log_syncs.fetch_add(1, Ordering::Relaxed);
         }
         Ok(())
     }

@@ -52,7 +52,8 @@ leader|followers|stale.
 `chaos` runs a seeded nemesis schedule (partitions, link flapping, disk-fault +
 crash + restart) against a live in-process cluster while concurrent clients
 record a history, then checks it for linearizability.  Exits non-zero on any
-violation.  Schedules: partition-heal, crash-restart-mid-gc, flapping-links.
+violation.  Schedules: partition-heal, crash-restart-mid-gc, flapping-links,
+torn-group-commit.
 
 ENGINES: {}",
         EngineKind::ALL.map(|k| k.name()).join(", ")
@@ -360,7 +361,7 @@ fn cmd_recover(flags: &HashMap<String, String>) -> Result<()> {
     let dir = flags.get("dir").context("--dir required")?;
     let base = std::path::PathBuf::from(dir);
     let t0 = std::time::Instant::now();
-    let mut replica = nezha::coordinator::Replica::open(
+    let replica = nezha::coordinator::Replica::open(
         1,
         vec![],
         &base,
@@ -375,7 +376,7 @@ fn cmd_recover(flags: &HashMap<String, String>) -> Result<()> {
         "recovered {} replica at {dir}: last_index={} gc_phase={:?} in {:.1} ms",
         kind.name(),
         replica.node.log.last_index(),
-        replica.engine_ref().gc_phase(),
+        replica.engine().gc_phase(),
         wall.as_secs_f64() * 1e3
     );
     // Sanity read.

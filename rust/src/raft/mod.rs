@@ -30,7 +30,7 @@ pub mod rpc;
 pub mod transport;
 
 pub use log::{HardState, RaftLog};
-pub use node::{Config, Node, NodeId, NodeMetrics, Role, StateMachine};
+pub use node::{ApplyLane, Config, Node, NodeId, NodeMetrics, Role, StateMachine};
 pub use rpc::{Command, LogEntry, LogIndex, Message, Term};
 pub use transport::{
     Bus, Net, NetConfig, SimNet, TcpNet, TraceEvent, Transport, TransportKind, WireSnapshot,

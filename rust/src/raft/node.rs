@@ -10,8 +10,10 @@ use super::rpc::{Command, LogEntry, LogIndex, Message, Term};
 use crate::util::Rng;
 use crate::vlog::VRef;
 use anyhow::{bail, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 pub type NodeId = u64;
 
@@ -63,6 +65,15 @@ pub struct Config {
     /// quorum round (steady state: zero extra RPCs per read).  Off =
     /// every ReadIndex pays a heartbeat quorum round.
     pub lease_reads: bool,
+    /// Group-commit latency budget in µs (0 = off).  When set, a
+    /// leader's [`Node::replicate`] broadcasts AppendEntries *without*
+    /// waiting for the local log sync; the runtime calls
+    /// [`Node::flush_group_commit`] once the budget lapses, so one
+    /// sync covers every entry appended inside the window.  Commit
+    /// still requires a quorum of *durable* copies: the leader's own
+    /// entries only join the commit quorum (via `durable_index`) after
+    /// the flush — Raft safety unchanged (DESIGN.md §6).
+    pub group_commit_us: u64,
 }
 
 impl Default for Config {
@@ -75,6 +86,7 @@ impl Default for Config {
             mem_keep_tail: 1024,
             fsync: false,
             lease_reads: true,
+            group_commit_us: 0,
         }
     }
 }
@@ -94,6 +106,146 @@ pub struct NodeMetrics {
     pub lease_reads: u64,
     /// Read barriers that paid a heartbeat quorum round.
     pub read_index_rounds: u64,
+    /// Log persistence barriers (fsync when [`Config::fsync`], else a
+    /// buffered flush).
+    pub log_syncs: u64,
+    /// Entries whose commit this node observed (leader quorum advance
+    /// or follower `leader_commit` catch-up).
+    pub entries_committed: u64,
+    /// Group-commit flushes that covered at least one entry.
+    pub group_commit_batches: u64,
+    /// Entries covered by those flushes (sum; mean batch size is
+    /// `group_commit_entries / group_commit_batches`).
+    pub group_commit_entries: u64,
+    /// Largest single group-commit batch.
+    pub group_commit_max_batch: u64,
+}
+
+/// Hand-off queue between a replica's consensus loop and its dedicated
+/// applier task (DESIGN.md §6): with a lane attached, committed
+/// entries are queued here instead of being applied inline, so
+/// post-commit value resolution never blocks the consensus state
+/// machine.  The queue holds entry *clones*, so the raft log may
+/// compact applied-but-unresolved entries out of memory safely.
+pub struct ApplyLane {
+    q: Mutex<VecDeque<(LogIndex, LogEntry, VRef)>>,
+    /// Highest index the applier has fully applied to the engine —
+    /// what ReadLane barriers and GC backlog accounting see.
+    applied: AtomicU64,
+    /// High-water mark of the queue depth (observability).
+    depth_max: AtomicU64,
+    /// Bumped by [`ApplyLane::begin_install`]; the applier discards
+    /// in-flight entries tagged with a stale generation (a snapshot
+    /// install already covers them).
+    generation: AtomicU64,
+    closed: AtomicBool,
+    /// With `closed`: drop queued work instead of draining it
+    /// (crash-style shutdown).
+    discard: AtomicBool,
+    waker: Mutex<Option<Box<dyn Fn() + Send + Sync>>>,
+}
+
+impl ApplyLane {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self {
+            q: Mutex::new(VecDeque::new()),
+            applied: AtomicU64::new(0),
+            depth_max: AtomicU64::new(0),
+            generation: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+            discard: AtomicBool::new(false),
+            waker: Mutex::new(None),
+        })
+    }
+
+    /// Doorbell rung (outside the queue lock) whenever work arrives or
+    /// the lane closes — the applier task's reactor wake.
+    pub fn set_waker(&self, w: Box<dyn Fn() + Send + Sync>) {
+        *self.waker.lock().unwrap() = Some(w);
+    }
+
+    fn ring(&self) {
+        if let Some(w) = self.waker.lock().unwrap().as_ref() {
+            w();
+        }
+    }
+
+    fn push(&self, idx: LogIndex, entry: LogEntry, vref: VRef) {
+        {
+            let mut q = self.q.lock().unwrap();
+            q.push_back((idx, entry, vref));
+            let d = q.len() as u64;
+            self.depth_max.fetch_max(d, Ordering::Relaxed);
+        }
+        self.ring();
+    }
+
+    pub fn applied(&self) -> LogIndex {
+        self.applied.load(Ordering::Acquire)
+    }
+
+    /// Applier side: publish progress after each entry lands in the
+    /// engine (and by the install path after a snapshot).
+    pub fn set_applied(&self, idx: LogIndex) {
+        self.applied.store(idx, Ordering::Release);
+    }
+
+    /// Entries queued right now.
+    pub fn depth(&self) -> u64 {
+        self.q.lock().unwrap().len() as u64
+    }
+
+    pub fn depth_max(&self) -> u64 {
+        self.depth_max.load(Ordering::Relaxed)
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Snapshot install supersedes everything queued: clear the queue
+    /// and invalidate chunks already popped by the applier.  The
+    /// caller then installs into the engine and publishes the new
+    /// cursor via [`ApplyLane::set_applied`].
+    pub fn begin_install(&self) {
+        let mut q = self.q.lock().unwrap();
+        q.clear();
+        self.generation.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Applier side: pop up to `max` entries, tagged with the
+    /// generation they were popped under (re-check it per entry, under
+    /// the engine lock, and discard the rest on mismatch).  `None`
+    /// means the lane is closed and — unless discarding — drained:
+    /// the applier should exit.
+    pub fn pop_chunk(&self, max: usize) -> Option<(u64, Vec<(LogIndex, LogEntry, VRef)>)> {
+        let mut q = self.q.lock().unwrap();
+        if self.discard.load(Ordering::Acquire) {
+            q.clear();
+            return None;
+        }
+        if q.is_empty() && self.closed.load(Ordering::Acquire) {
+            return None;
+        }
+        let g = self.generation.load(Ordering::Acquire);
+        let n = q.len().min(max);
+        Some((g, q.drain(..n).collect()))
+    }
+
+    /// Graceful close: the applier drains what is queued, then exits.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.ring();
+    }
+
+    /// Crash-style close: queued work is dropped, the applier exits
+    /// immediately (the entries are committed and will re-apply from
+    /// the log on restart).
+    pub fn close_discard(&self) {
+        self.discard.store(true, Ordering::Release);
+        self.closed.store(true, Ordering::Release);
+        self.ring();
+    }
 }
 
 /// A read barrier parked on the leader until a heartbeat quorum round
@@ -118,6 +270,16 @@ pub struct Node<S: StateMachine> {
     pub log: RaftLog,
     commit_index: LogIndex,
     last_applied: LogIndex,
+    /// Highest log index covered by a local persistence barrier.  The
+    /// commit quorum counts this instead of `log.last_index()`, which
+    /// is what makes group-commit pipelining safe: appended-but-
+    /// unsynced leader entries do not count towards commit until
+    /// [`Self::flush_group_commit`] syncs them (followers persist
+    /// before acking, so their `match_index` is always durable).
+    durable_index: LogIndex,
+    /// Attached by the cluster runtime: committed entries hand off
+    /// here instead of applying inline (see [`ApplyLane`]).
+    lane: Option<Arc<ApplyLane>>,
     // Leader volatile state.
     next_index: HashMap<NodeId, LogIndex>,
     match_index: HashMap<NodeId, LogIndex>,
@@ -176,6 +338,9 @@ impl<S: StateMachine> Node<S> {
         let hard = HardState::load(&hard_path)?.unwrap_or_default();
         let mut rng = Rng::new(seed ^ id.wrapping_mul(0x9E37_79B9));
         let election_deadline = Self::rand_deadline(&mut rng, &cfg, 0);
+        // Whatever the log recovered from disk is durable by
+        // definition.
+        let durable_index = log.last_index();
         Ok(Self {
             id,
             peers,
@@ -185,6 +350,8 @@ impl<S: StateMachine> Node<S> {
             log,
             commit_index: 0,
             last_applied: 0,
+            durable_index,
+            lane: None,
             next_index: HashMap::new(),
             match_index: HashMap::new(),
             votes: 0,
@@ -227,8 +394,24 @@ impl<S: StateMachine> Node<S> {
         self.commit_index
     }
 
+    /// Highest index whose effects are visible in the engine.  With an
+    /// apply lane attached this is the lane's cursor — entries handed
+    /// off but not yet resolved by the applier do *not* count, which
+    /// is exactly what ReadLane barriers and GC backlog math need.
     pub fn last_applied(&self) -> LogIndex {
-        self.last_applied
+        match &self.lane {
+            Some(l) => l.applied(),
+            None => self.last_applied,
+        }
+    }
+
+    /// Route committed entries to `lane` instead of applying them
+    /// inline.  Attach right after open, before anything commits; the
+    /// lane's cursor starts from the inline cursor so recovery replay
+    /// done at open stays accounted for.
+    pub fn attach_apply_lane(&mut self, lane: Arc<ApplyLane>) {
+        lane.set_applied(self.last_applied);
+        self.lane = Some(lane);
     }
 
     pub fn leader_hint(&self) -> Option<NodeId> {
@@ -261,6 +444,16 @@ impl<S: StateMachine> Node<S> {
         &mut self.sm
     }
 
+    /// The index the engine's snapshot-visible state actually covers:
+    /// the lane cursor when a lane is attached (handed-off entries are
+    /// NOT covered yet), else the inline cursor.
+    fn applied_index(&self) -> LogIndex {
+        match &self.lane {
+            Some(l) => l.applied(),
+            None => self.last_applied,
+        }
+    }
+
     fn quorum(&self) -> usize {
         (self.peers.len() + 1) / 2 + 1
     }
@@ -273,10 +466,13 @@ impl<S: StateMachine> Node<S> {
 
     fn persist_log(&mut self) -> Result<()> {
         if self.cfg.fsync {
-            self.log.sync()
+            self.log.sync()?;
         } else {
-            self.log.flush()
+            self.log.flush()?;
         }
+        self.durable_index = self.log.last_index();
+        self.metrics.log_syncs += 1;
+        Ok(())
     }
 
     // ---- time ------------------------------------------------------
@@ -439,9 +635,18 @@ impl<S: StateMachine> Node<S> {
 
     /// Replicate everything pending to all peers (call after a batch
     /// of proposes — the coordinator's group-commit point).
+    ///
+    /// With [`Config::group_commit_us`] set, the broadcast is
+    /// *pipelined ahead of the local sync*: followers start persisting
+    /// in parallel with (or before) the leader, and the runtime calls
+    /// [`Self::flush_group_commit`] once the budget lapses so one
+    /// barrier covers every entry proposed inside the window.
     pub fn replicate(&mut self) -> Result<Outbox> {
         if self.role != Role::Leader {
             return Ok(Vec::new());
+        }
+        if self.cfg.group_commit_us > 0 {
+            return self.broadcast_append();
         }
         self.persist_log()?;
         // Single-node cluster: commit immediately.
@@ -449,6 +654,30 @@ impl<S: StateMachine> Node<S> {
             self.advance_commit()?;
         }
         self.broadcast_append()
+    }
+
+    /// True when this leader holds appended-but-unsynced entries that
+    /// a [`Self::flush_group_commit`] would cover — the runtime's cue
+    /// to arm a group-commit deadline.
+    pub fn has_unsynced(&self) -> bool {
+        self.role == Role::Leader && self.log.last_index() > self.durable_index
+    }
+
+    /// Group-commit flush point: one persistence barrier covers every
+    /// entry appended since the last one, then commit accounting
+    /// catches up (the leader's durable ack joins the quorum math —
+    /// on a single-node cluster nothing commits before this).
+    pub fn flush_group_commit(&mut self) -> Result<()> {
+        let last = self.log.last_index();
+        if self.role != Role::Leader || last <= self.durable_index {
+            return Ok(());
+        }
+        let batch = last - self.durable_index;
+        self.metrics.group_commit_batches += 1;
+        self.metrics.group_commit_entries += batch;
+        self.metrics.group_commit_max_batch = self.metrics.group_commit_max_batch.max(batch);
+        self.persist_log()?;
+        self.advance_commit()
     }
 
     fn broadcast_append(&mut self) -> Result<Outbox> {
@@ -477,10 +706,15 @@ impl<S: StateMachine> Node<S> {
         // Peer too far behind the in-memory log → ship a snapshot.
         let behind_mem = next < self.log.first_in_mem() && next <= self.log.last_index();
         if next <= self.log.snap_index || behind_mem {
+            // Coverage claim is read *before* the snapshot: with an
+            // apply lane the applier may land more entries in between,
+            // so the snapshot can cover more than it claims — the
+            // follower then re-applies a few entries, which is
+            // idempotent.  (Claiming more than the engine holds would
+            // lose data; this direction is the safe one.)
+            let last_index = self.applied_index().max(self.log.snap_index);
             let data = self.sm.snapshot_bytes()?;
             self.metrics.snapshots_sent += 1;
-            // Snapshot covers the applied prefix.
-            let last_index = self.last_applied.max(self.log.snap_index);
             let last_term = self.log.term_at(last_index).unwrap_or(self.log.snap_term);
             return Ok(Some(Message::InstallSnapshot {
                 term: self.hard.term,
@@ -690,6 +924,7 @@ impl<S: StateMachine> Node<S> {
                     // rewritten in place from here on — readahead
                     // caches over it are now stale.
                     self.log.truncate_from(e.index)?;
+                    self.durable_index = self.durable_index.min(e.index.saturating_sub(1));
                     self.sm.on_log_truncated(self.log.live_epoch());
                     self.log.append(e)?;
                 }
@@ -704,8 +939,10 @@ impl<S: StateMachine> Node<S> {
         self.persist_log()?;
 
         let match_index = self.log.last_index();
-        if leader_commit > self.commit_index {
-            self.commit_index = leader_commit.min(match_index);
+        let new_commit = leader_commit.min(match_index);
+        if new_commit > self.commit_index {
+            self.metrics.entries_committed += new_commit - self.commit_index;
+            self.commit_index = new_commit;
             self.apply_committed()?;
         }
         self.metrics.msgs_sent += 1;
@@ -762,17 +999,23 @@ impl<S: StateMachine> Node<S> {
     }
 
     fn advance_commit(&mut self) -> Result<()> {
-        // Largest N replicated on a quorum with term == current (§5.4.2).
+        // Largest N replicated *durably* on a quorum with term ==
+        // current (§5.4.2).  The leader's own vote is `durable_index`,
+        // not `last_index()`: with group commit the broadcast runs
+        // ahead of the local sync, and unsynced entries must not count
+        // (followers' match_index is always durable — they persist
+        // before acking).
         let mut candidates: Vec<LogIndex> = self
             .match_index
             .values()
             .copied()
-            .chain(std::iter::once(self.log.last_index()))
+            .chain(std::iter::once(self.durable_index))
             .collect();
         candidates.sort_unstable();
         // The (len - quorum)-th from the end is replicated on >= quorum.
         let n = candidates[candidates.len().saturating_sub(self.quorum())];
         if n > self.commit_index && self.log.term_at(n) == Some(self.hard.term) {
+            self.metrics.entries_committed += n - self.commit_index;
             self.commit_index = n;
             self.apply_committed()?;
         }
@@ -791,7 +1034,13 @@ impl<S: StateMachine> Node<S> {
                 continue;
             };
             let vref = self.log.vref_of(idx).unwrap_or(VRef::new(0, 0));
-            self.sm.apply(&entry, vref)?;
+            // `last_applied` (the field) is the hand-off cursor; the
+            // lane publishes the truly-applied cursor.  The lane holds
+            // clones, so compact_mem below stays safe.
+            match &self.lane {
+                Some(lane) => lane.push(idx, entry, vref),
+                None => self.sm.apply(&entry, vref)?,
+            }
             self.metrics.entries_applied += 1;
             self.last_applied = idx;
         }
@@ -816,10 +1065,21 @@ impl<S: StateMachine> Node<S> {
         }
         self.become_follower(term, Some(leader))?;
         if last_index > self.log.snap_index && last_index > self.last_applied {
+            // Order matters with an apply lane: clear the queue (and
+            // invalidate chunks the applier already popped) *before*
+            // the engine install, publish the new cursor after — so
+            // stale entries can never land on top of snapshot state.
+            if let Some(lane) = &self.lane {
+                lane.begin_install();
+            }
             self.sm.install_snapshot(&data, last_index, last_term)?;
             self.log.reset_to_snapshot(last_index, last_term)?;
             self.commit_index = last_index;
             self.last_applied = last_index;
+            self.durable_index = self.log.last_index();
+            if let Some(lane) = &self.lane {
+                lane.set_applied(last_index);
+            }
             self.metrics.snapshots_installed += 1;
         }
         self.metrics.msgs_sent += 1;
@@ -1433,6 +1693,123 @@ mod tests {
         let (ready, failed) = n.take_read_results();
         assert!(ready.is_empty());
         assert_eq!(failed, vec![8]);
+    }
+
+    /// Group commit, the pipelined half: `replicate()` under a budget
+    /// broadcasts without a local persistence barrier, commit advances
+    /// off the followers' durable acks alone (the leader's unsynced
+    /// entries do not count), and the deferred flush covers the whole
+    /// batch with one sync.
+    #[test]
+    fn group_commit_pipelines_broadcast_ahead_of_local_sync() {
+        let cfg = Config { group_commit_us: 500, ..Config::default() };
+        let mut t = Trio::with_cfg("groupcommit", cfg);
+        let leader = t.elect();
+        let syncs_before = t.node(leader).metrics.log_syncs;
+        let mut last = 0;
+        for i in 0..8u32 {
+            let cmd = Command::Put { key: format!("g{i}").into_bytes(), value: b"v".to_vec() };
+            last = t.node(leader).propose(cmd).unwrap();
+        }
+        let out = t.node(leader).replicate().unwrap();
+        assert_eq!(
+            t.node(leader).metrics.log_syncs,
+            syncs_before,
+            "pipelined replicate must not sync locally"
+        );
+        assert!(t.node(leader).has_unsynced());
+        assert!(t.node(leader).durable_index < last);
+        let msgs: Vec<_> = out.into_iter().map(|(dst, m)| (leader, dst, m)).collect();
+        t.pump(msgs);
+        // Both followers persisted and acked: committed without the
+        // leader's own durability.
+        assert!(t.node(leader).commit_index() >= last, "quorum of durable followers commits");
+        assert!(t.node(leader).durable_index < last, "leader still unsynced");
+        // The timed-out budget flushes the partial batch in one go.
+        t.node(leader).flush_group_commit().unwrap();
+        assert!(!t.node(leader).has_unsynced());
+        let m = &t.node(leader).metrics;
+        assert_eq!(m.log_syncs, syncs_before + 1, "one sync covered the whole batch");
+        assert_eq!(m.group_commit_batches, 1);
+        assert_eq!(m.group_commit_entries, 8);
+        assert_eq!(m.group_commit_max_batch, 8);
+        assert!(m.entries_committed >= 8);
+    }
+
+    /// On a single-node cluster the quorum IS the leader, so under a
+    /// group-commit budget nothing commits until the flush makes the
+    /// batch durable — and the flush of a timed-out budget does commit
+    /// the partial batch.
+    #[test]
+    fn group_commit_budget_defers_single_node_commit_until_flush() {
+        let dir = tmpdir("gcsolo", 1);
+        let cfg = Config { group_commit_us: 1_000, ..Config::default() };
+        let mut n = Node::new(1, vec![], &dir, MemSm::default(), cfg, 9).unwrap();
+        while !n.is_leader() {
+            n.tick().unwrap();
+        }
+        let cmd = Command::Put { key: b"solo".to_vec(), value: b"v".to_vec() };
+        let idx = n.propose(cmd).unwrap();
+        let out = n.replicate().unwrap();
+        assert!(out.is_empty());
+        assert!(n.commit_index() < idx, "commit must wait for the flush");
+        assert!(n.has_unsynced());
+        n.flush_group_commit().unwrap();
+        assert_eq!(n.commit_index(), idx);
+        assert_eq!(n.last_applied(), idx);
+        // Idempotent when clean.
+        n.flush_group_commit().unwrap();
+        assert_eq!(n.metrics.group_commit_batches, 1);
+    }
+
+    /// Apply-lane hand-off: committed entries queue instead of
+    /// applying inline, the public applied cursor lags until the
+    /// applier drains the chunk, and close()/pop_chunk() terminate.
+    #[test]
+    fn apply_lane_decouples_commit_from_apply() {
+        let dir = tmpdir("lane", 1);
+        let mut n = Node::new(1, vec![], &dir, MemSm::default(), Config::default(), 11).unwrap();
+        let lane = ApplyLane::new();
+        let rings = Arc::new(AtomicU64::new(0));
+        let rings2 = Arc::clone(&rings);
+        lane.set_waker(Box::new(move || {
+            rings2.fetch_add(1, Ordering::SeqCst);
+        }));
+        n.attach_apply_lane(Arc::clone(&lane));
+        while !n.is_leader() {
+            n.tick().unwrap();
+        }
+        let cmd = Command::Put { key: b"k".to_vec(), value: b"v".to_vec() };
+        let idx = n.propose(cmd).unwrap();
+        n.replicate().unwrap();
+        assert!(n.commit_index() >= idx, "commit does not wait for apply");
+        assert!(n.last_applied() < idx, "handed off, not yet applied");
+        assert!(n.sm().kv.is_empty(), "engine untouched before the applier runs");
+        assert!(rings.load(Ordering::SeqCst) >= 1, "push rings the doorbell");
+        assert!(lane.depth_max() >= 1);
+        // Drive the applier protocol by hand.
+        let (g, chunk) = lane.pop_chunk(16).unwrap();
+        assert_eq!(chunk.len(), 2, "noop + put");
+        for (i, e, v) in chunk {
+            assert_eq!(lane.generation(), g);
+            n.sm_mut().apply(&e, v).unwrap();
+            lane.set_applied(i);
+        }
+        assert_eq!(n.last_applied(), idx);
+        assert_eq!(n.sm().kv.get(&b"k".to_vec()), Some(&b"v".to_vec()));
+        // Graceful close drains-then-ends; pop on empty+closed is None.
+        lane.close();
+        assert!(lane.pop_chunk(16).is_none());
+    }
+
+    #[test]
+    fn apply_lane_discard_drops_queued_work() {
+        let lane = ApplyLane::new();
+        lane.push(1, LogEntry { term: 1, index: 1, cmd: Command::Noop }, VRef::new(0, 0));
+        assert_eq!(lane.depth(), 1);
+        lane.close_discard();
+        assert!(lane.pop_chunk(16).is_none());
+        assert_eq!(lane.depth(), 0);
     }
 
     #[test]

@@ -405,10 +405,17 @@ struct MailboxInner {
     doorbell: bool,
 }
 
-/// A node's inbound queue (blocking pop with timeout).
+/// A node's inbound queue (blocking pop with timeout, or non-blocking
+/// [`Self::try_drain`] under the reactor).
 pub struct Mailbox {
     inner: Mutex<MailboxInner>,
     cv: Condvar,
+    /// Reactor doorbell: when set, every event that would wake a
+    /// blocked [`Self::drain`] (frame arrival, [`Self::notify`],
+    /// [`Self::close`]) also invokes this callback, so an event-driven
+    /// owner polling via [`Self::try_drain`] learns about input
+    /// without ever parking on the condvar.
+    waker: Mutex<Option<Box<dyn Fn() + Send + Sync>>>,
     /// The owning transport's counters: frames that arrive but fail
     /// [`Message::decode`] in [`Self::drain`] count as `dropped`.
     stats: Arc<WireStats>,
@@ -423,30 +430,50 @@ impl Mailbox {
                 doorbell: false,
             }),
             cv: Condvar::new(),
+            waker: Mutex::new(None),
             stats,
         }
     }
 
-    pub fn push(&self, from: NodeId, buf: Vec<u8>) {
-        let mut g = self.inner.lock().unwrap();
-        if g.closed {
-            // The node is gone (killed / shut down) but a reader
-            // thread still delivered a frame: nobody will ever drain
-            // it, so it counts as dropped, keeping the accounting
-            // parity promise of [`WireStats`].
-            self.stats.dropped.fetch_add(1, Ordering::Relaxed);
-            return;
+    /// Install the reactor-side wakeup callback (see [`Self::waker`]).
+    /// The condvar path keeps working, so a mailbox can serve blocking
+    /// and event-driven owners across its lifetime.
+    pub fn set_waker(&self, waker: Box<dyn Fn() + Send + Sync>) {
+        *self.waker.lock().unwrap() = Some(waker);
+    }
+
+    fn ring(&self) {
+        if let Some(w) = self.waker.lock().unwrap().as_ref() {
+            w();
         }
-        g.queue.push_back((from, buf));
-        self.cv.notify_one();
+    }
+
+    pub fn push(&self, from: NodeId, buf: Vec<u8>) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            if g.closed {
+                // The node is gone (killed / shut down) but a reader
+                // thread still delivered a frame: nobody will ever drain
+                // it, so it counts as dropped, keeping the accounting
+                // parity promise of [`WireStats`].
+                self.stats.dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            g.queue.push_back((from, buf));
+            self.cv.notify_one();
+        }
+        self.ring();
     }
 
     /// Out-of-band wakeup: makes a blocked (or about-to-block)
     /// `drain` return immediately even with no network messages.
     pub fn notify(&self) {
-        let mut g = self.inner.lock().unwrap();
-        g.doorbell = true;
-        self.cv.notify_one();
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.doorbell = true;
+            self.cv.notify_one();
+        }
+        self.ring();
     }
 
     /// Pop everything queued, blocking up to `timeout` for the first
@@ -475,9 +502,35 @@ impl Mailbox {
         Some(out)
     }
 
+    /// Non-blocking drain for event-driven owners: pop everything
+    /// queued right now (clearing the doorbell), with the same decode
+    /// and drop accounting as [`Self::drain`].  Returns `None` iff the
+    /// mailbox is closed *and* empty — the owner should exit.
+    pub fn try_drain(&self) -> Option<Vec<(NodeId, Message)>> {
+        let mut g = self.inner.lock().unwrap();
+        g.doorbell = false;
+        if g.closed && g.queue.is_empty() {
+            return None;
+        }
+        let mut out = Vec::with_capacity(g.queue.len());
+        while let Some((from, buf)) = g.queue.pop_front() {
+            match Message::decode(&buf) {
+                Ok(m) => out.push((from, m)),
+                Err(_) => {
+                    self.stats.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Some(out)
+    }
+
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
-        self.cv.notify_all();
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.closed = true;
+            self.cv.notify_all();
+        }
+        self.ring();
     }
 }
 
@@ -683,6 +736,45 @@ mod tests {
             t0.elapsed() >= std::time::Duration::from_millis(60),
             "stale doorbell short-circuited the next drain"
         );
+    }
+
+    #[test]
+    fn waker_rings_on_push_notify_and_close() {
+        use std::sync::atomic::AtomicUsize;
+        let bus = Bus::new(NetConfig { latency_us: (0, 0), loss: 0.0, seed: 14 });
+        let mb = bus.register(1);
+        let rings = Arc::new(AtomicUsize::new(0));
+        let r2 = Arc::clone(&rings);
+        mb.set_waker(Box::new(move || {
+            r2.fetch_add(1, Ordering::Relaxed);
+        }));
+        bus.send(2, 1, &msg(1));
+        assert_eq!(rings.load(Ordering::Relaxed), 1, "push rings");
+        mb.notify();
+        assert_eq!(rings.load(Ordering::Relaxed), 2, "notify rings");
+        mb.close();
+        assert_eq!(rings.load(Ordering::Relaxed), 3, "close rings");
+    }
+
+    #[test]
+    fn try_drain_is_nonblocking_and_signals_close() {
+        let bus = Bus::new(NetConfig { latency_us: (0, 0), loss: 0.0, seed: 15 });
+        let mb = bus.register(1);
+        // Empty + open: immediate empty batch.
+        assert_eq!(mb.try_drain().unwrap().len(), 0);
+        bus.send(2, 1, &msg(1));
+        bus.send(3, 1, &msg(2));
+        // A corrupt frame counts dropped, like in `drain`.
+        mb.push(2, vec![0xEE, 0x01]);
+        let got = mb.try_drain().unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(bus.stats.dropped.load(Ordering::Relaxed), 1);
+        // Closed with a frame still queued: the frame drains first,
+        // then the closed+empty state reads as None.
+        bus.send(2, 1, &msg(3));
+        mb.close();
+        assert_eq!(mb.try_drain().unwrap().len(), 1);
+        assert!(mb.try_drain().is_none());
     }
 
     #[test]

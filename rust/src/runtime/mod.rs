@@ -9,6 +9,11 @@
 //! The wiring follows /opt/xla-example/load_hlo: HLO **text** (not a
 //! serialized proto) is the interchange format because jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects.
+//!
+//! [`reactor`] is the other half of this module: the event-driven
+//! worker pool the coordinator schedules replica tasks on.
+
+pub mod reactor;
 
 use crate::gc::IndexBackend;
 use crate::vlog::hash::{canonicalize, KEY_WORDS};

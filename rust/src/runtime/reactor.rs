@@ -1,0 +1,474 @@
+//! Event-driven replica runtime (DESIGN.md §6): a small worker pool
+//! multiplexing many **non-blocking** tasks, driven by explicit wakes
+//! (mailbox doorbells, client-request doorbells, apply-lane
+//! completions) and a timer wheel for tick deadlines.
+//!
+//! This replaces the one-OS-thread-per-(shard, node) loops the
+//! coordinator used to spawn: a 64-shard, 3-node in-process cluster is
+//! 192 replicas, which as blocking threads each burn a 300µs mailbox
+//! poll — as reactor tasks they share a handful of workers and run
+//! only when something actually happened.
+//!
+//! Contract: [`Task::poll`] must never block.  It drains whatever
+//! input is ready, does one bounded slice of work, and returns
+//! [`PollOutcome::Pending`] (sleep until woken, optionally with a
+//! deadline), [`PollOutcome::Yield`] (more work ready now — requeue
+//! behind other runnable tasks), or [`PollOutcome::Done`] (drop the
+//! task).  Wakes are coalescing and never lost: a wake that lands
+//! while the task is mid-poll marks it dirty, and the worker requeues
+//! it instead of parking it.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Opaque task handle returned by [`Reactor::spawn`].
+pub type TaskId = u64;
+
+/// What a task's [`Task::poll`] tells the worker to do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PollOutcome {
+    /// Nothing more to do until woken.  With `Some(at)`, the reactor
+    /// also wakes the task at `at` (tick/batch deadlines); spurious or
+    /// stale timer wakes are allowed — polls must be idempotent.
+    Pending(Option<Instant>),
+    /// More work is immediately available: requeue this task behind
+    /// other runnable tasks instead of hogging the worker.
+    Yield,
+    /// The task is finished; the reactor drops it.
+    Done,
+}
+
+/// A non-blocking unit of execution (one replica's consensus loop, one
+/// apply lane, ...).
+pub trait Task: Send {
+    fn poll(&mut self) -> PollOutcome;
+}
+
+/// Lifecycle used to coalesce wakes: `Idle` (parked), `Queued` (in the
+/// run queue), `Running` (a worker is mid-poll), `RunningDirty` (woken
+/// mid-poll — requeue on return instead of parking).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TaskState {
+    Idle,
+    Queued,
+    Running,
+    RunningDirty,
+}
+
+struct Slot {
+    /// Taken by the polling worker, restored on park; `None` while a
+    /// worker runs the task.
+    task: Option<Box<dyn Task>>,
+    state: TaskState,
+}
+
+struct Inner {
+    tasks: Mutex<HashMap<TaskId, Slot>>,
+    /// Signalled (with `tasks`) whenever a task finishes.
+    done_cv: Condvar,
+    runq: Mutex<VecDeque<TaskId>>,
+    runq_cv: Condvar,
+    /// Min-heap of `(deadline, task)` wake requests.  Entries are
+    /// never cancelled: a stale deadline fires a spurious (harmless)
+    /// wake instead of paying per-entry bookkeeping.
+    timers: Mutex<BinaryHeap<Reverse<(Instant, TaskId)>>>,
+    timers_cv: Condvar,
+    shutdown: AtomicBool,
+    next_id: AtomicU64,
+}
+
+impl Inner {
+    /// Lock order everywhere: `tasks` before `runq` before `timers`
+    /// (each may be taken alone).
+    fn wake(&self, id: TaskId) {
+        let mut tasks = self.tasks.lock().unwrap();
+        let Some(slot) = tasks.get_mut(&id) else { return };
+        match slot.state {
+            TaskState::Idle => {
+                slot.state = TaskState::Queued;
+                drop(tasks);
+                self.enqueue(id);
+            }
+            TaskState::Running => slot.state = TaskState::RunningDirty,
+            TaskState::Queued | TaskState::RunningDirty => {}
+        }
+    }
+
+    fn enqueue(&self, id: TaskId) {
+        self.runq.lock().unwrap().push_back(id);
+        self.runq_cv.notify_one();
+    }
+
+    /// Restore a polled task into its slot per `outcome` (never
+    /// [`PollOutcome::Done`] here).
+    fn park(&self, id: TaskId, task: Box<dyn Task>, outcome: PollOutcome) {
+        let mut requeue = false;
+        let mut timer = None;
+        {
+            let mut tasks = self.tasks.lock().unwrap();
+            let Some(slot) = tasks.get_mut(&id) else { return };
+            let dirty = slot.state == TaskState::RunningDirty;
+            slot.task = Some(task);
+            match outcome {
+                PollOutcome::Yield => {
+                    slot.state = TaskState::Queued;
+                    requeue = true;
+                }
+                PollOutcome::Pending(deadline) => {
+                    if dirty {
+                        // A wake landed mid-poll: the task must run
+                        // again or the wake would be lost.
+                        slot.state = TaskState::Queued;
+                        requeue = true;
+                    } else {
+                        slot.state = TaskState::Idle;
+                        timer = deadline;
+                    }
+                }
+                PollOutcome::Done => unreachable!("Done is handled by the worker"),
+            }
+        }
+        if requeue {
+            self.enqueue(id);
+        }
+        if let Some(at) = timer {
+            self.timers.lock().unwrap().push(Reverse((at, id)));
+            self.timers_cv.notify_one();
+        }
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let id = {
+                let mut q = self.runq.lock().unwrap();
+                loop {
+                    if let Some(id) = q.pop_front() {
+                        break id;
+                    }
+                    if self.shutdown.load(Ordering::Acquire) {
+                        return;
+                    }
+                    q = self.runq_cv.wait(q).unwrap();
+                }
+            };
+            let task = {
+                let mut tasks = self.tasks.lock().unwrap();
+                match tasks.get_mut(&id) {
+                    Some(slot) => {
+                        slot.state = TaskState::Running;
+                        slot.task.take()
+                    }
+                    None => None,
+                }
+            };
+            let Some(mut task) = task else { continue };
+            // A panicking task is finished (the pre-reactor analogue:
+            // its thread died); it must not wedge the worker or leave
+            // a slot that `wait_done` waits on forever.
+            let outcome =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task.poll()))
+                    .unwrap_or(PollOutcome::Done);
+            if outcome == PollOutcome::Done {
+                // Drop the task *before* removing its slot: `wait_done`
+                // returning must mean the task's resources (files, GC
+                // threads) are released — a caller may reopen its data
+                // directory immediately.  The slot is inert meanwhile
+                // (not queued; a late wake just marks it dirty).
+                drop(task);
+                self.tasks.lock().unwrap().remove(&id);
+                self.done_cv.notify_all();
+            } else {
+                self.park(id, task, outcome);
+            }
+        }
+    }
+
+    fn timer_loop(&self) {
+        let mut timers = self.timers.lock().unwrap();
+        loop {
+            if self.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let now = Instant::now();
+            let mut due = Vec::new();
+            while let Some(&Reverse((at, id))) = timers.peek() {
+                if at > now {
+                    break;
+                }
+                timers.pop();
+                due.push(id);
+            }
+            if !due.is_empty() {
+                drop(timers);
+                for id in due {
+                    self.wake(id);
+                }
+                timers = self.timers.lock().unwrap();
+                continue;
+            }
+            timers = match timers.peek() {
+                Some(&Reverse((at, _))) => {
+                    let wait = at.saturating_duration_since(now);
+                    self.timers_cv.wait_timeout(timers, wait).unwrap().0
+                }
+                None => self.timers_cv.wait(timers).unwrap(),
+            };
+        }
+    }
+}
+
+/// Cloneable wake/spawn handle onto a running [`Reactor`] (what
+/// mailbox doorbells and apply lanes capture).
+#[derive(Clone)]
+pub struct ReactorHandle {
+    inner: Arc<Inner>,
+}
+
+impl ReactorHandle {
+    pub fn wake(&self, id: TaskId) {
+        self.inner.wake(id);
+    }
+}
+
+/// The worker pool.  Dropping (or [`Reactor::shutdown`]) stops the
+/// workers; tasks still registered are dropped on the caller's thread.
+pub struct Reactor {
+    inner: Arc<Inner>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// Worker-pool size for this host: every core up to 8, but always at
+/// least 2 so one long poll cannot starve the whole process.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map_or(2, |n| n.get()).clamp(2, 8)
+}
+
+impl Reactor {
+    pub fn new(workers: usize) -> Self {
+        let inner = Arc::new(Inner {
+            tasks: Mutex::new(HashMap::new()),
+            done_cv: Condvar::new(),
+            runq: Mutex::new(VecDeque::new()),
+            runq_cv: Condvar::new(),
+            timers: Mutex::new(BinaryHeap::new()),
+            timers_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+        });
+        let mut threads = Vec::with_capacity(workers + 1);
+        for i in 0..workers.max(1) {
+            let inner2 = Arc::clone(&inner);
+            let t = std::thread::Builder::new()
+                .name(format!("nezha-reactor-{i}"))
+                .spawn(move || inner2.worker_loop())
+                .expect("spawn reactor worker");
+            threads.push(t);
+        }
+        let inner2 = Arc::clone(&inner);
+        threads.push(
+            std::thread::Builder::new()
+                .name("nezha-reactor-timer".into())
+                .spawn(move || inner2.timer_loop())
+                .expect("spawn reactor timer"),
+        );
+        Self { inner, threads: Mutex::new(threads) }
+    }
+
+    pub fn handle(&self) -> ReactorHandle {
+        ReactorHandle { inner: Arc::clone(&self.inner) }
+    }
+
+    /// Worker count (excludes the timer thread).
+    pub fn workers(&self) -> usize {
+        self.threads.lock().unwrap().len().saturating_sub(1)
+    }
+
+    /// Register a task and queue its first poll.
+    pub fn spawn(&self, task: Box<dyn Task>) -> TaskId {
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        self.inner
+            .tasks
+            .lock()
+            .unwrap()
+            .insert(id, Slot { task: Some(task), state: TaskState::Queued });
+        self.inner.enqueue(id);
+        id
+    }
+
+    pub fn wake(&self, id: TaskId) {
+        self.inner.wake(id);
+    }
+
+    /// Block until task `id` finishes (true) or `timeout` lapses
+    /// (false).  An unknown id reads as already finished.
+    pub fn wait_done(&self, id: TaskId, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut tasks = self.inner.tasks.lock().unwrap();
+        while tasks.contains_key(&id) {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            tasks = self.inner.done_cv.wait_timeout(tasks, deadline - now).unwrap().0;
+        }
+        true
+    }
+
+    /// Stop the workers and timer (idempotent).  Registered tasks are
+    /// dropped here, on the caller's thread.
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        self.inner.runq_cv.notify_all();
+        self.inner.timers_cv.notify_all();
+        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        for t in threads {
+            let _ = t.join();
+        }
+        self.inner.tasks.lock().unwrap().clear();
+        self.inner.done_cv.notify_all();
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Polls `yields + 1` times (counting), then finishes.
+    struct Counter {
+        n: Arc<AtomicUsize>,
+        yields: usize,
+    }
+
+    impl Task for Counter {
+        fn poll(&mut self) -> PollOutcome {
+            self.n.fetch_add(1, Ordering::SeqCst);
+            if self.yields > 0 {
+                self.yields -= 1;
+                PollOutcome::Yield
+            } else {
+                PollOutcome::Done
+            }
+        }
+    }
+
+    #[test]
+    fn yielding_tasks_all_complete_on_a_small_pool() {
+        let r = Reactor::new(2);
+        let counts: Vec<Arc<AtomicUsize>> =
+            (0..32).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        let ids: Vec<TaskId> = counts
+            .iter()
+            .map(|n| r.spawn(Box::new(Counter { n: Arc::clone(n), yields: 10 })))
+            .collect();
+        for id in ids {
+            assert!(r.wait_done(id, Duration::from_secs(10)), "task {id} never finished");
+        }
+        for n in &counts {
+            assert_eq!(n.load(Ordering::SeqCst), 11);
+        }
+        r.shutdown();
+    }
+
+    /// Parks until woken; finishes on the second poll.
+    struct WaitForWake {
+        n: Arc<AtomicUsize>,
+    }
+
+    impl Task for WaitForWake {
+        fn poll(&mut self) -> PollOutcome {
+            if self.n.fetch_add(1, Ordering::SeqCst) == 0 {
+                PollOutcome::Pending(None)
+            } else {
+                PollOutcome::Done
+            }
+        }
+    }
+
+    #[test]
+    fn wake_repolls_a_parked_task() {
+        let r = Reactor::new(2);
+        let n = Arc::new(AtomicUsize::new(0));
+        let id = r.spawn(Box::new(WaitForWake { n: Arc::clone(&n) }));
+        // Wait out the first poll, then ring.
+        let t0 = Instant::now();
+        while n.load(Ordering::SeqCst) == 0 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(n.load(Ordering::SeqCst), 1, "first poll parked");
+        r.wake(id);
+        assert!(r.wait_done(id, Duration::from_secs(5)));
+        assert_eq!(n.load(Ordering::SeqCst), 2);
+        r.shutdown();
+    }
+
+    /// Parks with a deadline; the timer must bring it back.
+    struct Alarm {
+        n: Arc<AtomicUsize>,
+    }
+
+    impl Task for Alarm {
+        fn poll(&mut self) -> PollOutcome {
+            if self.n.fetch_add(1, Ordering::SeqCst) == 0 {
+                PollOutcome::Pending(Some(Instant::now() + Duration::from_millis(20)))
+            } else {
+                PollOutcome::Done
+            }
+        }
+    }
+
+    #[test]
+    fn timer_deadline_wakes_a_parked_task() {
+        let r = Reactor::new(2);
+        let n = Arc::new(AtomicUsize::new(0));
+        let id = r.spawn(Box::new(Alarm { n: Arc::clone(&n) }));
+        assert!(r.wait_done(id, Duration::from_secs(5)), "deadline never fired");
+        assert_eq!(n.load(Ordering::SeqCst), 2);
+        r.shutdown();
+    }
+
+    struct Panicker;
+
+    impl Task for Panicker {
+        fn poll(&mut self) -> PollOutcome {
+            panic!("task blew up");
+        }
+    }
+
+    #[test]
+    fn panicking_task_reads_done_and_pool_survives() {
+        let r = Reactor::new(2);
+        let id = r.spawn(Box::new(Panicker));
+        assert!(r.wait_done(id, Duration::from_secs(5)));
+        // Pool still serves new tasks afterwards.
+        let n = Arc::new(AtomicUsize::new(0));
+        let id2 = r.spawn(Box::new(Counter { n: Arc::clone(&n), yields: 0 }));
+        assert!(r.wait_done(id2, Duration::from_secs(5)));
+        assert_eq!(n.load(Ordering::SeqCst), 1);
+        r.shutdown();
+    }
+
+    #[test]
+    fn wait_done_times_out_on_a_sleeping_task() {
+        let r = Reactor::new(1);
+        let n = Arc::new(AtomicUsize::new(0));
+        let id = r.spawn(Box::new(WaitForWake { n }));
+        assert!(!r.wait_done(id, Duration::from_millis(50)), "parked task reported done");
+        r.shutdown();
+    }
+
+    #[test]
+    fn default_workers_is_small_but_plural() {
+        let w = default_workers();
+        assert!((2..=8).contains(&w), "w={w}");
+    }
+}

@@ -86,6 +86,30 @@ fn chaos_flapping_links() {
     run_schedule(ScheduleKind::FlappingLinks, TransportKind::Inproc);
 }
 
+#[test]
+fn chaos_torn_group_commit() {
+    run_schedule(ScheduleKind::TornGroupCommit, TransportKind::Inproc);
+}
+
+/// The torn-group-commit drill over real sockets: the leader dies with
+/// its raft-log fsync failed *after* the pipelined broadcast left via
+/// TCP, and acknowledged writes must survive its recovery.
+#[test]
+fn chaos_torn_group_commit_over_tcp() {
+    let mut opts = ChaosOpts::new(11, ScheduleKind::TornGroupCommit);
+    opts.read_consistency = ReadConsistency::Linearizable;
+    opts.transport = TransportKind::Tcp;
+    opts.run_ms = 2_200;
+    let report = run_chaos(&opts).expect("tcp torn-group-commit harness");
+    assert!(report.writes > 0 && report.reads > 0, "degenerate run: {report:?}");
+    if let Some(v) = &report.violation {
+        panic!(
+            "tcp torn-group-commit: {v}\n  nemesis log:\n    {}",
+            report.nemesis_log.join("\n    ")
+        );
+    }
+}
+
 /// One TCP-transport chaos run: the fault plan drops frames at the
 /// send edge and kill/restart tears down and rebinds real listeners.
 #[test]
