@@ -8,34 +8,107 @@
 //! critical path); Original sits well below both.  The per-cycle GC
 //! report shows `bytes_written` bounded by level budgets — most cycles
 //! flush-only — instead of growing with the total dataset as the old
-//! single-generation rewrite did.
+//! single-generation rewrite did.  With decoupled merge scheduling the
+//! history interleaves flush cycles and background merge jobs; the
+//! merges-overlapped line under each system reports how much merge
+//! work ran concurrently with puts, the put-path stall microseconds,
+//! and the GC worker-pool utilization.
 //!
-//! Run: `cargo bench --bench fig10_gc_impact`.
+//! Run: `cargo bench --bench fig10_gc_impact`.  `--gc-workers N` (or
+//! `NEZHA_BENCH_GC_WORKERS`) sets the merge partitions in flight per
+//! level merge (1 = serial; the merged bytes are identical either
+//! way).  Every run also writes the table to `BENCH_fig10.json`.
 
 use nezha::engine::EngineKind;
-use nezha::harness::{bench_scale, bench_shards, print_gc_cycles, Env, Spec};
+use nezha::gc::pool;
+use nezha::harness::{bench_gc_workers, bench_scale, bench_shards, print_gc_cycles, Env, Spec};
 use nezha::ycsb::Generator;
 use std::time::Instant;
+
+/// One per-cycle `BENCH_fig10.json` row (hand-rolled JSON like fig4;
+/// all fields numeric or plain ASCII, so no escaping is needed).
+struct CycleRow {
+    system: String,
+    cycle: usize,
+    kind: &'static str,
+    flush_bytes: u64,
+    merge_bytes: u64,
+    merges: u64,
+    parts: u64,
+    wall_ms: u64,
+}
+
+impl CycleRow {
+    fn render(&self) -> String {
+        format!(
+            "    {{\"system\": \"{}\", \"cycle\": {}, \"kind\": \"{}\", \"flush_bytes\": {}, \
+             \"merge_bytes\": {}, \"merges\": {}, \"parts\": {}, \"wall_ms\": {}}}",
+            self.system,
+            self.cycle,
+            self.kind,
+            self.flush_bytes,
+            self.merge_bytes,
+            self.merges,
+            self.parts,
+            self.wall_ms,
+        )
+    }
+}
+
+/// One per-system summary row of `BENCH_fig10.json`.
+struct SystemRow {
+    system: String,
+    mib_per_sec: f64,
+    gc_cycles: u64,
+    merge_jobs: u64,
+    merge_queue: u64,
+    stall_us: u64,
+    pool_busy_us: u64,
+    pool_util_pct: f64,
+}
+
+impl SystemRow {
+    fn render(&self) -> String {
+        format!(
+            "    {{\"system\": \"{}\", \"mib_per_sec\": {:.2}, \"gc_cycles\": {}, \
+             \"merge_jobs\": {}, \"merge_queue\": {}, \"stall_us\": {}, \"pool_busy_us\": {}, \
+             \"pool_util_pct\": {:.2}}}",
+            self.system,
+            self.mib_per_sec,
+            self.gc_cycles,
+            self.merge_jobs,
+            self.merge_queue,
+            self.stall_us,
+            self.pool_busy_us,
+            self.pool_util_pct,
+        )
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let load = ((12 << 20) as f64 * bench_scale()) as u64;
     let vs = 16 << 10;
     let shards = bench_shards();
+    let gc_workers = bench_gc_workers();
     println!(
         "\n=== Figure 10: GC impact timeline (16KB values, GC every 10% of load, \
-         {shards} shard(s)) ==="
+         {shards} shard(s), {gc_workers} gc worker(s)) ==="
     );
     let cols = ("system", "pct", "cum_MiB/s", "inst_MiB/s", "batch_us");
     println!("{:<11} {:>8} {:>12} {:>12} {:>10}", cols.0, cols.1, cols.2, cols.3, cols.4);
+    let mut cycle_rows: Vec<CycleRow> = Vec::new();
+    let mut system_rows: Vec<SystemRow> = Vec::new();
     for kind in [EngineKind::Original, EngineKind::NezhaNoGc, EngineKind::Nezha] {
         let mut spec = Spec::new(kind, vs);
         spec.load_bytes = load;
         spec.shards = shards;
         spec.gc_fraction = 0.1;
+        spec.gc_workers = gc_workers;
         let records = spec.records();
         let env = Env::start(spec)?;
         let batch = 64usize;
         let mut g = Generator::load_ops(records, vs, 42);
+        let pool0 = pool::shared().stats();
         let t0 = Instant::now();
         let mut written = 0u64;
         let mut next_sample = records / 20; // 5% steps
@@ -69,6 +142,8 @@ fn main() -> anyhow::Result<()> {
                 last_written = written;
             }
         }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let pool1 = pool::shared().stats();
         let leader = env.cluster.wait_for_leader(std::time::Duration::from_secs(5))?;
         let st = env.cluster.status(leader)?;
         println!(
@@ -79,8 +154,62 @@ fn main() -> anyhow::Result<()> {
             st.engine.gc_levels,
             st.engine.gc_level_runs,
         );
-        print_gc_cycles(&env.cluster.gc_history(leader)?);
+        let hist = env.cluster.gc_history(leader)?;
+        print_gc_cycles(&hist);
+        // The decoupling headline: merge bytes that moved while puts
+        // kept flowing, the put-path stall those puts still paid, and
+        // how busy the shared worker pool was for the run.
+        let merge_jobs = hist.iter().filter(|c| c.is_merge_job).count();
+        let merge_mib: f64 =
+            hist.iter().map(|c| c.merge_bytes).sum::<u64>() as f64 / (1 << 20) as f64;
+        let merge_wall_ms: u64 = hist.iter().filter(|c| c.is_merge_job).map(|c| c.wall_ms).sum();
+        let max_parts = hist.iter().map(|c| c.parts).max().unwrap_or(0);
+        let pool_busy = pool1.busy_us.saturating_sub(pool0.busy_us);
+        let pool_util = pool_busy as f64 / (pool1.workers.max(1) as f64 * wall_s * 1e6) * 100.0;
+        println!(
+            "            merges overlapped with puts: {merge_jobs} jobs, {merge_mib:.2} MiB \
+             merged in {merge_wall_ms} ms wall (max {max_parts} parts); put stall {} us; \
+             pool {:.1}% busy ({} us over {} workers)",
+            st.engine.gc_stall_us, pool_util, pool_busy, pool1.workers
+        );
+        let cum_mib = (written * vs as u64) as f64 / (1 << 20) as f64 / wall_s.max(1e-9);
+        system_rows.push(SystemRow {
+            system: kind.name().into(),
+            mib_per_sec: cum_mib,
+            gc_cycles: st.gc_cycles,
+            merge_jobs: st.engine.gc_merge_jobs,
+            merge_queue: st.engine.gc_merge_queue,
+            stall_us: st.engine.gc_stall_us,
+            pool_busy_us: pool_busy,
+            pool_util_pct: pool_util,
+        });
+        for (i, c) in hist.iter().enumerate() {
+            cycle_rows.push(CycleRow {
+                system: kind.name().into(),
+                cycle: i + 1,
+                kind: if c.is_merge_job { "merge" } else { "flush" },
+                flush_bytes: c.flush_bytes,
+                merge_bytes: c.merge_bytes,
+                merges: c.merges,
+                parts: c.parts,
+                wall_ms: c.wall_ms,
+            });
+        }
         env.destroy()?;
     }
+    let systems: Vec<String> = system_rows.iter().map(SystemRow::render).collect();
+    let cycles: Vec<String> = cycle_rows.iter().map(CycleRow::render).collect();
+    let pool_now = pool::shared().stats();
+    let json = format!(
+        "{{\n  \"figure\": \"fig10_gc_impact\",\n  \"gc_workers\": {gc_workers},\n  \
+         \"shards\": {shards},\n  \"scale\": {},\n  \"pool_workers\": {},\n  \
+         \"systems\": [\n{}\n  ],\n  \"rows\": [\n{}\n  ]\n}}\n",
+        bench_scale(),
+        pool_now.workers,
+        systems.join(",\n"),
+        cycles.join(",\n")
+    );
+    std::fs::write("BENCH_fig10.json", &json)?;
+    println!("wrote BENCH_fig10.json ({} cycle rows)", cycle_rows.len());
     Ok(())
 }

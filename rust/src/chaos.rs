@@ -67,14 +67,25 @@ pub enum ScheduleKind {
     /// follower quorum, and every acknowledged write must survive its
     /// recovery.
     TornGroupCommit,
+    /// Torn partitioned merge: the run shrinks the GC budgets so level
+    /// merges split into multiple key-range partitions on >1 worker,
+    /// arms a one-shot fsync fault on the leader's *second* sorted-run
+    /// output at 15% (a partition's — or a flush's — `finish()` fails
+    /// mid-GC with sibling partitions already sealed), crashes the
+    /// remembered node at 45%, restarts it at 65%.  Recovery must
+    /// resume or replan the merge deterministically (same plan ⇒
+    /// byte-identical stack; see `gc::tests`) and the history must
+    /// stay linearizable.
+    TornPartitionedMerge,
 }
 
 impl ScheduleKind {
-    pub const ALL: [ScheduleKind; 4] = [
+    pub const ALL: [ScheduleKind; 5] = [
         ScheduleKind::PartitionHeal,
         ScheduleKind::CrashRestartMidGc,
         ScheduleKind::FlappingLinks,
         ScheduleKind::TornGroupCommit,
+        ScheduleKind::TornPartitionedMerge,
     ];
 
     pub fn name(self) -> &'static str {
@@ -83,6 +94,7 @@ impl ScheduleKind {
             ScheduleKind::CrashRestartMidGc => "crash-restart-mid-gc",
             ScheduleKind::FlappingLinks => "flapping-links",
             ScheduleKind::TornGroupCommit => "torn-group-commit",
+            ScheduleKind::TornPartitionedMerge => "torn-partitioned-merge",
         }
     }
 
@@ -127,6 +139,25 @@ impl ScheduleKind {
                         file_substr: "raft-".to_string(),
                         op: DiskOp::Sync,
                         nth: 1,
+                    },
+                },
+                NemesisEvent { at_ms: at(0.45), op: NemesisOp::CrashRemembered },
+                NemesisEvent { at_ms: at(0.5), op: NemesisOp::ClearDiskFaults },
+                NemesisEvent { at_ms: at(0.65), op: NemesisOp::RestartRemembered },
+            ],
+            ScheduleKind::TornPartitionedMerge => vec![
+                NemesisEvent {
+                    at_ms: at(0.15),
+                    op: NemesisOp::ArmLeaderDiskFault {
+                        shard: 0,
+                        // Sorted-run outputs sync in `finish()`; nth 2
+                        // lets the first output (usually the L0 flush)
+                        // seal, so the fault lands in a later output —
+                        // under partitioned merges, one partition of a
+                        // multi-partition job.
+                        file_substr: "sorted-".to_string(),
+                        op: DiskOp::Sync,
+                        nth: 2,
                     },
                 },
                 NemesisEvent { at_ms: at(0.45), op: NemesisOp::CrashRemembered },
@@ -244,6 +275,16 @@ pub fn run_chaos(opts: &ChaosOpts) -> Result<ChaosReport> {
         // window for the broadcast to be pipelined ahead of.
         cfg.raft.fsync = true;
         cfg.raft.group_commit_us = 500;
+    }
+    if opts.schedule == ScheduleKind::TornPartitionedMerge {
+        // Shrink the level budgets so the few-second run genuinely
+        // cascades into level merges, and make partitions tiny so
+        // those merges split into several key ranges on two workers —
+        // the armed fault then tears one partition's sealed output.
+        cfg.engine.gc_level0_bytes = 32 << 10;
+        cfg.engine.gc_fanout = 4;
+        cfg.engine.gc_partition_bytes = 4 << 10;
+        cfg.engine.gc_workers = 2;
     }
     // A clean slate in case an earlier run in this process armed one.
     crate::fault::disk::clear();

@@ -1385,7 +1385,14 @@ impl ReplicaTask {
                     let r = (|| -> Result<()> {
                         for _ in 0..8 {
                             replica.pump_gc(now_ms)?;
-                            if replica.engine().gc_phase() == GcPhase::During {
+                            // `gc_busy` also covers decoupled background
+                            // merge jobs and their unreported outputs —
+                            // settled means the whole cascade committed.
+                            let busy = {
+                                let eng = replica.engine();
+                                eng.gc_phase() == GcPhase::During || eng.gc_busy()
+                            };
+                            if busy {
                                 replica.finish_gc()?;
                             } else {
                                 break;

@@ -202,6 +202,18 @@ impl Replica {
         Ok(out)
     }
 
+    /// Route a completed GC output: flush cycles reclaim epochs via
+    /// [`Self::complete_cycle`]; decoupled background merge jobs touch
+    /// no epochs — the stack just got cheaper — so they only enter the
+    /// history (fig10's per-cycle table).
+    fn route_gc_output(&mut self, out: GcOutput) -> Result<GcOutput> {
+        if out.is_merge_job {
+            self.gc_history.push(out.clone());
+            return Ok(out);
+        }
+        self.complete_cycle(out)
+    }
+
     /// Drive the GC lifecycle.  Called from the node loop between
     /// request batches.  Returns a completed cycle's output, if one
     /// just finished.
@@ -210,15 +222,21 @@ impl Replica {
             return Ok(None);
         }
         // Completion side.  (Bind the poll result first: the engine
-        // guard must drop before `complete_cycle` re-borrows self.)
+        // guard must drop before `route_gc_output` re-borrows self.)
         let polled = self.engine().poll_gc()?;
         if let Some(out) = polled {
-            return self.complete_cycle(out).map(Some);
+            return self.route_gc_output(out).map(Some);
         }
         // Trigger side (paper's multidimensional triggers: size +
-        // schedule floor + load; see GcConfig).
-        let phase = self.engine().gc_phase();
-        if phase == GcPhase::During {
+        // schedule floor + load; see GcConfig).  `gc_busy` keeps the
+        // trigger off while a background merge job holds the
+        // generation allocator — flush cycles and merges are mutually
+        // exclusive per engine.
+        let (phase, busy) = {
+            let eng = self.engine();
+            (eng.gc_phase(), eng.gc_busy())
+        };
+        if phase == GcPhase::During || busy {
             return Ok(None);
         }
         let size_hit = self.node.log.live_epoch_bytes >= self.gc_cfg.threshold_bytes;
@@ -251,18 +269,24 @@ impl Replica {
         Ok(None)
     }
 
-    /// Convenience: block until any running cycle completes (tests,
-    /// benches, clean shutdown).  The completed cycle stays in
-    /// `gc_history` — callers get a clone.
+    /// Convenience: block until every running cycle AND cascading
+    /// background merge job completes (tests, benches, clean
+    /// shutdown).  Each output is routed; the flush cycle's output is
+    /// returned (merge outputs land in `gc_history` only).
     pub fn finish_gc(&mut self) -> Result<Option<GcOutput>> {
         if self.kind != EngineKind::Nezha {
             return Ok(None);
         }
-        let waited = self.engine().wait_gc()?;
-        if let Some(out) = waited {
-            return self.complete_cycle(out).map(Some);
+        let mut flush = None;
+        loop {
+            let waited = self.engine().wait_gc()?;
+            let Some(out) = waited else { break };
+            let routed = self.route_gc_output(out)?;
+            if !routed.is_merge_job {
+                flush = Some(routed);
+            }
         }
-        Ok(None)
+        Ok(flush)
     }
 
     /// Leader-side batched propose: append all, persist once, fan out

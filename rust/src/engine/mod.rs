@@ -103,6 +103,14 @@ pub struct EngineOpts {
     pub gc_level0_bytes: u64,
     /// Leveled-GC fanout (size ratio between adjacent levels).
     pub gc_fanout: u64,
+    /// Max merge partitions in flight per level merge (the
+    /// `--gc-workers` knob; 1 = serial merges, identical bytes either
+    /// way).  Executes on the process-wide [`crate::gc::pool`].
+    pub gc_workers: usize,
+    /// Target source bytes per merge partition; a level merge splits
+    /// into `ceil(total / gc_partition_bytes)` key ranges (≤
+    /// [`crate::gc::MAX_PARTS`]).  `u64::MAX` disables partitioning.
+    pub gc_partition_bytes: u64,
 }
 
 impl EngineOpts {
@@ -117,6 +125,8 @@ impl EngineOpts {
             index_backend: Arc::new(crate::gc::RustBackend),
             gc_level0_bytes: 8 << 20,
             gc_fanout: 10,
+            gc_workers: 1,
+            gc_partition_bytes: 4 << 20,
         }
     }
 }
@@ -164,6 +174,17 @@ pub struct EngineStats {
     pub group_commit_max_batch: u64,
     /// Apply-lane queue depth high-water mark (0 without a lane).
     pub apply_queue_depth: u64,
+    /// Put-path microseconds spent applying while the engine sat in
+    /// `GcPhase::During` (flush in flight) — the stall window the
+    /// decoupled merge scheduling shrinks (fig10's stall column).
+    pub gc_stall_us: u64,
+    /// High-water mark of background merge jobs queued or in flight.
+    pub gc_merge_queue: u64,
+    /// Decoupled background merge jobs committed.
+    pub gc_merge_jobs: u64,
+    /// Largest readahead segment the adaptive sizing chose (bytes; 0
+    /// when the readahead cache was never touched).
+    pub readahead_seg_bytes: u64,
 }
 
 impl EngineStats {
@@ -194,9 +215,13 @@ impl EngineStats {
         self.entries_committed += o.entries_committed;
         self.group_commit_batches += o.group_commit_batches;
         self.group_commit_entries += o.group_commit_entries;
+        self.gc_stall_us += o.gc_stall_us;
+        self.gc_merge_jobs += o.gc_merge_jobs;
         // High-water marks: the rolled-up view keeps the worst shard.
         self.group_commit_max_batch = self.group_commit_max_batch.max(o.group_commit_max_batch);
         self.apply_queue_depth = self.apply_queue_depth.max(o.apply_queue_depth);
+        self.gc_merge_queue = self.gc_merge_queue.max(o.gc_merge_queue);
+        self.readahead_seg_bytes = self.readahead_seg_bytes.max(o.readahead_seg_bytes);
     }
 
     /// Readahead cache hit rate in `[0, 1]` (0 when the cache was never
@@ -266,8 +291,17 @@ pub trait KvEngine: StateMachine {
 
     /// Poll for cycle completion.  When `Some`, the replica marks the
     /// Raft snapshot at the returned point and drops old epochs.
+    /// Decoupled background merge jobs report here too, tagged
+    /// `is_merge_job` (no epochs to reclaim).
     fn poll_gc(&mut self) -> Result<Option<GcOutput>> {
         Ok(None)
+    }
+
+    /// True while any GC work — flush cycle or background merge job —
+    /// is in flight or has unreported output.  The replica throttles
+    /// new cycles and drains shutdown on this.
+    fn gc_busy(&self) -> bool {
+        false
     }
 
     /// Block until a running GC cycle finishes (tests/benches).

@@ -31,6 +31,7 @@ use crate::gc::{
     self,
     levels::{LevelManifest, LeveledStorage},
     sorted_path, EpochSource, FinalStorage, FrozenEpoch, GcInputs, GcOutput, GcPhase, GcState,
+    GcStep, MergeJob,
 };
 use crate::lsm::Db;
 use crate::raft::rpc::{Command, LogEntry, LogIndex, Term};
@@ -38,7 +39,7 @@ use crate::raft::StateMachine;
 use crate::util::key_before_end;
 use crate::vlog::{EpochReaders, SortedVLogWriter, VRef};
 use anyhow::{Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -79,10 +80,27 @@ pub struct NezhaEngine {
     /// otherwise their re-applied VRefs dangle once the cycle
     /// completes and the frozen epochs are deleted.
     gc_floor: Option<u64>,
-    /// Completed-but-unreported cycle (delivered via `poll_gc`).
-    pending: Option<GcOutput>,
+    /// Completed-but-unreported outputs (flush cycles and merge jobs,
+    /// delivered in completion order via `poll_gc`).
+    pending: VecDeque<GcOutput>,
+    /// In-flight decoupled merge job: the persisted plan plus its
+    /// worker thread.  Mutually exclusive with a flush cycle (both
+    /// allocate generations from `manifest.next_gen` and commit the
+    /// manifest).
+    merge_rx: Option<mpsc::Receiver<Result<Vec<(u64, u64, u64)>>>>,
+    merge_join: Option<std::thread::JoinHandle<()>>,
+    merge_job: Option<MergeJob>,
+    merge_t0: Option<std::time::Instant>,
+    /// The committed stack changed since the planner last ran; gates
+    /// `maybe_start_merge_job` so idle pumps don't stat run files.
+    merge_plan_dirty: bool,
     gc_bytes: u64,
     gc_cycles: u64,
+    merge_jobs_done: u64,
+    merge_queue_hw: u64,
+    /// Apply-path microseconds spent while a flush held the engine in
+    /// `GcPhase::During` (fig10's stall column).
+    gc_stall_us: u64,
     gets: u64,
     scans: u64,
 }
@@ -145,20 +163,53 @@ impl NezhaEngine {
             }
         }
 
+        // Decoupled merge job in flight at crash time?  Validate it
+        // before the orphan sweep so its partial outputs survive.
+        let mut merge_job = MergeJob::load(&opts.dir)?;
+        if let Some(job) = &merge_job {
+            let committed: std::collections::HashSet<u64> =
+                manifest.all_gens().into_iter().collect();
+            if job.out_gens.iter().all(|g| committed.contains(g)) {
+                // Crash between manifest commit and flag clear: the
+                // job is already durable, don't re-run it.
+                MergeJob::clear(&opts.dir)?;
+                merge_job = None;
+            } else if job.srcs.iter().any(|g| !sorted_path(&opts.dir, *g).exists())
+                || state.as_ref().is_some_and(|s| s.running)
+            {
+                // Unexecutable (a source is gone) or inconsistent with
+                // a running flush cycle — the two are mutually
+                // exclusive in a healthy log.  Drop the job and its
+                // partial outputs; the planner re-derives the same
+                // merge from the committed stack once it settles.
+                for g in &job.out_gens {
+                    if !committed.contains(g) {
+                        FinalStorage::remove_gen(&opts.dir, *g);
+                    }
+                }
+                MergeJob::clear(&opts.dir)?;
+                merge_job = None;
+            }
+        }
+
         // Garbage-collect run files outside the manifest (crash window
-        // between manifest commit and file deletion).  Generations at
-        // or above a running cycle's `out_gen` are in-flight outputs
-        // the resume below will finish — keep them.  Skip entirely for
-        // just-adopted legacy layouts (no manifest on disk yet).
+        // between manifest commit and file deletion).  A running flush
+        // cycle's single output and a kept merge job's outputs are
+        // in-flight — the resumes below finish them.  Stray higher
+        // generations (pre-decoupling partial merges) are swept: a
+        // flush-only resume would collide with them.  Skip entirely
+        // for just-adopted legacy layouts (no manifest on disk yet).
         if had_manifest.is_some() {
-            let live: std::collections::HashSet<u64> = manifest.all_gens().into_iter().collect();
-            let inflight_from = state
-                .as_ref()
-                .filter(|s| s.running)
-                .map(|s| s.out_gen)
-                .unwrap_or(u64::MAX);
+            let mut keep: std::collections::HashSet<u64> =
+                manifest.all_gens().into_iter().collect();
+            if let Some(s) = state.as_ref().filter(|s| s.running) {
+                keep.insert(s.out_gen);
+            }
+            if let Some(job) = &merge_job {
+                keep.extend(job.out_gens.iter().copied());
+            }
             for g in FinalStorage::list_all_gens(&opts.dir)? {
-                if !live.contains(&g) && g < inflight_from {
+                if !keep.contains(&g) {
                     FinalStorage::remove_gen(&opts.dir, g);
                 }
             }
@@ -197,7 +248,8 @@ impl NezhaEngine {
             }
         }
 
-        let levels = LeveledStorage::open(&opts.dir, &manifest.levels)?;
+        let levels =
+            LeveledStorage::open_partitioned(&opts.dir, &manifest.levels, &manifest.partitions)?;
         if had_manifest.is_none() && !manifest.is_empty() {
             // Persist the legacy adoption so the next open is uniform.
             manifest.save(&opts.dir)?;
@@ -215,9 +267,19 @@ impl NezhaEngine {
             gc_join: None,
             gc_frozen_epoch: None,
             gc_floor: None,
-            pending: None,
+            pending: VecDeque::new(),
+            merge_rx: None,
+            merge_join: None,
+            merge_job: None,
+            merge_t0: None,
+            // An adopted or freshly-loaded stack may already be over
+            // budget: let the first pump plan.
+            merge_plan_dirty: true,
             gc_bytes: 0,
             gc_cycles: 0,
+            merge_jobs_done: 0,
+            merge_queue_hw: 0,
+            gc_stall_us: 0,
             gets: 0,
             scans: 0,
             opts,
@@ -269,6 +331,9 @@ impl NezhaEngine {
                     last_term: st.last_term,
                     level0_bytes: eng.opts.gc_level0_bytes,
                     fanout: eng.opts.gc_fanout,
+                    partitions: st.partitions.clone(),
+                    partition_bytes: eng.opts.gc_partition_bytes,
+                    workers: eng.opts.gc_workers,
                     resume: true,
                     backend: Arc::clone(&eng.opts.index_backend),
                 };
@@ -277,13 +342,21 @@ impl NezhaEngine {
                     .name(format!("nezha-gc-resume-{}", st.out_gen))
                     .spawn(move || {
                         deprioritize_gc_thread();
-                        let _ = tx.send(gc::run_gc(&inputs).context("gc resume"));
+                        let _ = tx.send(gc::run_flush(&inputs).context("gc resume"));
                     })?;
                 eng.gc_rx = Some(rx);
                 eng.gc_join = Some(join);
                 eng.gc_frozen_epoch = Some(st.frozen_epoch);
                 eng.gc_floor = Some(st.last_index);
             }
+        }
+        // Resume an interrupted merge job with its PERSISTED plan —
+        // sources, bounds and output gens are the crash-time ones even
+        // if the partitioning knobs changed across the restart, so
+        // every partition continues its own partial output and the
+        // committed stack comes out byte-identical.
+        if let Some(job) = merge_job {
+            eng.spawn_merge(job, true)?;
         }
         Ok(eng)
     }
@@ -300,16 +373,25 @@ impl NezhaEngine {
         Ok(self.readers.read(vref)?.value)
     }
 
+    /// Commit a completed flush cycle.  This is the cycle's whole
+    /// critical path now: as soon as the manifest lands the epochs
+    /// reclaim and the put path unblocks — over-budget level merges
+    /// are planned afterwards as decoupled background jobs.
     fn finish_cycle(&mut self, out: GcOutput) -> Result<()> {
         let old_gens = self.manifest.all_gens();
         // Open the new stack before committing, reusing the handles of
         // runs that survived unchanged.  open_reusing touches
         // self.levels only once every new run opened successfully, so
         // a failure here leaves the committed stack serving reads.
-        let new_levels =
-            LeveledStorage::open_reusing(&self.opts.dir, &out.levels, &mut self.levels)?;
+        let new_levels = LeveledStorage::open_reusing(
+            &self.opts.dir,
+            &out.levels,
+            &out.partitions,
+            &mut self.levels,
+        )?;
         self.levels = new_levels;
         self.manifest.levels = out.levels.clone();
+        self.manifest.partitions = out.partitions.clone();
         let max_written = out.written_gens.iter().copied().max().unwrap_or(0);
         self.manifest.next_gen = self.manifest.next_gen.max(max_written + 1);
         // Tombstone bookkeeping: adopt the counts of every run this
@@ -319,6 +401,7 @@ impl NezhaEngine {
             self.manifest.run_tombstones.insert(g, t);
         }
         self.manifest.run_tombstones.retain(|g, _| live.contains(g));
+        self.manifest.retain_live_partitions();
         // Commit point: the manifest makes the new runs visible.
         self.manifest.save(&self.opts.dir)?;
         GcState::clear(&self.opts.dir)?;
@@ -343,7 +426,8 @@ impl NezhaEngine {
         self.gc_floor = None;
         self.gc_bytes += out.bytes_written;
         self.gc_cycles += 1;
-        self.pending = Some(out);
+        self.merge_plan_dirty = true;
+        self.pending.push_back(out);
         Ok(())
     }
 
@@ -378,6 +462,180 @@ impl NezhaEngine {
             }
         }
     }
+
+    /// Launch a merge job's worker thread (`resume = true` when it
+    /// adopts crash-time partial outputs).
+    fn spawn_merge(&mut self, job: MergeJob, resume: bool) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        let dir = self.opts.dir.clone();
+        let backend = Arc::clone(&self.opts.index_backend);
+        let workers = self.opts.gc_workers;
+        let j = job.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("nezha-merge-{}", job.out_gens[0]))
+            .spawn(move || {
+                deprioritize_gc_thread();
+                let _ = tx.send(j.execute(&dir, resume, &backend, workers));
+            })?;
+        self.merge_rx = Some(rx);
+        self.merge_join = Some(join);
+        self.merge_job = Some(job);
+        self.merge_t0 = Some(std::time::Instant::now());
+        self.merge_queue_hw = self.merge_queue_hw.max(1);
+        Ok(())
+    }
+
+    /// Plan the next background maintenance step for the committed
+    /// stack: trivial moves commit inline (metadata only), the first
+    /// rewrite merge becomes an independently scheduled job.  No-op
+    /// while a flush cycle or another merge is in flight — both
+    /// allocate generations from `manifest.next_gen`.
+    fn maybe_start_merge_job(&mut self) -> Result<()> {
+        // `old_db` also covers a FAILED flush cycle (During mode with
+        // no thread): its persisted GcState still owns `next_gen` for
+        // the restart retry, so planning would double-allocate gens.
+        if !self.gc_enabled
+            || !self.merge_plan_dirty
+            || self.merge_rx.is_some()
+            || self.gc_rx.is_some()
+            || self.old_db.is_some()
+        {
+            return Ok(());
+        }
+        loop {
+            let step = gc::plan_step(
+                &self.opts.dir,
+                &self.manifest.levels,
+                &self.manifest.partitions,
+                &self.manifest.run_tombstones,
+                self.opts.gc_level0_bytes,
+                self.opts.gc_fanout,
+                self.opts.gc_partition_bytes,
+                self.manifest.next_gen,
+            )?;
+            match step {
+                GcStep::Done => {
+                    self.merge_plan_dirty = false;
+                    return Ok(());
+                }
+                GcStep::Trivial { stack_after } => {
+                    self.levels = LeveledStorage::open_reusing(
+                        &self.opts.dir,
+                        &stack_after,
+                        &self.manifest.partitions,
+                        &mut self.levels,
+                    )?;
+                    self.manifest.levels = stack_after;
+                    self.manifest.save(&self.opts.dir)?;
+                }
+                GcStep::Merge(job) => {
+                    // Persist the plan BEFORE the first output byte:
+                    // crash recovery resumes the identical job.
+                    job.save(&self.opts.dir)?;
+                    return self.spawn_merge(*job, false);
+                }
+            }
+        }
+    }
+
+    /// Commit a completed merge job: its own manifest commit point,
+    /// independent of any flush cycle.
+    fn finish_merge_job(&mut self, job: MergeJob, parts: Vec<(u64, u64, u64)>) -> Result<()> {
+        let old_gens = self.manifest.all_gens();
+        let new_levels = LeveledStorage::open_reusing(
+            &self.opts.dir,
+            &job.stack_after,
+            &job.parts_after,
+            &mut self.levels,
+        )?;
+        self.levels = new_levels;
+        self.manifest.levels = job.stack_after.clone();
+        self.manifest.partitions = job.parts_after.clone();
+        let max_out = job.out_gens.iter().copied().max().expect("merge outputs");
+        self.manifest.next_gen = self.manifest.next_gen.max(max_out + 1);
+        let live: std::collections::HashSet<u64> = self.manifest.all_gens().into_iter().collect();
+        for (&g, &(_, _, t)) in job.out_gens.iter().zip(parts.iter()) {
+            self.manifest.run_tombstones.insert(g, t);
+        }
+        self.manifest.run_tombstones.retain(|g, _| live.contains(g));
+        self.manifest.retain_live_partitions();
+        self.manifest.save(&self.opts.dir)?;
+        MergeJob::clear(&self.opts.dir)?;
+        for g in old_gens.iter().chain(job.out_gens.iter()) {
+            if !live.contains(g) {
+                FinalStorage::remove_gen(&self.opts.dir, *g);
+            }
+        }
+        let merge_bytes: u64 = parts.iter().map(|p| p.0).sum();
+        self.gc_bytes += merge_bytes;
+        self.merge_jobs_done += 1;
+        // The next level may now be over budget: cascades continue as
+        // successive independent jobs.
+        self.merge_plan_dirty = true;
+        self.pending.push_back(GcOutput {
+            gen: job.out_gens[0],
+            entries: parts.iter().map(|p| p.1).sum(),
+            flush_bytes: 0,
+            merge_bytes,
+            bytes_written: merge_bytes,
+            merges: 1,
+            levels: self.manifest.levels.clone(),
+            written_gens: job.out_gens.clone(),
+            run_tombstones: job.out_gens.iter().zip(parts.iter()).map(|(&g, p)| (g, p.2)).collect(),
+            skip_offsets: Vec::new(),
+            last_index: job.last_index,
+            last_term: job.last_term,
+            wall_ms: self.merge_t0.take().map_or(0, |t| t.elapsed().as_millis() as u64),
+            index_backend: self.opts.index_backend.name(),
+            partitions: self.manifest.partitions.clone(),
+            parts: job.out_gens.len() as u64,
+            is_merge_job: true,
+        });
+        Ok(())
+    }
+
+    fn try_finish_merge(&mut self, blocking: bool) -> Result<()> {
+        let Some(rx) = &self.merge_rx else { return Ok(()) };
+        let res = if blocking {
+            match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return Ok(()),
+            }
+        } else {
+            match rx.try_recv() {
+                Ok(r) => r,
+                Err(mpsc::TryRecvError::Empty) => return Ok(()),
+                Err(mpsc::TryRecvError::Disconnected) => return Ok(()),
+            }
+        };
+        self.merge_rx = None;
+        if let Some(j) = self.merge_join.take() {
+            let _ = j.join();
+        }
+        let job = self.merge_job.take().expect("merge job recorded");
+        match res {
+            Ok(parts) => self.finish_merge_job(job, parts),
+            Err(e) => {
+                // A failed merge (e.g. an injected disk fault) leaves
+                // the committed stack fully intact — drop the job and
+                // its partial outputs; the planner re-derives the
+                // SAME deterministic plan after the next flush commit
+                // (or restart), so retry costs nothing in correctness.
+                eprintln!("nezha: merge job failed, stack unchanged: {e:#}");
+                self.merge_t0 = None;
+                let committed: std::collections::HashSet<u64> =
+                    self.manifest.all_gens().into_iter().collect();
+                for g in &job.out_gens {
+                    if !committed.contains(g) {
+                        FinalStorage::remove_gen(&self.opts.dir, *g);
+                    }
+                }
+                MergeJob::clear(&self.opts.dir)?;
+                self.merge_plan_dirty = false;
+                Ok(())
+            }
+        }
+    }
 }
 
 impl StateMachine for NezhaEngine {
@@ -389,6 +647,10 @@ impl StateMachine for NezhaEngine {
     /// `currentDB` never accumulates references that dangle once the
     /// cycle completes and the frozen epochs are deleted.
     fn apply(&mut self, entry: &LogEntry, vref: VRef) -> Result<()> {
+        // Stall accounting: time spent applying while a flush holds
+        // the engine in During mode (fig10's stall column — decoupled
+        // merges deliberately do NOT count, they no longer gate puts).
+        let t0 = self.old_db.is_some().then(std::time::Instant::now);
         match &entry.cmd {
             Command::Put { key, .. } | Command::Delete { key } => {
                 match (&mut self.old_db, self.gc_floor) {
@@ -399,6 +661,9 @@ impl StateMachine for NezhaEngine {
                 }
             }
             Command::Noop => {}
+        }
+        if let Some(t) = t0 {
+            self.gc_stall_us += t.elapsed().as_micros() as u64;
         }
         Ok(())
     }
@@ -418,14 +683,18 @@ impl StateMachine for NezhaEngine {
     }
 
     fn install_snapshot(&mut self, data: &[u8], li: LogIndex, lt: Term) -> Result<()> {
-        // Abort any cycle in flight; the snapshot supersedes it.  (A
-        // successful in-flight cycle commits below us first — harmless,
-        // the snapshot replaces the whole stack either way.)
+        // Abort any cycle or merge job in flight; the snapshot
+        // supersedes them.  (A successful in-flight cycle commits
+        // below us first — harmless, the snapshot replaces the whole
+        // stack either way.)  The merge thread must settle BEFORE the
+        // generation sweep below, or it would recreate deleted files.
         self.try_finish(true)?;
+        self.try_finish_merge(true)?;
+        MergeJob::clear(&self.opts.dir)?;
         // A cycle that completed just now must not be reported to the
         // replica: its snapshot point predates `li` and would regress
         // the Raft snapshot mark.
-        self.pending = None;
+        self.pending.clear();
         // Every old VRef is about to become invalid and the raft log
         // resets its epochs: drop all cached ValueLog state.
         self.readers.invalidate_from(0);
@@ -445,6 +714,7 @@ impl StateMachine for NezhaEngine {
         self.manifest.next_gen = gen + 1;
         // The snapshot run is a complete, tombstone-free image.
         self.manifest.run_tombstones = std::iter::once((gen, 0)).collect();
+        self.manifest.partitions = Vec::new();
         self.manifest.save(&self.opts.dir)?;
         // The aborted cycle is superseded even if it failed: without
         // this, a stale `running` flag would make the next restart
@@ -452,6 +722,7 @@ impl StateMachine for NezhaEngine {
         // generation range.
         GcState::clear(&self.opts.dir)?;
         self.levels = LeveledStorage::open(&self.opts.dir, &self.manifest.levels)?;
+        self.merge_plan_dirty = true;
         // Remove every other on-disk generation — the old stack AND any
         // partial output a failed cycle left behind.  Generation
         // numbers are reused after this point, so a stale partial file
@@ -680,6 +951,10 @@ impl KvEngine for NezhaEngine {
             readahead_hits: vlog_io.readahead_hits,
             readahead_misses: vlog_io.readahead_misses,
             log_syncs: s.log_syncs + olds.log_syncs,
+            gc_stall_us: self.gc_stall_us,
+            gc_merge_queue: self.merge_queue_hw,
+            gc_merge_jobs: self.merge_jobs_done,
+            readahead_seg_bytes: vlog_io.readahead_seg_bytes,
             ..Default::default()
         }
     }
@@ -706,6 +981,10 @@ impl KvEngine for NezhaEngine {
     ) -> Result<()> {
         anyhow::ensure!(self.gc_enabled, "Nezha-NoGC never garbage-collects");
         anyhow::ensure!(self.gc_rx.is_none() && self.old_db.is_none(), "GC already running");
+        // Flush cycles and merge jobs are mutually exclusive: both
+        // allocate generations from `manifest.next_gen` and commit the
+        // manifest.  The replica gates its trigger on `gc_busy()`.
+        anyhow::ensure!(self.merge_rx.is_none(), "merge job in flight");
         anyhow::ensure!(!frozen_epochs.is_empty(), "GC needs at least one frozen epoch");
 
         let min_epoch = frozen_epochs.iter().map(|f| f.epoch).min().unwrap();
@@ -721,6 +1000,7 @@ impl KvEngine for NezhaEngine {
             last_term,
             stack: self.manifest.levels.clone(),
             run_tombstones: self.manifest.run_tombstones.clone(),
+            partitions: self.manifest.partitions.clone(),
         }
         .save(&self.opts.dir)?;
 
@@ -751,6 +1031,9 @@ impl KvEngine for NezhaEngine {
             last_term,
             level0_bytes: self.opts.gc_level0_bytes,
             fanout: self.opts.gc_fanout,
+            partitions: self.manifest.partitions.clone(),
+            partition_bytes: self.opts.gc_partition_bytes,
+            workers: self.opts.gc_workers,
             resume: false,
             backend: Arc::clone(&self.opts.index_backend),
         };
@@ -759,7 +1042,7 @@ impl KvEngine for NezhaEngine {
             .name(format!("nezha-gc-{out_gen}"))
             .spawn(move || {
                 deprioritize_gc_thread();
-                let _ = tx.send(gc::run_gc(&inputs));
+                let _ = tx.send(gc::run_flush(&inputs));
             })?;
         self.gc_rx = Some(rx);
         self.gc_join = Some(join);
@@ -770,12 +1053,30 @@ impl KvEngine for NezhaEngine {
 
     fn poll_gc(&mut self) -> Result<Option<GcOutput>> {
         self.try_finish(false)?;
-        Ok(self.pending.take())
+        self.try_finish_merge(false)?;
+        self.maybe_start_merge_job()?;
+        Ok(self.pending.pop_front())
     }
 
     fn wait_gc(&mut self) -> Result<Option<GcOutput>> {
         self.try_finish(true)?;
-        Ok(self.pending.take())
+        // Drive the merge cascade to quiescence: each commit may put
+        // the next level over budget.
+        loop {
+            self.try_finish_merge(true)?;
+            self.maybe_start_merge_job()?;
+            if self.merge_rx.is_none() {
+                break;
+            }
+        }
+        Ok(self.pending.pop_front())
+    }
+
+    fn gc_busy(&self) -> bool {
+        self.gc_rx.is_some()
+            || self.merge_rx.is_some()
+            || !self.pending.is_empty()
+            || (self.gc_enabled && self.merge_plan_dirty)
     }
 }
 
@@ -864,7 +1165,16 @@ mod tests {
                 .map(|(epoch, skip_offset)| FrozenEpoch { epoch, skip_offset })
                 .collect();
             self.eng.begin_gc(&epochs, min_index, last_index, 1).unwrap();
-            let out = self.eng.wait_gc().unwrap().expect("gc output");
+            // Drain the flush AND every cascading background merge
+            // job; return the flush output (the replica routes merge
+            // outputs separately — they carry no epochs to reclaim).
+            let mut flush = None;
+            while let Some(o) = self.eng.wait_gc().unwrap() {
+                if !o.is_merge_job {
+                    flush = Some(o);
+                }
+            }
+            let out = flush.expect("gc output");
             self.log.mark_snapshot(out.last_index, out.last_term).unwrap();
             for &(e, off) in &out.skip_offsets {
                 self.log.set_epoch_skip(e, off);
@@ -1092,6 +1402,7 @@ mod tests {
             last_term: 1,
             stack: vec![],
             run_tombstones: Default::default(),
+            partitions: vec![],
         }
         .save(&r.base.join("engine"))
         .unwrap();
@@ -1129,6 +1440,7 @@ mod tests {
             last_term: out.last_term,
             stack: vec![],
             run_tombstones: Default::default(),
+            partitions: vec![],
         }
         .save(&r.base.join("engine"))
         .unwrap();

@@ -14,8 +14,11 @@
 //! for the Nth fsync/write whose path matches a set of substrings
 //! (raft log, vlog, LEVELS manifest), then crash-restart the node and
 //! assert the GC commit-point ordering recovers.  Hooks live in
-//! `vlog::log::VLog::sync`/`flush_buf` and `gc::levels::save_framed` —
-//! every durability decision in the tree funnels through those.
+//! `vlog::log::VLog::sync`/`flush_buf`, `gc::levels::save_framed`, and
+//! `vlog::sorted::SortedVLogWriter::finish` (the seal fsync of every
+//! sorted-run output, so a fault can land inside one partition of a
+//! parallel merge) — every durability decision in the tree funnels
+//! through those.
 //!
 //! Neither side is compiled out in release builds: an inert plan is a
 //! single relaxed atomic load on the send path and the disk registry a

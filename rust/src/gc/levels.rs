@@ -101,6 +101,69 @@ pub fn decode_tombstone_counts(d: &mut Decoder) -> Result<std::collections::BTre
     Ok(counts)
 }
 
+/// A *partitioned run*: one logical sorted run physically split into
+/// key-disjoint sub-runs by a parallel merge.  `gens` lists the
+/// sub-run generations in ascending key order; `bounds[i]` is the
+/// first key of `gens[i + 1]`'s range (so sub-run `i` covers keys
+/// `< bounds[i]`, the last covers everything from `bounds` up).
+///
+/// Group membership is keyed purely by generation numbers, so a
+/// trivial move (the gens slide to a deeper level) needs no partition
+/// metadata update.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PartitionGroup {
+    pub gens: Vec<u64>,
+    pub bounds: Vec<Vec<u8>>,
+}
+
+impl PartitionGroup {
+    /// Index of the sub-run whose key range contains `key`.
+    pub fn part_for(bounds: &[Vec<u8>], key: &[u8]) -> usize {
+        bounds.partition_point(|b| b.as_slice() <= key)
+    }
+}
+
+/// Wire format of the partition groups, shared by [`LevelManifest`]
+/// and `GcState`.  Appended after the tombstone counts; files written
+/// before partitioned runs existed end early, which
+/// [`decode_partitions`] reads as "no groups" (every run a singleton).
+pub fn encode_partitions(e: &mut Encoder, groups: &[PartitionGroup]) {
+    e.varint(groups.len() as u64);
+    for g in groups {
+        e.varint(g.gens.len() as u64);
+        for gen in &g.gens {
+            e.u64(*gen);
+        }
+        for b in &g.bounds {
+            e.len_bytes(b);
+        }
+    }
+}
+
+/// Inverse of [`encode_partitions`]; an exhausted decoder yields the
+/// empty list (pre-partition files).
+pub fn decode_partitions(d: &mut Decoder) -> Result<Vec<PartitionGroup>> {
+    if d.remaining() == 0 {
+        return Ok(Vec::new());
+    }
+    let ngroups = d.varint()? as usize;
+    let mut groups = Vec::with_capacity(ngroups);
+    for _ in 0..ngroups {
+        let ngens = d.varint()? as usize;
+        anyhow::ensure!(ngens >= 1, "partition group without sub-runs");
+        let mut gens = Vec::with_capacity(ngens);
+        for _ in 0..ngens {
+            gens.push(d.u64()?);
+        }
+        let mut bounds = Vec::with_capacity(ngens - 1);
+        for _ in 0..ngens - 1 {
+            bounds.push(d.len_bytes()?.to_vec());
+        }
+        groups.push(PartitionGroup { gens, bounds });
+    }
+    Ok(groups)
+}
+
 /// CRC-framed atomic flag-file write (`crc32 | body` via tmp+rename).
 /// One implementation for every GC commit-point file (`LEVELS`,
 /// `GC_STATE`) so the crash-atomicity mechanics cannot drift.
@@ -153,11 +216,19 @@ pub struct LevelManifest {
     pub levels: Vec<Vec<u64>>,
     pub next_gen: u64,
     pub run_tombstones: std::collections::BTreeMap<u64, u64>,
+    /// Partition groups for levels whose entries are partitioned runs;
+    /// a generation in no group is a plain single-run entry.
+    pub partitions: Vec<PartitionGroup>,
 }
 
 impl Default for LevelManifest {
     fn default() -> Self {
-        Self { levels: Vec::new(), next_gen: 1, run_tombstones: Default::default() }
+        Self {
+            levels: Vec::new(),
+            next_gen: 1,
+            run_tombstones: Default::default(),
+            partitions: Vec::new(),
+        }
     }
 }
 
@@ -171,11 +242,19 @@ impl LevelManifest {
         self.levels.iter().all(|l| l.is_empty())
     }
 
+    /// Drop partition groups that no longer have all their members in
+    /// the level stack (their merge output superseded them).
+    pub fn retain_live_partitions(&mut self) {
+        let live: std::collections::HashSet<u64> = self.all_gens().into_iter().collect();
+        self.partitions.retain(|p| p.gens.iter().all(|g| live.contains(g)));
+    }
+
     pub fn save(&self, dir: &Path) -> Result<()> {
         let mut e = Encoder::new();
         e.u64(MANIFEST_MAGIC).u64(self.next_gen);
         encode_levels(&mut e, &self.levels);
         encode_tombstone_counts(&mut e, &self.run_tombstones);
+        encode_partitions(&mut e, &self.partitions);
         save_framed(dir, MANIFEST_FILE, &e.into_vec())
     }
 
@@ -190,20 +269,136 @@ impl LevelManifest {
         let next_gen = d.u64()?;
         let levels = decode_levels(&mut d)?;
         let run_tombstones = decode_tombstone_counts(&mut d)?;
-        Ok(Some(Self { levels, next_gen, run_tombstones }))
+        let partitions = decode_partitions(&mut d)?;
+        Ok(Some(Self { levels, next_gen, run_tombstones, partitions }))
     }
 }
 
-/// The open run stack: one [`FinalStorage`] per run, addressed
-/// newest-first within each level, shallowest level first.
+/// One logical run of a level: either a single sealed run, or a
+/// partitioned run's key-disjoint sub-runs in ascending key order.
+/// Point reads binary-search `bounds` to touch exactly one sub-run.
+pub struct LogicalRun {
+    pub parts: Vec<FinalStorage>,
+    pub bounds: Vec<Vec<u8>>,
+}
+
+impl LogicalRun {
+    fn single(run: FinalStorage) -> Self {
+        Self { parts: vec![run], bounds: Vec::new() }
+    }
+
+    pub fn gens(&self) -> impl Iterator<Item = u64> + '_ {
+        self.parts.iter().map(|r| r.gen)
+    }
+
+    /// The sub-run whose key range contains `key`.
+    pub fn part_for(&self, key: &[u8]) -> &FinalStorage {
+        &self.parts[PartitionGroup::part_for(&self.bounds, key)]
+    }
+
+    pub fn get(&self, key: &[u8]) -> Result<Option<VEntry>> {
+        self.part_for(key).get(key)
+    }
+
+    /// Batched lookup: route each key to its sub-run by bound search,
+    /// one [`FinalStorage::multi_get`] batch per touched sub-run.
+    pub fn multi_get(&self, keys: &[&[u8]]) -> Result<Vec<Option<VEntry>>> {
+        if self.parts.len() == 1 {
+            return self.parts[0].multi_get(keys);
+        }
+        let mut out: Vec<Option<VEntry>> = vec![None; keys.len()];
+        let mut by_part: Vec<Vec<usize>> = vec![Vec::new(); self.parts.len()];
+        for (i, k) in keys.iter().enumerate() {
+            by_part[PartitionGroup::part_for(&self.bounds, k)].push(i);
+        }
+        for (p, slots) in by_part.iter().enumerate() {
+            if slots.is_empty() {
+                continue;
+            }
+            let sub: Vec<&[u8]> = slots.iter().map(|&i| keys[i]).collect();
+            for (&slot, e) in slots.iter().zip(self.parts[p].multi_get(&sub)?) {
+                out[slot] = e;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Range scan: start at the sub-run containing `start`, then walk
+    /// the following sub-runs — they are key-disjoint and ordered, so
+    /// concatenation stays sorted.  An empty `end` means unbounded.
+    pub fn scan(&self, start: &[u8], end: &[u8], limit: usize) -> Result<Vec<VEntry>> {
+        if self.parts.len() == 1 {
+            return self.parts[0].scan(start, end, limit);
+        }
+        let first = PartitionGroup::part_for(&self.bounds, start);
+        let mut out: Vec<VEntry> = Vec::new();
+        for (p, run) in self.parts.iter().enumerate().skip(first) {
+            if p > first && !end.is_empty() && self.bounds[p - 1].as_slice() >= end {
+                break; // sub-run starts at or past the scan end
+            }
+            if out.len() >= limit {
+                break;
+            }
+            out.extend(run.scan(start, end, limit - out.len())?);
+        }
+        Ok(out)
+    }
+}
+
+/// The open run stack: one [`LogicalRun`] per run (single or
+/// partitioned), addressed newest-first within each level, shallowest
+/// level first.
 #[derive(Default)]
 pub struct LeveledStorage {
-    pub levels: Vec<Vec<FinalStorage>>,
+    pub levels: Vec<Vec<LogicalRun>>,
+}
+
+/// Assemble one level's flat gen list into logical runs: a maximal
+/// contiguous slice matching a [`PartitionGroup`]'s gens becomes one
+/// partitioned run; everything else is a singleton.  (The committer
+/// always writes a group's gens contiguously and in key order, so a
+/// non-contiguous group — a corrupt manifest — degrades to singletons,
+/// which still reads correctly, just without bound pruning.)
+fn group_level(
+    level: &[u64],
+    partitions: &[PartitionGroup],
+    take: &mut impl FnMut(u64) -> FinalStorage,
+) -> Vec<LogicalRun> {
+    let group_of: std::collections::HashMap<u64, usize> = partitions
+        .iter()
+        .enumerate()
+        .flat_map(|(gi, p)| p.gens.iter().map(move |&g| (g, gi)))
+        .collect();
+    let mut runs = Vec::new();
+    let mut i = 0;
+    while i < level.len() {
+        let g = level[i];
+        if let Some(&gi) = group_of.get(&g) {
+            let grp = &partitions[gi];
+            if level[i..].starts_with(&grp.gens) {
+                let parts = grp.gens.iter().map(|&g| take(g)).collect();
+                runs.push(LogicalRun { parts, bounds: grp.bounds.clone() });
+                i += grp.gens.len();
+                continue;
+            }
+        }
+        runs.push(LogicalRun::single(take(g)));
+        i += 1;
+    }
+    runs
 }
 
 impl LeveledStorage {
     pub fn open(dir: &Path, gens: &[Vec<u64>]) -> Result<Self> {
-        Self::open_reusing(dir, gens, &mut Self::default())
+        Self::open_partitioned(dir, gens, &[])
+    }
+
+    pub fn open_partitioned(
+        dir: &Path,
+        gens: &[Vec<u64>],
+        partitions: &[PartitionGroup],
+    ) -> Result<Self> {
+        Self::open_reusing(dir, gens, partitions, &mut Self::default())
     }
 
     /// Open the stack described by `gens`, adopting already-open run
@@ -214,9 +409,13 @@ impl LeveledStorage {
     /// consumed, so on error the caller's stack is left untouched —
     /// the engine must keep serving reads from the committed stack if
     /// a manifest swap fails mid-way.
-    pub fn open_reusing(dir: &Path, gens: &[Vec<u64>], prev: &mut Self) -> Result<Self> {
-        let held: std::collections::HashSet<u64> =
-            prev.runs_newest_first().map(|r| r.gen).collect();
+    pub fn open_reusing(
+        dir: &Path,
+        gens: &[Vec<u64>],
+        partitions: &[PartitionGroup],
+        prev: &mut Self,
+    ) -> Result<Self> {
+        let held: std::collections::HashSet<u64> = prev.subruns().map(|r| r.gen).collect();
         let mut fresh: std::collections::HashMap<u64, FinalStorage> =
             std::collections::HashMap::new();
         for &g in gens.iter().flatten() {
@@ -231,17 +430,14 @@ impl LeveledStorage {
             .levels
             .into_iter()
             .flatten()
+            .flat_map(|r| r.parts)
             .map(|r| (r.gen, r))
             .collect();
         pool.extend(fresh);
+        let mut take = |g: u64| pool.remove(&g).expect("run pre-opened or adopted");
         let levels = gens
             .iter()
-            .map(|level| {
-                level
-                    .iter()
-                    .map(|g| pool.remove(g).expect("run pre-opened or adopted"))
-                    .collect()
-            })
+            .map(|level| group_level(level, partitions, &mut take))
             .collect();
         Ok(Self { levels })
     }
@@ -250,29 +446,37 @@ impl LeveledStorage {
         self.levels.iter().all(|l| l.is_empty())
     }
 
+    /// Total physical sub-runs (a partitioned run counts each part).
     pub fn run_count(&self) -> usize {
-        self.levels.iter().map(|l| l.len()).sum()
+        self.levels.iter().flatten().map(|r| r.parts.len()).sum()
     }
 
     pub fn level_count(&self) -> usize {
         self.levels.iter().filter(|l| !l.is_empty()).count()
     }
 
-    /// Runs in read-precedence order: shallowest level first, newest
-    /// run first within a level.
-    pub fn runs_newest_first(&self) -> impl Iterator<Item = &FinalStorage> {
+    /// Logical runs in read-precedence order: shallowest level first,
+    /// newest run first within a level.
+    pub fn runs_newest_first(&self) -> impl Iterator<Item = &LogicalRun> {
         self.levels.iter().flatten()
     }
 
-    /// Runs in merge-precedence order for scans: oldest first, so a
-    /// BTreeMap insert sweep lets newer runs overwrite older keys.
-    pub fn runs_oldest_first(&self) -> impl Iterator<Item = &FinalStorage> {
+    /// Logical runs in merge-precedence order for scans: oldest first,
+    /// so a BTreeMap insert sweep lets newer runs overwrite older keys.
+    pub fn runs_oldest_first(&self) -> impl Iterator<Item = &LogicalRun> {
         self.levels.iter().rev().flat_map(|l| l.iter().rev())
     }
 
-    /// Point lookup, newest-first.  The first run containing the key
-    /// wins — a retained tombstone (`value == None`) masks every older
-    /// run, exactly like the LSM chain above it.
+    /// Every physical sub-run, in no particular precedence order
+    /// (bookkeeping walks: open-handle adoption, byte counting).
+    pub fn subruns(&self) -> impl Iterator<Item = &FinalStorage> {
+        self.levels.iter().flatten().flat_map(|r| r.parts.iter())
+    }
+
+    /// Point lookup, newest-first.  The first logical run containing
+    /// the key wins — a retained tombstone (`value == None`) masks
+    /// every older run, exactly like the LSM chain above it.  Within a
+    /// partitioned run only the sub-run owning the key is consulted.
     pub fn get(&self, key: &[u8]) -> Result<Option<VEntry>> {
         for run in self.runs_newest_first() {
             if let Some(e) = run.get(key)? {
@@ -282,10 +486,10 @@ impl LeveledStorage {
         Ok(None)
     }
 
-    /// Batched point lookup: each run is consulted once with the still
-    /// unresolved subset of keys (offset-ordered verification inside
-    /// [`FinalStorage::multi_get`]); a hit — value or tombstone —
-    /// settles the key so deeper runs never see it.
+    /// Batched point lookup: each logical run is consulted once with
+    /// the still unresolved subset of keys (offset-ordered
+    /// verification inside [`FinalStorage::multi_get`]); a hit — value
+    /// or tombstone — settles the key so deeper runs never see it.
     pub fn multi_get(&self, keys: &[&[u8]]) -> Result<Vec<Option<VEntry>>> {
         let mut out: Vec<Option<VEntry>> = vec![None; keys.len()];
         let mut pending: Vec<usize> = (0..keys.len()).collect();
@@ -322,12 +526,66 @@ mod tests {
             levels: vec![vec![5, 3], vec![], vec![1]],
             next_gen: 6,
             run_tombstones: [(5, 2), (3, 0), (1, 7)].into_iter().collect(),
+            partitions: Vec::new(),
         };
         m.save(&dir).unwrap();
         assert_eq!(LevelManifest::load(&dir).unwrap(), Some(m.clone()));
         assert_eq!(m.all_gens(), vec![5, 3, 1]);
         assert!(!m.is_empty());
         assert!(LevelManifest::default().is_empty());
+    }
+
+    /// A manifest carrying partitioned runs round-trips, and dropping
+    /// a group member from the stack drops the whole group.
+    #[test]
+    fn partitioned_manifest_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("nezha-manifest-part-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let grp = PartitionGroup {
+            gens: vec![7, 8, 9],
+            bounds: vec![b"g".to_vec(), b"p".to_vec()],
+        };
+        let mut m = LevelManifest {
+            levels: vec![vec![10], vec![7, 8, 9]],
+            next_gen: 11,
+            run_tombstones: [(7, 1)].into_iter().collect(),
+            partitions: vec![grp.clone()],
+        };
+        m.save(&dir).unwrap();
+        assert_eq!(LevelManifest::load(&dir).unwrap(), Some(m.clone()));
+        // Superseding gen 8 invalidates the whole group.
+        m.levels = vec![vec![10], vec![7, 9]];
+        m.retain_live_partitions();
+        assert!(m.partitions.is_empty());
+        assert_eq!(
+            PartitionGroup::part_for(&grp.bounds, b"a"),
+            0,
+            "keys below the first bound route to part 0"
+        );
+        assert_eq!(PartitionGroup::part_for(&grp.bounds, b"g"), 1);
+        assert_eq!(PartitionGroup::part_for(&grp.bounds, b"z"), 2);
+    }
+
+    /// A manifest written before partitioned runs existed (levels +
+    /// tombstone counts, no trailing partition section) still loads,
+    /// with every run read as a singleton.
+    #[test]
+    fn pre_partition_manifest_still_loads() {
+        let dir =
+            std::env::temp_dir().join(format!("nezha-manifest-prepart-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut e = Encoder::new();
+        e.u64(MANIFEST_MAGIC).u64(5);
+        let stack = vec![vec![4], vec![2]];
+        encode_levels(&mut e, &stack);
+        encode_tombstone_counts(&mut e, &[(4, 3)].into_iter().collect());
+        save_framed(&dir, MANIFEST_FILE, &e.into_vec()).unwrap();
+        let m = LevelManifest::load(&dir).unwrap().expect("pre-partition manifest loads");
+        assert_eq!(m.levels, stack);
+        assert_eq!(m.next_gen, 5);
+        assert!(m.partitions.is_empty());
     }
 
     /// A manifest written before per-run tombstone counts existed (no

@@ -36,14 +36,23 @@
 //! only when a merge's output becomes the bottom of the stack.
 
 pub mod levels;
+pub mod pool;
 
 use crate::util::{Decoder, Encoder};
 use crate::vlog::{Entry as VEntry, HashIndex, SortedVLog, SortedVLogWriter, VLogReader};
 use anyhow::{Context, Result};
-use levels::{decode_levels, encode_levels, level_budget, load_framed, save_framed};
+use levels::{
+    decode_levels, decode_partitions, encode_levels, encode_partitions, level_budget,
+    load_framed, save_framed, PartitionGroup,
+};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+
+/// Ceiling on key-range partitions per level merge (matches the GC
+/// pool's worker ceiling — more partitions than workers only adds seal
+/// overhead).
+pub const MAX_PARTS: usize = 8;
 
 /// The request-processing phase (Table I).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -131,6 +140,9 @@ pub struct GcState {
     /// Runs absent from the map (pre-upgrade flag files) read as
     /// "unknown" and are conservatively treated as tombstone-carrying.
     pub run_tombstones: std::collections::BTreeMap<u64, u64>,
+    /// Partition groups of the committed stack at cycle start, so a
+    /// resumed cycle replans with the same logical-run structure.
+    pub partitions: Vec<PartitionGroup>,
 }
 
 impl GcState {
@@ -151,6 +163,7 @@ impl GcState {
             .u64(self.last_term);
         encode_levels(&mut e, &self.stack);
         levels::encode_tombstone_counts(&mut e, &self.run_tombstones);
+        encode_partitions(&mut e, &self.partitions);
         save_framed(dir, "GC_STATE", &e.into_vec())
     }
 
@@ -177,6 +190,7 @@ impl GcState {
                 last_term: d.u64()?,
                 stack: Vec::new(),
                 run_tombstones: Default::default(),
+                partitions: Vec::new(),
             }));
         }
         let running = d.u8()? != 0;
@@ -187,9 +201,11 @@ impl GcState {
         let last_index = d.u64()?;
         let last_term = d.u64()?;
         let stack = decode_levels(&mut d)?;
-        // Flag files written before tombstone counts end here; the
-        // empty map reads as "unknown" downstream.
+        // Flag files written before tombstone counts (or partition
+        // groups) end early; the empty collections read as "unknown" /
+        // "all singletons" downstream.
         let run_tombstones = levels::decode_tombstone_counts(&mut d)?;
+        let partitions = decode_partitions(&mut d)?;
         Ok(Some(Self {
             running,
             min_epoch,
@@ -200,6 +216,7 @@ impl GcState {
             last_term,
             stack,
             run_tombstones,
+            partitions,
         }))
     }
 
@@ -390,6 +407,16 @@ pub struct GcOutput {
     pub last_term: u64,
     pub wall_ms: u64,
     pub index_backend: &'static str,
+    /// Partition groups of the resulting stack (parallel merges leave
+    /// their outputs as key-disjoint sub-runs of one logical run).
+    pub partitions: Vec<PartitionGroup>,
+    /// Largest partition fan-out any merge in this output used (1 =
+    /// every merge was a single-run rewrite, 0 = no merges).
+    pub parts: u64,
+    /// True when this output reports a decoupled background merge job
+    /// rather than a flush cycle (no epochs to reclaim — the stack
+    /// just got cheaper).
+    pub is_merge_job: bool,
 }
 
 /// One frozen ValueLog file feeding a cycle's flush: the epoch id, its
@@ -427,6 +454,17 @@ pub struct GcInputs {
     /// L0 size budget; level `d` gets `level0_bytes * fanout^d`.
     pub level0_bytes: u64,
     pub fanout: u64,
+    /// Partition groups of the committed stack at cycle start.
+    pub partitions: Vec<PartitionGroup>,
+    /// Target source bytes per merge partition: a level merge splits
+    /// into `ceil(total / partition_bytes)` key ranges (≤ [`MAX_PARTS`]).
+    /// `u64::MAX` disables partitioning.  Derived from immutable sealed
+    /// file sizes, so the plan — and the resulting byte-identical stack
+    /// — is independent of worker count and stable across resume.
+    pub partition_bytes: u64,
+    /// Max partitions merged concurrently (1 = serial; concurrency
+    /// never changes the plan, only the wall clock).
+    pub workers: usize,
     /// Resume partially-written outputs (crash recovery).
     pub resume: bool,
     pub backend: Arc<dyn IndexBackend>,
@@ -546,12 +584,15 @@ fn flush_epochs(
 }
 
 /// K-way merge of the sorted runs `src_gens` (newest first — the
-/// first source holding a key wins) into the run `out_gen`.
+/// first source holding a key wins) into the run `out_gen`, restricted
+/// to keys in `[lo, hi)` (`None` = unbounded on that side).
 /// Tombstones are dropped only when `annihilate`.
-fn merge_runs(
+fn merge_runs_range(
     dir: &Path,
     src_gens: &[u64],
     out_gen: u64,
+    lo: Option<&[u8]>,
+    hi: Option<&[u8]>,
     annihilate: bool,
     resume: bool,
     backend: &Arc<dyn IndexBackend>,
@@ -577,13 +618,37 @@ fn merge_runs(
         }
     }
 
+    // A head at or past `hi` exhausts its source (the file is sorted).
+    let clamp = |h: Option<VEntry>| match (&h, hi) {
+        (Some(e), Some(hi)) if e.key.as_slice() >= hi => None,
+        _ => h,
+    };
+
     // Owned per-source heads instead of Peekable: comparisons borrow
     // the heads, so picking a winner costs zero key clones per output
-    // entry even at bottom-level merge sizes.
-    let mut iters: Vec<_> = logs.iter().map(|l| l.iter()).collect();
+    // entry even at bottom-level merge sizes.  A partition (`lo` set)
+    // seeks each source near `lo` via its sparse index samples, then
+    // skips the few sample-granularity entries below it.
+    let mut iters: Vec<_> = Vec::with_capacity(logs.len());
+    for (i, l) in logs.iter().enumerate() {
+        match lo {
+            None => iters.push(l.iter()),
+            Some(lo) => {
+                let idx = HashIndex::load(&index_path(dir, src_gens[i]))
+                    .context("merge partition source index")?;
+                iters.push(l.iter_from(idx.scan_start(lo)));
+            }
+        }
+    }
     let mut heads: Vec<Option<VEntry>> = Vec::with_capacity(iters.len());
     for it in &mut iters {
-        heads.push(next_entry(it)?);
+        let mut h = next_entry(it)?;
+        if let Some(lo) = lo {
+            while h.as_ref().is_some_and(|e| e.key.as_slice() < lo) {
+                h = next_entry(it)?;
+            }
+        }
+        heads.push(clamp(h));
     }
     loop {
         // Smallest key across sources; ties go to the newest (lowest
@@ -608,10 +673,10 @@ fn merge_runs(
             }
             // Superseded by a newer run.
             while heads[i].as_ref().is_some_and(|h| h.key == e.key) {
-                heads[i] = next_entry(it)?;
+                heads[i] = clamp(next_entry(it)?);
             }
         }
-        heads[wi] = next_entry(&mut iters[wi])?;
+        heads[wi] = clamp(next_entry(&mut iters[wi])?);
         if annihilate && e.value.is_none() {
             continue;
         }
@@ -623,76 +688,311 @@ fn merge_runs(
     seal_run(dir, out_gen, w, backend)
 }
 
-/// Run one GC cycle to completion: flush the frozen epochs into a new
-/// L0 run, then merge any level that exceeds its budget into the next
-/// one.  Deterministic given `GcInputs`, so crash recovery simply
-/// re-runs it with `resume = true`.
-pub fn run_gc(inp: &GcInputs) -> Result<GcOutput> {
-    let t0 = std::time::Instant::now();
+/// Serial (single-output) level merge — the reference semantics every
+/// partitioned merge must reproduce.
+fn merge_runs(
+    dir: &Path,
+    src_gens: &[u64],
+    out_gen: u64,
+    annihilate: bool,
+    resume: bool,
+    backend: &Arc<dyn IndexBackend>,
+) -> Result<(u64, u64, u64)> {
+    merge_runs_range(dir, src_gens, out_gen, None, None, annihilate, resume, backend)
+}
 
-    // (1) Flush.  The flush run may annihilate tombstones only if the
-    // stack is empty (it becomes the bottom level).
-    let stack_empty = inp.stack.iter().all(|l| l.is_empty());
-    let (flush_bytes, entries, flush_tombs, skip_offsets) = flush_epochs(inp, stack_empty)?;
-
-    // (2) Push onto L0 and replan the levels.
-    let mut stack: Vec<Vec<u64>> = inp.stack.clone();
-    if stack.is_empty() {
-        stack.push(Vec::new());
+/// Number of key-range partitions for a merge over `total_bytes` of
+/// source data.  Derived only from immutable sealed-file sizes, so the
+/// count is identical on resume and independent of worker config.
+fn partition_count(total_bytes: u64, partition_bytes: u64) -> usize {
+    if partition_bytes == 0 || partition_bytes == u64::MAX {
+        return 1;
     }
-    stack[0].insert(0, inp.out_gen);
-    let mut written = vec![inp.out_gen];
-    // Known tombstone counts: the committed stack's plus every run
-    // this cycle writes.  Runs absent from the map read as "unknown"
-    // and are conservatively treated as tombstone-carrying.
-    let mut tombs = inp.run_tombstones.clone();
-    tombs.insert(inp.out_gen, flush_tombs);
-    let mut written_tombs: Vec<(u64, u64)> = vec![(inp.out_gen, flush_tombs)];
-    let mut next_gen = inp.out_gen + 1;
-    let mut merge_bytes = 0u64;
-    let mut merges = 0u64;
-    let run_size = |gen: u64| -> u64 {
-        std::fs::metadata(sorted_path(&inp.dir, gen)).map_or(0, |m| m.len())
-    };
+    (total_bytes.div_ceil(partition_bytes) as usize).clamp(1, MAX_PARTS)
+}
 
-    // (3) Budget maintenance, shallowest level first.  Merging level
-    // `i` into `i + 1` may push that level over ITS budget, so the
-    // sweep continues downward (the classic leveled cascade).
-    let mut i = 0;
-    while i < stack.len() {
+/// Key-range separators for a `k`-way partitioned merge, drawn from
+/// the source runs' sparse index samples (durable with the sealed
+/// runs, so a resumed merge reconstructs the identical plan).  May
+/// return fewer than `k - 1` bounds when the samples cannot support
+/// `k` distinct non-empty ranges.
+fn partition_bounds(dir: &Path, src_gens: &[u64], k: usize) -> Result<Vec<Vec<u8>>> {
+    if k <= 1 {
+        return Ok(Vec::new());
+    }
+    let mut samples: Vec<Vec<u8>> = Vec::new();
+    for &g in src_gens {
+        let idx = HashIndex::load(&index_path(dir, g)).context("partition bounds index")?;
+        samples.extend(idx.sample_keys().map(|key| key.to_vec()));
+    }
+    samples.sort_unstable();
+    samples.dedup();
+    let mut bounds: Vec<Vec<u8>> = Vec::with_capacity(k - 1);
+    for j in 1..k {
+        let idx = (j * samples.len()) / k;
+        if idx == 0 {
+            continue; // a bound at the global min key yields an empty part
+        }
+        bounds.push(samples[idx].clone());
+    }
+    bounds.dedup();
+    Ok(bounds)
+}
+
+/// Execute a level merge as `out_gens.len()` key-range partitions on
+/// the shared GC [`pool`], at most `workers` in flight.  Partition `j`
+/// writes keys in `[bounds[j - 1], bounds[j])`; the concatenation of
+/// the outputs is logically identical to the serial [`merge_runs`]
+/// output (same sources, same winner rule, disjoint ranges).  Returns
+/// `(bytes, entries, tombstones)` per partition in key order.
+fn merge_runs_partitioned(
+    dir: &Path,
+    src_gens: &[u64],
+    out_gens: &[u64],
+    bounds: &[Vec<u8>],
+    annihilate: bool,
+    resume: bool,
+    backend: &Arc<dyn IndexBackend>,
+    workers: usize,
+) -> Result<Vec<(u64, u64, u64)>> {
+    anyhow::ensure!(out_gens.len() == bounds.len() + 1, "partition plan shape");
+    if out_gens.len() == 1 {
+        let r =
+            merge_runs_range(dir, src_gens, out_gens[0], None, None, annihilate, resume, backend)?;
+        return Ok(vec![r]);
+    }
+    let tasks: Vec<_> = out_gens
+        .iter()
+        .enumerate()
+        .map(|(j, &out)| {
+            let dir = dir.to_path_buf();
+            let srcs = src_gens.to_vec();
+            let lo = (j > 0).then(|| bounds[j - 1].clone());
+            let hi = bounds.get(j).cloned();
+            let backend = backend.clone();
+            move || {
+                merge_runs_range(
+                    &dir,
+                    &srcs,
+                    out,
+                    lo.as_deref(),
+                    hi.as_deref(),
+                    annihilate,
+                    resume,
+                    &backend,
+                )
+                .with_context(|| format!("merge partition {j} (gen {out})"))
+            }
+        })
+        .collect();
+    pool::shared().run_parallel(workers, tasks).into_iter().collect()
+}
+
+/// The `GC_MERGE` flag file: a decoupled level-merge job in flight.
+pub const MERGE_JOB_FILE: &str = "GC_MERGE";
+
+/// One decoupled level-merge job: everything needed to execute,
+/// resume, and commit the merge independently of the GC cycle that
+/// scheduled it.  Persisted as [`MERGE_JOB_FILE`] before the first
+/// byte is written, so a crash mid-merge resumes the *identical* plan
+/// (same sources, bounds and output gens ⇒ byte-identical outputs)
+/// even if the partitioning config changed across the restart.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MergeJob {
+    /// Level being merged into `level + 1`.
+    pub level: usize,
+    /// Sources in read-precedence order (level runs, then next-level).
+    pub srcs: Vec<u64>,
+    /// Partition outputs in ascending key order.
+    pub out_gens: Vec<u64>,
+    /// Key-range separators between adjacent outputs
+    /// (`out_gens.len() - 1`).
+    pub bounds: Vec<Vec<u8>>,
+    pub annihilate: bool,
+    /// Snapshot point of the newest source (resume header gate).
+    pub last_index: u64,
+    pub last_term: u64,
+    /// Level stack once this job commits.
+    pub stack_after: Vec<Vec<u64>>,
+    /// Partition groups once this job commits.
+    pub parts_after: Vec<PartitionGroup>,
+}
+
+impl MergeJob {
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let mut e = Encoder::with_capacity(128);
+        e.varint(self.level as u64);
+        e.varint(self.srcs.len() as u64);
+        for g in &self.srcs {
+            e.u64(*g);
+        }
+        e.varint(self.out_gens.len() as u64);
+        for g in &self.out_gens {
+            e.u64(*g);
+        }
+        for b in &self.bounds {
+            e.len_bytes(b);
+        }
+        e.u8(self.annihilate as u8).u64(self.last_index).u64(self.last_term);
+        encode_levels(&mut e, &self.stack_after);
+        encode_partitions(&mut e, &self.parts_after);
+        save_framed(dir, MERGE_JOB_FILE, &e.into_vec())
+    }
+
+    pub fn load(dir: &Path) -> Result<Option<Self>> {
+        let Some(body) = load_framed(dir, MERGE_JOB_FILE)? else {
+            return Ok(None);
+        };
+        let mut d = Decoder::new(&body);
+        let level = d.varint()? as usize;
+        let nsrcs = d.varint()? as usize;
+        let mut srcs = Vec::with_capacity(nsrcs);
+        for _ in 0..nsrcs {
+            srcs.push(d.u64()?);
+        }
+        let nouts = d.varint()? as usize;
+        anyhow::ensure!(nouts >= 1, "merge job without outputs");
+        let mut out_gens = Vec::with_capacity(nouts);
+        for _ in 0..nouts {
+            out_gens.push(d.u64()?);
+        }
+        let mut bounds = Vec::with_capacity(nouts - 1);
+        for _ in 0..nouts - 1 {
+            bounds.push(d.len_bytes()?.to_vec());
+        }
+        let annihilate = d.u8()? != 0;
+        let last_index = d.u64()?;
+        let last_term = d.u64()?;
+        let stack_after = decode_levels(&mut d)?;
+        let parts_after = decode_partitions(&mut d)?;
+        Ok(Some(Self {
+            level,
+            srcs,
+            out_gens,
+            bounds,
+            annihilate,
+            last_index,
+            last_term,
+            stack_after,
+            parts_after,
+        }))
+    }
+
+    pub fn clear(dir: &Path) -> Result<()> {
+        match std::fs::remove_file(dir.join(MERGE_JOB_FILE)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Execute the merge (blocking the calling thread; partitions fan
+    /// out to the shared GC pool).  Returns per-partition `(bytes,
+    /// entries, tombstones)` in key order.
+    pub fn execute(
+        &self,
+        dir: &Path,
+        resume: bool,
+        backend: &Arc<dyn IndexBackend>,
+        workers: usize,
+    ) -> Result<Vec<(u64, u64, u64)>> {
+        merge_runs_partitioned(
+            dir,
+            &self.srcs,
+            &self.out_gens,
+            &self.bounds,
+            self.annihilate,
+            resume,
+            backend,
+            workers,
+        )
+        .with_context(|| format!("merge level {} -> {}", self.level, self.level + 1))
+    }
+}
+
+/// The budget planner's next maintenance action for a committed stack.
+#[derive(Debug)]
+pub enum GcStep {
+    /// Every level is within budget.
+    Done,
+    /// Metadata-only slide of an over-budget single-run level into the
+    /// (empty) next level.
+    Trivial { stack_after: Vec<Vec<u64>> },
+    /// A rewrite merge, packaged as an independently committable job.
+    Merge(Box<MergeJob>),
+}
+
+/// Logical runs in a level's flat gen list: singletons plus partition
+/// groups (a group's sub-runs together count as one run).
+fn logical_run_count(level: &[u64], partitions: &[PartitionGroup]) -> usize {
+    let mut n = 0usize;
+    let mut seen: Vec<usize> = Vec::new();
+    for g in level {
+        match partitions.iter().position(|p| p.gens.contains(g)) {
+            None => n += 1,
+            Some(gi) if !seen.contains(&gi) => {
+                seen.push(gi);
+                n += 1;
+            }
+            Some(_) => {}
+        }
+    }
+    n
+}
+
+/// Find the shallowest over-budget level and decide its maintenance
+/// step — the single planning rule shared by the in-cycle cascade
+/// ([`run_gc`]) and the engine's decoupled background merge jobs, so
+/// both paths produce the identical (resumable) plan from a committed
+/// stack.  Planning inputs are all immutable once sealed: run file
+/// sizes, sparse index samples, and the recorded tombstone counts.
+pub fn plan_step(
+    dir: &Path,
+    stack: &[Vec<u64>],
+    partitions: &[PartitionGroup],
+    run_tombstones: &BTreeMap<u64, u64>,
+    level0_bytes: u64,
+    fanout: u64,
+    partition_bytes: u64,
+    next_gen: u64,
+) -> Result<GcStep> {
+    let run_size =
+        |gen: u64| -> u64 { std::fs::metadata(sorted_path(dir, gen)).map_or(0, |m| m.len()) };
+    for i in 0..stack.len() {
         let size: u64 = stack[i].iter().map(|&g| run_size(g)).sum();
-        if size <= level_budget(inp.level0_bytes, inp.fanout, i) {
-            i += 1;
+        if size <= level_budget(level0_bytes, fanout, i) {
             continue;
         }
         let next_empty = stack.get(i + 1).is_none_or(|l| l.is_empty());
-        if next_empty && stack[i].len() <= 1 {
-            let becomes_bottom = stack
-                .get(i + 2..)
-                .is_none_or(|rest| rest.iter().all(|l| l.is_empty()));
-            let run_tombs = stack[i]
-                .first()
-                .map(|g| tombs.get(g).copied().unwrap_or(1))
-                .unwrap_or(0);
+        if next_empty && logical_run_count(&stack[i], partitions) <= 1 {
+            let becomes_bottom =
+                stack.get(i + 2..).is_none_or(|rest| rest.iter().all(|l| l.is_empty()));
+            let run_tombs: u64 = stack[i]
+                .iter()
+                .map(|g| run_tombstones.get(g).copied().unwrap_or(1))
+                .sum();
             if !(becomes_bottom && run_tombs > 0) {
-                // Trivial move: a single over-budget run with nothing
-                // at the next level slides down (metadata only, no
-                // rewrite) until its depth's budget holds it — read
-                // precedence and tombstone semantics are unchanged by
-                // depth alone.  Tombstone-free runs take this path
-                // even when the slide lands them at the stack bottom.
-                let runs = std::mem::take(&mut stack[i]);
-                if i + 1 >= stack.len() {
-                    stack.push(Vec::new());
+                // Trivial move: a single over-budget (logical) run with
+                // nothing at the next level slides down — metadata
+                // only, no rewrite; partition-group membership is by
+                // gen, so a partitioned run slides intact.  Tombstone-
+                // free runs take this path even when the slide lands
+                // them at the stack bottom.
+                let mut after = stack.to_vec();
+                let runs = std::mem::take(&mut after[i]);
+                if i + 1 >= after.len() {
+                    after.push(Vec::new());
                 }
-                stack[i + 1] = runs;
-                i += 1;
-                continue;
+                after[i + 1] = runs;
+                while after.last().is_some_and(|l| l.is_empty()) {
+                    after.pop();
+                }
+                return Ok(GcStep::Trivial { stack_after: after });
             }
             // A tombstone-carrying run about to become the new stack
-            // bottom: fall through to the single-source merge below,
-            // which rewrites it with `annihilate` so its tombstones
-            // stop wasting space (they mask nothing down there).
+            // bottom: fall through to the merge below, which rewrites
+            // it with `annihilate` so its tombstones stop wasting
+            // space (they mask nothing down there).
         }
         let mut srcs = stack[i].clone();
         if let Some(next) = stack.get(i + 1) {
@@ -700,45 +1000,140 @@ pub fn run_gc(inp: &GcInputs) -> Result<GcOutput> {
         }
         // Tombstones annihilate only when the output becomes the
         // bottom of the stack.
-        let annihilate = stack
-            .get(i + 2..)
-            .is_none_or(|rest| rest.iter().all(|l| l.is_empty()));
-        let out = next_gen;
-        next_gen += 1;
-        let (b, _, t) = merge_runs(&inp.dir, &srcs, out, annihilate, inp.resume, &inp.backend)
-            .with_context(|| format!("merge level {i} -> {}", i + 1))?;
-        merge_bytes += b;
-        merges += 1;
-        written.push(out);
-        tombs.insert(out, t);
-        written_tombs.push((out, t));
-        stack[i] = Vec::new();
-        if i + 1 >= stack.len() {
-            stack.push(Vec::new());
+        let annihilate = stack.get(i + 2..).is_none_or(|rest| rest.iter().all(|l| l.is_empty()));
+        let total: u64 = srcs.iter().map(|&g| run_size(g)).sum();
+        let k = partition_count(total, partition_bytes);
+        let bounds = partition_bounds(dir, &srcs, k)?;
+        let out_gens: Vec<u64> = (0..bounds.len() as u64 + 1).map(|j| next_gen + j).collect();
+        // The merged run covers up to the newest input's snapshot point.
+        let newest = SortedVLog::open(&sorted_path(dir, srcs[0]))?;
+        let mut after = stack.to_vec();
+        after[i] = Vec::new();
+        if i + 1 >= after.len() {
+            after.push(Vec::new());
         }
-        stack[i + 1] = vec![out];
-        i += 1;
+        after[i + 1] = out_gens.clone();
+        while after.last().is_some_and(|l| l.is_empty()) {
+            after.pop();
+        }
+        let live: std::collections::HashSet<u64> = after.iter().flatten().copied().collect();
+        let mut parts_after: Vec<PartitionGroup> = partitions
+            .iter()
+            .filter(|p| p.gens.iter().all(|g| live.contains(g)))
+            .cloned()
+            .collect();
+        if out_gens.len() > 1 {
+            parts_after.push(PartitionGroup { gens: out_gens.clone(), bounds: bounds.clone() });
+        }
+        return Ok(GcStep::Merge(Box::new(MergeJob {
+            level: i,
+            srcs,
+            out_gens,
+            bounds,
+            annihilate,
+            last_index: newest.last_index,
+            last_term: newest.last_term,
+            stack_after: after,
+            parts_after,
+        })));
     }
-    while stack.last().is_some_and(|l| l.is_empty()) {
-        stack.pop();
-    }
+    Ok(GcStep::Done)
+}
 
+/// Flush the frozen epochs into the L0 run and return the cycle's
+/// [`GcOutput`] *without* performing any level merges — the decoupled
+/// engine path: the cycle commits (epochs reclaim, put path unblocks)
+/// as soon as this lands, and over-budget merges become independently
+/// scheduled [`MergeJob`]s.  Deterministic given `GcInputs`, so crash
+/// recovery simply re-runs it with `resume = true`.
+pub fn run_flush(inp: &GcInputs) -> Result<GcOutput> {
+    let t0 = std::time::Instant::now();
+    // The flush run may annihilate tombstones only if the stack is
+    // empty (it becomes the bottom level).
+    let stack_empty = inp.stack.iter().all(|l| l.is_empty());
+    let (flush_bytes, entries, flush_tombs, skip_offsets) = flush_epochs(inp, stack_empty)?;
+    let mut stack: Vec<Vec<u64>> = inp.stack.clone();
+    if stack.is_empty() {
+        stack.push(Vec::new());
+    }
+    stack[0].insert(0, inp.out_gen);
     Ok(GcOutput {
         gen: inp.out_gen,
         entries,
         flush_bytes,
-        merge_bytes,
-        bytes_written: flush_bytes + merge_bytes,
-        merges,
+        merge_bytes: 0,
+        bytes_written: flush_bytes,
+        merges: 0,
         levels: stack,
-        written_gens: written,
-        run_tombstones: written_tombs,
+        written_gens: vec![inp.out_gen],
+        run_tombstones: vec![(inp.out_gen, flush_tombs)],
         skip_offsets,
         last_index: inp.last_index,
         last_term: inp.last_term,
         wall_ms: t0.elapsed().as_millis() as u64,
         index_backend: inp.backend.name(),
+        partitions: inp.partitions.clone(),
+        parts: 0,
+        is_merge_job: false,
     })
+}
+
+/// Run one GC cycle to completion: flush the frozen epochs into a new
+/// L0 run, then merge any level that exceeds its budget into the next
+/// one ([`plan_step`] repeated until every level fits — the classic
+/// leveled cascade).  Deterministic given `GcInputs`, so crash
+/// recovery simply re-runs it with `resume = true`: the plan depends
+/// only on sealed-file sizes and index samples, and every partition
+/// output resumes from its own partial file.
+pub fn run_gc(inp: &GcInputs) -> Result<GcOutput> {
+    let t0 = std::time::Instant::now();
+    let mut out = run_flush(inp)?;
+    let mut stack = out.levels.clone();
+    let mut partitions = inp.partitions.clone();
+    // Known tombstone counts: the committed stack's plus every run
+    // this cycle writes.  Runs absent from the map read as "unknown"
+    // and are conservatively treated as tombstone-carrying.
+    let mut tombs = inp.run_tombstones.clone();
+    tombs.insert(inp.out_gen, out.run_tombstones[0].1);
+    let mut next_gen = inp.out_gen + 1;
+    loop {
+        let step = plan_step(
+            &inp.dir,
+            &stack,
+            &partitions,
+            &tombs,
+            inp.level0_bytes,
+            inp.fanout,
+            inp.partition_bytes,
+            next_gen,
+        )?;
+        match step {
+            GcStep::Done => break,
+            GcStep::Trivial { stack_after } => stack = stack_after,
+            GcStep::Merge(job) => {
+                let parts = job.execute(&inp.dir, inp.resume, &inp.backend, inp.workers)?;
+                for (&gen, &(b, _, t)) in job.out_gens.iter().zip(parts.iter()) {
+                    out.merge_bytes += b;
+                    out.written_gens.push(gen);
+                    tombs.insert(gen, t);
+                    out.run_tombstones.push((gen, t));
+                }
+                out.merges += 1;
+                out.parts = out.parts.max(job.out_gens.len() as u64);
+                next_gen = next_gen.max(job.out_gens.iter().max().expect("outputs") + 1);
+                stack = job.stack_after;
+                partitions = job.parts_after;
+            }
+        }
+    }
+    while stack.last().is_some_and(|l| l.is_empty()) {
+        stack.pop();
+    }
+    out.levels = stack;
+    out.partitions = partitions;
+    out.bytes_written = out.flush_bytes + out.merge_bytes;
+    out.wall_ms = t0.elapsed().as_millis() as u64;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -786,13 +1181,16 @@ mod tests {
             last_term: 1,
             level0_bytes: u64::MAX, // no merges unless a test lowers it
             fanout: 10,
+            partitions: Vec::new(),
+            partition_bytes: u64::MAX, // single-partition merges by default
+            workers: 1,
             resume: false,
             backend: Arc::new(RustBackend),
         }
     }
 
     fn open_stack(dir: &Path, out: &GcOutput) -> LeveledStorage {
-        LeveledStorage::open(dir, &out.levels).unwrap()
+        LeveledStorage::open_partitioned(dir, &out.levels, &out.partitions).unwrap()
     }
 
     #[test]
@@ -1152,6 +1550,10 @@ mod tests {
             last_term: 4,
             stack: vec![vec![7, 5], vec![1]],
             run_tombstones: [(7, 0), (5, 12), (1, 3)].into_iter().collect(),
+            partitions: vec![PartitionGroup {
+                gens: vec![7, 5],
+                bounds: vec![b"m".to_vec()],
+            }],
         };
         st.save(&dir).unwrap();
         assert_eq!(GcState::load(&dir).unwrap(), Some(st));
@@ -1452,11 +1854,202 @@ mod tests {
         // Unknown counts (pre-upgrade manifest) are conservative: the
         // same move with no recorded count rewrites once.
         FinalStorage::remove_gen(&dir, 6);
-        let mut inp2 = inputs(&dir, write_epoch(&dir, &[VEntry::put(1, 2000, "zzz-new", "x")]),
-            vec![vec![], vec![5]], 6, 2000);
+        let v2 = write_epoch(&dir, &[VEntry::put(1, 2000, "zzz-new", "x")]);
+        let mut inp2 = inputs(&dir, v2, vec![vec![], vec![5]], 6, 2000);
         inp2.level0_bytes = run_bytes / 8;
         inp2.fanout = 4;
         let out2 = run_gc(&inp2).unwrap();
         assert_eq!(out2.merges, 1, "unknown count treated as tombstone-carrying");
+    }
+
+    #[test]
+    fn merge_job_flag_roundtrip() {
+        let dir = tmpdir("mergejob");
+        assert_eq!(MergeJob::load(&dir).unwrap(), None);
+        let bounds = vec![b"g".to_vec(), b"p".to_vec()];
+        let job = MergeJob {
+            level: 1,
+            srcs: vec![9, 7, 3],
+            out_gens: vec![10, 11, 12],
+            bounds: bounds.clone(),
+            annihilate: true,
+            last_index: 77,
+            last_term: 5,
+            stack_after: vec![vec![], vec![10, 11, 12]],
+            parts_after: vec![PartitionGroup { gens: vec![10, 11, 12], bounds }],
+        };
+        job.save(&dir).unwrap();
+        assert_eq!(MergeJob::load(&dir).unwrap(), Some(job.clone()));
+        // Single-output (unpartitioned) job: no bounds section at all.
+        let solo = MergeJob { out_gens: vec![10], bounds: Vec::new(), ..job };
+        solo.save(&dir).unwrap();
+        assert_eq!(MergeJob::load(&dir).unwrap(), Some(solo));
+        MergeJob::clear(&dir).unwrap();
+        assert_eq!(MergeJob::load(&dir).unwrap(), None);
+    }
+
+    /// Read the logical entry stream of a run sequence (key order
+    /// within each run; partition outputs concatenate in key order).
+    fn read_entries(dir: &Path, gens: &[u64]) -> Result<Vec<VEntry>> {
+        let mut out = Vec::new();
+        for &g in gens {
+            let log = SortedVLog::open(&sorted_path(dir, g))?;
+            for item in log.iter() {
+                out.push(item?.1);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Tentpole property: for random key distributions, tombstone
+    /// mixes and K ∈ {1, 2, 4, 8}, the concatenated outputs of a
+    /// partitioned merge are entry-identical to the serial
+    /// [`merge_runs`] output over the same sources — the invariant
+    /// that lets partition fan-out (and worker count) vary without
+    /// changing the committed stack's contents.
+    #[test]
+    fn partitioned_merge_matches_serial_property() {
+        crate::util::prop::check("partitioned-merge-eq-serial", 6, |g| {
+            let dir = tmpdir(&format!("partprop{:016x}", g.seed));
+            let inner = |g: &mut crate::util::prop::Gen| -> Result<()> {
+                let backend: Arc<dyn IndexBackend> = Arc::new(RustBackend);
+                // 2-3 overlapping source runs, newest first, sealed
+                // through the real path so index samples exist.
+                let nsrc = g.usize_in(2..4);
+                let src_gens: Vec<u64> = (1..=nsrc as u64).collect();
+                for (si, &gen) in src_gens.iter().enumerate() {
+                    let mut run: BTreeMap<Vec<u8>, VEntry> = BTreeMap::new();
+                    for i in 0..g.usize_in(50..220) {
+                        let key = g.key(1..7);
+                        let idx = (1000 * (nsrc - si) + i) as u64;
+                        let e = if g.chance(0.2) {
+                            VEntry::delete(1, idx, key.clone())
+                        } else {
+                            VEntry::put(1, idx, key.clone(), g.bytes(0..40))
+                        };
+                        run.insert(key, e);
+                    }
+                    let mut w = SortedVLogWriter::create(&sorted_path(&dir, gen), 1, 5000)?;
+                    for e in run.values() {
+                        w.add(e)?;
+                    }
+                    seal_run(&dir, gen, w, &backend)?;
+                }
+                let annihilate = g.bool();
+                let serial_gen = 100u64;
+                merge_runs(&dir, &src_gens, serial_gen, annihilate, false, &backend)?;
+                let want = read_entries(&dir, &[serial_gen])?;
+                for k in [1usize, 2, 4, 8] {
+                    let bounds = partition_bounds(&dir, &src_gens, k)?;
+                    anyhow::ensure!(bounds.len() < k, "k={k}: too many bounds");
+                    let base = 200 + 10 * k as u64;
+                    let out_gens: Vec<u64> =
+                        (0..bounds.len() as u64 + 1).map(|j| base + j).collect();
+                    let parts = merge_runs_partitioned(
+                        &dir,
+                        &src_gens,
+                        &out_gens,
+                        &bounds,
+                        annihilate,
+                        false,
+                        &backend,
+                        g.usize_in(1..4),
+                    )?;
+                    let got = read_entries(&dir, &out_gens)?;
+                    anyhow::ensure!(
+                        got == want,
+                        "k={k} annihilate={annihilate}: {} entries vs serial {}",
+                        got.len(),
+                        want.len()
+                    );
+                    let total_entries: u64 = parts.iter().map(|&(_, e, _)| e).sum();
+                    anyhow::ensure!(total_entries == want.len() as u64, "k={k}: entry counts");
+                }
+                Ok(())
+            };
+            let res = inner(g).map_err(|e| format!("seed {:#x}: {e:#}", g.seed));
+            let _ = std::fs::remove_dir_all(&dir);
+            res
+        });
+    }
+
+    /// Crash/resume mid-PARTITIONED-merge: cut one partition's output
+    /// mid-frame (and drop its index), re-run the cycle, and require
+    /// every partition file byte-identical to an uninterrupted
+    /// reference — each partition resumes from its own partial file
+    /// while sealed siblings re-verify as no-ops.
+    #[test]
+    fn resume_mid_partitioned_merge_is_byte_identical() {
+        let epoch0: Vec<VEntry> = (0..300u64)
+            .map(|i| {
+                VEntry::put(1, i + 1, format!("key{:04}", i * 7 % 300), vec![(i % 251) as u8; 100])
+            })
+            .collect();
+        let epoch1: Vec<VEntry> = (0..150u64)
+            .map(|i| {
+                if i % 11 == 3 {
+                    VEntry::delete(1, 301 + i, format!("key{:04}", i * 2))
+                } else {
+                    VEntry::put(1, 301 + i, format!("key{:04}", i * 2), vec![3u8; 100])
+                }
+            })
+            .collect();
+        let cycle2 = |dir: &Path| -> GcInputs {
+            let v1 = write_epoch_file(dir, 1, &epoch1);
+            let mut inp = inputs(dir, v1, vec![vec![1]], 2, 450);
+            inp.min_index = 300;
+            inp.level0_bytes = 1; // force the L0 -> L1 merge
+            inp.fanout = 1 << 20;
+            inp.partition_bytes = 8 << 10; // ~40 KiB of sources -> >1 part
+            inp.workers = 2;
+            inp
+        };
+        let ref_dir = tmpdir("pmerge-ref");
+        let v0 = write_epoch_file(&ref_dir, 0, &epoch0);
+        run_gc(&inputs(&ref_dir, v0, vec![], 1, 300)).unwrap();
+        let ref_out = run_gc(&cycle2(&ref_dir)).unwrap();
+        assert_eq!(ref_out.merges, 1);
+        assert!(ref_out.parts >= 2, "plan produced {} partitions", ref_out.parts);
+        assert_eq!(ref_out.partitions.len(), 1, "{:?}", ref_out.partitions);
+        let part_gens = ref_out.partitions[0].gens.clone();
+        assert_eq!(part_gens.len() as u64, ref_out.parts);
+
+        let dir = tmpdir("pmerge-crash");
+        let v0 = write_epoch_file(&dir, 0, &epoch0);
+        run_gc(&inputs(&dir, v0, vec![], 1, 300)).unwrap();
+        let mut inp = cycle2(&dir);
+        let out = run_gc(&inp).unwrap();
+        assert_eq!(out.levels, ref_out.levels);
+        assert_eq!(out.partitions, ref_out.partitions);
+        // Tear the SECOND partition's output mid-frame; its sealed
+        // siblings stay intact, as after a mid-merge crash.
+        let victim = part_gens[1];
+        let full = std::fs::read(sorted_path(&dir, victim)).unwrap();
+        assert_eq!(full, std::fs::read(sorted_path(&ref_dir, victim)).unwrap());
+        std::fs::write(sorted_path(&dir, victim), &full[..full.len() * 2 / 3]).unwrap();
+        let _ = std::fs::remove_file(index_path(&dir, victim));
+        inp.resume = true;
+        let out = run_gc(&inp).unwrap();
+        assert_eq!(out.levels, ref_out.levels);
+        assert_eq!(out.partitions, ref_out.partitions);
+        for &pg in &part_gens {
+            assert_eq!(
+                std::fs::read(sorted_path(&dir, pg)).unwrap(),
+                std::fs::read(sorted_path(&ref_dir, pg)).unwrap(),
+                "partition gen {pg} diverged after resume"
+            );
+        }
+        // And the resumed stack answers lookups like the reference.
+        let a = LeveledStorage::open_partitioned(&dir, &out.levels, &out.partitions).unwrap();
+        let b = LeveledStorage::open_partitioned(&ref_dir, &ref_out.levels, &ref_out.partitions)
+            .unwrap();
+        for i in (0..300u64).step_by(13) {
+            let k = format!("key{i:04}");
+            assert_eq!(
+                a.get(k.as_bytes()).unwrap().map(|e| e.value),
+                b.get(k.as_bytes()).unwrap().map(|e| e.value),
+                "{k}"
+            );
+        }
     }
 }

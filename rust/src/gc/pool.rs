@@ -1,0 +1,183 @@
+//! Shared GC worker pool (DESIGN.md §7).
+//!
+//! One fixed pool per *process* — not per shard — executes the
+//! key-range partitions of level merges.  Sizing follows the reactor's
+//! rule (`available_parallelism` clamped to a small band) so a
+//! many-shard cluster in one process cannot stampede the disk with
+//! dozens of concurrent merge writers.  Each `run_parallel` call
+//! windows its own submissions to the caller's `limit` (the
+//! `--gc-workers` knob), so `limit = 1` degenerates to the serial
+//! merge order regardless of pool size — partition *planning* is
+//! deterministic and byte-identical either way; only the concurrency
+//! changes.
+//!
+//! Workers are deprioritized (`nice(10)`) like the dedicated GC thread:
+//! merge CPU must not starve the apply lane.
+
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Aggregate pool counters for utilization reporting (fig10).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Microseconds workers spent executing jobs, summed across workers.
+    pub busy_us: u64,
+    /// Jobs completed.
+    pub jobs_done: u64,
+    /// Worker thread count.
+    pub workers: u64,
+}
+
+pub struct GcPool {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    workers: usize,
+    busy_us: AtomicU64,
+    jobs_done: AtomicU64,
+}
+
+/// The process-wide pool, spawned on first use.
+pub fn shared() -> &'static GcPool {
+    static POOL: OnceLock<GcPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .clamp(2, 8);
+        let pool = GcPool {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            workers,
+            busy_us: AtomicU64::new(0),
+            jobs_done: AtomicU64::new(0),
+        };
+        for i in 0..workers {
+            std::thread::Builder::new()
+                .name(format!("nezha-gcpool-{i}"))
+                .spawn(worker_loop)
+                .expect("spawn gc pool worker");
+        }
+        pool
+    })
+}
+
+fn worker_loop() {
+    // Background work: yield the CPU to foreground request threads.
+    unsafe {
+        let _ = libc::nice(10);
+    }
+    let pool = shared();
+    loop {
+        let job = {
+            let mut q = pool.queue.lock().expect("gc pool queue");
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                q = pool.available.wait(q).expect("gc pool wait");
+            }
+        };
+        let t0 = std::time::Instant::now();
+        job();
+        pool.busy_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        pool.jobs_done.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl GcPool {
+    pub fn worker_count(&self) -> usize {
+        self.workers
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            busy_us: self.busy_us.load(Ordering::Relaxed),
+            jobs_done: self.jobs_done.load(Ordering::Relaxed),
+            workers: self.workers as u64,
+        }
+    }
+
+    fn submit(&self, job: Job) {
+        self.queue.lock().expect("gc pool queue").push_back(job);
+        self.available.notify_one();
+    }
+
+    /// Run `tasks` on the pool with at most `limit` in flight for this
+    /// call (other callers' windows are independent; the pool's worker
+    /// count is the global ceiling).  Results keep task order.  The
+    /// caller blocks until every task finishes — tasks themselves must
+    /// never submit to the pool, or a full window could deadlock it.
+    pub fn run_parallel<T, F>(&self, limit: usize, tasks: Vec<F>) -> Vec<Result<T>>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> Result<T> + Send + 'static,
+    {
+        let n = tasks.len();
+        let limit = limit.max(1);
+        if n == 0 {
+            return Vec::new();
+        }
+        if limit == 1 || n == 1 {
+            // Serial fast path: no handoff, deterministic thread.
+            return tasks.into_iter().map(|t| t()).collect();
+        }
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, Result<T>)>();
+        let mut pending = tasks.into_iter().enumerate().collect::<VecDeque<_>>();
+        let mut out: Vec<Option<Result<T>>> = (0..n).map(|_| None).collect();
+        let mut in_flight = 0usize;
+        let mut done = 0usize;
+        while done < n {
+            while in_flight < limit {
+                let Some((i, task)) = pending.pop_front() else { break };
+                let tx = tx.clone();
+                self.submit(Box::new(move || {
+                    let _ = tx.send((i, task()));
+                }));
+                in_flight += 1;
+            }
+            let (i, res) = rx.recv().expect("gc pool worker dropped result channel");
+            out[i] = Some(res);
+            in_flight -= 1;
+            done += 1;
+        }
+        out.into_iter().map(|r| r.expect("all tasks completed")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_parallel_keeps_order_and_counts() {
+        let pool = shared();
+        let tasks: Vec<_> = (0..20u64)
+            .map(|i| move || -> Result<u64> { Ok(i * 2) })
+            .collect();
+        let before = pool.stats().jobs_done;
+        let got = pool.run_parallel(4, tasks);
+        assert_eq!(got.len(), 20);
+        for (i, r) in got.iter().enumerate() {
+            assert_eq!(*r.as_ref().unwrap(), (i as u64) * 2);
+        }
+        assert!(pool.stats().jobs_done >= before + 20);
+        assert!(pool.worker_count() >= 2);
+    }
+
+    #[test]
+    fn serial_limit_runs_inline_and_errors_propagate_per_task() {
+        let pool = shared();
+        let tid = std::thread::current().id();
+        let tasks: Vec<Box<dyn FnOnce() -> Result<bool> + Send>> = vec![
+            Box::new(move || Ok(std::thread::current().id() == tid)),
+            Box::new(|| anyhow::bail!("boom")),
+        ];
+        let got = pool.run_parallel(1, tasks);
+        assert!(*got[0].as_ref().unwrap(), "limit=1 runs on the caller thread");
+        assert!(got[1].is_err());
+    }
+}

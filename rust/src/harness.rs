@@ -80,6 +80,34 @@ pub fn bench_clients() -> usize {
         .max(1)
 }
 
+/// Parse a `--gc-workers N` (or `--gc-workers=N`) flag out of an argv
+/// slice.
+pub fn parse_gc_workers_arg(args: &[String]) -> Option<usize> {
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--gc-workers" {
+            return it.next().and_then(|v| v.parse().ok());
+        }
+        if let Some(v) = a.strip_prefix("--gc-workers=") {
+            return v.parse().ok();
+        }
+    }
+    None
+}
+
+/// Merge partitions in flight per level merge: `--gc-workers N` on the
+/// bench command line (`cargo bench --bench fig10_gc_impact --
+/// --gc-workers 4`) or the `NEZHA_BENCH_GC_WORKERS` env var; defaults
+/// to 1 (serial merges — byte-identical output either way).  fig10
+/// uses this to compare GC-overlap throughput at both settings.
+pub fn bench_gc_workers() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    parse_gc_workers_arg(&args)
+        .or_else(|| std::env::var("NEZHA_BENCH_GC_WORKERS").ok().and_then(|s| s.parse().ok()))
+        .unwrap_or(1)
+        .max(1)
+}
+
 /// Parse a `--read-from WHO` (or `--read-from=WHO`) flag: `leader`
 /// (default; every read at the shard leader), `followers` (ReadIndex/
 /// lease-barriered linearizable reads spread over all replicas), or
@@ -184,6 +212,9 @@ pub struct Spec {
     /// Concurrent client threads driving the load phase (1 = the
     /// original single-stream load); see [`bench_clients`].
     pub clients: usize,
+    /// Merge partitions in flight per GC level merge (1 = serial
+    /// merges); see [`bench_gc_workers`].
+    pub gc_workers: usize,
     pub seed: u64,
 }
 
@@ -199,6 +230,7 @@ impl Spec {
             read_from: ReadConsistency::Leader,
             transport: TransportKind::Inproc,
             clients: 1,
+            gc_workers: 1,
             seed: 42,
         }
     }
@@ -250,42 +282,56 @@ impl Measurement {
 }
 
 /// Print the indented readahead-cache line under a bench row.  Engines
-/// without a readahead cache (Dwisckey reads its vlog uncached) never
-/// touch the counters and get no line.
+/// without a readahead cache (no value separation) never touch the
+/// counters and get no line.
 pub fn print_readahead_line(st: &crate::engine::EngineStats) {
     if st.readahead_hits + st.readahead_misses > 0 {
         println!(
-            "            readahead: {} hits / {} misses ({:.1}% hit rate, {} vlog reads)",
+            "            readahead: {} hits / {} misses ({:.1}% hit, {} reads, {} KiB segs)",
             st.readahead_hits,
             st.readahead_misses,
             st.readahead_hit_rate() * 100.0,
-            st.vlog_reads
+            st.vlog_reads,
+            st.readahead_seg_bytes >> 10,
         );
     }
 }
 
 /// Per-cycle GC report (fig10): flush vs merge bytes and the level
-/// shape after each cycle.  Under leveled GC most cycles are
-/// flush-only; a cycle's total stays bounded by the budgets of the
-/// levels it merged instead of growing with the dataset.
+/// shape after each event.  With decoupled merge scheduling the
+/// history interleaves `flush` cycles (epoch reclaim) and background
+/// `merge` jobs (each with its own commit point); `parts` is the
+/// number of key-range partitions a merge produced (0 for flushes,
+/// 1 for unpartitioned merges).
 pub fn print_gc_cycles(hist: &[crate::gc::GcOutput]) {
     if hist.is_empty() {
         return;
     }
     println!(
-        "            {:<5} {:>11} {:>11} {:>11} {:>7} {:>12}",
-        "cycle", "flush_MiB", "merge_MiB", "total_MiB", "merges", "level_shape"
+        "            {:<5} {:<6} {:>11} {:>11} {:>11} {:>7} {:>6} {:>8} {:>12}",
+        "cycle",
+        "kind",
+        "flush_MiB",
+        "merge_MiB",
+        "total_MiB",
+        "merges",
+        "parts",
+        "wall_ms",
+        "level_shape"
     );
     let mib = |b: u64| b as f64 / (1 << 20) as f64;
     for (i, c) in hist.iter().enumerate() {
         let shape: Vec<String> = c.levels.iter().map(|l| l.len().to_string()).collect();
         println!(
-            "            {:<5} {:>11.2} {:>11.2} {:>11.2} {:>7} {:>12}",
+            "            {:<5} {:<6} {:>11.2} {:>11.2} {:>11.2} {:>7} {:>6} {:>8} {:>12}",
             i + 1,
+            if c.is_merge_job { "merge" } else { "flush" },
             mib(c.flush_bytes),
             mib(c.merge_bytes),
             mib(c.bytes_written),
             c.merges,
+            c.parts,
+            c.wall_ms,
             shape.join("/")
         );
     }
@@ -343,6 +389,10 @@ impl Env {
         // by level budgets instead of the total dataset.
         cfg.engine.gc_level0_bytes = cfg.gc.threshold_bytes;
         cfg.engine.gc_fanout = 10;
+        // Partitioned merges: split level merges into ~4 key ranges at
+        // bench scale so `--gc-workers > 1` has partitions to overlap.
+        cfg.engine.gc_workers = spec.gc_workers.max(1);
+        cfg.engine.gc_partition_bytes = (cfg.gc.threshold_bytes / 4).max(64 << 10);
         let cluster = Cluster::start(cfg)?;
         Ok(Self { cluster, dir, spec })
     }
@@ -746,6 +796,16 @@ mod tests {
         let st = env.leader_stats().unwrap();
         assert!(st.entries_committed > 0, "leader committed nothing: {st:?}");
         env.destroy().unwrap();
+    }
+
+    #[test]
+    fn gc_workers_flag_parses() {
+        let args = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(parse_gc_workers_arg(&args(&["bench", "--gc-workers", "4"])), Some(4));
+        assert_eq!(parse_gc_workers_arg(&args(&["--gc-workers=2"])), Some(2));
+        assert_eq!(parse_gc_workers_arg(&args(&["--clients", "4"])), None);
+        assert_eq!(parse_gc_workers_arg(&args(&["--gc-workers"])), None);
+        assert_eq!(parse_gc_workers_arg(&args(&["--gc-workers", "x"])), None);
     }
 
     #[test]

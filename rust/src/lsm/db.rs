@@ -87,6 +87,9 @@ pub struct IoStats {
     pub readahead_hits: AtomicU64,
     /// Readahead-cache segment loads (misses).
     pub readahead_misses: AtomicU64,
+    /// Largest adaptive readahead segment size chosen so far (bytes;
+    /// see [`crate::vlog::readahead::segment_bytes_for`]).
+    pub readahead_seg_bytes: AtomicU64,
     /// WAL durability barriers ([`Db::sync_wal`] calls that hit a WAL).
     pub log_syncs: AtomicU64,
 }
@@ -112,6 +115,7 @@ impl IoStats {
             vlog_read_bytes: self.vlog_read_bytes.load(Ordering::Relaxed),
             readahead_hits: self.readahead_hits.load(Ordering::Relaxed),
             readahead_misses: self.readahead_misses.load(Ordering::Relaxed),
+            readahead_seg_bytes: self.readahead_seg_bytes.load(Ordering::Relaxed),
             log_syncs: self.log_syncs.load(Ordering::Relaxed),
         }
     }
@@ -131,6 +135,7 @@ pub struct IoStatsSnapshot {
     pub vlog_read_bytes: u64,
     pub readahead_hits: u64,
     pub readahead_misses: u64,
+    pub readahead_seg_bytes: u64,
     pub log_syncs: u64,
 }
 

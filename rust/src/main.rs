@@ -53,7 +53,7 @@ leader|followers|stale.
 crash + restart) against a live in-process cluster while concurrent clients
 record a history, then checks it for linearizability.  Exits non-zero on any
 violation.  Schedules: partition-heal, crash-restart-mid-gc, flapping-links,
-torn-group-commit.
+torn-group-commit, torn-partitioned-merge.
 
 ENGINES: {}",
         EngineKind::ALL.map(|k| k.name()).join(", ")

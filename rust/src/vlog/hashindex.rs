@@ -136,6 +136,14 @@ impl HashIndex {
         Ok(None)
     }
 
+    /// The sorted sparse sample keys (every [`SPARSE_EVERY`]-th key of
+    /// the run).  GC partition planning draws key-range bounds from
+    /// these samples: they are durable with the sealed run, so a
+    /// resumed merge reconstructs the exact same bounds.
+    pub fn sample_keys(&self) -> impl Iterator<Item = &[u8]> {
+        self.sparse.iter().map(|(k, _)| k.as_slice())
+    }
+
     /// Offset to start a sequential scan for keys `>= start`: the
     /// sparse sample at or before `start` (one random read).
     pub fn scan_start(&self, start: &[u8]) -> Offset {

@@ -4,9 +4,23 @@
 //! groups a slice of [`super::VRef`]s by epoch and sorts them by
 //! offset, so consecutive resolutions walk each epoch file forward.
 //! This cache turns that ordered walk into large sequential I/O: the
-//! file is read in fixed, aligned segments ([`SEGMENT_BYTES`] = 64 KiB)
-//! that are kept in a small LRU, so N adjacent values cost one `pread`
-//! instead of N (two per entry, header + body, without it).
+//! file is read in aligned segments kept in a small LRU, so N adjacent
+//! values cost one `pread` instead of N (two per entry, header + body,
+//! without it).
+//!
+//! Segment size is adaptive per file: small files use the base
+//! [`SEGMENT_BYTES`] (64 KiB), while larger files — deep sorted runs
+//! read through [`crate::engine`]'s batched paths — step up to 128 KiB
+//! and 256 KiB (see [`segment_bytes_for`]).  A bigger segment amortizes
+//! more per-`pread` overhead exactly where walks are longest, without
+//! inflating point-read pollution on the small live-epoch tail.  The
+//! size is chosen once per epoch id, at the first load, from the file
+//! length at that moment, and pinned until every segment of that epoch
+//! is invalidated: segment indices are offsets divided by the pinned
+//! size, so mixing sizes within one epoch would alias distinct byte
+//! ranges.  The most recent choice is reported via
+//! `IoStats::readahead_seg_bytes` (monotone max) so benches can print
+//! the active segment size.
 //!
 //! Crash-safety: this layer is read-only — it never writes to a
 //! ValueLog and never serves bytes that are not already in the file, so
@@ -28,13 +42,35 @@ use std::fs::File;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
-/// Aligned segment size: big enough that a handful of segments cover a
-/// typical scan's value window, small enough that point-read pollution
-/// stays bounded.
+/// Base aligned segment size: big enough that a handful of segments
+/// cover a typical scan's value window, small enough that point-read
+/// pollution stays bounded.  Files above [`SEGMENT_STEP_BYTES`] /
+/// [`SEGMENT_BIG_BYTES`] get larger segments (see
+/// [`segment_bytes_for`]).
 pub const SEGMENT_BYTES: u64 = 64 << 10;
 
-/// Default cache capacity in segments (128 × 64 KiB = 8 MiB).
+/// Files at least this long get 128 KiB segments.
+pub const SEGMENT_STEP_BYTES: u64 = 4 << 20;
+
+/// Files at least this long get 256 KiB segments.
+pub const SEGMENT_BIG_BYTES: u64 = 32 << 20;
+
+/// Default cache capacity in segments (128 × 64 KiB = 8 MiB at the
+/// base size).
 pub const DEFAULT_SEGMENTS: usize = 128;
+
+/// Segment size for a file of `file_len` bytes: 64 KiB below 4 MiB,
+/// 128 KiB below 32 MiB, 256 KiB above.  Deep sorted runs are long and
+/// walked sequentially, so they amortize the bigger `pread`.
+pub fn segment_bytes_for(file_len: u64) -> u64 {
+    if file_len >= SEGMENT_BIG_BYTES {
+        256 << 10
+    } else if file_len >= SEGMENT_STEP_BYTES {
+        128 << 10
+    } else {
+        SEGMENT_BYTES
+    }
+}
 
 struct CachedSeg {
     data: Arc<Vec<u8>>,
@@ -43,11 +79,16 @@ struct CachedSeg {
 
 struct Inner {
     map: HashMap<(u32, u64), CachedSeg>,
+    /// Pinned segment size per epoch id (chosen at first load; see
+    /// module docs for why it must not change while segments are
+    /// resident).
+    seg_bytes: HashMap<u32, u64>,
     tick: u64,
 }
 
-/// Fixed-capacity LRU of 64 KiB aligned ValueLog segments, keyed by
-/// `(epoch, segment_index)`.
+/// Fixed-capacity LRU of aligned ValueLog segments, keyed by
+/// `(epoch, segment_index)`.  Segment size is per-epoch, chosen from
+/// the file length at first load ([`segment_bytes_for`]).
 pub struct ReadaheadCache {
     capacity: usize,
     inner: Mutex<Inner>,
@@ -58,9 +99,26 @@ impl ReadaheadCache {
     pub fn new(capacity: usize, io: Arc<IoStats>) -> Self {
         Self {
             capacity: capacity.max(4),
-            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+            inner: Mutex::new(Inner { map: HashMap::new(), seg_bytes: HashMap::new(), tick: 0 }),
             io,
         }
+    }
+
+    /// Pinned segment size for `epoch`, choosing (and recording) one
+    /// from the current file length on first use.
+    fn seg_bytes(&self, epoch: u32, file: &File) -> Result<u64> {
+        {
+            let inner = self.inner.lock().unwrap();
+            if let Some(&sb) = inner.seg_bytes.get(&epoch) {
+                return Ok(sb);
+            }
+        }
+        let sb = segment_bytes_for(file.metadata()?.len());
+        self.io.readahead_seg_bytes.fetch_max(sb, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        // Another thread may have pinned a size between the two locks;
+        // the map entry wins so all segment indices stay coherent.
+        Ok(*inner.seg_bytes.entry(epoch).or_insert(sb))
     }
 
     pub fn io_stats(&self) -> Arc<IoStats> {
@@ -81,6 +139,7 @@ impl ReadaheadCache {
     pub fn invalidate_below(&self, min_epoch: u32) {
         let mut inner = self.inner.lock().unwrap();
         inner.map.retain(|&(e, _), _| e >= min_epoch);
+        inner.seg_bytes.retain(|&e, _| e >= min_epoch);
     }
 
     /// Drop all segments of epochs `>= epoch` (Raft conflict
@@ -89,6 +148,9 @@ impl ReadaheadCache {
     pub fn invalidate_from(&self, epoch: u32) {
         let mut inner = self.inner.lock().unwrap();
         inner.map.retain(|&(e, _), _| e < epoch);
+        // Truncation can change the file length class, so let the next
+        // load re-derive the segment size too.
+        inner.seg_bytes.retain(|&e, _| e < epoch);
     }
 
     /// Return the segment `(epoch, seg)` with at least `need_len` valid
@@ -98,6 +160,7 @@ impl ReadaheadCache {
         &self,
         epoch: u32,
         seg: u64,
+        seg_bytes: u64,
         need_len: usize,
         file: &File,
     ) -> Result<Arc<Vec<u8>>> {
@@ -116,7 +179,7 @@ impl ReadaheadCache {
             }
         }
         self.io.readahead_misses.fetch_add(1, Ordering::Relaxed);
-        let data = Arc::new(load_segment(file, seg)?);
+        let data = Arc::new(load_segment(file, seg, seg_bytes)?);
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
@@ -150,15 +213,19 @@ impl ReadaheadCache {
     /// header-resident/body-absent read would inflate it.
     pub fn read_resident_at(&self, epoch: u32, offset: u64, buf: &mut [u8]) -> bool {
         let mut inner = self.inner.lock().unwrap();
+        // No pinned size means no segment of this epoch is resident.
+        let Some(&seg_bytes) = inner.seg_bytes.get(&epoch) else {
+            return false;
+        };
         inner.tick += 1;
         let tick = inner.tick;
         let mut pos = offset;
         let end = offset + buf.len() as u64;
         while pos < end {
-            let seg = pos / SEGMENT_BYTES;
-            let seg_start = seg * SEGMENT_BYTES;
+            let seg = pos / seg_bytes;
+            let seg_start = seg * seg_bytes;
             let in_seg = (pos - seg_start) as usize;
-            let take = ((end - pos) as usize).min(SEGMENT_BYTES as usize - in_seg);
+            let take = ((end - pos) as usize).min(seg_bytes as usize - in_seg);
             let Some(c) = inner.map.get_mut(&(epoch, seg)) else {
                 return false;
             };
@@ -191,14 +258,15 @@ impl ReadaheadCache {
         offset: u64,
         buf: &mut [u8],
     ) -> Result<()> {
+        let seg_bytes = self.seg_bytes(epoch, file)?;
         let mut pos = offset;
         let end = offset + buf.len() as u64;
         while pos < end {
-            let seg = pos / SEGMENT_BYTES;
-            let seg_start = seg * SEGMENT_BYTES;
+            let seg = pos / seg_bytes;
+            let seg_start = seg * seg_bytes;
             let in_seg = (pos - seg_start) as usize;
-            let take = ((end - pos) as usize).min(SEGMENT_BYTES as usize - in_seg);
-            let data = self.segment(epoch, seg, in_seg + take, file)?;
+            let take = ((end - pos) as usize).min(seg_bytes as usize - in_seg);
+            let data = self.segment(epoch, seg, seg_bytes, in_seg + take, file)?;
             if data.len() < in_seg + take {
                 bail!(
                     "vlog readahead: read past end of file (segment {seg} has {} bytes, need {})",
@@ -215,14 +283,14 @@ impl ReadaheadCache {
 }
 
 /// One `pread` of the whole aligned segment (short at the file tail).
-fn load_segment(file: &File, seg: u64) -> Result<Vec<u8>> {
+fn load_segment(file: &File, seg: u64, seg_bytes: u64) -> Result<Vec<u8>> {
     use std::os::unix::fs::FileExt;
-    let start = seg * SEGMENT_BYTES;
+    let start = seg * seg_bytes;
     let file_len = file.metadata()?.len();
     if start >= file_len {
         return Ok(Vec::new());
     }
-    let want = (file_len - start).min(SEGMENT_BYTES) as usize;
+    let want = (file_len - start).min(seg_bytes) as usize;
     let mut buf = vec![0u8; want];
     file.read_exact_at(&mut buf, start)?;
     Ok(buf)
@@ -317,6 +385,34 @@ mod tests {
         let hits0 = c.io_stats().readahead_hits.load(Ordering::Relaxed);
         c.read_exact_at(0, &f, 5 * SEGMENT_BYTES, &mut buf).unwrap();
         assert_eq!(c.io_stats().readahead_hits.load(Ordering::Relaxed), hits0 + 1);
+    }
+
+    #[test]
+    fn segment_size_scales_with_file_length() {
+        assert_eq!(segment_bytes_for(0), 64 << 10);
+        assert_eq!(segment_bytes_for((4 << 20) - 1), 64 << 10);
+        assert_eq!(segment_bytes_for(4 << 20), 128 << 10);
+        assert_eq!(segment_bytes_for((32 << 20) - 1), 128 << 10);
+        assert_eq!(segment_bytes_for(32 << 20), 256 << 10);
+        assert_eq!(segment_bytes_for(1 << 30), 256 << 10);
+    }
+
+    #[test]
+    fn large_file_uses_bigger_pinned_segments() {
+        let data = vec![3u8; (4 << 20) + 100];
+        let p = tmpfile("large", &data);
+        let f = File::open(&p).unwrap();
+        let c = cache(16);
+        let mut buf = [0u8; 8];
+        // Two reads in the same 128 KiB segment but in *different*
+        // 64 KiB base segments: with the adaptive size pinned at
+        // 128 KiB, the second read is a hit.
+        c.read_exact_at(0, &f, 10, &mut buf).unwrap();
+        c.read_exact_at(0, &f, (64 << 10) + 10, &mut buf).unwrap();
+        let io = c.io_stats();
+        assert_eq!(io.readahead_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(io.readahead_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(io.readahead_seg_bytes.load(Ordering::Relaxed), 128 << 10);
     }
 
     #[test]

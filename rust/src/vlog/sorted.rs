@@ -167,6 +167,9 @@ impl SortedVLogWriter {
     /// Finish: flush + fsync. Returns total file size.
     pub fn finish(mut self) -> Result<(u64, Vec<(Vec<u8>, Offset)>)> {
         self.file.flush()?;
+        // Durability point for a sealed run (fault-injectable: a torn
+        // seal here is what crash-resume of a GC output recovers from).
+        crate::fault::disk::check(&self.path, crate::fault::disk::DiskOp::Sync)?;
         self.file.get_ref().sync_data()?;
         Ok((self.offset, self.key_offsets))
     }
@@ -335,6 +338,13 @@ impl SortedVLog {
     /// Full iteration (recovery / follower catch-up / next GC cycle).
     pub fn iter(&self) -> SortedIter<'_> {
         SortedIter { log: self, pos: HEADER_LEN }
+    }
+
+    /// Iteration starting at a frame offset (a partitioned merge seeks
+    /// each source to its key range via the hash index's sparse
+    /// samples, then reads forward).
+    pub fn iter_from(&self, offset: Offset) -> SortedIter<'_> {
+        SortedIter { log: self, pos: offset.max(HEADER_LEN) }
     }
 }
 

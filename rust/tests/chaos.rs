@@ -91,6 +91,11 @@ fn chaos_torn_group_commit() {
     run_schedule(ScheduleKind::TornGroupCommit, TransportKind::Inproc);
 }
 
+#[test]
+fn chaos_torn_partitioned_merge() {
+    run_schedule(ScheduleKind::TornPartitionedMerge, TransportKind::Inproc);
+}
+
 /// The torn-group-commit drill over real sockets: the leader dies with
 /// its raft-log fsync failed *after* the pipelined broadcast left via
 /// TCP, and acknowledged writes must survive its recovery.
@@ -105,6 +110,26 @@ fn chaos_torn_group_commit_over_tcp() {
     if let Some(v) = &report.violation {
         panic!(
             "tcp torn-group-commit: {v}\n  nemesis log:\n    {}",
+            report.nemesis_log.join("\n    ")
+        );
+    }
+}
+
+/// The torn-partitioned-merge drill over real sockets: a disk fault
+/// lands in one partition's sorted-run output mid-merge, the leader
+/// crashes and restarts, and recovery must resume (or deterministically
+/// replan) the merge without losing acknowledged writes.
+#[test]
+fn chaos_torn_partitioned_merge_over_tcp() {
+    let mut opts = ChaosOpts::new(13, ScheduleKind::TornPartitionedMerge);
+    opts.read_consistency = ReadConsistency::Linearizable;
+    opts.transport = TransportKind::Tcp;
+    opts.run_ms = 2_200;
+    let report = run_chaos(&opts).expect("tcp torn-partitioned-merge harness");
+    assert!(report.writes > 0 && report.reads > 0, "degenerate run: {report:?}");
+    if let Some(v) = &report.violation {
+        panic!(
+            "tcp torn-partitioned-merge: {v}\n  nemesis log:\n    {}",
             report.nemesis_log.join("\n    ")
         );
     }

@@ -113,6 +113,7 @@ fn leveled_nezha_matches_classic_across_cycles_and_crash() {
                 last_term,
                 stack: manifest.levels,
                 run_tombstones: manifest.run_tombstones,
+                partitions: manifest.partitions,
             }
             .save(&edir)
             .unwrap();

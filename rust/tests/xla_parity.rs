@@ -67,6 +67,9 @@ fn gc_cycle_identical_under_both_backends() {
         last_term: 1,
         level0_bytes: u64::MAX,
         fanout: 10,
+        partitions: Vec::new(),
+        partition_bytes: u64::MAX,
+        workers: 1,
         resume: false,
         backend: Arc::new(RustBackend),
     })
@@ -82,6 +85,9 @@ fn gc_cycle_identical_under_both_backends() {
         last_term: 1,
         level0_bytes: u64::MAX,
         fanout: 10,
+        partitions: Vec::new(),
+        partition_bytes: u64::MAX,
+        workers: 1,
         resume: false,
         backend: xla,
     })
