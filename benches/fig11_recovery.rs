@@ -10,16 +10,24 @@
 //! the same dataset is partitioned over N shard replicas, showing how
 //! sharding shrinks each group's recovery unit.
 //!
+//! The follower-catch-up section measures the *other* recovery path
+//! (DESIGN.md §8): a 3-node cluster where node 3 falls behind a
+//! compacting leader and rejoins — "Nezha (run-shipping)" streams
+//! sealed GC runs as chunked files, "Nezha (monolithic)" re-serializes
+//! the whole engine into one `InstallSnapshot` blob.  Each row reports
+//! catch-up wall time plus total and snapshot-attributed bytes on the
+//! wire.  Every run also writes the tables to `BENCH_fig11.json`.
+//!
 //! Run: `cargo bench --bench fig11_recovery [-- --shards N]`.
 
-use nezha::coordinator::Replica;
+use nezha::coordinator::{Cluster, ClusterConfig, ReadConsistency, Replica};
 use nezha::engine::{EngineKind, EngineOpts};
 use nezha::gc::{FrozenEpoch, GcConfig, GcState};
 use nezha::harness::{bench_scale, bench_shards};
-use nezha::raft::{Command, Config as RaftConfig};
+use nezha::raft::{Command, Config as RaftConfig, NetConfig, TransportKind};
 use nezha::ycsb::Generator;
 use std::path::PathBuf;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn base(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("nezha-fig11-{tag}-{}", std::process::id()));
@@ -106,11 +114,55 @@ fn build_shards(
     Ok(())
 }
 
+/// Follower catch-up on a 3-node cluster: kill node 3, write past it
+/// across two GC drains (the raft log compacts beyond its position),
+/// then time restart → converged and meter the wire.  Returns
+/// (catchup_ms, wire_mib, snap_mib) for the rejoin window only.
+fn catchup(streaming: bool, keys_n: u32, tag: &str) -> anyhow::Result<(f64, f64, f64)> {
+    let dir = base(tag);
+    let mut c = ClusterConfig::new(&dir, EngineKind::Nezha, 3);
+    c.engine.memtable_bytes = 64 << 10;
+    c.gc.threshold_bytes = 32 << 10;
+    c.raft.snap_chunk_bytes = 8 << 10;
+    c.raft.snap_streaming = streaming;
+    c.net = NetConfig { latency_us: (0, 0), loss: 0.0, seed: 17 };
+    c.read_consistency = ReadConsistency::Stale;
+    c.transport = TransportKind::Inproc;
+    let cluster = Cluster::start(c)?;
+    let key = |i: u32| format!("cu{i:06}").into_bytes();
+    let val = vec![0x5a_u8; 1024];
+    let quarter = (keys_n / 4).max(8);
+    for i in 0..quarter {
+        cluster.put(&key(i), &val)?;
+    }
+    cluster.kill(0, 3)?;
+    for i in quarter..keys_n {
+        cluster.put(&key(i), &val)?;
+        if i == (quarter + keys_n) / 2 {
+            cluster.drain_gc_all()?;
+        }
+    }
+    cluster.drain_gc_all()?;
+    let before = cluster.wire_stats();
+    let t0 = Instant::now();
+    cluster.restart(0, 3)?;
+    cluster.wait_converged(Duration::from_secs(60))?;
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    let after = cluster.wire_stats();
+    let mib = |b: u64| b as f64 / (1 << 20) as f64;
+    let wire = mib(after.bytes.saturating_sub(before.bytes));
+    let snap = mib(after.snap_bytes.saturating_sub(before.snap_bytes));
+    cluster.shutdown()?;
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok((ms, wire, snap))
+}
+
 fn main() -> anyhow::Result<()> {
     let records = (1024.0 * bench_scale()) as u64;
     let vs = 16 << 10;
     let shards = bench_shards();
     let per_shard = (records / shards as u64).max(16);
+    let mut recovery_rows: Vec<(String, f64)> = Vec::new();
     println!("\n=== Figure 11: recovery time by GC state (ms, {shards} shard(s)) ===");
     println!("{:<22} {:>12}", "state", "recovery_ms");
 
@@ -121,6 +173,7 @@ fn main() -> anyhow::Result<()> {
         build_shards(&dirs, EngineKind::Original, per_shard, vs, |_, _| Ok(()))?;
         let ms = time_reopen(&dirs, EngineKind::Original)?;
         println!("{:<22} {:>12.1}", "Original", ms);
+        recovery_rows.push(("Original".into(), ms));
     }
 
     // Nezha Pre-GC: loaded, no cycle yet.
@@ -130,6 +183,7 @@ fn main() -> anyhow::Result<()> {
         build_shards(&dirs, EngineKind::Nezha, per_shard, vs, |_, _| Ok(()))?;
         let ms = time_reopen(&dirs, EngineKind::Nezha)?;
         println!("{:<22} {:>12.1}", "Nezha (Pre-GC)", ms);
+        recovery_rows.push(("Nezha (Pre-GC)".into(), ms));
     }
 
     // Nezha During-GC: frozen epoch + GC flag set, cycle interrupted
@@ -157,6 +211,7 @@ fn main() -> anyhow::Result<()> {
         })?;
         let ms = time_reopen(&dirs, EngineKind::Nezha)?;
         println!("{:<22} {:>12.1}", "Nezha (During-GC)", ms);
+        recovery_rows.push(("Nezha (During-GC)".into(), ms));
     }
 
     // Nezha During-GC, faulted: the cycle genuinely runs and its
@@ -187,6 +242,7 @@ fn main() -> anyhow::Result<()> {
         })?;
         let ms = time_reopen(&dirs, EngineKind::Nezha)?;
         println!("{:<22} {:>12.1}", "Nezha (During, torn)", ms);
+        recovery_rows.push(("Nezha (During, torn)".into(), ms));
     }
 
     // Nezha Post-GC: a completed cycle, then a crash.
@@ -203,8 +259,44 @@ fn main() -> anyhow::Result<()> {
         })?;
         let ms = time_reopen(&dirs, EngineKind::Nezha)?;
         println!("{:<22} {:>12.1}", "Nezha (Post-GC)", ms);
+        recovery_rows.push(("Nezha (Post-GC)".into(), ms));
     }
 
     println!("\npaper: Pre/During/Post-GC recover 34.8%/34.5%/32.6% faster than Original");
+
+    // Follower catch-up: the rejoin path rather than the local-reopen
+    // path — run-shipping streamed transfer vs the monolithic blob
+    // (DESIGN.md §8), same fall-behind workload for both.
+    let keys_n = (600.0 * bench_scale()) as u32;
+    println!("\n=== Figure 11b: follower catch-up after falling behind GC ({keys_n} keys) ===");
+    println!("{:<22} {:>12} {:>10} {:>10}", "mode", "catchup_ms", "wire_mib", "snap_mib");
+    let (run_ms, run_wire, run_snap) = catchup(true, keys_n, "catchup-stream")?;
+    let (mono_ms, mono_wire, mono_snap) = catchup(false, keys_n, "catchup-mono")?;
+    let cu_print = |mode: &str, ms: f64, wire: f64, snap: f64| {
+        println!("{mode:<22} {ms:>12.1} {wire:>10.2} {snap:>10.2}");
+    };
+    cu_print("Nezha (run-shipping)", run_ms, run_wire, run_snap);
+    cu_print("Nezha (monolithic)", mono_ms, mono_wire, mono_snap);
+
+    let rec_body: Vec<String> = recovery_rows
+        .iter()
+        .map(|(s, ms)| format!("    {{\"state\": \"{s}\", \"recovery_ms\": {ms:.1}}}"))
+        .collect();
+    let cu_row = |mode: &str, ms: f64, wire: f64, snap: f64| {
+        format!(
+            "    {{\"mode\": \"{mode}\", \"catchup_ms\": {ms:.1}, \"wire_mib\": {wire:.3}, \
+             \"snap_mib\": {snap:.3}}}"
+        )
+    };
+    let json = format!(
+        "{{\n  \"figure\": \"fig11_recovery\",\n  \"scale\": {},\n  \"shards\": {shards},\n  \
+         \"recovery\": [\n{}\n  ],\n  \"catchup\": [\n{},\n{}\n  ]\n}}\n",
+        bench_scale(),
+        rec_body.join(",\n"),
+        cu_row("run-shipping", run_ms, run_wire, run_snap),
+        cu_row("monolithic", mono_ms, mono_wire, mono_snap),
+    );
+    std::fs::write("BENCH_fig11.json", &json)?;
+    println!("wrote BENCH_fig11.json ({} recovery rows + 2 catch-up rows)", recovery_rows.len());
     Ok(())
 }

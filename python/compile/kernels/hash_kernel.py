@@ -18,9 +18,9 @@ Hash design (must stay bit-identical to ``rust/src/vlog/hash.rs``):
 
 All arithmetic is wrapping u32 — elementwise VPU work.  The kernel is
 tiled over the batch dimension with a BlockSpec of ``(BLOCK, 4)`` key
-words per step; see DESIGN.md §Hardware-Adaptation for the TPU mapping
-rationale.  ``interpret=True`` everywhere: the CPU PJRT plugin cannot
-execute Mosaic custom-calls.
+words per step; see DESIGN.md §1 for the layer contract and the
+real-TPU scale estimate.  ``interpret=True`` everywhere: the CPU PJRT
+plugin cannot execute Mosaic custom-calls.
 """
 
 from __future__ import annotations

@@ -9,7 +9,8 @@
 //!    entry with monotonic call/return timestamps,
 //! 3. walk a [`Nemesis`] schedule against the live cluster — leader
 //!    partitions, link flapping, disk-fault + crash + restart, torn
-//!    group commit — picked by [`ScheduleKind`],
+//!    group commit, torn partitioned merge, torn snapshot stream —
+//!    picked by [`ScheduleKind`],
 //! 4. repair everything (heal, disarm disk faults, restart dead
 //!    nodes), let the clients run a short post-heal grace period so
 //!    the rejoined node serves traffic,
@@ -77,15 +78,30 @@ pub enum ScheduleKind {
     /// byte-identical stack; see `gc::tests`) and the history must
     /// stay linearizable.
     TornPartitionedMerge,
+    /// Torn snapshot stream (DESIGN.md §8): crash a follower at 5% and
+    /// leave it down while the leader GCs and compacts its raft log
+    /// past it, so the restart at 45% needs a run-shipping catch-up
+    /// transfer.  The run shrinks the snapshot chunk size (4 KiB) so
+    /// that transfer spans many chunks, and at 38% arms a one-shot
+    /// write fault on the victim's `snap-stage/` dir — the receiver's
+    /// staging tears mid-stream and must resume from the durable
+    /// prefix via the sender's stall re-offer.  At 60% the receiver is
+    /// crashed again mid/post-transfer and restarted at 68% (resume
+    /// across a process death), and at 80% the *sender* (leader) is
+    /// crashed — a leader change mid-transfer; the repair phase
+    /// restarts it.  Every acknowledged write must survive, i.e. a
+    /// torn transfer is never read as installed.
+    TornSnapshotStream,
 }
 
 impl ScheduleKind {
-    pub const ALL: [ScheduleKind; 5] = [
+    pub const ALL: [ScheduleKind; 6] = [
         ScheduleKind::PartitionHeal,
         ScheduleKind::CrashRestartMidGc,
         ScheduleKind::FlappingLinks,
         ScheduleKind::TornGroupCommit,
         ScheduleKind::TornPartitionedMerge,
+        ScheduleKind::TornSnapshotStream,
     ];
 
     pub fn name(self) -> &'static str {
@@ -95,6 +111,7 @@ impl ScheduleKind {
             ScheduleKind::FlappingLinks => "flapping-links",
             ScheduleKind::TornGroupCommit => "torn-group-commit",
             ScheduleKind::TornPartitionedMerge => "torn-partitioned-merge",
+            ScheduleKind::TornSnapshotStream => "torn-snapshot-stream",
         }
     }
 
@@ -163,6 +180,26 @@ impl ScheduleKind {
                 NemesisEvent { at_ms: at(0.45), op: NemesisOp::CrashRemembered },
                 NemesisEvent { at_ms: at(0.5), op: NemesisOp::ClearDiskFaults },
                 NemesisEvent { at_ms: at(0.65), op: NemesisOp::RestartRemembered },
+            ],
+            ScheduleKind::TornSnapshotStream => vec![
+                NemesisEvent { at_ms: at(0.05), op: NemesisOp::CrashFollower { shard: 0 } },
+                NemesisEvent {
+                    at_ms: at(0.38),
+                    // Tear the receiver's staging mid-stream: the nth
+                    // chunk write under its snap-stage/ dir fails.
+                    // One-shot, so the stall re-offer then resumes
+                    // cleanly from the durable prefix.
+                    op: NemesisOp::ArmRememberedDiskFault {
+                        file_substr: "snap-stage".to_string(),
+                        op: DiskOp::Write,
+                        nth: 6,
+                    },
+                },
+                NemesisEvent { at_ms: at(0.45), op: NemesisOp::RestartRemembered },
+                NemesisEvent { at_ms: at(0.6), op: NemesisOp::CrashRemembered },
+                NemesisEvent { at_ms: at(0.62), op: NemesisOp::ClearDiskFaults },
+                NemesisEvent { at_ms: at(0.68), op: NemesisOp::RestartRemembered },
+                NemesisEvent { at_ms: at(0.8), op: NemesisOp::CrashLeader { shard: 0 } },
             ],
         }
     }
@@ -285,6 +322,15 @@ pub fn run_chaos(opts: &ChaosOpts) -> Result<ChaosReport> {
         cfg.engine.gc_fanout = 4;
         cfg.engine.gc_partition_bytes = 4 << 10;
         cfg.engine.gc_workers = 2;
+    }
+    if opts.schedule == ScheduleKind::TornSnapshotStream {
+        // Small chunks so the catch-up transfer spans many frames (the
+        // mid-stream tears must land *inside* it), and level budgets
+        // low enough that sealed runs exist to ship.
+        cfg.raft.snap_chunk_bytes = 4 << 10;
+        cfg.raft.snap_window = 2;
+        cfg.engine.gc_level0_bytes = 32 << 10;
+        cfg.engine.gc_fanout = 4;
     }
     // A clean slate in case an earlier run in this process armed one.
     crate::fault::disk::clear();

@@ -146,6 +146,32 @@ pub struct Status {
     pub engine: EngineStats,
     pub gc_phase: GcPhase,
     pub gc_cycles: u64,
+    /// Streamed-snapshot transfer progress (DESIGN.md §8).
+    pub snap: SnapProgress,
+}
+
+/// One replica's run-shipping catch-up counters (DESIGN.md §8): chunk
+/// and byte volume moved as snapshot sender, chunks accepted as
+/// receiver, transfers that re-entered mid-stream after a reconnect,
+/// and transfers that ran to commit.  Summed across shards in the
+/// [`Cluster::status`] rollup.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SnapProgress {
+    pub chunks_sent: u64,
+    pub bytes_sent: u64,
+    pub chunks_recv: u64,
+    pub resumes: u64,
+    pub streams_done: u64,
+}
+
+impl SnapProgress {
+    fn absorb(&mut self, o: SnapProgress) {
+        self.chunks_sent += o.chunks_sent;
+        self.bytes_sent += o.bytes_sent;
+        self.chunks_recv += o.chunks_recv;
+        self.resumes += o.resumes;
+        self.streams_done += o.streams_done;
+    }
 }
 
 /// Cluster-level configuration.
@@ -452,6 +478,7 @@ impl Cluster {
             agg.raft_vlog_bytes += s.raft_vlog_bytes;
             agg.engine.absorb(&s.engine);
             agg.gc_cycles += s.gc_cycles;
+            agg.snap.absorb(s.snap);
             agg.gc_phase = match (agg.gc_phase, s.gc_phase) {
                 (GcPhase::During, _) | (_, GcPhase::During) => GcPhase::During,
                 (GcPhase::Post, _) | (_, GcPhase::Post) => GcPhase::Post,
@@ -1364,6 +1391,7 @@ impl ReplicaTask {
                 }
                 Req::Status { resp } => {
                     let s = replica_stats(replica, lane);
+                    let nm = replica.node.metrics;
                     let _ = resp.send(Status {
                         id,
                         shard,
@@ -1375,6 +1403,13 @@ impl ReplicaTask {
                         gc_phase: replica.engine().gc_phase(),
                         gc_cycles: s.gc_cycles,
                         engine: s,
+                        snap: SnapProgress {
+                            chunks_sent: nm.snap_chunks_sent,
+                            bytes_sent: nm.snap_bytes_sent,
+                            chunks_recv: nm.snap_chunks_recv,
+                            resumes: nm.snap_resumes,
+                            streams_done: nm.snap_streams_done,
+                        },
                     });
                 }
                 Req::DrainGc { resp } => {

@@ -25,7 +25,7 @@ pub mod replica;
 pub mod router;
 pub mod server;
 
-pub use cluster::{shard_dir, Cluster, ClusterConfig, ReadConsistency, Status};
+pub use cluster::{shard_dir, Cluster, ClusterConfig, ReadConsistency, SnapProgress, Status};
 pub use nemesis::{Nemesis, NemesisEvent, NemesisOp};
 pub use replica::Replica;
 pub use router::{ShardId, ShardRouter};

@@ -52,8 +52,24 @@ pub enum NemesisOp {
     /// [`NemesisOp::RestartRemembered`] hits the same node even after
     /// leadership moves.
     ArmLeaderDiskFault { shard: ShardId, file_substr: String, op: DiskOp, nth: u64 },
+    /// Abruptly stop the smallest-id *follower* of `shard` (resolved
+    /// against live status at fire time) and remember it — the
+    /// snapshot-stream chaos victim: while it is down the leader
+    /// compacts past it, so its restart needs a full catch-up
+    /// transfer.
+    CrashFollower { shard: ShardId },
+    /// Abruptly stop the current leader of `shard` (the snapshot
+    /// *sender* in stream chaos; the repair phase restarts it).  Does
+    /// not touch the remembered victim.
+    CrashLeader { shard: ShardId },
+    /// Arm a one-shot disk fault under the *remembered* node's data
+    /// dir — unlike [`NemesisOp::ArmLeaderDiskFault`], which targets
+    /// the current leader.  Used to tear a snapshot receiver's staging
+    /// writes (`file_substr = "snap-stage"`).
+    ArmRememberedDiskFault { file_substr: String, op: DiskOp, nth: u64 },
     /// Abruptly stop the node remembered by the last
-    /// [`NemesisOp::ArmLeaderDiskFault`] (no-op if none).
+    /// [`NemesisOp::ArmLeaderDiskFault`] /
+    /// [`NemesisOp::CrashFollower`] (no-op if none).
     CrashRemembered,
     RestartRemembered,
     /// Disarm all pending disk faults.
@@ -168,6 +184,34 @@ impl Nemesis {
                      {leader} shard {shard}"
                 )
             }
+            NemesisOp::CrashFollower { shard } => {
+                let leader = cluster.shard_leader(*shard)?;
+                let victim = cluster
+                    .node_ids()
+                    .into_iter()
+                    .find(|&p| p != leader)
+                    .ok_or_else(|| anyhow::anyhow!("no follower alive to crash"))?;
+                cluster.crash(*shard, victim)?;
+                self.remembered = Some((*shard, victim));
+                format!("crashed follower {victim} of shard {shard} (leader was {leader})")
+            }
+            NemesisOp::CrashLeader { shard } => {
+                let leader = cluster.shard_leader(*shard)?;
+                cluster.crash(*shard, leader)?;
+                format!("crashed leader {leader} of shard {shard}")
+            }
+            NemesisOp::ArmRememberedDiskFault { file_substr, op, nth } => match self.remembered {
+                Some((shard, id)) => {
+                    let dir = shard_dir(&cluster.config().base_dir, id, shard);
+                    let dir_str = dir.to_string_lossy().into_owned();
+                    crate::fault::disk::arm(&[dir_str, file_substr.clone()], *op, *nth);
+                    format!(
+                        "armed disk fault: {op:?} #{nth} on *{file_substr}* under remembered \
+                         node {id} shard {shard}"
+                    )
+                }
+                None => "arm-remembered-disk-fault: nothing remembered".to_string(),
+            },
             NemesisOp::CrashRemembered => match self.remembered {
                 Some((shard, id)) => {
                     cluster.crash(shard, id)?;

@@ -13,7 +13,11 @@
 //!
 //! Every engine implements [`crate::raft::StateMachine`] (the apply
 //! path) plus the read/scan/GC hooks of [`KvEngine`].  The replica
-//! (coordinator::replica) wires an engine into a Raft node.
+//! (coordinator::replica) wires an engine into a Raft node.  The
+//! `Nezha` engine additionally implements the streaming-snapshot
+//! plan/sink hooks (DESIGN.md §8) so follower catch-up ships its
+//! sealed sorted runs as files; every other engine falls back to the
+//! monolithic `snapshot_bytes`/`install_snapshot` blob.
 
 pub mod classic;
 pub mod common;
@@ -326,6 +330,33 @@ impl StateMachine for Box<dyn KvEngine> {
     fn on_log_truncated(&mut self, live_epoch: u32) {
         (**self).on_log_truncated(live_epoch)
     }
+
+    // Streamed-snapshot hooks must forward explicitly — the trait
+    // defaults would otherwise silently disable streaming for every
+    // boxed engine (DESIGN.md §8).
+    fn snap_stream_begin(&mut self, li: u64, lt: u64) -> Result<Option<crate::raft::SnapPlan>> {
+        (**self).snap_stream_begin(li, lt)
+    }
+
+    fn snap_stream_end(&mut self, plan_id: u64) {
+        (**self).snap_stream_end(plan_id)
+    }
+
+    fn snap_sink_begin(&mut self, manifest: &crate::raft::SnapManifest) -> Result<u64> {
+        (**self).snap_sink_begin(manifest)
+    }
+
+    fn snap_sink_write(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        (**self).snap_sink_write(offset, data)
+    }
+
+    fn snap_sink_commit(&mut self, li: u64, lt: u64) -> Result<()> {
+        (**self).snap_sink_commit(li, lt)
+    }
+
+    fn snap_sink_abort(&mut self) {
+        (**self).snap_sink_abort()
+    }
 }
 
 /// Shared-engine state machine: the engine behind a lock, so a
@@ -361,6 +392,30 @@ impl StateMachine for EngineCell {
 
     fn on_log_truncated(&mut self, live_epoch: u32) {
         self.0.lock().unwrap().on_log_truncated(live_epoch)
+    }
+
+    fn snap_stream_begin(&mut self, li: u64, lt: u64) -> Result<Option<crate::raft::SnapPlan>> {
+        self.0.lock().unwrap().snap_stream_begin(li, lt)
+    }
+
+    fn snap_stream_end(&mut self, plan_id: u64) {
+        self.0.lock().unwrap().snap_stream_end(plan_id)
+    }
+
+    fn snap_sink_begin(&mut self, manifest: &crate::raft::SnapManifest) -> Result<u64> {
+        self.0.lock().unwrap().snap_sink_begin(manifest)
+    }
+
+    fn snap_sink_write(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        self.0.lock().unwrap().snap_sink_write(offset, data)
+    }
+
+    fn snap_sink_commit(&mut self, li: u64, lt: u64) -> Result<()> {
+        self.0.lock().unwrap().snap_sink_commit(li, lt)
+    }
+
+    fn snap_sink_abort(&mut self) {
+        self.0.lock().unwrap().snap_sink_abort()
     }
 }
 

@@ -34,6 +34,11 @@
 //! ([`SortedVLogWriter::resume`]) and completed steps re-verify as
 //! no-ops.  Tombstones are retained in upper levels and annihilate
 //! only when a merge's output becomes the bottom of the stack.
+//!
+//! Sealed runs are also the unit of follower catch-up: a streamed
+//! snapshot ships them as files (DESIGN.md §8), so the engine pins
+//! shipped generations and GC defers — never skips — deleting a
+//! superseded run while a transfer holds it.
 
 pub mod levels;
 pub mod pool;
@@ -512,6 +517,35 @@ pub(crate) fn seal_run(
     let index = HashIndex::build_from_planner(&key_offsets, &hashes, &buckets)?;
     index.save(&index_path(dir, gen))?;
     Ok((bytes, entries, tombstones))
+}
+
+/// Rebuild the hash index of an already-sealed run file from scratch by
+/// scanning its entries.  Used by streamed snapshot install (DESIGN.md
+/// §8): the sender ships only `.vlog` run files — indexes are
+/// receiver-local artifacts, cheaper to rebuild than to ship.  Returns
+/// `(entries, tombstones)` for the receiver's manifest bookkeeping.
+pub(crate) fn rebuild_index_for_gen(
+    dir: &Path,
+    gen: u64,
+    backend: &Arc<dyn IndexBackend>,
+) -> Result<(u64, u64)> {
+    let log = SortedVLog::open(&sorted_path(dir, gen))?;
+    let mut key_offsets: Vec<(Vec<u8>, u64)> = Vec::new();
+    let mut tombstones = 0u64;
+    for item in log.iter() {
+        let (off, e) = item?;
+        if e.value.is_none() {
+            tombstones += 1;
+        }
+        key_offsets.push((e.key, off));
+    }
+    let entries = key_offsets.len() as u64;
+    let cap = HashIndex::capacity_for(key_offsets.len()) as u32;
+    let keys: Vec<&[u8]> = key_offsets.iter().map(|(k, _)| k.as_slice()).collect();
+    let (hashes, buckets) = backend.plan(&keys, cap)?;
+    let index = HashIndex::build_from_planner(&key_offsets, &hashes, &buckets)?;
+    index.save(&index_path(dir, gen))?;
+    Ok((entries, tombstones))
 }
 
 /// Flush the frozen epochs' live entries (`min_index < index <=

@@ -668,10 +668,11 @@ impl Env {
     pub fn print_wire_line(&self) {
         let w = self.cluster.wire_stats();
         println!(
-            "            wire[{}]: {} msgs, {:.2} MiB, {} dropped",
+            "            wire[{}]: {} msgs, {:.2} MiB ({:.2} MiB snap), {} dropped",
             self.spec.transport.name(),
             w.msgs,
             w.bytes as f64 / (1 << 20) as f64,
+            w.snap_bytes as f64 / (1 << 20) as f64,
             w.dropped
         );
     }

@@ -42,9 +42,9 @@
 //! measured with, or real TCP sockets — in one process over loopback
 //! (`--transport tcp`) or across processes (`nezha serve`).
 //!
-//! See `README.md` for the quickstart, `DESIGN.md` §1–§4 for the
-//! paper→repo mapping and substitutions, and `ROADMAP.md` for
-//! invariants and open items.
+//! See `README.md` for the quickstart, `DESIGN.md` §1–§8 for the
+//! paper→repo mapping, substitutions and subsystem contracts, and
+//! `ROADMAP.md` for invariants and open items.
 
 pub mod util;
 pub mod lsm;

@@ -53,7 +53,7 @@ leader|followers|stale.
 crash + restart) against a live in-process cluster while concurrent clients
 record a history, then checks it for linearizability.  Exits non-zero on any
 violation.  Schedules: partition-heal, crash-restart-mid-gc, flapping-links,
-torn-group-commit, torn-partitioned-merge.
+torn-group-commit, torn-partitioned-merge, torn-snapshot-stream.
 
 ENGINES: {}",
         EngineKind::ALL.map(|k| k.name()).join(", ")
@@ -178,10 +178,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             .map(|r| format!("s{}:{}@t{} a{}", r.shard, r.role, r.term, r.last_applied))
             .collect();
         println!(
-            "status: {} | wire: {} msgs, {:.1} MiB, {} dropped",
+            "status: {} | wire: {} msgs, {:.1} MiB ({:.1} MiB snap), {} dropped",
             rows.join(" "),
             wire.msgs,
             wire.bytes as f64 / (1 << 20) as f64,
+            wire.snap_bytes as f64 / (1 << 20) as f64,
             wire.dropped
         );
     }

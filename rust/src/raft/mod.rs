@@ -1,7 +1,8 @@
 //! Raft consensus — the KVS-Raft substrate (paper §III-B).
 //!
 //! A from-scratch Raft: leader election, log replication, commitment,
-//! snapshot install, crash recovery.  Two properties make it
+//! snapshot install (monolithic blob, or the streamed run-shipping
+//! transfer of DESIGN.md §8), crash recovery.  Two properties make it
 //! "KVS-Raft-capable":
 //!
 //! 1. the persistent log is a [`crate::vlog::VLog`], so appending a
@@ -11,10 +12,11 @@
 //!    while baselines re-persist full values.
 //!
 //! Module map: [`rpc`] (messages + wire codec), [`log`] (persistent
-//! log + hard state), [`node`] (the protocol state machine),
-//! [`transport`] (deterministic sim net, threaded in-process bus, and
-//! the real TCP transport behind one [`transport::Net`] handle —
-//! DESIGN.md §2).
+//! log + hard state), [`node`] (the protocol state machine), [`snap`]
+//! (chunked snapshot manifests + the ack-clocked stream sender —
+//! DESIGN.md §8), [`transport`] (deterministic sim net, threaded
+//! in-process bus, and the real TCP transport behind one
+//! [`transport::Net`] handle — DESIGN.md §2).
 //!
 //! Linearizable reads avoid the log entirely: a **ReadIndex** barrier
 //! (leader confirms its term with one heartbeat quorum round and
@@ -27,11 +29,13 @@
 pub mod log;
 pub mod node;
 pub mod rpc;
+pub mod snap;
 pub mod transport;
 
 pub use log::{HardState, RaftLog};
 pub use node::{ApplyLane, Config, Node, NodeId, NodeMetrics, Role, StateMachine};
 pub use rpc::{Command, LogEntry, LogIndex, Message, Term};
+pub use snap::{PlanItem, PlanSource, SnapItem, SnapManifest, SnapPlan, SnapSender};
 pub use transport::{
     Bus, Net, NetConfig, SimNet, TcpNet, TraceEvent, Transport, TransportKind, WireSnapshot,
     WireStats,

@@ -7,10 +7,11 @@
 
 use super::log::{HardState, RaftLog};
 use super::rpc::{Command, LogEntry, LogIndex, Message, Term};
+use super::snap::{SnapManifest, SnapPlan, SnapSender};
 use crate::util::Rng;
 use crate::vlog::VRef;
 use anyhow::{bail, Result};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -44,6 +45,56 @@ pub trait StateMachine: Send {
     /// the rewritten entries were never committed, so applied state is
     /// unaffected.  Default: nothing cached, nothing to do.
     fn on_log_truncated(&mut self, _live_epoch: u32) {}
+
+    // -- streamed snapshot hooks (DESIGN.md §8) ----------------------
+    // The defaults keep byte-blob engines (Classic/Dwisckey, test
+    // doubles) on the legacy monolithic `InstallSnapshot` path; Nezha
+    // overrides all six to ship sealed GC runs as files.
+
+    /// Sender: enumerate a run-shipping snapshot plan covering applied
+    /// state at `last_index`/`last_term`.  The engine must keep every
+    /// file named in the plan alive (pinned against GC deletion) until
+    /// [`Self::snap_stream_end`] releases the plan's id.  `Ok(None)`
+    /// means "no streaming support" — raft falls back to
+    /// [`Self::snapshot_bytes`].
+    fn snap_stream_begin(
+        &mut self,
+        _last_index: LogIndex,
+        _last_term: Term,
+    ) -> Result<Option<SnapPlan>> {
+        Ok(None)
+    }
+
+    /// Sender: the transfer for `plan_id` finished or was abandoned —
+    /// release its pinned files.
+    fn snap_stream_end(&mut self, _plan_id: u64) {}
+
+    /// Receiver: open (or re-open) a staging area for `manifest` and
+    /// return the resume offset — how many bytes of the transfer's
+    /// global stream are already staged durably.  Erroring refuses the
+    /// stream (the sender falls back to the monolithic path).
+    fn snap_sink_begin(&mut self, _manifest: &SnapManifest) -> Result<u64> {
+        bail!("engine does not support streamed snapshot install")
+    }
+
+    /// Receiver: append chunk bytes at global `offset` (always equal
+    /// to the current staged length — the node reorders/dedups).
+    fn snap_sink_write(&mut self, _offset: u64, _data: &[u8]) -> Result<()> {
+        bail!("engine does not support streamed snapshot install")
+    }
+
+    /// Receiver: every byte staged — verify CRCs and atomically cut
+    /// over to the shipped state.  On error the staging area is
+    /// discarded and the transfer restarts from scratch.
+    fn snap_sink_commit(&mut self, _last_index: LogIndex, _last_term: Term) -> Result<()> {
+        bail!("engine does not support streamed snapshot install")
+    }
+
+    /// Receiver: drop in-memory sink state.  Staged bytes on disk are
+    /// kept — they are the resume point if the same transfer is
+    /// re-offered (a mismatched manifest wipes them at the next
+    /// [`Self::snap_sink_begin`]).
+    fn snap_sink_abort(&mut self) {}
 }
 
 /// Tunables (times in ticks; the cluster maps ticks to wall time).
@@ -74,6 +125,16 @@ pub struct Config {
     /// entries only join the commit quorum (via `durable_index`) after
     /// the flush — Raft safety unchanged (DESIGN.md §6).
     pub group_commit_us: u64,
+    /// Stream snapshots as chunked sealed-run files when the engine
+    /// supports it (DESIGN.md §8); off = always the monolithic
+    /// `InstallSnapshot` blob.
+    pub snap_streaming: bool,
+    /// Max payload bytes per `SnapChunk`.
+    pub snap_chunk_bytes: usize,
+    /// In-flight chunk window per catch-up transfer — bounds how much
+    /// snapshot traffic can sit on the wire so catch-up never starves
+    /// AppendEntries.
+    pub snap_window: usize,
 }
 
 impl Default for Config {
@@ -87,6 +148,9 @@ impl Default for Config {
             fsync: false,
             lease_reads: true,
             group_commit_us: 0,
+            snap_streaming: true,
+            snap_chunk_bytes: 256 << 10,
+            snap_window: 4,
         }
     }
 }
@@ -119,6 +183,17 @@ pub struct NodeMetrics {
     pub group_commit_entries: u64,
     /// Largest single group-commit batch.
     pub group_commit_max_batch: u64,
+    /// Streamed snapshot chunks put on the wire (sender side).
+    pub snap_chunks_sent: u64,
+    /// Payload bytes inside those chunks.
+    pub snap_bytes_sent: u64,
+    /// Streamed snapshot chunks accepted (receiver side).
+    pub snap_chunks_recv: u64,
+    /// Transfers that re-entered mid-stream (resume offset > 0).
+    pub snap_resumes: u64,
+    /// Streamed transfers completed (committed at the receiver /
+    /// done-acked at the sender).
+    pub snap_streams_done: u64,
 }
 
 /// Hand-off queue between a replica's consensus loop and its dedicated
@@ -261,6 +336,18 @@ struct PendingConfirm {
     issued_at: u64,
 }
 
+/// Receiver-side bookkeeping for the in-progress streamed snapshot.
+/// Deliberately tiny: the staged bytes live in the engine's staging
+/// directory, never in memory (DESIGN.md §8).
+struct SnapSink {
+    xfer_id: u64,
+    /// Next global offset the sink wants (cumulative-ack cursor).
+    expected: u64,
+    total_len: u64,
+    last_index: LogIndex,
+    last_term: Term,
+}
+
 pub struct Node<S: StateMachine> {
     pub id: NodeId,
     peers: Vec<NodeId>,
@@ -285,6 +372,15 @@ pub struct Node<S: StateMachine> {
     match_index: HashMap<NodeId, LogIndex>,
     votes: usize,
     leader_hint: Option<NodeId>,
+    // Streamed snapshot state (DESIGN.md §8).
+    /// Leader: one in-flight run-shipping transfer per lagging peer.
+    snap_xfers: HashMap<NodeId, SnapSender>,
+    /// Peers whose engines refused streaming — monolithic path only.
+    snap_legacy: HashSet<NodeId>,
+    /// Transfer-id source (made unique across leaders via term + id).
+    snap_xfer_seq: u64,
+    /// Follower: the transfer currently being staged, if any.
+    snap_sink: Option<SnapSink>,
     // Timing (logical ticks).
     ticks: u64,
     election_deadline: u64,
@@ -356,6 +452,10 @@ impl<S: StateMachine> Node<S> {
             match_index: HashMap::new(),
             votes: 0,
             leader_hint: None,
+            snap_xfers: HashMap::new(),
+            snap_legacy: HashSet::new(),
+            snap_xfer_seq: 0,
+            snap_sink: None,
             ticks: 0,
             election_deadline,
             last_heartbeat: 0,
@@ -571,6 +671,15 @@ impl<S: StateMachine> Node<S> {
                     self.failed_reads.push(pc.ctx);
                 }
             }
+            // In-flight catch-up transfers die with the leadership;
+            // release the engine's run pins.  The new leader re-offers
+            // and the receivers resume from their staged bytes.
+            let dropped: Vec<SnapSender> =
+                self.snap_xfers.drain().map(|(_, s)| s).collect();
+            for s in dropped {
+                self.sm.snap_stream_end(s.plan_id());
+            }
+            self.snap_legacy.clear();
         }
         if term > self.hard.term {
             self.hard.term = term;
@@ -589,6 +698,11 @@ impl<S: StateMachine> Node<S> {
     fn become_leader(&mut self) -> Result<Outbox> {
         self.role = Role::Leader;
         self.leader_hint = Some(self.id);
+        // A follower-side half-staged transfer is orphaned once we
+        // lead; staged bytes stay on disk as a future resume point.
+        if self.snap_sink.take().is_some() {
+            self.sm.snap_sink_abort();
+        }
         self.next_index.clear();
         self.match_index.clear();
         self.peer_ack.clear();
@@ -693,7 +807,7 @@ impl<S: StateMachine> Node<S> {
         let mut out = Vec::new();
         let peers = self.peers.clone();
         for p in peers {
-            if let Some(m) = self.append_for(p)? {
+            for m in self.append_for(p)? {
                 self.metrics.msgs_sent += 1;
                 out.push((p, m));
             }
@@ -701,11 +815,19 @@ impl<S: StateMachine> Node<S> {
         Ok(out)
     }
 
-    fn append_for(&mut self, peer: NodeId) -> Result<Option<Message>> {
+    fn append_for(&mut self, peer: NodeId) -> Result<Vec<Message>> {
         let next = *self.next_index.get(&peer).unwrap_or(&1);
         // Peer too far behind the in-memory log → ship a snapshot.
         let behind_mem = next < self.log.first_in_mem() && next <= self.log.last_index();
         if next <= self.log.snap_index || behind_mem {
+            // Streamed run-shipping path first (DESIGN.md §8); falls
+            // back to the monolithic blob when the engine has no plan
+            // or the peer refused a stream.
+            if self.cfg.snap_streaming && !self.snap_legacy.contains(&peer) {
+                if let Some(msgs) = self.stream_for(peer)? {
+                    return Ok(msgs);
+                }
+            }
             // Coverage claim is read *before* the snapshot: with an
             // apply lane the applier may land more entries in between,
             // so the snapshot can cover more than it claims — the
@@ -716,22 +838,22 @@ impl<S: StateMachine> Node<S> {
             let data = self.sm.snapshot_bytes()?;
             self.metrics.snapshots_sent += 1;
             let last_term = self.log.term_at(last_index).unwrap_or(self.log.snap_term);
-            return Ok(Some(Message::InstallSnapshot {
+            return Ok(vec![Message::InstallSnapshot {
                 term: self.hard.term,
                 leader: self.id,
                 last_index,
                 last_term,
                 data,
-            }));
+            }]);
         }
         let prev = next - 1;
         let Some(prev_term) = self.log.term_at(prev) else {
             // prev fell out of memory between checks — snapshot path
             // next round.
-            return Ok(None);
+            return Ok(Vec::new());
         };
         let entries = self.log.entries(next, self.log.last_index(), self.cfg.max_batch_bytes);
-        Ok(Some(Message::AppendEntries {
+        Ok(vec![Message::AppendEntries {
             term: self.hard.term,
             leader: self.id,
             prev_log_index: prev,
@@ -739,7 +861,51 @@ impl<S: StateMachine> Node<S> {
             entries,
             leader_commit: self.commit_index,
             seq: self.hb_seq,
-        }))
+        }])
+    }
+
+    /// Drive (or open) the streamed transfer for `peer`.  `Ok(None)`
+    /// means the engine offered no plan — use the monolithic path.
+    /// `Ok(Some(msgs))` means a stream is active; `msgs` may be empty
+    /// between heartbeats (ack-clocked — chunks flow from
+    /// [`Self::on_snap_ack`]).
+    fn stream_for(&mut self, peer: NodeId) -> Result<Option<Vec<Message>>> {
+        let term = self.hard.term;
+        let id = self.id;
+        if let Some(sender) = self.snap_xfers.get_mut(&peer) {
+            let msgs = sender.tick(term, id)?;
+            self.count_chunks(&msgs);
+            return Ok(Some(msgs));
+        }
+        let last_index = self.applied_index().max(self.log.snap_index);
+        let last_term = self.log.term_at(last_index).unwrap_or(self.log.snap_term);
+        // A planning failure (e.g. a run file raced away) is not fatal:
+        // fall back to the monolithic path for this attempt.
+        let plan = match self.sm.snap_stream_begin(last_index, last_term) {
+            Ok(Some(plan)) => plan,
+            Ok(None) => return Ok(None),
+            Err(e) => {
+                eprintln!("raft: snapshot stream plan failed, using monolithic path: {e:#}");
+                return Ok(None);
+            }
+        };
+        self.snap_xfer_seq += 1;
+        let xfer_id = (term << 24) ^ (id << 16) ^ self.snap_xfer_seq;
+        let sender =
+            SnapSender::new(plan, xfer_id, self.cfg.snap_chunk_bytes, self.cfg.snap_window);
+        let meta = sender.meta_msg(term, id);
+        self.snap_xfers.insert(peer, sender);
+        self.metrics.snapshots_sent += 1;
+        Ok(Some(vec![meta]))
+    }
+
+    fn count_chunks(&mut self, msgs: &[Message]) {
+        for m in msgs {
+            if let Message::SnapChunk { data, .. } = m {
+                self.metrics.snap_chunks_sent += 1;
+                self.metrics.snap_bytes_sent += data.len() as u64;
+            }
+        }
     }
 
     // ---- message handling --------------------------------------------
@@ -773,9 +939,10 @@ impl<S: StateMachine> Node<S> {
         }
         if msg.term() > self.hard.term {
             let leader = match &msg {
-                Message::AppendEntries { leader, .. } | Message::InstallSnapshot { leader, .. } => {
-                    Some(*leader)
-                }
+                Message::AppendEntries { leader, .. }
+                | Message::InstallSnapshot { leader, .. }
+                | Message::SnapMeta { leader, .. }
+                | Message::SnapChunk { leader, .. } => Some(*leader),
                 _ => None,
             };
             self.become_follower(msg.term(), leader)?;
@@ -811,6 +978,15 @@ impl<S: StateMachine> Node<S> {
             }
             Message::InstallSnapshotResp { term, last_index } => {
                 self.on_snapshot_resp(from, term, last_index)
+            }
+            Message::SnapMeta { term, leader, xfer_id, last_index, last_term, manifest } => {
+                self.on_snap_meta(from, term, leader, xfer_id, last_index, last_term, manifest)
+            }
+            Message::SnapChunk { term, leader, xfer_id, offset, data } => {
+                self.on_snap_chunk(from, term, leader, xfer_id, offset, data)
+            }
+            Message::SnapAck { term, xfer_id, offset, done } => {
+                self.on_snap_ack(from, term, xfer_id, offset, done)
             }
             Message::ReadIndex { term, ctx } => self.on_read_index(from, term, ctx),
             Message::ReadIndexResp { term, ctx, read_index, ok } => {
@@ -980,7 +1156,7 @@ impl<S: StateMachine> Node<S> {
             out.extend(self.pump_read_confirms());
             // More to send?
             if match_index < self.log.last_index() {
-                if let Some(m) = self.append_for(from)? {
+                for m in self.append_for(from)? {
                     self.metrics.msgs_sent += 1;
                     out.push((from, m));
                 }
@@ -990,7 +1166,7 @@ impl<S: StateMachine> Node<S> {
             // Back up using the follower's hint.
             let next = self.next_index.entry(from).or_insert(1);
             *next = (match_index + 1).min((*next).saturating_sub(1)).max(1);
-            if let Some(m) = self.append_for(from)? {
+            for m in self.append_for(from)? {
                 self.metrics.msgs_sent += 1;
                 out.push((from, m));
             }
@@ -1098,11 +1274,239 @@ impl<S: StateMachine> Node<S> {
         }
         self.match_index.insert(from, last_index);
         self.next_index.insert(from, last_index + 1);
-        if let Some(m) = self.append_for(from)? {
+        let mut out = Vec::new();
+        for m in self.append_for(from)? {
             self.metrics.msgs_sent += 1;
-            return Ok(vec![(from, m)]);
+            out.push((from, m));
         }
-        Ok(Vec::new())
+        Ok(out)
+    }
+
+    // ---- streamed snapshot transfer (DESIGN.md §8) -------------------
+
+    /// Receiver: a leader offered (or re-offered) a streamed transfer.
+    /// Answer with the resume offset from our staging area, `done` if
+    /// our state already covers it, or `u64::MAX` to refuse (engine
+    /// has no streaming install — sender falls back to monolithic).
+    #[allow(clippy::too_many_arguments)]
+    fn on_snap_meta(
+        &mut self,
+        from: NodeId,
+        term: Term,
+        leader: NodeId,
+        xfer_id: u64,
+        last_index: LogIndex,
+        last_term: Term,
+        manifest: Vec<u8>,
+    ) -> Result<Outbox> {
+        if term < self.hard.term {
+            self.metrics.msgs_sent += 1;
+            let resp =
+                Message::SnapAck { term: self.hard.term, xfer_id, offset: u64::MAX, done: false };
+            return Ok(vec![(from, resp)]);
+        }
+        self.become_follower(term, Some(leader))?;
+        let ack = |offset: u64, done: bool| Message::SnapAck { term, xfer_id, offset, done };
+        if last_index <= self.log.snap_index || last_index <= self.last_applied {
+            // Already covered — short-circuit to done so the leader
+            // moves on to AppendEntries.
+            self.metrics.msgs_sent += 1;
+            return Ok(vec![(from, ack(u64::MAX, true))]);
+        }
+        if let Some(sink) = &self.snap_sink {
+            if sink.xfer_id == xfer_id {
+                // Re-offer of the live transfer (sender stall): re-ack
+                // the cursor; if everything is staged, commit now (the
+                // original done-ack was lost).
+                if sink.expected >= sink.total_len {
+                    return self.finish_snap_sink(from);
+                }
+                let offset = sink.expected;
+                self.metrics.msgs_sent += 1;
+                return Ok(vec![(from, ack(offset, false))]);
+            }
+            // A different transfer supersedes the old one (leader
+            // change / newer snapshot).
+            self.snap_sink = None;
+            self.sm.snap_sink_abort();
+        }
+        let Ok(m) = SnapManifest::decode(&manifest) else {
+            self.metrics.msgs_sent += 1;
+            return Ok(vec![(from, ack(u64::MAX, false))]);
+        };
+        match self.sm.snap_sink_begin(&m) {
+            Ok(resume) => {
+                if resume > 0 {
+                    self.metrics.snap_resumes += 1;
+                }
+                self.snap_sink = Some(SnapSink {
+                    xfer_id,
+                    expected: resume,
+                    total_len: m.total_len,
+                    last_index,
+                    last_term,
+                });
+                if resume >= m.total_len {
+                    // Fully staged already (or an empty snapshot).
+                    return self.finish_snap_sink(from);
+                }
+                self.metrics.msgs_sent += 1;
+                Ok(vec![(from, ack(resume, false))])
+            }
+            Err(_) => {
+                // Engine refused: monolithic fallback.
+                self.metrics.msgs_sent += 1;
+                Ok(vec![(from, ack(u64::MAX, false))])
+            }
+        }
+    }
+
+    /// Receiver: stage one chunk.  Out-of-order or duplicate chunks
+    /// are not written — the cumulative re-ack tells the sender where
+    /// to rewind (go-back-N).
+    fn on_snap_chunk(
+        &mut self,
+        from: NodeId,
+        term: Term,
+        leader: NodeId,
+        xfer_id: u64,
+        offset: u64,
+        data: Vec<u8>,
+    ) -> Result<Outbox> {
+        if term < self.hard.term {
+            return Ok(Vec::new());
+        }
+        self.become_follower(term, Some(leader))?;
+        let Some(sink) = &mut self.snap_sink else {
+            // No live transfer (e.g. restarted mid-stream): wait for
+            // the sender's stall re-offer of SnapMeta.
+            return Ok(Vec::new());
+        };
+        if sink.xfer_id != xfer_id {
+            return Ok(Vec::new());
+        }
+        if offset != sink.expected {
+            // Duplicate (offset < expected) or gap (offset > expected):
+            // re-ack the cursor so the sender rewinds.
+            let resp = Message::SnapAck { term, xfer_id, offset: sink.expected, done: false };
+            self.metrics.msgs_sent += 1;
+            return Ok(vec![(from, resp)]);
+        }
+        match self.sm.snap_sink_write(offset, &data) {
+            Ok(()) => {
+                let sink = self.snap_sink.as_mut().expect("sink checked above");
+                sink.expected += data.len() as u64;
+                self.metrics.snap_chunks_recv += 1;
+                if sink.expected >= sink.total_len {
+                    return self.finish_snap_sink(from);
+                }
+                let resp =
+                    Message::SnapAck { term, xfer_id, offset: sink.expected, done: false };
+                self.metrics.msgs_sent += 1;
+                Ok(vec![(from, resp)])
+            }
+            Err(_) => {
+                // Staging write failed (disk fault): tear down the
+                // in-memory sink but keep staged bytes — the sender's
+                // stall re-offer resumes from whatever landed durably.
+                self.snap_sink = None;
+                self.sm.snap_sink_abort();
+                Ok(Vec::new())
+            }
+        }
+    }
+
+    /// Receiver: every byte staged — verify + atomically install, then
+    /// done-ack.  A failed commit wipes staging and stays silent; the
+    /// sender's stall path restarts the transfer from offset 0.
+    fn finish_snap_sink(&mut self, from: NodeId) -> Result<Outbox> {
+        let Some(sink) = self.snap_sink.take() else {
+            return Ok(Vec::new());
+        };
+        let SnapSink { xfer_id, total_len, last_index, last_term, .. } = sink;
+        if last_index > self.log.snap_index && last_index > self.last_applied {
+            // Same ordering as the monolithic install: quiesce the
+            // apply lane before the engine cut-over, publish the new
+            // cursor after.
+            if let Some(lane) = &self.lane {
+                lane.begin_install();
+            }
+            if self.sm.snap_sink_commit(last_index, last_term).is_err() {
+                self.sm.snap_sink_abort();
+                return Ok(Vec::new());
+            }
+            self.log.reset_to_snapshot(last_index, last_term)?;
+            self.commit_index = last_index;
+            self.last_applied = last_index;
+            self.durable_index = self.log.last_index();
+            if let Some(lane) = &self.lane {
+                lane.set_applied(last_index);
+            }
+            self.metrics.snapshots_installed += 1;
+            self.metrics.snap_streams_done += 1;
+        } else {
+            // State moved past the snapshot while it streamed.
+            self.sm.snap_sink_abort();
+        }
+        self.metrics.msgs_sent += 1;
+        let resp =
+            Message::SnapAck { term: self.hard.term, xfer_id, offset: total_len, done: true };
+        Ok(vec![(from, resp)])
+    }
+
+    /// Sender: cumulative ack from the receiver — advance the window,
+    /// finish the transfer, or fall back to the monolithic path.
+    fn on_snap_ack(
+        &mut self,
+        from: NodeId,
+        term: Term,
+        xfer_id: u64,
+        offset: u64,
+        done: bool,
+    ) -> Result<Outbox> {
+        if self.role != Role::Leader || term != self.hard.term {
+            return Ok(Vec::new());
+        }
+        let Some(sender) = self.snap_xfers.get(&from) else {
+            return Ok(Vec::new());
+        };
+        if sender.xfer_id != xfer_id {
+            return Ok(Vec::new());
+        }
+        if done {
+            let sender = self.snap_xfers.remove(&from).expect("sender checked above");
+            self.sm.snap_stream_end(sender.plan_id());
+            self.metrics.snap_streams_done += 1;
+            self.match_index.insert(from, sender.last_index());
+            self.next_index.insert(from, sender.last_index() + 1);
+            let mut out = Vec::new();
+            for m in self.append_for(from)? {
+                self.metrics.msgs_sent += 1;
+                out.push((from, m));
+            }
+            return Ok(out);
+        }
+        if offset == u64::MAX {
+            // Refused: this peer's engine wants the monolithic blob.
+            let sender = self.snap_xfers.remove(&from).expect("sender checked above");
+            self.sm.snap_stream_end(sender.plan_id());
+            self.snap_legacy.insert(from);
+            let mut out = Vec::new();
+            for m in self.append_for(from)? {
+                self.metrics.msgs_sent += 1;
+                out.push((from, m));
+            }
+            return Ok(out);
+        }
+        let sender = self.snap_xfers.get_mut(&from).expect("sender checked above");
+        sender.on_ack(offset)?;
+        let term = self.hard.term;
+        let id = self.id;
+        let sender = self.snap_xfers.get_mut(&from).expect("sender checked above");
+        let burst = sender.fill_window(term, id)?;
+        self.count_chunks(&burst);
+        self.metrics.msgs_sent += burst.len() as u64;
+        Ok(burst.into_iter().map(|m| (from, m)).collect())
     }
 
     // ---- linearizable read barriers (ReadIndex + leader lease) -------
@@ -1557,11 +1961,328 @@ mod tests {
         // Leader tracks node 4 as far behind.
         t.node(leader).next_index.insert(4, 1);
         t.node(leader).match_index.insert(4, 0);
-        let m = t.node(leader).append_for(4).unwrap().unwrap();
+        // MemSm has no streaming plan, so this exercises the
+        // monolithic fallback.
+        let m = t.node(leader).append_for(4).unwrap().remove(0);
         assert!(matches!(m, Message::InstallSnapshot { .. }), "expected snapshot, got {m:?}");
         let resp = n4.handle(leader, m).unwrap();
         assert!(n4.last_applied() >= 50);
         assert!(matches!(resp[0].1, Message::InstallSnapshotResp { .. }));
+    }
+
+    // ---- streamed snapshot protocol (DESIGN.md §8) -------------------
+
+    use crate::raft::snap::{PlanItem, PlanSource, SnapItem};
+
+    /// MemSm plus the six streaming hooks: the plan is one in-memory
+    /// item holding the serialized KV; the sink is a byte buffer with
+    /// the engine's staging semantics — staged bytes survive an abort,
+    /// and a matching manifest resumes from them (a mismatch wipes).
+    #[derive(Default)]
+    struct StreamSm {
+        inner: MemSm,
+        plans_begun: u64,
+        ended_plans: Vec<u64>,
+        sink_manifest: Option<SnapManifest>,
+        staged: Vec<u8>,
+    }
+
+    impl StateMachine for StreamSm {
+        fn apply(&mut self, entry: &LogEntry, vref: VRef) -> Result<()> {
+            self.inner.apply(entry, vref)
+        }
+
+        fn snapshot_bytes(&mut self) -> Result<Vec<u8>> {
+            self.inner.snapshot_bytes()
+        }
+
+        fn install_snapshot(&mut self, data: &[u8], li: LogIndex, lt: Term) -> Result<()> {
+            self.inner.install_snapshot(data, li, lt)
+        }
+
+        fn snap_stream_begin(
+            &mut self,
+            last_index: LogIndex,
+            last_term: Term,
+        ) -> Result<Option<SnapPlan>> {
+            let blob = self.inner.snapshot_bytes()?;
+            self.plans_begun += 1;
+            Ok(Some(SnapPlan {
+                id: self.plans_begun,
+                last_index,
+                last_term,
+                items: vec![PlanItem {
+                    name: "state.blob".to_string(),
+                    len: blob.len() as u64,
+                    crc: crc32fast::hash(&blob),
+                    src: PlanSource::Bytes(blob),
+                }],
+                shape: Vec::new(),
+            }))
+        }
+
+        fn snap_stream_end(&mut self, plan_id: u64) {
+            self.ended_plans.push(plan_id);
+        }
+
+        fn snap_sink_begin(&mut self, manifest: &SnapManifest) -> Result<u64> {
+            if self.sink_manifest.as_ref() != Some(manifest) {
+                self.staged.clear();
+                self.sink_manifest = Some(manifest.clone());
+            }
+            Ok(self.staged.len() as u64)
+        }
+
+        fn snap_sink_write(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+            if offset != self.staged.len() as u64 {
+                bail!("write at {offset}, staged {}", self.staged.len());
+            }
+            self.staged.extend_from_slice(data);
+            Ok(())
+        }
+
+        fn snap_sink_commit(&mut self, last_index: LogIndex, last_term: Term) -> Result<()> {
+            let Some(m) = self.sink_manifest.take() else { bail!("no sink manifest") };
+            if self.staged.len() as u64 != m.total_len
+                || crc32fast::hash(&self.staged) != m.items[0].crc
+            {
+                self.staged.clear();
+                bail!("torn staging");
+            }
+            let staged = std::mem::take(&mut self.staged);
+            self.inner.install_snapshot(&staged, last_index, last_term)
+        }
+
+        fn snap_sink_abort(&mut self) {
+            // Keep `staged` (and the manifest it belongs to): it is
+            // the resume point for a re-offer of the same transfer.
+        }
+    }
+
+    /// A single-node leader over `StreamSm` with `puts` committed
+    /// writes and its in-memory log compacted past index 1, so
+    /// catching up a fresh peer must take the snapshot path — with
+    /// tiny chunks so the stream spans many windows.
+    fn stream_leader(name: &str, puts: u32) -> Node<StreamSm> {
+        let mut n =
+            Node::new(1, vec![], &tmpdir(name, 1), StreamSm::default(), Config::default(), 7)
+                .unwrap();
+        n.cfg.mem_keep_tail = 2;
+        n.cfg.snap_chunk_bytes = 64;
+        n.cfg.snap_window = 2;
+        for _ in 0..200 {
+            let _ = n.tick().unwrap();
+            if n.is_leader() {
+                break;
+            }
+        }
+        assert!(n.is_leader());
+        for i in 0..puts {
+            n.propose(Command::Put {
+                key: format!("k{i:03}").into_bytes(),
+                value: format!("value-{i:04}").into_bytes(),
+            })
+            .unwrap();
+            n.replicate().unwrap();
+        }
+        n
+    }
+
+    /// End-to-end streamed catch-up: a fresh node 4 joins behind a
+    /// compacted leader and is caught up via SnapMeta/SnapChunk/SnapAck
+    /// — ack-clocked and windowed — instead of one monolithic blob.
+    #[test]
+    fn snap_stream_catches_up_fresh_node_in_chunks() {
+        let mut leader = stream_leader("streamcatch", 50);
+        let mut n4 = Node::new(
+            4,
+            vec![1],
+            &tmpdir("streamcatch", 4),
+            StreamSm::default(),
+            Config::default(),
+            9,
+        )
+        .unwrap();
+        leader.next_index.insert(4, 1);
+        leader.match_index.insert(4, 0);
+
+        // FIFO delivery — chunk order is preserved on a healthy link.
+        let mut queue: VecDeque<(NodeId, NodeId, Message)> =
+            leader.append_for(4).unwrap().into_iter().map(|m| (1, 4, m)).collect();
+        assert!(
+            matches!(queue[0].2, Message::SnapMeta { .. }),
+            "expected a streamed offer, got {:?}",
+            queue[0].2
+        );
+        let mut hops = 0;
+        while let Some((from, to, m)) = queue.pop_front() {
+            hops += 1;
+            assert!(hops < 10_000, "transfer never finished");
+            let out =
+                if to == 1 { leader.handle(from, m).unwrap() } else { n4.handle(from, m).unwrap() };
+            for (dst, msg) in out {
+                queue.push_back((to, dst, msg));
+            }
+        }
+        assert_eq!(n4.sm().inner.kv.len(), 50, "follower state installed");
+        assert!(n4.last_applied() >= 50);
+        // It streamed: several bounded chunks, counted on both ends,
+        // and the sender released its plan pin at the end.
+        assert!(leader.metrics.snap_chunks_sent >= 4, "{:?}", leader.metrics);
+        assert_eq!(leader.metrics.snap_chunks_sent, n4.metrics.snap_chunks_recv);
+        assert_eq!(leader.metrics.snap_streams_done, 1);
+        assert_eq!(n4.metrics.snap_streams_done, 1);
+        assert_eq!(leader.sm().ended_plans, vec![1]);
+        // The leader now tracks 4 as caught up (AppendEntries resumed).
+        assert!(*leader.match_index.get(&4).unwrap() >= 50);
+    }
+
+    /// Receiver-side chunk protocol: gaps and duplicates are never
+    /// written — the cumulative re-ack rewinds the sender (go-back-N)
+    /// — and the stream installs only once every byte is staged.
+    #[test]
+    fn snap_chunk_gap_and_duplicate_reack_cursor() {
+        let mut donor = MemSm::default();
+        for i in 0..8u32 {
+            donor.kv.insert(format!("s{i}").into_bytes(), vec![i as u8; 9]);
+        }
+        let blob = donor.snapshot_bytes().unwrap();
+        assert!(blob.len() > 16, "need several chunks");
+        let manifest = SnapManifest {
+            last_index: 30,
+            last_term: 1,
+            total_len: blob.len() as u64,
+            items: vec![SnapItem {
+                name: "state.blob".to_string(),
+                len: blob.len() as u64,
+                crc: crc32fast::hash(&blob),
+            }],
+            shape: Vec::new(),
+        };
+        let mut n =
+            Node::new(4, vec![1], &tmpdir("snapgap", 4), StreamSm::default(), Config::default(), 5)
+                .unwrap();
+        let meta = Message::SnapMeta {
+            term: 1,
+            leader: 1,
+            xfer_id: 7,
+            last_index: 30,
+            last_term: 1,
+            manifest: manifest.encode(),
+        };
+        let out = n.handle(1, meta).unwrap();
+        assert!(matches!(out[0].1, Message::SnapAck { offset: 0, done: false, .. }), "{out:?}");
+        let chunk = |offset: usize, len: usize| Message::SnapChunk {
+            term: 1,
+            leader: 1,
+            xfer_id: 7,
+            offset: offset as u64,
+            data: blob[offset..(offset + len).min(blob.len())].to_vec(),
+        };
+        // A gap (first chunk lost): nothing written, cursor re-acked.
+        let out = n.handle(1, chunk(8, 4)).unwrap();
+        assert!(matches!(out[0].1, Message::SnapAck { offset: 0, done: false, .. }), "{out:?}");
+        assert_eq!(n.metrics.snap_chunks_recv, 0);
+        assert!(n.sm().staged.is_empty());
+        // The in-order chunk advances the cursor.
+        let out = n.handle(1, chunk(0, 8)).unwrap();
+        assert!(matches!(out[0].1, Message::SnapAck { offset: 8, done: false, .. }), "{out:?}");
+        // A duplicate of it re-acks the cursor without re-writing.
+        let out = n.handle(1, chunk(0, 8)).unwrap();
+        assert!(matches!(out[0].1, Message::SnapAck { offset: 8, done: false, .. }), "{out:?}");
+        assert_eq!(n.sm().staged.len(), 8);
+        assert_eq!(n.metrics.snap_chunks_recv, 1);
+        // A chunk from an unknown transfer is ignored outright.
+        let alien =
+            Message::SnapChunk { term: 1, leader: 1, xfer_id: 99, offset: 8, data: vec![1] };
+        assert!(n.handle(1, alien).unwrap().is_empty());
+        // The rest of the stream lands and commits atomically.
+        let mut off = 8;
+        let mut last = Vec::new();
+        while off < blob.len() {
+            last = n.handle(1, chunk(off, 8)).unwrap();
+            off += 8;
+        }
+        assert!(matches!(last[0].1, Message::SnapAck { done: true, .. }), "final ack: {last:?}");
+        assert_eq!(n.sm().inner.kv, donor.kv);
+        assert_eq!(n.last_applied(), 30);
+        assert_eq!(n.metrics.snap_streams_done, 1);
+    }
+
+    /// Resume: staged bytes survive a superseded sink; a same-transfer
+    /// re-offer re-acks the cursor; and a *new* transfer (leader
+    /// change) carrying the same manifest resumes from the staged
+    /// offset instead of restarting at 0.
+    #[test]
+    fn snap_meta_reoffer_resumes_from_staged_offset() {
+        let mut donor = MemSm::default();
+        for i in 0..8u32 {
+            donor.kv.insert(format!("r{i}").into_bytes(), vec![i as u8; 9]);
+        }
+        let blob = donor.snapshot_bytes().unwrap();
+        let manifest = SnapManifest {
+            last_index: 30,
+            last_term: 1,
+            total_len: blob.len() as u64,
+            items: vec![SnapItem {
+                name: "state.blob".to_string(),
+                len: blob.len() as u64,
+                crc: crc32fast::hash(&blob),
+            }],
+            shape: Vec::new(),
+        };
+        let mut n = Node::new(
+            4,
+            vec![1],
+            &tmpdir("snapresume", 4),
+            StreamSm::default(),
+            Config::default(),
+            5,
+        )
+        .unwrap();
+        let meta = |xfer_id: u64| Message::SnapMeta {
+            term: 1,
+            leader: 1,
+            xfer_id,
+            last_index: 30,
+            last_term: 1,
+            manifest: manifest.encode(),
+        };
+        let chunk = |xfer_id: u64, offset: usize, len: usize| Message::SnapChunk {
+            term: 1,
+            leader: 1,
+            xfer_id,
+            offset: offset as u64,
+            data: blob[offset..(offset + len).min(blob.len())].to_vec(),
+        };
+        // Stage the first 8 bytes under transfer 7.
+        let out = n.handle(1, meta(7)).unwrap();
+        assert!(matches!(out[0].1, Message::SnapAck { offset: 0, done: false, .. }), "{out:?}");
+        let out = n.handle(1, chunk(7, 0, 8)).unwrap();
+        assert!(matches!(out[0].1, Message::SnapAck { offset: 8, done: false, .. }), "{out:?}");
+        // A stall re-offer of the live transfer re-acks the cursor —
+        // no resume, the sink never went away.
+        let out = n.handle(1, meta(7)).unwrap();
+        assert!(matches!(out[0].1, Message::SnapAck { offset: 8, done: false, .. }), "{out:?}");
+        assert_eq!(n.metrics.snap_resumes, 0);
+        // A new sender offers transfer 9 with the same manifest: the
+        // old sink is superseded but its staged bytes are the resume
+        // point — the ack asks for offset 8, not 0.
+        let out = n.handle(1, meta(9)).unwrap();
+        assert!(matches!(out[0].1, Message::SnapAck { offset: 8, done: false, .. }), "{out:?}");
+        assert_eq!(n.metrics.snap_resumes, 1);
+        // Chunks from the dead transfer are ignored; the new one lands.
+        assert!(n.handle(1, chunk(7, 8, 8)).unwrap().is_empty());
+        let mut off = 8;
+        let mut last = Vec::new();
+        while off < blob.len() {
+            last = n.handle(1, chunk(9, off, 8)).unwrap();
+            off += 8;
+        }
+        assert!(matches!(last[0].1, Message::SnapAck { done: true, .. }), "final ack: {last:?}");
+        assert_eq!(n.sm().inner.kv, donor.kv);
+        assert_eq!(n.last_applied(), 30);
+        assert_eq!(n.metrics.snap_streams_done, 1);
     }
 
     #[test]

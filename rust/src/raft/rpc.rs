@@ -130,6 +130,42 @@ pub enum Message {
         term: Term,
         last_index: LogIndex,
     },
+    /// Leader → follower: open (or re-offer) a streamed snapshot
+    /// transfer.  Carries the transfer's encoded [`snap::SnapManifest`]
+    /// — the file list + CRCs + level shape — never the data itself,
+    /// so it stays small regardless of snapshot size (DESIGN.md §8).
+    ///
+    /// [`snap::SnapManifest`]: super::snap::SnapManifest
+    SnapMeta {
+        term: Term,
+        leader: u64,
+        /// Transfer id; chunks and acks for a different id are stale.
+        xfer_id: u64,
+        last_index: LogIndex,
+        last_term: Term,
+        manifest: Vec<u8>,
+    },
+    /// Leader → follower: one bounded-size slice of the transfer's
+    /// byte stream at `offset` (a global offset over the concatenated
+    /// manifest items).  Resumable: the receiver acks the next offset
+    /// it wants, so a reconnect re-enters mid-stream.
+    SnapChunk {
+        term: Term,
+        leader: u64,
+        xfer_id: u64,
+        offset: u64,
+        data: Vec<u8>,
+    },
+    /// Follower → leader: cumulative ack.  `offset` is the next byte
+    /// the receiver wants (`u64::MAX` = streaming refused, fall back
+    /// to the monolithic path); `done` means the snapshot was
+    /// committed at the receiver.
+    SnapAck {
+        term: Term,
+        xfer_id: u64,
+        offset: u64,
+        done: bool,
+    },
     /// Replica → leader: ask for a linearizable read barrier.  The
     /// leader answers with its commit index once it has confirmed its
     /// leadership for the current term (a heartbeat quorum round, or a
@@ -159,6 +195,9 @@ impl Message {
             | Message::AppendEntriesResp { term, .. }
             | Message::InstallSnapshot { term, .. }
             | Message::InstallSnapshotResp { term, .. }
+            | Message::SnapMeta { term, .. }
+            | Message::SnapChunk { term, .. }
+            | Message::SnapAck { term, .. }
             | Message::ReadIndex { term, .. }
             | Message::ReadIndexResp { term, .. } => *term,
         }
@@ -203,6 +242,16 @@ impl Message {
             }
             Message::ReadIndexResp { term, ctx, read_index, ok } => {
                 e.u8(7).u64(*term).u64(*ctx).u64(*read_index).u8(*ok as u8);
+            }
+            Message::SnapMeta { term, leader, xfer_id, last_index, last_term, manifest } => {
+                e.u8(8).u64(*term).u64(*leader).u64(*xfer_id).u64(*last_index).u64(*last_term);
+                e.len_bytes(manifest);
+            }
+            Message::SnapChunk { term, leader, xfer_id, offset, data } => {
+                e.u8(9).u64(*term).u64(*leader).u64(*xfer_id).u64(*offset).len_bytes(data);
+            }
+            Message::SnapAck { term, xfer_id, offset, done } => {
+                e.u8(10).u64(*term).u64(*xfer_id).u64(*offset).u8(*done as u8);
             }
         }
         e.into_vec()
@@ -262,8 +311,39 @@ impl Message {
                 read_index: d.u64()?,
                 ok: d.u8()? != 0,
             },
+            8 => Message::SnapMeta {
+                term: d.u64()?,
+                leader: d.u64()?,
+                xfer_id: d.u64()?,
+                last_index: d.u64()?,
+                last_term: d.u64()?,
+                manifest: d.len_bytes()?.to_vec(),
+            },
+            9 => Message::SnapChunk {
+                term: d.u64()?,
+                leader: d.u64()?,
+                xfer_id: d.u64()?,
+                offset: d.u64()?,
+                data: d.len_bytes()?.to_vec(),
+            },
+            10 => Message::SnapAck {
+                term: d.u64()?,
+                xfer_id: d.u64()?,
+                offset: d.u64()?,
+                done: d.u8()? != 0,
+            },
             other => bail!("rpc: unknown message tag {other}"),
         })
+    }
+
+    /// True for messages that carry snapshot-transfer payload —
+    /// attributed to `WireStats::snap_bytes` so fig4/fig5 wire lines
+    /// don't count catch-up traffic as steady-state replication.
+    pub fn is_snapshot_xfer(&self) -> bool {
+        matches!(
+            self,
+            Message::InstallSnapshot { .. } | Message::SnapMeta { .. } | Message::SnapChunk { .. }
+        )
     }
 }
 
@@ -313,6 +393,23 @@ mod tests {
             data: vec![1, 2, 3],
         });
         roundtrip(&Message::InstallSnapshotResp { term: 9, last_index: 100 });
+        roundtrip(&Message::SnapMeta {
+            term: 9,
+            leader: 3,
+            xfer_id: 42,
+            last_index: 100,
+            last_term: 8,
+            manifest: vec![7; 64],
+        });
+        roundtrip(&Message::SnapChunk {
+            term: 9,
+            leader: 3,
+            xfer_id: 42,
+            offset: 65536,
+            data: vec![0xab; 1000],
+        });
+        roundtrip(&Message::SnapAck { term: 9, xfer_id: 42, offset: 66536, done: false });
+        roundtrip(&Message::SnapAck { term: 9, xfer_id: 42, offset: u64::MAX, done: true });
         roundtrip(&Message::ReadIndex { term: 4, ctx: 77 });
         roundtrip(&Message::ReadIndexResp { term: 4, ctx: 77, read_index: 1234, ok: true });
         roundtrip(&Message::ReadIndexResp { term: 5, ctx: 0, read_index: 0, ok: false });
@@ -321,7 +418,7 @@ mod tests {
     #[test]
     fn random_messages_roundtrip() {
         prop::check("rpc-roundtrip", 300, |g| {
-            let m = match g.usize_in(0..6) {
+            let m = match g.usize_in(0..9) {
                 0 => Message::RequestVote {
                     term: g.u64(),
                     candidate: g.u64_in(0..8),
@@ -353,6 +450,27 @@ mod tests {
                     data: g.bytes(0..500),
                 },
                 3 => Message::ReadIndex { term: g.u64(), ctx: g.u64() },
+                6 => Message::SnapMeta {
+                    term: g.u64(),
+                    leader: g.u64_in(0..8),
+                    xfer_id: g.u64(),
+                    last_index: g.u64(),
+                    last_term: g.u64(),
+                    manifest: g.bytes(0..300),
+                },
+                7 => Message::SnapChunk {
+                    term: g.u64(),
+                    leader: g.u64_in(0..8),
+                    xfer_id: g.u64(),
+                    offset: g.u64(),
+                    data: g.bytes(0..500),
+                },
+                8 => Message::SnapAck {
+                    term: g.u64(),
+                    xfer_id: g.u64(),
+                    offset: g.u64(),
+                    done: g.bool(),
+                },
                 4 => Message::ReadIndexResp {
                     term: g.u64(),
                     ctx: g.u64(),

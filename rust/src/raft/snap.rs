@@ -1,0 +1,433 @@
+//! Streamed snapshot transfer: manifest, plan, and sender window.
+//!
+//! Catch-up ships the engine's sealed, immutable GC runs as files
+//! instead of one monolithic `snapshot_bytes()` blob (DESIGN.md §8).
+//! The leader asks its state machine for a [`SnapPlan`] — an ordered
+//! list of byte sources (run files on disk plus small in-memory
+//! residual items) — and streams them as one logical byte range:
+//! global offset 0 is the first byte of the first item, and chunks
+//! never span item boundaries so the receiver can land each item in
+//! its own staging file.
+//!
+//! The wire protocol is three messages ([`super::rpc::Message`]):
+//! `SnapMeta` (the encoded [`SnapManifest`]: names, lengths, CRCs,
+//! level shape — never data), `SnapChunk` (one bounded slice at an
+//! offset), and `SnapAck` (cumulative: the next offset the receiver
+//! wants). Offset-based acks make the stream resumable across
+//! reconnects, receiver restarts, and leader changes: a new or
+//! recovering sender re-offers `SnapMeta`, and the receiver answers
+//! with wherever its staging directory already got to.
+//!
+//! [`SnapSender`] is ack-clocked go-back-N with a bounded in-flight
+//! window, so a catch-up transfer can never starve `AppendEntries`
+//! to healthy followers: at most `window` chunks ride the wire per
+//! transfer, and new chunks are released only by acks (or a stall
+//! rewind on heartbeat ticks).
+
+use crate::util::{Decoder, Encoder};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Seek, SeekFrom};
+use std::path::PathBuf;
+
+use super::rpc::{LogIndex, Message, Term};
+
+/// One shipped file (or in-memory blob) in a snapshot transfer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SnapItem {
+    /// Name the receiver stages the bytes under (e.g. `sorted-42.vlog`).
+    pub name: String,
+    pub len: u64,
+    /// CRC32 of the item's full contents, verified at receiver commit.
+    pub crc: u32,
+}
+
+/// The transfer's table of contents, shipped encoded inside `SnapMeta`.
+///
+/// `shape` is an opaque engine-owned blob describing how the shipped
+/// items reassemble (for Nezha: the level stack, per-run tombstone
+/// counts, and partition groups of the `LEVELS` manifest).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SnapManifest {
+    pub last_index: LogIndex,
+    pub last_term: Term,
+    pub total_len: u64,
+    pub items: Vec<SnapItem>,
+    pub shape: Vec<u8>,
+}
+
+impl SnapManifest {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        e.u64(self.last_index).u64(self.last_term).u64(self.total_len);
+        e.varint(self.items.len() as u64);
+        for it in &self.items {
+            e.len_bytes(it.name.as_bytes()).u64(it.len).u32(it.crc);
+        }
+        e.len_bytes(&self.shape);
+        e.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut d = Decoder::new(buf);
+        let last_index = d.u64()?;
+        let last_term = d.u64()?;
+        let total_len = d.u64()?;
+        let n = d.varint()? as usize;
+        if n > 1 << 20 {
+            bail!("snap manifest: absurd item count {n}");
+        }
+        let mut items = Vec::with_capacity(n);
+        let mut sum = 0u64;
+        for _ in 0..n {
+            let name = String::from_utf8(d.len_bytes()?.to_vec())
+                .context("snap manifest: item name not utf8")?;
+            let len = d.u64()?;
+            let crc = d.u32()?;
+            sum = sum.saturating_add(len);
+            items.push(SnapItem { name, len, crc });
+        }
+        let shape = d.len_bytes()?.to_vec();
+        if d.remaining() != 0 {
+            bail!("snap manifest: trailing bytes");
+        }
+        if sum != total_len {
+            bail!("snap manifest: item lengths sum {sum} != total {total_len}");
+        }
+        Ok(Self { last_index, last_term, total_len, items, shape })
+    }
+}
+
+/// Where a plan item's bytes come from on the sender.
+#[derive(Clone, Debug)]
+pub enum PlanSource {
+    /// A sealed, immutable file on disk (pinned against GC deletion
+    /// for the life of the plan).
+    File(PathBuf),
+    /// Small in-memory bytes (the residual-epoch tail).
+    Bytes(Vec<u8>),
+}
+
+#[derive(Clone, Debug)]
+pub struct PlanItem {
+    pub name: String,
+    pub len: u64,
+    pub crc: u32,
+    pub src: PlanSource,
+}
+
+/// The sender-side snapshot plan a state machine hands to raft.
+///
+/// `id` is engine-scoped: the engine keeps the named runs pinned
+/// (deletion-deferred) until [`super::node::StateMachine::snap_stream_end`]
+/// releases it.
+#[derive(Clone, Debug)]
+pub struct SnapPlan {
+    pub id: u64,
+    pub last_index: LogIndex,
+    pub last_term: Term,
+    pub items: Vec<PlanItem>,
+    pub shape: Vec<u8>,
+}
+
+impl SnapPlan {
+    pub fn total_len(&self) -> u64 {
+        self.items.iter().map(|i| i.len).sum()
+    }
+
+    pub fn manifest(&self) -> SnapManifest {
+        SnapManifest {
+            last_index: self.last_index,
+            last_term: self.last_term,
+            total_len: self.total_len(),
+            items: self
+                .items
+                .iter()
+                .map(|i| SnapItem { name: i.name.clone(), len: i.len, crc: i.crc })
+                .collect(),
+            shape: self.shape.clone(),
+        }
+    }
+}
+
+/// Heartbeat ticks with zero ack progress before the sender rewinds
+/// to the last cumulative ack and re-offers `SnapMeta` (covers lost
+/// chunks, lost acks, and receiver restarts alike).
+const STALL_TICKS: u32 = 3;
+
+/// Per-follower sender state for one streamed snapshot transfer.
+pub struct SnapSender {
+    pub xfer_id: u64,
+    plan: SnapPlan,
+    manifest_bytes: Vec<u8>,
+    total_len: u64,
+    /// Cumulative ack: everything below this offset is at the receiver.
+    pub acked: u64,
+    /// Next offset to put on the wire.
+    next: u64,
+    meta_acked: bool,
+    chunk_bytes: usize,
+    window: usize,
+    idle_ticks: u32,
+}
+
+impl SnapSender {
+    pub fn new(plan: SnapPlan, xfer_id: u64, chunk_bytes: usize, window: usize) -> Self {
+        let manifest_bytes = plan.manifest().encode();
+        let total_len = plan.total_len();
+        Self {
+            xfer_id,
+            plan,
+            manifest_bytes,
+            total_len,
+            acked: 0,
+            next: 0,
+            meta_acked: false,
+            chunk_bytes: chunk_bytes.max(1),
+            window: window.max(1),
+            idle_ticks: 0,
+        }
+    }
+
+    pub fn plan_id(&self) -> u64 {
+        self.plan.id
+    }
+
+    pub fn last_index(&self) -> LogIndex {
+        self.plan.last_index
+    }
+
+    pub fn last_term(&self) -> Term {
+        self.plan.last_term
+    }
+
+    pub fn total_len(&self) -> u64 {
+        self.total_len
+    }
+
+    pub fn meta_msg(&self, term: Term, leader: u64) -> Message {
+        Message::SnapMeta {
+            term,
+            leader,
+            xfer_id: self.xfer_id,
+            last_index: self.plan.last_index,
+            last_term: self.plan.last_term,
+            manifest: self.manifest_bytes.clone(),
+        }
+    }
+
+    /// Process a cumulative ack; returns the burst of chunks the
+    /// freed window admits. The first ack also confirms `SnapMeta`
+    /// (it carries the receiver's resume offset).
+    pub fn on_ack(&mut self, offset: u64) -> Result<Vec<Message>> {
+        let offset = offset.min(self.total_len);
+        if !self.meta_acked {
+            // Resume point from the receiver's staging dir.
+            self.meta_acked = true;
+            self.acked = offset;
+            self.next = offset;
+            self.idle_ticks = 0;
+        } else if offset > self.acked {
+            self.acked = offset;
+            if offset > self.next {
+                self.next = offset;
+            }
+            self.idle_ticks = 0;
+        } else {
+            // Duplicate ack: the receiver is re-requesting `offset`
+            // (a gap — lost or reordered chunk). Go-back-N.
+            self.next = offset;
+            self.acked = offset;
+        }
+        Ok(Vec::new())
+    }
+
+    /// Fill the in-flight window with chunks starting at `next`.
+    pub fn fill_window(&mut self, term: Term, leader: u64) -> Result<Vec<Message>> {
+        if !self.meta_acked {
+            return Ok(Vec::new());
+        }
+        let limit = self.acked.saturating_add((self.window * self.chunk_bytes) as u64);
+        let mut out = Vec::new();
+        while self.next < self.total_len && self.next < limit {
+            let want = (self.chunk_bytes as u64).min(limit - self.next);
+            let data = self.read_at(self.next, want as usize)?;
+            if data.is_empty() {
+                bail!("snap sender: zero-length read at offset {}", self.next);
+            }
+            let len = data.len() as u64;
+            out.push(Message::SnapChunk {
+                term,
+                leader,
+                xfer_id: self.xfer_id,
+                offset: self.next,
+                data,
+            });
+            self.next += len;
+        }
+        Ok(out)
+    }
+
+    /// Heartbeat-driven maintenance: re-offer `SnapMeta` until acked,
+    /// and rewind to the cumulative ack after a stall.
+    pub fn tick(&mut self, term: Term, leader: u64) -> Result<Vec<Message>> {
+        if !self.meta_acked {
+            return Ok(vec![self.meta_msg(term, leader)]);
+        }
+        if self.acked >= self.total_len {
+            // Everything delivered; nudge the receiver if the final
+            // done-ack went missing.
+            self.idle_ticks += 1;
+            if self.idle_ticks >= STALL_TICKS {
+                self.idle_ticks = 0;
+                return Ok(vec![self.meta_msg(term, leader)]);
+            }
+            return Ok(Vec::new());
+        }
+        self.idle_ticks += 1;
+        if self.idle_ticks >= STALL_TICKS {
+            self.idle_ticks = 0;
+            self.next = self.acked;
+            return self.fill_window(term, leader);
+        }
+        Ok(Vec::new())
+    }
+
+    /// Read `max` bytes at global `offset`, clipped so the slice never
+    /// crosses an item boundary (each staged file lands whole).
+    fn read_at(&self, offset: u64, max: usize) -> Result<Vec<u8>> {
+        let mut base = 0u64;
+        for item in &self.plan.items {
+            if offset < base + item.len {
+                let rel = offset - base;
+                let n = ((item.len - rel) as usize).min(max);
+                return match &item.src {
+                    PlanSource::Bytes(b) => Ok(b[rel as usize..rel as usize + n].to_vec()),
+                    PlanSource::File(path) => {
+                        let mut f = std::fs::File::open(path)
+                            .with_context(|| format!("snap sender: open {}", path.display()))?;
+                        f.seek(SeekFrom::Start(rel))?;
+                        let mut buf = vec![0u8; n];
+                        f.read_exact(&mut buf).with_context(|| {
+                            format!("snap sender: short read {} @{rel}", path.display())
+                        })?;
+                        Ok(buf)
+                    }
+                };
+            }
+            base += item.len;
+        }
+        bail!("snap sender: offset {offset} beyond total {}", self.total_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bytes_plan(chunks: &[&[u8]]) -> SnapPlan {
+        SnapPlan {
+            id: 1,
+            last_index: 10,
+            last_term: 2,
+            items: chunks
+                .iter()
+                .enumerate()
+                .map(|(i, b)| PlanItem {
+                    name: format!("item-{i}"),
+                    len: b.len() as u64,
+                    crc: crc32fast::hash(b),
+                    src: PlanSource::Bytes(b.to_vec()),
+                })
+                .collect(),
+            shape: vec![9, 9],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let m = bytes_plan(&[b"hello", b"world!!"]).manifest();
+        let enc = m.encode();
+        assert_eq!(SnapManifest::decode(&enc).unwrap(), m);
+    }
+
+    #[test]
+    fn manifest_truncation_and_corruption_rejected() {
+        let m = bytes_plan(&[b"hello", b"world!!"]).manifest();
+        let enc = m.encode();
+        for cut in 0..enc.len() {
+            assert!(SnapManifest::decode(&enc[..cut]).is_err(), "cut at {cut} accepted");
+        }
+        // Flip a length byte: item sums no longer match total.
+        let mut bad = enc.clone();
+        bad[16] ^= 0xff; // total_len field
+        assert!(SnapManifest::decode(&bad).is_err());
+        // Trailing garbage rejected.
+        let mut long = enc.clone();
+        long.push(0);
+        assert!(SnapManifest::decode(&long).is_err());
+    }
+
+    #[test]
+    fn read_at_respects_item_boundaries() {
+        let plan = bytes_plan(&[b"aaaa", b"bb", b"cccccc"]);
+        let s = SnapSender::new(plan, 7, 100, 4);
+        assert_eq!(s.read_at(0, 100).unwrap(), b"aaaa");
+        assert_eq!(s.read_at(2, 100).unwrap(), b"aa");
+        assert_eq!(s.read_at(4, 100).unwrap(), b"bb");
+        assert_eq!(s.read_at(6, 3).unwrap(), b"ccc");
+        assert_eq!(s.read_at(11, 100).unwrap(), b"c");
+        assert!(s.read_at(12, 1).is_err());
+    }
+
+    #[test]
+    fn window_is_ack_clocked() {
+        let plan = bytes_plan(&[&[1u8; 10][..]]);
+        let mut s = SnapSender::new(plan, 7, 2, 2); // 2-byte chunks, window 2
+        // Meta not acked yet: nothing flows.
+        assert!(s.fill_window(1, 0).unwrap().is_empty());
+        // Receiver acks resume offset 0 → window opens: 2 chunks.
+        s.on_ack(0).unwrap();
+        let burst = s.fill_window(1, 0).unwrap();
+        assert_eq!(burst.len(), 2);
+        // Window full: nothing more until an ack.
+        assert!(s.fill_window(1, 0).unwrap().is_empty());
+        // Ack first chunk → one more slot.
+        s.on_ack(2).unwrap();
+        assert_eq!(s.fill_window(1, 0).unwrap().len(), 1);
+        // Duplicate ack rewinds (go-back-N).
+        s.on_ack(2).unwrap();
+        let resend = s.fill_window(1, 0).unwrap();
+        assert!(matches!(
+            &resend[0],
+            Message::SnapChunk { offset: 2, .. }
+        ));
+    }
+
+    #[test]
+    fn resume_offset_skips_delivered_prefix() {
+        let plan = bytes_plan(&[&[3u8; 8][..]]);
+        let mut s = SnapSender::new(plan, 7, 4, 4);
+        s.on_ack(4).unwrap(); // receiver already staged 4 bytes
+        let burst = s.fill_window(1, 0).unwrap();
+        assert_eq!(burst.len(), 1);
+        assert!(matches!(&burst[0], Message::SnapChunk { offset: 4, data, .. } if data.len() == 4));
+    }
+
+    #[test]
+    fn stall_rewinds_and_resends() {
+        let plan = bytes_plan(&[&[5u8; 6][..]]);
+        let mut s = SnapSender::new(plan, 7, 2, 3);
+        // Unacked meta: every tick re-offers it.
+        assert!(matches!(&s.tick(1, 0).unwrap()[0], Message::SnapMeta { .. }));
+        s.on_ack(0).unwrap();
+        let sent = s.fill_window(1, 0).unwrap();
+        assert_eq!(sent.len(), 3);
+        // No acks arrive: after STALL_TICKS the window replays from 0.
+        let mut replay = Vec::new();
+        for _ in 0..STALL_TICKS {
+            replay = s.tick(1, 0).unwrap();
+        }
+        assert_eq!(replay.len(), 3);
+        assert!(matches!(&replay[0], Message::SnapChunk { offset: 0, .. }));
+    }
+}

@@ -75,6 +75,11 @@ impl Default for NetConfig {
 pub struct WireStats {
     pub msgs: AtomicU64,
     pub bytes: AtomicU64,
+    /// Subset of `bytes` carried by snapshot-transfer frames
+    /// (`InstallSnapshot`, `SnapMeta`, `SnapChunk` — DESIGN.md §8), so
+    /// steady-state replication traffic in fig4/fig5 wire lines is
+    /// never inflated by a concurrent follower catch-up.
+    pub snap_bytes: AtomicU64,
     pub dropped: AtomicU64,
     pub fault_dropped: AtomicU64,
     pub reconnects: AtomicU64,
@@ -85,9 +90,20 @@ impl WireStats {
         WireSnapshot {
             msgs: self.msgs.load(Ordering::Relaxed),
             bytes: self.bytes.load(Ordering::Relaxed),
+            snap_bytes: self.snap_bytes.load(Ordering::Relaxed),
             dropped: self.dropped.load(Ordering::Relaxed),
             fault_dropped: self.fault_dropped.load(Ordering::Relaxed),
             reconnects: self.reconnects.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Count one outbound frame (shared by every transport's send
+    /// path), attributing snapshot-transfer frames to `snap_bytes`.
+    fn count_send(&self, msg: &Message, encoded_len: usize) {
+        self.msgs.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(encoded_len as u64, Ordering::Relaxed);
+        if msg.is_snapshot_xfer() {
+            self.snap_bytes.fetch_add(encoded_len as u64, Ordering::Relaxed);
         }
     }
 
@@ -106,6 +122,9 @@ impl WireStats {
 pub struct WireSnapshot {
     pub msgs: u64,
     pub bytes: u64,
+    /// Subset of `bytes` carried by snapshot-transfer frames
+    /// (DESIGN.md §8).
+    pub snap_bytes: u64,
     pub dropped: u64,
     /// Subset of `dropped` caused by injected faults.
     pub fault_dropped: u64,
@@ -118,6 +137,7 @@ impl WireSnapshot {
     pub fn absorb(&mut self, other: WireSnapshot) {
         self.msgs += other.msgs;
         self.bytes += other.bytes;
+        self.snap_bytes += other.snap_bytes;
         self.dropped += other.dropped;
         self.fault_dropped += other.fault_dropped;
         self.reconnects += other.reconnects;
@@ -358,8 +378,7 @@ impl SimNet {
 impl Transport for SimNet {
     fn send(&mut self, from: NodeId, to: NodeId, msg: Message) {
         let buf = msg.encode();
-        self.stats.msgs.fetch_add(1, Ordering::Relaxed);
-        self.stats.bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        self.stats.count_send(&msg, buf.len());
         // Configured (structural) loss draws first so the fault plan
         // never perturbs the baseline RNG sequence.
         if self.cfg.loss > 0.0 && self.rng.chance(self.cfg.loss) {
@@ -585,8 +604,7 @@ impl Bus {
 
     pub fn send(&self, from: NodeId, to: NodeId, msg: &Message) {
         let buf = msg.encode();
-        self.stats.msgs.fetch_add(1, Ordering::Relaxed);
-        self.stats.bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        self.stats.count_send(msg, buf.len());
         if self.cfg.loss > 0.0 && self.rng.lock().unwrap().chance(self.cfg.loss) {
             self.stats.count_drop(false);
             return;
@@ -807,12 +825,39 @@ mod tests {
         s.msgs.fetch_add(3, Ordering::Relaxed);
         s.bytes.fetch_add(100, Ordering::Relaxed);
         let mut a = s.snapshot();
-        let other =
-            WireSnapshot { msgs: 1, bytes: 10, dropped: 2, fault_dropped: 1, reconnects: 4 };
+        let other = WireSnapshot {
+            msgs: 1,
+            bytes: 10,
+            snap_bytes: 7,
+            dropped: 2,
+            fault_dropped: 1,
+            reconnects: 4,
+        };
         a.absorb(other);
-        let want =
-            WireSnapshot { msgs: 4, bytes: 110, dropped: 2, fault_dropped: 1, reconnects: 4 };
+        let want = WireSnapshot {
+            msgs: 4,
+            bytes: 110,
+            snap_bytes: 7,
+            dropped: 2,
+            fault_dropped: 1,
+            reconnects: 4,
+        };
         assert_eq!(a, want);
+    }
+
+    #[test]
+    fn snapshot_xfer_frames_attribute_to_snap_bytes() {
+        let mut net = SimNet::new(NetConfig { latency_us: (10, 10), loss: 0.0, seed: 7 });
+        net.send(1, 2, msg(1)); // AppendEntries: replication traffic
+        net.send(
+            1,
+            2,
+            Message::SnapChunk { term: 1, leader: 1, xfer_id: 9, offset: 0, data: vec![0xAB; 64] },
+        );
+        let s = net.stats.snapshot();
+        assert_eq!(s.msgs, 2);
+        assert!(s.snap_bytes > 64, "chunk frame counted");
+        assert!(s.snap_bytes < s.bytes, "replication frame not counted");
     }
 
     #[test]

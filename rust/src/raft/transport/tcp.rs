@@ -274,8 +274,7 @@ impl TcpNet {
     pub fn send(&self, from: NodeId, to: NodeId, msg: &Message) {
         let buf = msg.encode();
         let stats = &self.inner.stats;
-        stats.msgs.fetch_add(1, Ordering::Relaxed);
-        stats.bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        stats.count_send(msg, buf.len());
         if buf.len() > MAX_FRAME {
             // The receiver would reject the length prefix and kill
             // the connection, and Raft would retry the identical

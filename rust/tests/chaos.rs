@@ -96,6 +96,18 @@ fn chaos_torn_partitioned_merge() {
     run_schedule(ScheduleKind::TornPartitionedMerge, TransportKind::Inproc);
 }
 
+/// The torn-snapshot-stream drill (DESIGN.md §8): a follower crashes,
+/// falls behind a compacting leader, and its restart needs a
+/// run-shipping catch-up transfer that is torn three ways — a staging
+/// disk fault mid-stream, a receiver crash, and finally a sender
+/// (leader) crash.  Resume-or-restart must leave an installed state
+/// that serves every acknowledged write; a torn transfer must never be
+/// read as installed.
+#[test]
+fn chaos_torn_snapshot_stream() {
+    run_schedule(ScheduleKind::TornSnapshotStream, TransportKind::Inproc);
+}
+
 /// The torn-group-commit drill over real sockets: the leader dies with
 /// its raft-log fsync failed *after* the pipelined broadcast left via
 /// TCP, and acknowledged writes must survive its recovery.
@@ -130,6 +142,26 @@ fn chaos_torn_partitioned_merge_over_tcp() {
     if let Some(v) = &report.violation {
         panic!(
             "tcp torn-partitioned-merge: {v}\n  nemesis log:\n    {}",
+            report.nemesis_log.join("\n    ")
+        );
+    }
+}
+
+/// The torn-snapshot-stream drill over real sockets: the catch-up
+/// chunks cross TCP framing, the receiver's staging tears on a disk
+/// fault, both ends die mid-transfer at different points, and the
+/// history must stay linearizable.
+#[test]
+fn chaos_torn_snapshot_stream_over_tcp() {
+    let mut opts = ChaosOpts::new(5, ScheduleKind::TornSnapshotStream);
+    opts.read_consistency = ReadConsistency::Linearizable;
+    opts.transport = TransportKind::Tcp;
+    opts.run_ms = 2_200;
+    let report = run_chaos(&opts).expect("tcp torn-snapshot-stream harness");
+    assert!(report.writes > 0 && report.reads > 0, "degenerate run: {report:?}");
+    if let Some(v) = &report.violation {
+        panic!(
+            "tcp torn-snapshot-stream: {v}\n  nemesis log:\n    {}",
             report.nemesis_log.join("\n    ")
         );
     }
