@@ -9,8 +9,9 @@
 //!    entry with monotonic call/return timestamps,
 //! 3. walk a [`Nemesis`] schedule against the live cluster — leader
 //!    partitions, link flapping, disk-fault + crash + restart, torn
-//!    group commit, torn partitioned merge, torn snapshot stream —
-//!    picked by [`ScheduleKind`],
+//!    group commit, torn partitioned merge, torn snapshot stream,
+//!    membership churn (add a learner, crash it mid-catch-up, remove
+//!    the leader) — picked by [`ScheduleKind`],
 //! 4. repair everything (heal, disarm disk faults, restart dead
 //!    nodes), let the clients run a short post-heal grace period so
 //!    the rejoined node serves traffic,
@@ -92,16 +93,28 @@ pub enum ScheduleKind {
     /// restarts it.  Every acknowledged write must survive, i.e. a
     /// torn transfer is never read as installed.
     TornSnapshotStream,
+    /// Membership churn (DESIGN.md §9): grow the group by a brand-new
+    /// node at 10% (it joins as a learner and catches up — with small
+    /// snapshot chunks so a streamed transfer spans many frames),
+    /// crash that joining node mid-catch-up at 30%, remove the
+    /// *current leader* at 45% (it replicates its own removal without
+    /// counting itself, steps down on commit and transfers
+    /// leadership), restart the joiner at 55%, and clear residual
+    /// network faults at 70%.  The cluster churns 3 → 4 → 3 members
+    /// under live load and every acknowledged write must stay
+    /// linearizable throughout.
+    MembershipChurn,
 }
 
 impl ScheduleKind {
-    pub const ALL: [ScheduleKind; 6] = [
+    pub const ALL: [ScheduleKind; 7] = [
         ScheduleKind::PartitionHeal,
         ScheduleKind::CrashRestartMidGc,
         ScheduleKind::FlappingLinks,
         ScheduleKind::TornGroupCommit,
         ScheduleKind::TornPartitionedMerge,
         ScheduleKind::TornSnapshotStream,
+        ScheduleKind::MembershipChurn,
     ];
 
     pub fn name(self) -> &'static str {
@@ -112,6 +125,7 @@ impl ScheduleKind {
             ScheduleKind::TornGroupCommit => "torn-group-commit",
             ScheduleKind::TornPartitionedMerge => "torn-partitioned-merge",
             ScheduleKind::TornSnapshotStream => "torn-snapshot-stream",
+            ScheduleKind::MembershipChurn => "membership-churn",
         }
     }
 
@@ -200,6 +214,13 @@ impl ScheduleKind {
                 NemesisEvent { at_ms: at(0.62), op: NemesisOp::ClearDiskFaults },
                 NemesisEvent { at_ms: at(0.68), op: NemesisOp::RestartRemembered },
                 NemesisEvent { at_ms: at(0.8), op: NemesisOp::CrashLeader { shard: 0 } },
+            ],
+            ScheduleKind::MembershipChurn => vec![
+                NemesisEvent { at_ms: at(0.1), op: NemesisOp::AddNode { shard: 0 } },
+                NemesisEvent { at_ms: at(0.3), op: NemesisOp::CrashRemembered },
+                NemesisEvent { at_ms: at(0.45), op: NemesisOp::RemoveLeader { shard: 0 } },
+                NemesisEvent { at_ms: at(0.55), op: NemesisOp::RestartRemembered },
+                NemesisEvent { at_ms: at(0.7), op: NemesisOp::ClearNetFaults },
             ],
         }
     }
@@ -332,6 +353,15 @@ pub fn run_chaos(opts: &ChaosOpts) -> Result<ChaosReport> {
         cfg.engine.gc_level0_bytes = 32 << 10;
         cfg.engine.gc_fanout = 4;
     }
+    if opts.schedule == ScheduleKind::MembershipChurn {
+        // The joining learner may need a streamed snapshot (the leader
+        // GCs during the run); small chunks make that transfer span
+        // many frames so the 30% crash genuinely lands mid-stream.
+        cfg.raft.snap_chunk_bytes = 4 << 10;
+        cfg.raft.snap_window = 2;
+        cfg.engine.gc_level0_bytes = 32 << 10;
+        cfg.engine.gc_fanout = 4;
+    }
     // A clean slate in case an earlier run in this process armed one.
     crate::fault::disk::clear();
 
@@ -396,7 +426,10 @@ pub fn run_chaos(opts: &ChaosOpts) -> Result<ChaosReport> {
     crate::fault::disk::clear();
     let alive = cluster.node_ids();
     let mut restarted = Vec::new();
-    for id in 1..=3u64 {
+    // Walk the *membership view*, not `1..=3`: churn schedules may
+    // have added node 4 and removed an original — a removed node must
+    // stay down, a dead member (whatever its id) must come back.
+    for id in cluster.shard_members(0) {
         if !alive.contains(&id) {
             cluster.restart(0, id).with_context(|| format!("repair restart of node {id}"))?;
             restarted.push(id);

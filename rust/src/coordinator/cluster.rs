@@ -49,8 +49,8 @@ use crate::fault::FaultPlan;
 use crate::gc::{GcConfig, GcOutput, GcPhase};
 use crate::raft::node::Outbox;
 use crate::raft::{
-    ApplyLane, Bus, Command, Config as RaftConfig, Net, NetConfig, NodeId, Role, StateMachine,
-    TcpNet, TransportKind, WireSnapshot,
+    ApplyLane, Bus, Command, Config as RaftConfig, ConfChange, Net, NetConfig, NodeId, Role,
+    StateMachine, TcpNet, TransportKind, WireSnapshot,
 };
 use crate::runtime::reactor::{self, PollOutcome, Reactor, Task, TaskId};
 use anyhow::{anyhow, bail, Result};
@@ -112,6 +112,15 @@ pub enum Req {
     Status {
         resp: SyncSender<Status>,
     },
+    /// Leader-side membership change (DESIGN.md §9): propose one
+    /// `ConfChange` entry and answer once it is applied locally.
+    /// Non-leaders reject with the standard `not leader` redirect; a
+    /// second change while one is in flight rejects with an
+    /// `in flight` error the caller retries.
+    ConfChange {
+        cc: ConfChange,
+        resp: SyncSender<Result<()>>,
+    },
     /// Block until any in-flight GC cycle completes.
     DrainGc {
         resp: SyncSender<Result<()>>,
@@ -148,6 +157,11 @@ pub struct Status {
     pub gc_cycles: u64,
     /// Streamed-snapshot transfer progress (DESIGN.md §8).
     pub snap: SnapProgress,
+    /// Voting members of this replica's active Raft config (its own
+    /// view — during a change, views may briefly differ across nodes).
+    pub voters: Vec<NodeId>,
+    /// Non-voting learners still catching up (DESIGN.md §9).
+    pub learners: Vec<NodeId>,
 }
 
 /// One replica's run-shipping catch-up counters (DESIGN.md §8): chunk
@@ -284,8 +298,20 @@ pub struct Cluster {
     leader_cache: Vec<Mutex<Option<NodeId>>>,
     /// Per-shard round-robin cursor for replica-served reads.
     read_rr: Vec<AtomicUsize>,
+    /// Per-shard membership bookkeeping for dynamic add/remove
+    /// (DESIGN.md §9).
+    membership: Vec<Mutex<Membership>>,
     /// The shared worker pool every replica task runs on.
     reactor: Reactor,
+}
+
+/// The coordinator's per-shard membership view: which node ids it
+/// currently runs (voters plus any still-catching-up learner) and the
+/// next fresh id.  Ids are never reused — a removed node's stale data
+/// directory must never resurrect under a live id.
+struct Membership {
+    members: Vec<NodeId>,
+    next_id: NodeId,
 }
 
 /// Open one (shard, node) replica and schedule its consensus task and
@@ -299,10 +325,11 @@ pub(crate) fn spawn_replica(
     net: &Net,
     shard: ShardId,
     id: NodeId,
+    members: &[NodeId],
+    learner: bool,
     mailbox: Arc<crate::raft::transport::Mailbox>,
 ) -> Result<NodeSlot> {
-    let ids: Vec<NodeId> = (1..=cfg.nodes as u64).collect();
-    let peers: Vec<NodeId> = ids.into_iter().filter(|&p| p != id).collect();
+    let peers: Vec<NodeId> = members.iter().copied().filter(|&p| p != id).collect();
     let base = shard_dir(&cfg.base_dir, id, shard);
     let mut opts = cfg.engine.clone();
     // Asymmetric role assignment, rotated per shard: shard `s` prefers
@@ -318,18 +345,18 @@ pub(crate) fn spawn_replica(
         raft_cfg.election_timeout_max = raft_cfg.election_timeout_min + 2;
     }
     opts.follower = cfg.kind == EngineKind::LsmRaft && id != preferred;
-    let mut replica = Replica::open(
-        id,
-        peers,
-        &base,
-        cfg.kind,
-        opts,
-        raft_cfg,
-        cfg.gc.clone(),
-        // Distinct election jitter per shard group (shard 0 keeps the
-        // configured seed, preserving single-shard determinism).
-        cfg.seed.wrapping_add(shard as u64 * 7919),
-    )?;
+    // Distinct election jitter per shard group (shard 0 keeps the
+    // configured seed, preserving single-shard determinism).
+    let seed = cfg.seed.wrapping_add(shard as u64 * 7919);
+    let mut replica = if learner {
+        // A joining node starts as a non-voting learner of the current
+        // voter set; the persisted members sidecar takes over from the
+        // constructor args on every later restart (DESIGN.md §9).
+        let voters: Vec<NodeId> = members.to_vec();
+        Replica::open_learner(id, voters, &base, cfg.kind, opts, raft_cfg, cfg.gc.clone(), seed)?
+    } else {
+        Replica::open(id, peers, &base, cfg.kind, opts, raft_cfg, cfg.gc.clone(), seed)?
+    };
     let lane = ApplyLane::new();
     replica.node.attach_apply_lane(Arc::clone(&lane));
     let engine = replica.engine_cell();
@@ -395,13 +422,24 @@ impl Cluster {
                 mailboxes.push(net.register(id)?);
             }
             for (&id, mailbox) in ids.iter().zip(mailboxes) {
-                slots.insert((shard, id), spawn_replica(&reactor, &cfg, &net, shard, id, mailbox)?);
+                slots.insert(
+                    (shard, id),
+                    spawn_replica(&reactor, &cfg, &net, shard, id, &ids, false, mailbox)?,
+                );
             }
             nets.push(net);
         }
         let cluster = Self {
             leader_cache: (0..shards).map(|_| Mutex::new(None)).collect(),
             read_rr: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
+            membership: (0..shards)
+                .map(|_| {
+                    Mutex::new(Membership {
+                        members: ids.clone(),
+                        next_id: cfg.nodes as NodeId + 1,
+                    })
+                })
+                .collect(),
             cfg,
             slots: Mutex::new(slots),
             nets,
@@ -1071,8 +1109,9 @@ impl Cluster {
     /// its data directory holds — raft log replay, engine recovery,
     /// and any interrupted GC cycle's resumption included.
     pub fn restart(&self, shard: ShardId, id: NodeId) -> Result<()> {
-        if id == 0 || id > self.cfg.nodes as NodeId {
-            bail!("node {id} is not a member (1..={})", self.cfg.nodes);
+        let members = self.shard_members(shard);
+        if !members.contains(&id) {
+            bail!("node {id} is not a member of shard {shard} ({members:?})");
         }
         {
             let slots = self.slots.lock().unwrap();
@@ -1082,8 +1121,139 @@ impl Cluster {
         }
         let net = &self.nets[shard as usize];
         let mailbox = net.register(id)?;
-        let t = spawn_replica(&self.reactor, &self.cfg, net, shard, id, mailbox)?;
+        // Constructor membership is only a hint here: the replica's
+        // persisted members sidecar (written on every config change)
+        // outranks it, so a node restarted mid-change resumes with
+        // exactly the config it last persisted.
+        let t = spawn_replica(&self.reactor, &self.cfg, net, shard, id, &members, false, mailbox)?;
         self.slots.lock().unwrap().insert((shard, id), t);
+        *self.leader_cache[shard as usize].lock().unwrap() = None;
+        Ok(())
+    }
+
+    /// The coordinator's membership view of one shard: every node id
+    /// it currently operates there (voters plus any still-catching-up
+    /// learner), sorted.  This is the roster nemesis drivers and
+    /// repair loops should iterate — NOT `1..=nodes`, which is only
+    /// the boot-time roster.
+    pub fn shard_members(&self, shard: ShardId) -> Vec<NodeId> {
+        let mut v = self.membership[shard as usize].lock().unwrap().members.clone();
+        v.sort_unstable();
+        v
+    }
+
+    /// Propose one membership change at the shard's leader, retrying
+    /// through leadership moves and the one-in-flight gate, and
+    /// treating "already done" rejections as success so a retry after
+    /// an indeterminate first attempt converges (DESIGN.md §9).
+    fn conf_change(&self, shard: ShardId, cc: ConfChange) -> Result<()> {
+        let mut last = String::new();
+        for _attempt in 0..40 {
+            let Ok(l) = self.shard_leader(shard) else {
+                std::thread::sleep(Duration::from_millis(100));
+                continue;
+            };
+            let (tx, rx) = mpsc::sync_channel(1);
+            if self.req(shard, l, Req::ConfChange { cc, resp: tx }).is_err() {
+                *self.leader_cache[shard as usize].lock().unwrap() = None;
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+            match rx.recv_timeout(Duration::from_secs(10)) {
+                Ok(Ok(())) => return Ok(()),
+                Ok(Err(e)) => {
+                    let msg = format!("{e:#}");
+                    // Idempotent outcomes: a previous (indeterminate)
+                    // attempt already took effect.
+                    if msg.contains("already a member")
+                        || msg.contains("already a voter")
+                        || msg.contains("is not a member")
+                        || msg.contains("is not a learner")
+                    {
+                        return Ok(());
+                    }
+                    if msg.contains("in flight") {
+                        // One change at a time: wait for the pending
+                        // entry to commit, then retry.
+                        std::thread::sleep(Duration::from_millis(200));
+                    } else if msg.contains("not leader") {
+                        *self.leader_cache[shard as usize].lock().unwrap() = None;
+                        std::thread::sleep(Duration::from_millis(50));
+                    } else {
+                        return Err(e);
+                    }
+                    last = msg;
+                }
+                Err(_) => {
+                    // Indeterminate: the change may or may not have
+                    // committed.  Refresh the leader and retry — the
+                    // idempotent-success arms above absorb a duplicate.
+                    *self.leader_cache[shard as usize].lock().unwrap() = None;
+                    std::thread::sleep(Duration::from_millis(100));
+                    last = format!("timed out awaiting {cc:?} on shard {shard}");
+                }
+            }
+        }
+        bail!("conf change {cc:?} did not commit on shard {shard}: {last}")
+    }
+
+    /// Grow one shard's Raft group by a brand-new node (DESIGN.md §9):
+    /// allocate a fresh id, spawn it as a non-voting learner with an
+    /// empty data directory, and propose `AddLearner` at the leader.
+    /// The learner catches up through normal replication (or the
+    /// streamed snapshot path when the leader already compacted) and
+    /// the leader auto-promotes it to voter once its match index is
+    /// within `Config::promote_lag` of the log head.  Returns the new
+    /// node's id as soon as the `AddLearner` entry commits — poll
+    /// [`Self::shard_status`] to observe the promotion.
+    pub fn add_node(&self, shard: ShardId) -> Result<NodeId> {
+        let (id, members) = {
+            let mut m = self.membership[shard as usize].lock().unwrap();
+            let id = m.next_id;
+            m.next_id += 1;
+            (id, m.members.clone())
+        };
+        // A fresh id never has prior state, but wipe defensively: a
+        // stale directory under a recycled path must not smuggle in an
+        // old config or log.
+        let dir = shard_dir(&self.cfg.base_dir, id, shard);
+        let _ = std::fs::remove_dir_all(&dir);
+        let net = &self.nets[shard as usize];
+        let mailbox = net.register(id)?;
+        let t = match spawn_replica(&self.reactor, &self.cfg, net, shard, id, &members, true, mailbox)
+        {
+            Ok(t) => t,
+            Err(e) => {
+                net.unregister(id);
+                return Err(e);
+            }
+        };
+        self.slots.lock().unwrap().insert((shard, id), t);
+        if let Err(e) = self.conf_change(shard, ConfChange::AddLearner(id)) {
+            // Roll the spawn back: the group never learned about the
+            // node, so tearing it down leaves no trace.
+            let _ = self.stop_node(shard, id, Req::Stop);
+            return Err(e);
+        }
+        self.membership[shard as usize].lock().unwrap().members.push(id);
+        Ok(id)
+    }
+
+    /// Shrink one shard's Raft group (DESIGN.md §9): propose `Remove`
+    /// at the leader — which keeps replicating without counting itself
+    /// if it is removing *itself*, then steps down and hands
+    /// leadership off once the entry commits — and stop the removed
+    /// replica's tasks after the change is in.  Safe for the leader's
+    /// own id.
+    pub fn remove_node(&self, shard: ShardId, id: NodeId) -> Result<()> {
+        if !self.shard_members(shard).contains(&id) {
+            bail!("node {id} is not a member of shard {shard}");
+        }
+        self.conf_change(shard, ConfChange::Remove(id))?;
+        self.membership[shard as usize].lock().unwrap().members.retain(|&m| m != id);
+        // The node may already be dead (removing a crashed member is
+        // the repair path) — a missing slot is fine.
+        let _ = self.stop_node(shard, id, Req::Stop);
         *self.leader_cache[shard as usize].lock().unwrap() = None;
         Ok(())
     }
@@ -1410,7 +1580,24 @@ impl ReplicaTask {
                             resumes: nm.snap_resumes,
                             streams_done: nm.snap_streams_done,
                         },
+                        voters: replica.node.voters().to_vec(),
+                        learners: replica.node.learners().to_vec(),
                     });
+                }
+                Req::ConfChange { cc, resp } => {
+                    // Proposed like a write but never folded: the node
+                    // enforces one change in flight, and the entry's
+                    // apply point (tracked through `pending` like any
+                    // write) is the client-visible commit.
+                    match replica.propose_conf(cc) {
+                        Ok((idx, out)) => {
+                            send_out(out);
+                            pending.push((idx, Instant::now(), resp));
+                        }
+                        Err(e) => {
+                            let _ = resp.send(Err(e));
+                        }
+                    }
                 }
                 Req::DrainGc { resp } => {
                     // Run every pending trigger to completion so the

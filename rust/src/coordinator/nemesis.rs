@@ -74,6 +74,19 @@ pub enum NemesisOp {
     RestartRemembered,
     /// Disarm all pending disk faults.
     ClearDiskFaults,
+    /// Membership chaos (DESIGN.md §9): grow `shard`'s Raft group by a
+    /// brand-new node.  It joins as a learner, catches up (possibly
+    /// through a streamed snapshot) and is auto-promoted to voter.
+    /// Remembers the joining node so a later
+    /// [`NemesisOp::CrashRemembered`] tears it down mid-catch-up.
+    AddNode { shard: ShardId },
+    /// Membership chaos: remove a named node from `shard`'s group.
+    RemoveNode { shard: ShardId, id: NodeId },
+    /// Membership chaos: remove the *current leader* of `shard`
+    /// (resolved at fire time) — the hardest single-server change: the
+    /// leader replicates its own removal without counting itself, then
+    /// steps down and hands leadership off once it commits.
+    RemoveLeader { shard: ShardId },
     /// Flap the current leader's links: `times` rounds of
     /// `down_ms` fully lossy / `up_ms` healthy, via per-link loss
     /// overrides (not `heal`, so concurrent partitions survive).
@@ -229,6 +242,20 @@ impl Nemesis {
             NemesisOp::ClearDiskFaults => {
                 crate::fault::disk::clear();
                 "cleared disk faults".to_string()
+            }
+            NemesisOp::AddNode { shard } => {
+                let id = cluster.add_node(*shard)?;
+                self.remembered = Some((*shard, id));
+                format!("added node {id} to shard {shard} as a learner")
+            }
+            NemesisOp::RemoveNode { shard, id } => {
+                cluster.remove_node(*shard, *id)?;
+                format!("removed node {id} from shard {shard}")
+            }
+            NemesisOp::RemoveLeader { shard } => {
+                let leader = cluster.shard_leader(*shard)?;
+                cluster.remove_node(*shard, leader)?;
+                format!("removed leader {leader} of shard {shard}")
             }
             NemesisOp::FlapLeaderLink { shard, times, down_ms, up_ms } => {
                 let leader = cluster.shard_leader(*shard)?;

@@ -158,6 +158,30 @@ impl Replica {
         Ok(Self { node, kind, gc_cfg, last_gc_ms: 0, gc_history: Vec::new() })
     }
 
+    /// Open a replica that joins the cluster as a *non-voting learner*
+    /// of the config whose voters are `voters` (DESIGN.md §9).  It
+    /// catches up via snapshot streaming + AppendEntries and is
+    /// promoted by the leader once within [`RaftConfig::promote_lag`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn open_learner(
+        id: NodeId,
+        voters: Vec<NodeId>,
+        base: &Path,
+        kind: EngineKind,
+        mut engine_opts: EngineOpts,
+        raft_cfg: RaftConfig,
+        gc_cfg: GcConfig,
+        seed: u64,
+    ) -> Result<Self> {
+        std::fs::create_dir_all(base)?;
+        engine_opts.dir = engine_dir(base);
+        engine_opts.raft_dir = raft_dir(base);
+        let eng = engine::build(kind, engine_opts)?;
+        let cell = EngineCell::new(eng);
+        let node = Node::new_learner(id, voters, &raft_dir(base), cell, raft_cfg, seed)?;
+        Ok(Self { node, kind, gc_cfg, last_gc_ms: 0, gc_history: Vec::new() })
+    }
+
     /// Lock the shared engine.  Consensus applies (or the apply-lane
     /// applier), reads, and GC all serialize on this lock; hold the
     /// guard only for the duration of one operation.
@@ -299,6 +323,16 @@ impl Replica {
         }
         let out = self.node.replicate()?;
         Ok((indexes, out))
+    }
+
+    /// Leader-side membership change: append the `ConfChange` entry
+    /// (config active immediately — append-time rule) and fan out
+    /// replication.  Errors bubble the node's in-flight / membership
+    /// validation.
+    pub fn propose_conf(&mut self, cc: crate::raft::ConfChange) -> Result<(u64, Outbox)> {
+        let idx = self.node.propose_conf(cc)?;
+        let out = self.node.replicate()?;
+        Ok((idx, out))
     }
 }
 

@@ -28,7 +28,7 @@ use super::cluster::{spawn_replica, ClusterConfig, NodeSlot, ReadConsistency, Re
 use super::router::{merge_sorted, split_keys, ShardId, ShardRouter};
 use crate::raft::transport::tcp::{frame_encode, frame_parse, TcpNet};
 use crate::raft::transport::{Mailbox, Net, WireSnapshot};
-use crate::raft::NodeId;
+use crate::raft::{ConfChange, NodeId};
 use crate::runtime::reactor::{self, Reactor};
 use crate::util::{Decoder, Encoder};
 use anyhow::{anyhow, bail, Context, Result};
@@ -76,6 +76,15 @@ pub enum ClientMsg {
     Scan { shard: ShardId, start: Vec<u8>, end: Vec<u8>, limit: u64 },
     /// This node's per-shard status rows.
     Status,
+    /// Admin: add `node` to `shard`'s Raft group as a learner
+    /// (DESIGN.md §9).  The contacted replica must be the shard
+    /// leader (else [`ClientResp::NotLeader`]); the operator starts
+    /// the new node's process separately (`nezha serve --learner`).
+    AddNode { shard: ShardId, node: NodeId },
+    /// Admin: remove `node` from `shard`'s Raft group.  Removing the
+    /// leader itself is supported — it transfers leadership after the
+    /// change commits.
+    RemoveNode { shard: ShardId, node: NodeId },
 }
 
 impl ClientMsg {
@@ -103,6 +112,12 @@ impl ClientMsg {
             ClientMsg::Status => {
                 e.u8(5);
             }
+            ClientMsg::AddNode { shard, node } => {
+                e.u8(6).u32(*shard).u64(*node);
+            }
+            ClientMsg::RemoveNode { shard, node } => {
+                e.u8(7).u32(*shard).u64(*node);
+            }
         }
         e.into_vec()
     }
@@ -128,6 +143,8 @@ impl ClientMsg {
                 limit: d.u64()?,
             },
             5 => ClientMsg::Status,
+            6 => ClientMsg::AddNode { shard: d.u32()?, node: d.u64()? },
+            7 => ClientMsg::RemoveNode { shard: d.u32()?, node: d.u64()? },
             other => bail!("client msg: unknown tag {other}"),
         })
     }
@@ -328,6 +345,12 @@ pub struct ServerOpts {
     /// Engine/raft/GC knobs + data dir + shard router.  `nodes` and
     /// `transport` are derived from `peers`/TCP and need not be set.
     pub cluster: ClusterConfig,
+    /// Start this node as a **non-voting learner** of the other peers
+    /// (DESIGN.md §9): the join flow is `add-node` at the leader, then
+    /// `nezha serve --learner` for the new process.  The replica's
+    /// persisted members sidecar outranks this flag on restart, so a
+    /// promoted node that restarts comes back as the voter it became.
+    pub learner: bool,
 }
 
 /// Cloned into each client-connection handler thread.
@@ -363,7 +386,7 @@ pub struct Server {
 
 impl Server {
     pub fn start(opts: ServerOpts) -> Result<Self> {
-        let ServerOpts { node, peers, mut cluster } = opts;
+        let ServerOpts { node, peers, mut cluster, learner } = opts;
         let n = peers.len();
         if n == 0 {
             bail!("serve: empty peer list");
@@ -384,8 +407,22 @@ impl Server {
                 peers.iter().map(|(&id, &addr)| (id, raft_addr(addr, shard))).collect();
             let net = TcpNet::with_peers(raft_peers);
             let mailbox = net.register(node)?;
-            let slot =
-                spawn_replica(&reactor, &cluster, &Net::Tcp(net.clone()), shard, node, mailbox)?;
+            // A `--learner` process joins as a non-voter of the OTHER
+            // peers' group; a normal process is a voter of the full
+            // roster.  Either way the persisted members sidecar wins
+            // on restart.
+            let members: Vec<NodeId> =
+                ids.iter().copied().filter(|&p| !learner || p != node).collect();
+            let slot = spawn_replica(
+                &reactor,
+                &cluster,
+                &Net::Tcp(net.clone()),
+                shard,
+                node,
+                &members,
+                learner,
+                mailbox,
+            )?;
             nets.push(net);
             slots.push(slot);
         }
@@ -621,7 +658,51 @@ fn handle_client_msg(shared: &ServerShared, ports: &ShardPorts, msg: ClientMsg) 
             finish(shard, r, ClientResp::Rows)
         }
         ClientMsg::Status => ClientResp::Status(status_rows(ports)),
+        ClientMsg::AddNode { shard, node } => {
+            let shard = shard as usize;
+            if shard >= ports.txs.len() {
+                return ClientResp::Err(format!("no shard {shard}"));
+            }
+            let r = ask(ports, shard, |tx| Req::ConfChange {
+                cc: ConfChange::AddLearner(node),
+                resp: tx,
+            });
+            finish_conf(shard, r)
+        }
+        ClientMsg::RemoveNode { shard, node } => {
+            let shard = shard as usize;
+            if shard >= ports.txs.len() {
+                return ClientResp::Err(format!("no shard {shard}"));
+            }
+            let r =
+                ask(ports, shard, |tx| Req::ConfChange { cc: ConfChange::Remove(node), resp: tx });
+            finish_conf(shard, r)
+        }
     }
+}
+
+/// [`finish`] for membership changes, with the idempotent-success
+/// mapping the in-process `Cluster::conf_change` applies (DESIGN.md
+/// §9): a client that retries after an indeterminate first attempt —
+/// the classic case being the removed leader dying between commit and
+/// reply — hits "already a member" / "is not a member"-style
+/// rejections at the new leader, and those mean the change is already
+/// in, not that it failed.
+fn finish_conf(shard: usize, r: Result<()>) -> ClientResp {
+    match &r {
+        Err(e) => {
+            let msg = format!("{e:#}");
+            if msg.contains("already a member")
+                || msg.contains("already a voter")
+                || msg.contains("is not a member")
+                || msg.contains("is not a learner")
+            {
+                return ClientResp::Ok;
+            }
+        }
+        Ok(()) => {}
+    }
+    finish(shard, r, |()| ClientResp::Ok)
 }
 
 // ---------------------------------------------------------------------
@@ -881,6 +962,24 @@ impl Client {
             other => bail!("unexpected status response: {other:?}"),
         }
     }
+
+    /// Admin: add `node` to `shard`'s group as a learner (follows
+    /// `NotLeader` redirects to the shard leader like any write).
+    pub fn add_node(&mut self, shard: ShardId, node: NodeId) -> Result<()> {
+        match self.shard_call(shard, &ClientMsg::AddNode { shard, node })? {
+            ClientResp::Ok => Ok(()),
+            other => bail!("unexpected add-node response: {other:?}"),
+        }
+    }
+
+    /// Admin: remove `node` from `shard`'s group (leader's own id
+    /// included — it hands leadership off after the change commits).
+    pub fn remove_node(&mut self, shard: ShardId, node: NodeId) -> Result<()> {
+        match self.shard_call(shard, &ClientMsg::RemoveNode { shard, node })? {
+            ClientResp::Ok => Ok(()),
+            other => bail!("unexpected remove-node response: {other:?}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -901,6 +1000,8 @@ mod tests {
                 limit: u64::MAX,
             },
             ClientMsg::Status,
+            ClientMsg::AddNode { shard: 0, node: 4 },
+            ClientMsg::RemoveNode { shard: 2, node: u64::MAX },
         ];
         for m in &msgs {
             assert_eq!(&ClientMsg::decode(&m.encode()).unwrap(), m);

@@ -90,7 +90,7 @@ impl StateMachine for ClassicEngine {
                 }
                 self.db.delete(key)?;
             }
-            Command::Noop => {}
+            Command::Noop | Command::ConfChange(_) => {}
         }
         // TiKV writes apply-state metadata alongside each applied
         // entry (raft-cf bookkeeping).

@@ -79,7 +79,7 @@ impl StateMachine for DwisckeyEngine {
             Command::Delete { key } => {
                 self.db.delete(key)?;
             }
-            Command::Noop => {}
+            Command::Noop | Command::ConfChange(_) => {}
         }
         Ok(())
     }

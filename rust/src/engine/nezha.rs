@@ -813,7 +813,7 @@ impl StateMachine for NezhaEngine {
                     _ => self.cur_db.put(key, &vref.encode())?,
                 }
             }
-            Command::Noop => {}
+            Command::Noop | Command::ConfChange(_) => {}
         }
         if let Some(t) = t0 {
             self.gc_stall_us += t.elapsed().as_micros() as u64;

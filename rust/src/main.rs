@@ -36,8 +36,10 @@ fn usage() -> ! {
 
 USAGE:
   nezha serve   --node N --peers LIST [--shards S] [--engine E] [--dir PATH] [--read-from WHO]
+                [--learner]
   nezha client  --peers LIST [--shards S] put KEY VALUE | get KEY | del KEY |
-                scan START END LIMIT | status
+                scan START END LIMIT | status |
+                add-node NODE [SHARD] | remove-node NODE [SHARD]
   nezha load    [--engine E] [--nodes N] [--shards S] [--records R] [--value-size B]
   nezha ycsb    [--engine E] [--workload A..F] [--shards S] [--ops N] [--records R] [--value-size B]
   nezha recover --dir PATH [--engine E]
@@ -49,11 +51,19 @@ PEERS is `id=host:port,...` naming every node's client address; node N's raft
 listener for shard S binds the same host at port+1+S.  WHO is
 leader|followers|stale.
 
+`serve --learner` starts the node as a non-voting learner — the join flow is
+`client add-node N` at the running cluster, then `serve --learner` for node N
+with the extended peer list; the leader streams it a snapshot, promotes it to
+voter once caught up, and the flag is ignored on later restarts (the persisted
+membership wins).  `client remove-node N` shrinks the group; removing the
+current leader transfers leadership after the change commits.
+
 `chaos` runs a seeded nemesis schedule (partitions, link flapping, disk-fault +
 crash + restart) against a live in-process cluster while concurrent clients
 record a history, then checks it for linearizability.  Exits non-zero on any
 violation.  Schedules: partition-heal, crash-restart-mid-gc, flapping-links,
-torn-group-commit, torn-partitioned-merge, torn-snapshot-stream.
+torn-group-commit, torn-partitioned-merge, torn-snapshot-stream,
+membership-churn.
 
 ENGINES: {}",
         EngineKind::ALL.map(|k| k.name()).join(", ")
@@ -155,7 +165,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         cfg.read_consistency = parse_read_from_arg(&["--read-from".to_string(), rf.clone()])
             .with_context(|| format!("bad --read-from {rf:?} (leader|followers|stale)"))?;
     }
-    let server = Server::start(ServerOpts { node, peers, cluster: cfg })?;
+    let learner = flags.contains_key("learner");
+    let server = Server::start(ServerOpts { node, peers, cluster: cfg, learner })?;
+    if learner {
+        println!("node {node} joining as a non-voting learner (promotion is automatic)");
+    }
     println!(
         "node {node} up: engine {}, {} shard group(s), data under {dir}",
         kind.name(),
@@ -244,7 +258,19 @@ fn cmd_client(flags: &HashMap<String, String>, pos: &[String]) -> Result<()> {
                 }
             }
         }
-        _ => bail!("client op must be put|get|del|scan|status"),
+        "add-node" => {
+            let n: NodeId = pos.get(1).context("add-node NODE [SHARD]")?.parse()?;
+            let shard: u32 = pos.get(2).map_or(Ok(0), |s| s.parse())?;
+            client.add_node(shard, n)?;
+            println!("OK: node {n} added to shard {shard} as a learner; start it with `nezha serve --node {n} --learner` and the extended --peers list");
+        }
+        "remove-node" => {
+            let n: NodeId = pos.get(1).context("remove-node NODE [SHARD]")?.parse()?;
+            let shard: u32 = pos.get(2).map_or(Ok(0), |s| s.parse())?;
+            client.remove_node(shard, n)?;
+            println!("OK: node {n} removed from shard {shard}; its process can be stopped");
+        }
+        _ => bail!("client op must be put|get|del|scan|status|add-node|remove-node"),
     }
     Ok(())
 }

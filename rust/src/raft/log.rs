@@ -20,7 +20,7 @@
 //! memory after apply, and followers that lag behind them receive an
 //! InstallSnapshot instead.
 
-use super::rpc::{Command, LogEntry, LogIndex, Term};
+use super::rpc::{Command, ConfChange, LogEntry, LogIndex, Term};
 use crate::util::{Decoder, Encoder};
 use crate::vlog::{Entry as VEntry, VLog, VLogReader, VRef};
 use anyhow::{bail, Result};
@@ -72,15 +72,27 @@ fn to_ventry(term: Term, index: LogIndex, cmd: &Command) -> VEntry {
     match cmd {
         Command::Put { key, value } => VEntry::put(term, index, key.clone(), value.clone()),
         Command::Delete { key } => VEntry::delete(term, index, key.clone()),
-        // Noop: empty key, no value (user keys are never empty — the
-        // coordinator rejects them).
+        // Internal entries ride the empty key (user keys are never
+        // empty — the coordinator rejects them): Noop is an empty-key
+        // delete, a membership change an empty-key put whose value is
+        // the encoded ConfChange.
         Command::Noop => VEntry::delete(term, index, Vec::new()),
+        Command::ConfChange(cc) => VEntry::put(term, index, Vec::new(), cc.encode()),
     }
 }
 
 fn from_ventry(e: &VEntry) -> LogEntry {
-    let cmd = if e.key.is_empty() && e.value.is_none() {
-        Command::Noop
+    let cmd = if e.key.is_empty() {
+        match &e.value {
+            None => Command::Noop,
+            Some(v) => match ConfChange::decode_bytes(v) {
+                Ok(cc) => Command::ConfChange(cc),
+                // An undecodable internal entry would mean log
+                // corruption the CRC layer missed; degrade to Noop
+                // rather than poison replay.
+                Err(_) => Command::Noop,
+            },
+        }
     } else {
         match &e.value {
             Some(v) => Command::Put { key: e.key.clone(), value: v.clone() },
@@ -784,6 +796,30 @@ mod tests {
         }
         let log = RaftLog::open(&dir).unwrap();
         assert_eq!(log.entry(1).unwrap().cmd, Command::Noop);
+    }
+
+    #[test]
+    fn conf_change_entries_roundtrip() {
+        let dir = tmpdir("conf");
+        let ccs = [ConfChange::AddLearner(4), ConfChange::Promote(4), ConfChange::Remove(2)];
+        {
+            let mut log = RaftLog::open(&dir).unwrap();
+            for (i, cc) in ccs.iter().enumerate() {
+                log.append(LogEntry {
+                    term: 1,
+                    index: i as u64 + 1,
+                    cmd: Command::ConfChange(*cc),
+                })
+                .unwrap();
+            }
+            log.sync().unwrap();
+        }
+        // Survives the epoch replay on reopen intact (distinct from
+        // Noop, which shares the empty-key representation).
+        let log = RaftLog::open(&dir).unwrap();
+        for (i, cc) in ccs.iter().enumerate() {
+            assert_eq!(log.entry(i as u64 + 1).unwrap().cmd, Command::ConfChange(*cc));
+        }
     }
 
     #[test]

@@ -34,7 +34,7 @@ pub mod transport;
 
 pub use log::{HardState, RaftLog};
 pub use node::{ApplyLane, Config, Node, NodeId, NodeMetrics, Role, StateMachine};
-pub use rpc::{Command, LogEntry, LogIndex, Message, Term};
+pub use rpc::{Command, ConfChange, LogEntry, LogIndex, Message, Term};
 pub use snap::{PlanItem, PlanSource, SnapItem, SnapManifest, SnapPlan, SnapSender};
 pub use transport::{
     Bus, Net, NetConfig, SimNet, TcpNet, TraceEvent, Transport, TransportKind, WireSnapshot,

@@ -6,7 +6,7 @@
 //! owns correctness.
 
 use super::log::{HardState, RaftLog};
-use super::rpc::{Command, LogEntry, LogIndex, Message, Term};
+use super::rpc::{Command, ConfChange, LogEntry, LogIndex, Message, Term};
 use super::snap::{SnapManifest, SnapPlan, SnapSender};
 use crate::util::Rng;
 use crate::vlog::VRef;
@@ -135,6 +135,11 @@ pub struct Config {
     /// snapshot traffic can sit on the wire so catch-up never starves
     /// AppendEntries.
     pub snap_window: usize,
+    /// Auto-promotion lag: a leader promotes a learner to voter once
+    /// its `match_index` is within this many entries of the leader's
+    /// last index (DESIGN.md §9).  0 = auto-promotion off (operators
+    /// promote by proposing `ConfChange::Promote` themselves).
+    pub promote_lag: u64,
 }
 
 impl Default for Config {
@@ -151,6 +156,7 @@ impl Default for Config {
             snap_streaming: true,
             snap_chunk_bytes: 256 << 10,
             snap_window: 4,
+            promote_lag: 64,
         }
     }
 }
@@ -346,11 +352,102 @@ struct SnapSink {
     total_len: u64,
     last_index: LogIndex,
     last_term: Term,
+    /// Membership carried by the `SnapMeta` offer, adopted at commit
+    /// (the snapshot may have compacted away the config entries).
+    voters: Vec<NodeId>,
+    learners: Vec<NodeId>,
+}
+
+/// One version of the membership config, tagged with the log index of
+/// the `ConfChange` that created it (the baseline carries the index it
+/// was loaded at).  Kept so conflict truncation can roll the active
+/// config back to what preceded the cut (DESIGN.md §9).
+#[derive(Clone, Debug)]
+struct ConfVersion {
+    index: LogIndex,
+    voters: Vec<NodeId>,
+    learners: Vec<NodeId>,
+}
+
+/// Durable members sidecar (`<raft dir>/members`): the active config
+/// and the log index it reflects, so a restarted node recovers its
+/// membership even when the config entries were compacted into a
+/// snapshot.
+fn save_members(path: &Path, index: LogIndex, voters: &[NodeId], learners: &[NodeId]) -> Result<()> {
+    let mut body = crate::util::Encoder::with_capacity(24 + 8 * (voters.len() + learners.len()));
+    body.u64(index);
+    body.varint(voters.len() as u64);
+    for &v in voters {
+        body.u64(v);
+    }
+    body.varint(learners.len() as u64);
+    for &l in learners {
+        body.u64(l);
+    }
+    let mut e = crate::util::Encoder::with_capacity(body.len() + 4);
+    e.u32(crc32fast::hash(body.as_slice()));
+    e.bytes(body.as_slice());
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, e.as_slice())?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+#[allow(clippy::type_complexity)]
+fn load_members(path: &Path) -> Result<Option<(LogIndex, Vec<NodeId>, Vec<NodeId>)>> {
+    let buf = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let mut d = crate::util::Decoder::new(&buf);
+    let crc = d.u32()?;
+    let body = d.bytes(d.remaining())?;
+    if crc32fast::hash(body) != crc {
+        bail!("members sidecar crc mismatch");
+    }
+    let mut d = crate::util::Decoder::new(body);
+    let index = d.u64()?;
+    let nv = d.varint()? as usize;
+    let mut voters = Vec::with_capacity(nv.min(1024));
+    for _ in 0..nv {
+        voters.push(d.u64()?);
+    }
+    let nl = d.varint()? as usize;
+    let mut learners = Vec::with_capacity(nl.min(1024));
+    for _ in 0..nl {
+        learners.push(d.u64()?);
+    }
+    Ok(Some((index, voters, learners)))
 }
 
 pub struct Node<S: StateMachine> {
     pub id: NodeId,
+    /// Replication targets: every other member of the active config
+    /// (voters and learners alike).  Derived from `voters`/`learners`.
     peers: Vec<NodeId>,
+    /// Voting members of the active config (includes `id` when this
+    /// node is a voter).  Effective at *append* of a `ConfChange`
+    /// entry — the single-server-change rule (DESIGN.md §9).
+    voters: Vec<NodeId>,
+    /// Non-voting members: replicated to, never counted in any quorum,
+    /// never campaign.
+    learners: Vec<NodeId>,
+    /// Config versions newest-last (baseline first) for truncation
+    /// rollback and for stamping snapshots with the config at their
+    /// last index.
+    conf_history: Vec<ConfVersion>,
+    /// Log index of the in-flight (appended, uncommitted) ConfChange.
+    /// A leader refuses a second change until this one commits.
+    conf_pending: Option<LogIndex>,
+    members_path: std::path::PathBuf,
+    /// Set while handling `TimeoutNow`: the resulting vote requests
+    /// carry the transfer flag that bypasses vote stickiness.
+    transfer_election: bool,
+    /// Deferred outbound messages from commit-driven transitions
+    /// (e.g. the `TimeoutNow` a self-removed leader sends when its
+    /// removal commits); drained by `tick()`/`handle()`.
+    stash: Outbox,
     role: Role,
     hard: HardState,
     hard_path: std::path::PathBuf,
@@ -429,17 +526,70 @@ impl<S: StateMachine> Node<S> {
         cfg: Config,
         seed: u64,
     ) -> Result<Self> {
+        let mut voters: Vec<NodeId> = peers.clone();
+        voters.push(id);
+        voters.sort_unstable();
+        voters.dedup();
+        Self::with_conf(id, voters, Vec::new(), dir, sm, cfg, seed)
+    }
+
+    /// Open a node that joins as a *non-voting learner* of the config
+    /// whose voting members are `voters` (this node is not among
+    /// them).  The learner persists that baseline immediately so a
+    /// crash before its first config entry still restarts it as a
+    /// learner, and never as a self-voting one-node cluster.
+    pub fn new_learner(
+        id: NodeId,
+        voters: Vec<NodeId>,
+        dir: &Path,
+        sm: S,
+        cfg: Config,
+        seed: u64,
+    ) -> Result<Self> {
+        let mut voters = voters;
+        voters.retain(|&v| v != id);
+        voters.sort_unstable();
+        voters.dedup();
+        let mut node = Self::with_conf(id, voters, vec![id], dir, sm, cfg, seed)?;
+        node.persist_members()?;
+        Ok(node)
+    }
+
+    fn with_conf(
+        id: NodeId,
+        voters: Vec<NodeId>,
+        learners: Vec<NodeId>,
+        dir: &Path,
+        sm: S,
+        cfg: Config,
+        seed: u64,
+    ) -> Result<Self> {
         let log = RaftLog::open(dir)?;
         let hard_path = dir.join("hardstate");
+        let members_path = dir.join("members");
         let hard = HardState::load(&hard_path)?.unwrap_or_default();
         let mut rng = Rng::new(seed ^ id.wrapping_mul(0x9E37_79B9));
         let election_deadline = Self::rand_deadline(&mut rng, &cfg, 0);
         // Whatever the log recovered from disk is durable by
         // definition.
         let durable_index = log.last_index();
-        Ok(Self {
+        // The durable members sidecar outranks the constructor args: a
+        // restarted node keeps the config it last applied, whatever
+        // the coordinator believes today.
+        let (base_index, voters, learners) = match load_members(&members_path)? {
+            Some((i, v, l)) => (i, v, l),
+            None => (0, voters, learners),
+        };
+        let mut node = Self {
             id,
-            peers,
+            peers: Vec::new(),
+            voters: voters.clone(),
+            learners: learners.clone(),
+            conf_history: vec![ConfVersion { index: base_index, voters, learners }],
+            conf_pending: None,
+            members_path,
+            transfer_election: false,
+            stash: Vec::new(),
             role: Role::Follower,
             hard,
             hard_path,
@@ -473,7 +623,24 @@ impl<S: StateMachine> Node<S> {
             cfg,
             sm,
             metrics: NodeMetrics::default(),
-        })
+        };
+        node.rebuild_peers();
+        // Re-apply config entries past the sidecar's index (the log
+        // replay keeps the whole post-snapshot suffix in memory, so a
+        // ConfChange appended after the last sidecar write — or after
+        // the baseline — is recovered here).
+        let from = node.conf_history[0].index.max(node.log.snap_index) + 1;
+        for i in from..=node.log.last_index() {
+            if let Some(Command::ConfChange(cc)) =
+                node.log.entry(i).map(|e| e.cmd.clone())
+            {
+                node.apply_conf_at_append(i, cc)?;
+            }
+        }
+        // `conf_pending` only gates leaders; a fresh node is a
+        // follower (become_leader recomputes it from the log).
+        node.conf_pending = None;
+        Ok(node)
     }
 
     fn rand_deadline(rng: &mut Rng, cfg: &Config, now: u64) -> u64 {
@@ -554,8 +721,268 @@ impl<S: StateMachine> Node<S> {
         }
     }
 
+    /// Majority of the *active voter config* — learners and removed
+    /// nodes never count (DESIGN.md §9).
     fn quorum(&self) -> usize {
-        (self.peers.len() + 1) / 2 + 1
+        self.voters.len() / 2 + 1
+    }
+
+    fn is_voter(&self) -> bool {
+        self.voters.contains(&self.id)
+    }
+
+    pub fn voters(&self) -> &[NodeId] {
+        &self.voters
+    }
+
+    pub fn learners(&self) -> &[NodeId] {
+        &self.learners
+    }
+
+    // ---- membership (DESIGN.md §9) ---------------------------------
+
+    fn rebuild_peers(&mut self) {
+        let id = self.id;
+        let mut peers: Vec<NodeId> = self
+            .voters
+            .iter()
+            .chain(self.learners.iter())
+            .copied()
+            .filter(|&p| p != id)
+            .collect();
+        peers.sort_unstable();
+        peers.dedup();
+        self.peers = peers;
+    }
+
+    fn persist_members(&mut self) -> Result<()> {
+        let v = self.conf_history.last().expect("baseline config");
+        save_members(&self.members_path, v.index, &self.voters, &self.learners)
+    }
+
+    /// Install `(voters, learners)` as the active config created at
+    /// log `index`, refreshing replication bookkeeping and the durable
+    /// sidecar.
+    fn install_conf(
+        &mut self,
+        index: LogIndex,
+        voters: Vec<NodeId>,
+        learners: Vec<NodeId>,
+    ) -> Result<()> {
+        self.conf_history.push(ConfVersion {
+            index,
+            voters: voters.clone(),
+            learners: learners.clone(),
+        });
+        // Bound the history: keep the newest version at-or-below the
+        // commit index (the rollback floor) plus everything after it.
+        let ci = self.commit_index;
+        if self.conf_history.len() > 8 {
+            if let Some(floor) =
+                self.conf_history.iter().rposition(|v| v.index <= ci).filter(|&f| f > 0)
+            {
+                self.conf_history.drain(..floor);
+            }
+        }
+        self.voters = voters;
+        self.learners = learners;
+        self.rebuild_peers();
+        // Leader bookkeeping: track new peers, drop departed ones (a
+        // dropped snapshot transfer must release its engine pin).
+        let last = self.log.last_index();
+        for p in self.peers.clone() {
+            self.next_index.entry(p).or_insert(last + 1);
+            self.match_index.entry(p).or_insert(0);
+        }
+        let peers = self.peers.clone();
+        self.next_index.retain(|p, _| peers.contains(p));
+        self.match_index.retain(|p, _| peers.contains(p));
+        self.peer_ack.retain(|p, _| peers.contains(p));
+        self.snap_legacy.retain(|p| peers.contains(p));
+        let dropped: Vec<NodeId> =
+            self.snap_xfers.keys().copied().filter(|p| !peers.contains(p)).collect();
+        for p in dropped {
+            if let Some(s) = self.snap_xfers.remove(&p) {
+                self.sm.snap_stream_end(s.plan_id());
+            }
+        }
+        self.persist_members()
+    }
+
+    /// Apply a ConfChange the moment its entry lands in the log —
+    /// append-time activation is what makes overlapping single-server
+    /// changes impossible (DESIGN.md §9).
+    fn apply_conf_at_append(&mut self, index: LogIndex, cc: ConfChange) -> Result<()> {
+        let mut voters = self.voters.clone();
+        let mut learners = self.learners.clone();
+        match cc {
+            ConfChange::AddLearner(n) => {
+                if !voters.contains(&n) && !learners.contains(&n) {
+                    learners.push(n);
+                    learners.sort_unstable();
+                }
+            }
+            ConfChange::Promote(n) => {
+                learners.retain(|&l| l != n);
+                if !voters.contains(&n) {
+                    voters.push(n);
+                    voters.sort_unstable();
+                }
+            }
+            ConfChange::Remove(n) => {
+                voters.retain(|&v| v != n);
+                learners.retain(|&l| l != n);
+            }
+        }
+        self.install_conf(index, voters, learners)?;
+        self.conf_pending = Some(index);
+        Ok(())
+    }
+
+    /// Conflict truncation cut the log at `from`: roll the active
+    /// config back to the newest version that precedes the cut.
+    fn rollback_conf(&mut self, from: LogIndex) -> Result<()> {
+        if self.conf_history.last().map_or(true, |v| v.index < from) {
+            return Ok(());
+        }
+        while self.conf_history.len() > 1
+            && self.conf_history.last().map_or(false, |v| v.index >= from)
+        {
+            self.conf_history.pop();
+        }
+        let v = self.conf_history.last().expect("baseline config").clone();
+        self.voters = v.voters;
+        self.learners = v.learners;
+        self.rebuild_peers();
+        if self.conf_pending.is_some_and(|i| i >= from) {
+            self.conf_pending = None;
+        }
+        self.persist_members()
+    }
+
+    /// Membership as of log `index` (best effort: falls back to the
+    /// oldest known version when `index` predates the history) — used
+    /// to stamp outgoing snapshots.
+    fn conf_at(&self, index: LogIndex) -> (Vec<NodeId>, Vec<NodeId>) {
+        let v = self
+            .conf_history
+            .iter()
+            .rev()
+            .find(|v| v.index <= index)
+            .or_else(|| self.conf_history.first())
+            .expect("baseline config");
+        (v.voters.clone(), v.learners.clone())
+    }
+
+    /// Adopt the membership a snapshot carried (both the monolithic
+    /// and streamed install paths): the snapshot replaces the log up
+    /// to `last_index`, so its config replaces ours.
+    fn adopt_snapshot_conf(
+        &mut self,
+        last_index: LogIndex,
+        voters: Vec<NodeId>,
+        learners: Vec<NodeId>,
+    ) -> Result<()> {
+        if voters.is_empty() {
+            return Ok(()); // sender predates membership stamping
+        }
+        if voters == self.voters && learners == self.learners {
+            return Ok(());
+        }
+        self.install_conf(last_index, voters, learners)?;
+        self.conf_pending = None;
+        Ok(())
+    }
+
+    /// Leader: start a membership change.  Refused while another
+    /// change is in flight — the single-server-change rule only holds
+    /// if changes are serialized through commit.
+    pub fn propose_conf(&mut self, cc: ConfChange) -> Result<LogIndex> {
+        if self.role != Role::Leader {
+            bail!("not leader (hint: {:?})", self.leader_hint());
+        }
+        if let Some(i) = self.conf_pending {
+            bail!("conf change in flight at index {i}");
+        }
+        match cc {
+            ConfChange::AddLearner(n) => {
+                if self.voters.contains(&n) || self.learners.contains(&n) {
+                    bail!("node {n} is already a member");
+                }
+            }
+            ConfChange::Promote(n) => {
+                if self.voters.contains(&n) {
+                    bail!("node {n} is already a voter");
+                }
+                if !self.learners.contains(&n) {
+                    bail!("node {n} is not a learner");
+                }
+            }
+            ConfChange::Remove(n) => {
+                if !self.voters.contains(&n) && !self.learners.contains(&n) {
+                    bail!("node {n} is not a member");
+                }
+            }
+        }
+        let index = self.log.last_index() + 1;
+        self.log.append(LogEntry {
+            term: self.hard.term,
+            index,
+            cmd: Command::ConfChange(cc),
+        })?;
+        // A config entry may be appended outside the client write path
+        // (auto-promotion), so make it durable here: commit counts the
+        // leader's durable_index, and a 2-voter cluster would otherwise
+        // wait on an unrelated write to sync it.
+        self.persist_log()?;
+        self.apply_conf_at_append(index, cc)?;
+        Ok(index)
+    }
+
+    /// Leader: promote a caught-up learner (called on append/snap-done
+    /// acks).  No-op unless `from` is a learner within
+    /// [`Config::promote_lag`] of the log head and no change is in
+    /// flight.
+    fn maybe_promote(&mut self, from: NodeId) -> Result<()> {
+        if self.role != Role::Leader
+            || self.cfg.promote_lag == 0
+            || self.conf_pending.is_some()
+            || !self.learners.contains(&from)
+        {
+            return Ok(());
+        }
+        let m = self.match_index.get(&from).copied().unwrap_or(0);
+        if m.saturating_add(self.cfg.promote_lag) >= self.log.last_index() {
+            self.propose_conf(ConfChange::Promote(from))?;
+        }
+        Ok(())
+    }
+
+    /// Commit-index movement hook: clears the in-flight change once it
+    /// commits, and finishes a leader's self-removal — hand leadership
+    /// to the best-caught-up voter (§4.2.3) and step down.
+    fn on_commit_advanced(&mut self) -> Result<()> {
+        if self.conf_pending.is_some_and(|i| i <= self.commit_index) {
+            self.conf_pending = None;
+        }
+        if self.role == Role::Leader && !self.is_voter() && self.conf_pending.is_none() {
+            let target = self
+                .voters
+                .iter()
+                .copied()
+                .max_by_key(|v| self.match_index.get(v).copied().unwrap_or(0));
+            if let Some(t) = target {
+                self.metrics.msgs_sent += 1;
+                self.stash.push((t, Message::TimeoutNow { term: self.hard.term }));
+            }
+            self.become_follower(self.hard.term, None)?;
+            self.leader_hint = None;
+        }
+        Ok(())
+    }
+
+    fn take_stash(&mut self) -> Outbox {
+        std::mem::take(&mut self.stash)
     }
 
     // ---- persistence helpers ---------------------------------------
@@ -581,6 +1008,12 @@ impl<S: StateMachine> Node<S> {
     pub fn tick(&mut self) -> Result<Outbox> {
         self.ticks += 1;
         self.lease_clock += 1;
+        let mut out = self.tick_inner()?;
+        out.extend(self.take_stash());
+        Ok(out)
+    }
+
+    fn tick_inner(&mut self) -> Result<Outbox> {
         match self.role {
             Role::Leader => {
                 // Abandon read barriers whose quorum round never
@@ -633,6 +1066,13 @@ impl<S: StateMachine> Node<S> {
     // ---- elections ---------------------------------------------------
 
     fn start_election(&mut self) -> Result<Outbox> {
+        // Learners (and removed nodes) never campaign: their vote
+        // would not count and their term bumps would only disrupt the
+        // voters (DESIGN.md §9).
+        if !self.is_voter() {
+            self.reset_election_timer();
+            return Ok(Vec::new());
+        }
         self.role = Role::Candidate;
         self.hard.term += 1;
         self.hard.voted_for = Some(self.id);
@@ -649,13 +1089,13 @@ impl<S: StateMachine> Node<S> {
             candidate: self.id,
             last_log_index: self.log.last_index(),
             last_log_term: self.log.last_term(),
+            transfer: self.transfer_election,
         };
-        Ok(self.to_all(msg))
-    }
-
-    fn to_all(&mut self, msg: Message) -> Outbox {
-        self.metrics.msgs_sent += self.peers.len() as u64;
-        self.peers.iter().map(|&p| (p, msg.clone())).collect()
+        // Votes come only from voters; learners don't get the RPC.
+        let targets: Vec<NodeId> =
+            self.voters.iter().copied().filter(|&v| v != self.id).collect();
+        self.metrics.msgs_sent += targets.len() as u64;
+        Ok(targets.into_iter().map(|p| (p, msg.clone())).collect())
     }
 
     fn become_follower(&mut self, term: Term, leader: Option<NodeId>) -> Result<()> {
@@ -713,6 +1153,15 @@ impl<S: StateMachine> Node<S> {
             self.next_index.insert(p, self.log.last_index() + 1);
             self.match_index.insert(p, 0);
         }
+        // An uncommitted ConfChange inherited in the log suffix is
+        // back in flight under this leadership (its config is already
+        // active — append-time rule); a second change stays refused
+        // until it commits.
+        self.conf_pending = self
+            .conf_history
+            .last()
+            .filter(|v| v.index > self.commit_index)
+            .map(|v| v.index);
         // Commit barrier for prior-term entries (§5.4.2).  Read
         // barriers resolve only once this no-op commits.
         let idx = self.log.last_index() + 1;
@@ -735,6 +1184,11 @@ impl<S: StateMachine> Node<S> {
     pub fn propose(&mut self, cmd: Command) -> Result<LogIndex> {
         if self.role != Role::Leader {
             bail!("not leader (hint: {:?})", self.leader_hint());
+        }
+        // Config changes must flow through the membership machinery
+        // (in-flight gate, append-time activation).
+        if let Command::ConfChange(cc) = cmd {
+            return self.propose_conf(cc);
         }
         let index = self.log.last_index() + 1;
         self.log.append(LogEntry { term: self.hard.term, index, cmd })?;
@@ -838,12 +1292,15 @@ impl<S: StateMachine> Node<S> {
             let data = self.sm.snapshot_bytes()?;
             self.metrics.snapshots_sent += 1;
             let last_term = self.log.term_at(last_index).unwrap_or(self.log.snap_term);
+            let (voters, learners) = self.conf_at(last_index);
             return Ok(vec![Message::InstallSnapshot {
                 term: self.hard.term,
                 leader: self.id,
                 last_index,
                 last_term,
                 data,
+                voters,
+                learners,
             }]);
         }
         let prev = next - 1;
@@ -891,8 +1348,15 @@ impl<S: StateMachine> Node<S> {
         };
         self.snap_xfer_seq += 1;
         let xfer_id = (term << 24) ^ (id << 16) ^ self.snap_xfer_seq;
-        let sender =
-            SnapSender::new(plan, xfer_id, self.cfg.snap_chunk_bytes, self.cfg.snap_window);
+        let (voters, learners) = self.conf_at(plan.last_index);
+        let sender = SnapSender::new(
+            plan,
+            xfer_id,
+            self.cfg.snap_chunk_bytes,
+            self.cfg.snap_window,
+            voters,
+            learners,
+        );
         let meta = sender.meta_msg(term, id);
         self.snap_xfers.insert(peer, sender);
         self.metrics.snapshots_sent += 1;
@@ -919,7 +1383,7 @@ impl<S: StateMachine> Node<S> {
         // leader's lease window, making lease reads stale.  Silence
         // for `election_timeout_min` re-enables voting, so a dead
         // leader is still replaced.
-        if let Message::RequestVote { term, .. } = &msg {
+        if let Message::RequestVote { term, transfer, .. } = &msg {
             let sticky = match self.role {
                 Role::Leader => self.lease_valid(),
                 _ => {
@@ -929,7 +1393,10 @@ impl<S: StateMachine> Node<S> {
                             < self.cfg.election_timeout_min
                 }
             };
-            if *term > self.hard.term && sticky {
+            // A transfer election is sanctioned by the old leader
+            // (§4.2.3): stickiness must not block it, or a removed
+            // leader could never hand off inside the lease window.
+            if *term > self.hard.term && sticky && !*transfer {
                 self.metrics.msgs_sent += 1;
                 return Ok(vec![(
                     from,
@@ -947,11 +1414,11 @@ impl<S: StateMachine> Node<S> {
             };
             self.become_follower(msg.term(), leader)?;
         }
-        match msg {
-            Message::RequestVote { term, candidate, last_log_index, last_log_term } => {
-                self.on_request_vote(from, term, candidate, last_log_index, last_log_term)
+        let mut out = match msg {
+            Message::RequestVote { term, candidate, last_log_index, last_log_term, transfer } => {
+                self.on_request_vote(from, term, candidate, last_log_index, last_log_term, transfer)
             }
-            Message::RequestVoteResp { term, granted } => self.on_vote_resp(term, granted),
+            Message::RequestVoteResp { term, granted } => self.on_vote_resp(from, term, granted),
             Message::AppendEntries {
                 term,
                 leader,
@@ -973,15 +1440,24 @@ impl<S: StateMachine> Node<S> {
             Message::AppendEntriesResp { term, success, match_index, seq } => {
                 self.on_append_resp(from, term, success, match_index, seq)
             }
-            Message::InstallSnapshot { term, leader, last_index, last_term, data } => {
-                self.on_install_snapshot(from, term, leader, last_index, last_term, data)
+            Message::InstallSnapshot { term, leader, last_index, last_term, data, voters, learners } => {
+                self.on_install_snapshot(from, term, leader, last_index, last_term, data, voters, learners)
             }
             Message::InstallSnapshotResp { term, last_index } => {
                 self.on_snapshot_resp(from, term, last_index)
             }
-            Message::SnapMeta { term, leader, xfer_id, last_index, last_term, manifest } => {
-                self.on_snap_meta(from, term, leader, xfer_id, last_index, last_term, manifest)
-            }
+            Message::SnapMeta {
+                term,
+                leader,
+                xfer_id,
+                last_index,
+                last_term,
+                manifest,
+                voters,
+                learners,
+            } => self.on_snap_meta(
+                from, term, leader, xfer_id, last_index, last_term, manifest, voters, learners,
+            ),
             Message::SnapChunk { term, leader, xfer_id, offset, data } => {
                 self.on_snap_chunk(from, term, leader, xfer_id, offset, data)
             }
@@ -992,7 +1468,27 @@ impl<S: StateMachine> Node<S> {
             Message::ReadIndexResp { term, ctx, read_index, ok } => {
                 self.on_read_index_resp(term, ctx, read_index, ok)
             }
+            Message::TimeoutNow { term } => self.on_timeout_now(from, term),
+        }?;
+        // Commit-driven transitions (e.g. the TimeoutNow a removed
+        // leader owes its successor) are parked in `stash` because not
+        // every commit-advancing path returns an Outbox.
+        out.extend(self.take_stash());
+        Ok(out)
+    }
+
+    /// TimeoutNow (§3.10 leadership transfer): the leader believes we
+    /// are the best-caught-up voter and asks us to campaign without
+    /// waiting for an election timeout.  The resulting RequestVote
+    /// carries `transfer: true` so peers' vote stickiness stands aside.
+    fn on_timeout_now(&mut self, _from: NodeId, term: Term) -> Result<Outbox> {
+        if term < self.hard.term || !self.is_voter() {
+            return Ok(Vec::new());
         }
+        self.transfer_election = true;
+        let out = self.start_election();
+        self.transfer_election = false;
+        out
     }
 
     fn on_request_vote(
@@ -1002,6 +1498,7 @@ impl<S: StateMachine> Node<S> {
         candidate: NodeId,
         last_log_index: LogIndex,
         last_log_term: Term,
+        _transfer: bool,
     ) -> Result<Outbox> {
         let mut granted = false;
         if term == self.hard.term {
@@ -1010,7 +1507,11 @@ impl<S: StateMachine> Node<S> {
             let up_to_date = last_log_term > self.log.last_term()
                 || (last_log_term == self.log.last_term()
                     && last_log_index >= self.log.last_index());
-            if can_vote && up_to_date {
+            // Membership check: a node outside our voter set — removed,
+            // or a learner with a stale view of itself — must not be
+            // able to assemble a quorum from nodes that still list it.
+            let is_member = self.voters.contains(&candidate);
+            if can_vote && up_to_date && is_member {
                 granted = true;
                 self.hard.voted_for = Some(candidate);
                 self.persist_hard()?;
@@ -1021,11 +1522,13 @@ impl<S: StateMachine> Node<S> {
         Ok(vec![(from, Message::RequestVoteResp { term: self.hard.term, granted })])
     }
 
-    fn on_vote_resp(&mut self, term: Term, granted: bool) -> Result<Outbox> {
+    fn on_vote_resp(&mut self, from: NodeId, term: Term, granted: bool) -> Result<Outbox> {
         if self.role != Role::Candidate || term != self.hard.term {
             return Ok(Vec::new());
         }
-        if granted {
+        // Only voters of the active config count toward the quorum —
+        // a grant from a node we no longer list must not tip the tally.
+        if granted && self.voters.contains(&from) {
             self.votes += 1;
             if self.votes >= self.quorum() {
                 return self.become_leader();
@@ -1092,6 +1595,10 @@ impl<S: StateMachine> Node<S> {
             if e.index <= self.log.snap_index {
                 continue; // covered by snapshot
             }
+            let conf = match &e.cmd {
+                Command::ConfChange(cc) => Some((e.index, *cc)),
+                _ => None,
+            };
             match self.log.term_at(e.index) {
                 Some(t) if t == e.term => continue, // already have it
                 Some(_) => {
@@ -1102,14 +1609,23 @@ impl<S: StateMachine> Node<S> {
                     self.log.truncate_from(e.index)?;
                     self.durable_index = self.durable_index.min(e.index.saturating_sub(1));
                     self.sm.on_log_truncated(self.log.live_epoch());
+                    // Config is effective at *append*, so truncation
+                    // must also unwind any config the dropped suffix
+                    // carried (§4.1: the replaced entries may include
+                    // ConfChanges from a deposed leader).
+                    self.rollback_conf(e.index)?;
                     self.log.append(e)?;
                 }
                 None => {
                     if e.index == self.log.last_index() + 1 {
                         self.log.append(e)?;
+                    } else {
+                        continue; // gap (stale message) — ignore remainder
                     }
-                    // else: gap (stale message) — ignore remainder
                 }
+            }
+            if let Some((index, cc)) = conf {
+                self.apply_conf_at_append(index, cc)?;
             }
         }
         self.persist_log()?;
@@ -1120,6 +1636,7 @@ impl<S: StateMachine> Node<S> {
             self.metrics.entries_committed += new_commit - self.commit_index;
             self.commit_index = new_commit;
             self.apply_committed()?;
+            self.on_commit_advanced()?;
         }
         self.metrics.msgs_sent += 1;
         Ok(vec![(
@@ -1153,6 +1670,13 @@ impl<S: StateMachine> Node<S> {
             self.match_index.insert(from, match_index);
             self.next_index.insert(from, match_index + 1);
             self.advance_commit()?;
+            if self.role != Role::Leader {
+                // Committing that response finished our own removal
+                // (`on_commit_advanced` stepped us down) — the stash
+                // holds the TimeoutNow; send nothing else.
+                return Ok(out);
+            }
+            self.maybe_promote(from)?;
             out.extend(self.pump_read_confirms());
             // More to send?
             if match_index < self.log.last_index() {
@@ -1181,19 +1705,30 @@ impl<S: StateMachine> Node<S> {
         // ahead of the local sync, and unsynced entries must not count
         // (followers' match_index is always durable — they persist
         // before acking).
+        // Only voters of the active config count (§4.2.2): learners
+        // replicate but never advance commit, and a leader removing
+        // itself stops counting its own durable index the moment the
+        // Remove is appended.
         let mut candidates: Vec<LogIndex> = self
-            .match_index
-            .values()
-            .copied()
-            .chain(std::iter::once(self.durable_index))
+            .voters
+            .iter()
+            .filter(|&&v| v != self.id)
+            .map(|v| self.match_index.get(v).copied().unwrap_or(0))
             .collect();
+        if self.is_voter() {
+            candidates.push(self.durable_index);
+        }
         candidates.sort_unstable();
+        if candidates.len() < self.quorum() {
+            return Ok(());
+        }
         // The (len - quorum)-th from the end is replicated on >= quorum.
-        let n = candidates[candidates.len().saturating_sub(self.quorum())];
+        let n = candidates[candidates.len() - self.quorum()];
         if n > self.commit_index && self.log.term_at(n) == Some(self.hard.term) {
             self.metrics.entries_committed += n - self.commit_index;
             self.commit_index = n;
             self.apply_committed()?;
+            self.on_commit_advanced()?;
         }
         Ok(())
     }
@@ -1224,6 +1759,7 @@ impl<S: StateMachine> Node<S> {
         Ok(())
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn on_install_snapshot(
         &mut self,
         from: NodeId,
@@ -1232,6 +1768,8 @@ impl<S: StateMachine> Node<S> {
         last_index: LogIndex,
         last_term: Term,
         data: Vec<u8>,
+        voters: Vec<NodeId>,
+        learners: Vec<NodeId>,
     ) -> Result<Outbox> {
         if term < self.hard.term {
             self.metrics.msgs_sent += 1;
@@ -1256,6 +1794,10 @@ impl<S: StateMachine> Node<S> {
             if let Some(lane) = &self.lane {
                 lane.set_applied(last_index);
             }
+            // The snapshot replaces the log prefix, including any
+            // ConfChange entries it covered — adopt the config the
+            // sender stamped on it.
+            self.adopt_snapshot_conf(last_index, voters, learners)?;
             self.metrics.snapshots_installed += 1;
         }
         self.metrics.msgs_sent += 1;
@@ -1274,6 +1816,7 @@ impl<S: StateMachine> Node<S> {
         }
         self.match_index.insert(from, last_index);
         self.next_index.insert(from, last_index + 1);
+        self.maybe_promote(from)?;
         let mut out = Vec::new();
         for m in self.append_for(from)? {
             self.metrics.msgs_sent += 1;
@@ -1298,6 +1841,8 @@ impl<S: StateMachine> Node<S> {
         last_index: LogIndex,
         last_term: Term,
         manifest: Vec<u8>,
+        voters: Vec<NodeId>,
+        learners: Vec<NodeId>,
     ) -> Result<Outbox> {
         if term < self.hard.term {
             self.metrics.msgs_sent += 1;
@@ -1345,6 +1890,8 @@ impl<S: StateMachine> Node<S> {
                     total_len: m.total_len,
                     last_index,
                     last_term,
+                    voters,
+                    learners,
                 });
                 if resume >= m.total_len {
                     // Fully staged already (or an empty snapshot).
@@ -1423,7 +1970,7 @@ impl<S: StateMachine> Node<S> {
         let Some(sink) = self.snap_sink.take() else {
             return Ok(Vec::new());
         };
-        let SnapSink { xfer_id, total_len, last_index, last_term, .. } = sink;
+        let SnapSink { xfer_id, total_len, last_index, last_term, voters, learners, .. } = sink;
         if last_index > self.log.snap_index && last_index > self.last_applied {
             // Same ordering as the monolithic install: quiesce the
             // apply lane before the engine cut-over, publish the new
@@ -1442,6 +1989,9 @@ impl<S: StateMachine> Node<S> {
             if let Some(lane) = &self.lane {
                 lane.set_applied(last_index);
             }
+            // Adopt the config the sender stamped on the stream — the
+            // replaced log prefix may have carried ConfChange entries.
+            self.adopt_snapshot_conf(last_index, voters, learners)?;
             self.metrics.snapshots_installed += 1;
             self.metrics.snap_streams_done += 1;
         } else {
@@ -1479,6 +2029,7 @@ impl<S: StateMachine> Node<S> {
             self.metrics.snap_streams_done += 1;
             self.match_index.insert(from, sender.last_index());
             self.next_index.insert(from, sender.last_index() + 1);
+            self.maybe_promote(from)?;
             let mut out = Vec::new();
             for m in self.append_for(from)? {
                 self.metrics.msgs_sent += 1;
@@ -1531,8 +2082,17 @@ impl<S: StateMachine> Node<S> {
         if !self.cfg.lease_reads {
             return;
         }
-        let mut acked: Vec<u64> = self.peer_ack.values().copied().collect();
-        acked.push(self.hb_seq);
+        // Only voters anchor the lease: a learner's echo proves
+        // nothing about which config-quorum accepts this leadership.
+        let mut acked: Vec<u64> = self
+            .voters
+            .iter()
+            .filter(|&&v| v != self.id)
+            .filter_map(|v| self.peer_ack.get(v).copied())
+            .collect();
+        if self.is_voter() {
+            acked.push(self.hb_seq);
+        }
         let q = self.quorum();
         if acked.len() < q {
             return;
@@ -1557,7 +2117,14 @@ impl<S: StateMachine> Node<S> {
         let mut out = Vec::new();
         let mut still_pending = Vec::new();
         for pc in std::mem::take(&mut self.pending_confirm) {
-            let acks = 1 + self.peer_ack.values().filter(|&&s| s >= pc.seq).count();
+            // Voter acks only — mirrors `refresh_lease`.
+            let acks = self.is_voter() as usize
+                + self
+                    .voters
+                    .iter()
+                    .filter(|&&v| v != self.id)
+                    .filter(|v| self.peer_ack.get(v).is_some_and(|&s| s >= pc.seq))
+                    .count();
             if acks >= q {
                 match pc.requester {
                     Some(n) => {
@@ -1705,7 +2272,7 @@ mod tests {
                 Command::Delete { key } => {
                     self.kv.remove(key);
                 }
-                Command::Noop => {}
+                Command::Noop | Command::ConfChange(_) => {}
             }
             Ok(())
         }
@@ -1883,13 +2450,17 @@ mod tests {
         for _ in 0..Config::default().election_timeout_min * 2 {
             let _ = t.node(leader).tick().unwrap();
         }
+        // Candidate must be a real member (membership check denies
+        // outsiders) — pick a voter other than the leader.
+        let cand = t.nodes.iter().map(|n| n.id).find(|&id| id != leader).unwrap();
         let vote = Message::RequestVote {
             term: term + 10,
-            candidate: 99,
+            candidate: cand,
             last_log_index: 1 << 30,
             last_log_term: 1 << 30,
+            transfer: false,
         };
-        let out = t.node(leader).handle(99, vote).unwrap();
+        let out = t.node(leader).handle(cand, vote).unwrap();
         assert_eq!(t.node(leader).role(), Role::Follower);
         assert_eq!(t.node(leader).term(), term + 10);
         // And it granted the vote (log was up-to-date).
@@ -1912,6 +2483,7 @@ mod tests {
             candidate: c,
             last_log_index: 1 << 30,
             last_log_term: 1 << 30,
+            transfer: false,
         };
         // The leaseholder stays leader at its own term.
         let out = t.node(leader).handle(98, vote(98)).unwrap();
@@ -1937,6 +2509,7 @@ mod tests {
             candidate: 77,
             last_log_index: 0,
             last_log_term: 0,
+            transfer: false,
         };
         let out = t.node(leader).handle(77, vote).unwrap();
         assert!(matches!(out[0].1, Message::RequestVoteResp { granted: false, .. }));
@@ -2169,6 +2742,8 @@ mod tests {
             last_index: 30,
             last_term: 1,
             manifest: manifest.encode(),
+            voters: vec![1, 4],
+            learners: vec![],
         };
         let out = n.handle(1, meta).unwrap();
         assert!(matches!(out[0].1, Message::SnapAck { offset: 0, done: false, .. }), "{out:?}");
@@ -2247,6 +2822,8 @@ mod tests {
             last_index: 30,
             last_term: 1,
             manifest: manifest.encode(),
+            voters: vec![1, 4],
+            learners: vec![],
         };
         let chunk = |xfer_id: u64, offset: usize, len: usize| Message::SnapChunk {
             term: 1,
@@ -2397,6 +2974,7 @@ mod tests {
                     candidate: 99,
                     last_log_index: 1 << 30,
                     last_log_term: 1 << 30,
+                    transfer: false,
                 },
             )
             .unwrap();
@@ -2554,5 +3132,376 @@ mod tests {
             .unwrap();
         assert!(matches!(out[0].1, Message::AppendEntriesResp { success: false, term: 10, .. }));
         assert_eq!(n.role(), Role::Follower);
+    }
+
+    // ---- membership (DESIGN.md §9) -----------------------------------
+
+    /// Like [`Trio`] but with a dynamic roster: nodes can join (as
+    /// learners) and leave, and messages to absent nodes are dropped.
+    struct Group {
+        name: &'static str,
+        cfg: Config,
+        nodes: Vec<Node<MemSm>>,
+    }
+
+    impl Group {
+        fn new(name: &'static str, ids: &[u64]) -> Self {
+            Self::with_cfg(name, ids, Config::default())
+        }
+
+        fn with_cfg(name: &'static str, ids: &[u64], cfg: Config) -> Self {
+            let nodes = ids
+                .iter()
+                .map(|&id| {
+                    let peers: Vec<u64> = ids.iter().copied().filter(|&p| p != id).collect();
+                    Node::new(id, peers, &tmpdir(name, id), MemSm::default(), cfg.clone(), 42)
+                        .unwrap()
+                })
+                .collect();
+            Self { name, cfg, nodes }
+        }
+
+        fn add_learner(&mut self, id: u64, voters: Vec<u64>) {
+            let n = Node::new_learner(
+                id,
+                voters,
+                &tmpdir(self.name, id),
+                MemSm::default(),
+                self.cfg.clone(),
+                100 + id,
+            )
+            .unwrap();
+            self.nodes.push(n);
+        }
+
+        fn has(&self, id: NodeId) -> bool {
+            self.nodes.iter().any(|n| n.id == id)
+        }
+
+        fn node(&mut self, id: NodeId) -> &mut Node<MemSm> {
+            self.nodes.iter_mut().find(|n| n.id == id).unwrap()
+        }
+
+        fn stop(&mut self, id: NodeId) {
+            self.nodes.retain(|n| n.id != id);
+        }
+
+        fn pump(&mut self, mut msgs: Vec<(NodeId, NodeId, Message)>) {
+            while let Some((from, to, m)) = msgs.pop() {
+                if !self.has(to) {
+                    continue; // departed / not yet started
+                }
+                let out = self.node(to).handle(from, m).unwrap();
+                for (dst, msg) in out {
+                    msgs.push((to, dst, msg));
+                }
+            }
+        }
+
+        fn tick_all(&mut self) {
+            let mut msgs = Vec::new();
+            for n in &mut self.nodes {
+                let id = n.id;
+                for (dst, m) in n.tick().unwrap() {
+                    msgs.push((id, dst, m));
+                }
+            }
+            self.pump(msgs);
+        }
+
+        /// Heartbeat rounds: enough ticks for every node to converge on
+        /// the latest log and config.
+        fn settle(&mut self, rounds: usize) {
+            for _ in 0..rounds * Config::default().heartbeat_interval as usize {
+                self.tick_all();
+            }
+        }
+
+        fn elect(&mut self) -> NodeId {
+            for _ in 0..500 {
+                self.tick_all();
+                if let Some(l) = self.nodes.iter().find(|n| n.is_leader()) {
+                    return l.id;
+                }
+            }
+            panic!("no leader elected");
+        }
+
+        fn propose_and_commit(&mut self, leader: NodeId, cmd: Command) -> LogIndex {
+            let idx = self.node(leader).propose(cmd).unwrap();
+            let out = self.node(leader).replicate().unwrap();
+            let msgs: Vec<_> = out.into_iter().map(|(dst, m)| (leader, dst, m)).collect();
+            self.pump(msgs);
+            idx
+        }
+
+        /// Propose a conf change and pump it (plus a few heartbeat
+        /// rounds) so append-time activation, commit, and any follow-on
+        /// auto-promotion all land.
+        fn change(&mut self, leader: NodeId, cc: ConfChange) {
+            self.node(leader).propose_conf(cc).unwrap();
+            let out = self.node(leader).replicate().unwrap();
+            let msgs: Vec<_> = out.into_iter().map(|(dst, m)| (leader, dst, m)).collect();
+            self.pump(msgs);
+            self.settle(3);
+        }
+    }
+
+    /// The acceptance shape at node level: 2 voters grow to 3, then 4
+    /// (learner catch-up + auto-promotion), then shrink back to 3 —
+    /// with writes committing through every transition.
+    #[test]
+    fn quorum_matrix_2_to_3_to_4_to_3() {
+        let mut g = Group::new("matrix", &[1, 2]);
+        let leader = g.elect();
+        assert_eq!(g.node(leader).voters(), &[1, 2]);
+        g.propose_and_commit(leader, Command::Put { key: b"a".to_vec(), value: b"1".to_vec() });
+
+        // 2 -> 3: add node 3 as a learner; replication catches it up
+        // and the leader auto-promotes it.
+        g.add_learner(3, vec![1, 2]);
+        g.change(leader, ConfChange::AddLearner(3));
+        assert_eq!(g.node(leader).voters(), &[1, 2, 3], "learner auto-promoted");
+        assert!(g.node(leader).learners().is_empty());
+        g.propose_and_commit(leader, Command::Put { key: b"b".to_vec(), value: b"2".to_vec() });
+
+        // 3 -> 4.
+        g.add_learner(4, vec![1, 2, 3]);
+        g.change(leader, ConfChange::AddLearner(4));
+        assert_eq!(g.node(leader).voters(), &[1, 2, 3, 4]);
+        g.propose_and_commit(leader, Command::Put { key: b"c".to_vec(), value: b"3".to_vec() });
+
+        // 4 -> 3: remove a follower.
+        let victim = *g.node(leader).voters().iter().find(|&&v| v != leader).unwrap();
+        g.change(leader, ConfChange::Remove(victim));
+        let want: Vec<u64> = [1u64, 2, 3, 4].iter().copied().filter(|&v| v != victim).collect();
+        assert_eq!(g.node(leader).voters(), &want[..]);
+        g.stop(victim);
+        let idx = g
+            .propose_and_commit(leader, Command::Put { key: b"d".to_vec(), value: b"4".to_vec() });
+        g.settle(3);
+        // Every remaining member converges on the full history.
+        assert!(g.node(leader).commit_index() >= idx);
+        for id in want {
+            let n = g.node(id);
+            assert!(n.last_applied() >= idx, "node {id} behind");
+            assert_eq!(n.sm().kv.get(&b"d".to_vec()), Some(&b"4".to_vec()));
+        }
+    }
+
+    /// A second change is refused while one is uncommitted, and the
+    /// argument checks reject nonsensical changes outright.
+    #[test]
+    fn one_conf_change_in_flight() {
+        let mut g = Group::new("inflight", &[1, 2, 3]);
+        let leader = g.elect();
+        // Argument validation against the current config.
+        assert!(g
+            .node(leader)
+            .propose_conf(ConfChange::AddLearner(1))
+            .unwrap_err()
+            .to_string()
+            .contains("already a member"));
+        assert!(g
+            .node(leader)
+            .propose_conf(ConfChange::Promote(2))
+            .unwrap_err()
+            .to_string()
+            .contains("already a voter"));
+        assert!(g
+            .node(leader)
+            .propose_conf(ConfChange::Remove(99))
+            .unwrap_err()
+            .to_string()
+            .contains("not a member"));
+        // Append (don't commit) one change: the next is refused.
+        g.node(leader).propose_conf(ConfChange::AddLearner(4)).unwrap();
+        let err = g.node(leader).propose_conf(ConfChange::AddLearner(5)).unwrap_err();
+        assert!(err.to_string().contains("conf change in flight"), "{err}");
+        // Commit it; the gate lifts.
+        let out = g.node(leader).replicate().unwrap();
+        let msgs: Vec<_> = out.into_iter().map(|(dst, m)| (leader, dst, m)).collect();
+        g.pump(msgs);
+        g.settle(2);
+        g.node(leader).propose_conf(ConfChange::Remove(4)).unwrap();
+    }
+
+    /// advance_commit counts only active-config voters: a learner's
+    /// ack can never commit an entry, a voter's can.
+    #[test]
+    fn learner_acks_do_not_advance_commit() {
+        let cfg = Config { promote_lag: 0, ..Config::default() };
+        let mut g = Group::with_cfg("learnerack", &[1, 2, 3], cfg);
+        let leader = g.elect();
+        g.add_learner(4, vec![1, 2, 3]);
+        g.change(leader, ConfChange::AddLearner(4));
+        assert_eq!(g.node(leader).learners(), &[4], "promote_lag=0 keeps it a learner");
+        let idx = g
+            .node(leader)
+            .propose(Command::Put { key: b"k".to_vec(), value: b"v".to_vec() })
+            .unwrap();
+        let out = g.node(leader).replicate().unwrap();
+        // Deliver ONLY the learner's copy (and its ack).
+        let to_learner: Vec<_> = out
+            .iter()
+            .filter(|(dst, _)| *dst == 4)
+            .map(|(dst, m)| (leader, *dst, m.clone()))
+            .collect();
+        g.pump(to_learner);
+        assert!(
+            g.node(leader).commit_index() < idx,
+            "a learner ack must not commit (leader + learner is not a quorum of 3 voters)"
+        );
+        // One voter ack tips it: leader durable + voter = 2 of 3.
+        let to_voter: Vec<_> = out
+            .into_iter()
+            .filter(|(dst, _)| *dst == 2)
+            .map(|(dst, m)| (leader, dst, m))
+            .collect();
+        g.pump(to_voter);
+        assert!(g.node(leader).commit_index() >= idx);
+    }
+
+    /// ReadIndex quorum rounds likewise ignore learner echoes.
+    #[test]
+    fn read_barrier_ignores_learner_acks() {
+        let cfg = Config { promote_lag: 0, lease_reads: false, ..Config::default() };
+        let mut g = Group::with_cfg("learnerread", &[1, 2, 3], cfg);
+        let leader = g.elect();
+        g.add_learner(4, vec![1, 2, 3]);
+        g.change(leader, ConfChange::AddLearner(4));
+        g.propose_and_commit(leader, Command::Put { key: b"k".to_vec(), value: b"v".to_vec() });
+        g.settle(2);
+        let out = g.node(leader).request_read(9).unwrap();
+        let to_learner: Vec<_> = out
+            .iter()
+            .filter(|(dst, _)| *dst == 4)
+            .map(|(dst, m)| (leader, *dst, m.clone()))
+            .collect();
+        g.pump(to_learner);
+        assert!(
+            g.node(leader).take_read_results().0.is_empty(),
+            "learner echo must not confirm leadership"
+        );
+        let to_voter: Vec<_> = out
+            .into_iter()
+            .filter(|(dst, _)| *dst == 3)
+            .map(|(dst, m)| (leader, dst, m))
+            .collect();
+        g.pump(to_voter);
+        let (ready, _) = g.node(leader).take_read_results();
+        assert_eq!(ready.len(), 1, "voter echo completes the barrier");
+    }
+
+    /// A removed node campaigning on its stale config (which still
+    /// lists itself) is denied by members that applied the removal —
+    /// even with a perfect log and the transfer flag set.
+    #[test]
+    fn removed_node_cannot_win_election_with_stale_config() {
+        let mut g = Group::new("staleconf", &[1, 2, 3]);
+        let leader = g.elect();
+        let victim = *g.node(leader).voters().iter().find(|&&v| v != leader).unwrap();
+        // Remove it, but never deliver anything to it: its own config
+        // still lists all three.
+        g.node(leader).propose_conf(ConfChange::Remove(victim)).unwrap();
+        let out = g.node(leader).replicate().unwrap();
+        let msgs: Vec<_> = out
+            .into_iter()
+            .filter(|(dst, _)| *dst != victim)
+            .map(|(dst, m)| (leader, dst, m))
+            .collect();
+        g.pump(msgs);
+        assert!(!g.node(leader).voters().contains(&victim));
+        assert!(g.node(victim).voters().contains(&victim), "victim's view is stale");
+        // Best possible campaign from the victim: huge term, perfect
+        // log, transfer flag bypassing stickiness.
+        let term = g.node(leader).term();
+        let vote = Message::RequestVote {
+            term: term + 10,
+            candidate: victim,
+            last_log_index: 1 << 30,
+            last_log_term: 1 << 30,
+            transfer: true,
+        };
+        for id in [1u64, 2, 3] {
+            if id == victim {
+                continue;
+            }
+            let out = g.node(id).handle(victim, vote.clone()).unwrap();
+            assert!(
+                matches!(out[0].1, Message::RequestVoteResp { granted: false, .. }),
+                "node {id} granted a vote to removed node {victim}"
+            );
+        }
+    }
+
+    /// A leader that removes itself keeps leading (without counting
+    /// itself) until the Remove commits, then steps down and hands
+    /// leadership over via TimeoutNow — the successor wins inside the
+    /// old lease window thanks to the transfer flag.
+    #[test]
+    fn leader_self_removal_steps_down_and_transfers() {
+        let mut g = Group::new("selfremove", &[1, 2, 3]);
+        let leader = g.elect();
+        g.propose_and_commit(leader, Command::Put { key: b"k".to_vec(), value: b"v".to_vec() });
+        g.node(leader).propose_conf(ConfChange::Remove(leader)).unwrap();
+        assert!(g.node(leader).is_leader(), "keeps leading until the Remove commits");
+        let out = g.node(leader).replicate().unwrap();
+        let msgs: Vec<_> = out.into_iter().map(|(dst, m)| (leader, dst, m)).collect();
+        g.pump(msgs);
+        // Commit happened (two remaining voters acked): the old leader
+        // stepped down and the TimeoutNow produced a successor without
+        // waiting out an election timeout.
+        assert!(!g.node(leader).is_leader());
+        let new_leader = g.nodes.iter().find(|n| n.is_leader()).expect("transfer elected").id;
+        assert_ne!(new_leader, leader);
+        assert!(!g.node(new_leader).voters().contains(&leader));
+        // The cluster still commits writes.
+        let idx = g.propose_and_commit(
+            new_leader,
+            Command::Put { key: b"k2".to_vec(), value: b"v2".to_vec() },
+        );
+        assert!(g.node(new_leader).commit_index() >= idx);
+    }
+
+    /// Learners never campaign, no matter how long the leader is
+    /// silent.
+    #[test]
+    fn learner_never_campaigns() {
+        let dir = tmpdir("learnquiet", 9);
+        let mut n =
+            Node::new_learner(9, vec![1, 2, 3], &dir, MemSm::default(), Config::default(), 3)
+                .unwrap();
+        for _ in 0..10 * Config::default().election_timeout_max {
+            let out = n.tick().unwrap();
+            assert!(out.is_empty(), "learner sent {out:?}");
+        }
+        assert_eq!(n.role(), Role::Follower);
+        assert_eq!(n.term(), 0, "no term bumps from a learner");
+    }
+
+    /// The members sidecar outranks constructor args: a crashed
+    /// learner restarts as a learner, even if reopened through the
+    /// plain constructor.
+    #[test]
+    fn learner_restart_stays_learner() {
+        let dir = tmpdir("learnrestart", 5);
+        {
+            let n = Node::new_learner(
+                5,
+                vec![1, 2, 3],
+                &dir,
+                MemSm::default(),
+                Config::default(),
+                3,
+            )
+            .unwrap();
+            assert_eq!(n.voters(), &[1, 2, 3]);
+            assert_eq!(n.learners(), &[5]);
+        }
+        // Reopen as if the coordinator passed full-cluster peers.
+        let n = Node::new(5, vec![1, 2, 3], &dir, MemSm::default(), Config::default(), 3).unwrap();
+        assert_eq!(n.voters(), &[1, 2, 3], "sidecar overrides constructor");
+        assert_eq!(n.learners(), &[5]);
     }
 }

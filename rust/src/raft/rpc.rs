@@ -10,6 +10,56 @@ use anyhow::{bail, Result};
 pub type Term = u64;
 pub type LogIndex = u64;
 
+/// A single-server membership change, replicated as a log entry
+/// (DESIGN.md §9).  One change is in flight at a time, and each adds or
+/// removes exactly one server — the overlap argument that makes joint
+/// consensus unnecessary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConfChange {
+    /// Add `node` as a non-voting learner: it receives appends and
+    /// snapshots but counts toward no quorum.
+    AddLearner(u64),
+    /// Promote a caught-up learner to voter.
+    Promote(u64),
+    /// Remove `node` (voter or learner) from the configuration.
+    Remove(u64),
+}
+
+impl ConfChange {
+    pub fn node(&self) -> u64 {
+        match self {
+            ConfChange::AddLearner(n) | ConfChange::Promote(n) | ConfChange::Remove(n) => *n,
+        }
+    }
+
+    pub fn encode_into(&self, e: &mut Encoder) {
+        match self {
+            ConfChange::AddLearner(n) => e.u8(0).u64(*n),
+            ConfChange::Promote(n) => e.u8(1).u64(*n),
+            ConfChange::Remove(n) => e.u8(2).u64(*n),
+        };
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        self.encode_into(&mut e);
+        e.into_vec()
+    }
+
+    pub fn decode(d: &mut Decoder) -> Result<Self> {
+        Ok(match d.u8()? {
+            0 => ConfChange::AddLearner(d.u64()?),
+            1 => ConfChange::Promote(d.u64()?),
+            2 => ConfChange::Remove(d.u64()?),
+            other => bail!("rpc: unknown conf-change kind {other}"),
+        })
+    }
+
+    pub fn decode_bytes(buf: &[u8]) -> Result<Self> {
+        ConfChange::decode(&mut Decoder::new(buf))
+    }
+}
+
 /// A state-machine command carried in a Raft log entry.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Command {
@@ -17,13 +67,16 @@ pub enum Command {
     Delete { key: Vec<u8> },
     /// No-op barrier appended by a new leader to commit prior terms.
     Noop,
+    /// Membership change; applied to the node's config at *append*,
+    /// a no-op for the storage engine.
+    ConfChange(ConfChange),
 }
 
 impl Command {
     pub fn key(&self) -> &[u8] {
         match self {
             Command::Put { key, .. } | Command::Delete { key } => key,
-            Command::Noop => &[],
+            Command::Noop | Command::ConfChange(_) => &[],
         }
     }
 
@@ -45,6 +98,10 @@ impl Command {
             Command::Noop => {
                 e.u8(2);
             }
+            Command::ConfChange(cc) => {
+                e.u8(3);
+                cc.encode_into(e);
+            }
         }
     }
 
@@ -53,6 +110,7 @@ impl Command {
             0 => Command::Put { key: d.len_bytes()?.to_vec(), value: d.len_bytes()?.to_vec() },
             1 => Command::Delete { key: d.len_bytes()?.to_vec() },
             2 => Command::Noop,
+            3 => Command::ConfChange(ConfChange::decode(d)?),
             other => bail!("rpc: unknown command tag {other}"),
         })
     }
@@ -81,6 +139,29 @@ impl LogEntry {
     }
 }
 
+/// Upper bound on a wire-carried member list; real configs are a
+/// handful of nodes, so anything bigger is a corrupt frame.
+const MAX_WIRE_MEMBERS: usize = 1024;
+
+fn encode_ids(e: &mut Encoder, ids: &[u64]) {
+    e.varint(ids.len() as u64);
+    for &id in ids {
+        e.u64(id);
+    }
+}
+
+fn decode_ids(d: &mut Decoder) -> Result<Vec<u64>> {
+    let n = d.varint()? as usize;
+    if n > MAX_WIRE_MEMBERS {
+        bail!("rpc: member list too long ({n})");
+    }
+    let mut ids = Vec::with_capacity(n);
+    for _ in 0..n {
+        ids.push(d.u64()?);
+    }
+    Ok(ids)
+}
+
 /// Raft RPCs (§5 of the Raft paper, plus InstallSnapshot from §7).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Message {
@@ -89,6 +170,10 @@ pub enum Message {
         candidate: u64,
         last_log_index: LogIndex,
         last_log_term: Term,
+        /// Set by a candidate campaigning on a leadership transfer
+        /// (`TimeoutNow`): voters skip the liveness stickiness gate,
+        /// since the old leader sanctioned this election (§4.2.3).
+        transfer: bool,
     },
     RequestVoteResp {
         term: Term,
@@ -125,6 +210,10 @@ pub enum Message {
         /// bytes — paper §III-E "Recovery leverages the sorted
         /// ValueLog ... as an efficient snapshot mechanism").
         data: Vec<u8>,
+        /// Membership as of `last_index`, so a receiver whose config
+        /// entries were compacted into this snapshot still learns it.
+        voters: Vec<u64>,
+        learners: Vec<u64>,
     },
     InstallSnapshotResp {
         term: Term,
@@ -144,6 +233,9 @@ pub enum Message {
         last_index: LogIndex,
         last_term: Term,
         manifest: Vec<u8>,
+        /// Membership as of `last_index` (see `InstallSnapshot`).
+        voters: Vec<u64>,
+        learners: Vec<u64>,
     },
     /// Leader → follower: one bounded-size slice of the transfer's
     /// byte stream at `offset` (a global offset over the concatenated
@@ -184,6 +276,13 @@ pub enum Message {
         read_index: LogIndex,
         ok: bool,
     },
+    /// Removed leader → best-caught-up voter: campaign *now*, without
+    /// waiting out an election timeout (Raft §4.2.3 leadership
+    /// transfer).  The recipient starts an election with the
+    /// `transfer` flag set on its vote requests.
+    TimeoutNow {
+        term: Term,
+    },
 }
 
 impl Message {
@@ -199,15 +298,17 @@ impl Message {
             | Message::SnapChunk { term, .. }
             | Message::SnapAck { term, .. }
             | Message::ReadIndex { term, .. }
-            | Message::ReadIndexResp { term, .. } => *term,
+            | Message::ReadIndexResp { term, .. }
+            | Message::TimeoutNow { term } => *term,
         }
     }
 
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Encoder::new();
         match self {
-            Message::RequestVote { term, candidate, last_log_index, last_log_term } => {
+            Message::RequestVote { term, candidate, last_log_index, last_log_term, transfer } => {
                 e.u8(0).u64(*term).u64(*candidate).u64(*last_log_index).u64(*last_log_term);
+                e.u8(*transfer as u8);
             }
             Message::RequestVoteResp { term, granted } => {
                 e.u8(1).u64(*term).u8(*granted as u8);
@@ -231,8 +332,10 @@ impl Message {
             Message::AppendEntriesResp { term, success, match_index, seq } => {
                 e.u8(3).u64(*term).u8(*success as u8).u64(*match_index).u64(*seq);
             }
-            Message::InstallSnapshot { term, leader, last_index, last_term, data } => {
+            Message::InstallSnapshot { term, leader, last_index, last_term, data, voters, learners } => {
                 e.u8(4).u64(*term).u64(*leader).u64(*last_index).u64(*last_term).len_bytes(data);
+                encode_ids(&mut e, voters);
+                encode_ids(&mut e, learners);
             }
             Message::InstallSnapshotResp { term, last_index } => {
                 e.u8(5).u64(*term).u64(*last_index);
@@ -243,15 +346,20 @@ impl Message {
             Message::ReadIndexResp { term, ctx, read_index, ok } => {
                 e.u8(7).u64(*term).u64(*ctx).u64(*read_index).u8(*ok as u8);
             }
-            Message::SnapMeta { term, leader, xfer_id, last_index, last_term, manifest } => {
+            Message::SnapMeta { term, leader, xfer_id, last_index, last_term, manifest, voters, learners } => {
                 e.u8(8).u64(*term).u64(*leader).u64(*xfer_id).u64(*last_index).u64(*last_term);
                 e.len_bytes(manifest);
+                encode_ids(&mut e, voters);
+                encode_ids(&mut e, learners);
             }
             Message::SnapChunk { term, leader, xfer_id, offset, data } => {
                 e.u8(9).u64(*term).u64(*leader).u64(*xfer_id).u64(*offset).len_bytes(data);
             }
             Message::SnapAck { term, xfer_id, offset, done } => {
                 e.u8(10).u64(*term).u64(*xfer_id).u64(*offset).u8(*done as u8);
+            }
+            Message::TimeoutNow { term } => {
+                e.u8(11).u64(*term);
             }
         }
         e.into_vec()
@@ -266,6 +374,7 @@ impl Message {
                 candidate: d.u64()?,
                 last_log_index: d.u64()?,
                 last_log_term: d.u64()?,
+                transfer: d.u8()? != 0,
             },
             1 => Message::RequestVoteResp { term: d.u64()?, granted: d.u8()? != 0 },
             2 => {
@@ -276,7 +385,9 @@ impl Message {
                 let leader_commit = d.u64()?;
                 let seq = d.u64()?;
                 let n = d.varint()? as usize;
-                let mut entries = Vec::with_capacity(n);
+                // Cap the preallocation: a corrupt count must fail on
+                // decode underflow, not abort on a huge reservation.
+                let mut entries = Vec::with_capacity(n.min(1024));
                 for _ in 0..n {
                     entries.push(LogEntry::decode(&mut d)?);
                 }
@@ -302,6 +413,8 @@ impl Message {
                 last_index: d.u64()?,
                 last_term: d.u64()?,
                 data: d.len_bytes()?.to_vec(),
+                voters: decode_ids(&mut d)?,
+                learners: decode_ids(&mut d)?,
             },
             5 => Message::InstallSnapshotResp { term: d.u64()?, last_index: d.u64()? },
             6 => Message::ReadIndex { term: d.u64()?, ctx: d.u64()? },
@@ -318,6 +431,8 @@ impl Message {
                 last_index: d.u64()?,
                 last_term: d.u64()?,
                 manifest: d.len_bytes()?.to_vec(),
+                voters: decode_ids(&mut d)?,
+                learners: decode_ids(&mut d)?,
             },
             9 => Message::SnapChunk {
                 term: d.u64()?,
@@ -332,6 +447,7 @@ impl Message {
                 offset: d.u64()?,
                 done: d.u8()? != 0,
             },
+            11 => Message::TimeoutNow { term: d.u64()? },
             other => bail!("rpc: unknown message tag {other}"),
         })
     }
@@ -365,6 +481,14 @@ mod tests {
             candidate: 2,
             last_log_index: 10,
             last_log_term: 4,
+            transfer: false,
+        });
+        roundtrip(&Message::RequestVote {
+            term: 6,
+            candidate: 3,
+            last_log_index: 11,
+            last_log_term: 5,
+            transfer: true,
         });
         roundtrip(&Message::RequestVoteResp { term: 5, granted: true });
         roundtrip(&Message::AppendEntries {
@@ -380,6 +504,13 @@ mod tests {
                 },
                 LogEntry { term: 7, index: 5, cmd: Command::Delete { key: b"d".to_vec() } },
                 LogEntry { term: 7, index: 6, cmd: Command::Noop },
+                LogEntry {
+                    term: 7,
+                    index: 7,
+                    cmd: Command::ConfChange(ConfChange::AddLearner(4)),
+                },
+                LogEntry { term: 7, index: 8, cmd: Command::ConfChange(ConfChange::Promote(4)) },
+                LogEntry { term: 7, index: 9, cmd: Command::ConfChange(ConfChange::Remove(2)) },
             ],
             leader_commit: 3,
             seq: 11,
@@ -391,6 +522,8 @@ mod tests {
             last_index: 100,
             last_term: 8,
             data: vec![1, 2, 3],
+            voters: vec![1, 2, 3],
+            learners: vec![4],
         });
         roundtrip(&Message::InstallSnapshotResp { term: 9, last_index: 100 });
         roundtrip(&Message::SnapMeta {
@@ -400,6 +533,8 @@ mod tests {
             last_index: 100,
             last_term: 8,
             manifest: vec![7; 64],
+            voters: vec![1, 2, 3, 4],
+            learners: vec![],
         });
         roundtrip(&Message::SnapChunk {
             term: 9,
@@ -413,80 +548,130 @@ mod tests {
         roundtrip(&Message::ReadIndex { term: 4, ctx: 77 });
         roundtrip(&Message::ReadIndexResp { term: 4, ctx: 77, read_index: 1234, ok: true });
         roundtrip(&Message::ReadIndexResp { term: 5, ctx: 0, read_index: 0, ok: false });
+        roundtrip(&Message::TimeoutNow { term: 12 });
+    }
+
+    fn random_cmd(g: &mut prop::Gen) -> Command {
+        match g.usize_in(0..6) {
+            0 | 1 => Command::Put { key: g.bytes(0..20), value: g.bytes(0..200) },
+            2 | 3 => Command::Delete { key: g.bytes(0..20) },
+            4 => Command::Noop,
+            _ => Command::ConfChange(match g.usize_in(0..3) {
+                0 => ConfChange::AddLearner(g.u64()),
+                1 => ConfChange::Promote(g.u64()),
+                _ => ConfChange::Remove(g.u64()),
+            }),
+        }
+    }
+
+    fn random_ids(g: &mut prop::Gen) -> Vec<u64> {
+        g.vec(0..6, |g| g.u64_in(1..32))
+    }
+
+    /// Draw a random instance of *every* message variant — keep the
+    /// range in sync with the variant count so new messages can't be
+    /// silently skipped.
+    fn random_message(g: &mut prop::Gen) -> Message {
+        match g.usize_in(0..12) {
+            0 => Message::RequestVote {
+                term: g.u64(),
+                candidate: g.u64_in(0..8),
+                last_log_index: g.u64(),
+                last_log_term: g.u64(),
+                transfer: g.bool(),
+            },
+            1 => Message::RequestVoteResp { term: g.u64(), granted: g.bool() },
+            2 => Message::AppendEntries {
+                term: g.u64(),
+                leader: g.u64_in(0..8),
+                prev_log_index: g.u64(),
+                prev_log_term: g.u64(),
+                entries: g.vec(0..5, |g| LogEntry {
+                    term: g.u64(),
+                    index: g.u64(),
+                    cmd: random_cmd(g),
+                }),
+                leader_commit: g.u64(),
+                seq: g.u64(),
+            },
+            3 => Message::AppendEntriesResp {
+                term: g.u64(),
+                success: g.bool(),
+                match_index: g.u64(),
+                seq: g.u64(),
+            },
+            4 => Message::InstallSnapshot {
+                term: g.u64(),
+                leader: g.u64_in(0..8),
+                last_index: g.u64(),
+                last_term: g.u64(),
+                data: g.bytes(0..500),
+                voters: random_ids(g),
+                learners: random_ids(g),
+            },
+            5 => Message::InstallSnapshotResp { term: g.u64(), last_index: g.u64() },
+            6 => Message::ReadIndex { term: g.u64(), ctx: g.u64() },
+            7 => Message::ReadIndexResp {
+                term: g.u64(),
+                ctx: g.u64(),
+                read_index: g.u64(),
+                ok: g.bool(),
+            },
+            8 => Message::SnapMeta {
+                term: g.u64(),
+                leader: g.u64_in(0..8),
+                xfer_id: g.u64(),
+                last_index: g.u64(),
+                last_term: g.u64(),
+                manifest: g.bytes(0..300),
+                voters: random_ids(g),
+                learners: random_ids(g),
+            },
+            9 => Message::SnapChunk {
+                term: g.u64(),
+                leader: g.u64_in(0..8),
+                xfer_id: g.u64(),
+                offset: g.u64(),
+                data: g.bytes(0..500),
+            },
+            10 => Message::SnapAck {
+                term: g.u64(),
+                xfer_id: g.u64(),
+                offset: g.u64(),
+                done: g.bool(),
+            },
+            _ => Message::TimeoutNow { term: g.u64() },
+        }
     }
 
     #[test]
     fn random_messages_roundtrip() {
-        prop::check("rpc-roundtrip", 300, |g| {
-            let m = match g.usize_in(0..9) {
-                0 => Message::RequestVote {
-                    term: g.u64(),
-                    candidate: g.u64_in(0..8),
-                    last_log_index: g.u64(),
-                    last_log_term: g.u64(),
-                },
-                1 => Message::AppendEntries {
-                    term: g.u64(),
-                    leader: g.u64_in(0..8),
-                    prev_log_index: g.u64(),
-                    prev_log_term: g.u64(),
-                    entries: g.vec(0..5, |g| LogEntry {
-                        term: g.u64(),
-                        index: g.u64(),
-                        cmd: if g.bool() {
-                            Command::Put { key: g.bytes(0..20), value: g.bytes(0..200) }
-                        } else {
-                            Command::Delete { key: g.bytes(0..20) }
-                        },
-                    }),
-                    leader_commit: g.u64(),
-                    seq: g.u64(),
-                },
-                2 => Message::InstallSnapshot {
-                    term: g.u64(),
-                    leader: g.u64_in(0..8),
-                    last_index: g.u64(),
-                    last_term: g.u64(),
-                    data: g.bytes(0..500),
-                },
-                3 => Message::ReadIndex { term: g.u64(), ctx: g.u64() },
-                6 => Message::SnapMeta {
-                    term: g.u64(),
-                    leader: g.u64_in(0..8),
-                    xfer_id: g.u64(),
-                    last_index: g.u64(),
-                    last_term: g.u64(),
-                    manifest: g.bytes(0..300),
-                },
-                7 => Message::SnapChunk {
-                    term: g.u64(),
-                    leader: g.u64_in(0..8),
-                    xfer_id: g.u64(),
-                    offset: g.u64(),
-                    data: g.bytes(0..500),
-                },
-                8 => Message::SnapAck {
-                    term: g.u64(),
-                    xfer_id: g.u64(),
-                    offset: g.u64(),
-                    done: g.bool(),
-                },
-                4 => Message::ReadIndexResp {
-                    term: g.u64(),
-                    ctx: g.u64(),
-                    read_index: g.u64(),
-                    ok: g.bool(),
-                },
-                _ => Message::AppendEntriesResp {
-                    term: g.u64(),
-                    success: g.bool(),
-                    match_index: g.u64(),
-                    seq: g.u64(),
-                },
-            };
+        prop::check("rpc-roundtrip", 400, |g| {
+            let m = random_message(g);
             let dec = Message::decode(&m.encode()).map_err(|e| e.to_string())?;
             if dec != m {
                 return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Mangled frames — truncations and single-bit flips of valid
+    /// encodings — must decode to `Err` or to some other message, never
+    /// panic or abort (the transport feeds decode() raw network bytes).
+    #[test]
+    fn mangled_frames_never_panic() {
+        prop::check("rpc-mangled", 400, |g| {
+            let enc = random_message(g).encode();
+            // Truncate at a random boundary (including empty).
+            let cut = g.usize_in(0..enc.len() + 1);
+            let _ = Message::decode(&enc[..cut]);
+            // Flip a single random bit.
+            if !enc.is_empty() {
+                let mut flipped = enc.clone();
+                let byte = g.usize_in(0..flipped.len());
+                flipped[byte] ^= 1 << g.usize_in(0..8);
+                let _ = Message::decode(&flipped);
             }
             Ok(())
         });
@@ -496,5 +681,21 @@ mod tests {
     fn garbage_rejected() {
         assert!(Message::decode(&[99, 1, 2]).is_err());
         assert!(Message::decode(&[]).is_err());
+        // Corrupt member-list count on an otherwise valid snapshot
+        // frame: bounded failure, not a huge preallocation.
+        let mut e = Encoder::new();
+        e.u8(4).u64(1).u64(1).u64(10).u64(1).len_bytes(b"");
+        e.varint(u32::MAX as u64); // absurd voter count
+        assert!(Message::decode(e.as_slice()).is_err());
+    }
+
+    #[test]
+    fn conf_change_roundtrip() {
+        for cc in [ConfChange::AddLearner(9), ConfChange::Promote(9), ConfChange::Remove(1)] {
+            assert_eq!(ConfChange::decode_bytes(&cc.encode()).unwrap(), cc);
+            assert_eq!(cc.node(), if cc == ConfChange::Remove(1) { 1 } else { 9 });
+        }
+        assert!(ConfChange::decode_bytes(&[3, 0, 0, 0, 0, 0, 0, 0, 0]).is_err());
+        assert!(ConfChange::decode_bytes(&[0, 1]).is_err());
     }
 }

@@ -168,10 +168,22 @@ pub struct SnapSender {
     chunk_bytes: usize,
     window: usize,
     idle_ticks: u32,
+    /// Membership as of the snapshot's `last_index`, stamped on every
+    /// `SnapMeta` offer so a joining node whose config entries were
+    /// compacted into the snapshot still learns the member set.
+    voters: Vec<u64>,
+    learners: Vec<u64>,
 }
 
 impl SnapSender {
-    pub fn new(plan: SnapPlan, xfer_id: u64, chunk_bytes: usize, window: usize) -> Self {
+    pub fn new(
+        plan: SnapPlan,
+        xfer_id: u64,
+        chunk_bytes: usize,
+        window: usize,
+        voters: Vec<u64>,
+        learners: Vec<u64>,
+    ) -> Self {
         let manifest_bytes = plan.manifest().encode();
         let total_len = plan.total_len();
         Self {
@@ -185,6 +197,8 @@ impl SnapSender {
             chunk_bytes: chunk_bytes.max(1),
             window: window.max(1),
             idle_ticks: 0,
+            voters,
+            learners,
         }
     }
 
@@ -212,6 +226,8 @@ impl SnapSender {
             last_index: self.plan.last_index,
             last_term: self.plan.last_term,
             manifest: self.manifest_bytes.clone(),
+            voters: self.voters.clone(),
+            learners: self.learners.clone(),
         }
     }
 
@@ -370,7 +386,7 @@ mod tests {
     #[test]
     fn read_at_respects_item_boundaries() {
         let plan = bytes_plan(&[b"aaaa", b"bb", b"cccccc"]);
-        let s = SnapSender::new(plan, 7, 100, 4);
+        let s = SnapSender::new(plan, 7, 100, 4, vec![1, 2, 3], vec![]);
         assert_eq!(s.read_at(0, 100).unwrap(), b"aaaa");
         assert_eq!(s.read_at(2, 100).unwrap(), b"aa");
         assert_eq!(s.read_at(4, 100).unwrap(), b"bb");
@@ -382,7 +398,7 @@ mod tests {
     #[test]
     fn window_is_ack_clocked() {
         let plan = bytes_plan(&[&[1u8; 10][..]]);
-        let mut s = SnapSender::new(plan, 7, 2, 2); // 2-byte chunks, window 2
+        let mut s = SnapSender::new(plan, 7, 2, 2, vec![1, 2, 3], vec![]); // 2-byte chunks, window 2
         // Meta not acked yet: nothing flows.
         assert!(s.fill_window(1, 0).unwrap().is_empty());
         // Receiver acks resume offset 0 → window opens: 2 chunks.
@@ -406,7 +422,7 @@ mod tests {
     #[test]
     fn resume_offset_skips_delivered_prefix() {
         let plan = bytes_plan(&[&[3u8; 8][..]]);
-        let mut s = SnapSender::new(plan, 7, 4, 4);
+        let mut s = SnapSender::new(plan, 7, 4, 4, vec![1, 2, 3], vec![]);
         s.on_ack(4).unwrap(); // receiver already staged 4 bytes
         let burst = s.fill_window(1, 0).unwrap();
         assert_eq!(burst.len(), 1);
@@ -416,7 +432,7 @@ mod tests {
     #[test]
     fn stall_rewinds_and_resends() {
         let plan = bytes_plan(&[&[5u8; 6][..]]);
-        let mut s = SnapSender::new(plan, 7, 2, 3);
+        let mut s = SnapSender::new(plan, 7, 2, 3, vec![1, 2, 3], vec![]);
         // Unacked meta: every tick re-offers it.
         assert!(matches!(&s.tick(1, 0).unwrap()[0], Message::SnapMeta { .. }));
         s.on_ack(0).unwrap();

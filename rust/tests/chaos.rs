@@ -167,6 +167,37 @@ fn chaos_torn_snapshot_stream_over_tcp() {
     }
 }
 
+/// The membership-churn drill (DESIGN.md §9): a brand-new node joins
+/// as a learner mid-load, is crashed mid-catch-up and restarted, and
+/// the *leader itself* is removed from the group — all while clients
+/// hammer the cluster.  Every acknowledged write must stay
+/// linearizable across the 3 → 4 → 3 reconfiguration.
+#[test]
+fn chaos_membership_churn() {
+    run_schedule(ScheduleKind::MembershipChurn, TransportKind::Inproc);
+}
+
+/// Membership churn over real sockets: the joining learner's catch-up
+/// stream, its crash/restart, and the leader's self-removal handoff
+/// all cross TCP framing and listener rebinds.
+#[test]
+fn chaos_membership_churn_over_tcp() {
+    for seed in [5u64, 7, 11] {
+        let mut opts = ChaosOpts::new(seed, ScheduleKind::MembershipChurn);
+        opts.read_consistency = ReadConsistency::Linearizable;
+        opts.transport = TransportKind::Tcp;
+        opts.run_ms = 2_200;
+        let report = run_chaos(&opts).expect("tcp membership-churn harness");
+        assert!(report.writes > 0 && report.reads > 0, "degenerate run: {report:?}");
+        if let Some(v) = &report.violation {
+            panic!(
+                "tcp membership-churn seed {seed}: {v}\n  nemesis log:\n    {}",
+                report.nemesis_log.join("\n    ")
+            );
+        }
+    }
+}
+
 /// One TCP-transport chaos run: the fault plan drops frames at the
 /// send edge and kill/restart tears down and rebinds real listeners.
 #[test]

@@ -1,0 +1,102 @@
+//! Dynamic membership acceptance (DESIGN.md §9): a 3-node cluster
+//! over real TCP sockets, under continuous client load, grows to 4
+//! voters via learner catch-up and auto-promotion, then shrinks back
+//! to 3 by removing the *leader* — and every acknowledged write stays
+//! readable across both reconfigurations.
+//!
+//! The writer only records puts the cluster acknowledged; retried
+//! duplicates are harmless because each key's value is derived from
+//! the key.  An errored put is indeterminate (it may or may not have
+//! committed) and is simply not asserted — the gate is *zero failed
+//! acknowledged ops*, not zero client-visible retries.
+
+use nezha::coordinator::{Cluster, ClusterConfig, ReadConsistency};
+use nezha::engine::EngineKind;
+use nezha::raft::{NetConfig, NodeId, TransportKind};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Poll until the shard-0 leader's applied config lists exactly
+/// `want` as voters with no learners left in catch-up.
+fn wait_voters(cluster: &Cluster, want: &[NodeId], deadline_s: u64) {
+    let deadline = Instant::now() + Duration::from_secs(deadline_s);
+    loop {
+        // The leader's view is authoritative: it proposed the change.
+        if let Ok(leader) = cluster.shard_leader(0) {
+            if let Ok(s) = cluster.shard_status(leader, 0) {
+                if s.voters == want && s.learners.is_empty() {
+                    return;
+                }
+            }
+        }
+        assert!(Instant::now() < deadline, "voters never became {want:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn tcp_cluster_grows_and_shrinks_under_load() {
+    let dir = std::env::temp_dir().join(format!("nezha-membership-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut c = ClusterConfig::new(&dir, EngineKind::Nezha, 3);
+    c.engine.memtable_bytes = 64 << 10;
+    c.net = NetConfig { latency_us: (0, 0), loss: 0.0, seed: 17 };
+    c.read_consistency = ReadConsistency::Leader;
+    c.transport = TransportKind::Tcp;
+    let cluster = Arc::new(Cluster::start(c).unwrap());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let cluster = Arc::clone(&cluster);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut acked: Vec<u32> = Vec::new();
+            let mut i = 0u32;
+            while !stop.load(Ordering::Relaxed) {
+                let key = format!("load{i:06}").into_bytes();
+                let val = format!("v{i}").into_bytes();
+                if cluster.put(&key, &val).is_ok() {
+                    acked.push(i);
+                }
+                i += 1;
+            }
+            acked
+        })
+    };
+
+    assert_eq!(cluster.shard_members(0), vec![1, 2, 3]);
+    // Grow: the new node joins as a learner, catches up while the
+    // writer keeps committing, and is auto-promoted to voter.
+    let joined = cluster.add_node(0).unwrap();
+    assert_eq!(joined, 4, "first added node takes the next fresh id");
+    assert_eq!(cluster.shard_members(0), vec![1, 2, 3, 4]);
+    wait_voters(&cluster, &[1, 2, 3, 4], 60);
+
+    // Shrink by removing the *leader*: it replicates its own removal,
+    // steps down with a handoff, and the writer rides the NotLeader
+    // redirects without losing an acknowledged op (DESIGN.md §9).
+    let deposed = cluster.shard_leader(0).unwrap();
+    cluster.remove_node(0, deposed).unwrap();
+    let members = cluster.shard_members(0);
+    assert_eq!(members.len(), 3, "membership after removal: {members:?}");
+    assert!(!members.contains(&deposed), "node {deposed} still a member: {members:?}");
+    wait_voters(&cluster, &members, 60);
+    let new_leader = cluster.shard_leader(0).unwrap();
+    assert_ne!(new_leader, deposed, "removed leader still leading");
+
+    // Let the writer run a beat on the final configuration.
+    std::thread::sleep(Duration::from_millis(300));
+    stop.store(true, Ordering::Relaxed);
+    let acked = writer.join().expect("writer thread panicked");
+    assert!(acked.len() >= 100, "degenerate load: only {} acked writes", acked.len());
+
+    // Zero failed acknowledged ops: every acked write reads back.
+    let keys: Vec<Vec<u8>> = acked.iter().map(|i| format!("load{i:06}").into_bytes()).collect();
+    let got = cluster.get_batch(&keys).unwrap();
+    for (i, v) in acked.iter().zip(&got) {
+        assert_eq!(v.as_deref(), Some(format!("v{i}").as_bytes()), "acked write load{i:06} lost");
+    }
+    cluster.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

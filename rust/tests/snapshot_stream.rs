@@ -104,3 +104,101 @@ fn streamed_matches_legacy_install() {
 fn streamed_catchup_over_tcp() {
     streamed_catchup(TransportKind::Tcp, true, "tcp-streamed");
 }
+
+/// DESIGN.md §9 meets §8: a node added via [`Cluster::add_node`]
+/// joins as a learner whose entire state must arrive over the
+/// run-shipping stream — the leader compacted its log long before the
+/// learner existed, so there is no replay path.  Once chunks are
+/// flowing, the original sender (the leader) is crashed.  The
+/// re-elected leader must restart or resume the catch-up, and the
+/// learner still ends up a promoted voter serving every preloaded key.
+#[test]
+fn added_learner_survives_sender_crash() {
+    let dir = base("learner-sender-crash");
+    let mut c = ClusterConfig::new(&dir, EngineKind::Nezha, 3);
+    c.engine.memtable_bytes = 64 << 10;
+    c.gc.threshold_bytes = 32 << 10;
+    c.raft.snap_chunk_bytes = 2 << 10;
+    c.raft.snap_window = 2;
+    // A little wire latency stretches the transfer so the sender crash
+    // usually lands mid-stream rather than after a sub-millisecond
+    // sprint; nothing below *depends* on catching it mid-flight.
+    c.net = NetConfig { latency_us: (200, 600), loss: 0.0, seed: 33 };
+    c.read_consistency = ReadConsistency::Stale;
+    let cluster = Cluster::start(c).unwrap();
+    let key = |i: u32| format!("mem{i:03}").into_bytes();
+    let val = |i: u32| vec![(i % 251) as u8; 1024];
+    // Preload across two GC drains so the log prefix is gone: the
+    // learner can only catch up via a streamed snapshot.
+    for i in 0..75u32 {
+        cluster.put(&key(i), &val(i)).unwrap();
+    }
+    cluster.drain_gc_all().unwrap();
+    for i in 75..150u32 {
+        cluster.put(&key(i), &val(i)).unwrap();
+    }
+    cluster.drain_gc_all().unwrap();
+
+    let sender = cluster.shard_leader(0).unwrap();
+    let joined = cluster.add_node(0).unwrap();
+    assert_eq!(joined, 4, "first added node takes the next fresh id");
+    assert_eq!(cluster.shard_members(0), vec![1, 2, 3, 4]);
+
+    // Wait until the stream to the learner is demonstrably under way,
+    // then crash the sender.  If the transfer already committed the
+    // crash simply tests plain post-install catch-up — still valid.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(s) = cluster.shard_status(joined, 0) {
+            if s.snap.chunks_recv >= 1 {
+                break;
+            }
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "learner never started receiving snapshot chunks"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    cluster.crash(0, sender).unwrap();
+
+    // The survivors re-elect and keep committing; the new leader owns
+    // the learner's catch-up from here.
+    for i in 150..180u32 {
+        cluster.put(&key(i), &val(i)).unwrap();
+    }
+
+    // The learner must finish installing and be auto-promoted: its own
+    // applied config eventually lists it as a voter (DESIGN.md §9).
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        if let Ok(s) = cluster.shard_status(joined, 0) {
+            if s.voters.contains(&joined) {
+                assert_eq!(s.voters, vec![1, 2, 3, 4], "promotion changed the wrong config");
+                assert!(s.learners.is_empty(), "promoted learner still listed: {:?}", s.learners);
+                break;
+            }
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "added learner was never promoted to voter"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cluster.wait_converged(Duration::from_secs(30)).unwrap();
+
+    // Stale mode round-robins over live replicas, so three passes
+    // provably reach the promoted newcomer for some keys.
+    let keys: Vec<Vec<u8>> = (0..180u32).map(key).collect();
+    for _ in 0..3 {
+        let got = cluster.get_batch(&keys).unwrap();
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(v.as_deref(), Some(val(i as u32).as_slice()), "key {i}");
+        }
+    }
+    let s4 = cluster.shard_status(joined, 0).unwrap();
+    assert!(s4.snap.chunks_recv > 0, "learner caught up without streaming: {:?}", s4.snap);
+    assert!(s4.snap.streams_done >= 1, "no stream ran to commit: {:?}", s4.snap);
+    cluster.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

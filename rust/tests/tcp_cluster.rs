@@ -48,7 +48,7 @@ fn server_opts(
     let mut c = ClusterConfig::new(dir.join(format!("proc-{node}")), EngineKind::Nezha, 3);
     c.engine.memtable_bytes = 64 << 10;
     c.router = ShardRouter::hash(shards);
-    ServerOpts { node, peers: peers.clone(), cluster: c }
+    ServerOpts { node, peers: peers.clone(), cluster: c, learner: false }
 }
 
 #[test]
